@@ -1,0 +1,115 @@
+//! Section 2.1 reproduction: WHY stochastic LAG stops saving communication
+//! while CADA keeps saving.
+//!
+//! The paper's argument (Eqs. 6 vs 9): LAG's rule LHS compares gradients at
+//! different SAMPLES, so it is lower-bounded by the non-vanishing gradient
+//! variance; CADA's variance-reduced LHS vanishes as theta converges. We
+//! run both on the same workload and print, per phase of training, the
+//! mean rule LHS, the RHS threshold, and the realised skip rate.
+//!
+//!   cargo run --release --example lag_vs_cada
+
+use cada::comm::CostModel;
+use cada::config::Schedule;
+use cada::coordinator::rules::RuleKind;
+use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
+use cada::coordinator::server::Optimizer;
+use cada::data::{synthetic, Partition, PartitionScheme};
+use cada::runtime::{Engine, Manifest};
+use cada::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = cada::cli::Args::from_env()?;
+    let iters = args.usize_or("iters", 600)?;
+    let c = args.f32_or("c", 0.6)?;
+    args.reject_unknown()?;
+
+    let manifest = Manifest::load("artifacts")?;
+    let mut engine = Engine::new(&manifest, "logreg_ijcnn")?;
+    let spec = engine.spec.clone();
+    let data = synthetic::ijcnn_like(8_000, 3);
+    let mut rng = Rng::new(4);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 10, &mut rng);
+    let eval = data.gather(&rng.sample_indices(data.len(), spec.eval_batch));
+    let init = engine.init_theta()?;
+
+    println!("== LAG vs CADA rule dynamics (ijcnn1-like logreg) ==");
+    println!("rule LHS should VANISH for CADA and FLOOR for LAG (sec 2.1)\n");
+
+    for rule in [
+        RuleKind::Lag { c },
+        RuleKind::Cada2 { c },
+        RuleKind::Cada1 { c },
+    ] {
+        let cfg = LoopCfg {
+            iters,
+            eval_every: iters,
+            rule,
+            max_delay: 1_000_000, // disable the delay cap: isolate the rule
+            snapshot_every: 100,  // keep CADA1's snapshot fresh (paper D)
+            d_max: 10,
+            batch: spec.batch,
+            use_artifact_update: false,
+            use_artifact_innov: false,
+            cost_model: CostModel::free(),
+            trace_cap: iters,
+            upload_bytes: spec.upload_bytes(),
+        };
+        let opt = match rule {
+            RuleKind::Lag { .. } => Optimizer::Sgd {
+                eta: Schedule::Constant(0.1),
+            },
+            _ => Optimizer::Amsgrad {
+                alpha: Schedule::Constant(0.01),
+                beta1: spec.beta1,
+                beta2: spec.beta2,
+                eps: spec.eps,
+                use_artifact: false,
+            },
+        };
+        let mut lp = ServerLoop::new(cfg, init.clone(), opt, &data,
+                                     &partition, eval.clone(), 11);
+        lp.run(rule.name(), 0, &mut engine)?;
+
+        println!("--- {} (c = {c}) ---", rule.name());
+        println!(
+            "{:>12} {:>14} {:>14} {:>10}",
+            "iters", "mean rule LHS", "mean RHS", "skip rate"
+        );
+        let phase = (iters / 6).max(1);
+        for chunk in lp.trace.events.chunks(phase) {
+            let lhs: f64 = chunk.iter().map(|e| e.mean_lhs).sum::<f64>()
+                / chunk.len() as f64;
+            let rhs: f64 = chunk.iter().map(|e| e.rhs).sum::<f64>()
+                / chunk.len() as f64;
+            let skipped: usize = chunk
+                .iter()
+                .map(|e| 10 - e.uploaded.len())
+                .sum();
+            let first = chunk.first().map(|e| e.iter).unwrap_or(0);
+            let last = chunk.last().map(|e| e.iter).unwrap_or(0);
+            println!(
+                "{:>5}-{:<6} {:>14.3e} {:>14.3e} {:>9.1}%",
+                first,
+                last,
+                lhs,
+                rhs,
+                100.0 * skipped as f64 / (chunk.len() * 10) as f64
+            );
+        }
+        let total_uploads = lp.comm.uploads;
+        println!(
+            "total uploads: {total_uploads} / {} possible ({:.1}% saved)\n",
+            iters * 10,
+            100.0 * (1.0 - total_uploads as f64 / (iters * 10) as f64)
+        );
+    }
+    println!(
+        "Reading the table: LAG's LHS stays at the gradient-variance level\n\
+         so its skip rate collapses once RHS shrinks; CADA1/2's LHS decays\n\
+         with the iterate drift, so skipping keeps working — exactly the\n\
+         mechanism of paper section 2.1."
+    );
+    Ok(())
+}

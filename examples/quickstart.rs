@@ -1,0 +1,76 @@
+//! Quickstart: train distributed logistic regression with CADA2 vs
+//! distributed Adam on the PJRT engine and print the paper-style summary.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Expected outcome (the paper's headline, c3): CADA reaches the target
+//! loss with a small fraction of Adam's communication uploads.
+
+use cada::config::{AlgoConfig, Schedule};
+use cada::exp::Experiment;
+use cada::runtime::{Engine, Manifest};
+use cada::telemetry::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let args = cada::cli::Args::from_env()?;
+    let iters = args.usize_or("iters", 400)?;
+    let runs = args.u64_or("runs", 1)? as u32;
+    args.reject_unknown()?;
+
+    println!("== CADA quickstart: logreg (ijcnn1-like), M=10 workers ==");
+    let manifest = Manifest::load("artifacts")?;
+    let mut engine = Engine::new(&manifest, "logreg_ijcnn")?;
+    let init = engine.init_theta()?;
+
+    let mut cfg = cada::config::fig3_ijcnn();
+    cfg.iters = iters;
+    cfg.runs = runs;
+    cfg.n = 8_000;
+    cfg.eval_every = 20;
+    cfg.algos = vec![
+        AlgoConfig::Adam { alpha: Schedule::Constant(0.01) },
+        AlgoConfig::Cada1 {
+            alpha: Schedule::Constant(0.01),
+            c: 0.6,
+            d_max: 10,
+            max_delay: 100,
+        },
+        AlgoConfig::Cada2 {
+            alpha: Schedule::Constant(0.01),
+            c: 0.6,
+            d_max: 10,
+            max_delay: 100,
+        },
+    ];
+
+    let exp = Experiment::new(cfg.clone(), engine.spec.clone())?;
+    let results = exp.run_all(&mut engine, &init)?;
+    let rows = exp.summarize(&results);
+    print!("{}", render_table(&cfg.name, cfg.target_loss, &rows));
+
+    // the headline ratio
+    let ups = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.algo == name)
+            .map(|r| r.mean_curve.points.last().unwrap().uploads)
+            .unwrap_or(0)
+    };
+    let (adam, cada2) = (ups("adam"), ups("cada2"));
+    if adam > 0 && cada2 > 0 {
+        println!(
+            "\nCADA2 used {cada2} uploads vs Adam's {adam} \
+             ({:.1}% saved) over {iters} iterations.",
+            100.0 * (1.0 - cada2 as f64 / adam as f64)
+        );
+    }
+    cada::telemetry::write_jsonl(
+        "results/quickstart.jsonl",
+        &results
+            .iter()
+            .flat_map(|r| r.curves.iter().cloned())
+            .collect::<Vec<_>>(),
+    )?;
+    println!("curves -> results/quickstart.jsonl");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time (AOT) compile path: JAX/Pallas -> HLO text artifacts.
+
+Nothing in this package runs on the request path — `make artifacts`
+invokes `compile.aot` once and the rust coordinator consumes the emitted
+`artifacts/*.hlo.txt` + `manifest.json` via PJRT.
+"""

@@ -1,0 +1,157 @@
+"""AOT compile path: lower every experiment spec to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per spec `<name>` this emits into the output directory:
+
+  <name>.grad.hlo.txt    (theta_pad, *batch)      -> (loss, grad_pad)
+  <name>.eval.hlo.txt    (theta_pad, *eval_batch) -> (loss, correct)
+  <name>.update.hlo.txt  (theta, h, vhat, grad, alpha) -> (theta', h', vhat')
+                         [the L1 Pallas fused AMSGrad step, betas baked]
+  <name>.innov.hlo.txt   (g1, g2) -> (sqnorm,)
+                         [the L1 Pallas blocked reduction]
+  <name>.init.bin        little-endian f32[p_pad] initial parameters
+
+plus one `manifest.json` describing shapes/dtypes/hyperparameters, which is
+the single source of truth the rust runtime loads. Update/innov artifacts
+are deduplicated across specs that share (p_pad, beta1, beta2, eps).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--specs a,b]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import FlatModel, flat_spec, make_innov_fn, make_update_fn
+from .specs import SPECS, SPECS_BY_NAME
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*example_args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def _spec_dtype(s) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+
+
+def build_spec(spec, out_dir: str, dedup: dict) -> dict:
+    t0 = time.time()
+    fm = FlatModel(spec.kind, spec.cfg, spec.seed)
+    p_pad = fm.p_pad
+    theta = flat_spec(p_pad)
+
+    entry = {
+        "name": spec.name,
+        "kind": spec.kind,
+        "cfg": spec.cfg,
+        "p": fm.p,
+        "p_pad": p_pad,
+        "batch": spec.batch,
+        "eval_batch": spec.eval_batch,
+        "beta1": spec.beta1,
+        "beta2": spec.beta2,
+        "eps": spec.eps,
+        "seed": spec.seed,
+        "tags": list(spec.tags),
+    }
+
+    # ---- per-spec artifacts: grad, eval, init ---------------------------
+    grad_inputs = fm.input_specs(spec.batch)
+    eval_inputs = fm.input_specs(spec.eval_batch)
+    entry["grad_inputs"] = [
+        {"shape": list(s.shape), "dtype": _spec_dtype(s)} for s in grad_inputs
+    ]
+    entry["eval_inputs"] = [
+        {"shape": list(s.shape), "dtype": _spec_dtype(s)} for s in eval_inputs
+    ]
+
+    grad_file = f"{spec.name}.grad.hlo.txt"
+    lower_to_file(fm.grad_fn, (theta, *grad_inputs),
+                  os.path.join(out_dir, grad_file))
+    entry["grad_hlo"] = grad_file
+
+    eval_file = f"{spec.name}.eval.hlo.txt"
+    lower_to_file(fm.eval_fn, (theta, *eval_inputs),
+                  os.path.join(out_dir, eval_file))
+    entry["eval_hlo"] = eval_file
+
+    init_file = f"{spec.name}.init.bin"
+    fm.init_flat().astype("<f4").tofile(os.path.join(out_dir, init_file))
+    entry["init_bin"] = init_file
+
+    # ---- shared artifacts: update (Pallas), innov (Pallas) --------------
+    upd_key = ("update", p_pad, spec.beta1, spec.beta2, spec.eps)
+    if upd_key not in dedup:
+        upd_file = f"update_p{p_pad}_b1{spec.beta1}_b2{spec.beta2}_e{spec.eps}.hlo.txt"
+        update_fn = make_update_fn(p_pad, spec.beta1, spec.beta2, spec.eps)
+        alpha = jax.ShapeDtypeStruct((), np.float32)
+        lower_to_file(update_fn, (theta, theta, theta, theta, alpha),
+                      os.path.join(out_dir, upd_file))
+        dedup[upd_key] = upd_file
+    entry["update_hlo"] = dedup[upd_key]
+
+    innov_key = ("innov", p_pad)
+    if innov_key not in dedup:
+        innov_file = f"innov_p{p_pad}.hlo.txt"
+        lower_to_file(make_innov_fn(p_pad), (theta, theta),
+                      os.path.join(out_dir, innov_file))
+        dedup[innov_key] = innov_file
+    entry["innov_hlo"] = dedup[innov_key]
+
+    entry["lower_seconds"] = round(time.time() - t0, 2)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--specs", default="",
+                    help="comma-separated spec names (default: all)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.specs:
+        selected = [SPECS_BY_NAME[n.strip()] for n in args.specs.split(",")]
+    else:
+        selected = SPECS
+
+    dedup: dict = {}
+    entries = []
+    for spec in selected:
+        print(f"[aot] lowering {spec.name} ({spec.kind}) ...", flush=True)
+        entry = build_spec(spec, args.out, dedup)
+        print(f"[aot]   p={entry['p']} p_pad={entry['p_pad']} "
+              f"({entry['lower_seconds']}s)", flush=True)
+        entries.append(entry)
+
+    manifest = {"version": 1, "specs": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {len(entries)} specs -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""L1: Pallas kernels for CADA's per-iteration O(p) hot spots.
+
+- cada_update: fused AMSGrad/CADA server step, paper Eq. (2a)-(2c).
+- innovation: blocked ||g1 - g2||^2 reduction, the LHS of rules (5)/(7)/(10).
+- ref: pure-jnp oracles used by pytest.
+"""
+
+from .cada_update import cada_update, padded_dim, BLOCK_ROWS, LANES
+from .innovation import innovation_sqnorm
+from . import ref
+
+__all__ = [
+    "cada_update",
+    "innovation_sqnorm",
+    "padded_dim",
+    "BLOCK_ROWS",
+    "LANES",
+    "ref",
+]

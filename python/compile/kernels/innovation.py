@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: blocked squared-L2 innovation norm ||g1 - g2||^2.
+
+This is the left-hand side of every communication rule in the paper —
+stochastic LAG (Eq. 5), CADA1 (Eq. 7) and CADA2 (Eq. 10) all compare a
+squared gradient-difference norm against the Delta-theta history term. Each
+worker evaluates it once (CADA2/LAG) or twice (CADA1) per iteration, so on
+an accelerator it is a bandwidth-bound O(p) reduction.
+
+TPU shape: the two flat vectors are viewed as (rows, 128) lanes; the grid
+walks (BLOCK_ROWS, 128) tiles and each grid step accumulates a partial sum
+into a (1, 1) output tile (revisited by every step — the canonical Pallas
+reduction idiom: initialise at step 0, accumulate afterwards). A single
+scalar leaves the kernel, so HBM traffic is 2 reads of p floats and O(1)
+writes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cada_update import BLOCK_ROWS, LANES
+
+
+def _innov_kernel(g1_ref, g2_ref, out_ref):
+    i = pl.program_id(0)
+    d = g1_ref[...] - g2_ref[...]
+    partial = jnp.sum(d * d)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = 0.0
+
+    out_ref[0, 0] += partial
+
+
+def innovation_sqnorm(g1, g2, *, interpret=True):
+    """||g1 - g2||^2 over flat tile-aligned f32 vectors -> f32 scalar."""
+    p = g1.shape[0]
+    assert p % (BLOCK_ROWS * LANES) == 0, f"P={p} not tile aligned"
+    rows = p // LANES
+    grid = (rows // BLOCK_ROWS,)
+    tile = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _innov_kernel,
+        grid=grid,
+        in_specs=[tile, tile],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(g1.reshape(rows, LANES), g2.reshape(rows, LANES))
+    return out[0, 0]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These are deliberately written as the most literal transcription of the
+paper's equations — no fusion, no tiling — so any disagreement with the
+Pallas kernels points at the kernels, not at the oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cada_update_ref(theta, h, vhat, grad, alpha, *, beta1, beta2, eps):
+    """Paper Eq. (2a)-(2c), AMSGrad-style clamp on the second moment."""
+    h_new = beta1 * h + (1.0 - beta1) * grad
+    v_new = beta2 * vhat + (1.0 - beta2) * grad * grad
+    vhat_new = jnp.maximum(v_new, vhat)
+    theta_new = theta - alpha * h_new / jnp.sqrt(eps + vhat_new)
+    return theta_new, h_new, vhat_new
+
+
+def innovation_sqnorm_ref(g1, g2):
+    """LHS of rules (5), (7), (10): squared L2 norm of the difference."""
+    d = g1 - g2
+    return jnp.sum(d * d)

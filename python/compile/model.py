@@ -1,0 +1,111 @@
+"""L2 glue: flat-parameter views of the models + the jittable functions
+that aot.py lowers to HLO text.
+
+The rust coordinator (L3) is model-agnostic: it only ever manipulates flat,
+tile-aligned f32 vectors of length `p_pad` (a multiple of the Pallas tile,
+8*128 floats). This module owns the pytree <-> flat translation:
+
+  grad_fn(theta_pad, *batch) -> (loss, grad_pad)      per-worker gradient
+  eval_fn(theta_pad, *batch) -> (loss, correct_count) periodic evaluation
+  update_fn(theta, h, vhat, grad, alpha) -> (theta', h', vhat')
+      = the L1 Pallas kernel `kernels.cada_update` (Eq. 2a-2c)
+  innov_fn(g1, g2) -> ||g1-g2||^2
+      = the L1 Pallas kernel `kernels.innovation_sqnorm`
+
+Padding invariant: positions >= p are zero in theta/h/vhat/grad and stay
+zero under every one of these functions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from . import kernels
+from .models import cnn, logreg, mlp, transformer
+
+
+def build_model(kind: str, cfg: dict):
+    """Instantiate a model object from a spec dict (see specs.py)."""
+    if kind == "logreg_binary":
+        return logreg.Binary(cfg["num_features"], cfg.get("lam", 1e-5))
+    if kind == "logreg_multiclass":
+        return logreg.Multiclass(cfg["num_features"], cfg["num_classes"],
+                                 cfg.get("lam", 1e-5))
+    if kind == "mlp":
+        return mlp.Mlp(cfg["num_features"], tuple(cfg["hidden"]),
+                       cfg["num_classes"], cfg.get("lam", 0.0))
+    if kind == "cnn":
+        return cnn.Cnn(cfg["image_hw"], cfg["in_channels"],
+                       tuple(cfg["conv_channels"]), cfg["kernel"],
+                       cfg["fc_hidden"], cfg["num_classes"])
+    if kind == "transformer_lm":
+        return transformer.TransformerLm(cfg["vocab"], cfg["d_model"],
+                                         cfg["num_layers"], cfg["num_heads"],
+                                         cfg["seq_len"])
+    raise ValueError(f"unknown model kind: {kind}")
+
+
+class FlatModel:
+    """A model plus its flat-parameter plumbing."""
+
+    def __init__(self, kind: str, cfg: dict, seed: int):
+        self.kind = kind
+        self.cfg = cfg
+        self.model = build_model(kind, cfg)
+        template = self.model.init_params(jax.random.PRNGKey(seed))
+        flat, self._unravel = ravel_pytree(template)
+        self.p = int(flat.shape[0])
+        self.p_pad = kernels.padded_dim(self.p)
+        self._init_flat = np.zeros((self.p_pad,), np.float32)
+        self._init_flat[: self.p] = np.asarray(flat, np.float32)
+
+    # ------------------------------------------------------------- params
+    def init_flat(self) -> np.ndarray:
+        """Initial padded flat parameter vector (deterministic per seed)."""
+        return self._init_flat.copy()
+
+    def unflatten(self, theta_pad):
+        return self._unravel(theta_pad[: self.p])
+
+    # ---------------------------------------------------- jittable functions
+    def grad_fn(self, theta_pad, *batch):
+        def loss_of_flat(t):
+            return self.model.loss_fn(self._unravel(t), *batch)
+
+        loss, grad = jax.value_and_grad(loss_of_flat)(theta_pad[: self.p])
+        grad_pad = jnp.zeros((self.p_pad,), jnp.float32).at[: self.p].set(grad)
+        return loss, grad_pad
+
+    def eval_fn(self, theta_pad, *batch):
+        loss, correct = self.model.eval_fn(self.unflatten(theta_pad), *batch)
+        return loss, correct
+
+    def input_specs(self, batch_size: int):
+        return self.model.input_specs(batch_size)
+
+
+def make_update_fn(p_pad: int, beta1: float, beta2: float, eps: float):
+    """The lowered server step: L1 Pallas kernel with baked hyperparams."""
+
+    def update_fn(theta, h, vhat, grad, alpha):
+        return kernels.cada_update(theta, h, vhat, grad, alpha,
+                                   beta1=beta1, beta2=beta2, eps=eps)
+
+    return update_fn
+
+
+def make_innov_fn(p_pad: int):
+    def innov_fn(g1, g2):
+        return (kernels.innovation_sqnorm(g1, g2),)
+
+    return innov_fn
+
+
+@functools.lru_cache(maxsize=None)
+def flat_spec(p_pad: int):
+    return jax.ShapeDtypeStruct((p_pad,), jnp.float32)

@@ -1,0 +1,16 @@
+"""L2: JAX model definitions (build-time only).
+
+Every model exposes the same interface consumed by `compile.model`:
+
+    init_params(key)            -> params pytree (f32 leaves)
+    loss_fn(params, *batch)     -> scalar training loss
+    eval_fn(params, *batch)     -> (scalar mean loss, correct count f32)
+    input_specs(batch_size)     -> tuple of jax.ShapeDtypeStruct for *batch
+
+The rust coordinator only ever sees the FLAT padded parameter vector
+(`compile.model.FlatModel`), so new models plug in without touching L3.
+"""
+
+from . import logreg, mlp, cnn, transformer
+
+__all__ = ["logreg", "mlp", "cnn", "transformer"]

@@ -1,0 +1,95 @@
+"""Convolutional classifier: the paper's MNIST network (two conv-ELU-
+maxpool layers followed by two fully-connected layers, section 13.2.2) and
+the scaled CIFAR10 stand-in (DESIGN.md section 3: ResNet20's role is "a
+larger nonconvex model"; we keep the parameter-count order of magnitude).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv2d(x, w, b):
+    """NHWC conv with SAME padding, stride 1. w: [kh, kw, cin, cout]."""
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _maxpool2(x):
+    """2x2 max pooling, stride 2, NHWC."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+class Cnn:
+    def __init__(self, image_hw: int, in_channels: int, conv_channels: tuple,
+                 kernel: int, fc_hidden: int, num_classes: int):
+        self.image_hw = image_hw
+        self.in_channels = in_channels
+        self.conv_channels = tuple(conv_channels)
+        self.kernel = kernel
+        self.fc_hidden = fc_hidden
+        self.num_classes = num_classes
+        hw = image_hw
+        for _ in self.conv_channels:
+            hw //= 2
+        self.flat_dim = hw * hw * self.conv_channels[-1]
+
+    def init_params(self, key):
+        params = {"conv": [], "fc": []}
+        cin = self.in_channels
+        for cout in self.conv_channels:
+            key, sub = jax.random.split(key)
+            fan_in = self.kernel * self.kernel * cin
+            params["conv"].append({
+                "w": jnp.sqrt(2.0 / fan_in) * jax.random.normal(
+                    sub, (self.kernel, self.kernel, cin, cout), jnp.float32),
+                "b": jnp.zeros((cout,), jnp.float32),
+            })
+            cin = cout
+        dims = (self.flat_dim, self.fc_hidden, self.num_classes)
+        for din, dout in zip(dims[:-1], dims[1:]):
+            key, sub = jax.random.split(key)
+            params["fc"].append({
+                "w": jnp.sqrt(2.0 / din) * jax.random.normal(
+                    sub, (din, dout), jnp.float32),
+                "b": jnp.zeros((dout,), jnp.float32),
+            })
+        return params
+
+    def logits(self, params, x):
+        h = x
+        for layer in params["conv"]:
+            h = _maxpool2(jax.nn.elu(_conv2d(h, layer["w"], layer["b"])))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.elu(h @ params["fc"][0]["w"] + params["fc"][0]["b"])
+        return h @ params["fc"][1]["w"] + params["fc"][1]["b"]
+
+    def loss_fn(self, params, x, y):
+        logp = jax.nn.log_softmax(self.logits(params, x), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+    def eval_fn(self, params, x, y):
+        logits = self.logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        correct = jnp.sum((jnp.argmax(logits, axis=-1).astype(jnp.int32) == y).astype(jnp.float32))
+        return loss, correct
+
+    def input_specs(self, batch_size: int):
+        return (
+            jax.ShapeDtypeStruct(
+                (batch_size, self.image_hw, self.image_hw, self.in_channels),
+                jnp.float32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        )

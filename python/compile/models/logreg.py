@@ -1,0 +1,90 @@
+"""Logistic regression (binary + multiclass), paper section 4 "Logistic
+regression" workloads (covtype, ijcnn1, multiclass MNIST in the
+supplement). Loss is the paper's: logistic / cross-entropy augmented with
+an l2 regulariser lambda = 1e-5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _l2(params, lam):
+    return 0.5 * lam * sum(jnp.sum(p * p) for p in jax.tree_util.tree_leaves(params))
+
+
+class Binary:
+    """Binary logistic regression: y in {0, 1}, logits z = Xw + b."""
+
+    def __init__(self, num_features: int, lam: float = 1e-5):
+        self.num_features = num_features
+        self.lam = lam
+
+    def init_params(self, key):
+        del key  # zero init is standard for convex logreg
+        return {
+            "w": jnp.zeros((self.num_features,), jnp.float32),
+            "b": jnp.zeros((), jnp.float32),
+        }
+
+    def logits(self, params, x):
+        return x @ params["w"] + params["b"]
+
+    def loss_fn(self, params, x, y):
+        z = self.logits(params, x)
+        yf = y.astype(jnp.float32)
+        # BCE with logits: softplus(z) - y*z = -[y log s(z) + (1-y) log(1-s(z))]
+        nll = jnp.mean(jax.nn.softplus(z) - yf * z)
+        return nll + _l2(params, self.lam)
+
+    def eval_fn(self, params, x, y):
+        z = self.logits(params, x)
+        yf = y.astype(jnp.float32)
+        loss = jnp.mean(jax.nn.softplus(z) - yf * z) + _l2(params, self.lam)
+        correct = jnp.sum(((z > 0).astype(jnp.int32) == y).astype(jnp.float32))
+        return loss, correct
+
+    def input_specs(self, batch_size: int):
+        return (
+            jax.ShapeDtypeStruct((batch_size, self.num_features), jnp.float32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        )
+
+
+class Multiclass:
+    """Multiclass logistic regression (softmax cross-entropy)."""
+
+    def __init__(self, num_features: int, num_classes: int, lam: float = 1e-5):
+        self.num_features = num_features
+        self.num_classes = num_classes
+        self.lam = lam
+
+    def init_params(self, key):
+        del key
+        return {
+            "w": jnp.zeros((self.num_features, self.num_classes), jnp.float32),
+            "b": jnp.zeros((self.num_classes,), jnp.float32),
+        }
+
+    def logits(self, params, x):
+        return x @ params["w"] + params["b"]
+
+    def loss_fn(self, params, x, y):
+        logp = jax.nn.log_softmax(self.logits(params, x), axis=-1)
+        nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        return nll + _l2(params, self.lam)
+
+    def eval_fn(self, params, x, y):
+        logits = self.logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        loss = loss + _l2(params, self.lam)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1).astype(jnp.int32) == y).astype(jnp.float32))
+        return loss, correct
+
+    def input_specs(self, batch_size: int):
+        return (
+            jax.ShapeDtypeStruct((batch_size, self.num_features), jnp.float32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        )

@@ -1,0 +1,61 @@
+"""Fully-connected ELU classifier (the cheap stand-in for the paper's MNIST
+network when a fast nonconvex workload is needed, e.g. in the H-sweep
+benches). ELU matches the paper's activation choice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class Mlp:
+    def __init__(self, num_features: int, hidden: tuple, num_classes: int,
+                 lam: float = 0.0):
+        self.num_features = num_features
+        self.hidden = tuple(hidden)
+        self.num_classes = num_classes
+        self.lam = lam
+
+    def init_params(self, key):
+        dims = (self.num_features,) + self.hidden + (self.num_classes,)
+        params = []
+        for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+            key, sub = jax.random.split(key)
+            scale = jnp.sqrt(2.0 / din)
+            params.append({
+                "w": scale * jax.random.normal(sub, (din, dout), jnp.float32),
+                "b": jnp.zeros((dout,), jnp.float32),
+            })
+        return params
+
+    def logits(self, params, x):
+        h = x
+        for layer in params[:-1]:
+            h = jax.nn.elu(h @ layer["w"] + layer["b"])
+        last = params[-1]
+        return h @ last["w"] + last["b"]
+
+    def _reg(self, params):
+        if self.lam == 0.0:
+            return 0.0
+        return 0.5 * self.lam * sum(
+            jnp.sum(p * p) for p in jax.tree_util.tree_leaves(params))
+
+    def loss_fn(self, params, x, y):
+        logp = jax.nn.log_softmax(self.logits(params, x), axis=-1)
+        nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        return nll + self._reg(params)
+
+    def eval_fn(self, params, x, y):
+        logits = self.logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1)) + self._reg(params)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1).astype(jnp.int32) == y).astype(jnp.float32))
+        return loss, correct
+
+    def input_specs(self, batch_size: int):
+        return (
+            jax.ShapeDtypeStruct((batch_size, self.num_features), jnp.float32),
+            jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        )

@@ -1,0 +1,102 @@
+"""Causal transformer language model — the end-to-end validation workload
+(DESIGN.md section 6): train a few-million-parameter LM with CADA vs
+distributed Adam and log the loss curve, proving L1+L2+L3 compose on a
+realistic training job.
+
+Pre-norm decoder blocks, learned positional embeddings, tied output
+projection. Batch input is a single int32[B, S+1] token array; positions
+[:, :-1] are inputs and [:, 1:] are next-token targets.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+class TransformerLm:
+    def __init__(self, vocab: int, d_model: int, num_layers: int,
+                 num_heads: int, seq_len: int):
+        assert d_model % num_heads == 0
+        self.vocab = vocab
+        self.d_model = d_model
+        self.num_layers = num_layers
+        self.num_heads = num_heads
+        self.seq_len = seq_len
+        self.head_dim = d_model // num_heads
+
+    def init_params(self, key):
+        d = self.d_model
+        def dense(key, din, dout, scale=None):
+            scale = scale if scale is not None else (2.0 / din) ** 0.5
+            return scale * jax.random.normal(key, (din, dout), jnp.float32)
+
+        keys = jax.random.split(key, 2 + self.num_layers)
+        params = {
+            "embed": 0.02 * jax.random.normal(keys[0], (self.vocab, d), jnp.float32),
+            "pos": 0.02 * jax.random.normal(keys[1], (self.seq_len, d), jnp.float32),
+            "blocks": [],
+            "ln_f": {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)},
+        }
+        for i in range(self.num_layers):
+            ks = jax.random.split(keys[2 + i], 6)
+            params["blocks"].append({
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "wq": dense(ks[0], d, d), "wk": dense(ks[1], d, d),
+                "wv": dense(ks[2], d, d),
+                "wo": dense(ks[3], d, d, scale=0.02),
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "w1": dense(ks[4], d, 4 * d),
+                "b1": jnp.zeros((4 * d,)),
+                "w2": dense(ks[5], 4 * d, d, scale=0.02),
+                "b2": jnp.zeros((d,)),
+            })
+        return jax.tree_util.tree_map(lambda a: jnp.asarray(a, jnp.float32), params)
+
+    def _attn(self, blk, x):
+        b, s, d = x.shape
+        nh, hd = self.num_heads, self.head_dim
+        q = (x @ blk["wq"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        k = (x @ blk["wk"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        v = (x @ blk["wv"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e9)
+        out = jax.nn.softmax(scores, axis=-1) @ v
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+        return out @ blk["wo"]
+
+    def logits(self, params, tokens_in):
+        x = params["embed"][tokens_in] + params["pos"][None, : tokens_in.shape[1]]
+        for blk in params["blocks"]:
+            x = x + self._attn(blk, _layernorm(x, blk["ln1"]["g"], blk["ln1"]["b"]))
+            h = _layernorm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+            x = x + jax.nn.gelu(h @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+        x = _layernorm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+        return x @ params["embed"].T  # tied output projection
+
+    def loss_fn(self, params, tokens):
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        logp = jax.nn.log_softmax(self.logits(params, inputs), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    def eval_fn(self, params, tokens):
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        logits = self.logits(params, inputs)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = jnp.mean(-jnp.take_along_axis(logp, targets[..., None], axis=-1))
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == targets).astype(jnp.float32))
+        return loss, correct
+
+    def input_specs(self, batch_size: int):
+        return (
+            jax.ShapeDtypeStruct((batch_size, self.seq_len + 1), jnp.int32),
+        )

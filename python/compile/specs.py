@@ -1,0 +1,88 @@
+"""Experiment specs: everything aot.py needs to emit one artifact set.
+
+One spec == one (model, per-worker batch shape, Adam hyperparameters)
+combination. The names mirror the paper's workloads (Tables 1-4); the
+`*_like` synthetic substitutions are documented in DESIGN.md section 3.
+
+beta1/beta2/eps are baked into the update artifact as compile-time
+constants (they are fixed per experiment in the paper); alpha stays a
+runtime input because the 1/sqrt(K) and PL schedules change it every
+iteration.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Spec:
+    name: str
+    kind: str
+    cfg: dict
+    batch: int          # per-worker minibatch (grad artifact)
+    eval_batch: int     # evaluation batch (eval artifact)
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    seed: int = 0
+    tags: tuple = field(default_factory=tuple)
+
+
+SPECS = [
+    # Tiny spec: fast unit/integration tests on the rust side.
+    Spec("test_logreg", "logreg_binary", {"num_features": 8}, batch=16,
+         eval_batch=64, tags=("test",)),
+    Spec("test_mlp", "mlp",
+         {"num_features": 16, "hidden": [8], "num_classes": 3},
+         batch=8, eval_batch=32, tags=("test",)),
+
+    # Fig. 2 — covtype logistic regression (M=20, size-skewed, Table 1).
+    # Paper batch-ratio 1e-3 of 581k/20 workers ~= 29 samples/worker.
+    Spec("logreg_covtype", "logreg_binary", {"num_features": 54}, batch=32,
+         eval_batch=4096, tags=("fig2",)),
+
+    # Fig. 3 — ijcnn1 logistic regression (M=10 iid, Table 2).
+    # batch-ratio 0.01 of 91.7k/10 workers ~= 92 samples/worker.
+    Spec("logreg_ijcnn", "logreg_binary", {"num_features": 22}, batch=92,
+         eval_batch=4096, tags=("fig3",)),
+
+    # Supplement — multiclass logistic regression on MNIST-like data.
+    Spec("mlogreg_mnist", "logreg_multiclass",
+         {"num_features": 784, "num_classes": 10}, batch=64,
+         eval_batch=2048, tags=("supp",)),
+
+    # Fig. 4 — the paper's MNIST CNN (two conv-ELU-maxpool + two fc;
+    # fc hidden scaled 500 -> 128 for CPU-PJRT budget, DESIGN.md section 3).
+    Spec("cnn_mnist", "cnn",
+         {"image_hw": 28, "in_channels": 1, "conv_channels": [20, 50],
+          "kernel": 5, "fc_hidden": 128, "num_classes": 10},
+         batch=12, eval_batch=512, beta2=0.999, tags=("fig4",)),
+
+    # Fast nonconvex stand-in for the H-sweep benches (Figs. 6-7 dynamics).
+    Spec("mlp_mnist", "mlp",
+         {"num_features": 784, "hidden": [128], "num_classes": 10},
+         batch=12, eval_batch=2048, tags=("fig4", "fig6")),
+
+    # Fig. 5 — CIFAR10/ResNet20 stand-in: ~0.15M-param CNN on 16x16x3
+    # synthetic images (Table 4: beta2 = 0.99, batch 50).
+    Spec("cnn_cifar", "cnn",
+         {"image_hw": 16, "in_channels": 3, "conv_channels": [32, 64],
+          "kernel": 3, "fc_hidden": 128, "num_classes": 10},
+         batch=50, eval_batch=512, beta2=0.99, tags=("fig5", "fig7")),
+
+    # End-to-end validation driver (DESIGN.md section 6): ~2.7M-param LM.
+    Spec("transformer_lm", "transformer_lm",
+         {"vocab": 256, "d_model": 192, "num_layers": 6, "num_heads": 6,
+          "seq_len": 128},
+         batch=8, eval_batch=16, tags=("e2e",)),
+
+    # Budget-scaled e2e default (~0.83M params, ~6x faster per grad on
+    # CPU-PJRT); the full-size spec above stays available via --spec.
+    Spec("transformer_sm", "transformer_lm",
+         {"vocab": 256, "d_model": 128, "num_layers": 4, "num_heads": 4,
+          "seq_len": 64},
+         batch=8, eval_batch=32, tags=("e2e",)),
+]
+
+SPECS_BY_NAME = {s.name: s for s in SPECS}

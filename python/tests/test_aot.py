@@ -1,0 +1,87 @@
+"""AOT pipeline: manifest schema, HLO text well-formedness, init binaries.
+
+These tests run against a freshly lowered throwaway directory so they do
+not depend on (or dirty) the repo-level artifacts/.
+"""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.specs import SPECS, SPECS_BY_NAME
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    dedup = {}
+    entries = [aot.build_spec(SPECS_BY_NAME[n], out, dedup)
+               for n in ("test_logreg", "test_mlp")]
+    manifest = {"version": 1, "specs": entries}
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return out, manifest
+
+
+def test_manifest_schema(built):
+    out, manifest = built
+    assert manifest["version"] == 1
+    for e in manifest["specs"]:
+        for key in ("name", "kind", "p", "p_pad", "batch", "eval_batch",
+                    "beta1", "beta2", "eps", "grad_hlo", "eval_hlo",
+                    "update_hlo", "innov_hlo", "init_bin", "grad_inputs",
+                    "eval_inputs"):
+            assert key in e, key
+        assert e["p_pad"] % 1024 == 0
+        assert e["p"] <= e["p_pad"]
+        for inp in e["grad_inputs"]:
+            assert inp["dtype"] in ("f32", "i32")
+            assert inp["shape"][0] == e["batch"]
+
+
+def test_hlo_text_wellformed(built):
+    out, manifest = built
+    files = set()
+    for e in manifest["specs"]:
+        files |= {e["grad_hlo"], e["eval_hlo"], e["update_hlo"], e["innov_hlo"]}
+    for fname in files:
+        text = open(os.path.join(out, fname)).read()
+        assert "ENTRY" in text, fname
+        assert "ROOT" in text, fname
+        # HLO text, not a serialized proto (must be ascii-ish)
+        assert text.isprintable() or "\n" in text
+
+
+def test_init_bin_roundtrip(built):
+    out, manifest = built
+    for e in manifest["specs"]:
+        raw = open(os.path.join(out, e["init_bin"]), "rb").read()
+        assert len(raw) == 4 * e["p_pad"]
+        vals = np.frombuffer(raw, "<f4")
+        assert np.all(np.isfinite(vals))
+        assert np.all(vals[e["p"]:] == 0.0)
+
+
+def test_update_artifact_dedup(built):
+    """Specs sharing (p_pad, betas, eps) must share one update artifact."""
+    out = str(built[0]) + "_dedup"
+    os.makedirs(out, exist_ok=True)
+    dedup = {}
+    a = aot.build_spec(SPECS_BY_NAME["test_logreg"], out, dedup)
+    b = aot.build_spec(SPECS_BY_NAME["test_mlp"], out, dedup)
+    assert a["update_hlo"] == b["update_hlo"]
+    assert a["innov_hlo"] == b["innov_hlo"]
+
+
+def test_spec_names_unique():
+    names = [s.name for s in SPECS]
+    assert len(names) == len(set(names))
+
+
+def test_grad_and_eval_shapes_differ_only_in_batch():
+    e = SPECS_BY_NAME["test_logreg"]
+    assert e.batch != e.eval_batch

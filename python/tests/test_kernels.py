@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps shapes (tile counts), hyperparameters and value scales;
+assert_allclose against ref.py. Kernels run under interpret=True — exactly
+the configuration that is AOT-lowered into the artifacts the rust runtime
+executes, so these tests certify the artifact numerics too.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+TILE = kernels.BLOCK_ROWS * kernels.LANES
+
+
+def _rand(rng, p, scale=1.0):
+    return jnp.asarray(rng.normal(size=p).astype(np.float32) * scale)
+
+
+# --------------------------------------------------------------- padded_dim
+@pytest.mark.parametrize("p,expect", [
+    (1, TILE), (TILE, TILE), (TILE + 1, 2 * TILE), (5 * TILE, 5 * TILE),
+])
+def test_padded_dim(p, expect):
+    assert kernels.padded_dim(p) == expect
+
+
+@given(p=st.integers(min_value=1, max_value=10 * TILE))
+@settings(max_examples=50, deadline=None)
+def test_padded_dim_properties(p):
+    pad = kernels.padded_dim(p)
+    assert pad >= p
+    assert pad % TILE == 0
+    assert pad - p < TILE
+
+
+# -------------------------------------------------------------- cada_update
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    beta1=st.floats(min_value=0.0, max_value=0.99),
+    beta2=st.floats(min_value=0.9, max_value=0.9999),
+    eps=st.sampled_from([1e-8, 1e-6, 1e-3]),
+    alpha=st.floats(min_value=1e-5, max_value=1.0),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_cada_update_matches_ref(tiles, beta1, beta2, eps, alpha, scale, seed):
+    p = tiles * TILE
+    rng = np.random.default_rng(seed)
+    theta = _rand(rng, p, scale)
+    h = _rand(rng, p, scale)
+    vhat = jnp.abs(_rand(rng, p, scale))
+    grad = _rand(rng, p, scale)
+
+    out = kernels.cada_update(theta, h, vhat, grad, alpha,
+                              beta1=beta1, beta2=beta2, eps=eps)
+    exp = ref.cada_update_ref(theta, h, vhat, grad, alpha,
+                              beta1=beta1, beta2=beta2, eps=eps)
+    # f32 fma/reassociation noise between the fused kernel and the oracle
+    # grows with the value scale; tolerances scale accordingly.
+    for got, want, name in zip(out, exp, ("theta", "h", "vhat")):
+        np.testing.assert_allclose(got, want, rtol=2e-4,
+                                   atol=1e-5 * scale + 1e-6, err_msg=name)
+
+
+def test_cada_update_amsgrad_clamp_monotone():
+    """vhat must be entrywise non-decreasing (the AMSGrad max in 2b)."""
+    p = TILE
+    rng = np.random.default_rng(7)
+    theta, h = _rand(rng, p), _rand(rng, p)
+    vhat = jnp.abs(_rand(rng, p))
+    for step in range(5):
+        grad = _rand(rng, p, scale=0.1)
+        theta, h, vhat_new = kernels.cada_update(
+            theta, h, vhat, grad, 0.01, beta1=0.9, beta2=0.999, eps=1e-8)
+        assert bool(jnp.all(vhat_new >= vhat - 1e-7)), f"step {step}"
+        vhat = vhat_new
+
+
+def test_cada_update_zero_padding_inert():
+    """Padding invariant: zero tail stays exactly zero through the update."""
+    p = 2 * TILE
+    live = 100
+    rng = np.random.default_rng(3)
+    def padded(scale=1.0):
+        v = np.zeros(p, np.float32)
+        v[:live] = rng.normal(size=live).astype(np.float32) * scale
+        return jnp.asarray(v)
+
+    theta, h, grad = padded(), padded(), padded()
+    vhat = jnp.abs(padded())
+    for _ in range(3):
+        theta, h, vhat = kernels.cada_update(
+            theta, h, vhat, grad, 0.05, beta1=0.9, beta2=0.999, eps=1e-8)
+        assert np.all(np.asarray(theta)[live:] == 0.0)
+        assert np.all(np.asarray(h)[live:] == 0.0)
+        assert np.all(np.asarray(vhat)[live:] == 0.0)
+
+
+def test_cada_update_beta_zero_is_rms_step():
+    """beta1=0 reduces (2a) to the raw gradient direction."""
+    p = TILE
+    rng = np.random.default_rng(11)
+    theta = _rand(rng, p)
+    grad = _rand(rng, p)
+    zeros = jnp.zeros(p)
+    t2, h2, v2 = kernels.cada_update(theta, zeros, zeros, grad, 0.1,
+                                     beta1=0.0, beta2=0.0, eps=1e-8)
+    np.testing.assert_allclose(h2, grad, rtol=1e-6)
+    np.testing.assert_allclose(v2, grad * grad, rtol=1e-6)
+    np.testing.assert_allclose(
+        t2, theta - 0.1 * grad / jnp.sqrt(1e-8 + grad * grad), rtol=1e-5)
+
+
+# --------------------------------------------------------- innovation_sqnorm
+@given(
+    tiles=st.integers(min_value=1, max_value=6),
+    scale=st.sampled_from([1e-3, 1.0, 1e2]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_innovation_matches_ref(tiles, scale, seed):
+    p = tiles * TILE
+    rng = np.random.default_rng(seed)
+    g1, g2 = _rand(rng, p, scale), _rand(rng, p, scale)
+    got = kernels.innovation_sqnorm(g1, g2)
+    want = ref.innovation_sqnorm_ref(g1, g2)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_innovation_identity_is_zero():
+    p = 3 * TILE
+    g = _rand(np.random.default_rng(0), p)
+    assert float(kernels.innovation_sqnorm(g, g)) == 0.0
+
+
+def test_innovation_symmetry():
+    p = 2 * TILE
+    rng = np.random.default_rng(1)
+    g1, g2 = _rand(rng, p), _rand(rng, p)
+    a = float(kernels.innovation_sqnorm(g1, g2))
+    b = float(kernels.innovation_sqnorm(g2, g1))
+    np.testing.assert_allclose(a, b, rtol=1e-6)

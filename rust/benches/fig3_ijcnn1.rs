@@ -1,0 +1,12 @@
+//! Fig. 3 — ijcnn1-like logistic regression (Table 2)
+//!
+//! Regenerates the figure's series (loss vs iterations / gradient
+//! evaluations / communication uploads) and the summary table. See
+//! `cada::exp::figure` for knobs (CADA_BENCH_FAST=1 for a smoke run).
+
+fn main() {
+    if let Err(e) = cada::exp::figure_bench("fig3") {
+        eprintln!("bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md):
+//!
+//! * native tensor kernels (rule LHS, fused AMSGrad step) at every p_pad
+//!   in the artifact set — the L3 per-iteration cost;
+//! * PJRT artifact execution (grad / update / innov) — the L1/L2 cost and
+//!   the native-vs-artifact ablation for the update and innovation paths;
+//! * one full scheduler iteration on the tiny spec — the end-to-end
+//!   per-round overhead of the coordinator.
+
+use cada::bench::{black_box, Runner};
+use cada::comm::CostModel;
+use cada::config::Schedule;
+use cada::coordinator::rules::RuleKind;
+use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
+use cada::coordinator::server::Optimizer;
+use cada::data::{Dataset, Partition, PartitionScheme};
+use cada::runtime::native::NativeLogReg;
+use cada::runtime::{Compute, Engine, Manifest};
+use cada::tensor;
+use cada::util::rng::Rng;
+
+fn randv(p: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn main() {
+    let mut r = Runner::new();
+
+    // ---------------- L3 native kernels across parameter scales --------
+    r.header("native tensor kernels (L3 rule check + server update)");
+    for p in [1024usize, 102_400, 832_512, 2_739_200] {
+        let a = randv(p, 1);
+        let b = randv(p, 2);
+        let bytes = (8 * p) as u64; // two f32 streams in
+        r.bench_bytes(&format!("sqnorm_diff       p={p}"), bytes, || {
+            black_box(tensor::sqnorm_diff(&a, &b));
+        });
+    }
+    for p in [1024usize, 102_400, 2_739_200] {
+        let mut theta = randv(p, 3);
+        let mut h = randv(p, 4);
+        let mut vhat: Vec<f32> =
+            randv(p, 5).iter().map(|v| v.abs()).collect();
+        let g = randv(p, 6);
+        let bytes = (4 * 4 * p) as u64; // 4 streams in, 3 out (count reads)
+        r.bench_bytes(&format!("amsgrad_update    p={p}"), bytes, || {
+            tensor::amsgrad_update(&mut theta, &mut h, &mut vhat, &g,
+                                   1e-4, 0.9, 0.999, 1e-8);
+        });
+    }
+
+    // ---------------- PJRT artifact paths (L1/L2) ----------------------
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping PJRT benches: {e}");
+            return;
+        }
+    };
+    r.header("PJRT artifact execution (test_logreg, p_pad=1024)");
+    let mut eng = Engine::new(&manifest, "test_logreg").unwrap();
+    let spec = eng.spec.clone();
+    let p = spec.p_pad;
+    let theta = randv(p, 7);
+    let mut grad = vec![0.0f32; p];
+    let data = {
+        let mut rng = Rng::new(8);
+        let n = 256;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let mut s = 0.0;
+            for _ in 0..8 {
+                let v = rng.normal_f32(0.0, 1.0);
+                x.push(v);
+                s += v;
+            }
+            y.push((s > 0.0) as i32);
+        }
+        Dataset::Labeled { x, sample_shape: vec![8], y }
+    };
+    let batch = data.gather(&(0..spec.batch).collect::<Vec<_>>());
+    r.bench("pjrt grad exec    (b=16, p=1024)", || {
+        black_box(eng.grad(&theta, &batch, &mut grad).unwrap());
+    });
+    let mut th = theta.clone();
+    let mut h = vec![0.0f32; p];
+    let mut vh = vec![0.0f32; p];
+    r.bench("pjrt pallas update (p=1024)", || {
+        eng.update(&mut th, &mut h, &mut vh, &grad, 1e-4).unwrap();
+    });
+    let g2 = randv(p, 9);
+    r.bench("pjrt pallas innov  (p=1024)", || {
+        black_box(eng.innov(&theta, &g2).unwrap());
+    });
+    r.bench("native innov       (p=1024)  [ablation]", || {
+        black_box(tensor::sqnorm_diff(&theta, &g2));
+    });
+
+    // larger-spec update ablation: artifact call vs native loop
+    if let Ok(mut eng_big) = Engine::new(&manifest, "mlp_mnist") {
+        let pb = eng_big.spec.p_pad;
+        let mut thb = randv(pb, 10);
+        let mut hb = vec![0.0f32; pb];
+        let mut vb = vec![0.0f32; pb];
+        let gb = randv(pb, 11);
+        r.header("update ablation at p_pad=102400 (Pallas artifact vs native)");
+        r.bench("pjrt pallas update (p=102400)", || {
+            eng_big.update(&mut thb, &mut hb, &mut vb, &gb, 1e-4).unwrap();
+        });
+        let mut thn = randv(pb, 12);
+        let mut hn = vec![0.0f32; pb];
+        let mut vn = vec![0.0f32; pb];
+        r.bench("native update      (p=102400)", || {
+            tensor::amsgrad_update(&mut thn, &mut hn, &mut vn, &gb, 1e-4,
+                                   0.9, 0.999, 1e-8);
+        });
+    }
+
+    // ---------------- full coordinator round ---------------------------
+    r.header("full scheduler iteration (5 workers, tiny logreg)");
+    let mut rng = Rng::new(13);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 5, &mut rng);
+    let eval = data.gather(&(0..64.min(data.len())).collect::<Vec<_>>());
+    for (label, rule) in [
+        ("round: adam (always upload)", RuleKind::Always),
+        ("round: cada2 (adaptive)", RuleKind::Cada2 { c: 0.6 }),
+    ] {
+        let mut native = NativeLogReg::for_spec(8, p);
+        let cfg = LoopCfg {
+            iters: usize::MAX,
+            eval_every: usize::MAX,
+            rule,
+            max_delay: 50,
+            snapshot_every: 0,
+            d_max: 10,
+            batch: spec.batch,
+            use_artifact_update: false,
+            use_artifact_innov: false,
+            cost_model: CostModel::free(),
+            trace_cap: 0,
+            upload_bytes: spec.upload_bytes(),
+        };
+        let mut lp = ServerLoop::new(
+            cfg,
+            vec![0.0; p],
+            Optimizer::Amsgrad {
+                alpha: Schedule::Constant(0.01),
+                beta1: 0.9, beta2: 0.999, eps: 1e-8,
+                use_artifact: false,
+            },
+            &data, &partition, eval.clone(), 3);
+        let mut k = 0u64;
+        r.bench(&format!("{label} [native backend]"), || {
+            lp.step(k, &mut native).unwrap();
+            k += 1;
+        });
+    }
+    // same rounds on the PJRT backend
+    for (label, rule) in [
+        ("round: adam (always upload)", RuleKind::Always),
+        ("round: cada2 (adaptive)", RuleKind::Cada2 { c: 0.6 }),
+    ] {
+        let cfg = LoopCfg {
+            iters: usize::MAX,
+            eval_every: usize::MAX,
+            rule,
+            max_delay: 50,
+            snapshot_every: 0,
+            d_max: 10,
+            batch: spec.batch,
+            use_artifact_update: true,
+            use_artifact_innov: false,
+            cost_model: CostModel::free(),
+            trace_cap: 0,
+            upload_bytes: spec.upload_bytes(),
+        };
+        let mut lp = ServerLoop::new(
+            cfg,
+            vec![0.0; p],
+            Optimizer::Amsgrad {
+                alpha: Schedule::Constant(0.01),
+                beta1: spec.beta1, beta2: spec.beta2, eps: spec.eps,
+                use_artifact: true,
+            },
+            &data, &partition, eval.clone(), 3);
+        let mut k = 0u64;
+        r.bench(&format!("{label} [pjrt backend]"), || {
+            lp.step(k, &mut eng).unwrap();
+            k += 1;
+        });
+    }
+    println!("\nmicro_hotpath done ({} benchmarks)", r.results.len());
+}

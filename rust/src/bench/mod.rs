@@ -1,0 +1,177 @@
+//! Micro/End-to-end bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` drives `[[bench]] harness = false` targets that call
+//! [`Runner::bench`] for timed sections and print paper-style tables for
+//! the figure reproductions. Timing method: warmup iterations, then
+//! batched timed iterations until both a minimum duration and a minimum
+//! iteration count are reached; reports mean/median/p95 and throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    /// optional bytes processed per iteration (for GB/s reporting)
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_gbs(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.mean_ns)
+    }
+
+    pub fn render(&self) -> String {
+        let tp = match self.throughput_gbs() {
+            Some(t) => format!("  {t:8.2} GB/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  x{}{}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            self.iters,
+            tp
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Bench runner with global knobs (overridable via env for quick runs).
+pub struct Runner {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_iters: u64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        let scale: f64 = std::env::var("CADA_BENCH_SCALE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        Runner {
+            warmup: Duration::from_secs_f64(0.3 * scale),
+            min_time: Duration::from_secs_f64(1.0 * scale),
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, which performs ONE iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_with_bytes(name, None, &mut f)
+    }
+
+    pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: u64,
+                                   mut f: F) -> &BenchResult {
+        self.bench_with_bytes(name, Some(bytes), &mut f)
+    }
+
+    fn bench_with_bytes(&mut self, name: &str, bytes: Option<u64>,
+                        f: &mut dyn FnMut()) -> &BenchResult {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // timed
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let timed_start = Instant::now();
+        while timed_start.elapsed() < self.min_time
+            || (samples_ns.len() as u64) < self.min_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 5_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            mean_ns: mean,
+            median_ns: percentile(&samples_ns, 50.0),
+            p95_ns: percentile(&samples_ns, 95.0),
+            bytes_per_iter: bytes,
+        };
+        println!("{}", result.render());
+        self.results.push(result);
+        self.results.last().expect("just pushed")
+    }
+
+    pub fn header(&self, title: &str) {
+        println!("\n### {title}");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "median", "p95"
+        );
+    }
+}
+
+/// Prevent the optimiser from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut r = Runner {
+            warmup: Duration::from_millis(5),
+            min_time: Duration::from_millis(20),
+            min_iters: 5,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        r.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let res = &r.results[0];
+        assert!(res.iters >= 5);
+        assert!(res.mean_ns > 0.0);
+        assert!(res.median_ns <= res.p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

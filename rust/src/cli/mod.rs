@@ -1,0 +1,151 @@
+//! Minimal CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// flags that were consumed by a getter (for unknown-flag detection)
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates flags
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().expect("peeked");
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.known.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        Ok(self.f64_or(key, default as f64)? as f32)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on any flag no getter asked about (call after all getters).
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let known = self.known.borrow();
+        for key in self.flags.keys() {
+            if !known.iter().any(|k| k == key) {
+                anyhow::bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["train", "--spec=logreg", "--iters", "100",
+                        "--verbose", "--runs", "3"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str_or("spec", ""), "logreg");
+        assert_eq!(a.usize_or("iters", 0).unwrap(), 100);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.usize_or("runs", 1).unwrap(), 3);
+        assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse(&["--tyop", "x"]);
+        let _ = a.str_opt("typo");
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_flags() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.str_or("a", ""), "1");
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--iters", "ten"]);
+        assert!(a.usize_or("iters", 0).is_err());
+    }
+}

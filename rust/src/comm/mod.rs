@@ -1,0 +1,179 @@
+//! Simulated communication substrate: upload/download accounting and an
+//! asymmetric-uplink latency model.
+//!
+//! The paper's figures use *communication uploads* (count of
+//! worker-to-server gradient transmissions) as the x-axis; wall-clock on
+//! the authors' testbed is not reproducible, so we model time with a
+//! configurable cellular-style cost model (section 1: "communication
+//! uplink and downlink are not symmetric ... upload ... is costly").
+
+/// Cumulative communication counters for one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// worker -> server gradient/innovation transmissions (the paper's
+    /// "communication uploads"; |M^k| summed over k)
+    pub uploads: u64,
+    /// bytes carried by those uploads
+    pub upload_bytes: u64,
+    /// server -> worker model broadcasts (counted once per worker per
+    /// iteration for server-centric methods)
+    pub downloads: u64,
+    pub download_bytes: u64,
+    /// stochastic gradient evaluations across all workers
+    pub grad_evals: u64,
+    /// simulated wall-clock under the latency model, seconds
+    pub sim_time_s: f64,
+}
+
+impl CommStats {
+    pub fn record_upload(&mut self, bytes: usize, model: &CostModel) {
+        self.uploads += 1;
+        self.upload_bytes += bytes as u64;
+        self.sim_time_s += model.upload_time_s(bytes);
+    }
+
+    pub fn record_broadcast(&mut self, workers: usize, bytes: usize,
+                            model: &CostModel) {
+        self.downloads += workers as u64;
+        self.download_bytes += (workers * bytes) as u64;
+        // broadcasts to all workers proceed in parallel: one latency hit
+        self.sim_time_s += model.download_time_s(bytes);
+    }
+
+    pub fn record_grad_evals(&mut self, count: u64) {
+        self.grad_evals += count;
+    }
+}
+
+/// Link cost model: per-message setup latency + bandwidth term, with an
+/// uplink that is `asymmetry`x slower than the downlink.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// per-message latency, seconds
+    pub latency_s: f64,
+    /// downlink bandwidth, bytes/second
+    pub down_bw: f64,
+    /// uplink slowdown factor (>= 1; cellular uplinks are slower)
+    pub asymmetry: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // LTE-ish: 20ms RTT share, 100 Mbit/s down, 10x slower up.
+        CostModel {
+            latency_s: 0.02,
+            down_bw: 12.5e6,
+            asymmetry: 10.0,
+        }
+    }
+}
+
+impl CostModel {
+    pub fn upload_time_s(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / (self.down_bw / self.asymmetry)
+    }
+
+    pub fn download_time_s(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.down_bw
+    }
+
+    /// A free (zero-cost) model for pure-counting experiments.
+    pub fn free() -> Self {
+        CostModel {
+            latency_s: 0.0,
+            down_bw: f64::INFINITY,
+            asymmetry: 1.0,
+        }
+    }
+}
+
+/// One row of the per-iteration communication trace (event log).
+#[derive(Clone, Debug)]
+pub struct RoundEvent {
+    pub iter: u64,
+    /// workers that uploaded this round (|M^k| = uploaded.len())
+    pub uploaded: Vec<usize>,
+    /// staleness tau_m AFTER the round, per worker
+    pub staleness: Vec<u32>,
+    /// mean adaptive-rule LHS across workers (NaN for non-adaptive rules)
+    pub mean_lhs: f64,
+    /// the shared drift RHS this round
+    pub rhs: f64,
+}
+
+/// Bounded in-memory event trace (ring buffer semantics).
+#[derive(Clone, Debug)]
+pub struct EventTrace {
+    pub events: Vec<RoundEvent>,
+    cap: usize,
+}
+
+impl EventTrace {
+    pub fn new(cap: usize) -> Self {
+        EventTrace {
+            events: Vec::new(),
+            cap,
+        }
+    }
+
+    pub fn push(&mut self, ev: RoundEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.remove(0);
+        }
+        self.events.push(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asymmetric_costs() {
+        let m = CostModel {
+            latency_s: 0.01,
+            down_bw: 1000.0,
+            asymmetry: 10.0,
+        };
+        let up = m.upload_time_s(1000);
+        let down = m.download_time_s(1000);
+        assert!((down - 1.01).abs() < 1e-9);
+        assert!((up - 10.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let model = CostModel::free();
+        let mut s = CommStats::default();
+        s.record_upload(400, &model);
+        s.record_upload(400, &model);
+        s.record_broadcast(10, 400, &model);
+        s.record_grad_evals(20);
+        assert_eq!(s.uploads, 2);
+        assert_eq!(s.upload_bytes, 800);
+        assert_eq!(s.downloads, 10);
+        assert_eq!(s.download_bytes, 4000);
+        assert_eq!(s.grad_evals, 20);
+        assert_eq!(s.sim_time_s, 0.0);
+    }
+
+    #[test]
+    fn trace_bounded() {
+        let mut t = EventTrace::new(2);
+        for i in 0..5 {
+            t.push(RoundEvent {
+                iter: i,
+                uploaded: vec![],
+                staleness: vec![],
+                mean_lhs: 0.0,
+                rhs: 0.0,
+            });
+        }
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[0].iter, 3);
+        assert_eq!(t.events[1].iter, 4);
+    }
+}

@@ -1,0 +1,344 @@
+//! Experiment configuration: typed config struct, presets mirroring the
+//! paper's Tables 1–4, and TOML-file / CLI overrides.
+
+pub mod toml;
+
+use crate::data::{DatasetKind, PartitionScheme};
+
+/// Stepsize schedule (paper: constant in experiments; 1/sqrt(K) for
+/// Theorem 4; 2/(mu (k + K0)) for Theorem 5 / PL).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant(f32),
+    /// alpha_k = eta0 / sqrt(k + 1)
+    InvSqrt { eta0: f32 },
+    /// alpha_k = scale / (k + k0)  (the PL-condition schedule)
+    Poly { scale: f32, k0: f32 },
+}
+
+impl Schedule {
+    pub fn at(&self, k: u64) -> f32 {
+        match *self {
+            Schedule::Constant(a) => a,
+            Schedule::InvSqrt { eta0 } => eta0 / ((k + 1) as f32).sqrt(),
+            Schedule::Poly { scale, k0 } => scale / (k as f32 + k0),
+        }
+    }
+}
+
+/// Per-algorithm hyperparameters (one entry per curve in a figure).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoConfig {
+    /// Distributed Adam/AMSGrad with fresh uploads every iteration.
+    Adam { alpha: Schedule },
+    /// CADA variant 1 (snapshot rule, Eq. 7).
+    Cada1 { alpha: Schedule, c: f32, d_max: usize, max_delay: u32 },
+    /// CADA variant 2 (same-sample rule, Eq. 10).
+    Cada2 { alpha: Schedule, c: f32, d_max: usize, max_delay: u32 },
+    /// Direct stochastic LAG (Eq. 5) on distributed SGD.
+    Lag { eta: Schedule, c: f32, d_max: usize, max_delay: u32 },
+    /// Distributed SGD with fresh uploads (LAG's "always" baseline).
+    Sgd { eta: Schedule },
+    /// Local momentum SGD, model-averaged every `h` iterations.
+    LocalMomentum { eta: f32, beta: f32, h: u32 },
+    /// FedAvg / local SGD, averaged every `h` iterations.
+    FedAvg { eta: f32, h: u32 },
+    /// FedAdam: local SGD + server Adam on averaged deltas every `h`.
+    FedAdam { alpha_local: f32, alpha_server: f32, beta1: f32, h: u32 },
+}
+
+impl AlgoConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoConfig::Adam { .. } => "adam",
+            AlgoConfig::Cada1 { .. } => "cada1",
+            AlgoConfig::Cada2 { .. } => "cada2",
+            AlgoConfig::Lag { .. } => "lag",
+            AlgoConfig::Sgd { .. } => "sgd",
+            AlgoConfig::LocalMomentum { .. } => "local_momentum",
+            AlgoConfig::FedAvg { .. } => "fedavg",
+            AlgoConfig::FedAdam { .. } => "fedadam",
+        }
+    }
+}
+
+/// One experiment = one figure panel family: a workload plus the set of
+/// algorithms compared on it.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub name: String,
+    /// artifact spec name in manifest.json
+    pub spec: String,
+    pub dataset: DatasetKind,
+    /// total synthetic samples
+    pub n: usize,
+    pub workers: usize,
+    pub partition: PartitionScheme,
+    pub iters: usize,
+    pub eval_every: usize,
+    pub runs: u32,
+    pub seed: u64,
+    /// loss level defining "reached target" in summary tables
+    pub target_loss: f64,
+    pub algos: Vec<AlgoConfig>,
+}
+
+impl ExpConfig {
+    /// Budget-scale an experiment: shrink iteration count and dataset,
+    /// used by `cargo test`-level smoke runs and CI.
+    pub fn scaled(mut self, iters: usize, n: usize, runs: u32) -> Self {
+        self.iters = iters;
+        self.n = n;
+        self.runs = runs;
+        self
+    }
+}
+
+const C: fn(f32) -> Schedule = Schedule::Constant;
+
+/// Fig. 2 — covtype logistic regression, M=20 heterogeneous (Table 1).
+pub fn fig2_covtype() -> ExpConfig {
+    ExpConfig {
+        name: "fig2_covtype".into(),
+        spec: "logreg_covtype".into(),
+        dataset: DatasetKind::CovtypeLike,
+        n: 40_000,
+        workers: 20,
+        partition: PartitionScheme::SizeSkew { alpha: 1.0, min_frac: 0.2 },
+        iters: 1_500,
+        eval_every: 25,
+        runs: 3,
+        seed: 2020,
+        target_loss: 0.32,
+        algos: vec![
+            AlgoConfig::Adam { alpha: C(0.005) },
+            AlgoConfig::Cada1 { alpha: C(0.005), c: 0.6, d_max: 10,
+                                max_delay: 100 },
+            AlgoConfig::Cada2 { alpha: C(0.005), c: 0.6, d_max: 10,
+                                max_delay: 100 },
+            AlgoConfig::Lag { eta: C(0.1), c: 0.6, d_max: 10,
+                              max_delay: 100 },
+            AlgoConfig::LocalMomentum { eta: 0.1, beta: 0.9, h: 10 },
+            AlgoConfig::FedAdam { alpha_local: 0.1, alpha_server: 0.02,
+                                  beta1: 0.9, h: 10 },
+        ],
+    }
+}
+
+/// Fig. 3 — ijcnn1 logistic regression, M=10 iid (Table 2).
+pub fn fig3_ijcnn() -> ExpConfig {
+    ExpConfig {
+        name: "fig3_ijcnn".into(),
+        spec: "logreg_ijcnn".into(),
+        dataset: DatasetKind::IjcnnLike,
+        n: 20_000,
+        workers: 10,
+        partition: PartitionScheme::Uniform,
+        iters: 1_500,
+        eval_every: 25,
+        runs: 3,
+        seed: 2021,
+        target_loss: 0.18,
+        algos: vec![
+            AlgoConfig::Adam { alpha: C(0.01) },
+            AlgoConfig::Cada1 { alpha: C(0.01), c: 0.6, d_max: 10,
+                                max_delay: 100 },
+            AlgoConfig::Cada2 { alpha: C(0.01), c: 0.6, d_max: 10,
+                                max_delay: 100 },
+            AlgoConfig::Lag { eta: C(0.1), c: 0.6, d_max: 10,
+                              max_delay: 100 },
+            AlgoConfig::LocalMomentum { eta: 0.1, beta: 0.9, h: 20 },
+            AlgoConfig::FedAdam { alpha_local: 0.1, alpha_server: 0.03,
+                                  beta1: 0.9, h: 10 },
+        ],
+    }
+}
+
+/// Fig. 4 — MNIST CNN (Table 3), mlp variant for quick runs.
+pub fn fig4_mnist(use_cnn: bool) -> ExpConfig {
+    ExpConfig {
+        name: if use_cnn { "fig4_mnist_cnn" } else { "fig4_mnist_mlp" }.into(),
+        spec: if use_cnn { "cnn_mnist" } else { "mlp_mnist" }.into(),
+        dataset: DatasetKind::MnistLike,
+        n: 10_000,
+        workers: 10,
+        partition: PartitionScheme::Uniform,
+        iters: 600,
+        eval_every: 20,
+        runs: 1,
+        seed: 2022,
+        target_loss: 0.30,
+        algos: vec![
+            AlgoConfig::Adam { alpha: C(5e-4) },
+            AlgoConfig::Cada1 { alpha: C(5e-4), c: 0.6, d_max: 10,
+                                max_delay: 50 },
+            AlgoConfig::Cada2 { alpha: C(5e-4), c: 0.6, d_max: 10,
+                                max_delay: 50 },
+            AlgoConfig::Lag { eta: C(0.1), c: 0.6, d_max: 10,
+                              max_delay: 50 },
+            AlgoConfig::LocalMomentum { eta: 0.001, beta: 0.9, h: 8 },
+            AlgoConfig::FedAdam { alpha_local: 0.1, alpha_server: 0.001,
+                                  beta1: 0.9, h: 8 },
+        ],
+    }
+}
+
+/// Fig. 5 — CIFAR10 ResNet20 stand-in CNN (Table 4).
+pub fn fig5_cifar() -> ExpConfig {
+    ExpConfig {
+        name: "fig5_cifar".into(),
+        spec: "cnn_cifar".into(),
+        dataset: DatasetKind::CifarLike,
+        n: 10_000,
+        workers: 10,
+        partition: PartitionScheme::Uniform,
+        iters: 400,
+        eval_every: 20,
+        runs: 1,
+        seed: 2023,
+        target_loss: 0.8,
+        algos: vec![
+            AlgoConfig::Adam { alpha: C(0.01) },
+            AlgoConfig::Cada1 { alpha: C(0.01), c: 0.3, d_max: 2,
+                                max_delay: 50 },
+            AlgoConfig::Cada2 { alpha: C(0.01), c: 0.3, d_max: 2,
+                                max_delay: 50 },
+            AlgoConfig::Lag { eta: C(0.02), c: 0.3, d_max: 2,
+                              max_delay: 50 },
+            AlgoConfig::LocalMomentum { eta: 0.02, beta: 0.9, h: 8 },
+            AlgoConfig::FedAdam { alpha_local: 0.02, alpha_server: 0.01,
+                                  beta1: 0.9, h: 8 },
+        ],
+    }
+}
+
+/// Figs. 6/7 — FedAdam / local momentum under H in {1, 8, 16}.
+pub fn fig67_h_sweep(cifar: bool) -> ExpConfig {
+    let base = if cifar { fig5_cifar() } else { fig4_mnist(false) };
+    let mut algos = Vec::new();
+    for &h in &[1u32, 8, 16] {
+        let (eta, al, as_) = if cifar {
+            (0.02, 0.02, 0.01)
+        } else {
+            (0.001, 0.1, 0.001)
+        };
+        algos.push(AlgoConfig::LocalMomentum { eta, beta: 0.9, h });
+        algos.push(AlgoConfig::FedAdam { alpha_local: al, alpha_server: as_,
+                                         beta1: 0.9, h });
+    }
+    ExpConfig {
+        name: if cifar { "fig7_h_sweep_cifar" } else { "fig6_h_sweep_mnist" }
+            .into(),
+        algos,
+        ..base
+    }
+}
+
+/// Named preset lookup for the CLI / launcher.
+pub fn preset(name: &str) -> anyhow::Result<ExpConfig> {
+    Ok(match name {
+        "fig2" | "fig2_covtype" => fig2_covtype(),
+        "fig3" | "fig3_ijcnn" => fig3_ijcnn(),
+        "fig4" | "fig4_mnist" => fig4_mnist(false),
+        "fig4_cnn" => fig4_mnist(true),
+        "fig5" | "fig5_cifar" => fig5_cifar(),
+        "fig6" => fig67_h_sweep(false),
+        "fig7" => fig67_h_sweep(true),
+        other => anyhow::bail!(
+            "unknown preset '{other}' (have fig2..fig7, fig4_cnn)"),
+    })
+}
+
+/// Apply `[experiment]` overrides from a TOML doc (launcher config file).
+pub fn apply_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
+                       -> anyhow::Result<()> {
+    if let Some(v) = doc.get("experiment", "iters") {
+        cfg.iters = v.as_usize()
+            .ok_or_else(|| anyhow::anyhow!("iters must be a number"))?;
+    }
+    if let Some(v) = doc.get("experiment", "n") {
+        cfg.n = v.as_usize()
+            .ok_or_else(|| anyhow::anyhow!("n must be a number"))?;
+    }
+    if let Some(v) = doc.get("experiment", "workers") {
+        cfg.workers = v.as_usize()
+            .ok_or_else(|| anyhow::anyhow!("workers must be a number"))?;
+    }
+    if let Some(v) = doc.get("experiment", "runs") {
+        cfg.runs = v.as_usize()
+            .ok_or_else(|| anyhow::anyhow!("runs must be a number"))? as u32;
+    }
+    if let Some(v) = doc.get("experiment", "seed") {
+        cfg.seed = v.as_f64()
+            .ok_or_else(|| anyhow::anyhow!("seed must be a number"))? as u64;
+    }
+    if let Some(v) = doc.get("experiment", "eval_every") {
+        cfg.eval_every = v.as_usize()
+            .ok_or_else(|| anyhow::anyhow!("eval_every must be a number"))?;
+    }
+    if let Some(v) = doc.get("experiment", "target_loss") {
+        cfg.target_loss = v.as_f64()
+            .ok_or_else(|| anyhow::anyhow!("target_loss must be a number"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules() {
+        assert_eq!(Schedule::Constant(0.1).at(999), 0.1);
+        let s = Schedule::InvSqrt { eta0: 1.0 };
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+        assert!((s.at(3) - 0.5).abs() < 1e-6);
+        let p = Schedule::Poly { scale: 2.0, k0: 2.0 };
+        assert!((p.at(0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn presets_cover_all_figures() {
+        for name in ["fig2", "fig3", "fig4", "fig4_cnn", "fig5", "fig6",
+                     "fig7"] {
+            let cfg = preset(name).unwrap();
+            assert!(!cfg.algos.is_empty(), "{name}");
+            assert!(cfg.iters > 0);
+        }
+        assert!(preset("fig99").is_err());
+    }
+
+    #[test]
+    fn fig2_matches_table1_shape() {
+        let cfg = fig2_covtype();
+        assert_eq!(cfg.workers, 20);
+        // CADA rows use the paper's alpha = 0.005, D = 100, d_max = 10
+        let cada = cfg.algos.iter().find(|a| a.name() == "cada2").unwrap();
+        match cada {
+            AlgoConfig::Cada2 { alpha, d_max, max_delay, .. } => {
+                assert_eq!(*alpha, Schedule::Constant(0.005));
+                assert_eq!(*d_max, 10);
+                assert_eq!(*max_delay, 100);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = fig3_ijcnn();
+        let doc = toml::parse(
+            "[experiment]\niters = 7\nruns = 2\ntarget_loss = 0.5\n")
+            .unwrap();
+        apply_overrides(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.iters, 7);
+        assert_eq!(cfg.runs, 2);
+        assert_eq!(cfg.target_loss, 0.5);
+    }
+
+    #[test]
+    fn h_sweep_has_three_h_values() {
+        let cfg = fig67_h_sweep(false);
+        assert_eq!(cfg.algos.len(), 6);
+    }
+}

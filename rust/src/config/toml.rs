@@ -1,0 +1,182 @@
+//! TOML-subset parser for experiment config files (the `toml` crate is
+//! unavailable offline). Supported: `[section]` headers, `key = value`
+//! with string/number/bool/flat-array values, `#` comments. This covers
+//! the whole config surface of the launcher; anything fancier is a parse
+//! error rather than a silent misread.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|n| *n >= 0.0).map(|n| n as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+pub type Section = BTreeMap<String, Value>;
+
+/// `sections[""]` holds top-level keys (before any `[section]`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+}
+
+pub fn parse(text: &str) -> anyhow::Result<Doc> {
+    let mut doc = Doc::default();
+    let mut current = String::new();
+    doc.sections.insert(String::new(), Section::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad section header",
+                                               lineno + 1))?
+                .trim();
+            anyhow::ensure!(!name.is_empty(), "line {}: empty section",
+                            lineno + 1);
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("line {}: expected key = value", lineno + 1)
+        })?;
+        let key = key.trim();
+        anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+        let value = parse_value(val.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.sections
+            .get_mut(&current)
+            .expect("section exists")
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    anyhow::ensure!(!s.is_empty(), "empty value");
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        anyhow::ensure!(!inner.contains('"'), "embedded quote unsupported");
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow::anyhow!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+            # experiment
+            name = "fig2"   # inline comment
+            iters = 3000
+            [cada2]
+            alpha = 0.005
+            c = 0.3
+            grid = [1, 4, 8]
+            fresh = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("fig2"));
+        assert_eq!(doc.get("", "iters").unwrap().as_usize(), Some(3000));
+        assert_eq!(doc.get("cada2", "alpha").unwrap().as_f64(), Some(0.005));
+        assert_eq!(doc.get("cada2", "fresh").unwrap().as_bool(), Some(true));
+        match doc.get("cada2", "grid").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = parse("x = 1\noops").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("k = what").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+}

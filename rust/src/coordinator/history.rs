@@ -1,0 +1,107 @@
+//! The rules' right-hand side: a ring buffer of the last `d_max` squared
+//! parameter-step norms, RHS = (c / d_max) * sum_d ||theta^{k+1-d} -
+//! theta^{k-d}||^2 (paper Eqs. 5/7/10).
+//!
+//! The paper initialises theta^{-D} ... theta^{-1} = theta^0, so missing
+//! early entries contribute exactly zero — dividing by `d_max` (not by the
+//! current fill level) reproduces that.
+
+/// Ring buffer of squared step norms with O(1) push and O(1) sum.
+#[derive(Clone, Debug)]
+pub struct DeltaHistory {
+    ring: Vec<f64>,
+    head: usize,
+    filled: usize,
+    sum: f64,
+    d_max: usize,
+}
+
+impl DeltaHistory {
+    pub fn new(d_max: usize) -> Self {
+        assert!(d_max >= 1);
+        DeltaHistory {
+            ring: vec![0.0; d_max],
+            head: 0,
+            filled: 0,
+            sum: 0.0,
+            d_max,
+        }
+    }
+
+    /// Record ||theta^{k+1} - theta^k||^2 after a server step.
+    pub fn push(&mut self, sq_step: f64) {
+        debug_assert!(sq_step >= 0.0);
+        self.sum -= self.ring[self.head];
+        self.ring[self.head] = sq_step;
+        self.sum += sq_step;
+        self.head = (self.head + 1) % self.d_max;
+        self.filled = (self.filled + 1).min(self.d_max);
+        // fight drift: recompute exactly once per wrap
+        if self.head == 0 {
+            self.sum = self.ring.iter().sum();
+        }
+    }
+
+    /// (c / d_max) * sum of stored squared step norms.
+    pub fn rhs(&self, c: f32) -> f64 {
+        c as f64 * self.sum / self.d_max as f64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    pub fn d_max(&self) -> usize {
+        self.d_max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_rhs_is_zero() {
+        let h = DeltaHistory::new(10);
+        assert_eq!(h.rhs(0.5), 0.0);
+    }
+
+    #[test]
+    fn partial_fill_divides_by_dmax() {
+        let mut h = DeltaHistory::new(4);
+        h.push(2.0);
+        // (c/d_max) * 2.0 with the three missing entries counted as 0
+        assert!((h.rhs(1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(h.filled(), 1);
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut h = DeltaHistory::new(3);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.push(v);
+        }
+        // window is now {2, 3, 4}
+        assert!((h.sum() - 9.0).abs() < 1e-12);
+        assert!((h.rhs(3.0) - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_naive_over_long_sequence() {
+        let mut h = DeltaHistory::new(7);
+        let mut naive: Vec<f64> = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..500 {
+            let v = rng.f64();
+            h.push(v);
+            naive.push(v);
+            let window: f64 =
+                naive.iter().rev().take(7).sum();
+            assert!((h.sum() - window).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's L3 contribution: the CADA parameter server, workers with
+//! adaptive upload rules, and the round scheduler that drives them.
+//!
+//! Structure mirrors Algorithm 1 of the paper:
+//!
+//! * [`rules`]    — the communication rules: CADA1 (Eq. 7), CADA2 (Eq. 10),
+//!                  stochastic LAG (Eq. 5), Always (= distributed Adam),
+//!                  Periodic, Never.
+//! * [`history`]  — the `d_max`-deep ring of ||theta^{k+1-d} - theta^{k-d}||^2
+//!                  (the rules' right-hand side).
+//! * [`worker`]   — per-worker state: staleness tau_m, stale gradient,
+//!                  rule-specific stores (snapshot innovation / old iterate).
+//! * [`server`]   — the aggregate-gradient recursion (Eq. 3) and the
+//!                  AMSGrad/SGD update (Eq. 2a-2c), native or Pallas-artifact
+//!                  backed.
+//! * [`scheduler`]— the iteration loop: broadcast, worker checks, uploads,
+//!                  server step, metrics, eval.
+
+pub mod history;
+pub mod rules;
+pub mod scheduler;
+pub mod server;
+pub mod worker;

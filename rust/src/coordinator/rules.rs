@@ -1,0 +1,159 @@
+//! Communication rules: when may a worker SKIP uploading its gradient?
+//!
+//! A rule decides, per worker per iteration, whether the stale gradient
+//! the server already holds is still informative enough. All adaptive
+//! rules compare a squared innovation norm (LHS) against the shared
+//! parameter-drift term RHS = (c/d_max) * sum_d ||theta^{k+1-d} -
+//! theta^{k-d}||^2 from [`super::history::DeltaHistory`]:
+//!
+//! * `Lag`   (Eq. 5):  ||g(theta^k; xi^k) - g(theta^{k-tau}; xi^{k-tau})||^2
+//!   — evaluated on DIFFERENT samples, so its LHS floors at the gradient
+//!   variance and never vanishes (paper section 2.1): LAG stops saving.
+//! * `Cada1` (Eq. 7):  ||dtilde^k - dtilde^{k-tau}||^2 where dtilde^k =
+//!   g(theta^k; xi^k) - g(snapshot; xi^k) — a variance-reduced innovation
+//!   (both grads share the sample xi^k; the snapshot refreshes every D).
+//! * `Cada2` (Eq. 10): ||g(theta^k; xi^k) - g(theta^{k-tau}; xi^k)||^2 —
+//!   two iterates, SAME sample, again variance-reduced.
+//!
+//! `Always` (every worker uploads, = distributed Adam/SGD), `Periodic`
+//! and `Never` complete the baseline space.
+
+/// Rule selecting the upload set M^k.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RuleKind {
+    /// Fresh upload every iteration (distributed Adam / SGD).
+    Always,
+    /// CADA1 snapshot rule (Eq. 7).
+    Cada1 { c: f32 },
+    /// CADA2 same-sample rule (Eq. 10).
+    Cada2 { c: f32 },
+    /// Direct stochastic LAG (Eq. 5).
+    Lag { c: f32 },
+    /// Upload iff k % h == 0 (non-adaptive periodic skipping).
+    Periodic { h: u32 },
+    /// Only the max-delay refresh uploads (ablation lower bound).
+    Never,
+}
+
+impl RuleKind {
+    /// Threshold constant `c` (0 for non-adaptive rules).
+    pub fn c(&self) -> f32 {
+        match *self {
+            RuleKind::Cada1 { c } | RuleKind::Cada2 { c }
+            | RuleKind::Lag { c } => c,
+            _ => 0.0,
+        }
+    }
+
+    /// Stochastic-gradient evaluations a worker spends per iteration
+    /// under this rule (the paper's "computational complexity" axis:
+    /// CADA doubles the per-iteration gradient cost).
+    pub fn grad_evals_per_iter(&self) -> u64 {
+        match self {
+            RuleKind::Cada1 { .. } | RuleKind::Cada2 { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Does this rule need the server-maintained snapshot theta-tilde?
+    pub fn needs_snapshot(&self) -> bool {
+        matches!(self, RuleKind::Cada1 { .. })
+    }
+
+    /// Does this rule need the worker to remember its last-upload iterate?
+    pub fn needs_stored_iterate(&self) -> bool {
+        matches!(self, RuleKind::Cada2 { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleKind::Always => "always",
+            RuleKind::Cada1 { .. } => "cada1",
+            RuleKind::Cada2 { .. } => "cada2",
+            RuleKind::Lag { .. } => "lag",
+            RuleKind::Periodic { .. } => "periodic",
+            RuleKind::Never => "never",
+        }
+    }
+}
+
+/// Skip decision for one worker at one iteration, given the rule LHS
+/// (innovation sq-norm, already computed by the worker) and the history
+/// RHS. Uploads are forced when staleness hits `max_delay` (Algorithm 1
+/// line 10: tau_m >= D) and on the very first iteration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    pub upload: bool,
+    /// whether the adaptive condition (as opposed to the delay cap or
+    /// periodic schedule) triggered the upload — telemetry only
+    pub rule_triggered: bool,
+}
+
+pub fn decide(rule: RuleKind, k: u64, lhs: f64, rhs: f64, tau: u32,
+              max_delay: u32) -> Decision {
+    if k == 0 || tau >= max_delay {
+        return Decision { upload: true, rule_triggered: false };
+    }
+    match rule {
+        RuleKind::Always => Decision { upload: true, rule_triggered: true },
+        RuleKind::Never => Decision { upload: false, rule_triggered: false },
+        RuleKind::Periodic { h } => Decision {
+            upload: k % h as u64 == 0,
+            rule_triggered: false,
+        },
+        RuleKind::Cada1 { .. } | RuleKind::Cada2 { .. }
+        | RuleKind::Lag { .. } => {
+            let upload = lhs > rhs;
+            Decision { upload, rule_triggered: upload }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_iteration_always_uploads() {
+        for rule in [RuleKind::Never, RuleKind::Cada2 { c: 1.0 },
+                     RuleKind::Periodic { h: 7 }] {
+            assert!(decide(rule, 0, 0.0, 1e9, 0, 100).upload, "{rule:?}");
+        }
+    }
+
+    #[test]
+    fn max_delay_forces_upload() {
+        let d = decide(RuleKind::Never, 5, 0.0, 1e9, 50, 50);
+        assert!(d.upload);
+        assert!(!d.rule_triggered);
+    }
+
+    #[test]
+    fn adaptive_rules_compare_lhs_rhs() {
+        let r = RuleKind::Cada2 { c: 0.5 };
+        assert!(decide(r, 3, 2.0, 1.0, 1, 100).upload);
+        assert!(!decide(r, 3, 0.5, 1.0, 1, 100).upload);
+        // c = 0 makes RHS 0 -> any positive innovation uploads
+        assert!(decide(RuleKind::Cada1 { c: 0.0 }, 3, 1e-20, 0.0, 1, 100)
+                .upload);
+    }
+
+    #[test]
+    fn periodic_schedule() {
+        let r = RuleKind::Periodic { h: 4 };
+        assert!(decide(r, 4, 0.0, 0.0, 1, 100).upload);
+        assert!(!decide(r, 5, 0.0, 0.0, 1, 100).upload);
+        assert!(decide(r, 8, 0.0, 0.0, 1, 100).upload);
+    }
+
+    #[test]
+    fn metadata() {
+        assert_eq!(RuleKind::Cada1 { c: 0.3 }.grad_evals_per_iter(), 2);
+        assert_eq!(RuleKind::Lag { c: 0.3 }.grad_evals_per_iter(), 1);
+        assert!(RuleKind::Cada1 { c: 0.3 }.needs_snapshot());
+        assert!(RuleKind::Cada2 { c: 0.3 }.needs_stored_iterate());
+        assert!(!RuleKind::Lag { c: 0.3 }.needs_snapshot());
+        assert_eq!(RuleKind::Always.c(), 0.0);
+        assert_eq!(RuleKind::Cada2 { c: 0.7 }.c(), 0.7);
+    }
+}

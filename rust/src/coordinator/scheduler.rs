@@ -1,0 +1,375 @@
+//! The round scheduler: Algorithm 1's outer loop. Broadcast theta^k,
+//! run every worker's rule check, fold the uploaded innovations into the
+//! server aggregate (Eq. 3), apply the server step (Eq. 2), maintain the
+//! drift history and all metrics, and periodically evaluate the model.
+
+use super::history::DeltaHistory;
+use super::rules::RuleKind;
+use super::server::{Optimizer, ServerState};
+use super::worker::WorkerState;
+use crate::comm::{CommStats, CostModel, EventTrace, RoundEvent};
+use crate::data::{Batch, Dataset, Partition};
+use crate::runtime::Compute;
+use crate::telemetry::{Curve, CurvePoint};
+use crate::util::rng::Rng;
+
+/// Static configuration of one server-centric run.
+#[derive(Clone, Debug)]
+pub struct LoopCfg {
+    pub iters: usize,
+    pub eval_every: usize,
+    pub rule: RuleKind,
+    /// D: max staleness AND (by default) the CADA1 snapshot refresh period
+    pub max_delay: u32,
+    /// CADA1 snapshot refresh period; 0 means "use max_delay" (the paper
+    /// uses one constant D for both roles — this knob exists for ablations
+    /// that disable the delay cap without freezing the snapshot)
+    pub snapshot_every: u32,
+    /// d_max: depth of the drift history ring
+    pub d_max: usize,
+    /// per-worker minibatch size (must equal the grad artifact's batch)
+    pub batch: usize,
+    /// route the server step through the Pallas artifact
+    pub use_artifact_update: bool,
+    /// route innovation norms through the Pallas artifact
+    pub use_artifact_innov: bool,
+    pub cost_model: CostModel,
+    /// keep at most this many round events in the trace
+    pub trace_cap: usize,
+    /// bytes of one gradient upload (manifest: 4 * p live floats)
+    pub upload_bytes: usize,
+}
+
+impl LoopCfg {
+    pub fn basic(rule: RuleKind, iters: usize, batch: usize) -> Self {
+        LoopCfg {
+            iters,
+            eval_every: 25,
+            rule,
+            max_delay: 50,
+            snapshot_every: 0,
+            d_max: 10,
+            batch,
+            use_artifact_update: false,
+            use_artifact_innov: false,
+            cost_model: CostModel::free(),
+            trace_cap: 0,
+            upload_bytes: 0,
+        }
+    }
+}
+
+/// One server-centric training run (CADA1/2, LAG, distributed Adam/SGD).
+pub struct ServerLoop<'a> {
+    pub cfg: LoopCfg,
+    pub server: ServerState,
+    pub workers: Vec<WorkerState>,
+    pub history: DeltaHistory,
+    pub comm: CommStats,
+    pub trace: EventTrace,
+    data: &'a Dataset,
+    partition: &'a Partition,
+    eval_batch: Batch,
+    /// CADA1 snapshot theta-tilde (refreshed every max_delay iterations)
+    snapshot: Vec<f32>,
+    rngs: Vec<Rng>,
+}
+
+impl<'a> ServerLoop<'a> {
+    pub fn new(
+        cfg: LoopCfg,
+        init_theta: Vec<f32>,
+        opt: Optimizer,
+        data: &'a Dataset,
+        partition: &'a Partition,
+        eval_batch: Batch,
+        seed: u64,
+    ) -> Self {
+        let m = partition.num_workers();
+        let p = init_theta.len();
+        let root = Rng::new(seed);
+        let workers = (0..m)
+            .map(|w| WorkerState::new(w, p, cfg.rule))
+            .collect();
+        let rngs = (0..m).map(|w| root.fork(w as u64 + 1)).collect();
+        let snapshot = init_theta.clone();
+        ServerLoop {
+            history: DeltaHistory::new(cfg.d_max),
+            trace: EventTrace::new(cfg.trace_cap),
+            server: ServerState::new(init_theta, m, opt),
+            workers,
+            comm: CommStats::default(),
+            data,
+            partition,
+            eval_batch,
+            snapshot,
+            rngs,
+            cfg,
+        }
+    }
+
+    /// One iteration of Algorithm 1. Returns |M^k| (upload count).
+    pub fn step(&mut self, k: u64, compute: &mut dyn Compute)
+                -> anyhow::Result<usize> {
+        let cfg = &self.cfg;
+        // line 4: refresh the CADA1 snapshot every D iterations
+        let snap_period = if cfg.snapshot_every > 0 {
+            cfg.snapshot_every
+        } else {
+            cfg.max_delay
+        };
+        if cfg.rule.needs_snapshot() && k % snap_period as u64 == 0 {
+            self.snapshot.copy_from_slice(&self.server.theta);
+        }
+        // line 3: broadcast theta^k (counted once per worker)
+        self.comm.record_broadcast(
+            self.workers.len(),
+            cfg.upload_bytes,
+            &cfg.cost_model,
+        );
+        let rhs = self.history.rhs(cfg.rule.c());
+        let mut uploaded = Vec::new();
+        let mut lhs_sum = 0.0f64;
+        let mut lhs_count = 0usize;
+        for (w, worker) in self.workers.iter_mut().enumerate() {
+            let batch = self.data.sample_batch(
+                &self.partition.shards[w],
+                cfg.batch,
+                &mut self.rngs[w],
+            );
+            let snapshot = cfg
+                .rule
+                .needs_snapshot()
+                .then_some(self.snapshot.as_slice());
+            let step = worker.step(
+                k,
+                cfg.rule,
+                cfg.max_delay,
+                &self.server.theta,
+                snapshot,
+                rhs,
+                &batch,
+                compute,
+                cfg.use_artifact_innov,
+            )?;
+            self.comm.record_grad_evals(step.grad_evals);
+            if step.lhs.is_finite() {
+                lhs_sum += step.lhs;
+                lhs_count += 1;
+            }
+            if step.decision.upload {
+                self.server.apply_innovation(worker.last_delta());
+                self.comm
+                    .record_upload(cfg.upload_bytes, &cfg.cost_model);
+                uploaded.push(w);
+            }
+        }
+        // lines 16-17: server update
+        let sq_step = self.server.step(k, compute)?;
+        self.history.push(sq_step);
+        if self.cfg.trace_cap > 0 {
+            let staleness = self.workers.iter().map(|w| w.tau).collect();
+            self.trace.push(RoundEvent {
+                iter: k,
+                uploaded: uploaded.clone(),
+                staleness,
+                mean_lhs: if lhs_count > 0 {
+                    lhs_sum / lhs_count as f64
+                } else {
+                    f64::NAN
+                },
+                rhs,
+            });
+        }
+        Ok(uploaded.len())
+    }
+
+    /// Evaluate (loss, accuracy) on the held-out eval batch.
+    pub fn evaluate(&mut self, compute: &mut dyn Compute)
+                    -> anyhow::Result<(f64, f64)> {
+        let (loss, correct) =
+            compute.eval(&self.server.theta, &self.eval_batch)?;
+        let denom = eval_examples(&self.eval_batch) as f64;
+        Ok((loss as f64, correct as f64 / denom))
+    }
+
+    /// Run the full loop, recording a curve point every `eval_every`
+    /// iterations (plus the initial point).
+    pub fn run(&mut self, algo_name: &str, run: u32,
+               compute: &mut dyn Compute) -> anyhow::Result<Curve> {
+        let wall0 = std::time::Instant::now();
+        let mut curve = Curve::new(algo_name, run);
+        let (loss, acc) = self.evaluate(compute)?;
+        curve.points.push(self.point(0, loss, acc, wall0));
+        for k in 0..self.cfg.iters as u64 {
+            self.step(k, compute)?;
+            if (k + 1) % self.cfg.eval_every as u64 == 0 {
+                let (loss, acc) = self.evaluate(compute)?;
+                curve.points.push(self.point(k + 1, loss, acc, wall0));
+            }
+        }
+        Ok(curve)
+    }
+
+    fn point(&self, iter: u64, loss: f64, acc: f64,
+             wall0: std::time::Instant) -> CurvePoint {
+        CurvePoint {
+            iter,
+            loss,
+            accuracy: acc,
+            uploads: self.comm.uploads,
+            grad_evals: self.comm.grad_evals,
+            sim_time_s: self.comm.sim_time_s,
+            wall_s: wall0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Maximum staleness across workers (invariant: <= max_delay).
+    pub fn max_staleness(&self) -> u32 {
+        self.workers.iter().map(|w| w.tau).max().unwrap_or(0)
+    }
+}
+
+/// Number of examples in an eval batch (token batches count predicted
+/// positions, matching the eval artifact's `correct` semantics).
+fn eval_examples(batch: &Batch) -> usize {
+    match &batch.arrays[..] {
+        [(_, shape)] => shape[0] * (shape[1] - 1), // tokens: B * S targets
+        arrays => arrays[0].1[0],                  // labeled: batch dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Schedule;
+    use crate::data::{synthetic, PartitionScheme};
+    use crate::runtime::native::NativeLogReg;
+
+    fn setup(rule: RuleKind, iters: usize)
+             -> (NativeLogReg, Dataset, Partition) {
+        let compute = NativeLogReg::for_spec(22, 1024);
+        let data = synthetic::ijcnn_like(800, 9);
+        let mut rng = Rng::new(10);
+        let partition =
+            Partition::build(PartitionScheme::Uniform, &data, 5, &mut rng);
+        let _ = iters;
+        (compute, data, partition)
+    }
+
+    fn amsgrad(alpha: f32) -> Optimizer {
+        Optimizer::Amsgrad {
+            alpha: Schedule::Constant(alpha),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            use_artifact: false,
+        }
+    }
+
+    #[test]
+    fn adam_always_uploads_m_per_iter() {
+        let (mut compute, data, partition) = setup(RuleKind::Always, 20);
+        let eval = data.gather(&(0..64).collect::<Vec<_>>());
+        let mut cfg = LoopCfg::basic(RuleKind::Always, 20, 16);
+        cfg.eval_every = 5;
+        let mut lp = ServerLoop::new(
+            cfg,
+            vec![0.0; 1024],
+            amsgrad(0.01),
+            &data,
+            &partition,
+            eval,
+            7,
+        );
+        let curve = lp.run("adam", 0, &mut compute).unwrap();
+        assert_eq!(lp.comm.uploads, 20 * 5);
+        assert_eq!(lp.comm.grad_evals, 20 * 5);
+        assert!(curve.final_loss() < curve.points[0].loss,
+                "loss should decrease: {curve:?}");
+    }
+
+    #[test]
+    fn cada2_saves_uploads_and_still_descends() {
+        let (mut compute, data, partition) = setup(RuleKind::Always, 0);
+        let eval = data.gather(&(0..64).collect::<Vec<_>>());
+        let iters = 60;
+        let run = |rule: RuleKind, compute: &mut NativeLogReg| {
+            let mut cfg = LoopCfg::basic(rule, iters, 16);
+            cfg.max_delay = 20;
+            let mut lp = ServerLoop::new(
+                cfg,
+                vec![0.0; 1024],
+                amsgrad(0.02),
+                &data,
+                &partition,
+                eval.clone(),
+                7,
+            );
+            let curve = lp.run(rule.name(), 0, compute).unwrap();
+            (lp.comm.uploads, curve.final_loss())
+        };
+        let (adam_up, adam_loss) = run(RuleKind::Always, &mut compute);
+        let (cada_up, cada_loss) =
+            run(RuleKind::Cada2 { c: 1.2 }, &mut compute);
+        assert!(cada_up < adam_up, "cada {cada_up} vs adam {adam_up}");
+        assert!(cada_loss < adam_loss * 1.5 + 0.1,
+                "cada loss {cada_loss} vs adam {adam_loss}");
+    }
+
+    #[test]
+    fn staleness_never_exceeds_max_delay() {
+        let (mut compute, data, partition) = setup(RuleKind::Never, 0);
+        let eval = data.gather(&(0..32).collect::<Vec<_>>());
+        let mut cfg = LoopCfg::basic(RuleKind::Never, 30, 8);
+        cfg.max_delay = 4;
+        let mut lp = ServerLoop::new(cfg, vec![0.0; 1024], amsgrad(0.01),
+                                     &data, &partition, eval, 3);
+        for k in 0..30 {
+            lp.step(k, &mut compute).unwrap();
+            assert!(lp.max_staleness() <= 4);
+        }
+    }
+
+    #[test]
+    fn cada_c0_equals_distributed_amsgrad() {
+        // c = 0 zeroes the RHS, so any nonzero innovation uploads: CADA
+        // degenerates to distributed AMSGrad and must produce (nearly)
+        // identical iterates given identical worker RNG streams.
+        let (mut compute, data, partition) = setup(RuleKind::Always, 0);
+        let eval = data.gather(&(0..32).collect::<Vec<_>>());
+        let iters = 25;
+        let run_theta = |rule: RuleKind, compute: &mut NativeLogReg| {
+            let mut lp = ServerLoop::new(
+                LoopCfg::basic(rule, iters, 16),
+                vec![0.0; 1024],
+                amsgrad(0.01),
+                &data,
+                &partition,
+                eval.clone(),
+                42,
+            );
+            lp.run(rule.name(), 0, compute).unwrap();
+            lp.server.theta
+        };
+        let adam = run_theta(RuleKind::Always, &mut compute);
+        let cada = run_theta(RuleKind::Cada2 { c: 0.0 }, &mut compute);
+        let diff = crate::tensor::sqnorm_diff(&adam, &cada);
+        assert!(diff < 1e-8, "divergence {diff}");
+    }
+
+    #[test]
+    fn trace_records_upload_sets() {
+        let (mut compute, data, partition) = setup(RuleKind::Always, 0);
+        let eval = data.gather(&(0..32).collect::<Vec<_>>());
+        let mut cfg = LoopCfg::basic(RuleKind::Always, 5, 8);
+        cfg.trace_cap = 10;
+        let mut lp = ServerLoop::new(cfg, vec![0.0; 1024], amsgrad(0.01),
+                                     &data, &partition, eval, 3);
+        for k in 0..5 {
+            lp.step(k, &mut compute).unwrap();
+        }
+        assert_eq!(lp.trace.events.len(), 5);
+        assert!(lp.trace.events.iter().all(|e| e.uploaded.len() == 5));
+    }
+}

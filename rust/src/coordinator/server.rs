@@ -1,0 +1,174 @@
+//! Parameter-server state: the aggregate-gradient recursion (Eq. 3) and
+//! the model update (Eq. 2a–2c for CADA/Adam, Eq. 4's SGD step for LAG).
+
+use crate::config::Schedule;
+use crate::runtime::Compute;
+use crate::tensor;
+
+/// Which update the server applies to theta each iteration.
+#[derive(Clone, Debug)]
+pub enum Optimizer {
+    /// AMSGrad-style adaptive step (Eq. 2a–2c). `use_artifact` routes the
+    /// step through the AOT Pallas kernel (`Compute::update`); otherwise
+    /// the native fused rust twin runs. betas/eps must match the values
+    /// baked into the artifact (taken from the manifest spec).
+    Amsgrad {
+        alpha: Schedule,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        use_artifact: bool,
+    },
+    /// Plain distributed SGD on the (possibly stale) aggregate — the LAG
+    /// baseline's update (Eq. 4).
+    Sgd { eta: Schedule },
+}
+
+impl Optimizer {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Optimizer::Amsgrad { .. } => "amsgrad",
+            Optimizer::Sgd { .. } => "sgd",
+        }
+    }
+}
+
+/// Server-side state for one run.
+pub struct ServerState {
+    /// current iterate theta^k (padded flat vector)
+    pub theta: Vec<f32>,
+    /// momentum direction h^k (Eq. 2a)
+    pub h: Vec<f32>,
+    /// AMSGrad second-moment clamp vhat^k (Eq. 2b)
+    pub vhat: Vec<f32>,
+    /// the running aggregate nabla^k of (possibly stale) worker gradients
+    pub grad_agg: Vec<f32>,
+    pub opt: Optimizer,
+    /// number of workers M (the 1/M in Eq. 3)
+    pub m: usize,
+    /// scratch: previous theta for the step-norm computation
+    prev_theta: Vec<f32>,
+}
+
+impl ServerState {
+    pub fn new(init_theta: Vec<f32>, m: usize, opt: Optimizer) -> Self {
+        let p = init_theta.len();
+        ServerState {
+            prev_theta: init_theta.clone(),
+            theta: init_theta,
+            h: vec![0.0; p],
+            vhat: vec![0.0; p],
+            grad_agg: vec![0.0; p],
+            opt,
+            m,
+        }
+    }
+
+    /// Fold one worker's gradient innovation into the aggregate:
+    /// nabla^k += delta_m / M   (Eq. 3).
+    pub fn apply_innovation(&mut self, delta: &[f32]) {
+        tensor::axpy(&mut self.grad_agg, 1.0 / self.m as f32, delta);
+    }
+
+    /// Apply the optimizer step for iteration `k`; returns
+    /// ||theta^{k+1} - theta^k||^2 for the drift history.
+    pub fn step(&mut self, k: u64, compute: &mut dyn Compute)
+                -> anyhow::Result<f64> {
+        self.prev_theta.copy_from_slice(&self.theta);
+        match self.opt.clone() {
+            Optimizer::Amsgrad { alpha, beta1, beta2, eps, use_artifact } => {
+                let a = alpha.at(k);
+                if use_artifact {
+                    compute.update(&mut self.theta, &mut self.h,
+                                   &mut self.vhat, &self.grad_agg, a)?;
+                } else {
+                    tensor::amsgrad_update(&mut self.theta, &mut self.h,
+                                           &mut self.vhat, &self.grad_agg,
+                                           a, beta1, beta2, eps);
+                }
+            }
+            Optimizer::Sgd { eta } => {
+                tensor::sgd_update(&mut self.theta, &self.grad_agg,
+                                   eta.at(k));
+            }
+        }
+        Ok(tensor::sqnorm_diff(&self.theta, &self.prev_theta) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeLogReg;
+
+    fn dummy_compute() -> NativeLogReg {
+        NativeLogReg::for_spec(4, 16)
+    }
+
+    #[test]
+    fn innovation_recursion_matches_direct_average() {
+        // After each worker uploads delta = g_new - g_old, the aggregate
+        // must equal mean(current stale gradients) — Eq. 3's invariant.
+        let m = 3;
+        let p = 8;
+        let mut server = ServerState::new(
+            vec![0.0; p], m,
+            Optimizer::Sgd { eta: Schedule::Constant(0.0) });
+        let mut rng = crate::util::rng::Rng::new(4);
+        let mut held: Vec<Vec<f32>> = vec![vec![0.0; p]; m];
+        for _round in 0..10 {
+            for w in 0..m {
+                if rng.f64() < 0.6 {
+                    let g_new: Vec<f32> =
+                        (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let delta: Vec<f32> = g_new
+                        .iter()
+                        .zip(&held[w])
+                        .map(|(a, b)| a - b)
+                        .collect();
+                    server.apply_innovation(&delta);
+                    held[w] = g_new;
+                }
+            }
+            for i in 0..p {
+                let direct: f32 =
+                    held.iter().map(|g| g[i]).sum::<f32>() / m as f32;
+                assert!((server.grad_agg[i] - direct).abs() < 1e-4,
+                        "coord {i}: {} vs {direct}", server.grad_agg[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_step_moves_against_aggregate() {
+        let mut s = ServerState::new(
+            vec![1.0; 4], 1,
+            Optimizer::Sgd { eta: Schedule::Constant(0.5) });
+        s.grad_agg = vec![2.0; 4];
+        let sq = s.step(0, &mut dummy_compute()).unwrap();
+        assert!(s.theta.iter().all(|&t| (t - 0.0).abs() < 1e-6));
+        assert!((sq - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn amsgrad_native_step_matches_tensor_kernel() {
+        let p = 16;
+        let mut s = ServerState::new(
+            vec![0.5; p], 2,
+            Optimizer::Amsgrad {
+                alpha: Schedule::Constant(0.1),
+                beta1: 0.9, beta2: 0.999, eps: 1e-8,
+                use_artifact: false,
+            });
+        s.grad_agg = (0..p).map(|i| i as f32 * 0.1).collect();
+        let mut theta = s.theta.clone();
+        let mut h = s.h.clone();
+        let mut vhat = s.vhat.clone();
+        s.step(3, &mut dummy_compute()).unwrap();
+        tensor::amsgrad_update(&mut theta, &mut h, &mut vhat, &s.grad_agg,
+                               0.1, 0.9, 0.999, 1e-8);
+        assert_eq!(s.theta, theta);
+        assert_eq!(s.h, h);
+        assert_eq!(s.vhat, vhat);
+    }
+}

@@ -1,0 +1,287 @@
+//! Worker-side state and the per-iteration check of Algorithm 1
+//! (lines 5–14): compute the rule-specific gradients, evaluate the
+//! LHS innovation norm, decide, and (on upload) produce the gradient
+//! innovation delta_m^k = g(theta^k; xi^k) - g(theta_hat; xi_hat).
+
+use super::rules::{decide, Decision, RuleKind};
+use crate::data::Batch;
+use crate::runtime::Compute;
+use crate::tensor;
+
+/// Outcome of one worker's iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerStep {
+    pub decision: Decision,
+    /// rule LHS (innovation squared norm); NaN for non-adaptive rules
+    pub lhs: f64,
+    /// minibatch loss at theta^k (fresh gradient's loss)
+    pub loss: f32,
+    pub grad_evals: u64,
+}
+
+/// Per-worker persistent state.
+pub struct WorkerState {
+    pub id: usize,
+    /// staleness tau_m (iterations since last upload)
+    pub tau: u32,
+    /// g(theta_hat_m; xi_hat_m): the gradient currently represented in the
+    /// server aggregate for this worker
+    pub g_stale: Vec<f32>,
+    /// CADA1: stored innovation dtilde_m^{k - tau} from the last upload
+    pub dtilde_stored: Option<Vec<f32>>,
+    /// CADA2: theta^{k - tau_m}, the iterate at the last upload
+    pub theta_stored: Option<Vec<f32>>,
+    // scratch buffers (allocation-free hot path)
+    g_new: Vec<f32>,
+    g_aux: Vec<f32>,
+    dtilde_new: Vec<f32>,
+    delta: Vec<f32>,
+    /// telemetry: total uploads by this worker
+    pub uploads: u64,
+}
+
+impl WorkerState {
+    pub fn new(id: usize, p: usize, rule: RuleKind) -> Self {
+        WorkerState {
+            id,
+            tau: 0,
+            g_stale: vec![0.0; p],
+            dtilde_stored: rule.needs_snapshot().then(|| vec![0.0; p]),
+            theta_stored: rule.needs_stored_iterate().then(|| vec![0.0; p]),
+            g_new: vec![0.0; p],
+            g_aux: vec![0.0; p],
+            dtilde_new: if rule.needs_snapshot() {
+                vec![0.0; p]
+            } else {
+                Vec::new()
+            },
+            delta: vec![0.0; p],
+            uploads: 0,
+        }
+    }
+
+    /// Run lines 5–14 of Algorithm 1 for this worker at iteration `k`.
+    ///
+    /// * `theta` — the broadcast iterate theta^k.
+    /// * `snapshot` — theta-tilde (CADA1 only; refreshed by the scheduler
+    ///   every D iterations).
+    /// * `rhs` — the shared drift threshold from the history ring.
+    /// * `use_artifact_innov` — route innovation norms through the Pallas
+    ///   artifact instead of the native fused loop.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        k: u64,
+        rule: RuleKind,
+        max_delay: u32,
+        theta: &[f32],
+        snapshot: Option<&[f32]>,
+        rhs: f64,
+        batch: &Batch,
+        compute: &mut dyn Compute,
+        use_artifact_innov: bool,
+    ) -> anyhow::Result<WorkerStep> {
+        // fresh stochastic gradient at theta^k on sample xi^k
+        let loss = compute.grad(theta, batch, &mut self.g_new)?;
+        let mut grad_evals = 1u64;
+
+        let innov = |c: &mut dyn Compute, a: &[f32], b: &[f32]|
+                     -> anyhow::Result<f64> {
+            Ok(if use_artifact_innov {
+                c.innov(a, b)? as f64
+            } else {
+                tensor::sqnorm_diff(a, b) as f64
+            })
+        };
+
+        // rule-specific LHS
+        let lhs = match rule {
+            RuleKind::Cada1 { .. } => {
+                let snap = snapshot.expect("CADA1 requires a snapshot");
+                // second gradient: same sample xi^k at the snapshot
+                compute.grad(snap, batch, &mut self.g_aux)?;
+                grad_evals += 1;
+                tensor::sub_into(&mut self.dtilde_new, &self.g_new,
+                                 &self.g_aux);
+                let stored = self
+                    .dtilde_stored
+                    .as_ref()
+                    .expect("CADA1 state allocated");
+                innov(compute, &self.dtilde_new, stored)?
+            }
+            RuleKind::Cada2 { .. } => {
+                let stored = self
+                    .theta_stored
+                    .as_ref()
+                    .expect("CADA2 state allocated");
+                // second gradient: same sample xi^k at the old iterate
+                compute.grad(stored, batch, &mut self.g_aux)?;
+                grad_evals += 1;
+                innov(compute, &self.g_new, &self.g_aux)?
+            }
+            RuleKind::Lag { .. } => {
+                // fresh vs STORED gradient: different iterates AND
+                // different samples — the variance trap of section 2.1
+                innov(compute, &self.g_new, &self.g_stale)?
+            }
+            _ => f64::NAN,
+        };
+
+        let decision = decide(rule, k, lhs, rhs, self.tau, max_delay);
+        if decision.upload {
+            // delta_m^k = g_new - g_stale; server folds delta/M (Eq. 3)
+            tensor::sub_into(&mut self.delta, &self.g_new, &self.g_stale);
+            self.g_stale.copy_from_slice(&self.g_new);
+            if let Some(d) = self.dtilde_stored.as_mut() {
+                d.copy_from_slice(&self.dtilde_new);
+            }
+            if let Some(t) = self.theta_stored.as_mut() {
+                t.copy_from_slice(theta);
+            }
+            self.tau = 1;
+            self.uploads += 1;
+        } else {
+            self.tau += 1;
+        }
+        Ok(WorkerStep {
+            decision,
+            lhs,
+            loss,
+            grad_evals,
+        })
+    }
+
+    /// The innovation payload produced by the last uploading `step`.
+    pub fn last_delta(&self) -> &[f32] {
+        &self.delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::runtime::native::NativeLogReg;
+    use crate::util::rng::Rng;
+
+    fn setup(rule: RuleKind) -> (NativeLogReg, Dataset, WorkerState) {
+        let d = 4;
+        let p = 16;
+        let compute = NativeLogReg::for_spec(d, p);
+        let mut rng = Rng::new(1);
+        let n = 64;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let mut s = 0.0;
+            for j in 0..d {
+                let v = rng.normal_f32(0.0, 1.0);
+                x.push(v);
+                s += v * (j as f32 + 1.0);
+            }
+            y.push((s > 0.0) as i32);
+        }
+        let data = Dataset::Labeled { x, sample_shape: vec![d], y };
+        let worker = WorkerState::new(0, p, rule);
+        (compute, data, worker)
+    }
+
+    #[test]
+    fn first_iteration_uploads_full_gradient() {
+        let rule = RuleKind::Cada2 { c: 1.0 };
+        let (mut compute, data, mut w) = setup(rule);
+        let theta = vec![0.1f32; 16];
+        let batch = data.gather(&[0, 1, 2, 3]);
+        let step = w
+            .step(0, rule, 50, &theta, None, 0.0, &batch, &mut compute, false)
+            .unwrap();
+        assert!(step.decision.upload);
+        assert_eq!(w.tau, 1);
+        assert_eq!(step.grad_evals, 2);
+        // delta == g_new since g_stale was zero
+        let mut g = vec![0.0f32; 16];
+        compute.grad(&theta, &batch, &mut g).unwrap();
+        for (a, b) in w.last_delta().iter().zip(&g) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cada2_skips_when_iterate_unchanged() {
+        // If theta never moves, g(theta^k; xi) == g(theta_stored; xi)
+        // exactly, so LHS = 0 <= RHS and the worker must skip.
+        let rule = RuleKind::Cada2 { c: 1.0 };
+        let (mut compute, data, mut w) = setup(rule);
+        let theta = vec![0.1f32; 16];
+        let mut rng = Rng::new(2);
+        let shard: Vec<usize> = (0..64).collect();
+        // k=0 uploads and stores theta
+        let b0 = data.sample_batch(&shard, 8, &mut rng);
+        w.step(0, rule, 50, &theta, None, 0.0, &b0, &mut compute, false)
+            .unwrap();
+        for k in 1..5 {
+            let b = data.sample_batch(&shard, 8, &mut rng);
+            let s = w
+                .step(k, rule, 50, &theta, None, 0.0, &b, &mut compute, false)
+                .unwrap();
+            assert!(!s.decision.upload, "k={k} lhs={}", s.lhs);
+            assert_eq!(s.lhs, 0.0);
+        }
+        assert_eq!(w.tau, 5);
+    }
+
+    #[test]
+    fn lag_lhs_nonzero_even_when_iterate_unchanged() {
+        // Same setting as above, but LAG compares different samples:
+        // its LHS stays at the variance level (section 2.1).
+        let rule = RuleKind::Lag { c: 1.0 };
+        let (mut compute, data, mut w) = setup(rule);
+        let theta = vec![0.1f32; 16];
+        let mut rng = Rng::new(3);
+        let shard: Vec<usize> = (0..64).collect();
+        let b0 = data.sample_batch(&shard, 4, &mut rng);
+        w.step(0, rule, 50, &theta, None, 0.0, &b0, &mut compute, false)
+            .unwrap();
+        let b1 = data.sample_batch(&shard, 4, &mut rng);
+        let s = w
+            .step(1, rule, 50, &theta, None, 0.0, &b1, &mut compute, false)
+            .unwrap();
+        assert!(s.lhs > 1e-6, "lag lhs unexpectedly {}", s.lhs);
+    }
+
+    #[test]
+    fn max_delay_forces_refresh() {
+        let rule = RuleKind::Never;
+        let (mut compute, data, mut w) = setup(rule);
+        let theta = vec![0.1f32; 16];
+        let mut rng = Rng::new(4);
+        let shard: Vec<usize> = (0..64).collect();
+        let mut uploads = 0;
+        for k in 0..7 {
+            let b = data.sample_batch(&shard, 4, &mut rng);
+            let s = w
+                .step(k, rule, 3, &theta, None, 0.0, &b, &mut compute, false)
+                .unwrap();
+            if s.decision.upload {
+                uploads += 1;
+            }
+            assert!(w.tau <= 3, "staleness invariant violated");
+        }
+        // k=0 (forced) then whenever tau hits 3: k=3, k=6
+        assert_eq!(uploads, 3);
+    }
+
+    #[test]
+    fn always_rule_single_grad_eval() {
+        let rule = RuleKind::Always;
+        let (mut compute, data, mut w) = setup(rule);
+        let theta = vec![0.1f32; 16];
+        let batch = data.gather(&[0, 1]);
+        let s = w
+            .step(5, rule, 50, &theta, None, 0.0, &batch, &mut compute, false)
+            .unwrap();
+        assert!(s.decision.upload);
+        assert_eq!(s.grad_evals, 1);
+        assert!(s.lhs.is_nan());
+    }
+}

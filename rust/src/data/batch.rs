@@ -1,0 +1,181 @@
+//! In-memory dataset + minibatch assembly matching the AOT input specs.
+
+use crate::util::rng::Rng;
+
+/// One model input array (host side).
+#[derive(Clone, Debug)]
+pub enum Array {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Array {
+    pub fn len(&self) -> usize {
+        match self {
+            Array::F32(v) => v.len(),
+            Array::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A minibatch: arrays + their full shapes (leading dim = batch size).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub arrays: Vec<(Array, Vec<usize>)>,
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        self.arrays
+            .first()
+            .map(|(_, shape)| shape[0])
+            .unwrap_or(0)
+    }
+}
+
+/// A full in-memory dataset.
+#[derive(Clone, Debug)]
+pub enum Dataset {
+    /// (x, y) classification data; `x` row-major `[n, sample_elems]`.
+    Labeled {
+        x: Vec<f32>,
+        /// per-sample shape, e.g. `[54]` or `[28, 28, 1]`
+        sample_shape: Vec<usize>,
+        y: Vec<i32>,
+    },
+    /// Token sequences for the LM; each sample is `seq_plus_one` tokens.
+    Tokens { t: Vec<i32>, seq_plus_one: usize },
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        match self {
+            Dataset::Labeled { y, .. } => y.len(),
+            Dataset::Tokens { t, seq_plus_one } => t.len() / seq_plus_one,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn sample_elems(&self) -> usize {
+        match self {
+            Dataset::Labeled { sample_shape, .. } => {
+                sample_shape.iter().product()
+            }
+            Dataset::Tokens { seq_plus_one, .. } => *seq_plus_one,
+        }
+    }
+
+    /// Assemble the batch for `indices` (shape `[indices.len(), ...]`).
+    pub fn gather(&self, indices: &[usize]) -> Batch {
+        match self {
+            Dataset::Labeled { x, sample_shape, y } => {
+                let elems = self.sample_elems();
+                let mut xb = Vec::with_capacity(indices.len() * elems);
+                let mut yb = Vec::with_capacity(indices.len());
+                for &i in indices {
+                    xb.extend_from_slice(&x[i * elems..(i + 1) * elems]);
+                    yb.push(y[i]);
+                }
+                let mut xshape = vec![indices.len()];
+                xshape.extend_from_slice(sample_shape);
+                Batch {
+                    arrays: vec![
+                        (Array::F32(xb), xshape),
+                        (Array::I32(yb), vec![indices.len()]),
+                    ],
+                }
+            }
+            Dataset::Tokens { t, seq_plus_one } => {
+                let mut tb = Vec::with_capacity(indices.len() * seq_plus_one);
+                for &i in indices {
+                    tb.extend_from_slice(
+                        &t[i * seq_plus_one..(i + 1) * seq_plus_one],
+                    );
+                }
+                Batch {
+                    arrays: vec![(
+                        Array::I32(tb),
+                        vec![indices.len(), *seq_plus_one],
+                    )],
+                }
+            }
+        }
+    }
+
+    /// Uniform with-replacement minibatch from a shard (index subset).
+    pub fn sample_batch(&self, shard: &[usize], b: usize, rng: &mut Rng) -> Batch {
+        let picks: Vec<usize> =
+            (0..b).map(|_| shard[rng.below(shard.len())]).collect();
+        self.gather(&picks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::Labeled {
+            x: (0..12).map(|v| v as f32).collect(), // 6 samples x 2 features
+            sample_shape: vec![2],
+            y: vec![0, 1, 0, 1, 0, 1],
+        }
+    }
+
+    #[test]
+    fn gather_layout() {
+        let b = toy().gather(&[2, 0]);
+        match &b.arrays[0] {
+            (Array::F32(x), shape) => {
+                assert_eq!(shape, &vec![2, 2]);
+                assert_eq!(x, &vec![4.0, 5.0, 0.0, 1.0]);
+            }
+            _ => panic!("wrong array type"),
+        }
+        match &b.arrays[1] {
+            (Array::I32(y), shape) => {
+                assert_eq!(shape, &vec![2]);
+                assert_eq!(y, &vec![0, 0]);
+            }
+            _ => panic!("wrong array type"),
+        }
+    }
+
+    #[test]
+    fn tokens_gather() {
+        let d = Dataset::Tokens {
+            t: (0..20).collect(),
+            seq_plus_one: 5,
+        };
+        assert_eq!(d.len(), 4);
+        let b = d.gather(&[3]);
+        match &b.arrays[0] {
+            (Array::I32(t), shape) => {
+                assert_eq!(shape, &vec![1, 5]);
+                assert_eq!(t, &vec![15, 16, 17, 18, 19]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn sample_batch_from_shard_only() {
+        let d = toy();
+        let shard = vec![1, 3, 5];
+        let mut rng = Rng::new(0);
+        for _ in 0..20 {
+            let b = d.sample_batch(&shard, 4, &mut rng);
+            assert_eq!(b.batch_size(), 4);
+            if let (Array::I32(y), _) = &b.arrays[1] {
+                assert!(y.iter().all(|&v| v == 1)); // shard holds label-1 rows
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic datasets + heterogeneous partitioning + minibatch sampling.
+//!
+//! The paper's datasets (covtype, ijcnn1, MNIST, CIFAR10) are not
+//! available in this offline environment; DESIGN.md section 3 documents the
+//! substitution: generators that preserve the property each dataset
+//! contributes to the experiment (heterogeneity, class imbalance,
+//! multiclass image structure, LM sequence structure).
+
+pub mod batch;
+pub mod partition;
+pub mod synthetic;
+
+pub use batch::{Array, Batch, Dataset};
+pub use partition::{PartitionScheme, Partition};
+pub use synthetic::DatasetKind;

@@ -1,0 +1,216 @@
+//! Dataset partitioning across workers: iid, size-skewed (the paper's
+//! heterogeneous covtype split) and Dirichlet label-skew (standard
+//! federated-learning heterogeneity).
+
+use super::batch::Dataset;
+use crate::util::rng::Rng;
+
+/// How to split `n` samples over `m` workers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionScheme {
+    /// Shuffle, equal-size chunks (the paper's ijcnn1/MNIST setting).
+    Uniform,
+    /// Random per-worker sizes from a Dirichlet(alpha) over workers (the
+    /// paper's covtype setting: "randomly into M=20 workers with different
+    /// number of samples per worker"). Every worker keeps >= min_frac of
+    /// the fair share so no shard is empty.
+    SizeSkew { alpha: f64, min_frac: f64 },
+    /// Dirichlet(alpha) label skew: per class, split its samples over
+    /// workers with Dirichlet weights (non-iid in distribution, not just
+    /// size).
+    LabelSkew { alpha: f64 },
+}
+
+/// Per-worker index lists into the dataset.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn num_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn build(
+        scheme: PartitionScheme,
+        data: &Dataset,
+        m: usize,
+        rng: &mut Rng,
+    ) -> Partition {
+        assert!(m >= 1);
+        let n = data.len();
+        assert!(n >= m, "need at least one sample per worker");
+        match scheme {
+            PartitionScheme::Uniform => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut idx);
+                let base = n / m;
+                let mut shards = Vec::with_capacity(m);
+                let mut cursor = 0;
+                for w in 0..m {
+                    let extra = usize::from(w < n % m);
+                    let take = base + extra;
+                    shards.push(idx[cursor..cursor + take].to_vec());
+                    cursor += take;
+                }
+                Partition { shards }
+            }
+            PartitionScheme::SizeSkew { alpha, min_frac } => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut idx);
+                let weights = rng.dirichlet(alpha, m);
+                let floor = ((n as f64 / m as f64) * min_frac).max(1.0) as usize;
+                // initial allocation by weight, then repair to the floor
+                let mut sizes: Vec<usize> =
+                    weights.iter().map(|w| (w * n as f64) as usize).collect();
+                let mut assigned: usize = sizes.iter().sum();
+                // distribute rounding remainder
+                let mut w = 0;
+                while assigned < n {
+                    sizes[w % m] += 1;
+                    assigned += 1;
+                    w += 1;
+                }
+                // enforce the floor by taking from the largest shard
+                for i in 0..m {
+                    while sizes[i] < floor {
+                        let big = (0..m)
+                            .max_by_key(|&j| sizes[j])
+                            .expect("nonempty");
+                        assert!(sizes[big] > floor, "cannot satisfy floor");
+                        sizes[big] -= 1;
+                        sizes[i] += 1;
+                    }
+                }
+                let mut shards = Vec::with_capacity(m);
+                let mut cursor = 0;
+                for size in sizes {
+                    shards.push(idx[cursor..cursor + size].to_vec());
+                    cursor += size;
+                }
+                Partition { shards }
+            }
+            PartitionScheme::LabelSkew { alpha } => {
+                let y = match data {
+                    Dataset::Labeled { y, .. } => y,
+                    _ => panic!("label skew needs labeled data"),
+                };
+                let classes =
+                    (y.iter().copied().max().unwrap_or(0) + 1) as usize;
+                let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); classes];
+                for (i, &c) in y.iter().enumerate() {
+                    by_class[c as usize].push(i);
+                }
+                let mut shards: Vec<Vec<usize>> = vec![Vec::new(); m];
+                for mut members in by_class {
+                    rng.shuffle(&mut members);
+                    let weights = rng.dirichlet(alpha, m);
+                    let mut cursor = 0;
+                    for (w, weight) in weights.iter().enumerate() {
+                        let take = if w + 1 == m {
+                            members.len() - cursor
+                        } else {
+                            ((weight * members.len() as f64) as usize)
+                                .min(members.len() - cursor)
+                        };
+                        shards[w].extend_from_slice(
+                            &members[cursor..cursor + take],
+                        );
+                        cursor += take;
+                    }
+                }
+                // repair empty shards (possible under extreme skew)
+                for w in 0..m {
+                    if shards[w].is_empty() {
+                        let big = (0..m)
+                            .max_by_key(|&j| shards[j].len())
+                            .expect("nonempty");
+                        let moved = shards[big].pop().expect("big shard");
+                        shards[w].push(moved);
+                    }
+                }
+                Partition { shards }
+            }
+        }
+    }
+
+    /// Size imbalance ratio max/min (1.0 == perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.shards.iter().map(Vec::len).max().unwrap_or(0);
+        let min = self.shards.iter().map(Vec::len).min().unwrap_or(0);
+        max as f64 / min.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn check_is_partition(p: &Partition, n: usize) {
+        let mut all: Vec<usize> =
+            p.shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_covers_and_balances() {
+        let d = synthetic::covtype_like(103, 0);
+        let p = Partition::build(PartitionScheme::Uniform, &d, 10,
+                                 &mut Rng::new(1));
+        check_is_partition(&p, 103);
+        assert!(p.imbalance() <= 11.0 / 10.0 + 1e-9);
+    }
+
+    #[test]
+    fn size_skew_covers_and_skews() {
+        let d = synthetic::covtype_like(2000, 0);
+        let p = Partition::build(
+            PartitionScheme::SizeSkew { alpha: 0.5, min_frac: 0.2 },
+            &d, 20, &mut Rng::new(2));
+        check_is_partition(&p, 2000);
+        assert!(p.imbalance() > 1.5, "imbalance {}", p.imbalance());
+        let floor = (2000.0 / 20.0 * 0.2) as usize;
+        assert!(p.shards.iter().all(|s| s.len() >= floor));
+    }
+
+    #[test]
+    fn label_skew_covers_and_is_noniid() {
+        let d = synthetic::mnist_like_flat(1000, 0);
+        let p = Partition::build(PartitionScheme::LabelSkew { alpha: 0.3 },
+                                 &d, 10, &mut Rng::new(3));
+        check_is_partition(&p, 1000);
+        assert!(p.shards.iter().all(|s| !s.is_empty()));
+        // at least one worker should be visibly class-skewed
+        let y = match &d {
+            crate::data::Dataset::Labeled { y, .. } => y,
+            _ => panic!(),
+        };
+        let mut max_frac: f64 = 0.0;
+        for shard in &p.shards {
+            let mut counts = [0usize; 10];
+            for &i in shard {
+                counts[y[i] as usize] += 1;
+            }
+            let top = *counts.iter().max().unwrap();
+            max_frac = max_frac.max(top as f64 / shard.len() as f64);
+        }
+        assert!(max_frac > 0.25, "max class fraction {max_frac}");
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let d = synthetic::covtype_like(500, 0);
+        let a = Partition::build(PartitionScheme::Uniform, &d, 7,
+                                 &mut Rng::new(9));
+        let b = Partition::build(PartitionScheme::Uniform, &d, 7,
+                                 &mut Rng::new(9));
+        assert_eq!(a.shards, b.shards);
+    }
+}

@@ -1,0 +1,90 @@
+//! Shared driver for the per-figure benches (`cargo bench --bench figN_*`).
+//!
+//! Each bench target regenerates one paper figure: it runs the preset's
+//! full algorithm set on the PJRT engine, prints (a) the paper-style
+//! summary table (who wins, by what factor) and (b) the loss-vs-
+//! {iterations, gradient evaluations, uploads} series the figure plots,
+//! and writes the raw curves to `results/<name>.jsonl`.
+//!
+//! Scaling knobs (benches must terminate on a laptop):
+//!   CADA_BENCH_FAST=1        heavily scaled-down smoke run
+//!   --iters N --runs R --n N CLI overrides (after `--`)
+
+use crate::cli::Args;
+use crate::config::{self, ExpConfig};
+use crate::exp::Experiment;
+use crate::runtime::{Engine, Manifest};
+use crate::telemetry::{render_table, write_jsonl, Curve};
+
+/// Entry point used by every `benches/fig*.rs`.
+pub fn figure_bench(preset: &str) -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let mut cfg = config::preset(preset)?;
+    if std::env::var_os("CADA_BENCH_FAST").is_some() {
+        cfg = fast_scale(cfg);
+    }
+    cfg.iters = args.usize_or("iters", cfg.iters)?;
+    cfg.runs = args.u64_or("runs", cfg.runs as u64)? as u32;
+    cfg.n = args.usize_or("n", cfg.n)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    // `cargo bench` passes --bench to the binary; accept and ignore it.
+    let _ = args.bool("bench");
+    args.reject_unknown()?;
+
+    println!(
+        "=== {} — spec {}, M={}, {} iters, {} run(s) ===",
+        cfg.name, cfg.spec, cfg.workers, cfg.iters, cfg.runs
+    );
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let mut engine = Engine::new(&manifest, &cfg.spec)?;
+    let init = engine.init_theta()?;
+    let exp = Experiment::new(cfg.clone(), engine.spec.clone())?;
+    let t0 = std::time::Instant::now();
+    let results = exp.run_all(&mut engine, &init)?;
+    let rows = exp.summarize(&results);
+    print!("{}", render_table(&cfg.name, cfg.target_loss, &rows));
+
+    // the figure's series: loss against each of the paper's x-axes
+    for r in &results {
+        print_series(&r.mean_curve);
+    }
+    let curves: Vec<Curve> = results
+        .iter()
+        .flat_map(|r| r.curves.iter().cloned())
+        .collect();
+    let out = format!("results/{}.jsonl", cfg.name);
+    write_jsonl(&out, &curves)?;
+    println!(
+        "\n[{}] total wall {:.1}s; curves -> {out}",
+        cfg.name,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn fast_scale(mut cfg: ExpConfig) -> ExpConfig {
+    cfg.iters = (cfg.iters / 10).max(40);
+    cfg.n = (cfg.n / 4).max(1_000);
+    cfg.runs = 1;
+    cfg.eval_every = (cfg.eval_every / 2).max(5);
+    cfg
+}
+
+/// Print a downsampled loss series over the figure's three x-axes.
+fn print_series(curve: &Curve) {
+    println!("\n-- {} (mean over runs) --", curve.algo);
+    println!(
+        "{:>8} {:>12} {:>10} {:>10} {:>9}",
+        "iter", "grad_evals", "uploads", "loss", "acc"
+    );
+    let stride = (curve.points.len() / 12).max(1);
+    for (i, p) in curve.points.iter().enumerate() {
+        if i % stride == 0 || i + 1 == curve.points.len() {
+            println!(
+                "{:>8} {:>12} {:>10} {:>10.4} {:>9.4}",
+                p.iter, p.grad_evals, p.uploads, p.loss, p.accuracy
+            );
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Experiment driver: turn an [`ExpConfig`] (one figure's workload +
+//! algorithm set) into runs, curves, and paper-style summary rows.
+
+pub mod figure;
+pub use figure::figure_bench;
+
+use crate::algorithms::{LocalCfg, LocalLoop, LocalMethod};
+use crate::comm::{CommStats, CostModel};
+use crate::config::{AlgoConfig, ExpConfig, Schedule};
+use crate::coordinator::rules::RuleKind;
+use crate::coordinator::scheduler::{LoopCfg, ServerLoop};
+use crate::coordinator::server::Optimizer;
+use crate::data::{synthetic, Batch, Dataset, DatasetKind, Partition};
+use crate::runtime::{Compute, SpecEntry};
+use crate::telemetry::{average_curves, Curve, SummaryRow};
+use crate::util::rng::Rng;
+
+/// Result of all runs of one algorithm on one experiment.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub algo: String,
+    /// per-run curves
+    pub curves: Vec<Curve>,
+    /// point-wise Monte-Carlo average
+    pub mean_curve: Curve,
+    pub comm: CommStats,
+}
+
+/// One experiment: workload + algorithms (one paper figure family).
+pub struct Experiment {
+    pub cfg: ExpConfig,
+    pub spec: SpecEntry,
+}
+
+impl Experiment {
+    pub fn new(cfg: ExpConfig, spec: SpecEntry) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            spec.name == cfg.spec,
+            "spec mismatch: cfg wants {}, got {}",
+            cfg.spec,
+            spec.name
+        );
+        Ok(Experiment { cfg, spec })
+    }
+
+    /// Generate the synthetic dataset this experiment trains on.
+    pub fn make_dataset(&self, run_seed: u64) -> Dataset {
+        make_dataset(self.cfg.dataset, &self.spec, self.cfg.n, run_seed)
+    }
+
+    /// Held-out eval batch (fixed across iterations, sized to the eval
+    /// artifact). Falls back to with-replacement sampling when the
+    /// (budget-scaled) dataset is smaller than the artifact's eval batch.
+    pub fn make_eval_batch(&self, data: &Dataset, rng: &mut Rng) -> Batch {
+        let n = data.len();
+        let b = self.spec.eval_batch;
+        let idx = if b <= n {
+            rng.sample_indices(n, b)
+        } else {
+            (0..b).map(|_| rng.below(n)).collect()
+        };
+        data.gather(&idx)
+    }
+
+    /// Run one algorithm for all Monte-Carlo runs.
+    pub fn run_algo(
+        &self,
+        algo: &AlgoConfig,
+        compute: &mut dyn Compute,
+        init_theta: &[f32],
+    ) -> anyhow::Result<RunResult> {
+        let mut curves = Vec::new();
+        let mut comm = CommStats::default();
+        for run in 0..self.cfg.runs {
+            let run_seed = self
+                .cfg
+                .seed
+                .wrapping_mul(0x9E37)
+                .wrapping_add(run as u64);
+            let data = self.make_dataset(run_seed);
+            let mut rng = Rng::new(run_seed ^ EVAL_SEED);
+            let partition = Partition::build(self.cfg.partition, &data,
+                                             self.cfg.workers, &mut rng);
+            let eval_batch = self.make_eval_batch(&data, &mut rng);
+            let (curve, run_comm) = run_one(
+                &self.cfg,
+                &self.spec,
+                algo,
+                compute,
+                init_theta.to_vec(),
+                &data,
+                &partition,
+                eval_batch,
+                run_seed,
+                run,
+            )?;
+            comm = run_comm;
+            curves.push(curve);
+        }
+        let mean_curve = average_curves(&curves);
+        Ok(RunResult {
+            algo: algo.name().to_string(),
+            curves,
+            mean_curve,
+            comm,
+        })
+    }
+
+    /// Run every configured algorithm; returns results in config order.
+    pub fn run_all(&self, compute: &mut dyn Compute, init_theta: &[f32])
+                   -> anyhow::Result<Vec<RunResult>> {
+        self.cfg
+            .algos
+            .iter()
+            .map(|algo| {
+                crate::info!("running {} on {}", algo.name(), self.cfg.name);
+                self.run_algo(algo, compute, init_theta)
+            })
+            .collect()
+    }
+
+    /// Paper-style summary rows against the experiment's target loss.
+    pub fn summarize(&self, results: &[RunResult]) -> Vec<SummaryRow> {
+        results
+            .iter()
+            .map(|r| {
+                let reach = r.mean_curve.first_reach(self.cfg.target_loss);
+                SummaryRow {
+                    algo: r.algo.clone(),
+                    reached: reach.is_some(),
+                    iters: reach.map(|p| p.iter).unwrap_or(0),
+                    uploads: reach.map(|p| p.uploads).unwrap_or(0),
+                    grad_evals: r
+                        .mean_curve
+                        .points
+                        .last()
+                        .map(|p| p.grad_evals)
+                        .unwrap_or(0),
+                    final_loss: r.mean_curve.final_loss(),
+                    final_acc: r
+                        .mean_curve
+                        .points
+                        .last()
+                        .map(|p| p.accuracy)
+                        .unwrap_or(0.0),
+                    comm_stats: Some(r.comm.clone()),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Map a dataset kind + spec geometry to an actual synthetic dataset.
+pub fn make_dataset(kind: DatasetKind, spec: &SpecEntry, n: usize,
+                    seed: u64) -> Dataset {
+    match kind {
+        DatasetKind::CovtypeLike => synthetic::covtype_like(n, seed),
+        DatasetKind::IjcnnLike => synthetic::ijcnn_like(n, seed),
+        DatasetKind::MnistLike => {
+            // image-shaped input (CNN) vs flat input (mlp / logreg)
+            if spec.grad_inputs[0].shape.len() == 4 {
+                synthetic::mnist_like(n, seed)
+            } else {
+                synthetic::mnist_like_flat(n, seed)
+            }
+        }
+        DatasetKind::CifarLike => synthetic::cifar_like(n, seed),
+        DatasetKind::LmCorpus => {
+            let spo = spec.grad_inputs[0].shape[1];
+            let vocab = vocab_of(spec);
+            synthetic::lm_corpus(n, spo - 1, vocab, seed)
+        }
+    }
+}
+
+fn vocab_of(spec: &SpecEntry) -> usize {
+    spec.cfg
+        .get("vocab")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(256)
+}
+
+const EVAL_SEED: u64 = 0x5EED;
+
+/// Build + run a single (algorithm, run) pair.
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    cfg: &ExpConfig,
+    spec: &SpecEntry,
+    algo: &AlgoConfig,
+    compute: &mut dyn Compute,
+    init_theta: Vec<f32>,
+    data: &Dataset,
+    partition: &Partition,
+    eval_batch: Batch,
+    run_seed: u64,
+    run: u32,
+) -> anyhow::Result<(Curve, CommStats)> {
+    let amsgrad = |alpha: Schedule| Optimizer::Amsgrad {
+        alpha,
+        beta1: spec.beta1,
+        beta2: spec.beta2,
+        eps: spec.eps,
+        use_artifact: false,
+    };
+    let loop_cfg = |rule: RuleKind, d_max: usize, max_delay: u32| LoopCfg {
+        iters: cfg.iters,
+        eval_every: cfg.eval_every,
+        rule,
+        max_delay,
+        snapshot_every: 0,
+        d_max,
+        batch: spec.batch,
+        use_artifact_update: false,
+        use_artifact_innov: false,
+        cost_model: CostModel::default(),
+        trace_cap: 0,
+        upload_bytes: spec.upload_bytes(),
+    };
+    match *algo {
+        AlgoConfig::Adam { alpha } => {
+            let mut lp = ServerLoop::new(loop_cfg(RuleKind::Always, 1, u32::MAX),
+                                         init_theta, amsgrad(alpha), data,
+                                         partition, eval_batch, run_seed);
+            let curve = lp.run(algo.name(), run, compute)?;
+            Ok((curve, lp.comm))
+        }
+        AlgoConfig::Cada1 { alpha, c, d_max, max_delay } => {
+            let mut lp = ServerLoop::new(
+                loop_cfg(RuleKind::Cada1 { c }, d_max, max_delay),
+                init_theta, amsgrad(alpha), data, partition, eval_batch,
+                run_seed);
+            let curve = lp.run(algo.name(), run, compute)?;
+            Ok((curve, lp.comm))
+        }
+        AlgoConfig::Cada2 { alpha, c, d_max, max_delay } => {
+            let mut lp = ServerLoop::new(
+                loop_cfg(RuleKind::Cada2 { c }, d_max, max_delay),
+                init_theta, amsgrad(alpha), data, partition, eval_batch,
+                run_seed);
+            let curve = lp.run(algo.name(), run, compute)?;
+            Ok((curve, lp.comm))
+        }
+        AlgoConfig::Lag { eta, c, d_max, max_delay } => {
+            let mut lp = ServerLoop::new(
+                loop_cfg(RuleKind::Lag { c }, d_max, max_delay),
+                init_theta, Optimizer::Sgd { eta }, data, partition,
+                eval_batch, run_seed);
+            let curve = lp.run(algo.name(), run, compute)?;
+            Ok((curve, lp.comm))
+        }
+        AlgoConfig::Sgd { eta } => {
+            let mut lp = ServerLoop::new(loop_cfg(RuleKind::Always, 1, u32::MAX),
+                                         init_theta,
+                                         Optimizer::Sgd { eta }, data,
+                                         partition, eval_batch, run_seed);
+            let curve = lp.run(algo.name(), run, compute)?;
+            Ok((curve, lp.comm))
+        }
+        AlgoConfig::LocalMomentum { eta, beta, h } => {
+            let mut lp = LocalLoop::new(
+                local_cfg(cfg, spec, LocalMethod::LocalMomentum { eta, beta },
+                          h),
+                init_theta, data, partition, eval_batch, run_seed);
+            let curve = lp.run(algo.name(), run, compute)?;
+            Ok((curve, lp.comm))
+        }
+        AlgoConfig::FedAvg { eta, h } => {
+            let mut lp = LocalLoop::new(
+                local_cfg(cfg, spec, LocalMethod::FedAvg { eta }, h),
+                init_theta, data, partition, eval_batch, run_seed);
+            let curve = lp.run(algo.name(), run, compute)?;
+            Ok((curve, lp.comm))
+        }
+        AlgoConfig::FedAdam { alpha_local, alpha_server, beta1, h } => {
+            let method = LocalMethod::FedAdam {
+                alpha_local,
+                alpha_server,
+                beta1,
+                beta2: spec.beta2,
+                eps: 1e-8,
+            };
+            let mut lp = LocalLoop::new(local_cfg(cfg, spec, method, h),
+                                        init_theta, data, partition,
+                                        eval_batch, run_seed);
+            let curve = lp.run(algo.name(), run, compute)?;
+            Ok((curve, lp.comm))
+        }
+    }
+}
+
+fn local_cfg(cfg: &ExpConfig, spec: &SpecEntry, method: LocalMethod, h: u32)
+             -> LocalCfg {
+    LocalCfg {
+        iters: cfg.iters,
+        eval_every: cfg.eval_every,
+        h,
+        batch: spec.batch,
+        method,
+        cost_model: CostModel::default(),
+        upload_bytes: spec.upload_bytes(),
+    }
+}

@@ -1,0 +1,57 @@
+//! # cada — Communication-Adaptive Distributed Adam
+//!
+//! A production-shaped reproduction of *"CADA: Communication-Adaptive
+//! Distributed Adam"* (Chen, Guo, Sun, Yin, 2020) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: a
+//!   parameter server + `M` workers where each worker adaptively *skips*
+//!   gradient uploads using the CADA1/CADA2 variance-reduced innovation
+//!   rules (paper Eqs. 7/10), plus every baseline the paper evaluates
+//!   (distributed Adam, stochastic LAG, local momentum SGD, FedAvg,
+//!   FedAdam).
+//! * **L2 (python/compile)** — JAX models (logistic regression, MLP, CNN,
+//!   transformer LM) lowered once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the fused
+//!   AMSGrad server step (Eq. 2a–2c) and the blocked innovation norm.
+//!
+//! Python never runs on the training path: [`runtime`] loads the AOT
+//! artifacts via PJRT (the `xla` crate) and everything else is rust.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use cada::prelude::*;
+//!
+//! let manifest = cada::runtime::Manifest::load("artifacts").unwrap();
+//! let engine = cada::runtime::Engine::new(&manifest, "test_logreg").unwrap();
+//! ```
+//!
+//! See `examples/quickstart.rs` for an end-to-end training run.
+
+pub mod algorithms;
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod runtime;
+pub mod telemetry;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+/// Convenient glob import for examples and benches.
+pub mod prelude {
+    pub use crate::algorithms::{AlgorithmKind, LocalLoop, LocalMethod};
+    pub use crate::comm::CommStats;
+    pub use crate::coordinator::{
+        rules::RuleKind, scheduler::ServerLoop, server::Optimizer,
+    };
+    pub use crate::data::{DatasetKind, Partition};
+    pub use crate::exp::{Experiment, RunResult};
+    pub use crate::runtime::{Engine, Manifest};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,176 @@
+//! `cada` — launcher CLI for the CADA reproduction.
+//!
+//! Subcommands:
+//!   train         run one experiment preset (or a single algorithm)
+//!   list          list artifact specs and experiment presets
+//!   print-config  show a preset's full configuration (paper Tables 1-4)
+//!   inspect       dump manifest details for one spec
+//!
+//! Examples:
+//!   cada train --preset fig3 --iters 500 --runs 1
+//!   cada train --preset fig2 --algo cada2 --out results/fig2.jsonl
+//!   cada list
+
+use cada::cli::Args;
+use cada::config;
+use cada::exp::Experiment;
+use cada::info;
+use cada::runtime::{Engine, Manifest};
+use cada::telemetry;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "list" => cmd_list(&args),
+        "print-config" => cmd_print_config(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'; try `cada help`"),
+    }
+}
+
+const HELP: &str = r#"cada — Communication-Adaptive Distributed Adam (paper reproduction)
+
+USAGE:
+  cada train --preset <fig2|fig3|fig4|fig4_cnn|fig5|fig6|fig7> [options]
+  cada list [--artifacts DIR]
+  cada print-config --preset <name>
+  cada inspect --spec <name> [--artifacts DIR]
+
+TRAIN OPTIONS:
+  --preset NAME       experiment preset (paper figure)
+  --config FILE       TOML overrides ([experiment] iters/n/workers/...)
+  --algo NAME         run only this algorithm from the preset
+  --iters N           override iteration count
+  --runs N            override Monte-Carlo run count
+  --n N               override dataset size
+  --workers M         override worker count
+  --seed S            override base seed
+  --target-loss X     override summary target loss
+  --artifacts DIR     artifacts directory (default ./artifacts)
+  --out FILE          write curves as JSONL
+  --quiet             less logging
+"#;
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let preset = args
+        .str_opt("preset")
+        .ok_or_else(|| anyhow::anyhow!("--preset required; see `cada help`"))?
+        .to_string();
+    let mut cfg = config::preset(&preset)?;
+    if let Some(path) = args.str_opt("config") {
+        let doc = config::toml::parse(&std::fs::read_to_string(path)?)?;
+        config::apply_overrides(&mut cfg, &doc)?;
+    }
+    cfg.iters = args.usize_or("iters", cfg.iters)?;
+    cfg.runs = args.u64_or("runs", cfg.runs as u64)? as u32;
+    cfg.n = args.usize_or("n", cfg.n)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.target_loss = args.f64_or("target-loss", cfg.target_loss)?;
+    if let Some(name) = args.str_opt("algo") {
+        let name = name.to_string();
+        cfg.algos.retain(|a| a.name() == name);
+        anyhow::ensure!(!cfg.algos.is_empty(), "no algorithm named '{name}'");
+    }
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let out = args.str_opt("out").map(str::to_string);
+    if args.bool("quiet") {
+        cada::util::logging::set_level(cada::util::logging::Level::Warn);
+    }
+    args.reject_unknown()?;
+
+    let manifest = Manifest::load(&artifacts)?;
+    info!("compiling artifacts for spec '{}'", cfg.spec);
+    let mut engine = Engine::new(&manifest, &cfg.spec)?;
+    let init = engine.init_theta()?;
+    let experiment = Experiment::new(cfg.clone(), engine.spec.clone())?;
+    let results = experiment.run_all(&mut engine, &init)?;
+    let rows = experiment.summarize(&results);
+    print!(
+        "{}",
+        telemetry::render_table(&cfg.name, cfg.target_loss, &rows)
+    );
+    if let Some(path) = out {
+        let curves: Vec<_> = results
+            .iter()
+            .flat_map(|r| r.curves.iter().cloned())
+            .collect();
+        telemetry::write_jsonl(&path, &curves)?;
+        info!("wrote curves to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> anyhow::Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    println!("experiment presets:");
+    for p in ["fig2", "fig3", "fig4", "fig4_cnn", "fig5", "fig6", "fig7"] {
+        let cfg = config::preset(p)?;
+        println!(
+            "  {:<10} spec={:<16} workers={:<3} iters={:<6} algos={}",
+            p,
+            cfg.spec,
+            cfg.workers,
+            cfg.iters,
+            cfg.algos.len()
+        );
+    }
+    match Manifest::load(&artifacts) {
+        Ok(m) => {
+            println!("\nartifact specs ({}):", m.dir.display());
+            for s in &m.specs {
+                println!(
+                    "  {:<16} kind={:<18} p={:<8} batch={:<4} eval={}",
+                    s.name, s.kind, s.p, s.batch, s.eval_batch
+                );
+            }
+        }
+        Err(e) => println!("\n(artifacts not available: {e})"),
+    }
+    Ok(())
+}
+
+fn cmd_print_config(args: &Args) -> anyhow::Result<()> {
+    let preset = args
+        .str_opt("preset")
+        .ok_or_else(|| anyhow::anyhow!("--preset required"))?
+        .to_string();
+    let cfg = config::preset(&preset)?;
+    args.reject_unknown()?;
+    println!("{cfg:#?}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let spec = args
+        .str_opt("spec")
+        .ok_or_else(|| anyhow::anyhow!("--spec required"))?
+        .to_string();
+    args.reject_unknown()?;
+    let manifest = Manifest::load(&artifacts)?;
+    let s = manifest.spec(&spec)?;
+    println!("{s:#?}");
+    let init = s.load_init()?;
+    let norm: f32 = init.iter().map(|v| v * v).sum::<f32>().sqrt();
+    println!("init ||theta|| = {norm}");
+    Ok(())
+}

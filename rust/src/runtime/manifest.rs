@@ -1,0 +1,253 @@
+//! `artifacts/manifest.json` — the single source of truth emitted by the
+//! AOT pipeline (python/compile/aot.py). Describes, per experiment spec,
+//! the HLO artifact filenames, parameter dimensions, input shapes/dtypes
+//! and the baked Adam hyper-parameters.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Element type of a model input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unknown dtype in manifest: {other}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one model input (beyond the theta vector).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl InputSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> anyhow::Result<Self> {
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            v.req("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("dtype not a string"))?,
+        )?;
+        Ok(InputSpec { shape, dtype })
+    }
+}
+
+/// One experiment spec: model + batch geometry + artifact files.
+#[derive(Clone, Debug)]
+pub struct SpecEntry {
+    pub name: String,
+    pub kind: String,
+    /// live (unpadded) parameter count
+    pub p: usize,
+    /// tile-aligned padded parameter count — the length of every flat vector
+    pub p_pad: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub grad_inputs: Vec<InputSpec>,
+    pub eval_inputs: Vec<InputSpec>,
+    pub grad_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub update_hlo: PathBuf,
+    pub innov_hlo: PathBuf,
+    pub init_bin: PathBuf,
+    /// model config needed by data generators (features, classes, ...)
+    pub cfg: Json,
+}
+
+impl SpecEntry {
+    fn parse(dir: &Path, v: &Json) -> anyhow::Result<Self> {
+        let s = |key: &str| -> anyhow::Result<String> {
+            Ok(v.req(key)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("{key} not a string"))?
+                .to_string())
+        };
+        let n = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{key} not a number"))
+        };
+        let inputs = |key: &str| -> anyhow::Result<Vec<InputSpec>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .iter()
+                .map(InputSpec::parse)
+                .collect()
+        };
+        Ok(SpecEntry {
+            name: s("name")?,
+            kind: s("kind")?,
+            p: n("p")? as usize,
+            p_pad: n("p_pad")? as usize,
+            batch: n("batch")? as usize,
+            eval_batch: n("eval_batch")? as usize,
+            beta1: n("beta1")? as f32,
+            beta2: n("beta2")? as f32,
+            eps: n("eps")? as f32,
+            grad_inputs: inputs("grad_inputs")?,
+            eval_inputs: inputs("eval_inputs")?,
+            grad_hlo: dir.join(s("grad_hlo")?),
+            eval_hlo: dir.join(s("eval_hlo")?),
+            update_hlo: dir.join(s("update_hlo")?),
+            innov_hlo: dir.join(s("innov_hlo")?),
+            init_bin: dir.join(s("init_bin")?),
+            cfg: v.req("cfg")?.clone(),
+        })
+    }
+
+    /// Read the initial padded flat parameter vector.
+    pub fn load_init(&self) -> anyhow::Result<Vec<f32>> {
+        let raw = std::fs::read(&self.init_bin)?;
+        anyhow::ensure!(
+            raw.len() == 4 * self.p_pad,
+            "init bin {} has {} bytes, expected {}",
+            self.init_bin.display(),
+            raw.len(),
+            4 * self.p_pad
+        );
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Upload payload of one gradient (innovation) vector, in bytes —
+    /// what a worker sends to the server on a communication round.
+    pub fn upload_bytes(&self) -> usize {
+        4 * self.p
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub specs: Vec<SpecEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let root = json::parse(&text)?;
+        let version = root.req("version")?.as_f64().unwrap_or(0.0) as u32;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let specs = root
+            .req("specs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("specs not an array"))?
+            .iter()
+            .map(|v| SpecEntry::parse(&dir, v))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest { dir, specs })
+    }
+
+    pub fn spec(&self, name: &str) -> anyhow::Result<&SpecEntry> {
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| {
+                let known: Vec<_> =
+                    self.specs.iter().map(|s| s.name.as_str()).collect();
+                anyhow::anyhow!("spec '{name}' not in manifest; have {known:?}")
+            })
+    }
+
+    /// Default artifacts directory: $CADA_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("CADA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{
+          "version": 1,
+          "specs": [{
+            "name": "t", "kind": "logreg_binary", "p": 9, "p_pad": 1024,
+            "batch": 16, "eval_batch": 64,
+            "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "seed": 0,
+            "cfg": {"num_features": 8}, "tags": ["test"],
+            "grad_inputs": [
+              {"shape": [16, 8], "dtype": "f32"},
+              {"shape": [16], "dtype": "i32"}],
+            "eval_inputs": [
+              {"shape": [64, 8], "dtype": "f32"},
+              {"shape": [64], "dtype": "i32"}],
+            "grad_hlo": "t.grad.hlo.txt", "eval_hlo": "t.eval.hlo.txt",
+            "update_hlo": "u.hlo.txt", "innov_hlo": "i.hlo.txt",
+            "init_bin": "t.init.bin"
+          }]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_sample() {
+        let dir = std::env::temp_dir().join("cada_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let s = m.spec("t").unwrap();
+        assert_eq!(s.p, 9);
+        assert_eq!(s.p_pad, 1024);
+        assert_eq!(s.grad_inputs.len(), 2);
+        assert_eq!(s.grad_inputs[0].dtype, Dtype::F32);
+        assert_eq!(s.grad_inputs[1].shape, vec![16]);
+        assert_eq!(s.upload_bytes(), 36);
+        assert!(m.spec("nope").is_err());
+    }
+
+    #[test]
+    fn init_length_checked() {
+        let dir = std::env::temp_dir().join("cada_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        std::fs::write(dir.join("t.init.bin"), vec![0u8; 8]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.spec("t").unwrap().load_init().is_err());
+        std::fs::write(dir.join("t.init.bin"), vec![0u8; 4 * 1024]).unwrap();
+        let init = m.spec("t").unwrap().load_init().unwrap();
+        assert_eq!(init.len(), 1024);
+    }
+}

@@ -1,0 +1,229 @@
+//! Pure-rust [`Compute`] backend: binary logistic regression with the same
+//! flat layout and loss as the JAX model (python/compile/models/logreg.py).
+//!
+//! Purpose: (a) an independent numerical comparator for the HLO/Pallas
+//! artifacts (integration tests assert native == pjrt to f32 tolerance);
+//! (b) a fast in-process backend for wide parameter sweeps where per-call
+//! PJRT overhead on tiny models would dominate (ablated in the
+//! micro_hotpath bench).
+//!
+//! Flat layout note: `jax.flatten_util.ravel_pytree` flattens dict keys in
+//! sorted order, so for `{"w": f32[d], "b": f32[]}` the flat vector is
+//! `[b, w_0, ..., w_{d-1}]`, padded with zeros to `p_pad`. This backend
+//! reproduces exactly that layout.
+
+use super::Compute;
+use crate::data::{Array, Batch};
+use crate::tensor;
+
+/// Numerically stable softplus: ln(1 + e^z).
+#[inline]
+fn softplus(z: f32) -> f32 {
+    z.max(0.0) + (-z.abs()).exp().ln_1p()
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Binary logistic regression with l2 regularisation, flat layout
+/// `[b, w...]` padded to `p_pad`.
+pub struct NativeLogReg {
+    pub d: usize,
+    pub p_pad: usize,
+    pub lam: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl NativeLogReg {
+    pub fn new(d: usize, p_pad: usize, lam: f32, beta1: f32, beta2: f32,
+               eps: f32) -> Self {
+        assert!(p_pad >= d + 1);
+        NativeLogReg { d, p_pad, lam, beta1, beta2, eps }
+    }
+
+    /// Matches the python spec defaults (lam=1e-5, Adam betas).
+    pub fn for_spec(d: usize, p_pad: usize) -> Self {
+        Self::new(d, p_pad, 1e-5, 0.9, 0.999, 1e-8)
+    }
+
+    fn unpack_batch<'a>(&self, batch: &'a Batch)
+                        -> anyhow::Result<(&'a [f32], &'a [i32])> {
+        anyhow::ensure!(batch.arrays.len() == 2, "logreg batch needs (x, y)");
+        let x = match &batch.arrays[0].0 {
+            Array::F32(v) => v.as_slice(),
+            _ => anyhow::bail!("x must be f32"),
+        };
+        let y = match &batch.arrays[1].0 {
+            Array::I32(v) => v.as_slice(),
+            _ => anyhow::bail!("y must be i32"),
+        };
+        anyhow::ensure!(x.len() == y.len() * self.d, "bad batch geometry");
+        Ok((x, y))
+    }
+
+    /// loss + optional gradient accumulation (shared fwd/bwd core).
+    fn loss_grad(&self, theta: &[f32], x: &[f32], y: &[i32],
+                 mut grad: Option<&mut [f32]>) -> (f32, f32) {
+        let b = theta[0];
+        let w = &theta[1..1 + self.d];
+        let n = y.len();
+        let inv_n = 1.0 / n as f32;
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+        let mut loss = 0.0f32;
+        let mut correct = 0.0f32;
+        for (i, &yi) in y.iter().enumerate() {
+            let xi = &x[i * self.d..(i + 1) * self.d];
+            let z = tensor::dot(xi, w) + b;
+            let yf = yi as f32;
+            loss += softplus(z) - yf * z;
+            if ((z > 0.0) as i32) == yi {
+                correct += 1.0;
+            }
+            if let Some(g) = grad.as_deref_mut() {
+                let r = (sigmoid(z) - yf) * inv_n;
+                g[0] += r;
+                tensor::axpy(&mut g[1..1 + self.d], r, xi);
+            }
+        }
+        loss *= inv_n;
+        // l2 over all live params (w AND b), matching the jax _l2 helper
+        let live = &theta[..1 + self.d];
+        loss += 0.5 * self.lam * tensor::sqnorm(live);
+        if let Some(g) = grad.as_deref_mut() {
+            tensor::axpy(&mut g[..1 + self.d], self.lam, live);
+        }
+        (loss, correct)
+    }
+}
+
+impl Compute for NativeLogReg {
+    fn p_pad(&self) -> usize {
+        self.p_pad
+    }
+
+    fn grad(&mut self, theta: &[f32], batch: &Batch, out_grad: &mut [f32])
+            -> anyhow::Result<f32> {
+        let (x, y) = self.unpack_batch(batch)?;
+        let (loss, _) = self.loss_grad(theta, x, y, Some(out_grad));
+        Ok(loss)
+    }
+
+    fn eval(&mut self, theta: &[f32], batch: &Batch)
+            -> anyhow::Result<(f32, f32)> {
+        let (x, y) = self.unpack_batch(batch)?;
+        let (loss, correct) = self.loss_grad(theta, x, y, None);
+        Ok((loss, correct))
+    }
+
+    fn update(&mut self, theta: &mut [f32], h: &mut [f32], vhat: &mut [f32],
+              grad: &[f32], alpha: f32) -> anyhow::Result<()> {
+        tensor::amsgrad_update(theta, h, vhat, grad, alpha, self.beta1,
+                               self.beta2, self.eps);
+        Ok(())
+    }
+
+    fn innov(&mut self, g1: &[f32], g2: &[f32]) -> anyhow::Result<f32> {
+        Ok(tensor::sqnorm_diff(g1, g2))
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::util::rng::Rng;
+
+    fn toy_data(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut z = 0.0;
+            for &wj in &w {
+                let v = rng.normal_f32(0.0, 1.0);
+                x.push(v);
+                z += wj * v;
+            }
+            y.push((z > 0.0) as i32);
+        }
+        Dataset::Labeled { x, sample_shape: vec![d], y }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let d = 6;
+        let mut m = NativeLogReg::for_spec(d, 16);
+        let data = toy_data(32, d, 1);
+        let batch = data.gather(&(0..32).collect::<Vec<_>>());
+        let mut rng = Rng::new(2);
+        let mut theta = vec![0.0f32; 16];
+        for t in theta[..d + 1].iter_mut() {
+            *t = rng.normal_f32(0.0, 0.3);
+        }
+        let mut g = vec![0.0f32; 16];
+        m.grad(&theta, &batch, &mut g).unwrap();
+        let eps = 1e-3f32;
+        for i in 0..d + 1 {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let mut tm = theta.clone();
+            tm[i] -= eps;
+            let mut scratch = vec![0.0f32; 16];
+            let lp = m.grad(&tp, &batch, &mut scratch).unwrap();
+            let lm = m.grad(&tm, &batch, &mut scratch).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((g[i] - fd).abs() < 2e-3 * (1.0 + fd.abs()),
+                    "coord {i}: {} vs {}", g[i], fd);
+        }
+        // padding carries zero gradient
+        assert!(g[d + 1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn adam_descends() {
+        let d = 8;
+        let p = 1024;
+        let mut m = NativeLogReg::for_spec(d, p);
+        let data = toy_data(256, d, 3);
+        let all: Vec<usize> = (0..256).collect();
+        let batch = data.gather(&all);
+        let mut theta = vec![0.0f32; p];
+        let mut h = vec![0.0f32; p];
+        let mut vhat = vec![0.0f32; p];
+        let mut g = vec![0.0f32; p];
+        let loss0 = m.grad(&theta, &batch, &mut g).unwrap();
+        for _ in 0..80 {
+            m.grad(&theta, &batch, &mut g).unwrap();
+            m.update(&mut theta, &mut h, &mut vhat, &g, 0.05).unwrap();
+        }
+        let loss1 = m.grad(&theta, &batch, &mut g).unwrap();
+        assert!(loss1 < 0.5 * loss0, "{loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn eval_counts_match_manual() {
+        let d = 2;
+        let mut m = NativeLogReg::for_spec(d, 8);
+        // theta = [b=0, w=(1,0)] -> z = x0
+        let theta = [0.0f32, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let data = Dataset::Labeled {
+            x: vec![2.0, 0.0, -2.0, 0.0, 3.0, 0.0, -1.0, 0.0],
+            sample_shape: vec![2],
+            y: vec![1, 0, 0, 0],
+        };
+        let batch = data.gather(&[0, 1, 2, 3]);
+        let (_, correct) = m.eval(&theta, &batch).unwrap();
+        assert_eq!(correct, 3.0);
+    }
+}

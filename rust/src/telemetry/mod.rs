@@ -1,0 +1,246 @@
+//! Run telemetry: loss-curve records, JSONL/CSV writers, and the
+//! paper-style summary tables printed by the benches.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::comm::CommStats;
+use crate::util::json::ObjWriter;
+
+/// One evaluation point on a training curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub iter: u64,
+    pub loss: f64,
+    pub accuracy: f64,
+    /// cumulative uploads / grad evals at this iteration
+    pub uploads: u64,
+    pub grad_evals: u64,
+    pub sim_time_s: f64,
+    pub wall_s: f64,
+}
+
+/// A labelled training curve (one algorithm, one run).
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub algo: String,
+    pub run: u32,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn new(algo: &str, run: u32) -> Self {
+        Curve {
+            algo: algo.to_string(),
+            run,
+            points: Vec::new(),
+        }
+    }
+
+    /// First iteration / upload count at which loss <= target (None if
+    /// never reached). The paper's headline metric: uploads-to-target.
+    pub fn first_reach(&self, target_loss: f64) -> Option<&CurvePoint> {
+        self.points.iter().find(|p| p.loss <= target_loss)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_loss(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.loss)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for p in &self.points {
+            out.push_str(
+                &ObjWriter::new()
+                    .str("algo", &self.algo)
+                    .int("run", self.run as u64)
+                    .int("iter", p.iter)
+                    .num("loss", p.loss)
+                    .num("acc", p.accuracy)
+                    .int("uploads", p.uploads)
+                    .int("grad_evals", p.grad_evals)
+                    .num("sim_time_s", p.sim_time_s)
+                    .num("wall_s", p.wall_s)
+                    .finish(),
+            );
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Average several runs of the same algorithm point-wise (the paper's
+/// "averaged over 10 Monte Carlo runs"). Curves must share eval cadence.
+pub fn average_curves(curves: &[Curve]) -> Curve {
+    assert!(!curves.is_empty());
+    let n = curves[0].points.len();
+    assert!(
+        curves.iter().all(|c| c.points.len() == n),
+        "curves must share eval cadence"
+    );
+    let mut avg = Curve::new(&curves[0].algo, u32::MAX);
+    for i in 0..n {
+        let m = curves.len() as f64;
+        avg.points.push(CurvePoint {
+            iter: curves[0].points[i].iter,
+            loss: curves.iter().map(|c| c.points[i].loss).sum::<f64>() / m,
+            accuracy: curves.iter().map(|c| c.points[i].accuracy).sum::<f64>()
+                / m,
+            uploads: (curves.iter().map(|c| c.points[i].uploads).sum::<u64>()
+                as f64
+                / m) as u64,
+            grad_evals: (curves
+                .iter()
+                .map(|c| c.points[i].grad_evals)
+                .sum::<u64>() as f64
+                / m) as u64,
+            sim_time_s: curves.iter().map(|c| c.points[i].sim_time_s).sum::<f64>()
+                / m,
+            wall_s: curves.iter().map(|c| c.points[i].wall_s).sum::<f64>() / m,
+        });
+    }
+    avg
+}
+
+/// Write curves as JSONL under `results/` (one file per experiment id).
+pub fn write_jsonl(path: impl AsRef<Path>, curves: &[Curve])
+                   -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    for c in curves {
+        f.write_all(c.to_jsonl().as_bytes())?;
+    }
+    Ok(())
+}
+
+/// The paper-style comparison row: communication/iteration/computation
+/// cost for one algorithm to reach a target loss.
+#[derive(Clone, Debug)]
+pub struct SummaryRow {
+    pub algo: String,
+    pub reached: bool,
+    pub iters: u64,
+    pub uploads: u64,
+    pub grad_evals: u64,
+    pub final_loss: f64,
+    pub final_acc: f64,
+    pub comm_stats: Option<CommStats>,
+}
+
+/// Render the rows as the aligned table the benches print (who wins, by
+/// what factor — the shape the paper reports).
+pub fn render_table(title: &str, target_loss: f64, rows: &[SummaryRow])
+                    -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} (target loss {target_loss}) ==\n"));
+    out.push_str(&format!(
+        "{:<16} {:>8} {:>10} {:>12} {:>11} {:>10}\n",
+        "algorithm", "iters", "uploads", "grad_evals", "final_loss", "final_acc"
+    ));
+    let best_uploads = rows
+        .iter()
+        .filter(|r| r.reached)
+        .map(|r| r.uploads)
+        .min();
+    for r in rows {
+        let iters = if r.reached {
+            format!("{}", r.iters)
+        } else {
+            "--".to_string()
+        };
+        let uploads = if r.reached {
+            format!("{}", r.uploads)
+        } else {
+            "--".to_string()
+        };
+        let marker = match best_uploads {
+            Some(b) if r.reached && r.uploads == b => " *",
+            _ => "",
+        };
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>10} {:>12} {:>11.4} {:>10.4}{}\n",
+            r.algo, iters, uploads, r.grad_evals, r.final_loss, r.final_acc,
+            marker
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(losses: &[f64]) -> Curve {
+        let mut c = Curve::new("x", 0);
+        for (i, &l) in losses.iter().enumerate() {
+            c.points.push(CurvePoint {
+                iter: i as u64 * 10,
+                loss: l,
+                accuracy: 0.5,
+                uploads: i as u64,
+                grad_evals: i as u64 * 2,
+                sim_time_s: 0.0,
+                wall_s: 0.0,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn first_reach_finds_first() {
+        let c = curve(&[1.0, 0.5, 0.2, 0.25]);
+        let p = c.first_reach(0.3).unwrap();
+        assert_eq!(p.iter, 20);
+        assert!(c.first_reach(0.1).is_none());
+        assert_eq!(c.best_loss(), 0.2);
+        assert_eq!(c.final_loss(), 0.25);
+    }
+
+    #[test]
+    fn average_is_pointwise() {
+        let a = curve(&[1.0, 0.4]);
+        let b = curve(&[0.0, 0.6]);
+        let avg = average_curves(&[a, b]);
+        assert_eq!(avg.points[0].loss, 0.5);
+        assert_eq!(avg.points[1].loss, 0.5);
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let c = curve(&[0.9]);
+        let line = c.to_jsonl();
+        let v = crate::util::json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("loss").unwrap().as_f64(), Some(0.9));
+    }
+
+    #[test]
+    fn table_marks_winner() {
+        let rows = vec![
+            SummaryRow {
+                algo: "adam".into(), reached: true, iters: 100,
+                uploads: 1000, grad_evals: 1000, final_loss: 0.1,
+                final_acc: 0.9, comm_stats: None,
+            },
+            SummaryRow {
+                algo: "cada2".into(), reached: true, iters: 110,
+                uploads: 120, grad_evals: 2200, final_loss: 0.1,
+                final_acc: 0.9, comm_stats: None,
+            },
+        ];
+        let t = render_table("test", 0.2, &rows);
+        assert!(t.contains("cada2"));
+        let winner_line =
+            t.lines().find(|l| l.contains("cada2")).unwrap();
+        assert!(winner_line.ends_with('*'));
+    }
+}

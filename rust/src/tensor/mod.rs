@@ -1,0 +1,231 @@
+//! Flat f32 vector math for the coordinator hot path.
+//!
+//! Every parameter-sized object in the system is a flat `Vec<f32>` of
+//! length `p_pad` (tile aligned by the AOT pipeline). These kernels are
+//! the *native* counterparts of the L1 Pallas artifacts — used (a) as the
+//! fast path for rule checks, (b) as an independent comparator for the
+//! HLO/Pallas numerics in integration tests, and (c) by the native grad
+//! backend for pure-rust sweeps.
+//!
+//! Loops are written 4-way unrolled over exact chunks so LLVM reliably
+//! autovectorises them; the remainder loop handles the tail (p_pad is a
+//! multiple of 1024, but the functions stay correct for any length).
+
+/// y += a * x
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// dot product
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// ||x||^2
+pub fn sqnorm(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// ||a - b||^2 — the innovation norm, LHS of rules (5)/(7)/(10).
+/// Single fused pass (no temporary difference vector).
+pub fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// out = a - b
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(a.len(), b.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = x - y;
+    }
+}
+
+/// x *= a
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Native fused AMSGrad/CADA step — the rust twin of the Pallas
+/// `cada_update` kernel (paper Eq. 2a–2c), used as its comparator and as
+/// the fast in-process update backend.
+#[allow(clippy::too_many_arguments)]
+pub fn amsgrad_update(
+    theta: &mut [f32],
+    h: &mut [f32],
+    vhat: &mut [f32],
+    grad: &[f32],
+    alpha: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+) {
+    assert_eq!(theta.len(), h.len());
+    assert_eq!(theta.len(), vhat.len());
+    assert_eq!(theta.len(), grad.len());
+    for i in 0..theta.len() {
+        let g = grad[i];
+        let h_new = beta1 * h[i] + (1.0 - beta1) * g;
+        let v_new = beta2 * vhat[i] + (1.0 - beta2) * g * g;
+        let vhat_new = v_new.max(vhat[i]);
+        theta[i] -= alpha * h_new / (eps + vhat_new).sqrt();
+        h[i] = h_new;
+        vhat[i] = vhat_new;
+    }
+}
+
+/// Plain SGD step (LAG baseline; paper Eq. 4): theta -= eta * grad.
+pub fn sgd_update(theta: &mut [f32], grad: &[f32], eta: f32) {
+    axpy(theta, -eta, grad);
+}
+
+/// Heavy-ball momentum step: u = beta*u + grad; theta -= eta*u.
+pub fn momentum_update(theta: &mut [f32], u: &mut [f32], grad: &[f32],
+                       eta: f32, beta: f32) {
+    assert_eq!(theta.len(), u.len());
+    assert_eq!(theta.len(), grad.len());
+    for i in 0..theta.len() {
+        u[i] = beta * u[i] + grad[i];
+        theta[i] -= eta * u[i];
+    }
+}
+
+/// Mean of several equally-weighted vectors into `out`.
+pub fn mean_into(out: &mut [f32], parts: &[&[f32]]) {
+    assert!(!parts.is_empty());
+    let scale_by = 1.0 / parts.len() as f32;
+    out.fill(0.0);
+    for part in parts {
+        axpy(out, scale_by, part);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() <= tol * (1.0 + b.abs()), "{a} vs {b}");
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+        approx(dot(&a, &b), 35.0, 1e-6);
+        approx(sqnorm(&a), 55.0, 1e-6);
+        approx(sqnorm_diff(&a, &b), 16.0 + 4.0 + 0.0 + 4.0 + 16.0, 1e-6);
+    }
+
+    #[test]
+    fn sqnorm_diff_matches_two_pass() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let a: Vec<f32> = (0..1031).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..1031).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut d = vec![0.0; a.len()];
+        sub_into(&mut d, &a, &b);
+        approx(sqnorm_diff(&a, &b), sqnorm(&d), 1e-5);
+    }
+
+    #[test]
+    fn amsgrad_update_hand_example() {
+        // One coordinate, hand-computed.
+        let mut theta = [1.0f32];
+        let mut h = [0.5f32];
+        let mut vhat = [0.04f32];
+        amsgrad_update(&mut theta, &mut h, &mut vhat, &[2.0], 0.1, 0.9,
+                       0.99, 1e-8);
+        // h' = .9*.5 + .1*2 = .65 ; v = .99*.04 + .01*4 = .0796
+        // vhat' = max(.0796,.04)=.0796 ; theta' = 1 - .1*.65/sqrt(.0796)
+        approx(h[0], 0.65, 1e-6);
+        approx(vhat[0], 0.0796, 1e-6);
+        approx(theta[0], 1.0 - 0.1 * 0.65 / 0.0796f32.sqrt(), 1e-6);
+    }
+
+    #[test]
+    fn amsgrad_vhat_monotone() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let p = 257;
+        let mut theta: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut h = vec![0.0; p];
+        let mut vhat = vec![0.0; p];
+        let mut prev = vhat.clone();
+        for _ in 0..20 {
+            let g: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            amsgrad_update(&mut theta, &mut h, &mut vhat, &g, 0.01, 0.9,
+                           0.999, 1e-8);
+            assert!(vhat.iter().zip(&prev).all(|(a, b)| a >= b));
+            prev.copy_from_slice(&vhat);
+        }
+    }
+
+    #[test]
+    fn momentum_matches_unrolled() {
+        let mut theta = [0.0f32; 3];
+        let mut u = [0.0f32; 3];
+        let g = [1.0f32, -2.0, 0.5];
+        momentum_update(&mut theta, &mut u, &g, 0.1, 0.9);
+        momentum_update(&mut theta, &mut u, &g, 0.1, 0.9);
+        // u1 = g, u2 = .9 g + g = 1.9 g ; theta = -.1(g) - .1(1.9 g)
+        for i in 0..3 {
+            approx(u[i], 1.9 * g[i], 1e-6);
+            approx(theta[i], -0.1 * g[i] - 0.1 * 1.9 * g[i], 1e-6);
+        }
+    }
+
+    #[test]
+    fn mean_into_averages() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_into(&mut out, &[&a, &b]);
+        approx(out[0], 2.0, 1e-6);
+        approx(out[1], 4.0, 1e-6);
+    }
+
+    #[test]
+    fn sgd_is_axpy() {
+        let mut theta = [1.0f32, 1.0];
+        sgd_update(&mut theta, &[0.5, -0.5], 0.2);
+        approx(theta[0], 0.9, 1e-6);
+        approx(theta[1], 1.1, 1e-6);
+    }
+}

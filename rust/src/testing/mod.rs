@@ -1,0 +1,111 @@
+//! `proptest_lite`: a seeded random-input property harness (crates.io
+//! proptest is unavailable offline). Generates many random cases from a
+//! deterministic RNG, reports the first failing case with its seed so it
+//! can be replayed, and supports simple integer shrinking.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0xCADA,
+        }
+    }
+}
+
+/// Run `prop` on `cases` random inputs drawn by `gen`. On failure, panic
+/// with the case index + seed (replayable) and a Debug dump of the input.
+pub fn check<T, G, P>(cfg: Config, name: &str, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).fork(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: seed={:#x}, fork={case})\ninput: {input:?}\n{msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrinking helper for usize inputs: find the smallest n in [lo, hi]
+/// for which `fails` holds (bisection; assumes monotone-ish failures).
+pub fn shrink_usize<F: FnMut(usize) -> bool>(lo: usize, hi: usize,
+                                             mut fails: F) -> usize {
+    let (mut lo, mut hi) = (lo, hi);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fails(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(0.0, scale)).collect()
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            Config { cases: 32, ..Config::default() },
+            "sum-commutes",
+            |rng| (rng.below(100), rng.below(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check(
+            Config { cases: 4, ..Config::default() },
+            "always-fails",
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrink_finds_boundary() {
+        // fails for n >= 37
+        let n = shrink_usize(0, 100, |n| n >= 37);
+        assert_eq!(n, 37);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained substrates: PRNG, statistics, JSON, logging.
+//!
+//! This build is fully offline, so the usual crates.io helpers (`rand`,
+//! `serde_json`, `env_logger`) are replaced by purpose-built modules kept
+//! deliberately tiny and heavily tested.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

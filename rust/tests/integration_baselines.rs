@@ -1,0 +1,163 @@
+//! Integration: the experiment driver + every baseline algorithm, run
+//! end-to-end (scaled down) through both backends.
+
+use cada::config::{self, AlgoConfig, Schedule};
+use cada::exp::Experiment;
+use cada::runtime::native::NativeLogReg;
+use cada::runtime::{Engine, Manifest};
+use cada::telemetry::render_table;
+
+fn manifest() -> Manifest {
+    Manifest::load("artifacts").expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    )
+}
+
+#[test]
+fn fig3_preset_all_algorithms_smoke_native() {
+    // Full driver over all six fig3 algorithms on the native backend
+    // (fast); every algorithm must complete and descend.
+    let m = manifest();
+    let spec = m.spec("logreg_ijcnn").unwrap().clone();
+    let cfg = config::fig3_ijcnn().scaled(120, 3_000, 1);
+    let mut native = NativeLogReg::for_spec(22, spec.p_pad);
+    let exp = Experiment::new(cfg.clone(), spec).unwrap();
+    let init = vec![0.0f32; exp.spec.p_pad];
+    let results = exp.run_all(&mut native, &init).unwrap();
+    assert_eq!(results.len(), cfg.algos.len());
+    for r in &results {
+        let first = r.mean_curve.points[0].loss;
+        let last = r.mean_curve.final_loss();
+        assert!(
+            last < first,
+            "{} did not descend: {first} -> {last}",
+            r.algo
+        );
+    }
+    // CADA must beat distributed Adam on uploads at equal iterations
+    let uploads = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.algo == name)
+            .unwrap()
+            .mean_curve
+            .points
+            .last()
+            .unwrap()
+            .uploads
+    };
+    assert!(uploads("cada2") < uploads("adam"));
+    assert!(uploads("cada1") < uploads("adam"));
+    let rows = exp.summarize(&results);
+    println!("{}", render_table(&cfg.name, cfg.target_loss, &rows));
+}
+
+#[test]
+fn fig3_preset_runs_on_pjrt_engine() {
+    // Same driver against the real HLO artifacts (scaled way down).
+    let m = manifest();
+    let mut engine = Engine::new(&m, "logreg_ijcnn").unwrap();
+    let spec = engine.spec.clone();
+    let mut cfg = config::fig3_ijcnn().scaled(40, 1_500, 1);
+    cfg.eval_every = 10;
+    // keep it quick: adam + cada2 only
+    cfg.algos = vec![
+        AlgoConfig::Adam { alpha: Schedule::Constant(0.01) },
+        AlgoConfig::Cada2 {
+            alpha: Schedule::Constant(0.01),
+            c: 0.6,
+            d_max: 10,
+            max_delay: 100,
+        },
+    ];
+    let exp = Experiment::new(cfg, spec).unwrap();
+    let init = engine.init_theta().unwrap();
+    let results = exp.run_all(&mut engine, &init).unwrap();
+    for r in &results {
+        assert!(r.mean_curve.final_loss() < r.mean_curve.points[0].loss,
+                "{}", r.algo);
+    }
+    let adam = &results[0].mean_curve;
+    let cada = &results[1].mean_curve;
+    assert!(cada.points.last().unwrap().uploads
+            < adam.points.last().unwrap().uploads);
+}
+
+#[test]
+fn monte_carlo_runs_average() {
+    let m = manifest();
+    let spec = m.spec("logreg_ijcnn").unwrap().clone();
+    let mut cfg = config::fig3_ijcnn().scaled(30, 1_000, 3);
+    cfg.algos = vec![AlgoConfig::Adam { alpha: Schedule::Constant(0.01) }];
+    let mut native = NativeLogReg::for_spec(22, spec.p_pad);
+    let exp = Experiment::new(cfg, spec).unwrap();
+    let init = vec![0.0f32; exp.spec.p_pad];
+    let results = exp.run_all(&mut native, &init).unwrap();
+    let r = &results[0];
+    assert_eq!(r.curves.len(), 3);
+    // distinct seeds -> distinct curves
+    assert!(r.curves[0].final_loss() != r.curves[1].final_loss()
+            || r.curves[1].final_loss() != r.curves[2].final_loss());
+    // mean curve is the pointwise average
+    let k = r.mean_curve.points.len() - 1;
+    let manual: f64 = r.curves.iter().map(|c| c.points[k].loss).sum::<f64>()
+        / 3.0;
+    assert!((r.mean_curve.points[k].loss - manual).abs() < 1e-12);
+}
+
+#[test]
+fn h_sweep_larger_h_fewer_uploads() {
+    // Figs. 6-7 mechanism: larger averaging period H => fewer uploads.
+    let m = manifest();
+    let spec = m.spec("logreg_ijcnn").unwrap().clone();
+    let mut uploads = Vec::new();
+    for h in [1u32, 4, 16] {
+        let mut cfg = config::fig3_ijcnn().scaled(64, 1_000, 1);
+        cfg.eval_every = 16; // last curve point must land exactly on 64
+        cfg.algos = vec![AlgoConfig::LocalMomentum {
+            eta: 0.05,
+            beta: 0.9,
+            h,
+        }];
+        let mut native = NativeLogReg::for_spec(22, spec.p_pad);
+        let exp = Experiment::new(cfg, spec.clone()).unwrap();
+        let init = vec![0.0f32; exp.spec.p_pad];
+        let results = exp.run_all(&mut native, &init).unwrap();
+        uploads.push(results[0].mean_curve.points.last().unwrap().uploads);
+    }
+    assert!(uploads[0] > uploads[1], "{uploads:?}");
+    assert!(uploads[1] > uploads[2], "{uploads:?}");
+    // H=1: one averaging round per iteration: 64 * 10 workers
+    assert_eq!(uploads[0], 640);
+}
+
+#[test]
+fn summary_marks_winner_and_targets() {
+    let m = manifest();
+    let spec = m.spec("logreg_ijcnn").unwrap().clone();
+    let mut cfg = config::fig3_ijcnn().scaled(150, 2_000, 1);
+    cfg.target_loss = 0.45;
+    cfg.algos = vec![
+        AlgoConfig::Adam { alpha: Schedule::Constant(0.02) },
+        AlgoConfig::Cada2 {
+            alpha: Schedule::Constant(0.02),
+            c: 0.6,
+            d_max: 10,
+            max_delay: 50,
+        },
+    ];
+    let mut native = NativeLogReg::for_spec(22, spec.p_pad);
+    let exp = Experiment::new(cfg, spec).unwrap();
+    let init = vec![0.0f32; exp.spec.p_pad];
+    let results = exp.run_all(&mut native, &init).unwrap();
+    let rows = exp.summarize(&results);
+    assert_eq!(rows.len(), 2);
+    for row in &rows {
+        assert!(row.reached, "{} never hit target", row.algo);
+        assert!(row.uploads > 0);
+    }
+    let adam = rows.iter().find(|r| r.algo == "adam").unwrap();
+    let cada = rows.iter().find(|r| r.algo == "cada2").unwrap();
+    assert!(cada.uploads < adam.uploads,
+            "cada {} vs adam {}", cada.uploads, adam.uploads);
+}

@@ -1,0 +1,207 @@
+//! Integration: full CADA training runs over the PJRT engine — the
+//! three-layer stack (rust coordinator -> HLO grad/eval -> Pallas update)
+//! exercised end to end on the tiny test spec.
+
+use cada::comm::CostModel;
+use cada::config::Schedule;
+use cada::coordinator::rules::RuleKind;
+use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
+use cada::coordinator::server::Optimizer;
+use cada::data::{Partition, PartitionScheme};
+use cada::runtime::{Compute, Engine, Manifest};
+use cada::util::rng::Rng;
+
+fn engine() -> Engine {
+    let m = Manifest::load("artifacts").expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    );
+    Engine::new(&m, "test_logreg").unwrap()
+}
+
+/// 8-feature binary task matching the test_logreg spec geometry.
+fn dataset(n: usize, seed: u64) -> cada::data::Dataset {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut x = Vec::with_capacity(n * 8);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut s = 0.0;
+        for &wj in &w {
+            let v = rng.normal_f32(0.0, 1.0);
+            x.push(v);
+            s += wj * v;
+        }
+        y.push((s > 0.0) as i32);
+    }
+    cada::data::Dataset::Labeled { x, sample_shape: vec![8], y }
+}
+
+fn cfg(engine: &Engine, rule: RuleKind, iters: usize) -> LoopCfg {
+    LoopCfg {
+        iters,
+        eval_every: 10,
+        rule,
+        max_delay: 20,
+        snapshot_every: 0,
+        d_max: 10,
+        batch: engine.spec.batch,
+        use_artifact_update: true,
+        use_artifact_innov: false,
+        cost_model: CostModel::free(),
+        trace_cap: iters,
+        upload_bytes: engine.spec.upload_bytes(),
+    }
+}
+
+fn amsgrad(engine: &Engine, alpha: f32) -> Optimizer {
+    Optimizer::Amsgrad {
+        alpha: Schedule::Constant(alpha),
+        beta1: engine.spec.beta1,
+        beta2: engine.spec.beta2,
+        eps: engine.spec.eps,
+        use_artifact: true,
+    }
+}
+
+#[test]
+fn cada2_trains_on_pjrt_stack_and_saves_uploads() {
+    let mut eng = engine();
+    let data = dataset(600, 1);
+    let mut rng = Rng::new(2);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 5, &mut rng);
+    let eval_idx: Vec<usize> = (0..eng.spec.eval_batch).collect();
+    let eval = data.gather(&eval_idx);
+    let init = eng.init_theta().unwrap();
+    let iters = 100;
+
+    let run = |eng: &mut Engine, rule: RuleKind| {
+        let opt = amsgrad(eng, 0.05);
+        let mut lp = ServerLoop::new(cfg(eng, rule, iters), init.clone(),
+                                     opt, &data, &partition, eval.clone(), 3);
+        let curve = lp.run(rule.name(), 0, eng).unwrap();
+        (curve, lp.comm.uploads)
+    };
+    let (adam_curve, adam_uploads) = run(&mut eng, RuleKind::Always);
+    let (cada_curve, cada_uploads) =
+        run(&mut eng, RuleKind::Cada2 { c: 0.4 });
+
+    assert_eq!(adam_uploads, (iters * 5) as u64);
+    assert!(cada_uploads < adam_uploads,
+            "cada {cada_uploads} vs adam {adam_uploads}");
+    // both must actually learn
+    assert!(adam_curve.final_loss() < 0.8 * adam_curve.points[0].loss);
+    assert!(cada_curve.final_loss() < 0.8 * cada_curve.points[0].loss);
+}
+
+#[test]
+fn cada1_snapshot_path_works_on_pjrt() {
+    let mut eng = engine();
+    let data = dataset(400, 7);
+    let mut rng = Rng::new(8);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 4, &mut rng);
+    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
+    let init = eng.init_theta().unwrap();
+    let opt = amsgrad(&eng, 0.05);
+    let mut lp = ServerLoop::new(
+        cfg(&eng, RuleKind::Cada1 { c: 0.8 }, 45),
+        init, opt, &data, &partition, eval, 5);
+    let curve = lp.run("cada1", 0, &mut eng).unwrap();
+    // CADA1 costs 2 grad evals per worker per iteration
+    assert_eq!(lp.comm.grad_evals, 45 * 4 * 2);
+    assert!(lp.max_staleness() <= 20);
+    assert!(curve.final_loss() < curve.points[0].loss);
+}
+
+#[test]
+fn artifact_and_native_update_paths_agree_in_training() {
+    // Same run with use_artifact_update on/off must give (nearly)
+    // identical trajectories: the Pallas kernel IS the native update.
+    let mut eng = engine();
+    let data = dataset(300, 11);
+    let mut rng = Rng::new(12);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 3, &mut rng);
+    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
+    let init = eng.init_theta().unwrap();
+
+    let run = |eng: &mut Engine, use_artifact: bool| {
+        let mut c = cfg(eng, RuleKind::Cada2 { c: 0.5 }, 25);
+        c.use_artifact_update = use_artifact;
+        let opt = Optimizer::Amsgrad {
+            alpha: Schedule::Constant(0.05),
+            beta1: eng.spec.beta1,
+            beta2: eng.spec.beta2,
+            eps: eng.spec.eps,
+            use_artifact,
+        };
+        let mut lp = ServerLoop::new(c, init.clone(), opt, &data,
+                                     &partition, eval.clone(), 9);
+        lp.run("x", 0, eng).unwrap();
+        (lp.server.theta.clone(), lp.comm.uploads)
+    };
+    let (theta_pallas, up_a) = run(&mut eng, true);
+    let (theta_native, up_b) = run(&mut eng, false);
+    assert_eq!(up_a, up_b, "upload decisions must match");
+    let drift = cada::tensor::sqnorm_diff(&theta_pallas, &theta_native);
+    assert!(drift < 1e-6, "trajectory drift {drift}");
+}
+
+#[test]
+fn artifact_innov_matches_native_decisions() {
+    let mut eng = engine();
+    let data = dataset(300, 21);
+    let mut rng = Rng::new(22);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 3, &mut rng);
+    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
+    let init = eng.init_theta().unwrap();
+    let run = |eng: &mut Engine, use_artifact_innov: bool| {
+        let mut c = cfg(eng, RuleKind::Cada2 { c: 0.5 }, 20);
+        c.use_artifact_innov = use_artifact_innov;
+        let opt = amsgrad(eng, 0.05);
+        let mut lp = ServerLoop::new(c, init.clone(), opt, &data,
+                                     &partition, eval.clone(), 9);
+        lp.run("x", 0, eng).unwrap();
+        lp.comm.uploads
+    };
+    assert_eq!(run(&mut eng, true), run(&mut eng, false));
+}
+
+#[test]
+fn heterogeneous_partition_still_converges() {
+    let mut eng = engine();
+    let data = dataset(600, 5);
+    let mut rng = Rng::new(6);
+    let partition = Partition::build(
+        PartitionScheme::SizeSkew { alpha: 0.5, min_frac: 0.2 },
+        &data, 6, &mut rng);
+    assert!(partition.imbalance() > 1.2);
+    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
+    let init = eng.init_theta().unwrap();
+    let opt = amsgrad(&eng, 0.05);
+    let mut lp = ServerLoop::new(
+        cfg(&eng, RuleKind::Cada2 { c: 0.8 }, 50),
+        init, opt, &data, &partition, eval, 13);
+    let curve = lp.run("cada2", 0, &mut eng).unwrap();
+    assert!(curve.final_loss() < curve.points[0].loss);
+}
+
+#[test]
+fn upload_byte_accounting_matches_spec() {
+    let mut eng = engine();
+    let data = dataset(200, 31);
+    let mut rng = Rng::new(32);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 2, &mut rng);
+    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
+    let init = eng.init_theta().unwrap();
+    let opt = amsgrad(&eng, 0.05);
+    let mut lp = ServerLoop::new(cfg(&eng, RuleKind::Always, 10),
+                                 init, opt, &data, &partition, eval, 1);
+    lp.run("adam", 0, &mut eng).unwrap();
+    assert_eq!(lp.comm.uploads, 20);
+    assert_eq!(lp.comm.upload_bytes,
+               20 * eng.spec.upload_bytes() as u64);
+}

@@ -1,0 +1,219 @@
+//! Integration: PJRT-backed Engine vs the native rust comparator.
+//!
+//! These tests require `make artifacts` to have run (the Makefile's `test`
+//! target guarantees it); they fail with a clear message otherwise.
+
+use cada::data::{synthetic, Dataset};
+use cada::runtime::native::NativeLogReg;
+use cada::runtime::{Compute, Engine, Manifest};
+use cada::tensor;
+use cada::util::rng::Rng;
+
+fn manifest() -> Manifest {
+    Manifest::load("artifacts").expect(
+        "artifacts/manifest.json missing — run `make artifacts` before \
+         `cargo test`",
+    )
+}
+
+fn logreg_batch(d: usize, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut s = 0.0;
+        for _ in 0..d {
+            let v = rng.normal_f32(0.0, 1.0);
+            x.push(v);
+            s += v;
+        }
+        y.push((s > 0.0) as i32);
+    }
+    Dataset::Labeled { x, sample_shape: vec![d], y }
+}
+
+fn rand_theta(p: usize, live: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut t = vec![0.0f32; p];
+    for v in t[..live].iter_mut() {
+        *v = rng.normal_f32(0.0, scale);
+    }
+    t
+}
+
+#[test]
+fn hlo_grad_matches_native_logreg() {
+    let m = manifest();
+    let mut engine = Engine::new(&m, "test_logreg").unwrap();
+    let spec = engine.spec.clone();
+    let mut native = NativeLogReg::for_spec(8, spec.p_pad);
+
+    let data = logreg_batch(8, spec.batch, 42);
+    let batch = data.gather(&(0..spec.batch).collect::<Vec<_>>());
+    let theta = rand_theta(spec.p_pad, spec.p, 7, 0.4);
+
+    let mut g_hlo = vec![0.0f32; spec.p_pad];
+    let mut g_nat = vec![0.0f32; spec.p_pad];
+    let loss_hlo = engine.grad(&theta, &batch, &mut g_hlo).unwrap();
+    let loss_nat = native.grad(&theta, &batch, &mut g_nat).unwrap();
+
+    assert!(
+        (loss_hlo - loss_nat).abs() < 1e-5 * (1.0 + loss_nat.abs()),
+        "loss {loss_hlo} vs {loss_nat}"
+    );
+    for i in 0..spec.p_pad {
+        assert!(
+            (g_hlo[i] - g_nat[i]).abs() < 1e-5,
+            "grad[{i}]: {} vs {}",
+            g_hlo[i],
+            g_nat[i]
+        );
+    }
+    // padding must be exactly zero from the artifact too
+    assert!(g_hlo[spec.p..].iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn hlo_eval_matches_native_logreg() {
+    let m = manifest();
+    let mut engine = Engine::new(&m, "test_logreg").unwrap();
+    let spec = engine.spec.clone();
+    let mut native = NativeLogReg::for_spec(8, spec.p_pad);
+
+    let data = logreg_batch(8, spec.eval_batch, 43);
+    let batch = data.gather(&(0..spec.eval_batch).collect::<Vec<_>>());
+    let theta = rand_theta(spec.p_pad, spec.p, 8, 0.4);
+
+    let (l_hlo, c_hlo) = engine.eval(&theta, &batch).unwrap();
+    let (l_nat, c_nat) = native.eval(&theta, &batch).unwrap();
+    assert!((l_hlo - l_nat).abs() < 1e-5 * (1.0 + l_nat.abs()));
+    assert_eq!(c_hlo, c_nat, "correct counts must agree exactly");
+}
+
+#[test]
+fn pallas_update_artifact_matches_native_kernel() {
+    let m = manifest();
+    let mut engine = Engine::new(&m, "test_logreg").unwrap();
+    let spec = engine.spec.clone();
+    let p = spec.p_pad;
+
+    let mut rng = Rng::new(5);
+    let mut theta: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut h: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let mut vhat: Vec<f32> =
+        (0..p).map(|_| rng.normal_f32(0.0, 0.5).abs()).collect();
+    let grad: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    let (mut t2, mut h2, mut v2) = (theta.clone(), h.clone(), vhat.clone());
+    engine
+        .update(&mut theta, &mut h, &mut vhat, &grad, 0.01)
+        .unwrap();
+    tensor::amsgrad_update(&mut t2, &mut h2, &mut v2, &grad, 0.01,
+                           spec.beta1, spec.beta2, spec.eps);
+    for i in 0..p {
+        assert!((theta[i] - t2[i]).abs() < 1e-5, "theta[{i}]");
+        assert!((h[i] - h2[i]).abs() < 1e-5, "h[{i}]");
+        assert!((vhat[i] - v2[i]).abs() < 1e-5, "vhat[{i}]");
+    }
+}
+
+#[test]
+fn pallas_update_iterated_stays_close_to_native() {
+    // 50 chained steps: accumulated f32 drift between the Pallas kernel
+    // and the native twin must stay tiny.
+    let m = manifest();
+    let mut engine = Engine::new(&m, "test_logreg").unwrap();
+    let spec = engine.spec.clone();
+    let p = spec.p_pad;
+    let mut rng = Rng::new(6);
+    let mut a = (
+        vec![0.5f32; p],
+        vec![0.0f32; p],
+        vec![0.0f32; p],
+    );
+    let mut b = a.clone();
+    for k in 0..50u64 {
+        let g: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let alpha = 0.05 / ((k + 1) as f32).sqrt();
+        engine.update(&mut a.0, &mut a.1, &mut a.2, &g, alpha).unwrap();
+        tensor::amsgrad_update(&mut b.0, &mut b.1, &mut b.2, &g, alpha,
+                               spec.beta1, spec.beta2, spec.eps);
+    }
+    let drift = tensor::sqnorm_diff(&a.0, &b.0);
+    assert!(drift < 1e-6, "iterated drift {drift}");
+}
+
+#[test]
+fn pallas_innov_artifact_matches_native() {
+    let m = manifest();
+    let mut engine = Engine::new(&m, "test_logreg").unwrap();
+    let p = engine.spec.p_pad;
+    let mut rng = Rng::new(9);
+    let g1: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+    let g2: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+    let hlo = engine.innov(&g1, &g2).unwrap();
+    let nat = tensor::sqnorm_diff(&g1, &g2);
+    assert!(
+        (hlo - nat).abs() < 1e-3 * (1.0 + nat.abs()),
+        "{hlo} vs {nat}"
+    );
+    assert_eq!(engine.innov(&g1, &g1).unwrap(), 0.0);
+}
+
+#[test]
+fn engine_rejects_wrong_batch_geometry() {
+    let m = manifest();
+    let mut engine = Engine::new(&m, "test_logreg").unwrap();
+    let spec = engine.spec.clone();
+    let theta = vec![0.0f32; spec.p_pad];
+    let mut g = vec![0.0f32; spec.p_pad];
+    // wrong batch size (batch+1)
+    let data = logreg_batch(8, spec.batch + 1, 1);
+    let batch = data.gather(&(0..spec.batch + 1).collect::<Vec<_>>());
+    assert!(engine.grad(&theta, &batch, &mut g).is_err());
+}
+
+#[test]
+fn init_theta_loads_and_is_padded() {
+    let m = manifest();
+    for name in ["test_logreg", "test_mlp"] {
+        let spec = m.spec(name).unwrap();
+        let init = spec.load_init().unwrap();
+        assert_eq!(init.len(), spec.p_pad);
+        assert!(init[spec.p..].iter().all(|&v| v == 0.0));
+        assert!(init.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn mlp_grad_artifact_descends_under_adam() {
+    // End-to-end sanity on a second (nonconvex) spec: artifact gradients
+    // plus the artifact update must reduce the artifact loss.
+    let m = manifest();
+    let mut engine = Engine::new(&m, "test_mlp").unwrap();
+    let spec = engine.spec.clone();
+    let data = synthetic::image_mixture(256, 4, 1, 3, 0.4, 3);
+    let data = match data {
+        Dataset::Labeled { x, y, .. } => Dataset::Labeled {
+            x,
+            sample_shape: vec![16],
+            y,
+        },
+        _ => unreachable!(),
+    };
+    let mut theta = engine.init_theta().unwrap();
+    let mut h = vec![0.0f32; spec.p_pad];
+    let mut vhat = vec![0.0f32; spec.p_pad];
+    let mut g = vec![0.0f32; spec.p_pad];
+    let mut rng = Rng::new(1);
+    let shard: Vec<usize> = (0..256).collect();
+    let b0 = data.sample_batch(&shard, spec.batch, &mut rng);
+    let loss0 = engine.grad(&theta, &b0, &mut g).unwrap();
+    for _ in 0..60 {
+        let b = data.sample_batch(&shard, spec.batch, &mut rng);
+        engine.grad(&theta, &b, &mut g).unwrap();
+        engine.update(&mut theta, &mut h, &mut vhat, &g, 0.01).unwrap();
+    }
+    let loss1 = engine.grad(&theta, &b0, &mut g).unwrap();
+    assert!(loss1 < loss0, "{loss0} -> {loss1}");
+}

@@ -1,0 +1,313 @@
+//! Property-based tests (proptest_lite) over the coordinator invariants:
+//! staleness caps, the aggregate-gradient recursion, routing decisions,
+//! history windows, partitions and tensor kernels.
+
+use cada::comm::CostModel;
+use cada::config::Schedule;
+use cada::coordinator::history::DeltaHistory;
+use cada::coordinator::rules::{decide, RuleKind};
+use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
+use cada::coordinator::server::Optimizer;
+use cada::data::{Dataset, Partition, PartitionScheme};
+use cada::runtime::native::NativeLogReg;
+use cada::tensor;
+use cada::testing::{check, gen, Config};
+use cada::util::rng::Rng;
+
+fn logreg_data(rng: &mut Rng, n: usize, d: usize) -> Dataset {
+    let w: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut s = 0.0;
+        for &wj in &w {
+            let v = rng.normal_f32(0.0, 1.0);
+            x.push(v);
+            s += wj * v;
+        }
+        y.push((s > 0.0) as i32);
+    }
+    Dataset::Labeled { x, sample_shape: vec![d], y }
+}
+
+#[test]
+fn prop_staleness_never_exceeds_max_delay() {
+    check(
+        Config { cases: 12, ..Config::default() },
+        "staleness <= D across rules and configs",
+        |rng| {
+            let rule = match rng.below(4) {
+                0 => RuleKind::Cada1 { c: rng.f32() * 2.0 },
+                1 => RuleKind::Cada2 { c: rng.f32() * 2.0 },
+                2 => RuleKind::Lag { c: rng.f32() * 2.0 },
+                _ => RuleKind::Never,
+            };
+            let max_delay = 2 + rng.below(8) as u32;
+            let workers = 2 + rng.below(4);
+            let seed = rng.next_u64();
+            (rule, max_delay, workers, seed)
+        },
+        |&(rule, max_delay, workers, seed)| {
+            let mut rng = Rng::new(seed);
+            let data = logreg_data(&mut rng, 200, 6);
+            let partition = Partition::build(PartitionScheme::Uniform,
+                                             &data, workers, &mut rng);
+            let mut compute = NativeLogReg::for_spec(6, 1024);
+            let eval = data.gather(&[0, 1, 2, 3]);
+            let mut cfg = LoopCfg::basic(rule, 25, 8);
+            cfg.max_delay = max_delay;
+            let mut lp = ServerLoop::new(
+                cfg, vec![0.0; 1024],
+                Optimizer::Amsgrad {
+                    alpha: Schedule::Constant(0.05),
+                    beta1: 0.9, beta2: 0.999, eps: 1e-8,
+                    use_artifact: false,
+                },
+                &data, &partition, eval, seed ^ 1);
+            for k in 0..25 {
+                lp.step(k, &mut compute).map_err(|e| e.to_string())?;
+                if lp.max_staleness() > max_delay {
+                    return Err(format!(
+                        "staleness {} > D {max_delay} at k={k}",
+                        lp.max_staleness()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aggregate_equals_mean_of_stale_gradients() {
+    // Eq. 3 invariant, checked through the real scheduler: after every
+    // step, grad_agg == mean over workers of g_stale.
+    check(
+        Config { cases: 8, ..Config::default() },
+        "aggregate recursion consistency",
+        |rng| (rng.next_u64(), 2 + rng.below(4)),
+        |&(seed, workers)| {
+            let mut rng = Rng::new(seed);
+            let data = logreg_data(&mut rng, 150, 6);
+            let partition = Partition::build(PartitionScheme::Uniform,
+                                             &data, workers, &mut rng);
+            let mut compute = NativeLogReg::for_spec(6, 1024);
+            let eval = data.gather(&[0, 1]);
+            let mut cfg = LoopCfg::basic(RuleKind::Cada2 { c: 1.0 }, 15, 8);
+            cfg.max_delay = 5;
+            let mut lp = ServerLoop::new(
+                cfg, vec![0.0; 1024],
+                Optimizer::Amsgrad {
+                    alpha: Schedule::Constant(0.05),
+                    beta1: 0.9, beta2: 0.999, eps: 1e-8,
+                    use_artifact: false,
+                },
+                &data, &partition, eval, seed ^ 2);
+            for k in 0..15 {
+                lp.step(k, &mut compute).map_err(|e| e.to_string())?;
+                let m = lp.workers.len() as f32;
+                for i in (0..1024).step_by(97) {
+                    let direct: f32 = lp.workers.iter()
+                        .map(|w| w.g_stale[i]).sum::<f32>() / m;
+                    let agg = lp.server.grad_agg[i];
+                    if (agg - direct).abs() > 1e-4 {
+                        return Err(format!(
+                            "k={k} i={i}: agg {agg} vs direct {direct}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_decision_monotone_in_lhs() {
+    // If a worker uploads at some LHS, it must also upload at any larger
+    // LHS (same everything else).
+    check(
+        Config { cases: 200, ..Config::default() },
+        "decide() monotone in lhs",
+        |rng| {
+            let c = rng.f32() * 2.0;
+            let rule = if rng.below(2) == 0 {
+                RuleKind::Cada1 { c }
+            } else {
+                RuleKind::Lag { c }
+            };
+            (rule,
+             rng.f64() * 10.0,       // lhs
+             rng.f64() * 10.0,       // rhs
+             1 + rng.below(30) as u32,
+             31 + rng.below(100) as u32,
+             1 + rng.below(1000) as u64)
+        },
+        |&(rule, lhs, rhs, tau, max_delay, k)| {
+            let d1 = decide(rule, k, lhs, rhs, tau, max_delay);
+            let d2 = decide(rule, k, lhs * 2.0 + 0.1, rhs, tau, max_delay);
+            if d1.upload && !d2.upload {
+                return Err(format!("upload at lhs={lhs} but not at larger"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_history_window_sum_matches_naive() {
+    check(
+        Config { cases: 60, ..Config::default() },
+        "DeltaHistory == naive sliding window",
+        |rng| {
+            let d_max = 1 + rng.below(12);
+            let steps: Vec<f64> =
+                (0..rng.below(60) + 1).map(|_| rng.f64() * 3.0).collect();
+            (d_max, steps)
+        },
+        |(d_max, steps)| {
+            let mut h = DeltaHistory::new(*d_max);
+            for (i, &s) in steps.iter().enumerate() {
+                h.push(s);
+                let naive: f64 =
+                    steps[..=i].iter().rev().take(*d_max).sum();
+                if (h.sum() - naive).abs() > 1e-9 {
+                    return Err(format!("at {i}: {} vs {naive}", h.sum()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitions_are_exact_covers() {
+    check(
+        Config { cases: 40, ..Config::default() },
+        "every partition scheme is an exact cover",
+        |rng| {
+            let n = 50 + rng.below(500);
+            let m = 2 + rng.below(10);
+            let scheme = match rng.below(3) {
+                0 => PartitionScheme::Uniform,
+                1 => PartitionScheme::SizeSkew {
+                    alpha: 0.3 + rng.f64(), min_frac: 0.1 },
+                _ => PartitionScheme::LabelSkew { alpha: 0.2 + rng.f64() },
+            };
+            (n, m, scheme, rng.next_u64())
+        },
+        |&(n, m, scheme, seed)| {
+            let mut rng = Rng::new(seed);
+            let data = logreg_data(&mut rng, n, 4);
+            let p = Partition::build(scheme, &data, m, &mut rng);
+            let mut all: Vec<usize> =
+                p.shards.iter().flatten().copied().collect();
+            all.sort_unstable();
+            if all != (0..n).collect::<Vec<_>>() {
+                return Err(format!("{scheme:?}: not an exact cover"));
+            }
+            if p.shards.iter().any(|s| s.is_empty()) {
+                return Err(format!("{scheme:?}: empty shard"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sqnorm_diff_properties() {
+    check(
+        Config { cases: 80, ..Config::default() },
+        "sqnorm_diff: symmetry, identity, scaling",
+        |rng| {
+            let len = gen::usize_in(rng, 1, 2000);
+            (gen::f32_vec(rng, len, 2.0), gen::f32_vec(rng, len, 2.0))
+        },
+        |(a, b)| {
+            let ab = tensor::sqnorm_diff(a, b);
+            let ba = tensor::sqnorm_diff(b, a);
+            if (ab - ba).abs() > 1e-3 * (1.0 + ab.abs()) {
+                return Err(format!("asymmetric: {ab} vs {ba}"));
+            }
+            if tensor::sqnorm_diff(a, a) != 0.0 {
+                return Err("self-distance nonzero".into());
+            }
+            if ab < 0.0 {
+                return Err("negative".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_amsgrad_vhat_monotone_and_padding_inert() {
+    check(
+        Config { cases: 40, ..Config::default() },
+        "amsgrad: vhat monotone; zero-pad stays zero",
+        |rng| {
+            let live = gen::usize_in(rng, 1, 500);
+            let p = live + gen::usize_in(rng, 0, 100);
+            let steps = gen::usize_in(rng, 1, 10);
+            (live, p, steps, rng.next_u64())
+        },
+        |&(live, p, steps, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut theta = vec![0.0f32; p];
+            let mut h = vec![0.0f32; p];
+            let mut vhat = vec![0.0f32; p];
+            for v in theta[..live].iter_mut() {
+                *v = rng.normal_f32(0.0, 1.0);
+            }
+            let mut prev = vhat.clone();
+            for _ in 0..steps {
+                let mut g = vec![0.0f32; p];
+                for v in g[..live].iter_mut() {
+                    *v = rng.normal_f32(0.0, 1.0);
+                }
+                tensor::amsgrad_update(&mut theta, &mut h, &mut vhat, &g,
+                                       0.01, 0.9, 0.999, 1e-8);
+                if vhat.iter().zip(&prev).any(|(a, b)| a < b) {
+                    return Err("vhat decreased".into());
+                }
+                if theta[live..].iter().any(|&v| v != 0.0)
+                    || h[live..].iter().any(|&v| v != 0.0)
+                {
+                    return Err("padding became nonzero".into());
+                }
+                prev.copy_from_slice(&vhat);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_comm_accounting_consistent() {
+    // uploads * bytes == upload_bytes for any cost model.
+    check(
+        Config { cases: 50, ..Config::default() },
+        "comm byte accounting",
+        |rng| {
+            let n_up = rng.below(40);
+            let bytes = 4 * (1 + rng.below(5000));
+            (n_up, bytes)
+        },
+        |&(n_up, bytes)| {
+            let model = CostModel::default();
+            let mut stats = cada::comm::CommStats::default();
+            for _ in 0..n_up {
+                stats.record_upload(bytes, &model);
+            }
+            if stats.uploads != n_up as u64 {
+                return Err("upload count".into());
+            }
+            if stats.upload_bytes != (n_up * bytes) as u64 {
+                return Err("byte count".into());
+            }
+            if n_up > 0 && stats.sim_time_s <= 0.0 {
+                return Err("no simulated time accrued".into());
+            }
+            Ok(())
+        },
+    );
+}
