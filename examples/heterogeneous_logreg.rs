@@ -1,11 +1,14 @@
 //! Fig. 2-style heterogeneous experiment: covtype-like logistic regression
 //! over M=20 workers with SIZE-SKEWED shards (the paper's non-iid covtype
-//! split), comparing CADA against every baseline family.
+//! split), comparing CADA against every baseline family. Every algorithm
+//! runs through the same `Trainer` inside the experiment driver.
 //!
 //!   cargo run --release --example heterogeneous_logreg -- --iters 800
+//!
+//! Uses the PJRT artifacts when available, else the native backend.
 
 use cada::exp::Experiment;
-use cada::runtime::{Engine, Manifest};
+use cada::runtime::load_backend;
 use cada::telemetry::render_table;
 
 fn main() -> anyhow::Result<()> {
@@ -15,9 +18,8 @@ fn main() -> anyhow::Result<()> {
     let runs = args.u64_or("runs", 1)? as u32;
     args.reject_unknown()?;
 
-    let manifest = Manifest::load("artifacts")?;
-    let mut engine = Engine::new(&manifest, "logreg_covtype")?;
-    let init = engine.init_theta()?;
+    let (spec, mut compute, init) =
+        load_backend("artifacts", "logreg_covtype")?;
 
     let mut cfg = cada::config::fig2_covtype();
     cfg.iters = iters;
@@ -28,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         "== heterogeneous covtype-like logreg: M={} size-skewed workers ==",
         cfg.workers
     );
-    let exp = Experiment::new(cfg.clone(), engine.spec.clone())?;
+    let exp = Experiment::new(cfg.clone(), spec)?;
 
     // show the heterogeneity the run trains against
     let data = exp.make_dataset(cfg.seed);
@@ -45,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         sizes
     );
 
-    let results = exp.run_all(&mut engine, &init)?;
+    let results = exp.run_all(&mut *compute, &init)?;
     let rows = exp.summarize(&results);
     print!("{}", render_table(&cfg.name, cfg.target_loss, &rows));
     cada::telemetry::write_jsonl(

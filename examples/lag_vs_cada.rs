@@ -5,18 +5,15 @@
 //! different SAMPLES, so it is lower-bounded by the non-vanishing gradient
 //! variance; CADA's variance-reduced LHS vanishes as theta converges. We
 //! run both on the same workload and print, per phase of training, the
-//! mean rule LHS, the RHS threshold, and the realised skip rate.
+//! mean rule LHS, the RHS threshold, and the realised skip rate — all read
+//! from the Trainer's bounded event trace.
 //!
 //!   cargo run --release --example lag_vs_cada
+//!
+//! Runs on the native backend; no artifacts needed.
 
-use cada::comm::CostModel;
-use cada::config::Schedule;
-use cada::coordinator::rules::RuleKind;
-use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
-use cada::coordinator::server::Optimizer;
-use cada::data::{synthetic, Partition, PartitionScheme};
-use cada::runtime::{Engine, Manifest};
-use cada::util::rng::Rng;
+use cada::comm::RoundEvent;
+use cada::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let args = cada::cli::Args::from_env()?;
@@ -24,15 +21,17 @@ fn main() -> anyhow::Result<()> {
     let c = args.f32_or("c", 0.6)?;
     args.reject_unknown()?;
 
-    let manifest = Manifest::load("artifacts")?;
-    let mut engine = Engine::new(&manifest, "logreg_ijcnn")?;
-    let spec = engine.spec.clone();
-    let data = synthetic::ijcnn_like(8_000, 3);
+    let spec = SpecEntry::builtin_logreg("logreg_ijcnn")?;
+    let mut compute =
+        cada::runtime::native::NativeLogReg::for_spec(spec.feature_dim(),
+                                                      spec.p_pad);
+    let data = cada::data::synthetic::ijcnn_like(8_000, 3);
     let mut rng = Rng::new(4);
     let partition =
         Partition::build(PartitionScheme::Uniform, &data, 10, &mut rng);
-    let eval = data.gather(&rng.sample_indices(data.len(), spec.eval_batch));
-    let init = engine.init_theta()?;
+    let eval = data.gather(&rng.sample_indices(data.len(),
+                                               spec.eval_batch.min(
+                                                   data.len())));
 
     println!("== LAG vs CADA rule dynamics (ijcnn1-like logreg) ==");
     println!("rule LHS should VANISH for CADA and FLOOR for LAG (sec 2.1)\n");
@@ -42,20 +41,6 @@ fn main() -> anyhow::Result<()> {
         RuleKind::Cada2 { c },
         RuleKind::Cada1 { c },
     ] {
-        let cfg = LoopCfg {
-            iters,
-            eval_every: iters,
-            rule,
-            max_delay: 1_000_000, // disable the delay cap: isolate the rule
-            snapshot_every: 100,  // keep CADA1's snapshot fresh (paper D)
-            d_max: 10,
-            batch: spec.batch,
-            use_artifact_update: false,
-            use_artifact_innov: false,
-            cost_model: CostModel::free(),
-            trace_cap: iters,
-            upload_bytes: spec.upload_bytes(),
-        };
         let opt = match rule {
             RuleKind::Lag { .. } => Optimizer::Sgd {
                 eta: Schedule::Constant(0.1),
@@ -68,17 +53,37 @@ fn main() -> anyhow::Result<()> {
                 use_artifact: false,
             },
         };
-        let mut lp = ServerLoop::new(cfg, init.clone(), opt, &data,
-                                     &partition, eval.clone(), 11);
-        lp.run(rule.name(), 0, &mut engine)?;
+        let mut algo = Cada::new(CadaCfg {
+            rule,
+            opt,
+            max_delay: 1_000_000, // disable the delay cap: isolate the rule
+            snapshot_every: 100,  // keep CADA1's snapshot fresh (paper D)
+            d_max: 10,
+            use_artifact_innov: false,
+        });
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval.clone())
+            .init_theta(vec![0.0; spec.p_pad])
+            .iters(iters)
+            .eval_every(iters)
+            .batch(spec.batch)
+            .upload_bytes(spec.upload_bytes())
+            .trace_cap(iters)
+            .seed(11)
+            .build()?;
+        trainer.run(0, &mut compute)?;
 
         println!("--- {} (c = {c}) ---", rule.name());
         println!(
             "{:>12} {:>14} {:>14} {:>10}",
             "iters", "mean rule LHS", "mean RHS", "skip rate"
         );
+        let events: Vec<RoundEvent> = trainer.trace.iter().cloned().collect();
         let phase = (iters / 6).max(1);
-        for chunk in lp.trace.events.chunks(phase) {
+        for chunk in events.chunks(phase) {
             let lhs: f64 = chunk.iter().map(|e| e.mean_lhs).sum::<f64>()
                 / chunk.len() as f64;
             let rhs: f64 = chunk.iter().map(|e| e.rhs).sum::<f64>()
@@ -98,7 +103,7 @@ fn main() -> anyhow::Result<()> {
                 100.0 * skipped as f64 / (chunk.len() * 10) as f64
             );
         }
-        let total_uploads = lp.comm.uploads;
+        let total_uploads = trainer.comm.uploads;
         println!(
             "total uploads: {total_uploads} / {} possible ({:.1}% saved)\n",
             iters * 10,

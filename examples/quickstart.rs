@@ -1,62 +1,119 @@
-//! Quickstart: train distributed logistic regression with CADA2 vs
-//! distributed Adam on the PJRT engine and print the paper-style summary.
+//! Quickstart: the builder-style training API on a synthetic ijcnn1-like
+//! logistic regression, comparing distributed Adam against CADA1/2.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 //!
-//! Expected outcome (the paper's headline, c3): CADA reaches the target
-//! loss with a small fraction of Adam's communication uploads.
+//! Runs on the pure-rust native backend — no artifacts or XLA toolchain
+//! needed. Expected outcome (the paper's headline, c3): CADA reaches the
+//! same loss with a small fraction of Adam's communication uploads.
+//!
+//! Every method is one `Algorithm` implementation; the round lifecycle
+//! (`broadcast → local_step → aggregate → server_update`) and everything
+//! else — the loop, eval cadence, RNG forking, comm accounting — live in
+//! the one generic `Trainer` built below.
 
-use cada::config::{AlgoConfig, Schedule};
-use cada::exp::Experiment;
-use cada::runtime::{Engine, Manifest};
-use cada::telemetry::render_table;
+use cada::prelude::*;
+use cada::telemetry::{render_table, SummaryRow};
 
 fn main() -> anyhow::Result<()> {
     let args = cada::cli::Args::from_env()?;
     let iters = args.usize_or("iters", 400)?;
-    let runs = args.u64_or("runs", 1)? as u32;
+    let workers = args.usize_or("workers", 10)?;
+    let c = args.f32_or("c", 0.6)?;
     args.reject_unknown()?;
 
-    println!("== CADA quickstart: logreg (ijcnn1-like), M=10 workers ==");
-    let manifest = Manifest::load("artifacts")?;
-    let mut engine = Engine::new(&manifest, "logreg_ijcnn")?;
-    let init = engine.init_theta()?;
+    println!("== CADA quickstart: logreg (ijcnn1-like), M={workers} \
+              workers ==");
+    let spec = SpecEntry::builtin_logreg("logreg_ijcnn")?;
+    let mut compute =
+        cada::runtime::native::NativeLogReg::for_spec(spec.feature_dim(),
+                                                      spec.p_pad);
 
-    let mut cfg = cada::config::fig3_ijcnn();
-    cfg.iters = iters;
-    cfg.runs = runs;
-    cfg.n = 8_000;
-    cfg.eval_every = 20;
-    cfg.algos = vec![
-        AlgoConfig::Adam { alpha: Schedule::Constant(0.01) },
-        AlgoConfig::Cada1 {
-            alpha: Schedule::Constant(0.01),
-            c: 0.6,
-            d_max: 10,
+    // one workload, shared by every method
+    let data = cada::data::synthetic::ijcnn_like(8_000, 3);
+    let mut rng = Rng::new(4);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, workers, &mut rng);
+    let eval =
+        data.gather(&rng.sample_indices(data.len(), spec.eval_batch.min(
+            data.len())));
+
+    let amsgrad = || Optimizer::Amsgrad {
+        alpha: Schedule::Constant(0.01),
+        beta1: spec.beta1,
+        beta2: spec.beta2,
+        eps: spec.eps,
+        use_artifact: false,
+    };
+    let mut methods: Vec<(&str, Box<dyn Algorithm>)> = vec![
+        ("adam", Box::new(Cada::new(CadaCfg {
+            rule: RuleKind::Always,
+            opt: amsgrad(),
+            max_delay: u32::MAX,
+            snapshot_every: 0,
+            d_max: 1,
+            use_artifact_innov: false,
+        }))),
+        ("cada1", Box::new(Cada::new(CadaCfg {
+            rule: RuleKind::Cada1 { c },
+            opt: amsgrad(),
             max_delay: 100,
-        },
-        AlgoConfig::Cada2 {
-            alpha: Schedule::Constant(0.01),
-            c: 0.6,
+            snapshot_every: 0,
             d_max: 10,
+            use_artifact_innov: false,
+        }))),
+        ("cada2", Box::new(Cada::new(CadaCfg {
+            rule: RuleKind::Cada2 { c },
+            opt: amsgrad(),
             max_delay: 100,
-        },
+            snapshot_every: 0,
+            d_max: 10,
+            use_artifact_innov: false,
+        }))),
     ];
 
-    let exp = Experiment::new(cfg.clone(), engine.spec.clone())?;
-    let results = exp.run_all(&mut engine, &init)?;
-    let rows = exp.summarize(&results);
-    print!("{}", render_table(&cfg.name, cfg.target_loss, &rows));
+    // fig3's paper target loss: "reached" below means what it means in
+    // exp::summarize — first curve point at or under this loss
+    let target_loss = 0.18;
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    let mut uploads = Vec::new();
+    for (label, algo) in &mut methods {
+        // the single entry point for every training method
+        let mut trainer = Trainer::builder()
+            .algorithm(algo.as_mut())
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval.clone())
+            .init_theta(vec![0.0; spec.p_pad])
+            .iters(iters)
+            .eval_every(20)
+            .batch(spec.batch)
+            .upload_bytes(spec.upload_bytes())
+            .cost_model(CostModel::default())
+            .seed(2021)
+            .label(*label)
+            .build()?;
+        let curve = trainer.run(0, &mut compute)?;
+        let last = curve.points.last().expect("curve has points");
+        let reach = curve.first_reach(target_loss);
+        rows.push(SummaryRow {
+            algo: label.to_string(),
+            reached: reach.is_some(),
+            iters: reach.map(|p| p.iter).unwrap_or(0),
+            uploads: reach.map(|p| p.uploads).unwrap_or(0),
+            grad_evals: last.grad_evals,
+            final_loss: curve.final_loss(),
+            final_acc: last.accuracy,
+            comm_stats: Some(trainer.comm.clone()),
+        });
+        uploads.push(trainer.comm.uploads);
+        curves.push(curve);
+    }
+    print!("{}", render_table("quickstart", target_loss, &rows));
 
     // the headline ratio
-    let ups = |name: &str| {
-        results
-            .iter()
-            .find(|r| r.algo == name)
-            .map(|r| r.mean_curve.points.last().unwrap().uploads)
-            .unwrap_or(0)
-    };
-    let (adam, cada2) = (ups("adam"), ups("cada2"));
+    let (adam, cada2) = (uploads[0], uploads[2]);
     if adam > 0 && cada2 > 0 {
         println!(
             "\nCADA2 used {cada2} uploads vs Adam's {adam} \
@@ -64,13 +121,7 @@ fn main() -> anyhow::Result<()> {
             100.0 * (1.0 - cada2 as f64 / adam as f64)
         );
     }
-    cada::telemetry::write_jsonl(
-        "results/quickstart.jsonl",
-        &results
-            .iter()
-            .flat_map(|r| r.curves.iter().cloned())
-            .collect::<Vec<_>>(),
-    )?;
+    cada::telemetry::write_jsonl("results/quickstart.jsonl", &curves)?;
     println!("curves -> results/quickstart.jsonl");
     Ok(())
 }

@@ -5,21 +5,16 @@
 //! corpus. Logs the loss curve and upload savings; the run is recorded in
 //! EXPERIMENTS.md.
 //!
-//! Defaults use the budget-scaled ~0.83M-param spec (`transformer_sm`).
-//! The 2.7M-param `transformer_lm` spec is one flag away:
+//! Requires the `pjrt` cargo feature plus `make artifacts` (transformer
+//! grads have no native fallback). Defaults use the budget-scaled
+//! ~0.83M-param spec (`transformer_sm`); the 2.7M-param `transformer_lm`
+//! spec is one flag away:
 //!
-//!   cargo run --release --example transformer_e2e -- \
+//!   cargo run --release --features pjrt --example transformer_e2e -- \
 //!       --spec transformer_lm --iters 200
 
-use cada::comm::CostModel;
-use cada::config::Schedule;
-use cada::coordinator::rules::RuleKind;
-use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
-use cada::coordinator::server::Optimizer;
-use cada::data::{Partition, PartitionScheme};
 use cada::exp::make_dataset;
-use cada::runtime::{Engine, Manifest};
-use cada::util::rng::Rng;
+use cada::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let args = cada::cli::Args::from_env()?;
@@ -55,35 +50,41 @@ fn main() -> anyhow::Result<()> {
     let mut curves = Vec::new();
     for rule in [RuleKind::Always, RuleKind::Cada2 { c }] {
         let name = if rule == RuleKind::Always { "adam" } else { "cada2" };
-        let cfg = LoopCfg {
-            iters,
-            eval_every: (iters / 15).max(1),
+        let mut algo = Cada::new(CadaCfg {
             rule,
+            opt: Optimizer::Amsgrad {
+                alpha: Schedule::Constant(alpha),
+                beta1: spec.beta1,
+                beta2: spec.beta2,
+                eps: spec.eps,
+                use_artifact: true, // the Pallas kernel on the hot path
+            },
             max_delay: 50,
             snapshot_every: 0,
             d_max: 10,
-            batch: spec.batch,
-            use_artifact_update: true, // the Pallas kernel on the hot path
             use_artifact_innov: false,
-            cost_model: CostModel::default(),
-            trace_cap: 0,
-            upload_bytes: spec.upload_bytes(),
-        };
-        let opt = Optimizer::Amsgrad {
-            alpha: Schedule::Constant(alpha),
-            beta1: spec.beta1,
-            beta2: spec.beta2,
-            eps: spec.eps,
-            use_artifact: true,
-        };
-        let mut lp = ServerLoop::new(cfg, init.clone(), opt, &data,
-                                     &partition, eval.clone(), 99);
+        });
+        let eval_every = (iters / 15).max(1);
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval.clone())
+            .init_theta(init.clone())
+            .iters(iters)
+            .eval_every(eval_every)
+            .batch(spec.batch)
+            .upload_bytes(spec.upload_bytes())
+            .cost_model(CostModel::default())
+            .seed(99)
+            .label(name)
+            .build()?;
         println!("\n--- {name} ---");
         println!("{:>6} {:>10} {:>10} {:>10} {:>9}",
                  "iter", "loss", "tok-acc", "uploads", "wall s");
         let t0 = std::time::Instant::now();
         let mut curve = cada::telemetry::Curve::new(name, 0);
-        let (l0, a0) = lp.evaluate(&mut engine)?;
+        let (l0, a0) = trainer.evaluate(&mut engine)?;
         println!("{:>6} {:>10.4} {:>10.4} {:>10} {:>9.1}", 0, l0, a0, 0,
                  t0.elapsed().as_secs_f64());
         curve.points.push(cada::telemetry::CurvePoint {
@@ -91,21 +92,21 @@ fn main() -> anyhow::Result<()> {
             sim_time_s: 0.0, wall_s: 0.0,
         });
         for k in 0..iters as u64 {
-            lp.step(k, &mut engine)?;
-            if (k + 1) % lp.cfg.eval_every as u64 == 0 {
-                let (l, a) = lp.evaluate(&mut engine)?;
+            trainer.step(k, &mut engine)?;
+            if (k + 1) % eval_every as u64 == 0 {
+                let (l, a) = trainer.evaluate(&mut engine)?;
                 println!(
                     "{:>6} {:>10.4} {:>10.4} {:>10} {:>9.1}",
-                    k + 1, l, a, lp.comm.uploads,
+                    k + 1, l, a, trainer.comm.uploads,
                     t0.elapsed().as_secs_f64()
                 );
                 curve.points.push(cada::telemetry::CurvePoint {
                     iter: k + 1,
                     loss: l,
                     accuracy: a,
-                    uploads: lp.comm.uploads,
-                    grad_evals: lp.comm.grad_evals,
-                    sim_time_s: lp.comm.sim_time_s,
+                    uploads: trainer.comm.uploads,
+                    grad_evals: trainer.comm.grad_evals,
+                    sim_time_s: trainer.comm.sim_time_s,
                     wall_s: t0.elapsed().as_secs_f64(),
                 });
             }
@@ -114,9 +115,9 @@ fn main() -> anyhow::Result<()> {
             "{name}: final loss {:.4}, uploads {} / {} possible, \
              simulated comm time {:.1}s",
             curve.final_loss(),
-            lp.comm.uploads,
+            trainer.comm.uploads,
             iters * workers,
-            lp.comm.sim_time_s
+            trainer.comm.sim_time_s
         );
         curves.push(curve);
     }

@@ -3,19 +3,20 @@
 //! * native tensor kernels (rule LHS, fused AMSGrad step) at every p_pad
 //!   in the artifact set — the L3 per-iteration cost;
 //! * PJRT artifact execution (grad / update / innov) — the L1/L2 cost and
-//!   the native-vs-artifact ablation for the update and innovation paths;
-//! * one full scheduler iteration on the tiny spec — the end-to-end
-//!   per-round overhead of the coordinator.
+//!   the native-vs-artifact ablation for the update and innovation paths
+//!   (skipped gracefully without artifacts / the `pjrt` feature);
+//! * one full Trainer round on the tiny spec — the end-to-end per-round
+//!   overhead of the unified coordinator.
 
+use cada::algorithms::{Cada, CadaCfg, Trainer};
 use cada::bench::{black_box, Runner};
 use cada::comm::CostModel;
 use cada::config::Schedule;
 use cada::coordinator::rules::RuleKind;
-use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
 use cada::coordinator::server::Optimizer;
 use cada::data::{Dataset, Partition, PartitionScheme};
 use cada::runtime::native::NativeLogReg;
-use cada::runtime::{Compute, Engine, Manifest};
+use cada::runtime::{Compute, Engine, Manifest, SpecEntry};
 use cada::tensor;
 use cada::util::rng::Rng;
 
@@ -50,17 +51,9 @@ fn main() {
         });
     }
 
-    // ---------------- PJRT artifact paths (L1/L2) ----------------------
-    let manifest = match Manifest::load("artifacts") {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("skipping PJRT benches: {e}");
-            return;
-        }
-    };
-    r.header("PJRT artifact execution (test_logreg, p_pad=1024)");
-    let mut eng = Engine::new(&manifest, "test_logreg").unwrap();
-    let spec = eng.spec.clone();
+    // shared tiny-logreg workload (spec geometry matches test_logreg)
+    let spec = SpecEntry::builtin_logreg("test_logreg")
+        .expect("builtin test spec");
     let p = spec.p_pad;
     let theta = randv(p, 7);
     let mut grad = vec![0.0f32; p];
@@ -81,116 +74,150 @@ fn main() {
         Dataset::Labeled { x, sample_shape: vec![8], y }
     };
     let batch = data.gather(&(0..spec.batch).collect::<Vec<_>>());
-    r.bench("pjrt grad exec    (b=16, p=1024)", || {
-        black_box(eng.grad(&theta, &batch, &mut grad).unwrap());
-    });
-    let mut th = theta.clone();
-    let mut h = vec![0.0f32; p];
-    let mut vh = vec![0.0f32; p];
-    r.bench("pjrt pallas update (p=1024)", || {
-        eng.update(&mut th, &mut h, &mut vh, &grad, 1e-4).unwrap();
-    });
-    let g2 = randv(p, 9);
-    r.bench("pjrt pallas innov  (p=1024)", || {
-        black_box(eng.innov(&theta, &g2).unwrap());
-    });
-    r.bench("native innov       (p=1024)  [ablation]", || {
-        black_box(tensor::sqnorm_diff(&theta, &g2));
-    });
 
-    // larger-spec update ablation: artifact call vs native loop
-    if let Ok(mut eng_big) = Engine::new(&manifest, "mlp_mnist") {
-        let pb = eng_big.spec.p_pad;
-        let mut thb = randv(pb, 10);
-        let mut hb = vec![0.0f32; pb];
-        let mut vb = vec![0.0f32; pb];
-        let gb = randv(pb, 11);
-        r.header("update ablation at p_pad=102400 (Pallas artifact vs native)");
-        r.bench("pjrt pallas update (p=102400)", || {
-            eng_big.update(&mut thb, &mut hb, &mut vb, &gb, 1e-4).unwrap();
+    // ---------------- PJRT artifact paths (L1/L2) ----------------------
+    let manifest = Manifest::load("artifacts");
+    let mut eng = match manifest
+        .as_ref()
+        .map_err(|e| e.to_string())
+        .and_then(|m| Engine::new(m, "test_logreg").map_err(|e| e.to_string()))
+    {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping PJRT benches: {e}");
+            None
+        }
+    };
+    if let Some(eng) = eng.as_mut() {
+        r.header("PJRT artifact execution (test_logreg, p_pad=1024)");
+        r.bench("pjrt grad exec    (b=16, p=1024)", || {
+            black_box(eng.grad(&theta, &batch, &mut grad).unwrap());
         });
-        let mut thn = randv(pb, 12);
-        let mut hn = vec![0.0f32; pb];
-        let mut vn = vec![0.0f32; pb];
-        r.bench("native update      (p=102400)", || {
-            tensor::amsgrad_update(&mut thn, &mut hn, &mut vn, &gb, 1e-4,
-                                   0.9, 0.999, 1e-8);
+        let mut th = theta.clone();
+        let mut h = vec![0.0f32; p];
+        let mut vh = vec![0.0f32; p];
+        r.bench("pjrt pallas update (p=1024)", || {
+            eng.update(&mut th, &mut h, &mut vh, &grad, 1e-4).unwrap();
         });
+        let g2 = randv(p, 9);
+        r.bench("pjrt pallas innov  (p=1024)", || {
+            black_box(eng.innov(&theta, &g2).unwrap());
+        });
+        r.bench("native innov       (p=1024)  [ablation]", || {
+            black_box(tensor::sqnorm_diff(&theta, &g2));
+        });
+
+        // larger-spec update ablation: artifact call vs native loop
+        if let Ok(mut eng_big) = manifest
+            .as_ref()
+            .map_err(|e| e.to_string())
+            .and_then(|m| {
+                Engine::new(m, "mlp_mnist").map_err(|e| e.to_string())
+            })
+        {
+            let pb = eng_big.spec.p_pad;
+            let mut thb = randv(pb, 10);
+            let mut hb = vec![0.0f32; pb];
+            let mut vb = vec![0.0f32; pb];
+            let gb = randv(pb, 11);
+            r.header(
+                "update ablation at p_pad=102400 (Pallas artifact vs native)",
+            );
+            r.bench("pjrt pallas update (p=102400)", || {
+                eng_big.update(&mut thb, &mut hb, &mut vb, &gb, 1e-4)
+                    .unwrap();
+            });
+            let mut thn = randv(pb, 12);
+            let mut hn = vec![0.0f32; pb];
+            let mut vn = vec![0.0f32; pb];
+            r.bench("native update      (p=102400)", || {
+                tensor::amsgrad_update(&mut thn, &mut hn, &mut vn, &gb,
+                                       1e-4, 0.9, 0.999, 1e-8);
+            });
+        }
     }
 
-    // ---------------- full coordinator round ---------------------------
-    r.header("full scheduler iteration (5 workers, tiny logreg)");
+    // ---------------- full Trainer round --------------------------------
+    r.header("full Trainer round (5 workers, tiny logreg)");
     let mut rng = Rng::new(13);
     let partition =
         Partition::build(PartitionScheme::Uniform, &data, 5, &mut rng);
     let eval = data.gather(&(0..64.min(data.len())).collect::<Vec<_>>());
+    let amsgrad = |beta1: f32, beta2: f32, eps: f32, use_artifact: bool| {
+        Optimizer::Amsgrad {
+            alpha: Schedule::Constant(0.01),
+            beta1,
+            beta2,
+            eps,
+            use_artifact,
+        }
+    };
     for (label, rule) in [
         ("round: adam (always upload)", RuleKind::Always),
         ("round: cada2 (adaptive)", RuleKind::Cada2 { c: 0.6 }),
     ] {
         let mut native = NativeLogReg::for_spec(8, p);
-        let cfg = LoopCfg {
-            iters: usize::MAX,
-            eval_every: usize::MAX,
+        let mut algo = Cada::new(CadaCfg {
             rule,
+            opt: amsgrad(0.9, 0.999, 1e-8, false),
             max_delay: 50,
             snapshot_every: 0,
             d_max: 10,
-            batch: spec.batch,
-            use_artifact_update: false,
             use_artifact_innov: false,
-            cost_model: CostModel::free(),
-            trace_cap: 0,
-            upload_bytes: spec.upload_bytes(),
-        };
-        let mut lp = ServerLoop::new(
-            cfg,
-            vec![0.0; p],
-            Optimizer::Amsgrad {
-                alpha: Schedule::Constant(0.01),
-                beta1: 0.9, beta2: 0.999, eps: 1e-8,
-                use_artifact: false,
-            },
-            &data, &partition, eval.clone(), 3);
+        });
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval.clone())
+            .init_theta(vec![0.0; p])
+            .iters(usize::MAX)
+            .batch(spec.batch)
+            .upload_bytes(spec.upload_bytes())
+            .cost_model(CostModel::free())
+            .seed(3)
+            .build()
+            .expect("trainer build");
         let mut k = 0u64;
         r.bench(&format!("{label} [native backend]"), || {
-            lp.step(k, &mut native).unwrap();
+            trainer.step(k, &mut native).unwrap();
             k += 1;
         });
     }
     // same rounds on the PJRT backend
-    for (label, rule) in [
-        ("round: adam (always upload)", RuleKind::Always),
-        ("round: cada2 (adaptive)", RuleKind::Cada2 { c: 0.6 }),
-    ] {
-        let cfg = LoopCfg {
-            iters: usize::MAX,
-            eval_every: usize::MAX,
-            rule,
-            max_delay: 50,
-            snapshot_every: 0,
-            d_max: 10,
-            batch: spec.batch,
-            use_artifact_update: true,
-            use_artifact_innov: false,
-            cost_model: CostModel::free(),
-            trace_cap: 0,
-            upload_bytes: spec.upload_bytes(),
-        };
-        let mut lp = ServerLoop::new(
-            cfg,
-            vec![0.0; p],
-            Optimizer::Amsgrad {
-                alpha: Schedule::Constant(0.01),
-                beta1: spec.beta1, beta2: spec.beta2, eps: spec.eps,
-                use_artifact: true,
-            },
-            &data, &partition, eval.clone(), 3);
-        let mut k = 0u64;
-        r.bench(&format!("{label} [pjrt backend]"), || {
-            lp.step(k, &mut eng).unwrap();
-            k += 1;
-        });
+    if let Some(eng) = eng.as_mut() {
+        for (label, rule) in [
+            ("round: adam (always upload)", RuleKind::Always),
+            ("round: cada2 (adaptive)", RuleKind::Cada2 { c: 0.6 }),
+        ] {
+            let mut algo = Cada::new(CadaCfg {
+                rule,
+                opt: amsgrad(eng.spec.beta1, eng.spec.beta2, eng.spec.eps,
+                             true),
+                max_delay: 50,
+                snapshot_every: 0,
+                d_max: 10,
+                use_artifact_innov: false,
+            });
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval.clone())
+                .init_theta(vec![0.0; p])
+                .iters(usize::MAX)
+                .batch(spec.batch)
+                .upload_bytes(spec.upload_bytes())
+                .cost_model(CostModel::free())
+                .seed(3)
+                .build()
+                .expect("trainer build");
+            let mut k = 0u64;
+            r.bench(&format!("{label} [pjrt backend]"), || {
+                trainer.step(k, eng).unwrap();
+                k += 1;
+            });
+        }
     }
     println!("\nmicro_hotpath done ({} benchmarks)", r.results.len());
 }

@@ -1,0 +1,369 @@
+//! The server-centric family as one [`Algorithm`]: CADA1/2, stochastic
+//! LAG, and distributed Adam/SGD (rules `Always`/`Periodic`/`Never`),
+//! selected via [`RuleKind`] — Algorithm 1 of the paper mapped onto the
+//! `broadcast → local_step → aggregate → server_update` lifecycle.
+//!
+//! * `broadcast` — refresh the CADA1 snapshot every D iterations, count
+//!   the theta^k broadcast, and freeze this round's drift threshold RHS.
+//! * `local_step` — lines 5–14: each worker evaluates its rule LHS
+//!   against the frozen RHS and decides whether to upload.
+//! * `aggregate` — Eq. 3: fold the uploaded innovations delta_m/M into
+//!   the server aggregate, in worker order.
+//! * `server_update` — Eq. 2 (AMSGrad) or Eq. 4 (SGD), then push the
+//!   squared step norm into the drift history ring.
+
+use super::{Algorithm, AlgorithmKind, RoundCtx};
+use crate::comm::RoundEvent;
+use crate::coordinator::history::DeltaHistory;
+use crate::coordinator::rules::RuleKind;
+use crate::coordinator::server::{Optimizer, ServerState};
+use crate::coordinator::worker::WorkerState;
+use crate::data::Batch;
+use crate::runtime::Compute;
+
+/// Static configuration of the server-centric family.
+#[derive(Clone, Debug)]
+pub struct CadaCfg {
+    pub rule: RuleKind,
+    /// the server step (AMSGrad for CADA/Adam, SGD for LAG)
+    pub opt: Optimizer,
+    /// D: max staleness AND (by default) the CADA1 snapshot refresh period
+    pub max_delay: u32,
+    /// CADA1 snapshot refresh period; 0 means "use max_delay" (the paper
+    /// uses one constant D for both roles — this knob exists for ablations
+    /// that disable the delay cap without freezing the snapshot)
+    pub snapshot_every: u32,
+    /// d_max: depth of the drift history ring
+    pub d_max: usize,
+    /// route innovation norms through the Pallas artifact
+    pub use_artifact_innov: bool,
+}
+
+impl CadaCfg {
+    /// Paper-default knobs (D = 50, d_max = 10, native innovation norms).
+    pub fn basic(rule: RuleKind, opt: Optimizer) -> Self {
+        CadaCfg {
+            rule,
+            opt,
+            max_delay: 50,
+            snapshot_every: 0,
+            d_max: 10,
+            use_artifact_innov: false,
+        }
+    }
+}
+
+/// Server-centric training state (parameter server + M rule-checking
+/// workers). All state is allocated in [`Algorithm::init`].
+pub struct Cada {
+    pub cfg: CadaCfg,
+    pub server: ServerState,
+    pub workers: Vec<WorkerState>,
+    pub history: DeltaHistory,
+    /// CADA1 snapshot theta-tilde (refreshed every D iterations)
+    snapshot: Vec<f32>,
+    /// this round's frozen drift threshold
+    rhs: f64,
+    /// workers that decided to upload this round (|M^k| = uploaded.len())
+    uploaded: Vec<usize>,
+    lhs_sum: f64,
+    lhs_count: usize,
+}
+
+impl Cada {
+    pub fn new(cfg: CadaCfg) -> Self {
+        let opt = cfg.opt.clone();
+        Cada {
+            server: ServerState::new(Vec::new(), 1, opt),
+            workers: Vec::new(),
+            history: DeltaHistory::new(cfg.d_max.max(1)),
+            snapshot: Vec::new(),
+            rhs: 0.0,
+            uploaded: Vec::new(),
+            lhs_sum: 0.0,
+            lhs_count: 0,
+            cfg,
+        }
+    }
+
+    /// Upload count of the round most recently completed.
+    pub fn last_round_uploads(&self) -> usize {
+        self.uploaded.len()
+    }
+}
+
+impl Algorithm for Cada {
+    fn name(&self) -> &'static str {
+        self.cfg.rule.name()
+    }
+
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::ServerCentric
+    }
+
+    fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.cfg.d_max >= 1, "d_max must be >= 1");
+        let p = init_theta.len();
+        self.server =
+            ServerState::new(init_theta.to_vec(), m, self.cfg.opt.clone());
+        self.workers = (0..m)
+            .map(|w| WorkerState::new(w, p, self.cfg.rule))
+            .collect();
+        self.history = DeltaHistory::new(self.cfg.d_max);
+        self.snapshot = init_theta.to_vec();
+        Ok(())
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.server.theta
+    }
+
+    fn broadcast(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        // Algorithm 1 line 4: refresh the CADA1 snapshot every D iterations
+        let snap_period = if self.cfg.snapshot_every > 0 {
+            self.cfg.snapshot_every
+        } else {
+            self.cfg.max_delay
+        };
+        if self.cfg.rule.needs_snapshot()
+            && ctx.k % snap_period as u64 == 0
+        {
+            self.snapshot.copy_from_slice(&self.server.theta);
+        }
+        // line 3: broadcast theta^k (counted once per worker)
+        ctx.comm
+            .record_broadcast(ctx.m, ctx.upload_bytes, ctx.cost_model);
+        // freeze this round's threshold: every worker compares against the
+        // same RHS even though the history mutates only at round end
+        self.rhs = self.history.rhs(self.cfg.rule.c());
+        self.uploaded.clear();
+        self.lhs_sum = 0.0;
+        self.lhs_count = 0;
+        Ok(())
+    }
+
+    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
+                  compute: &mut dyn Compute) -> anyhow::Result<()> {
+        let snapshot = self
+            .cfg
+            .rule
+            .needs_snapshot()
+            .then_some(self.snapshot.as_slice());
+        let step = self.workers[w].step(
+            ctx.k,
+            self.cfg.rule,
+            self.cfg.max_delay,
+            &self.server.theta,
+            snapshot,
+            self.rhs,
+            batch,
+            compute,
+            self.cfg.use_artifact_innov,
+        )?;
+        ctx.comm.record_grad_evals(step.grad_evals);
+        if step.lhs.is_finite() {
+            self.lhs_sum += step.lhs;
+            self.lhs_count += 1;
+        }
+        if step.decision.upload {
+            self.uploaded.push(w);
+        }
+        Ok(())
+    }
+
+    fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        // Eq. 3, in worker order (float-identical to folding inline)
+        for &w in &self.uploaded {
+            self.server.apply_innovation(self.workers[w].last_delta());
+            ctx.comm.record_upload(ctx.upload_bytes, ctx.cost_model);
+        }
+        Ok(())
+    }
+
+    fn server_update(&mut self, ctx: &mut RoundCtx,
+                     compute: &mut dyn Compute) -> anyhow::Result<()> {
+        let sq_step = self.server.step(ctx.k, compute)?;
+        self.history.push(sq_step);
+        Ok(())
+    }
+
+    fn round_event(&self, k: u64) -> Option<RoundEvent> {
+        Some(RoundEvent {
+            iter: k,
+            uploaded: self.uploaded.clone(),
+            staleness: self.workers.iter().map(|w| w.tau).collect(),
+            mean_lhs: if self.lhs_count > 0 {
+                self.lhs_sum / self.lhs_count as f64
+            } else {
+                f64::NAN
+            },
+            rhs: self.rhs,
+        })
+    }
+
+    fn max_staleness(&self) -> u32 {
+        self.workers.iter().map(|w| w.tau).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Trainer;
+    use crate::config::Schedule;
+    use crate::data::{synthetic, Dataset, Partition, PartitionScheme};
+    use crate::runtime::native::NativeLogReg;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (NativeLogReg, Dataset, Partition) {
+        let compute = NativeLogReg::for_spec(22, 1024);
+        let data = synthetic::ijcnn_like(800, 9);
+        let mut rng = Rng::new(10);
+        let partition =
+            Partition::build(PartitionScheme::Uniform, &data, 5, &mut rng);
+        (compute, data, partition)
+    }
+
+    fn amsgrad(alpha: f32) -> Optimizer {
+        Optimizer::Amsgrad {
+            alpha: Schedule::Constant(alpha),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            use_artifact: false,
+        }
+    }
+
+    #[test]
+    fn adam_always_uploads_m_per_iter() {
+        let (mut compute, data, partition) = setup();
+        let eval = data.gather(&(0..64).collect::<Vec<_>>());
+        let mut algo = Cada::new(CadaCfg::basic(RuleKind::Always,
+                                                amsgrad(0.01)));
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval)
+            .init_theta(vec![0.0; 1024])
+            .iters(20)
+            .eval_every(5)
+            .seed(7)
+            .build()
+            .unwrap();
+        let curve = trainer.run(0, &mut compute).unwrap();
+        assert_eq!(trainer.comm.uploads, 20 * 5);
+        assert_eq!(trainer.comm.grad_evals, 20 * 5);
+        assert!(curve.final_loss() < curve.points[0].loss,
+                "loss should decrease: {curve:?}");
+    }
+
+    #[test]
+    fn cada2_saves_uploads_and_still_descends() {
+        let (mut compute, data, partition) = setup();
+        let eval = data.gather(&(0..64).collect::<Vec<_>>());
+        let iters = 60;
+        let run = |rule: RuleKind, compute: &mut NativeLogReg| {
+            let mut cfg = CadaCfg::basic(rule, amsgrad(0.02));
+            cfg.max_delay = 20;
+            let mut algo = Cada::new(cfg);
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval.clone())
+                .init_theta(vec![0.0; 1024])
+                .iters(iters)
+                .seed(7)
+                .build()
+                .unwrap();
+            let curve = trainer.run(0, compute).unwrap();
+            (trainer.comm.uploads, curve.final_loss())
+        };
+        let (adam_up, adam_loss) = run(RuleKind::Always, &mut compute);
+        let (cada_up, cada_loss) =
+            run(RuleKind::Cada2 { c: 1.2 }, &mut compute);
+        assert!(cada_up < adam_up, "cada {cada_up} vs adam {adam_up}");
+        assert!(cada_loss < adam_loss * 1.5 + 0.1,
+                "cada loss {cada_loss} vs adam {adam_loss}");
+    }
+
+    #[test]
+    fn staleness_never_exceeds_max_delay() {
+        let (mut compute, data, partition) = setup();
+        let eval = data.gather(&(0..32).collect::<Vec<_>>());
+        let mut cfg = CadaCfg::basic(RuleKind::Never, amsgrad(0.01));
+        cfg.max_delay = 4;
+        let mut algo = Cada::new(cfg);
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval)
+            .init_theta(vec![0.0; 1024])
+            .iters(30)
+            .batch(8)
+            .seed(3)
+            .build()
+            .unwrap();
+        for k in 0..30 {
+            trainer.step(k, &mut compute).unwrap();
+            assert!(trainer.max_staleness() <= 4);
+        }
+    }
+
+    #[test]
+    fn cada_c0_equals_distributed_amsgrad() {
+        // c = 0 zeroes the RHS, so any nonzero innovation uploads: CADA
+        // degenerates to distributed AMSGrad and must produce (nearly)
+        // identical iterates given identical worker RNG streams.
+        let (mut compute, data, partition) = setup();
+        let eval = data.gather(&(0..32).collect::<Vec<_>>());
+        let iters = 25;
+        let run_theta = |rule: RuleKind, compute: &mut NativeLogReg| {
+            let mut algo = Cada::new(CadaCfg::basic(rule, amsgrad(0.01)));
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval.clone())
+                .init_theta(vec![0.0; 1024])
+                .iters(iters)
+                .seed(42)
+                .build()
+                .unwrap();
+            trainer.run(0, compute).unwrap();
+            drop(trainer);
+            algo.server.theta
+        };
+        let adam = run_theta(RuleKind::Always, &mut compute);
+        let cada = run_theta(RuleKind::Cada2 { c: 0.0 }, &mut compute);
+        let diff = crate::tensor::sqnorm_diff(&adam, &cada);
+        assert!(diff < 1e-8, "divergence {diff}");
+    }
+
+    #[test]
+    fn trace_records_upload_sets() {
+        let (mut compute, data, partition) = setup();
+        let eval = data.gather(&(0..32).collect::<Vec<_>>());
+        let mut algo = Cada::new(CadaCfg::basic(RuleKind::Always,
+                                                amsgrad(0.01)));
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval)
+            .init_theta(vec![0.0; 1024])
+            .iters(5)
+            .batch(8)
+            .trace_cap(10)
+            .seed(3)
+            .build()
+            .unwrap();
+        for k in 0..5 {
+            trainer.step(k, &mut compute).unwrap();
+        }
+        assert_eq!(trainer.trace.events.len(), 5);
+        assert!(trainer.trace.iter().all(|e| e.uploaded.len() == 5));
+    }
+}

@@ -1,0 +1,429 @@
+//! Local-update baselines as [`Algorithm`]s: local momentum SGD
+//! [Yu et al. 2019], FedAvg [McMahan et al. 2017] and FedAdam
+//! [Reddi et al. 2020] — the paper's comparison methods where workers
+//! update a LOCAL model and communicate only at averaging rounds (every
+//! H iterations).
+//!
+//! Lifecycle mapping (see [`crate::algorithms`] docs): `broadcast` is a
+//! no-op (models were pushed down when the previous averaging round
+//! completed), `local_step` is one local SGD/momentum step, `aggregate`
+//! uploads and averages local models on rounds with `(k+1) % H == 0`,
+//! and `server_update` applies the server-side rule (identity for
+//! FedAvg/local momentum, Adam on the averaged pseudo-gradient for
+//! FedAdam) and broadcasts the new global model back down.
+
+use super::{Algorithm, AlgorithmKind, RoundCtx};
+use crate::data::Batch;
+use crate::runtime::Compute;
+use crate::tensor;
+
+/// Shared local-update machinery: the global model, per-worker local
+/// models, and the averaging-round plumbing.
+#[derive(Debug, Default)]
+struct LocalModels {
+    /// averaging period H
+    h: u32,
+    /// global (server) model
+    theta: Vec<f32>,
+    /// per-worker local models
+    thetas: Vec<Vec<f32>>,
+    /// gradient scratch (allocation-free hot path)
+    grad: Vec<f32>,
+}
+
+impl LocalModels {
+    fn new(h: u32) -> Self {
+        LocalModels { h, ..Default::default() }
+    }
+
+    fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.h >= 1, "averaging period H must be >= 1");
+        self.theta = init_theta.to_vec();
+        self.thetas = vec![init_theta.to_vec(); m];
+        self.grad = vec![0.0; init_theta.len()];
+        Ok(())
+    }
+
+    /// Does round `k` end with an averaging round?
+    fn averaging_round(&self, k: u64) -> bool {
+        (k + 1) % self.h as u64 == 0
+    }
+
+    /// All M workers upload their local model.
+    fn record_uploads(&self, ctx: &mut RoundCtx) {
+        for _ in 0..ctx.m {
+            ctx.comm.record_upload(ctx.upload_bytes, ctx.cost_model);
+        }
+    }
+
+    /// Mean of the local models, written into `dst`.
+    fn mean_local_into(dst: &mut [f32], thetas: &[Vec<f32>]) {
+        let parts: Vec<&[f32]> =
+            thetas.iter().map(|t| t.as_slice()).collect();
+        tensor::mean_into(dst, &parts);
+    }
+
+    /// Broadcast the global model back to every worker.
+    fn push_down(&mut self, ctx: &mut RoundCtx) {
+        ctx.comm
+            .record_broadcast(ctx.m, ctx.upload_bytes, ctx.cost_model);
+        for t in &mut self.thetas {
+            t.copy_from_slice(&self.theta);
+        }
+    }
+}
+
+/// FedAvg / local SGD: parameter averaging only.
+pub struct FedAvg {
+    pub eta: f32,
+    models: LocalModels,
+}
+
+impl FedAvg {
+    pub fn new(eta: f32, h: u32) -> Self {
+        FedAvg { eta, models: LocalModels::new(h) }
+    }
+}
+
+impl Algorithm for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::LocalUpdate
+    }
+
+    fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()> {
+        self.models.init(init_theta, m)
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.models.theta
+    }
+
+    fn broadcast(&mut self, _ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
+                  compute: &mut dyn Compute) -> anyhow::Result<()> {
+        compute.grad(&self.models.thetas[w], batch, &mut self.models.grad)?;
+        ctx.comm.record_grad_evals(1);
+        tensor::sgd_update(&mut self.models.thetas[w], &self.models.grad,
+                           self.eta);
+        Ok(())
+    }
+
+    fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        if self.models.averaging_round(ctx.k) {
+            self.models.record_uploads(ctx);
+            LocalModels::mean_local_into(&mut self.models.theta,
+                                         &self.models.thetas);
+        }
+        Ok(())
+    }
+
+    fn server_update(&mut self, ctx: &mut RoundCtx,
+                     _compute: &mut dyn Compute) -> anyhow::Result<()> {
+        if self.models.averaging_round(ctx.k) {
+            self.models.push_down(ctx);
+        }
+        Ok(())
+    }
+}
+
+/// Local momentum SGD; parameters AND momentum buffers are averaged at
+/// each communication round (blockwise model averaging).
+pub struct LocalMomentum {
+    pub eta: f32,
+    pub beta: f32,
+    models: LocalModels,
+    /// per-worker momentum buffers
+    momenta: Vec<Vec<f32>>,
+    mom_avg: Vec<f32>,
+}
+
+impl LocalMomentum {
+    pub fn new(eta: f32, beta: f32, h: u32) -> Self {
+        LocalMomentum {
+            eta,
+            beta,
+            models: LocalModels::new(h),
+            momenta: Vec::new(),
+            mom_avg: Vec::new(),
+        }
+    }
+}
+
+impl Algorithm for LocalMomentum {
+    fn name(&self) -> &'static str {
+        "local_momentum"
+    }
+
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::LocalUpdate
+    }
+
+    fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()> {
+        self.models.init(init_theta, m)?;
+        self.momenta = vec![vec![0.0; init_theta.len()]; m];
+        self.mom_avg = vec![0.0; init_theta.len()];
+        Ok(())
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.models.theta
+    }
+
+    fn broadcast(&mut self, _ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
+                  compute: &mut dyn Compute) -> anyhow::Result<()> {
+        compute.grad(&self.models.thetas[w], batch, &mut self.models.grad)?;
+        ctx.comm.record_grad_evals(1);
+        tensor::momentum_update(&mut self.models.thetas[w],
+                                &mut self.momenta[w], &self.models.grad,
+                                self.eta, self.beta);
+        Ok(())
+    }
+
+    fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        if self.models.averaging_round(ctx.k) {
+            self.models.record_uploads(ctx);
+            LocalModels::mean_local_into(&mut self.models.theta,
+                                         &self.models.thetas);
+            // average the momentum buffers as well
+            let mparts: Vec<&[f32]> =
+                self.momenta.iter().map(|u| u.as_slice()).collect();
+            tensor::mean_into(&mut self.mom_avg, &mparts);
+            for u in &mut self.momenta {
+                u.copy_from_slice(&self.mom_avg);
+            }
+        }
+        Ok(())
+    }
+
+    fn server_update(&mut self, ctx: &mut RoundCtx,
+                     _compute: &mut dyn Compute) -> anyhow::Result<()> {
+        if self.models.averaging_round(ctx.k) {
+            self.models.push_down(ctx);
+        }
+        Ok(())
+    }
+}
+
+/// FedAdam hyperparameters (Reddi et al., the FedOpt server rule).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FedAdamCfg {
+    pub alpha_local: f32,
+    pub alpha_server: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// averaging period H
+    pub h: u32,
+}
+
+/// FedAdam: local SGD; the server applies Adam to the averaged model
+/// delta every H iterations.
+pub struct FedAdam {
+    pub cfg: FedAdamCfg,
+    models: LocalModels,
+    /// server first/second moments over the pseudo-gradient
+    m1: Vec<f32>,
+    m2: Vec<f32>,
+    /// scratch: this averaging round's mean local model
+    avg: Vec<f32>,
+}
+
+impl FedAdam {
+    pub fn new(cfg: FedAdamCfg) -> Self {
+        FedAdam {
+            models: LocalModels::new(cfg.h),
+            m1: Vec::new(),
+            m2: Vec::new(),
+            avg: Vec::new(),
+            cfg,
+        }
+    }
+}
+
+impl Algorithm for FedAdam {
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::LocalUpdate
+    }
+
+    fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()> {
+        self.models.init(init_theta, m)?;
+        self.m1 = vec![0.0; init_theta.len()];
+        self.m2 = vec![0.0; init_theta.len()];
+        self.avg = vec![0.0; init_theta.len()];
+        Ok(())
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.models.theta
+    }
+
+    fn broadcast(&mut self, _ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
+                  compute: &mut dyn Compute) -> anyhow::Result<()> {
+        compute.grad(&self.models.thetas[w], batch, &mut self.models.grad)?;
+        ctx.comm.record_grad_evals(1);
+        tensor::sgd_update(&mut self.models.thetas[w], &self.models.grad,
+                           self.cfg.alpha_local);
+        Ok(())
+    }
+
+    fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        if self.models.averaging_round(ctx.k) {
+            self.models.record_uploads(ctx);
+            LocalModels::mean_local_into(&mut self.avg, &self.models.thetas);
+        }
+        Ok(())
+    }
+
+    fn server_update(&mut self, ctx: &mut RoundCtx,
+                     _compute: &mut dyn Compute) -> anyhow::Result<()> {
+        if self.models.averaging_round(ctx.k) {
+            // delta = mean_m(theta_m) - theta  (the pseudo-gradient)
+            let FedAdamCfg { alpha_server, beta1, beta2, eps, .. } = self.cfg;
+            let theta = &mut self.models.theta;
+            for i in 0..theta.len() {
+                let delta = self.avg[i] - theta[i];
+                self.m1[i] = beta1 * self.m1[i] + (1.0 - beta1) * delta;
+                self.m2[i] =
+                    beta2 * self.m2[i] + (1.0 - beta2) * delta * delta;
+                theta[i] +=
+                    alpha_server * self.m1[i] / (self.m2[i].sqrt() + eps);
+            }
+            self.models.push_down(ctx);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Trainer;
+    use crate::data::{synthetic, Dataset, Partition, PartitionScheme};
+    use crate::runtime::native::NativeLogReg;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (NativeLogReg, Dataset, Partition) {
+        let compute = NativeLogReg::for_spec(22, 1024);
+        let data = synthetic::ijcnn_like(600, 5);
+        let mut rng = Rng::new(11);
+        let partition =
+            Partition::build(PartitionScheme::Uniform, &data, 4, &mut rng);
+        (compute, data, partition)
+    }
+
+    fn train(algo: &mut dyn Algorithm, data: &Dataset,
+             partition: &Partition, iters: usize, h_seed: u64,
+             compute: &mut NativeLogReg) -> (crate::telemetry::Curve,
+                                             crate::comm::CommStats) {
+        let eval = data.gather(&(0..128).collect::<Vec<_>>());
+        let mut trainer = Trainer::builder()
+            .algorithm(algo)
+            .dataset(data)
+            .partition(partition)
+            .eval_batch(eval)
+            .init_theta(vec![0.0; 1024])
+            .iters(iters)
+            .eval_every(10)
+            .upload_bytes(92)
+            .seed(h_seed)
+            .build()
+            .unwrap();
+        let curve = trainer.run(0, compute).unwrap();
+        let comm = trainer.comm.clone();
+        (curve, comm)
+    }
+
+    #[test]
+    fn fedavg_uploads_every_h() {
+        let (mut compute, data, partition) = setup();
+        let mut algo = FedAvg::new(0.1, 5);
+        let (_, comm) = train(&mut algo, &data, &partition, 20, 1,
+                              &mut compute);
+        // 20 iters, H=5 -> 4 rounds x 4 workers
+        assert_eq!(comm.uploads, 16);
+        assert_eq!(comm.grad_evals, 80);
+        // broadcasts only on averaging rounds: 4 rounds x 4 workers
+        assert_eq!(comm.downloads, 16);
+    }
+
+    #[test]
+    fn methods_descend() {
+        let (mut compute, data, partition) = setup();
+        let mut algos: Vec<Box<dyn Algorithm>> = vec![
+            Box::new(FedAvg::new(0.1, 5)),
+            Box::new(LocalMomentum::new(0.05, 0.9, 5)),
+            Box::new(FedAdam::new(FedAdamCfg {
+                alpha_local: 0.1,
+                alpha_server: 0.1,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                h: 5,
+            })),
+        ];
+        for algo in &mut algos {
+            let name = algo.name();
+            let (curve, _) = train(algo.as_mut(), &data, &partition, 80, 2,
+                                   &mut compute);
+            assert!(
+                curve.final_loss() < curve.points[0].loss,
+                "{name}: {} -> {}",
+                curve.points[0].loss,
+                curve.final_loss()
+            );
+        }
+    }
+
+    #[test]
+    fn h1_fedavg_equals_distributed_sgd_rate() {
+        // With H=1 FedAvg averages every step: equivalent to synchronous
+        // SGD on the mean gradient. Its iterate after K steps must track
+        // a manual implementation bit-for-bit given the same rng streams.
+        let (mut compute, data, partition) = setup();
+        let mut algo = FedAvg::new(0.05, 1);
+        let (_, _) = train(&mut algo, &data, &partition, 30, 77,
+                           &mut compute);
+
+        // manual twin with identical rng streams
+        let root = Rng::new(77);
+        let mut rngs: Vec<Rng> =
+            (0..4).map(|w| root.fork(w as u64 + 1)).collect();
+        let mut theta = vec![0.0f32; 1024];
+        let mut g = vec![0.0f32; 1024];
+        for _ in 0..30 {
+            let mut thetas = Vec::new();
+            for w in 0..4 {
+                let b = data.sample_batch(&partition.shards[w], 16,
+                                          &mut rngs[w]);
+                compute.grad(&theta, &b, &mut g).unwrap();
+                let mut tw = theta.clone();
+                tensor::sgd_update(&mut tw, &g, 0.05);
+                thetas.push(tw);
+            }
+            let parts: Vec<&[f32]> =
+                thetas.iter().map(|t| t.as_slice()).collect();
+            tensor::mean_into(&mut theta, &parts);
+        }
+        let diff = tensor::sqnorm_diff(algo.theta(), &theta);
+        assert!(diff < 1e-9, "diff {diff}");
+    }
+}

@@ -1,353 +1,148 @@
-//! Local-update baselines: local momentum SGD [Yu et al. 2019], FedAvg
-//! [McMahan et al. 2017] and FedAdam [Reddi et al. 2020] — the paper's
-//! comparison methods where workers update a LOCAL model and communicate
-//! only at averaging rounds (every H iterations).
+//! The unified training API: one [`Algorithm`] trait covering every
+//! method the paper evaluates, driven by one generic
+//! [`Trainer`](trainer::Trainer).
 //!
-//! Server-centric methods (CADA, LAG, distributed Adam/SGD) live in
-//! [`crate::coordinator`]; this module completes the baseline space with
-//! the periodic-averaging family, sharing the same [`Compute`] backend,
-//! metrics and telemetry.
+//! # The round lifecycle
+//!
+//! Every distributed method in the paper — server-centric (CADA1/2, LAG,
+//! distributed Adam/SGD) and local-update (local momentum SGD, FedAvg,
+//! FedAdam) — fits one iteration shape, which the [`Trainer`] drives in a
+//! fixed order each round `k`:
+//!
+//! 1. **`broadcast`** — server → workers. Server-centric methods ship
+//!    theta^k to every worker (and refresh the CADA1 snapshot);
+//!    local-update methods are a no-op here because their models were
+//!    pushed down when the previous averaging round completed.
+//! 2. **`local_step`** — once per worker, in worker order, with a
+//!    minibatch sampled by the Trainer from that worker's shard. CADA
+//!    workers evaluate their upload rule (Eqs. 5/7/10); local-update
+//!    workers take a local SGD/momentum step.
+//! 3. **`aggregate`** — workers → server. CADA folds the uploaded
+//!    gradient innovations into the aggregate (Eq. 3); local-update
+//!    methods, on averaging rounds (`(k+1) % H == 0`), upload and average
+//!    their local models.
+//! 4. **`server_update`** — the server step. CADA applies AMSGrad/SGD on
+//!    the aggregate (Eq. 2/4) and records the drift history; FedAdam
+//!    applies server Adam to the averaged pseudo-gradient; local-update
+//!    methods then broadcast the new global model back down.
+//!
+//! The [`Trainer`] owns everything method-independent: the iteration
+//! loop, per-worker RNG streams, minibatch sampling, evaluation cadence,
+//! [`Curve`](crate::telemetry::Curve) recording,
+//! [`CommStats`](crate::comm::CommStats) and the bounded
+//! [`EventTrace`](crate::comm::EventTrace). Algorithms only hold model
+//! state and decide what moves over the (simulated) network, via the
+//! [`RoundCtx`] handed to each lifecycle method.
+//!
+//! ```
+//! use cada::prelude::*;
+//!
+//! let data = cada::data::synthetic::ijcnn_like(512, 7);
+//! let mut rng = Rng::new(7);
+//! let partition = Partition::build(PartitionScheme::Uniform, &data, 4,
+//!                                  &mut rng);
+//! let eval = data.gather(&(0..64).collect::<Vec<_>>());
+//! let mut compute = cada::runtime::native::NativeLogReg::for_spec(22, 1024);
+//!
+//! let mut algo = Cada::new(CadaCfg::basic(
+//!     RuleKind::Cada2 { c: 0.6 },
+//!     Optimizer::Amsgrad {
+//!         alpha: Schedule::Constant(0.01),
+//!         beta1: 0.9, beta2: 0.999, eps: 1e-8,
+//!         use_artifact: false,
+//!     },
+//! ));
+//! let mut trainer = Trainer::builder()
+//!     .algorithm(&mut algo)
+//!     .dataset(&data)
+//!     .partition(&partition)
+//!     .eval_batch(eval)
+//!     .init_theta(vec![0.0; 1024])
+//!     .iters(40)
+//!     .eval_every(10)
+//!     .seed(3)
+//!     .build()
+//!     .unwrap();
+//! let curve = trainer.run(0, &mut compute).unwrap();
+//! assert!(curve.final_loss() < curve.points[0].loss);
+//! ```
 
-use crate::comm::{CommStats, CostModel};
-use crate::data::{Batch, Dataset, Partition};
+pub mod cada;
+pub mod local;
+pub mod trainer;
+
+pub use cada::{Cada, CadaCfg};
+pub use local::{FedAdam, FedAdamCfg, FedAvg, LocalMomentum};
+pub use trainer::{TrainCfg, Trainer, TrainerBuilder};
+
+use crate::comm::{CommStats, CostModel, RoundEvent};
+use crate::data::Batch;
 use crate::runtime::Compute;
-use crate::telemetry::{Curve, CurvePoint};
-use crate::tensor;
-use crate::util::rng::Rng;
 
-/// Which local-update method to run.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum LocalMethod {
-    /// Local momentum SGD; parameters AND momentum buffers are averaged
-    /// at each communication round (blockwise model averaging).
-    LocalMomentum { eta: f32, beta: f32 },
-    /// Local SGD / FedAvg: parameter averaging only.
-    FedAvg { eta: f32 },
-    /// FedAdam: local SGD; the server applies Adam to the averaged model
-    /// delta every H iterations (Reddi et al., Eq. FedOpt).
-    FedAdam {
-        alpha_local: f32,
-        alpha_server: f32,
-        beta1: f32,
-        beta2: f32,
-        eps: f32,
-    },
-}
-
-impl LocalMethod {
-    pub fn name(&self) -> &'static str {
-        match self {
-            LocalMethod::LocalMomentum { .. } => "local_momentum",
-            LocalMethod::FedAvg { .. } => "fedavg",
-            LocalMethod::FedAdam { .. } => "fedadam",
-        }
-    }
-}
-
-/// Configuration of a local-update run.
-#[derive(Clone, Debug)]
-pub struct LocalCfg {
-    pub iters: usize,
-    pub eval_every: usize,
-    /// averaging period H
-    pub h: u32,
-    pub batch: usize,
-    pub method: LocalMethod,
-    pub cost_model: CostModel,
-    pub upload_bytes: usize,
-}
-
-/// Kind tag shared with the CLI / experiment driver.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Which family a method belongs to (telemetry / driver metadata).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AlgorithmKind {
+    /// Parameter-server methods: broadcast every round, adaptive uploads.
     ServerCentric,
+    /// Periodic-averaging methods: communicate every H rounds only.
     LocalUpdate,
 }
 
-/// One local-update training run over `M` workers.
-pub struct LocalLoop<'a> {
-    pub cfg: LocalCfg,
-    /// global (server) model
-    pub theta: Vec<f32>,
-    /// per-worker local models
-    thetas: Vec<Vec<f32>>,
-    /// per-worker momentum buffers (momentum method only)
-    momenta: Vec<Vec<f32>>,
-    /// FedAdam server moments
-    m1: Vec<f32>,
-    m2: Vec<f32>,
-    pub comm: CommStats,
-    data: &'a Dataset,
-    partition: &'a Partition,
-    eval_batch: Batch,
-    rngs: Vec<Rng>,
-    grad_scratch: Vec<f32>,
+/// Per-round context handed to every [`Algorithm`] lifecycle method.
+///
+/// Owned by the [`Trainer`](trainer::Trainer); algorithms use it to
+/// account communication against the run's cost model.
+pub struct RoundCtx<'c> {
+    /// current iteration k
+    pub k: u64,
+    /// number of workers M
+    pub m: usize,
+    /// payload of one gradient/model upload, bytes
+    pub upload_bytes: usize,
+    pub cost_model: &'c CostModel,
+    pub comm: &'c mut CommStats,
 }
 
-impl<'a> LocalLoop<'a> {
-    pub fn new(
-        cfg: LocalCfg,
-        init_theta: Vec<f32>,
-        data: &'a Dataset,
-        partition: &'a Partition,
-        eval_batch: Batch,
-        seed: u64,
-    ) -> Self {
-        let m = partition.num_workers();
-        let p = init_theta.len();
-        let root = Rng::new(seed);
-        let needs_momentum =
-            matches!(cfg.method, LocalMethod::LocalMomentum { .. });
-        LocalLoop {
-            thetas: vec![init_theta.clone(); m],
-            momenta: if needs_momentum {
-                vec![vec![0.0; p]; m]
-            } else {
-                Vec::new()
-            },
-            m1: vec![0.0; p],
-            m2: vec![0.0; p],
-            theta: init_theta,
-            comm: CommStats::default(),
-            data,
-            partition,
-            eval_batch,
-            rngs: (0..m).map(|w| root.fork(w as u64 + 1)).collect(),
-            grad_scratch: vec![0.0; p],
-            cfg,
-        }
+/// One distributed training method, expressed as the four-phase round
+/// lifecycle the [`Trainer`](trainer::Trainer) drives (see module docs).
+pub trait Algorithm {
+    /// Mechanism name ("cada2", "fedavg", ...; telemetry default label).
+    fn name(&self) -> &'static str;
+
+    /// Family tag (server-centric vs local-update).
+    fn kind(&self) -> AlgorithmKind;
+
+    /// Allocate all model state for `m` workers from the initial iterate.
+    /// Called exactly once, by
+    /// [`TrainerBuilder::build`](trainer::TrainerBuilder::build).
+    fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()>;
+
+    /// The current global model (what evaluation runs against).
+    fn theta(&self) -> &[f32];
+
+    /// Phase 1 — server → workers, at the top of round `k`.
+    fn broadcast(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()>;
+
+    /// Phase 2 — worker `w` processes its minibatch for round `k`.
+    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
+                  compute: &mut dyn Compute) -> anyhow::Result<()>;
+
+    /// Phase 3 — workers → server: fold this round's uploads.
+    fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()>;
+
+    /// Phase 4 — the server-side model update closing round `k`.
+    fn server_update(&mut self, ctx: &mut RoundCtx,
+                     compute: &mut dyn Compute) -> anyhow::Result<()>;
+
+    /// Telemetry snapshot of the round just finished (only requested when
+    /// the trainer keeps an event trace).
+    fn round_event(&self, k: u64) -> Option<RoundEvent> {
+        let _ = k;
+        None
     }
 
-    /// One local step on every worker; every H steps, an averaging round.
-    pub fn step(&mut self, k: u64, compute: &mut dyn Compute)
-                -> anyhow::Result<()> {
-        let m = self.thetas.len();
-        for w in 0..m {
-            let batch = self.data.sample_batch(
-                &self.partition.shards[w],
-                self.cfg.batch,
-                &mut self.rngs[w],
-            );
-            compute.grad(&self.thetas[w], &batch, &mut self.grad_scratch)?;
-            self.comm.record_grad_evals(1);
-            match self.cfg.method {
-                LocalMethod::LocalMomentum { eta, beta } => {
-                    tensor::momentum_update(
-                        &mut self.thetas[w],
-                        &mut self.momenta[w],
-                        &self.grad_scratch,
-                        eta,
-                        beta,
-                    );
-                }
-                LocalMethod::FedAvg { eta } => {
-                    tensor::sgd_update(&mut self.thetas[w],
-                                       &self.grad_scratch, eta);
-                }
-                LocalMethod::FedAdam { alpha_local, .. } => {
-                    tensor::sgd_update(&mut self.thetas[w],
-                                       &self.grad_scratch, alpha_local);
-                }
-            }
-        }
-        if (k + 1) % self.cfg.h as u64 == 0 {
-            self.averaging_round()?;
-        }
-        Ok(())
-    }
-
-    /// Communication round: all M workers upload; server averages /
-    /// Adam-steps; broadcast back.
-    fn averaging_round(&mut self) -> anyhow::Result<()> {
-        let m = self.thetas.len();
-        for _ in 0..m {
-            self.comm
-                .record_upload(self.cfg.upload_bytes, &self.cfg.cost_model);
-        }
-        match self.cfg.method {
-            LocalMethod::LocalMomentum { .. } => {
-                let parts: Vec<&[f32]> =
-                    self.thetas.iter().map(|t| t.as_slice()).collect();
-                tensor::mean_into(&mut self.theta, &parts);
-                // average momentum buffers as well
-                let mut mom_avg = vec![0.0f32; self.theta.len()];
-                let mparts: Vec<&[f32]> =
-                    self.momenta.iter().map(|u| u.as_slice()).collect();
-                tensor::mean_into(&mut mom_avg, &mparts);
-                for u in &mut self.momenta {
-                    u.copy_from_slice(&mom_avg);
-                }
-            }
-            LocalMethod::FedAvg { .. } => {
-                let parts: Vec<&[f32]> =
-                    self.thetas.iter().map(|t| t.as_slice()).collect();
-                tensor::mean_into(&mut self.theta, &parts);
-            }
-            LocalMethod::FedAdam {
-                alpha_server, beta1, beta2, eps, ..
-            } => {
-                // delta = mean_m(theta_m) - theta  (the pseudo-gradient)
-                let parts: Vec<&[f32]> =
-                    self.thetas.iter().map(|t| t.as_slice()).collect();
-                let mut avg = vec![0.0f32; self.theta.len()];
-                tensor::mean_into(&mut avg, &parts);
-                for i in 0..self.theta.len() {
-                    let delta = avg[i] - self.theta[i];
-                    self.m1[i] = beta1 * self.m1[i] + (1.0 - beta1) * delta;
-                    self.m2[i] =
-                        beta2 * self.m2[i] + (1.0 - beta2) * delta * delta;
-                    self.theta[i] +=
-                        alpha_server * self.m1[i] / (self.m2[i].sqrt() + eps);
-                }
-            }
-        }
-        // broadcast the new global model
-        self.comm.record_broadcast(m, self.cfg.upload_bytes,
-                                   &self.cfg.cost_model);
-        for t in &mut self.thetas {
-            t.copy_from_slice(&self.theta);
-        }
-        Ok(())
-    }
-
-    pub fn evaluate(&mut self, compute: &mut dyn Compute)
-                    -> anyhow::Result<(f64, f64)> {
-        let (loss, correct) = compute.eval(&self.theta, &self.eval_batch)?;
-        let denom = match &self.eval_batch.arrays[..] {
-            [(_, shape)] => shape[0] * (shape[1] - 1),
-            arrays => arrays[0].1[0],
-        } as f64;
-        Ok((loss as f64, correct as f64 / denom))
-    }
-
-    pub fn run(&mut self, algo_name: &str, run: u32,
-               compute: &mut dyn Compute) -> anyhow::Result<Curve> {
-        let wall0 = std::time::Instant::now();
-        let mut curve = Curve::new(algo_name, run);
-        let (loss, acc) = self.evaluate(compute)?;
-        curve.points.push(self.point(0, loss, acc, wall0));
-        for k in 0..self.cfg.iters as u64 {
-            self.step(k, compute)?;
-            if (k + 1) % self.cfg.eval_every as u64 == 0 {
-                let (loss, acc) = self.evaluate(compute)?;
-                curve.points.push(self.point(k + 1, loss, acc, wall0));
-            }
-        }
-        Ok(curve)
-    }
-
-    fn point(&self, iter: u64, loss: f64, acc: f64,
-             wall0: std::time::Instant) -> CurvePoint {
-        CurvePoint {
-            iter,
-            loss,
-            accuracy: acc,
-            uploads: self.comm.uploads,
-            grad_evals: self.comm.grad_evals,
-            sim_time_s: self.comm.sim_time_s,
-            wall_s: wall0.elapsed().as_secs_f64(),
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::data::{synthetic, PartitionScheme};
-    use crate::runtime::native::NativeLogReg;
-
-    fn setup() -> (NativeLogReg, Dataset, Partition) {
-        let compute = NativeLogReg::for_spec(22, 1024);
-        let data = synthetic::ijcnn_like(600, 5);
-        let mut rng = Rng::new(11);
-        let partition =
-            Partition::build(PartitionScheme::Uniform, &data, 4, &mut rng);
-        (compute, data, partition)
-    }
-
-    fn cfg(method: LocalMethod, h: u32, iters: usize) -> LocalCfg {
-        LocalCfg {
-            iters,
-            eval_every: 10,
-            h,
-            batch: 16,
-            method,
-            cost_model: CostModel::free(),
-            upload_bytes: 92,
-        }
-    }
-
-    #[test]
-    fn fedavg_uploads_every_h() {
-        let (mut compute, data, partition) = setup();
-        let eval = data.gather(&(0..32).collect::<Vec<_>>());
-        let mut lp = LocalLoop::new(
-            cfg(LocalMethod::FedAvg { eta: 0.1 }, 5, 20),
-            vec![0.0; 1024], &data, &partition, eval, 1);
-        lp.run("fedavg", 0, &mut compute).unwrap();
-        // 20 iters, H=5 -> 4 rounds x 4 workers
-        assert_eq!(lp.comm.uploads, 16);
-        assert_eq!(lp.comm.grad_evals, 80);
-    }
-
-    #[test]
-    fn methods_descend() {
-        let (mut compute, data, partition) = setup();
-        let eval = data.gather(&(0..128).collect::<Vec<_>>());
-        for method in [
-            LocalMethod::FedAvg { eta: 0.1 },
-            LocalMethod::LocalMomentum { eta: 0.05, beta: 0.9 },
-            LocalMethod::FedAdam {
-                alpha_local: 0.1, alpha_server: 0.1,
-                beta1: 0.9, beta2: 0.999, eps: 1e-8,
-            },
-        ] {
-            let mut lp = LocalLoop::new(cfg(method, 5, 80),
-                                        vec![0.0; 1024], &data, &partition,
-                                        eval.clone(), 2);
-            let curve = lp.run(method.name(), 0, &mut compute).unwrap();
-            assert!(
-                curve.final_loss() < curve.points[0].loss,
-                "{method:?}: {} -> {}",
-                curve.points[0].loss,
-                curve.final_loss()
-            );
-        }
-    }
-
-    #[test]
-    fn h1_fedavg_equals_distributed_sgd_rate() {
-        // With H=1 FedAvg averages every step: equivalent to synchronous
-        // SGD on the mean gradient. Its loss after K steps must closely
-        // track a manual implementation.
-        let (mut compute, data, partition) = setup();
-        let eval = data.gather(&(0..32).collect::<Vec<_>>());
-        let mut lp = LocalLoop::new(
-            cfg(LocalMethod::FedAvg { eta: 0.05 }, 1, 30),
-            vec![0.0; 1024], &data, &partition, eval, 77);
-
-        // manual twin with identical rng streams
-        let root = Rng::new(77);
-        let mut rngs: Vec<Rng> =
-            (0..4).map(|w| root.fork(w as u64 + 1)).collect();
-        let mut theta = vec![0.0f32; 1024];
-        let mut g = vec![0.0f32; 1024];
-        for _ in 0..30 {
-            let mut thetas = Vec::new();
-            for w in 0..4 {
-                let b = data.sample_batch(&partition.shards[w], 16,
-                                          &mut rngs[w]);
-                compute.grad(&theta, &b, &mut g).unwrap();
-                let mut tw = theta.clone();
-                tensor::sgd_update(&mut tw, &g, 0.05);
-                thetas.push(tw);
-            }
-            let parts: Vec<&[f32]> =
-                thetas.iter().map(|t| t.as_slice()).collect();
-            tensor::mean_into(&mut theta, &parts);
-        }
-        lp.run("fedavg", 0, &mut compute).unwrap();
-        let diff = tensor::sqnorm_diff(&lp.theta, &theta);
-        assert!(diff < 1e-9, "diff {diff}");
+    /// Maximum per-worker staleness tau (0 for local-update methods).
+    fn max_staleness(&self) -> u32 {
+        0
     }
 }

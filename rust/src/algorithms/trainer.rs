@@ -1,0 +1,531 @@
+//! The generic training driver: one loop for every [`Algorithm`].
+//!
+//! [`Trainer`] owns the method-independent machinery that `ServerLoop`
+//! and `LocalLoop` used to duplicate: the iteration loop, per-worker RNG
+//! forking, minibatch sampling, evaluation, curve recording,
+//! [`CommStats`] and the bounded [`EventTrace`]. It is built through
+//! [`TrainerBuilder`]:
+//!
+//! ```ignore
+//! let mut trainer = Trainer::builder()
+//!     .algorithm(&mut algo)
+//!     .dataset(&data)
+//!     .partition(&partition)
+//!     .eval_batch(eval)
+//!     .init_theta(init)
+//!     .cost_model(CostModel::default())
+//!     .eval_every(25)
+//!     .build()?;
+//! let curve = trainer.run(0, &mut compute)?;
+//! ```
+//!
+//! The trainer is generic over the algorithm (`Trainer<'_, Cada>` gives
+//! tests typed access to server/worker state via [`Trainer::algo`]);
+//! drivers that pick the method at runtime use `&mut dyn Algorithm`.
+
+use std::time::Instant;
+
+use super::{Algorithm, RoundCtx};
+use crate::comm::{CommStats, CostModel, EventTrace};
+use crate::config::toml::{Doc, Value};
+use crate::data::{Batch, Dataset, Partition};
+use crate::runtime::Compute;
+use crate::telemetry::{Curve, CurvePoint};
+use crate::util::rng::Rng;
+
+/// Method-independent run configuration — the union of what the old
+/// `LoopCfg` and `LocalCfg` carried, minus the method-specific knobs
+/// (those live in [`CadaCfg`](super::CadaCfg) /
+/// [`FedAdamCfg`](super::FedAdamCfg) / the local methods' fields).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainCfg {
+    pub iters: usize,
+    /// record a curve point every this many iterations
+    pub eval_every: usize,
+    /// per-worker minibatch size (must equal the grad artifact's batch)
+    pub batch: usize,
+    /// base seed; worker streams are forked as `Rng::new(seed).fork(w+1)`
+    pub seed: u64,
+    pub cost_model: CostModel,
+    /// bytes of one gradient/model upload (manifest: 4 * p live floats)
+    pub upload_bytes: usize,
+    /// keep at most this many round events in the trace (0 disables)
+    pub trace_cap: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            iters: 100,
+            eval_every: 25,
+            batch: 16,
+            seed: 0,
+            cost_model: CostModel::free(),
+            upload_bytes: 0,
+            trace_cap: 0,
+        }
+    }
+}
+
+impl TrainCfg {
+    /// Render as a `[train]` TOML section (round-trips through
+    /// [`TrainCfg::from_doc`]). Seeds above 2^53 lose precision (TOML
+    /// numbers are f64 in our subset parser).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[train]\n\
+             iters = {}\n\
+             eval_every = {}\n\
+             batch = {}\n\
+             seed = {}\n\
+             upload_bytes = {}\n\
+             trace_cap = {}\n\
+             \n\
+             [train.cost_model]\n\
+             latency_s = {}\n\
+             down_bw = {}\n\
+             asymmetry = {}\n",
+            self.iters,
+            self.eval_every,
+            self.batch,
+            self.seed,
+            self.upload_bytes,
+            self.trace_cap,
+            self.cost_model.latency_s,
+            self.cost_model.down_bw,
+            self.cost_model.asymmetry,
+        )
+    }
+
+    /// Parse a `[train]` (+ optional `[train.cost_model]`) section,
+    /// starting from defaults; unknown keys, non-numbers, and negative
+    /// or fractional integer fields are errors (a `-100` saturating
+    /// silently to 0 would otherwise turn a typo into an empty run).
+    pub fn from_doc(doc: &Doc) -> anyhow::Result<TrainCfg> {
+        let mut cfg = TrainCfg::default();
+        if let Some(section) = doc.sections.get("train") {
+            for (key, value) in section {
+                let int = |v: &Value| -> anyhow::Result<f64> {
+                    let n = v.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("[train] {key} must be a number")
+                    })?;
+                    anyhow::ensure!(
+                        n >= 0.0 && n.fract() == 0.0,
+                        "[train] {key} must be a non-negative integer, \
+                         got {n}"
+                    );
+                    Ok(n)
+                };
+                match key.as_str() {
+                    "iters" => cfg.iters = int(value)? as usize,
+                    "eval_every" => cfg.eval_every = int(value)? as usize,
+                    "batch" => cfg.batch = int(value)? as usize,
+                    "seed" => cfg.seed = int(value)? as u64,
+                    "upload_bytes" => {
+                        cfg.upload_bytes = int(value)? as usize
+                    }
+                    "trace_cap" => cfg.trace_cap = int(value)? as usize,
+                    other => {
+                        anyhow::bail!("unknown [train] key '{other}'")
+                    }
+                }
+            }
+        }
+        if let Some(section) = doc.sections.get("train.cost_model") {
+            for (key, value) in section {
+                let num = value.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("[train.cost_model] {key} must be a \
+                                     number")
+                })?;
+                match key.as_str() {
+                    "latency_s" => cfg.cost_model.latency_s = num,
+                    "down_bw" => cfg.cost_model.down_bw = num,
+                    "asymmetry" => cfg.cost_model.asymmetry = num,
+                    other => anyhow::bail!(
+                        "unknown [train.cost_model] key '{other}'"),
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// One training run: an [`Algorithm`] plus the workload it trains on.
+pub struct Trainer<'a, A: Algorithm + ?Sized> {
+    pub cfg: TrainCfg,
+    algo: &'a mut A,
+    data: &'a Dataset,
+    partition: &'a Partition,
+    eval_batch: Batch,
+    label: String,
+    rngs: Vec<Rng>,
+    pub comm: CommStats,
+    pub trace: EventTrace,
+}
+
+impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
+    pub fn builder() -> TrainerBuilder<'a, A> {
+        TrainerBuilder {
+            cfg: TrainCfg::default(),
+            algo: None,
+            data: None,
+            partition: None,
+            eval_batch: None,
+            init_theta: None,
+            label: None,
+        }
+    }
+
+    /// The algorithm under training (typed when `A` is concrete).
+    pub fn algo(&self) -> &A {
+        self.algo
+    }
+
+    pub fn algo_mut(&mut self) -> &mut A {
+        self.algo
+    }
+
+    /// The current global model.
+    pub fn theta(&self) -> &[f32] {
+        self.algo.theta()
+    }
+
+    /// Maximum per-worker staleness (0 for local-update methods).
+    pub fn max_staleness(&self) -> u32 {
+        self.algo.max_staleness()
+    }
+
+    /// Drive one full round `k` through the four lifecycle phases.
+    pub fn step(&mut self, k: u64, compute: &mut dyn Compute)
+                -> anyhow::Result<()> {
+        let m = self.rngs.len();
+        let mut ctx = RoundCtx {
+            k,
+            m,
+            upload_bytes: self.cfg.upload_bytes,
+            cost_model: &self.cfg.cost_model,
+            comm: &mut self.comm,
+        };
+        self.algo.broadcast(&mut ctx)?;
+        for w in 0..m {
+            let batch = self.data.sample_batch(
+                &self.partition.shards[w],
+                self.cfg.batch,
+                &mut self.rngs[w],
+            );
+            self.algo.local_step(&mut ctx, w, &batch, compute)?;
+        }
+        self.algo.aggregate(&mut ctx)?;
+        self.algo.server_update(&mut ctx, compute)?;
+        if self.cfg.trace_cap > 0 {
+            if let Some(ev) = self.algo.round_event(k) {
+                self.trace.push(ev);
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate (loss, accuracy) of the global model on the held-out
+    /// eval batch.
+    pub fn evaluate(&mut self, compute: &mut dyn Compute)
+                    -> anyhow::Result<(f64, f64)> {
+        let (loss, correct) =
+            compute.eval(self.algo.theta(), &self.eval_batch)?;
+        let denom = eval_examples(&self.eval_batch) as f64;
+        Ok((loss as f64, correct as f64 / denom))
+    }
+
+    /// Run the full loop, recording a curve point every `eval_every`
+    /// iterations (plus the initial point).
+    pub fn run(&mut self, run: u32, compute: &mut dyn Compute)
+               -> anyhow::Result<Curve> {
+        let wall0 = Instant::now();
+        let mut curve = Curve::new(&self.label, run);
+        let (loss, acc) = self.evaluate(compute)?;
+        curve.points.push(self.point(0, loss, acc, wall0));
+        for k in 0..self.cfg.iters as u64 {
+            self.step(k, compute)?;
+            if (k + 1) % self.cfg.eval_every as u64 == 0 {
+                let (loss, acc) = self.evaluate(compute)?;
+                curve.points.push(self.point(k + 1, loss, acc, wall0));
+            }
+        }
+        Ok(curve)
+    }
+
+    fn point(&self, iter: u64, loss: f64, acc: f64, wall0: Instant)
+             -> CurvePoint {
+        CurvePoint {
+            iter,
+            loss,
+            accuracy: acc,
+            uploads: self.comm.uploads,
+            grad_evals: self.comm.grad_evals,
+            sim_time_s: self.comm.sim_time_s,
+            wall_s: wall0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Number of examples in an eval batch (token batches count predicted
+/// positions, matching the eval artifact's `correct` semantics).
+fn eval_examples(batch: &Batch) -> usize {
+    match &batch.arrays[..] {
+        [(_, shape)] => shape[0] * (shape[1] - 1), // tokens: B * S targets
+        arrays => arrays[0].1[0],                  // labeled: batch dim
+    }
+}
+
+/// Builder for [`Trainer`] — see the module docs for the full shape.
+pub struct TrainerBuilder<'a, A: Algorithm + ?Sized> {
+    cfg: TrainCfg,
+    algo: Option<&'a mut A>,
+    data: Option<&'a Dataset>,
+    partition: Option<&'a Partition>,
+    eval_batch: Option<Batch>,
+    init_theta: Option<Vec<f32>>,
+    label: Option<String>,
+}
+
+impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
+    pub fn algorithm(mut self, algo: &'a mut A) -> Self {
+        self.algo = Some(algo);
+        self
+    }
+
+    pub fn dataset(mut self, data: &'a Dataset) -> Self {
+        self.data = Some(data);
+        self
+    }
+
+    pub fn partition(mut self, partition: &'a Partition) -> Self {
+        self.partition = Some(partition);
+        self
+    }
+
+    pub fn eval_batch(mut self, batch: Batch) -> Self {
+        self.eval_batch = Some(batch);
+        self
+    }
+
+    pub fn init_theta(mut self, theta: Vec<f32>) -> Self {
+        self.init_theta = Some(theta);
+        self
+    }
+
+    /// Curve label (defaults to the algorithm's mechanism name; the
+    /// experiment driver overrides it with the configured algo name,
+    /// e.g. "adam" for the `Always` rule under AMSGrad).
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Replace the whole [`TrainCfg`] at once (individual setters below
+    /// still apply on top).
+    pub fn cfg(mut self, cfg: TrainCfg) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.cfg.iters = iters;
+        self
+    }
+
+    pub fn eval_every(mut self, eval_every: usize) -> Self {
+        self.cfg.eval_every = eval_every;
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.cfg.batch = batch;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn cost_model(mut self, cost_model: CostModel) -> Self {
+        self.cfg.cost_model = cost_model;
+        self
+    }
+
+    pub fn upload_bytes(mut self, bytes: usize) -> Self {
+        self.cfg.upload_bytes = bytes;
+        self
+    }
+
+    pub fn trace_cap(mut self, cap: usize) -> Self {
+        self.cfg.trace_cap = cap;
+        self
+    }
+
+    /// Validate, allocate the algorithm's state and the per-worker RNG
+    /// streams, and hand back a ready [`Trainer`].
+    pub fn build(self) -> anyhow::Result<Trainer<'a, A>> {
+        let algo = self
+            .algo
+            .ok_or_else(|| anyhow::anyhow!("Trainer needs .algorithm(...)"))?;
+        let data = self
+            .data
+            .ok_or_else(|| anyhow::anyhow!("Trainer needs .dataset(...)"))?;
+        let partition = self.partition.ok_or_else(|| {
+            anyhow::anyhow!("Trainer needs .partition(...)")
+        })?;
+        let eval_batch = self.eval_batch.ok_or_else(|| {
+            anyhow::anyhow!("Trainer needs .eval_batch(...)")
+        })?;
+        let init_theta = self.init_theta.ok_or_else(|| {
+            anyhow::anyhow!("Trainer needs .init_theta(...)")
+        })?;
+        anyhow::ensure!(!init_theta.is_empty(), "init_theta is empty");
+        anyhow::ensure!(self.cfg.eval_every >= 1, "eval_every must be >= 1");
+        anyhow::ensure!(self.cfg.batch >= 1, "batch must be >= 1");
+        let m = partition.num_workers();
+        anyhow::ensure!(m >= 1, "partition has no workers");
+        algo.init(&init_theta, m)?;
+        let root = Rng::new(self.cfg.seed);
+        let rngs = (0..m).map(|w| root.fork(w as u64 + 1)).collect();
+        let label = self
+            .label
+            .unwrap_or_else(|| algo.name().to_string());
+        Ok(Trainer {
+            trace: EventTrace::new(self.cfg.trace_cap),
+            cfg: self.cfg,
+            algo,
+            data,
+            partition,
+            eval_batch,
+            label,
+            rngs,
+            comm: CommStats::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Cada, CadaCfg, FedAvg};
+    use crate::config::{toml, Schedule};
+    use crate::coordinator::rules::RuleKind;
+    use crate::coordinator::server::Optimizer;
+    use crate::data::{synthetic, PartitionScheme};
+    use crate::runtime::native::NativeLogReg;
+
+    fn workload() -> (NativeLogReg, Dataset, Partition) {
+        let compute = NativeLogReg::for_spec(22, 1024);
+        let data = synthetic::ijcnn_like(400, 3);
+        let mut rng = Rng::new(5);
+        let partition =
+            Partition::build(PartitionScheme::Uniform, &data, 3, &mut rng);
+        (compute, data, partition)
+    }
+
+    fn amsgrad() -> Optimizer {
+        Optimizer::Amsgrad {
+            alpha: Schedule::Constant(0.02),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            use_artifact: false,
+        }
+    }
+
+    #[test]
+    fn builder_rejects_missing_pieces() {
+        let (_, data, partition) = workload();
+        let mut algo = FedAvg::new(0.1, 2);
+        let err = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1]))
+            .build()
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("init_theta"), "{err}");
+        let err = Trainer::<FedAvg>::builder()
+            .dataset(&data)
+            .partition(&partition)
+            .build()
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("algorithm"), "{err}");
+    }
+
+    #[test]
+    fn eval_cadence_and_label() {
+        let (mut compute, data, partition) = workload();
+        let mut algo = Cada::new(CadaCfg::basic(RuleKind::Always, amsgrad()));
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&(0..64).collect::<Vec<_>>()))
+            .init_theta(vec![0.0; 1024])
+            .iters(20)
+            .eval_every(5)
+            .label("adam")
+            .build()
+            .unwrap();
+        let curve = trainer.run(0, &mut compute).unwrap();
+        assert_eq!(curve.algo, "adam");
+        // initial point + 20/5 evals
+        assert_eq!(curve.points.len(), 5);
+        assert_eq!(curve.points.last().unwrap().iter, 20);
+    }
+
+    #[test]
+    fn default_label_is_algorithm_name() {
+        let (mut compute, data, partition) = workload();
+        let mut algo = FedAvg::new(0.1, 2);
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1, 2, 3]))
+            .init_theta(vec![0.0; 1024])
+            .iters(4)
+            .eval_every(2)
+            .build()
+            .unwrap();
+        let curve = trainer.run(0, &mut compute).unwrap();
+        assert_eq!(curve.algo, "fedavg");
+    }
+
+    #[test]
+    fn train_cfg_toml_roundtrip() {
+        let cfg = TrainCfg {
+            iters: 1_500,
+            eval_every: 25,
+            batch: 92,
+            seed: 2021,
+            cost_model: CostModel::default(),
+            upload_bytes: 4 * 23,
+            trace_cap: 128,
+        };
+        let text = cfg.to_toml();
+        let doc = toml::parse(&text).unwrap();
+        let back = TrainCfg::from_doc(&doc).unwrap();
+        assert_eq!(back, cfg);
+        // defaults survive an empty doc
+        let empty = TrainCfg::from_doc(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(empty, TrainCfg::default());
+        // unknown keys are rejected
+        let bad = toml::parse("[train]\nitters = 3\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        // negative / fractional integer fields are rejected, not
+        // saturated or truncated
+        for src in ["[train]\niters = -100\n", "[train]\nbatch = 2.7\n",
+                    "[train]\nseed = -1\n"] {
+            let doc = toml::parse(src).unwrap();
+            let err = TrainCfg::from_doc(&doc).err().unwrap();
+            assert!(err.to_string().contains("non-negative integer"),
+                    "{src}: {err}");
+        }
+    }
+}

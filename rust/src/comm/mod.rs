@@ -47,7 +47,7 @@ impl CommStats {
 
 /// Link cost model: per-message setup latency + bandwidth term, with an
 /// uplink that is `asymmetry`x slower than the downlink.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CostModel {
     /// per-message latency, seconds
     pub latency_s: f64,
@@ -101,17 +101,19 @@ pub struct RoundEvent {
     pub rhs: f64,
 }
 
-/// Bounded in-memory event trace (ring buffer semantics).
+/// Bounded in-memory event trace (ring buffer semantics). Backed by a
+/// `VecDeque` so eviction at capacity is O(1) — with a `Vec` the
+/// `remove(0)` shift made every traced round O(trace_cap) on long runs.
 #[derive(Clone, Debug)]
 pub struct EventTrace {
-    pub events: Vec<RoundEvent>,
+    pub events: std::collections::VecDeque<RoundEvent>,
     cap: usize,
 }
 
 impl EventTrace {
     pub fn new(cap: usize) -> Self {
         EventTrace {
-            events: Vec::new(),
+            events: std::collections::VecDeque::with_capacity(cap.min(4096)),
             cap,
         }
     }
@@ -121,9 +123,26 @@ impl EventTrace {
             return;
         }
         if self.events.len() == self.cap {
-            self.events.remove(0);
+            self.events.pop_front();
         }
-        self.events.push(ev);
+        self.events.push_back(ev);
+    }
+
+    /// Oldest-to-newest iteration over the retained events.
+    pub fn iter(&self) -> impl Iterator<Item = &RoundEvent> {
+        self.events.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 }
 
@@ -175,5 +194,38 @@ mod tests {
         assert_eq!(t.events.len(), 2);
         assert_eq!(t.events[0].iter, 3);
         assert_eq!(t.events[1].iter, 4);
+        let iters: Vec<u64> = t.iter().map(|e| e.iter).collect();
+        assert_eq!(iters, vec![3, 4]);
+    }
+
+    #[test]
+    fn trace_cap_zero_records_nothing() {
+        let mut t = EventTrace::new(0);
+        t.push(RoundEvent {
+            iter: 0,
+            uploaded: vec![],
+            staleness: vec![],
+            mean_lhs: 0.0,
+            rhs: 0.0,
+        });
+        assert!(t.is_empty());
+        assert_eq!(t.capacity(), 0);
+    }
+
+    #[test]
+    fn trace_keeps_newest_over_long_run() {
+        let mut t = EventTrace::new(64);
+        for i in 0..10_000u64 {
+            t.push(RoundEvent {
+                iter: i,
+                uploaded: vec![],
+                staleness: vec![],
+                mean_lhs: 0.0,
+                rhs: 0.0,
+            });
+        }
+        assert_eq!(t.len(), 64);
+        assert_eq!(t.events.front().unwrap().iter, 10_000 - 64);
+        assert_eq!(t.events.back().unwrap().iter, 9_999);
     }
 }

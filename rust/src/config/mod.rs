@@ -1,8 +1,16 @@
 //! Experiment configuration: typed config struct, presets mirroring the
 //! paper's Tables 1–4, and TOML-file / CLI overrides.
+//!
+//! The method-independent run knobs live in the unified
+//! [`TrainCfg`] (re-exported here), which parses from / renders to a
+//! `[train]` TOML section — see [`TrainCfg::from_doc`] and
+//! [`TrainCfg::to_toml`].
 
 pub mod toml;
 
+pub use crate::algorithms::TrainCfg;
+
+use crate::comm::CostModel;
 use crate::data::{DatasetKind, PartitionScheme};
 
 /// Stepsize schedule (paper: constant in experiments; 1/sqrt(K) for
@@ -80,6 +88,11 @@ pub struct ExpConfig {
     pub seed: u64,
     /// loss level defining "reached target" in summary tables
     pub target_loss: f64,
+    /// simulated link cost model for every run of this experiment
+    /// (overridable via the unified `[train.cost_model]` TOML section)
+    pub cost_model: CostModel,
+    /// per-run event-trace capacity (0 disables; `[train] trace_cap`)
+    pub trace_cap: usize,
     pub algos: Vec<AlgoConfig>,
 }
 
@@ -110,6 +123,8 @@ pub fn fig2_covtype() -> ExpConfig {
         runs: 3,
         seed: 2020,
         target_loss: 0.32,
+        cost_model: CostModel::default(),
+        trace_cap: 0,
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.005) },
             AlgoConfig::Cada1 { alpha: C(0.005), c: 0.6, d_max: 10,
@@ -139,6 +154,8 @@ pub fn fig3_ijcnn() -> ExpConfig {
         runs: 3,
         seed: 2021,
         target_loss: 0.18,
+        cost_model: CostModel::default(),
+        trace_cap: 0,
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.01) },
             AlgoConfig::Cada1 { alpha: C(0.01), c: 0.6, d_max: 10,
@@ -168,6 +185,8 @@ pub fn fig4_mnist(use_cnn: bool) -> ExpConfig {
         runs: 1,
         seed: 2022,
         target_loss: 0.30,
+        cost_model: CostModel::default(),
+        trace_cap: 0,
         algos: vec![
             AlgoConfig::Adam { alpha: C(5e-4) },
             AlgoConfig::Cada1 { alpha: C(5e-4), c: 0.6, d_max: 10,
@@ -197,6 +216,8 @@ pub fn fig5_cifar() -> ExpConfig {
         runs: 1,
         seed: 2023,
         target_loss: 0.8,
+        cost_model: CostModel::default(),
+        trace_cap: 0,
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.01) },
             AlgoConfig::Cada1 { alpha: C(0.01), c: 0.3, d_max: 2,
@@ -280,6 +301,45 @@ pub fn apply_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
         cfg.target_loss = v.as_f64()
             .ok_or_else(|| anyhow::anyhow!("target_loss must be a number"))?;
     }
+    apply_train_overrides(cfg, doc)
+}
+
+/// Apply the unified `[train]` / `[train.cost_model]` sections
+/// ([`TrainCfg`] syntax) on top of an experiment config. Keys that are
+/// derived from the artifact spec at run time (`batch`, `upload_bytes`)
+/// cannot be overridden per-experiment and are rejected explicitly
+/// rather than silently ignored.
+fn apply_train_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
+                         -> anyhow::Result<()> {
+    let train = doc.sections.get("train");
+    if train.is_none() && !doc.sections.contains_key("train.cost_model") {
+        return Ok(());
+    }
+    // full key/type validation happens in TrainCfg::from_doc
+    let parsed = TrainCfg::from_doc(doc)?;
+    let has = |key: &str| train.is_some_and(|s| s.contains_key(key));
+    for fixed in ["batch", "upload_bytes"] {
+        anyhow::ensure!(
+            !has(fixed),
+            "[train] {fixed} is derived from the artifact spec and cannot \
+             be overridden per experiment"
+        );
+    }
+    if has("iters") {
+        cfg.iters = parsed.iters;
+    }
+    if has("eval_every") {
+        cfg.eval_every = parsed.eval_every;
+    }
+    if has("seed") {
+        cfg.seed = parsed.seed;
+    }
+    if has("trace_cap") {
+        cfg.trace_cap = parsed.trace_cap;
+    }
+    if doc.sections.contains_key("train.cost_model") {
+        cfg.cost_model = parsed.cost_model;
+    }
     Ok(())
 }
 
@@ -334,6 +394,33 @@ mod tests {
         assert_eq!(cfg.iters, 7);
         assert_eq!(cfg.runs, 2);
         assert_eq!(cfg.target_loss, 0.5);
+    }
+
+    #[test]
+    fn train_section_overrides_apply() {
+        let mut cfg = fig3_ijcnn();
+        let doc = toml::parse(
+            "[train]\niters = 42\ntrace_cap = 9\nseed = 5\n\
+             [train.cost_model]\nlatency_s = 0.5\ndown_bw = 1000\n\
+             asymmetry = 4\n",
+        )
+        .unwrap();
+        apply_overrides(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.iters, 42);
+        assert_eq!(cfg.trace_cap, 9);
+        assert_eq!(cfg.seed, 5);
+        assert_eq!(cfg.cost_model.latency_s, 0.5);
+        assert_eq!(cfg.cost_model.asymmetry, 4.0);
+        // untouched knobs keep their preset values
+        assert_eq!(cfg.eval_every, 25);
+
+        // spec-derived knobs cannot be overridden here
+        let bad = toml::parse("[train]\nbatch = 8\n").unwrap();
+        let err = apply_overrides(&mut cfg, &bad).err().unwrap();
+        assert!(err.to_string().contains("artifact spec"), "{err}");
+        // and invalid values are rejected by TrainCfg::from_doc
+        let neg = toml::parse("[train]\niters = -3\n").unwrap();
+        assert!(apply_overrides(&mut cfg, &neg).is_err());
     }
 
     #[test]

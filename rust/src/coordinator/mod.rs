@@ -1,5 +1,5 @@
-//! The paper's L3 contribution: the CADA parameter server, workers with
-//! adaptive upload rules, and the round scheduler that drives them.
+//! The paper's L3 building blocks: the CADA parameter server and the
+//! workers with adaptive upload rules.
 //!
 //! Structure mirrors Algorithm 1 of the paper:
 //!
@@ -13,11 +13,13 @@
 //! * [`server`]   — the aggregate-gradient recursion (Eq. 3) and the
 //!                  AMSGrad/SGD update (Eq. 2a-2c), native or Pallas-artifact
 //!                  backed.
-//! * [`scheduler`]— the iteration loop: broadcast, worker checks, uploads,
-//!                  server step, metrics, eval.
+//!
+//! The iteration loop itself lives in [`crate::algorithms`]: the
+//! [`Cada`](crate::algorithms::Cada) algorithm composes these pieces into
+//! the `broadcast → local_step → aggregate → server_update` lifecycle and
+//! the generic [`Trainer`](crate::algorithms::Trainer) drives it.
 
 pub mod history;
 pub mod rules;
-pub mod scheduler;
 pub mod server;
 pub mod worker;

@@ -63,8 +63,9 @@ impl WorkerState {
     /// Run lines 5–14 of Algorithm 1 for this worker at iteration `k`.
     ///
     /// * `theta` — the broadcast iterate theta^k.
-    /// * `snapshot` — theta-tilde (CADA1 only; refreshed by the scheduler
-    ///   every D iterations).
+    /// * `snapshot` — theta-tilde (CADA1 only; refreshed by the
+    ///   [`Cada`](crate::algorithms::Cada) broadcast phase every D
+    ///   iterations).
     /// * `rhs` — the shared drift threshold from the history ring.
     /// * `use_artifact_innov` — route innovation norms through the Pallas
     ///   artifact instead of the native fused loop.

@@ -13,7 +13,7 @@
 use crate::cli::Args;
 use crate::config::{self, ExpConfig};
 use crate::exp::Experiment;
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{load_backend, Manifest};
 use crate::telemetry::{render_table, write_jsonl, Curve};
 
 /// Entry point used by every `benches/fig*.rs`.
@@ -36,12 +36,12 @@ pub fn figure_bench(preset: &str) -> anyhow::Result<()> {
         "=== {} — spec {}, M={}, {} iters, {} run(s) ===",
         cfg.name, cfg.spec, cfg.workers, cfg.iters, cfg.runs
     );
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    let mut engine = Engine::new(&manifest, &cfg.spec)?;
-    let init = engine.init_theta()?;
-    let exp = Experiment::new(cfg.clone(), engine.spec.clone())?;
+    let (spec, mut compute, init) =
+        load_backend(Manifest::default_dir(), &cfg.spec)?;
+    println!("backend: {}", compute.backend_name());
+    let exp = Experiment::new(cfg.clone(), spec)?;
     let t0 = std::time::Instant::now();
-    let results = exp.run_all(&mut engine, &init)?;
+    let results = exp.run_all(&mut *compute, &init)?;
     let rows = exp.summarize(&results);
     print!("{}", render_table(&cfg.name, cfg.target_loss, &rows));
 

@@ -4,11 +4,13 @@
 pub mod figure;
 pub use figure::figure_bench;
 
-use crate::algorithms::{LocalCfg, LocalLoop, LocalMethod};
-use crate::comm::{CommStats, CostModel};
+use crate::algorithms::{
+    Algorithm, Cada, CadaCfg, FedAdam, FedAdamCfg, FedAvg, LocalMomentum,
+    TrainCfg, Trainer,
+};
+use crate::comm::CommStats;
 use crate::config::{AlgoConfig, ExpConfig, Schedule};
 use crate::coordinator::rules::RuleKind;
-use crate::coordinator::scheduler::{LoopCfg, ServerLoop};
 use crate::coordinator::server::Optimizer;
 use crate::data::{synthetic, Batch, Dataset, DatasetKind, Partition};
 use crate::runtime::{Compute, SpecEntry};
@@ -182,7 +184,64 @@ fn vocab_of(spec: &SpecEntry) -> usize {
 
 const EVAL_SEED: u64 = 0x5EED;
 
-/// Build + run a single (algorithm, run) pair.
+/// Instantiate the [`Algorithm`] an [`AlgoConfig`] describes, with the
+/// spec's Adam hyperparameters filled in.
+pub fn build_algorithm(algo: &AlgoConfig, spec: &SpecEntry)
+                       -> Box<dyn Algorithm> {
+    let amsgrad = |alpha: Schedule| Optimizer::Amsgrad {
+        alpha,
+        beta1: spec.beta1,
+        beta2: spec.beta2,
+        eps: spec.eps,
+        use_artifact: false,
+    };
+    let cada = |rule: RuleKind, opt: Optimizer, d_max: usize,
+                max_delay: u32| {
+        Box::new(Cada::new(CadaCfg {
+            rule,
+            opt,
+            max_delay,
+            snapshot_every: 0,
+            d_max,
+            use_artifact_innov: false,
+        }))
+    };
+    match *algo {
+        AlgoConfig::Adam { alpha } => {
+            cada(RuleKind::Always, amsgrad(alpha), 1, u32::MAX)
+        }
+        AlgoConfig::Cada1 { alpha, c, d_max, max_delay } => {
+            cada(RuleKind::Cada1 { c }, amsgrad(alpha), d_max, max_delay)
+        }
+        AlgoConfig::Cada2 { alpha, c, d_max, max_delay } => {
+            cada(RuleKind::Cada2 { c }, amsgrad(alpha), d_max, max_delay)
+        }
+        AlgoConfig::Lag { eta, c, d_max, max_delay } => {
+            cada(RuleKind::Lag { c }, Optimizer::Sgd { eta }, d_max,
+                 max_delay)
+        }
+        AlgoConfig::Sgd { eta } => {
+            cada(RuleKind::Always, Optimizer::Sgd { eta }, 1, u32::MAX)
+        }
+        AlgoConfig::LocalMomentum { eta, beta, h } => {
+            Box::new(LocalMomentum::new(eta, beta, h))
+        }
+        AlgoConfig::FedAvg { eta, h } => Box::new(FedAvg::new(eta, h)),
+        AlgoConfig::FedAdam { alpha_local, alpha_server, beta1, h } => {
+            Box::new(FedAdam::new(FedAdamCfg {
+                alpha_local,
+                alpha_server,
+                beta1,
+                beta2: spec.beta2,
+                eps: 1e-8,
+                h,
+            }))
+        }
+    }
+}
+
+/// Build + run a single (algorithm, run) pair through the unified
+/// [`Trainer`].
 #[allow(clippy::too_many_arguments)]
 fn run_one(
     cfg: &ExpConfig,
@@ -196,108 +255,24 @@ fn run_one(
     run_seed: u64,
     run: u32,
 ) -> anyhow::Result<(Curve, CommStats)> {
-    let amsgrad = |alpha: Schedule| Optimizer::Amsgrad {
-        alpha,
-        beta1: spec.beta1,
-        beta2: spec.beta2,
-        eps: spec.eps,
-        use_artifact: false,
-    };
-    let loop_cfg = |rule: RuleKind, d_max: usize, max_delay: u32| LoopCfg {
-        iters: cfg.iters,
-        eval_every: cfg.eval_every,
-        rule,
-        max_delay,
-        snapshot_every: 0,
-        d_max,
-        batch: spec.batch,
-        use_artifact_update: false,
-        use_artifact_innov: false,
-        cost_model: CostModel::default(),
-        trace_cap: 0,
-        upload_bytes: spec.upload_bytes(),
-    };
-    match *algo {
-        AlgoConfig::Adam { alpha } => {
-            let mut lp = ServerLoop::new(loop_cfg(RuleKind::Always, 1, u32::MAX),
-                                         init_theta, amsgrad(alpha), data,
-                                         partition, eval_batch, run_seed);
-            let curve = lp.run(algo.name(), run, compute)?;
-            Ok((curve, lp.comm))
-        }
-        AlgoConfig::Cada1 { alpha, c, d_max, max_delay } => {
-            let mut lp = ServerLoop::new(
-                loop_cfg(RuleKind::Cada1 { c }, d_max, max_delay),
-                init_theta, amsgrad(alpha), data, partition, eval_batch,
-                run_seed);
-            let curve = lp.run(algo.name(), run, compute)?;
-            Ok((curve, lp.comm))
-        }
-        AlgoConfig::Cada2 { alpha, c, d_max, max_delay } => {
-            let mut lp = ServerLoop::new(
-                loop_cfg(RuleKind::Cada2 { c }, d_max, max_delay),
-                init_theta, amsgrad(alpha), data, partition, eval_batch,
-                run_seed);
-            let curve = lp.run(algo.name(), run, compute)?;
-            Ok((curve, lp.comm))
-        }
-        AlgoConfig::Lag { eta, c, d_max, max_delay } => {
-            let mut lp = ServerLoop::new(
-                loop_cfg(RuleKind::Lag { c }, d_max, max_delay),
-                init_theta, Optimizer::Sgd { eta }, data, partition,
-                eval_batch, run_seed);
-            let curve = lp.run(algo.name(), run, compute)?;
-            Ok((curve, lp.comm))
-        }
-        AlgoConfig::Sgd { eta } => {
-            let mut lp = ServerLoop::new(loop_cfg(RuleKind::Always, 1, u32::MAX),
-                                         init_theta,
-                                         Optimizer::Sgd { eta }, data,
-                                         partition, eval_batch, run_seed);
-            let curve = lp.run(algo.name(), run, compute)?;
-            Ok((curve, lp.comm))
-        }
-        AlgoConfig::LocalMomentum { eta, beta, h } => {
-            let mut lp = LocalLoop::new(
-                local_cfg(cfg, spec, LocalMethod::LocalMomentum { eta, beta },
-                          h),
-                init_theta, data, partition, eval_batch, run_seed);
-            let curve = lp.run(algo.name(), run, compute)?;
-            Ok((curve, lp.comm))
-        }
-        AlgoConfig::FedAvg { eta, h } => {
-            let mut lp = LocalLoop::new(
-                local_cfg(cfg, spec, LocalMethod::FedAvg { eta }, h),
-                init_theta, data, partition, eval_batch, run_seed);
-            let curve = lp.run(algo.name(), run, compute)?;
-            Ok((curve, lp.comm))
-        }
-        AlgoConfig::FedAdam { alpha_local, alpha_server, beta1, h } => {
-            let method = LocalMethod::FedAdam {
-                alpha_local,
-                alpha_server,
-                beta1,
-                beta2: spec.beta2,
-                eps: 1e-8,
-            };
-            let mut lp = LocalLoop::new(local_cfg(cfg, spec, method, h),
-                                        init_theta, data, partition,
-                                        eval_batch, run_seed);
-            let curve = lp.run(algo.name(), run, compute)?;
-            Ok((curve, lp.comm))
-        }
-    }
-}
-
-fn local_cfg(cfg: &ExpConfig, spec: &SpecEntry, method: LocalMethod, h: u32)
-             -> LocalCfg {
-    LocalCfg {
-        iters: cfg.iters,
-        eval_every: cfg.eval_every,
-        h,
-        batch: spec.batch,
-        method,
-        cost_model: CostModel::default(),
-        upload_bytes: spec.upload_bytes(),
-    }
+    let mut algorithm = build_algorithm(algo, spec);
+    let mut trainer = Trainer::builder()
+        .cfg(TrainCfg {
+            iters: cfg.iters,
+            eval_every: cfg.eval_every,
+            batch: spec.batch,
+            seed: run_seed,
+            cost_model: cfg.cost_model.clone(),
+            upload_bytes: spec.upload_bytes(),
+            trace_cap: cfg.trace_cap,
+        })
+        .algorithm(&mut *algorithm)
+        .dataset(data)
+        .partition(partition)
+        .eval_batch(eval_batch)
+        .init_theta(init_theta)
+        .label(algo.name())
+        .build()?;
+    let curve = trainer.run(run, compute)?;
+    Ok((curve, trainer.comm.clone()))
 }

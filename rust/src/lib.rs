@@ -15,19 +15,63 @@
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the fused
 //!   AMSGrad server step (Eq. 2a–2c) and the blocked innovation norm.
 //!
-//! Python never runs on the training path: [`runtime`] loads the AOT
-//! artifacts via PJRT (the `xla` crate) and everything else is rust.
+//! Python never runs on the training path: with the `pjrt` cargo feature,
+//! [`runtime`] loads the AOT artifacts via PJRT (the `xla` crate); the
+//! default build uses the pure-rust [`runtime::native`] backend.
 //!
 //! ## Quick tour
 //!
-//! ```no_run
+//! Every training method implements one [`algorithms::Algorithm`] trait
+//! (round lifecycle `broadcast → local_step → aggregate →
+//! server_update`), and one builder-style [`algorithms::Trainer`] drives
+//! the loop, evaluation, communication accounting and telemetry for all
+//! of them:
+//!
+//! ```
 //! use cada::prelude::*;
 //!
-//! let manifest = cada::runtime::Manifest::load("artifacts").unwrap();
-//! let engine = cada::runtime::Engine::new(&manifest, "test_logreg").unwrap();
+//! // a synthetic ijcnn1-like workload split over 5 workers
+//! let data = cada::data::synthetic::ijcnn_like(800, 9);
+//! let mut rng = Rng::new(10);
+//! let partition = Partition::build(PartitionScheme::Uniform, &data, 5,
+//!                                  &mut rng);
+//! let eval = data.gather(&(0..64).collect::<Vec<_>>());
+//! let mut compute = cada::runtime::native::NativeLogReg::for_spec(22, 1024);
+//!
+//! // CADA2 (Eq. 10) under an AMSGrad server step ...
+//! let mut algo = Cada::new(CadaCfg::basic(
+//!     RuleKind::Cada2 { c: 1.2 },
+//!     Optimizer::Amsgrad {
+//!         alpha: Schedule::Constant(0.02),
+//!         beta1: 0.9, beta2: 0.999, eps: 1e-8,
+//!         use_artifact: false,
+//!     },
+//! ));
+//! // ... driven by the one generic Trainer
+//! let mut trainer = Trainer::builder()
+//!     .algorithm(&mut algo)
+//!     .dataset(&data)
+//!     .partition(&partition)
+//!     .eval_batch(eval)
+//!     .init_theta(vec![0.0; 1024])
+//!     .iters(60)
+//!     .eval_every(20)
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! let curve = trainer.run(0, &mut compute).unwrap();
+//!
+//! assert!(curve.final_loss() < curve.points[0].loss);
+//! // the paper's headline: fewer uploads than always-upload Adam
+//! assert!(trainer.comm.uploads < 60 * 5);
 //! ```
 //!
-//! See `examples/quickstart.rs` for an end-to-end training run.
+//! Swapping the method is one line — `FedAvg::new(0.1, 8)`,
+//! `LocalMomentum::new(0.05, 0.9, 8)`, `FedAdam::new(...)` or another
+//! [`RuleKind`](coordinator::rules::RuleKind) — everything else
+//! (`Trainer`, metrics, experiment driver) is shared. See
+//! `examples/quickstart.rs` for an end-to-end comparison run and
+//! [`exp::Experiment`] for the paper-figure presets.
 
 pub mod algorithms;
 pub mod bench;
@@ -45,13 +89,15 @@ pub mod util;
 
 /// Convenient glob import for examples and benches.
 pub mod prelude {
-    pub use crate::algorithms::{AlgorithmKind, LocalLoop, LocalMethod};
-    pub use crate::comm::CommStats;
-    pub use crate::coordinator::{
-        rules::RuleKind, scheduler::ServerLoop, server::Optimizer,
+    pub use crate::algorithms::{
+        Algorithm, AlgorithmKind, Cada, CadaCfg, FedAdam, FedAdamCfg,
+        FedAvg, LocalMomentum, TrainCfg, Trainer,
     };
-    pub use crate::data::{DatasetKind, Partition};
+    pub use crate::comm::{CommStats, CostModel};
+    pub use crate::config::Schedule;
+    pub use crate::coordinator::{rules::RuleKind, server::Optimizer};
+    pub use crate::data::{Dataset, DatasetKind, Partition, PartitionScheme};
     pub use crate::exp::{Experiment, RunResult};
-    pub use crate::runtime::{Engine, Manifest};
+    pub use crate::runtime::{Compute, Engine, Manifest, SpecEntry};
     pub use crate::util::rng::Rng;
 }

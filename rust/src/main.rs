@@ -15,7 +15,7 @@ use cada::cli::Args;
 use cada::config;
 use cada::exp::Experiment;
 use cada::info;
-use cada::runtime::{Engine, Manifest};
+use cada::runtime::Manifest;
 use cada::telemetry;
 
 fn main() {
@@ -55,7 +55,10 @@ USAGE:
 
 TRAIN OPTIONS:
   --preset NAME       experiment preset (paper figure)
-  --config FILE       TOML overrides ([experiment] iters/n/workers/...)
+  --config FILE       TOML overrides: [experiment] iters/n/workers/... and
+                      the unified [train] / [train.cost_model] sections
+                      (iters, eval_every, seed, trace_cap; latency_s,
+                      down_bw, asymmetry)
   --algo NAME         run only this algorithm from the preset
   --iters N           override iteration count
   --runs N            override Monte-Carlo run count
@@ -96,12 +99,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     args.reject_unknown()?;
 
-    let manifest = Manifest::load(&artifacts)?;
-    info!("compiling artifacts for spec '{}'", cfg.spec);
-    let mut engine = Engine::new(&manifest, &cfg.spec)?;
-    let init = engine.init_theta()?;
-    let experiment = Experiment::new(cfg.clone(), engine.spec.clone())?;
-    let results = experiment.run_all(&mut engine, &init)?;
+    info!("loading backend for spec '{}'", cfg.spec);
+    let (spec, mut compute, init) =
+        cada::runtime::load_backend(&artifacts, &cfg.spec)?;
+    info!("backend: {}", compute.backend_name());
+    let experiment = Experiment::new(cfg.clone(), spec)?;
+    let results = experiment.run_all(&mut *compute, &init)?;
     let rows = experiment.summarize(&results);
     print!(
         "{}",

@@ -145,6 +145,59 @@ impl SpecEntry {
     pub fn upload_bytes(&self) -> usize {
         4 * self.p
     }
+
+    /// Feature dimension of the model input (last axis of the first grad
+    /// input; e.g. 22 for the ijcnn1-like logreg spec).
+    pub fn feature_dim(&self) -> usize {
+        self.grad_inputs
+            .first()
+            .and_then(|i| i.shape.last().copied())
+            .unwrap_or(0)
+    }
+
+    /// Artifact-free builtin spec for the binary-logreg workloads, with
+    /// the same geometry the AOT pipeline bakes into the real artifacts
+    /// (python/compile/specs.py). Lets the native backend, tests and CI
+    /// run without `make artifacts`.
+    pub fn builtin_logreg(name: &str) -> anyhow::Result<SpecEntry> {
+        // (features, per-worker batch, eval batch) per spec
+        let (d, batch, eval_batch) = match name {
+            "logreg_covtype" => (54, 32, 4096),
+            "logreg_ijcnn" => (22, 92, 4096),
+            "test_logreg" => (8, 16, 64),
+            other => anyhow::bail!(
+                "no builtin spec named '{other}' (have logreg_covtype, \
+                 logreg_ijcnn, test_logreg)"
+            ),
+        };
+        let inputs = |b: usize| {
+            vec![
+                InputSpec { shape: vec![b, d], dtype: Dtype::F32 },
+                InputSpec { shape: vec![b], dtype: Dtype::I32 },
+            ]
+        };
+        let mut cfg = std::collections::BTreeMap::new();
+        cfg.insert("num_features".to_string(), Json::Num(d as f64));
+        Ok(SpecEntry {
+            name: name.to_string(),
+            kind: "logreg_binary".to_string(),
+            p: d + 1,
+            p_pad: 1024,
+            batch,
+            eval_batch,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            grad_inputs: inputs(batch),
+            eval_inputs: inputs(eval_batch),
+            grad_hlo: PathBuf::new(),
+            eval_hlo: PathBuf::new(),
+            update_hlo: PathBuf::new(),
+            innov_hlo: PathBuf::new(),
+            init_bin: PathBuf::new(),
+            cfg: Json::Obj(cfg),
+        })
+    }
 }
 
 /// The parsed artifact manifest.
@@ -236,6 +289,23 @@ mod tests {
         assert_eq!(s.grad_inputs[1].shape, vec![16]);
         assert_eq!(s.upload_bytes(), 36);
         assert!(m.spec("nope").is_err());
+    }
+
+    #[test]
+    fn builtin_logreg_specs_are_consistent() {
+        for name in ["logreg_covtype", "logreg_ijcnn", "test_logreg"] {
+            let s = SpecEntry::builtin_logreg(name).unwrap();
+            assert_eq!(s.name, name);
+            assert_eq!(s.p, s.feature_dim() + 1);
+            assert!(s.p_pad >= s.p);
+            assert_eq!(s.grad_inputs[0].shape, vec![s.batch, s.feature_dim()]);
+            assert_eq!(s.eval_inputs[0].shape,
+                       vec![s.eval_batch, s.feature_dim()]);
+            assert_eq!(s.upload_bytes(), 4 * s.p);
+            assert_eq!(s.cfg.get("num_features").unwrap().as_usize(),
+                       Some(s.feature_dim()));
+        }
+        assert!(SpecEntry::builtin_logreg("cnn_cifar").is_err());
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! L3 <-> PJRT bridge: load AOT HLO-text artifacts and execute them on the
+//! CPU PJRT client. Python never runs here — the artifacts were lowered
+//! once by `make artifacts`.
+//!
+//! [`Engine`] bundles the four compiled executables of one experiment spec
+//! (grad, eval, update, innov) and exposes them through the [`Compute`]
+//! trait. Compiled only with the `pjrt` cargo feature; the default build
+//! uses the stub in `pjrt_stub.rs` plus the [`super::native`] backend.
+
+use super::{Compute, Dtype, InputSpec, Manifest, SpecEntry};
+use crate::data::{Array, Batch};
+
+fn literal_f32(v: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(v).reshape(&dims)?)
+}
+
+fn literal_i32(v: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(v).reshape(&dims)?)
+}
+
+fn batch_literals(batch: &Batch) -> anyhow::Result<Vec<xla::Literal>> {
+    batch
+        .arrays
+        .iter()
+        .map(|(arr, shape)| match arr {
+            Array::F32(v) => literal_f32(v, shape),
+            Array::I32(v) => literal_i32(v, shape),
+        })
+        .collect()
+}
+
+/// One compiled HLO artifact.
+struct Exe {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Exe {
+    fn compile(client: &xla::PjRtClient, path: &std::path::Path)
+               -> anyhow::Result<Exe> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        Ok(Exe {
+            exe,
+            name: path.display().to_string(),
+        })
+    }
+
+    /// Execute and return the decomposed output tuple (return_tuple=True
+    /// at lowering time, so the single output is always a tuple).
+    fn run(&self, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.name))?;
+        let mut out = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {}: {e}", self.name))?;
+        Ok(out
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e}", self.name))?)
+    }
+}
+
+/// Compiled artifact set for one experiment spec (the PJRT-backed
+/// [`Compute`] implementation).
+pub struct Engine {
+    pub spec: SpecEntry,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    grad_exe: Exe,
+    eval_exe: Exe,
+    update_exe: Exe,
+    innov_exe: Exe,
+    /// number of PJRT executions, for telemetry
+    pub exec_count: u64,
+}
+
+impl Engine {
+    /// Compile all four artifacts of `spec_name` on a fresh CPU client.
+    pub fn new(manifest: &Manifest, spec_name: &str) -> anyhow::Result<Engine> {
+        let spec = manifest.spec(spec_name)?.clone();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let grad_exe = Exe::compile(&client, &spec.grad_hlo)?;
+        let eval_exe = Exe::compile(&client, &spec.eval_hlo)?;
+        let update_exe = Exe::compile(&client, &spec.update_hlo)?;
+        let innov_exe = Exe::compile(&client, &spec.innov_hlo)?;
+        Ok(Engine {
+            spec,
+            client,
+            grad_exe,
+            eval_exe,
+            update_exe,
+            innov_exe,
+            exec_count: 0,
+        })
+    }
+
+    /// Initial padded parameter vector for this spec.
+    pub fn init_theta(&self) -> anyhow::Result<Vec<f32>> {
+        self.spec.load_init()
+    }
+
+    fn check_batch(&self, batch: &Batch, specs: &[InputSpec])
+                   -> anyhow::Result<()> {
+        anyhow::ensure!(
+            batch.arrays.len() == specs.len(),
+            "batch has {} arrays, artifact expects {}",
+            batch.arrays.len(),
+            specs.len()
+        );
+        for ((arr, shape), ispec) in batch.arrays.iter().zip(specs) {
+            anyhow::ensure!(
+                shape == &ispec.shape,
+                "batch shape {shape:?} != artifact shape {:?}",
+                ispec.shape
+            );
+            let want_f32 = matches!(ispec.dtype, Dtype::F32);
+            let is_f32 = matches!(arr, Array::F32(_));
+            anyhow::ensure!(want_f32 == is_f32, "batch dtype mismatch");
+        }
+        Ok(())
+    }
+}
+
+impl Compute for Engine {
+    fn p_pad(&self) -> usize {
+        self.spec.p_pad
+    }
+
+    fn grad(&mut self, theta: &[f32], batch: &Batch, out_grad: &mut [f32])
+            -> anyhow::Result<f32> {
+        self.check_batch(batch, &self.spec.grad_inputs)?;
+        let mut args = vec![literal_f32(theta, &[self.spec.p_pad])?];
+        args.extend(batch_literals(batch)?);
+        let out = self.grad_exe.run(&args)?;
+        self.exec_count += 1;
+        anyhow::ensure!(out.len() == 2, "grad artifact returned {} outputs",
+                        out.len());
+        let loss: f32 = out[0].to_vec::<f32>()?[0];
+        let g = out[1].to_vec::<f32>()?;
+        anyhow::ensure!(g.len() == out_grad.len(), "grad length mismatch");
+        out_grad.copy_from_slice(&g);
+        Ok(loss)
+    }
+
+    fn eval(&mut self, theta: &[f32], batch: &Batch)
+            -> anyhow::Result<(f32, f32)> {
+        self.check_batch(batch, &self.spec.eval_inputs)?;
+        let mut args = vec![literal_f32(theta, &[self.spec.p_pad])?];
+        args.extend(batch_literals(batch)?);
+        let out = self.eval_exe.run(&args)?;
+        self.exec_count += 1;
+        anyhow::ensure!(out.len() == 2, "eval artifact returned {} outputs",
+                        out.len());
+        Ok((out[0].to_vec::<f32>()?[0], out[1].to_vec::<f32>()?[0]))
+    }
+
+    fn update(&mut self, theta: &mut [f32], h: &mut [f32], vhat: &mut [f32],
+              grad: &[f32], alpha: f32) -> anyhow::Result<()> {
+        let p = self.spec.p_pad;
+        let args = [
+            literal_f32(theta, &[p])?,
+            literal_f32(h, &[p])?,
+            literal_f32(vhat, &[p])?,
+            literal_f32(grad, &[p])?,
+            xla::Literal::scalar(alpha),
+        ];
+        let out = self.update_exe.run(&args)?;
+        self.exec_count += 1;
+        anyhow::ensure!(out.len() == 3, "update artifact returned {} outputs",
+                        out.len());
+        theta.copy_from_slice(&out[0].to_vec::<f32>()?);
+        h.copy_from_slice(&out[1].to_vec::<f32>()?);
+        vhat.copy_from_slice(&out[2].to_vec::<f32>()?);
+        Ok(())
+    }
+
+    fn innov(&mut self, g1: &[f32], g2: &[f32]) -> anyhow::Result<f32> {
+        let p = self.spec.p_pad;
+        let args = [literal_f32(g1, &[p])?, literal_f32(g2, &[p])?];
+        let out = self.innov_exe.run(&args)?;
+        self.exec_count += 1;
+        Ok(out[0].to_vec::<f32>()?[0])
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}

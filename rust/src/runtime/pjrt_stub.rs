@@ -1,0 +1,68 @@
+//! Stand-in [`Engine`] for builds without the `pjrt` cargo feature.
+//!
+//! Keeps every call site compiling against the same API; construction
+//! always fails with a pointer at the feature flag, so none of the
+//! [`Compute`] methods can ever be reached (they error defensively
+//! anyway). [`super::load_backend`] catches the construction error and
+//! falls back to the native backend where one exists.
+
+use super::{Compute, Manifest, SpecEntry};
+use crate::data::Batch;
+
+/// Placeholder for the PJRT artifact engine (feature `pjrt` disabled).
+pub struct Engine {
+    pub spec: SpecEntry,
+    /// number of PJRT executions, for telemetry (always 0 in the stub)
+    pub exec_count: u64,
+}
+
+fn unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "the PJRT artifact backend is not compiled in; rebuild with \
+         `cargo build --features pjrt` (and a real xla crate in \
+         rust/vendor/xla) to execute AOT artifacts"
+    )
+}
+
+impl Engine {
+    pub fn new(manifest: &Manifest, spec_name: &str) -> anyhow::Result<Engine> {
+        // Validate the spec name so callers get the more precise error
+        // when the manifest simply lacks the spec.
+        let _ = manifest.spec(spec_name)?;
+        Err(unavailable())
+    }
+
+    pub fn init_theta(&self) -> anyhow::Result<Vec<f32>> {
+        self.spec.load_init()
+    }
+}
+
+impl Compute for Engine {
+    fn p_pad(&self) -> usize {
+        self.spec.p_pad
+    }
+
+    fn grad(&mut self, _theta: &[f32], _batch: &Batch,
+            _out_grad: &mut [f32]) -> anyhow::Result<f32> {
+        Err(unavailable())
+    }
+
+    fn eval(&mut self, _theta: &[f32], _batch: &Batch)
+            -> anyhow::Result<(f32, f32)> {
+        Err(unavailable())
+    }
+
+    fn update(&mut self, _theta: &mut [f32], _h: &mut [f32],
+              _vhat: &mut [f32], _grad: &[f32], _alpha: f32)
+              -> anyhow::Result<()> {
+        Err(unavailable())
+    }
+
+    fn innov(&mut self, _g1: &[f32], _g2: &[f32]) -> anyhow::Result<f32> {
+        Err(unavailable())
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt-unavailable"
+    }
+}

@@ -1,24 +1,25 @@
 //! Integration: the experiment driver + every baseline algorithm, run
-//! end-to-end (scaled down) through both backends.
+//! end-to-end (scaled down) through the unified `Trainer`.
+//!
+//! The default build runs against the builtin artifact-free logreg spec
+//! on the native backend; the PJRT path is exercised under the `pjrt`
+//! feature (it needs `make artifacts`).
 
 use cada::config::{self, AlgoConfig, Schedule};
 use cada::exp::Experiment;
 use cada::runtime::native::NativeLogReg;
-use cada::runtime::{Engine, Manifest};
+use cada::runtime::SpecEntry;
 use cada::telemetry::render_table;
 
-fn manifest() -> Manifest {
-    Manifest::load("artifacts").expect(
-        "artifacts missing — run `make artifacts` before `cargo test`",
-    )
+fn ijcnn_spec() -> SpecEntry {
+    SpecEntry::builtin_logreg("logreg_ijcnn").unwrap()
 }
 
 #[test]
 fn fig3_preset_all_algorithms_smoke_native() {
     // Full driver over all six fig3 algorithms on the native backend
     // (fast); every algorithm must complete and descend.
-    let m = manifest();
-    let spec = m.spec("logreg_ijcnn").unwrap().clone();
+    let spec = ijcnn_spec();
     let cfg = config::fig3_ijcnn().scaled(120, 3_000, 1);
     let mut native = NativeLogReg::for_spec(22, spec.p_pad);
     let exp = Experiment::new(cfg.clone(), spec).unwrap();
@@ -53,40 +54,8 @@ fn fig3_preset_all_algorithms_smoke_native() {
 }
 
 #[test]
-fn fig3_preset_runs_on_pjrt_engine() {
-    // Same driver against the real HLO artifacts (scaled way down).
-    let m = manifest();
-    let mut engine = Engine::new(&m, "logreg_ijcnn").unwrap();
-    let spec = engine.spec.clone();
-    let mut cfg = config::fig3_ijcnn().scaled(40, 1_500, 1);
-    cfg.eval_every = 10;
-    // keep it quick: adam + cada2 only
-    cfg.algos = vec![
-        AlgoConfig::Adam { alpha: Schedule::Constant(0.01) },
-        AlgoConfig::Cada2 {
-            alpha: Schedule::Constant(0.01),
-            c: 0.6,
-            d_max: 10,
-            max_delay: 100,
-        },
-    ];
-    let exp = Experiment::new(cfg, spec).unwrap();
-    let init = engine.init_theta().unwrap();
-    let results = exp.run_all(&mut engine, &init).unwrap();
-    for r in &results {
-        assert!(r.mean_curve.final_loss() < r.mean_curve.points[0].loss,
-                "{}", r.algo);
-    }
-    let adam = &results[0].mean_curve;
-    let cada = &results[1].mean_curve;
-    assert!(cada.points.last().unwrap().uploads
-            < adam.points.last().unwrap().uploads);
-}
-
-#[test]
 fn monte_carlo_runs_average() {
-    let m = manifest();
-    let spec = m.spec("logreg_ijcnn").unwrap().clone();
+    let spec = ijcnn_spec();
     let mut cfg = config::fig3_ijcnn().scaled(30, 1_000, 3);
     cfg.algos = vec![AlgoConfig::Adam { alpha: Schedule::Constant(0.01) }];
     let mut native = NativeLogReg::for_spec(22, spec.p_pad);
@@ -108,8 +77,7 @@ fn monte_carlo_runs_average() {
 #[test]
 fn h_sweep_larger_h_fewer_uploads() {
     // Figs. 6-7 mechanism: larger averaging period H => fewer uploads.
-    let m = manifest();
-    let spec = m.spec("logreg_ijcnn").unwrap().clone();
+    let spec = ijcnn_spec();
     let mut uploads = Vec::new();
     for h in [1u32, 4, 16] {
         let mut cfg = config::fig3_ijcnn().scaled(64, 1_000, 1);
@@ -133,8 +101,7 @@ fn h_sweep_larger_h_fewer_uploads() {
 
 #[test]
 fn summary_marks_winner_and_targets() {
-    let m = manifest();
-    let spec = m.spec("logreg_ijcnn").unwrap().clone();
+    let spec = ijcnn_spec();
     let mut cfg = config::fig3_ijcnn().scaled(150, 2_000, 1);
     cfg.target_loss = 0.45;
     cfg.algos = vec![
@@ -160,4 +127,45 @@ fn summary_marks_winner_and_targets() {
     let cada = rows.iter().find(|r| r.algo == "cada2").unwrap();
     assert!(cada.uploads < adam.uploads,
             "cada {} vs adam {}", cada.uploads, adam.uploads);
+}
+
+/// PJRT path of the same driver — needs `--features pjrt` + artifacts.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use cada::runtime::{Engine, Manifest};
+
+    #[test]
+    fn fig3_preset_runs_on_pjrt_engine() {
+        // Same driver against the real HLO artifacts (scaled way down).
+        let m = Manifest::load("artifacts").expect(
+            "artifacts missing — run `make artifacts` before `cargo test \
+             --features pjrt`",
+        );
+        let mut engine = Engine::new(&m, "logreg_ijcnn").unwrap();
+        let spec = engine.spec.clone();
+        let mut cfg = config::fig3_ijcnn().scaled(40, 1_500, 1);
+        cfg.eval_every = 10;
+        // keep it quick: adam + cada2 only
+        cfg.algos = vec![
+            AlgoConfig::Adam { alpha: Schedule::Constant(0.01) },
+            AlgoConfig::Cada2 {
+                alpha: Schedule::Constant(0.01),
+                c: 0.6,
+                d_max: 10,
+                max_delay: 100,
+            },
+        ];
+        let exp = Experiment::new(cfg, spec).unwrap();
+        let init = engine.init_theta().unwrap();
+        let results = exp.run_all(&mut engine, &init).unwrap();
+        for r in &results {
+            assert!(r.mean_curve.final_loss() < r.mean_curve.points[0].loss,
+                    "{}", r.algo);
+        }
+        let adam = &results[0].mean_curve;
+        let cada = &results[1].mean_curve;
+        assert!(cada.points.last().unwrap().uploads
+                < adam.points.last().unwrap().uploads);
+    }
 }

@@ -1,25 +1,22 @@
-//! Integration: full CADA training runs over the PJRT engine — the
-//! three-layer stack (rust coordinator -> HLO grad/eval -> Pallas update)
-//! exercised end to end on the tiny test spec.
+//! Integration: full CADA training runs through the unified
+//! `Trainer::builder()` entry point.
+//!
+//! The default build drives the native backend end-to-end (no artifacts
+//! needed); the `pjrt` feature adds the three-layer stack (rust
+//! coordinator -> HLO grad/eval -> Pallas update) on the tiny test spec.
 
+use cada::algorithms::{Algorithm, Cada, CadaCfg, Trainer};
 use cada::comm::CostModel;
 use cada::config::Schedule;
 use cada::coordinator::rules::RuleKind;
-use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
 use cada::coordinator::server::Optimizer;
-use cada::data::{Partition, PartitionScheme};
-use cada::runtime::{Compute, Engine, Manifest};
+use cada::data::{Dataset, Partition, PartitionScheme};
+use cada::runtime::native::NativeLogReg;
+use cada::runtime::SpecEntry;
 use cada::util::rng::Rng;
 
-fn engine() -> Engine {
-    let m = Manifest::load("artifacts").expect(
-        "artifacts missing — run `make artifacts` before `cargo test`",
-    );
-    Engine::new(&m, "test_logreg").unwrap()
-}
-
 /// 8-feature binary task matching the test_logreg spec geometry.
-fn dataset(n: usize, seed: u64) -> cada::data::Dataset {
+fn dataset(n: usize, seed: u64) -> Dataset {
     let mut rng = Rng::new(seed);
     let w: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     let mut x = Vec::with_capacity(n * 8);
@@ -33,58 +30,60 @@ fn dataset(n: usize, seed: u64) -> cada::data::Dataset {
         }
         y.push((s > 0.0) as i32);
     }
-    cada::data::Dataset::Labeled { x, sample_shape: vec![8], y }
+    Dataset::Labeled { x, sample_shape: vec![8], y }
 }
 
-fn cfg(engine: &Engine, rule: RuleKind, iters: usize) -> LoopCfg {
-    LoopCfg {
-        iters,
-        eval_every: 10,
+fn spec() -> SpecEntry {
+    SpecEntry::builtin_logreg("test_logreg").unwrap()
+}
+
+fn cada_cfg(rule: RuleKind, alpha: f32) -> CadaCfg {
+    let mut cfg = CadaCfg::basic(
         rule,
-        max_delay: 20,
-        snapshot_every: 0,
-        d_max: 10,
-        batch: engine.spec.batch,
-        use_artifact_update: true,
-        use_artifact_innov: false,
-        cost_model: CostModel::free(),
-        trace_cap: iters,
-        upload_bytes: engine.spec.upload_bytes(),
-    }
-}
-
-fn amsgrad(engine: &Engine, alpha: f32) -> Optimizer {
-    Optimizer::Amsgrad {
-        alpha: Schedule::Constant(alpha),
-        beta1: engine.spec.beta1,
-        beta2: engine.spec.beta2,
-        eps: engine.spec.eps,
-        use_artifact: true,
-    }
+        Optimizer::Amsgrad {
+            alpha: Schedule::Constant(alpha),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            use_artifact: false,
+        },
+    );
+    cfg.max_delay = 20;
+    cfg
 }
 
 #[test]
-fn cada2_trains_on_pjrt_stack_and_saves_uploads() {
-    let mut eng = engine();
+fn cada2_trains_and_saves_uploads_native() {
+    let spec = spec();
+    let mut compute = NativeLogReg::for_spec(8, spec.p_pad);
     let data = dataset(600, 1);
     let mut rng = Rng::new(2);
     let partition =
         Partition::build(PartitionScheme::Uniform, &data, 5, &mut rng);
-    let eval_idx: Vec<usize> = (0..eng.spec.eval_batch).collect();
-    let eval = data.gather(&eval_idx);
-    let init = eng.init_theta().unwrap();
+    let eval = data.gather(&(0..spec.eval_batch).collect::<Vec<_>>());
     let iters = 100;
 
-    let run = |eng: &mut Engine, rule: RuleKind| {
-        let opt = amsgrad(eng, 0.05);
-        let mut lp = ServerLoop::new(cfg(eng, rule, iters), init.clone(),
-                                     opt, &data, &partition, eval.clone(), 3);
-        let curve = lp.run(rule.name(), 0, eng).unwrap();
-        (curve, lp.comm.uploads)
+    let mut run = |rule: RuleKind| {
+        let mut algo = Cada::new(cada_cfg(rule, 0.05));
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval.clone())
+            .init_theta(vec![0.0; spec.p_pad])
+            .iters(iters)
+            .eval_every(10)
+            .batch(spec.batch)
+            .upload_bytes(spec.upload_bytes())
+            .cost_model(CostModel::free())
+            .seed(3)
+            .build()
+            .unwrap();
+        let curve = trainer.run(0, &mut compute).unwrap();
+        (curve, trainer.comm.uploads)
     };
-    let (adam_curve, adam_uploads) = run(&mut eng, RuleKind::Always);
-    let (cada_curve, cada_uploads) =
-        run(&mut eng, RuleKind::Cada2 { c: 0.4 });
+    let (adam_curve, adam_uploads) = run(RuleKind::Always);
+    let (cada_curve, cada_uploads) = run(RuleKind::Cada2 { c: 0.4 });
 
     assert_eq!(adam_uploads, (iters * 5) as u64);
     assert!(cada_uploads < adam_uploads,
@@ -95,113 +94,300 @@ fn cada2_trains_on_pjrt_stack_and_saves_uploads() {
 }
 
 #[test]
-fn cada1_snapshot_path_works_on_pjrt() {
-    let mut eng = engine();
+fn cada1_snapshot_path_works_native() {
+    let spec = spec();
+    let mut compute = NativeLogReg::for_spec(8, spec.p_pad);
     let data = dataset(400, 7);
     let mut rng = Rng::new(8);
     let partition =
         Partition::build(PartitionScheme::Uniform, &data, 4, &mut rng);
-    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
-    let init = eng.init_theta().unwrap();
-    let opt = amsgrad(&eng, 0.05);
-    let mut lp = ServerLoop::new(
-        cfg(&eng, RuleKind::Cada1 { c: 0.8 }, 45),
-        init, opt, &data, &partition, eval, 5);
-    let curve = lp.run("cada1", 0, &mut eng).unwrap();
+    let eval = data.gather(&(0..spec.eval_batch).collect::<Vec<_>>());
+    let mut algo = Cada::new(cada_cfg(RuleKind::Cada1 { c: 0.8 }, 0.05));
+    let mut trainer = Trainer::builder()
+        .algorithm(&mut algo)
+        .dataset(&data)
+        .partition(&partition)
+        .eval_batch(eval)
+        .init_theta(vec![0.0; spec.p_pad])
+        .iters(45)
+        .eval_every(10)
+        .batch(spec.batch)
+        .seed(5)
+        .build()
+        .unwrap();
+    let curve = trainer.run(0, &mut compute).unwrap();
     // CADA1 costs 2 grad evals per worker per iteration
-    assert_eq!(lp.comm.grad_evals, 45 * 4 * 2);
-    assert!(lp.max_staleness() <= 20);
+    assert_eq!(trainer.comm.grad_evals, 45 * 4 * 2);
+    assert!(trainer.max_staleness() <= 20);
     assert!(curve.final_loss() < curve.points[0].loss);
 }
 
 #[test]
-fn artifact_and_native_update_paths_agree_in_training() {
-    // Same run with use_artifact_update on/off must give (nearly)
-    // identical trajectories: the Pallas kernel IS the native update.
-    let mut eng = engine();
-    let data = dataset(300, 11);
-    let mut rng = Rng::new(12);
-    let partition =
-        Partition::build(PartitionScheme::Uniform, &data, 3, &mut rng);
-    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
-    let init = eng.init_theta().unwrap();
-
-    let run = |eng: &mut Engine, use_artifact: bool| {
-        let mut c = cfg(eng, RuleKind::Cada2 { c: 0.5 }, 25);
-        c.use_artifact_update = use_artifact;
-        let opt = Optimizer::Amsgrad {
-            alpha: Schedule::Constant(0.05),
-            beta1: eng.spec.beta1,
-            beta2: eng.spec.beta2,
-            eps: eng.spec.eps,
-            use_artifact,
-        };
-        let mut lp = ServerLoop::new(c, init.clone(), opt, &data,
-                                     &partition, eval.clone(), 9);
-        lp.run("x", 0, eng).unwrap();
-        (lp.server.theta.clone(), lp.comm.uploads)
-    };
-    let (theta_pallas, up_a) = run(&mut eng, true);
-    let (theta_native, up_b) = run(&mut eng, false);
-    assert_eq!(up_a, up_b, "upload decisions must match");
-    let drift = cada::tensor::sqnorm_diff(&theta_pallas, &theta_native);
-    assert!(drift < 1e-6, "trajectory drift {drift}");
-}
-
-#[test]
-fn artifact_innov_matches_native_decisions() {
-    let mut eng = engine();
-    let data = dataset(300, 21);
-    let mut rng = Rng::new(22);
-    let partition =
-        Partition::build(PartitionScheme::Uniform, &data, 3, &mut rng);
-    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
-    let init = eng.init_theta().unwrap();
-    let run = |eng: &mut Engine, use_artifact_innov: bool| {
-        let mut c = cfg(eng, RuleKind::Cada2 { c: 0.5 }, 20);
-        c.use_artifact_innov = use_artifact_innov;
-        let opt = amsgrad(eng, 0.05);
-        let mut lp = ServerLoop::new(c, init.clone(), opt, &data,
-                                     &partition, eval.clone(), 9);
-        lp.run("x", 0, eng).unwrap();
-        lp.comm.uploads
-    };
-    assert_eq!(run(&mut eng, true), run(&mut eng, false));
-}
-
-#[test]
 fn heterogeneous_partition_still_converges() {
-    let mut eng = engine();
+    let spec = spec();
+    let mut compute = NativeLogReg::for_spec(8, spec.p_pad);
     let data = dataset(600, 5);
     let mut rng = Rng::new(6);
     let partition = Partition::build(
         PartitionScheme::SizeSkew { alpha: 0.5, min_frac: 0.2 },
         &data, 6, &mut rng);
     assert!(partition.imbalance() > 1.2);
-    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
-    let init = eng.init_theta().unwrap();
-    let opt = amsgrad(&eng, 0.05);
-    let mut lp = ServerLoop::new(
-        cfg(&eng, RuleKind::Cada2 { c: 0.8 }, 50),
-        init, opt, &data, &partition, eval, 13);
-    let curve = lp.run("cada2", 0, &mut eng).unwrap();
+    let eval = data.gather(&(0..spec.eval_batch).collect::<Vec<_>>());
+    let mut algo = Cada::new(cada_cfg(RuleKind::Cada2 { c: 0.8 }, 0.05));
+    let mut trainer = Trainer::builder()
+        .algorithm(&mut algo)
+        .dataset(&data)
+        .partition(&partition)
+        .eval_batch(eval)
+        .init_theta(vec![0.0; spec.p_pad])
+        .iters(50)
+        .eval_every(10)
+        .batch(spec.batch)
+        .seed(13)
+        .build()
+        .unwrap();
+    let curve = trainer.run(0, &mut compute).unwrap();
     assert!(curve.final_loss() < curve.points[0].loss);
 }
 
 #[test]
 fn upload_byte_accounting_matches_spec() {
-    let mut eng = engine();
+    let spec = spec();
+    let mut compute = NativeLogReg::for_spec(8, spec.p_pad);
     let data = dataset(200, 31);
     let mut rng = Rng::new(32);
     let partition =
         Partition::build(PartitionScheme::Uniform, &data, 2, &mut rng);
-    let eval = data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
-    let init = eng.init_theta().unwrap();
-    let opt = amsgrad(&eng, 0.05);
-    let mut lp = ServerLoop::new(cfg(&eng, RuleKind::Always, 10),
-                                 init, opt, &data, &partition, eval, 1);
-    lp.run("adam", 0, &mut eng).unwrap();
-    assert_eq!(lp.comm.uploads, 20);
-    assert_eq!(lp.comm.upload_bytes,
-               20 * eng.spec.upload_bytes() as u64);
+    let eval = data.gather(&(0..spec.eval_batch).collect::<Vec<_>>());
+    let mut algo = Cada::new(cada_cfg(RuleKind::Always, 0.05));
+    let mut trainer = Trainer::builder()
+        .algorithm(&mut algo)
+        .dataset(&data)
+        .partition(&partition)
+        .eval_batch(eval)
+        .init_theta(vec![0.0; spec.p_pad])
+        .iters(10)
+        .eval_every(10)
+        .batch(spec.batch)
+        .upload_bytes(spec.upload_bytes())
+        .seed(1)
+        .build()
+        .unwrap();
+    trainer.run(0, &mut compute).unwrap();
+    assert_eq!(trainer.comm.uploads, 20);
+    assert_eq!(trainer.comm.upload_bytes,
+               20 * spec.upload_bytes() as u64);
+}
+
+#[test]
+fn all_six_methods_run_through_the_one_trainer() {
+    // The acceptance gate for the API redesign: every method family goes
+    // through the single Trainer::builder() entry point and descends.
+    use cada::algorithms::{FedAdam, FedAdamCfg, FedAvg, LocalMomentum};
+
+    let spec = spec();
+    let mut compute = NativeLogReg::for_spec(8, spec.p_pad);
+    let data = dataset(600, 11);
+    let mut rng = Rng::new(12);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 4, &mut rng);
+    let eval = data.gather(&(0..spec.eval_batch).collect::<Vec<_>>());
+
+    let sgd = Optimizer::Sgd { eta: Schedule::Constant(0.1) };
+    let mut algos: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(Cada::new(cada_cfg(RuleKind::Always, 0.05))),
+        Box::new(Cada::new(cada_cfg(RuleKind::Cada1 { c: 0.6 }, 0.05))),
+        Box::new(Cada::new(cada_cfg(RuleKind::Cada2 { c: 0.6 }, 0.05))),
+        Box::new(Cada::new(CadaCfg::basic(RuleKind::Lag { c: 0.6 }, sgd))),
+        Box::new(Cada::new(cada_cfg(RuleKind::Periodic { h: 4 }, 0.05))),
+        Box::new(Cada::new({
+            // Never uploads adaptively; keep the forced refresh tight so
+            // the stale-aggregate walk still descends
+            let mut cfg = cada_cfg(RuleKind::Never, 0.05);
+            cfg.max_delay = 5;
+            cfg
+        })),
+        Box::new(FedAvg::new(0.1, 4)),
+        Box::new(FedAdam::new(FedAdamCfg {
+            alpha_local: 0.1,
+            alpha_server: 0.05,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            h: 4,
+        })),
+        Box::new(LocalMomentum::new(0.05, 0.9, 4)),
+    ];
+    for algo in &mut algos {
+        let name = algo.name();
+        let mut trainer = Trainer::builder()
+            .algorithm(algo.as_mut())
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval.clone())
+            .init_theta(vec![0.0; spec.p_pad])
+            .iters(80)
+            .eval_every(20)
+            .batch(spec.batch)
+            .seed(9)
+            .build()
+            .unwrap();
+        let curve = trainer.run(0, &mut compute).unwrap();
+        assert!(
+            curve.final_loss() < curve.points[0].loss,
+            "{name} did not descend: {} -> {}",
+            curve.points[0].loss,
+            curve.final_loss()
+        );
+    }
+}
+
+/// The three-layer PJRT stack — needs `--features pjrt` + artifacts.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use cada::runtime::{Engine, Manifest};
+    use cada::tensor;
+
+    fn engine() -> Engine {
+        let m = Manifest::load("artifacts").expect(
+            "artifacts missing — run `make artifacts` before `cargo test \
+             --features pjrt`",
+        );
+        Engine::new(&m, "test_logreg").unwrap()
+    }
+
+    fn amsgrad(engine: &Engine, alpha: f32, use_artifact: bool)
+               -> Optimizer {
+        Optimizer::Amsgrad {
+            alpha: Schedule::Constant(alpha),
+            beta1: engine.spec.beta1,
+            beta2: engine.spec.beta2,
+            eps: engine.spec.eps,
+            use_artifact,
+        }
+    }
+
+    #[test]
+    fn cada2_trains_on_pjrt_stack_and_saves_uploads() {
+        let mut eng = engine();
+        let data = dataset(600, 1);
+        let mut rng = Rng::new(2);
+        let partition =
+            Partition::build(PartitionScheme::Uniform, &data, 5, &mut rng);
+        let eval =
+            data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
+        let init = eng.init_theta().unwrap();
+        let iters = 100;
+
+        let mut run = |eng: &mut Engine, rule: RuleKind| {
+            let mut cfg = CadaCfg::basic(rule, amsgrad(eng, 0.05, true));
+            cfg.max_delay = 20;
+            let mut algo = Cada::new(cfg);
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval.clone())
+                .init_theta(init.clone())
+                .iters(iters)
+                .eval_every(10)
+                .batch(eng.spec.batch)
+                .upload_bytes(eng.spec.upload_bytes())
+                .seed(3)
+                .build()
+                .unwrap();
+            let curve = trainer.run(0, eng).unwrap();
+            (curve, trainer.comm.uploads)
+        };
+        let (adam_curve, adam_uploads) = run(&mut eng, RuleKind::Always);
+        let (cada_curve, cada_uploads) =
+            run(&mut eng, RuleKind::Cada2 { c: 0.4 });
+
+        assert_eq!(adam_uploads, (iters * 5) as u64);
+        assert!(cada_uploads < adam_uploads,
+                "cada {cada_uploads} vs adam {adam_uploads}");
+        assert!(adam_curve.final_loss() < 0.8 * adam_curve.points[0].loss);
+        assert!(cada_curve.final_loss() < 0.8 * cada_curve.points[0].loss);
+    }
+
+    #[test]
+    fn artifact_and_native_update_paths_agree_in_training() {
+        // Same run with the Pallas update artifact on/off must give
+        // (nearly) identical trajectories.
+        let mut eng = engine();
+        let data = dataset(300, 11);
+        let mut rng = Rng::new(12);
+        let partition =
+            Partition::build(PartitionScheme::Uniform, &data, 3, &mut rng);
+        let eval =
+            data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
+        let init = eng.init_theta().unwrap();
+
+        let mut run = |eng: &mut Engine, use_artifact: bool| {
+            let mut cfg = CadaCfg::basic(
+                RuleKind::Cada2 { c: 0.5 },
+                amsgrad(eng, 0.05, use_artifact),
+            );
+            cfg.max_delay = 20;
+            let mut algo = Cada::new(cfg);
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval.clone())
+                .init_theta(init.clone())
+                .iters(25)
+                .eval_every(5)
+                .batch(eng.spec.batch)
+                .seed(9)
+                .build()
+                .unwrap();
+            trainer.run(0, eng).unwrap();
+            let uploads = trainer.comm.uploads;
+            drop(trainer);
+            (algo.server.theta.clone(), uploads)
+        };
+        let (theta_pallas, up_a) = run(&mut eng, true);
+        let (theta_native, up_b) = run(&mut eng, false);
+        assert_eq!(up_a, up_b, "upload decisions must match");
+        let drift = tensor::sqnorm_diff(&theta_pallas, &theta_native);
+        assert!(drift < 1e-6, "trajectory drift {drift}");
+    }
+
+    #[test]
+    fn artifact_innov_matches_native_decisions() {
+        let mut eng = engine();
+        let data = dataset(300, 21);
+        let mut rng = Rng::new(22);
+        let partition =
+            Partition::build(PartitionScheme::Uniform, &data, 3, &mut rng);
+        let eval =
+            data.gather(&(0..eng.spec.eval_batch).collect::<Vec<_>>());
+        let init = eng.init_theta().unwrap();
+        let mut run = |eng: &mut Engine, use_artifact_innov: bool| {
+            let mut cfg = CadaCfg::basic(
+                RuleKind::Cada2 { c: 0.5 },
+                amsgrad(eng, 0.05, true),
+            );
+            cfg.max_delay = 20;
+            cfg.use_artifact_innov = use_artifact_innov;
+            let mut algo = Cada::new(cfg);
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval.clone())
+                .init_theta(init.clone())
+                .iters(20)
+                .eval_every(5)
+                .batch(eng.spec.batch)
+                .seed(9)
+                .build()
+                .unwrap();
+            trainer.run(0, eng).unwrap();
+            trainer.comm.uploads
+        };
+        assert_eq!(run(&mut eng, true), run(&mut eng, false));
+    }
 }

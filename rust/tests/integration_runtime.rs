@@ -1,7 +1,9 @@
 //! Integration: PJRT-backed Engine vs the native rust comparator.
 //!
-//! These tests require `make artifacts` to have run (the Makefile's `test`
-//! target guarantees it); they fail with a clear message otherwise.
+//! These tests require the `pjrt` cargo feature AND `make artifacts` to
+//! have run (the Makefile's `test` target guarantees it); the default
+//! artifact-free build compiles them out.
+#![cfg(feature = "pjrt")]
 
 use cada::data::{synthetic, Dataset};
 use cada::runtime::native::NativeLogReg;

@@ -2,11 +2,11 @@
 //! staleness caps, the aggregate-gradient recursion, routing decisions,
 //! history windows, partitions and tensor kernels.
 
+use cada::algorithms::{Cada, CadaCfg, Trainer};
 use cada::comm::CostModel;
 use cada::config::Schedule;
 use cada::coordinator::history::DeltaHistory;
 use cada::coordinator::rules::{decide, RuleKind};
-use cada::coordinator::scheduler::{LoopCfg, ServerLoop};
 use cada::coordinator::server::Optimizer;
 use cada::data::{Dataset, Partition, PartitionScheme};
 use cada::runtime::native::NativeLogReg;
@@ -54,22 +54,33 @@ fn prop_staleness_never_exceeds_max_delay() {
                                              &data, workers, &mut rng);
             let mut compute = NativeLogReg::for_spec(6, 1024);
             let eval = data.gather(&[0, 1, 2, 3]);
-            let mut cfg = LoopCfg::basic(rule, 25, 8);
-            cfg.max_delay = max_delay;
-            let mut lp = ServerLoop::new(
-                cfg, vec![0.0; 1024],
+            let mut cfg = CadaCfg::basic(
+                rule,
                 Optimizer::Amsgrad {
                     alpha: Schedule::Constant(0.05),
                     beta1: 0.9, beta2: 0.999, eps: 1e-8,
                     use_artifact: false,
                 },
-                &data, &partition, eval, seed ^ 1);
+            );
+            cfg.max_delay = max_delay;
+            let mut algo = Cada::new(cfg);
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval)
+                .init_theta(vec![0.0; 1024])
+                .iters(25)
+                .batch(8)
+                .seed(seed ^ 1)
+                .build()
+                .map_err(|e| e.to_string())?;
             for k in 0..25 {
-                lp.step(k, &mut compute).map_err(|e| e.to_string())?;
-                if lp.max_staleness() > max_delay {
+                trainer.step(k, &mut compute).map_err(|e| e.to_string())?;
+                if trainer.max_staleness() > max_delay {
                     return Err(format!(
                         "staleness {} > D {max_delay} at k={k}",
-                        lp.max_staleness()
+                        trainer.max_staleness()
                     ));
                 }
             }
@@ -93,23 +104,36 @@ fn prop_aggregate_equals_mean_of_stale_gradients() {
                                              &data, workers, &mut rng);
             let mut compute = NativeLogReg::for_spec(6, 1024);
             let eval = data.gather(&[0, 1]);
-            let mut cfg = LoopCfg::basic(RuleKind::Cada2 { c: 1.0 }, 15, 8);
-            cfg.max_delay = 5;
-            let mut lp = ServerLoop::new(
-                cfg, vec![0.0; 1024],
+            let mut cfg = CadaCfg::basic(
+                RuleKind::Cada2 { c: 1.0 },
                 Optimizer::Amsgrad {
                     alpha: Schedule::Constant(0.05),
                     beta1: 0.9, beta2: 0.999, eps: 1e-8,
                     use_artifact: false,
                 },
-                &data, &partition, eval, seed ^ 2);
+            );
+            cfg.max_delay = 5;
+            let mut algo = Cada::new(cfg);
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval)
+                .init_theta(vec![0.0; 1024])
+                .iters(15)
+                .batch(8)
+                .seed(seed ^ 2)
+                .build()
+                .map_err(|e| e.to_string())?;
             for k in 0..15 {
-                lp.step(k, &mut compute).map_err(|e| e.to_string())?;
-                let m = lp.workers.len() as f32;
+                trainer.step(k, &mut compute).map_err(|e| e.to_string())?;
+                // typed access to the algorithm under training
+                let cada: &Cada = trainer.algo();
+                let m = cada.workers.len() as f32;
                 for i in (0..1024).step_by(97) {
-                    let direct: f32 = lp.workers.iter()
+                    let direct: f32 = cada.workers.iter()
                         .map(|w| w.g_stale[i]).sum::<f32>() / m;
-                    let agg = lp.server.grad_agg[i];
+                    let agg = cada.server.grad_agg[i];
                     if (agg - direct).abs() > 1e-4 {
                         return Err(format!(
                             "k={k} i={i}: agg {agg} vs direct {direct}"));

@@ -1,0 +1,209 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This build runs without crates.io access, so the subset of `anyhow`
+//! the workspace actually uses is reimplemented here: [`Error`],
+//! [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros. The API
+//! is call-compatible with the real crate for that subset, so swapping
+//! the path dependency for `anyhow = "1"` later is a one-line change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed dynamic error with source-chain formatting.
+///
+/// `{}` prints the outermost message; `{:#}` prints the full chain
+/// separated by `: ` (matching real-anyhow alternate formatting);
+/// `{:?}` prints the message plus a `Caused by:` list.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            inner: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Iterate the chain: the error itself, then its sources.
+    pub fn chain(&self) -> Chain<'_> {
+        let first: &(dyn StdError + 'static) = self.inner.as_ref();
+        Chain { next: Some(first) }
+    }
+
+    /// The deepest source in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+/// Iterator over an [`Error`]'s source chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next.take()?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            let mut source = self.inner.source();
+            while let Some(s) = source {
+                write!(f, ": {s}")?;
+                source = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`,
+// exactly like real anyhow — that keeps this blanket `From` coherent
+// alongside the std reflexive `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+/// A plain-string error (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(Error::from(io_err()))
+        }
+        fn g() -> Result<usize> {
+            let n: usize = "12x".parse()?;
+            Ok(n)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "disk on fire");
+        assert!(g().unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 7 {
+                bail!("unlucky {}", n);
+            }
+            Ok(n)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "n too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky 7");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn alternate_prints_chain() {
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str("outer")
+            }
+        }
+        impl StdError for Outer {
+            fn source(&self) -> Option<&(dyn StdError + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e: Error = Outer(io_err()).into();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: disk on fire");
+        assert_eq!(e.chain().count(), 2);
+        assert_eq!(e.root_cause().to_string(), "disk on fire");
+    }
+}
