@@ -8,9 +8,12 @@
 //! same loss with a small fraction of Adam's communication uploads.
 //!
 //! Every method is one `Algorithm` implementation; the round lifecycle
-//! (`broadcast → local_step → aggregate → server_update`) and everything
-//! else — the loop, eval cadence, RNG forking, comm accounting — live in
-//! the one generic `Trainer` built below.
+//! (`broadcast → worker jobs → aggregate → server_update`) and everything
+//! else — the loop, eval cadence, RNG forking, the execution transport,
+//! link models and comm accounting — live in the one generic `Trainer`
+//! built below. Add `--transport threaded` semantics by calling
+//! `.transport(TransportKind::Threaded)` on the builder: bit-identical
+//! results, spread over persistent worker threads.
 
 use cada::prelude::*;
 use cada::telemetry::{render_table, SummaryRow};

@@ -10,7 +10,7 @@
 
 use cada::algorithms::{Cada, CadaCfg, Trainer};
 use cada::bench::{black_box, Runner};
-use cada::comm::CostModel;
+use cada::comm::{CostModel, TransportKind};
 use cada::config::Schedule;
 use cada::coordinator::rules::RuleKind;
 use cada::coordinator::server::Optimizer;
@@ -152,37 +152,46 @@ fn main() {
             use_artifact,
         }
     };
-    for (label, rule) in [
-        ("round: adam (always upload)", RuleKind::Always),
-        ("round: cada2 (adaptive)", RuleKind::Cada2 { c: 0.6 }),
-    ] {
-        let mut native = NativeLogReg::for_spec(8, p);
-        let mut algo = Cada::new(CadaCfg {
-            rule,
-            opt: amsgrad(0.9, 0.999, 1e-8, false),
-            max_delay: 50,
-            snapshot_every: 0,
-            d_max: 10,
-            use_artifact_innov: false,
-        });
-        let mut trainer = Trainer::builder()
-            .algorithm(&mut algo)
-            .dataset(&data)
-            .partition(&partition)
-            .eval_batch(eval.clone())
-            .init_theta(vec![0.0; p])
-            .iters(usize::MAX)
-            .batch(spec.batch)
-            .upload_bytes(spec.upload_bytes())
-            .cost_model(CostModel::free())
-            .seed(3)
-            .build()
-            .expect("trainer build");
-        let mut k = 0u64;
-        r.bench(&format!("{label} [native backend]"), || {
-            trainer.step(k, &mut native).unwrap();
-            k += 1;
-        });
+    // inproc vs threaded: the per-round overhead of the message-passing
+    // engine (tiny model => dispatch cost dominates; this is the floor,
+    // larger specs amortise it)
+    for transport in [TransportKind::InProc, TransportKind::Threaded] {
+        for (label, rule) in [
+            ("round: adam (always upload)", RuleKind::Always),
+            ("round: cada2 (adaptive)", RuleKind::Cada2 { c: 0.6 }),
+        ] {
+            let mut native = NativeLogReg::for_spec(8, p);
+            let mut algo = Cada::new(CadaCfg {
+                rule,
+                opt: amsgrad(0.9, 0.999, 1e-8, false),
+                max_delay: 50,
+                snapshot_every: 0,
+                d_max: 10,
+                use_artifact_innov: false,
+            });
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval.clone())
+                .init_theta(vec![0.0; p])
+                .iters(usize::MAX)
+                .batch(spec.batch)
+                .upload_bytes(spec.upload_bytes())
+                .cost_model(CostModel::free())
+                .transport(transport)
+                .seed(3)
+                .build()
+                .expect("trainer build");
+            let mut k = 0u64;
+            r.bench(
+                &format!("{label} [native, {}]", transport.name()),
+                || {
+                    trainer.step(k, &mut native).unwrap();
+                    k += 1;
+                },
+            );
+        }
     }
     // same rounds on the PJRT backend
     if let Some(eng) = eng.as_mut() {
@@ -218,6 +227,11 @@ fn main() {
                 k += 1;
             });
         }
+    }
+    // CI uploads this as the BENCH_engine.json perf-trajectory artifact
+    if let Ok(path) = std::env::var("CADA_BENCH_JSON") {
+        r.write_json(&path).expect("write bench summary json");
+        println!("\nbench summary -> {path}");
     }
     println!("\nmicro_hotpath done ({} benchmarks)", r.results.len());
 }

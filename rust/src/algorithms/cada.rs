@@ -1,23 +1,30 @@
 //! The server-centric family as one [`Algorithm`]: CADA1/2, stochastic
 //! LAG, and distributed Adam/SGD (rules `Always`/`Periodic`/`Never`),
 //! selected via [`RuleKind`] — Algorithm 1 of the paper mapped onto the
-//! `broadcast → local_step → aggregate → server_update` lifecycle.
+//! `broadcast → worker jobs → aggregate → server_update` lifecycle.
 //!
 //! * `broadcast` — refresh the CADA1 snapshot every D iterations, count
-//!   the theta^k broadcast, and freeze this round's drift threshold RHS.
-//! * `local_step` — lines 5–14: each worker evaluates its rule LHS
-//!   against the frozen RHS and decides whether to upload.
-//! * `aggregate` — Eq. 3: fold the uploaded innovations delta_m/M into
-//!   the server aggregate, in worker order.
+//!   the theta^k broadcast, freeze this round's drift threshold RHS, and
+//!   freeze theta^k / the snapshot behind `Arc`s for the worker jobs.
+//! * `make_step`/`absorb_step` — lines 5–14: each worker job evaluates
+//!   its rule LHS against the frozen RHS and decides whether to upload;
+//!   jobs own their [`WorkerState`] for the duration, so any transport
+//!   can run them concurrently, and outcomes fold back in worker order.
+//! * `aggregate` — Eq. 3: fold the settled (`ctx.fresh`) innovations
+//!   delta_m/M into the server aggregate, in worker order; under the
+//!   semi-sync policy, `ctx.deferred` stragglers are queued and folded
+//!   stale at the top of the next round's aggregate.
 //! * `server_update` — Eq. 2 (AMSGrad) or Eq. 4 (SGD), then push the
 //!   squared step norm into the drift history ring.
 
+use std::sync::Arc;
+
 use super::{Algorithm, AlgorithmKind, RoundCtx};
-use crate::comm::RoundEvent;
+use crate::comm::{JobOut, RoundEvent, WorkerJob};
 use crate::coordinator::history::DeltaHistory;
 use crate::coordinator::rules::RuleKind;
 use crate::coordinator::server::{Optimizer, ServerState};
-use crate::coordinator::worker::WorkerState;
+use crate::coordinator::worker::{WorkerState, WorkerStep};
 use crate::data::Batch;
 use crate::runtime::Compute;
 
@@ -62,10 +69,27 @@ pub struct Cada {
     pub history: DeltaHistory,
     /// CADA1 snapshot theta-tilde (refreshed every D iterations)
     snapshot: Vec<f32>,
+    /// round-frozen theta^k shared with the worker jobs
+    round_theta: Arc<Vec<f32>>,
+    /// round-frozen snapshot (CADA1 only)
+    round_snapshot: Option<Arc<Vec<f32>>>,
     /// this round's frozen drift threshold
     rhs: f64,
     /// workers that decided to upload this round (|M^k| = uploaded.len())
     uploaded: Vec<usize>,
+    /// semi-sync stragglers: innovations that arrived (in finite
+    /// simulated time) after the quorum closed, folded stale at the next
+    /// round's aggregate. This is a deliberate one-round-late
+    /// simplification: a straggler whose arrival time exceeds a whole
+    /// round still lands at k+1 (the event clock prices it, the fold
+    /// schedule does not). Dead-link uploads (infinite arrival) never
+    /// enter the queue — the engine classifies them as lost. Entries
+    /// still queued when the run ends are in-flight transmissions the
+    /// server never waits for — charged as uploads (the bytes were sent)
+    /// but never applied, exactly like stopping a real deployment
+    /// mid-round; [`Cada::stale_backlog`] exposes the tail (at most M-1
+    /// entries).
+    stale_queue: Vec<Vec<f32>>,
     lhs_sum: f64,
     lhs_count: usize,
 }
@@ -78,8 +102,11 @@ impl Cada {
             workers: Vec::new(),
             history: DeltaHistory::new(cfg.d_max.max(1)),
             snapshot: Vec::new(),
+            round_theta: Arc::new(Vec::new()),
+            round_snapshot: None,
             rhs: 0.0,
             uploaded: Vec::new(),
+            stale_queue: Vec::new(),
             lhs_sum: 0.0,
             lhs_count: 0,
             cfg,
@@ -89,6 +116,11 @@ impl Cada {
     /// Upload count of the round most recently completed.
     pub fn last_round_uploads(&self) -> usize {
         self.uploaded.len()
+    }
+
+    /// Straggler innovations currently awaiting their stale fold.
+    pub fn stale_backlog(&self) -> usize {
+        self.stale_queue.len()
     }
 }
 
@@ -111,6 +143,7 @@ impl Algorithm for Cada {
             .collect();
         self.history = DeltaHistory::new(self.cfg.d_max);
         self.snapshot = init_theta.to_vec();
+        self.stale_queue.clear();
         Ok(())
     }
 
@@ -130,36 +163,63 @@ impl Algorithm for Cada {
         {
             self.snapshot.copy_from_slice(&self.server.theta);
         }
-        // line 3: broadcast theta^k (counted once per worker)
-        ctx.comm
-            .record_broadcast(ctx.m, ctx.upload_bytes, ctx.cost_model);
-        // freeze this round's threshold: every worker compares against the
-        // same RHS even though the history mutates only at round end
+        // line 3: broadcast theta^k (counted once per worker; the event
+        // clock advances by the slowest download across the links)
+        ctx.count_broadcast(ctx.upload_bytes);
+        // freeze this round's shared state: every worker job compares
+        // against the same RHS and reads the same theta^k/snapshot even
+        // though jobs may run concurrently on worker threads
         self.rhs = self.history.rhs(self.cfg.rule.c());
+        self.round_theta = Arc::new(self.server.theta.clone());
+        self.round_snapshot = if self.cfg.rule.needs_snapshot() {
+            Some(Arc::new(self.snapshot.clone()))
+        } else {
+            None
+        };
         self.uploaded.clear();
         self.lhs_sum = 0.0;
         self.lhs_count = 0;
         Ok(())
     }
 
-    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
-                  compute: &mut dyn Compute) -> anyhow::Result<()> {
-        let snapshot = self
-            .cfg
-            .rule
-            .needs_snapshot()
-            .then_some(self.snapshot.as_slice());
-        let step = self.workers[w].step(
-            ctx.k,
-            self.cfg.rule,
-            self.cfg.max_delay,
-            &self.server.theta,
-            snapshot,
-            self.rhs,
-            batch,
-            compute,
-            self.cfg.use_artifact_innov,
-        )?;
+    fn make_step(&mut self, k: u64, w: usize, batch: Batch)
+                 -> anyhow::Result<WorkerJob> {
+        // the job owns the worker's state for the round; a zero-sized
+        // placeholder keeps the slot until absorb_step returns it
+        let state = std::mem::replace(
+            &mut self.workers[w],
+            WorkerState::new(w, 0, self.cfg.rule),
+        );
+        let theta = Arc::clone(&self.round_theta);
+        let snapshot = self.round_snapshot.clone();
+        let rule = self.cfg.rule;
+        let max_delay = self.cfg.max_delay;
+        let use_artifact_innov = self.cfg.use_artifact_innov;
+        let rhs = self.rhs;
+        Ok(Box::new(move |compute: &mut dyn Compute| {
+            let mut state = state;
+            let step = state.step(
+                k,
+                rule,
+                max_delay,
+                &theta,
+                snapshot.as_ref().map(|s| s.as_slice()),
+                rhs,
+                &batch,
+                compute,
+                use_artifact_innov,
+            )?;
+            Ok(Box::new((state, step)) as JobOut)
+        }))
+    }
+
+    fn absorb_step(&mut self, ctx: &mut RoundCtx, w: usize, out: JobOut)
+                   -> anyhow::Result<()> {
+        let (state, step) = *out
+            .downcast::<(WorkerState, WorkerStep)>()
+            .map_err(|_| anyhow::anyhow!(
+                "cada: unexpected worker-job outcome type"))?;
+        self.workers[w] = state;
         ctx.comm.record_grad_evals(step.grad_evals);
         if step.lhs.is_finite() {
             self.lhs_sum += step.lhs;
@@ -171,11 +231,22 @@ impl Algorithm for Cada {
         Ok(())
     }
 
+    fn pending_uploads(&self, _k: u64) -> Vec<usize> {
+        self.uploaded.clone()
+    }
+
     fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
+        // semi-sync stragglers from the previous round arrive first:
+        // their innovations fold stale (Eq. 3 one round late)
+        for delta in std::mem::take(&mut self.stale_queue) {
+            self.server.apply_innovation(&delta);
+        }
         // Eq. 3, in worker order (float-identical to folding inline)
-        for &w in &self.uploaded {
+        for &w in &ctx.fresh {
             self.server.apply_innovation(self.workers[w].last_delta());
-            ctx.comm.record_upload(ctx.upload_bytes, ctx.cost_model);
+        }
+        for &w in &ctx.deferred {
+            self.stale_queue.push(self.workers[w].last_delta().to_vec());
         }
         Ok(())
     }
@@ -254,6 +325,8 @@ mod tests {
         let curve = trainer.run(0, &mut compute).unwrap();
         assert_eq!(trainer.comm.uploads, 20 * 5);
         assert_eq!(trainer.comm.grad_evals, 20 * 5);
+        // every worker shows up in the per-worker breakdown
+        assert_eq!(trainer.comm.worker_uploads, vec![20; 5]);
         assert!(curve.final_loss() < curve.points[0].loss,
                 "loss should decrease: {curve:?}");
     }

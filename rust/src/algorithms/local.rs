@@ -6,13 +6,23 @@
 //!
 //! Lifecycle mapping (see [`crate::algorithms`] docs): `broadcast` is a
 //! no-op (models were pushed down when the previous averaging round
-//! completed), `local_step` is one local SGD/momentum step, `aggregate`
-//! uploads and averages local models on rounds with `(k+1) % H == 0`,
-//! and `server_update` applies the server-side rule (identity for
-//! FedAvg/local momentum, Adam on the averaged pseudo-gradient for
-//! FedAdam) and broadcasts the new global model back down.
+//! completed); `make_step` packages one local SGD/momentum step as a
+//! self-contained job owning the worker's local model and its gradient
+//! scratch (so any transport can run the M steps concurrently), and
+//! `absorb_step` returns them home; `aggregate` averages the local
+//! models on rounds with `(k+1) % H == 0`; `server_update` applies the
+//! server-side rule (identity for FedAvg/local momentum, Adam on the
+//! averaged pseudo-gradient for FedAdam) and broadcasts the new global
+//! model back down.
+//!
+//! Participation note: model averaging needs EVERY local model, so these
+//! methods always run fully synchronous — the engine forces
+//! [`Participation::Full`](crate::comm::Participation) for the
+//! `LocalUpdate` family and the semi-sync quorum only applies to the
+//! server-centric methods.
 
 use super::{Algorithm, AlgorithmKind, RoundCtx};
+use crate::comm::{JobOut, WorkerJob};
 use crate::data::Batch;
 use crate::runtime::Compute;
 use crate::tensor;
@@ -27,8 +37,9 @@ struct LocalModels {
     theta: Vec<f32>,
     /// per-worker local models
     thetas: Vec<Vec<f32>>,
-    /// gradient scratch (allocation-free hot path)
-    grad: Vec<f32>,
+    /// per-worker gradient scratch, moved through the worker jobs
+    /// (allocation-free hot path on every transport)
+    grads: Vec<Vec<f32>>,
 }
 
 impl LocalModels {
@@ -40,8 +51,12 @@ impl LocalModels {
         anyhow::ensure!(self.h >= 1, "averaging period H must be >= 1");
         self.theta = init_theta.to_vec();
         self.thetas = vec![init_theta.to_vec(); m];
-        self.grad = vec![0.0; init_theta.len()];
+        self.grads = vec![vec![0.0; init_theta.len()]; m];
         Ok(())
+    }
+
+    fn workers(&self) -> usize {
+        self.thetas.len()
     }
 
     /// Does round `k` end with an averaging round?
@@ -49,11 +64,25 @@ impl LocalModels {
         (k + 1) % self.h as u64 == 0
     }
 
-    /// All M workers upload their local model.
-    fn record_uploads(&self, ctx: &mut RoundCtx) {
-        for _ in 0..ctx.m {
-            ctx.comm.record_upload(ctx.upload_bytes, ctx.cost_model);
+    /// All M workers upload at averaging rounds; none otherwise.
+    fn pending_uploads(&self, k: u64) -> Vec<usize> {
+        if self.averaging_round(k) {
+            (0..self.workers()).collect()
+        } else {
+            Vec::new()
         }
+    }
+
+    /// Hand worker `w`'s local model + scratch to a job (placeholder
+    /// empties keep the slots until the outcome returns).
+    fn lend(&mut self, w: usize) -> (Vec<f32>, Vec<f32>) {
+        (std::mem::take(&mut self.thetas[w]),
+         std::mem::take(&mut self.grads[w]))
+    }
+
+    fn restore(&mut self, w: usize, theta_w: Vec<f32>, grad: Vec<f32>) {
+        self.thetas[w] = theta_w;
+        self.grads[w] = grad;
     }
 
     /// Mean of the local models, written into `dst`.
@@ -65,8 +94,7 @@ impl LocalModels {
 
     /// Broadcast the global model back to every worker.
     fn push_down(&mut self, ctx: &mut RoundCtx) {
-        ctx.comm
-            .record_broadcast(ctx.m, ctx.upload_bytes, ctx.cost_model);
+        ctx.count_broadcast(ctx.upload_bytes);
         for t in &mut self.thetas {
             t.copy_from_slice(&self.theta);
         }
@@ -106,18 +134,36 @@ impl Algorithm for FedAvg {
         Ok(())
     }
 
-    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
-                  compute: &mut dyn Compute) -> anyhow::Result<()> {
-        compute.grad(&self.models.thetas[w], batch, &mut self.models.grad)?;
+    fn make_step(&mut self, _k: u64, w: usize, batch: Batch)
+                 -> anyhow::Result<WorkerJob> {
+        let (theta_w, grad) = self.models.lend(w);
+        let eta = self.eta;
+        Ok(Box::new(move |compute: &mut dyn Compute| {
+            let mut theta_w = theta_w;
+            let mut grad = grad;
+            compute.grad(&theta_w, &batch, &mut grad)?;
+            tensor::sgd_update(&mut theta_w, &grad, eta);
+            Ok(Box::new((theta_w, grad)) as JobOut)
+        }))
+    }
+
+    fn absorb_step(&mut self, ctx: &mut RoundCtx, w: usize, out: JobOut)
+                   -> anyhow::Result<()> {
+        let (theta_w, grad) = *out
+            .downcast::<(Vec<f32>, Vec<f32>)>()
+            .map_err(|_| anyhow::anyhow!(
+                "fedavg: unexpected worker-job outcome type"))?;
+        self.models.restore(w, theta_w, grad);
         ctx.comm.record_grad_evals(1);
-        tensor::sgd_update(&mut self.models.thetas[w], &self.models.grad,
-                           self.eta);
         Ok(())
+    }
+
+    fn pending_uploads(&self, k: u64) -> Vec<usize> {
+        self.models.pending_uploads(k)
     }
 
     fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
         if self.models.averaging_round(ctx.k) {
-            self.models.record_uploads(ctx);
             LocalModels::mean_local_into(&mut self.models.theta,
                                          &self.models.thetas);
         }
@@ -180,19 +226,40 @@ impl Algorithm for LocalMomentum {
         Ok(())
     }
 
-    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
-                  compute: &mut dyn Compute) -> anyhow::Result<()> {
-        compute.grad(&self.models.thetas[w], batch, &mut self.models.grad)?;
+    fn make_step(&mut self, _k: u64, w: usize, batch: Batch)
+                 -> anyhow::Result<WorkerJob> {
+        let (theta_w, grad) = self.models.lend(w);
+        let momentum = std::mem::take(&mut self.momenta[w]);
+        let (eta, beta) = (self.eta, self.beta);
+        Ok(Box::new(move |compute: &mut dyn Compute| {
+            let mut theta_w = theta_w;
+            let mut grad = grad;
+            let mut momentum = momentum;
+            compute.grad(&theta_w, &batch, &mut grad)?;
+            tensor::momentum_update(&mut theta_w, &mut momentum, &grad,
+                                    eta, beta);
+            Ok(Box::new((theta_w, grad, momentum)) as JobOut)
+        }))
+    }
+
+    fn absorb_step(&mut self, ctx: &mut RoundCtx, w: usize, out: JobOut)
+                   -> anyhow::Result<()> {
+        let (theta_w, grad, momentum) = *out
+            .downcast::<(Vec<f32>, Vec<f32>, Vec<f32>)>()
+            .map_err(|_| anyhow::anyhow!(
+                "local_momentum: unexpected worker-job outcome type"))?;
+        self.models.restore(w, theta_w, grad);
+        self.momenta[w] = momentum;
         ctx.comm.record_grad_evals(1);
-        tensor::momentum_update(&mut self.models.thetas[w],
-                                &mut self.momenta[w], &self.models.grad,
-                                self.eta, self.beta);
         Ok(())
+    }
+
+    fn pending_uploads(&self, k: u64) -> Vec<usize> {
+        self.models.pending_uploads(k)
     }
 
     fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
         if self.models.averaging_round(ctx.k) {
-            self.models.record_uploads(ctx);
             LocalModels::mean_local_into(&mut self.models.theta,
                                          &self.models.thetas);
             // average the momentum buffers as well
@@ -276,18 +343,36 @@ impl Algorithm for FedAdam {
         Ok(())
     }
 
-    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
-                  compute: &mut dyn Compute) -> anyhow::Result<()> {
-        compute.grad(&self.models.thetas[w], batch, &mut self.models.grad)?;
+    fn make_step(&mut self, _k: u64, w: usize, batch: Batch)
+                 -> anyhow::Result<WorkerJob> {
+        let (theta_w, grad) = self.models.lend(w);
+        let eta = self.cfg.alpha_local;
+        Ok(Box::new(move |compute: &mut dyn Compute| {
+            let mut theta_w = theta_w;
+            let mut grad = grad;
+            compute.grad(&theta_w, &batch, &mut grad)?;
+            tensor::sgd_update(&mut theta_w, &grad, eta);
+            Ok(Box::new((theta_w, grad)) as JobOut)
+        }))
+    }
+
+    fn absorb_step(&mut self, ctx: &mut RoundCtx, w: usize, out: JobOut)
+                   -> anyhow::Result<()> {
+        let (theta_w, grad) = *out
+            .downcast::<(Vec<f32>, Vec<f32>)>()
+            .map_err(|_| anyhow::anyhow!(
+                "fedadam: unexpected worker-job outcome type"))?;
+        self.models.restore(w, theta_w, grad);
         ctx.comm.record_grad_evals(1);
-        tensor::sgd_update(&mut self.models.thetas[w], &self.models.grad,
-                           self.cfg.alpha_local);
         Ok(())
+    }
+
+    fn pending_uploads(&self, k: u64) -> Vec<usize> {
+        self.models.pending_uploads(k)
     }
 
     fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
         if self.models.averaging_round(ctx.k) {
-            self.models.record_uploads(ctx);
             LocalModels::mean_local_into(&mut self.avg, &self.models.thetas);
         }
         Ok(())
@@ -363,6 +448,8 @@ mod tests {
         assert_eq!(comm.grad_evals, 80);
         // broadcasts only on averaging rounds: 4 rounds x 4 workers
         assert_eq!(comm.downloads, 16);
+        // per-worker breakdown: every worker uploaded at every round
+        assert_eq!(comm.worker_uploads, vec![4; 4]);
     }
 
     #[test]

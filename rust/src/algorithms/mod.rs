@@ -1,6 +1,7 @@
 //! The unified training API: one [`Algorithm`] trait covering every
 //! method the paper evaluates, driven by one generic
-//! [`Trainer`](trainer::Trainer).
+//! [`Trainer`](trainer::Trainer) over a transport-abstracted execution
+//! engine.
 //!
 //! # The round lifecycle
 //!
@@ -10,24 +11,31 @@
 //! fixed order each round `k`:
 //!
 //! 1. **`broadcast`** — server → workers. Server-centric methods ship
-//!    theta^k to every worker (and refresh the CADA1 snapshot);
-//!    local-update methods are a no-op here because their models were
-//!    pushed down when the previous averaging round completed.
-//! 2. **`local_step`** — once per worker, in worker order, with a
-//!    minibatch sampled by the Trainer from that worker's shard. CADA
-//!    workers evaluate their upload rule (Eqs. 5/7/10); local-update
-//!    workers take a local SGD/momentum step.
-//! 3. **`aggregate`** — workers → server. CADA folds the uploaded
-//!    gradient innovations into the aggregate (Eq. 3); local-update
-//!    methods, on averaging rounds (`(k+1) % H == 0`), upload and average
-//!    their local models.
+//!    theta^k to every worker (and refresh the CADA1 snapshot), freezing
+//!    the round's shared state behind `Arc`s; local-update methods are a
+//!    no-op here because their models were pushed down when the previous
+//!    averaging round completed.
+//! 2. **worker jobs** — `make_step` packages worker `w`'s computation
+//!    (rule check / local SGD step on a Trainer-sampled minibatch) as a
+//!    self-contained [`WorkerJob`]; the configured
+//!    [`Transport`](crate::comm::Transport) executes all M jobs —
+//!    sequentially in-process, or on persistent worker threads — and
+//!    `absorb_step` folds each outcome back **in worker order**, which
+//!    is what keeps every transport bit-identical.
+//! 3. **`aggregate`** — workers → server. The engine first settles the
+//!    round's upload set against the per-worker
+//!    [`LinkSet`](crate::comm::LinkSet) and participation policy
+//!    (fully-sync, or semi-sync "fastest K of M"); `aggregate` then folds
+//!    `ctx.fresh` uploads now and re-queues `ctx.deferred` stragglers
+//!    for a stale fold next round (Eq. 3, possibly delayed).
 //! 4. **`server_update`** — the server step. CADA applies AMSGrad/SGD on
 //!    the aggregate (Eq. 2/4) and records the drift history; FedAdam
 //!    applies server Adam to the averaged pseudo-gradient; local-update
 //!    methods then broadcast the new global model back down.
 //!
 //! The [`Trainer`] owns everything method-independent: the iteration
-//! loop, per-worker RNG streams, minibatch sampling, evaluation cadence,
+//! loop, per-worker RNG streams, minibatch sampling, the transport, the
+//! link models and event clock, evaluation cadence,
 //! [`Curve`](crate::telemetry::Curve) recording,
 //! [`CommStats`](crate::comm::CommStats) and the bounded
 //! [`EventTrace`](crate::comm::EventTrace). Algorithms only hold model
@@ -75,7 +83,7 @@ pub use cada::{Cada, CadaCfg};
 pub use local::{FedAdam, FedAdamCfg, FedAvg, LocalMomentum};
 pub use trainer::{TrainCfg, Trainer, TrainerBuilder};
 
-use crate::comm::{CommStats, CostModel, RoundEvent};
+use crate::comm::{CommStats, JobOut, LinkSet, RoundEvent, WorkerJob};
 use crate::data::Batch;
 use crate::runtime::Compute;
 
@@ -91,7 +99,8 @@ pub enum AlgorithmKind {
 /// Per-round context handed to every [`Algorithm`] lifecycle method.
 ///
 /// Owned by the [`Trainer`](trainer::Trainer); algorithms use it to
-/// account communication against the run's cost model.
+/// account communication against the run's per-worker link models and
+/// to learn the engine's participation verdict in `aggregate`.
 pub struct RoundCtx<'c> {
     /// current iteration k
     pub k: u64,
@@ -99,8 +108,25 @@ pub struct RoundCtx<'c> {
     pub m: usize,
     /// payload of one gradient/model upload, bytes
     pub upload_bytes: usize,
-    pub cost_model: &'c CostModel,
+    /// this run's per-worker link models
+    pub links: &'c LinkSet,
     pub comm: &'c mut CommStats,
+    /// participation verdict: uploads folded this round, worker order.
+    /// Set by the engine before `aggregate`; empty in earlier phases.
+    pub fresh: Vec<usize>,
+    /// uploads deferred to a stale fold next round (semi-sync stragglers)
+    pub deferred: Vec<usize>,
+}
+
+impl RoundCtx<'_> {
+    /// Count a model broadcast to all `m` workers and advance the event
+    /// clock by the slowest worker's download (broadcasts run in
+    /// parallel, so the round waits for the worst link, not the sum).
+    pub fn count_broadcast(&mut self, bytes: usize) {
+        self.comm.count_broadcast(self.m, bytes);
+        let dt = self.links.max_download_s(bytes);
+        self.comm.advance_clock(dt);
+    }
 }
 
 /// One distributed training method, expressed as the four-phase round
@@ -123,11 +149,27 @@ pub trait Algorithm {
     /// Phase 1 — server → workers, at the top of round `k`.
     fn broadcast(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()>;
 
-    /// Phase 2 — worker `w` processes its minibatch for round `k`.
-    fn local_step(&mut self, ctx: &mut RoundCtx, w: usize, batch: &Batch,
-                  compute: &mut dyn Compute) -> anyhow::Result<()>;
+    /// Phase 2a — package worker `w`'s round-`k` computation as a
+    /// self-contained, `Send` job: move the worker's own state and the
+    /// round-frozen shared tensors (behind `Arc`s) into the closure.
+    /// The transport may run it on any thread with any forked backend.
+    fn make_step(&mut self, k: u64, w: usize, batch: Batch)
+                 -> anyhow::Result<WorkerJob>;
 
-    /// Phase 3 — workers → server: fold this round's uploads.
+    /// Phase 2b — fold worker `w`'s job outcome back into the algorithm.
+    /// Called in worker order whatever the completion order was; this is
+    /// where per-worker state returns home and gradient evaluations are
+    /// accounted.
+    fn absorb_step(&mut self, ctx: &mut RoundCtx, w: usize, out: JobOut)
+                   -> anyhow::Result<()>;
+
+    /// Workers whose round-`k` outcome requests an upload, in worker
+    /// order. The engine prices these against the link models, applies
+    /// the participation policy, and passes the verdict to `aggregate`
+    /// via [`RoundCtx::fresh`] / [`RoundCtx::deferred`].
+    fn pending_uploads(&self, k: u64) -> Vec<usize>;
+
+    /// Phase 3 — workers → server: fold this round's settled uploads.
     fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()>;
 
     /// Phase 4 — the server-side model update closing round `k`.

@@ -1,10 +1,11 @@
-//! The generic training driver: one loop for every [`Algorithm`].
+//! The generic training driver: one engine loop for every [`Algorithm`].
 //!
-//! [`Trainer`] owns the method-independent machinery that `ServerLoop`
-//! and `LocalLoop` used to duplicate: the iteration loop, per-worker RNG
-//! forking, minibatch sampling, evaluation, curve recording,
-//! [`CommStats`] and the bounded [`EventTrace`]. It is built through
-//! [`TrainerBuilder`]:
+//! [`Trainer`] owns the method-independent machinery: the iteration
+//! loop, per-worker RNG forking, minibatch sampling, the
+//! [`Transport`](crate::comm::Transport) that executes worker jobs, the
+//! per-worker [`LinkSet`] + event clock, the participation policy,
+//! evaluation, curve recording, [`CommStats`] and the bounded
+//! [`EventTrace`]. It is built through [`TrainerBuilder`]:
 //!
 //! ```ignore
 //! let mut trainer = Trainer::builder()
@@ -14,6 +15,9 @@
 //!     .eval_batch(eval)
 //!     .init_theta(init)
 //!     .cost_model(CostModel::default())
+//!     .transport(TransportKind::Threaded)   // or InProc (default)
+//!     .semi_sync_k(8)                       // fastest 8 of M quorum
+//!     .jitter(0.5, 7)                       // straggler jitter (sigma, seed)
 //!     .eval_every(25)
 //!     .build()?;
 //! let curve = trainer.run(0, &mut compute)?;
@@ -22,21 +26,39 @@
 //! The trainer is generic over the algorithm (`Trainer<'_, Cada>` gives
 //! tests typed access to server/worker state via [`Trainer::algo`]);
 //! drivers that pick the method at runtime use `&mut dyn Algorithm`.
+//!
+//! # One round through the engine
+//!
+//! 1. `broadcast` (phase 1) — the algorithm freezes the round's shared
+//!    state and accounts the downlink against the slowest link.
+//! 2. The trainer samples every worker's minibatch from its own RNG
+//!    stream, asks the algorithm for M self-contained jobs
+//!    ([`Algorithm::make_step`]), and hands them to the transport —
+//!    inline, or fanned out to persistent worker threads. Outcomes come
+//!    back in worker order and fold via [`Algorithm::absorb_step`].
+//! 3. The engine prices the round's requested uploads against the
+//!    [`LinkSet`] (heterogeneous links, seeded straggler jitter),
+//!    applies the participation policy (fully-sync, or semi-sync
+//!    "fastest K of M" for server-centric methods), counts the uploads,
+//!    and advances the event clock by the slowest AWAITED upload.
+//! 4. `aggregate` folds the settled uploads (stragglers stale-fold next
+//!    round); `server_update` closes the round.
 
 use std::time::Instant;
 
-use super::{Algorithm, RoundCtx};
-use crate::comm::{CommStats, CostModel, EventTrace};
+use super::{Algorithm, AlgorithmKind, RoundCtx};
+use crate::comm::{
+    CommCfg, CommStats, CostModel, EventTrace, InProc, LinkSet,
+    Participation, Threaded, Transport, TransportKind, WorkerJob,
+};
 use crate::config::toml::{Doc, Value};
 use crate::data::{Batch, Dataset, Partition};
 use crate::runtime::Compute;
 use crate::telemetry::{Curve, CurvePoint};
 use crate::util::rng::Rng;
 
-/// Method-independent run configuration — the union of what the old
-/// `LoopCfg` and `LocalCfg` carried, minus the method-specific knobs
-/// (those live in [`CadaCfg`](super::CadaCfg) /
-/// [`FedAdamCfg`](super::FedAdamCfg) / the local methods' fields).
+/// Method-independent run configuration: the `[train]` knobs plus the
+/// `[comm]` engine section ([`CommCfg`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainCfg {
     pub iters: usize,
@@ -46,11 +68,15 @@ pub struct TrainCfg {
     pub batch: usize,
     /// base seed; worker streams are forked as `Rng::new(seed).fork(w+1)`
     pub seed: u64,
+    /// base link cost model (per-worker links derive from it via
+    /// `[comm.links]` multipliers)
     pub cost_model: CostModel,
     /// bytes of one gradient/model upload (manifest: 4 * p live floats)
     pub upload_bytes: usize,
     /// keep at most this many round events in the trace (0 disables)
     pub trace_cap: usize,
+    /// execution engine configuration (`[comm]` / `[comm.links]`)
+    pub comm: CommCfg,
 }
 
 impl Default for TrainCfg {
@@ -63,16 +89,23 @@ impl Default for TrainCfg {
             cost_model: CostModel::free(),
             upload_bytes: 0,
             trace_cap: 0,
+            comm: CommCfg::default(),
         }
     }
 }
 
+fn fmt_f64_array(v: &[f64]) -> String {
+    let items: Vec<String> = v.iter().map(|x| format!("{x}")).collect();
+    format!("[{}]", items.join(", "))
+}
+
 impl TrainCfg {
-    /// Render as a `[train]` TOML section (round-trips through
-    /// [`TrainCfg::from_doc`]). Seeds above 2^53 lose precision (TOML
-    /// numbers are f64 in our subset parser).
+    /// Render as `[train]` / `[train.cost_model]` / `[comm]` (+ optional
+    /// `[comm.links]`) TOML sections; round-trips exactly through
+    /// [`TrainCfg::from_doc`]. `seed` is emitted and parsed as an exact
+    /// integer token, so seeds above 2^53 survive unharmed.
     pub fn to_toml(&self) -> String {
-        format!(
+        let mut out = format!(
             "[train]\n\
              iters = {}\n\
              eval_every = {}\n\
@@ -84,7 +117,13 @@ impl TrainCfg {
              [train.cost_model]\n\
              latency_s = {}\n\
              down_bw = {}\n\
-             asymmetry = {}\n",
+             asymmetry = {}\n\
+             \n\
+             [comm]\n\
+             transport = \"{}\"\n\
+             semi_sync_k = {}\n\
+             jitter_sigma = {}\n\
+             jitter_seed = {}\n",
             self.iters,
             self.eval_every,
             self.batch,
@@ -94,33 +133,54 @@ impl TrainCfg {
             self.cost_model.latency_s,
             self.cost_model.down_bw,
             self.cost_model.asymmetry,
-        )
+            self.comm.transport.name(),
+            self.comm.semi_sync_k,
+            self.comm.jitter_sigma,
+            self.comm.jitter_seed,
+        );
+        let links = [
+            ("latency_mult", &self.comm.latency_mult),
+            ("bw_mult", &self.comm.bw_mult),
+            ("asymmetry_mult", &self.comm.asymmetry_mult),
+        ];
+        if links.iter().any(|(_, v)| !v.is_empty()) {
+            out.push_str("\n[comm.links]\n");
+            for (key, v) in links {
+                if !v.is_empty() {
+                    out.push_str(&format!("{key} = {}\n",
+                                          fmt_f64_array(v)));
+                }
+            }
+        }
+        out
     }
 
-    /// Parse a `[train]` (+ optional `[train.cost_model]`) section,
-    /// starting from defaults; unknown keys, non-numbers, and negative
-    /// or fractional integer fields are errors (a `-100` saturating
-    /// silently to 0 would otherwise turn a typo into an empty run).
+    /// Parse the `[train]` (+ optional `[train.cost_model]`, `[comm]`,
+    /// `[comm.links]`) sections, starting from defaults. Unknown keys
+    /// and non-numbers are errors; integer fields reject negative,
+    /// fractional, AND precision-losing float tokens (a seed written as
+    /// `1e300` or a `-100` silently saturating would otherwise corrupt a
+    /// run instead of failing it).
     pub fn from_doc(doc: &Doc) -> anyhow::Result<TrainCfg> {
         let mut cfg = TrainCfg::default();
         if let Some(section) = doc.sections.get("train") {
             for (key, value) in section {
-                let int = |v: &Value| -> anyhow::Result<f64> {
-                    let n = v.as_f64().ok_or_else(|| {
-                        anyhow::anyhow!("[train] {key} must be a number")
-                    })?;
-                    anyhow::ensure!(
-                        n >= 0.0 && n.fract() == 0.0,
-                        "[train] {key} must be a non-negative integer, \
-                         got {n}"
-                    );
-                    Ok(n)
+                let int = |v: &Value| -> anyhow::Result<u64> {
+                    v.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "[train] {key} must be a non-negative integer \
+                             representable without precision loss, got \
+                             {v:?}"
+                        )
+                    })
                 };
                 match key.as_str() {
                     "iters" => cfg.iters = int(value)? as usize,
-                    "eval_every" => cfg.eval_every = int(value)? as usize,
+                    "eval_every" => {
+                        cfg.eval_every = int(value)? as usize
+                    }
                     "batch" => cfg.batch = int(value)? as usize,
-                    "seed" => cfg.seed = int(value)? as u64,
+                    "seed" => cfg.seed = int(value)?,
                     "upload_bytes" => {
                         cfg.upload_bytes = int(value)? as usize
                     }
@@ -146,6 +206,69 @@ impl TrainCfg {
                 }
             }
         }
+        if let Some(section) = doc.sections.get("comm") {
+            for (key, value) in section {
+                match key.as_str() {
+                    "transport" => {
+                        let s = value.as_str().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "[comm] transport must be a string")
+                        })?;
+                        cfg.comm.transport = TransportKind::parse(s)?;
+                    }
+                    "semi_sync_k" => {
+                        cfg.comm.semi_sync_k =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] semi_sync_k must \
+                                                 be a non-negative integer")
+                            })? as usize;
+                    }
+                    "jitter_sigma" => {
+                        cfg.comm.jitter_sigma =
+                            value.as_f64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] jitter_sigma must \
+                                                 be a number")
+                            })?;
+                    }
+                    "jitter_seed" => {
+                        cfg.comm.jitter_seed =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] jitter_seed must \
+                                                 be an exact non-negative \
+                                                 integer")
+                            })?;
+                    }
+                    other => anyhow::bail!("unknown [comm] key '{other}'"),
+                }
+            }
+        }
+        if let Some(section) = doc.sections.get("comm.links") {
+            for (key, value) in section {
+                let arr = match value {
+                    Value::Arr(items) => items
+                        .iter()
+                        .map(|v| {
+                            v.as_f64().ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "[comm.links] {key} must be an array \
+                                     of numbers"
+                                )
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<f64>>>()?,
+                    _ => anyhow::bail!(
+                        "[comm.links] {key} must be an array of numbers"),
+                };
+                match key.as_str() {
+                    "latency_mult" => cfg.comm.latency_mult = arr,
+                    "bw_mult" => cfg.comm.bw_mult = arr,
+                    "asymmetry_mult" => cfg.comm.asymmetry_mult = arr,
+                    other => anyhow::bail!(
+                        "unknown [comm.links] key '{other}'"),
+                }
+            }
+        }
+        cfg.comm.validate()?;
         Ok(cfg)
     }
 }
@@ -159,6 +282,13 @@ pub struct Trainer<'a, A: Algorithm + ?Sized> {
     eval_batch: Batch,
     label: String,
     rngs: Vec<Rng>,
+    links: LinkSet,
+    /// lazily constructed on the first step (the threaded transport
+    /// forks per-worker backends off the compute handed to `step`/`run`)
+    transport: Option<Box<dyn Transport>>,
+    /// set when a round errors: worker state may have been moved into a
+    /// job that never came home, so further steps must not run
+    poisoned: bool,
     pub comm: CommStats,
     pub trace: EventTrace,
 }
@@ -190,33 +320,144 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         self.algo.theta()
     }
 
+    /// This run's per-worker link models.
+    pub fn links(&self) -> &LinkSet {
+        &self.links
+    }
+
     /// Maximum per-worker staleness (0 for local-update methods).
     pub fn max_staleness(&self) -> u32 {
         self.algo.max_staleness()
     }
 
-    /// Drive one full round `k` through the four lifecycle phases.
+    fn ensure_transport(&mut self, compute: &mut dyn Compute)
+                        -> anyhow::Result<()> {
+        if self.transport.is_some() {
+            return Ok(());
+        }
+        let m = self.rngs.len();
+        let transport: Box<dyn Transport> = match self.cfg.comm.transport {
+            TransportKind::InProc => Box::new(InProc),
+            TransportKind::Threaded => {
+                let mut backends = Vec::with_capacity(m);
+                for _ in 0..m {
+                    backends.push(compute.fork().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "backend '{}' cannot fork per-worker \
+                             instances; the threaded transport needs one \
+                             backend per worker thread (use transport = \
+                             \"inproc\")",
+                            compute.backend_name()
+                        )
+                    })?);
+                }
+                Box::new(Threaded::spawn(backends)?)
+            }
+        };
+        self.transport = Some(transport);
+        Ok(())
+    }
+
+    /// Drive one full round `k` through the engine (see module docs).
+    ///
+    /// After a round errors, the trainer is poisoned: the failed round's
+    /// worker state was moved into jobs that never folded back, so
+    /// retrying would compute on zero-length placeholders. Build a fresh
+    /// `Trainer` instead.
     pub fn step(&mut self, k: u64, compute: &mut dyn Compute)
                 -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "a previous round failed mid-flight and tore down worker \
+             state; this Trainer cannot continue — build a fresh one"
+        );
+        let result = self.step_inner(k, compute);
+        if result.is_err() {
+            self.poisoned = true;
+        }
+        result
+    }
+
+    fn step_inner(&mut self, k: u64, compute: &mut dyn Compute)
+                  -> anyhow::Result<()> {
+        self.ensure_transport(compute)?;
         let m = self.rngs.len();
-        let mut ctx = RoundCtx {
-            k,
-            m,
-            upload_bytes: self.cfg.upload_bytes,
-            cost_model: &self.cfg.cost_model,
-            comm: &mut self.comm,
-        };
-        self.algo.broadcast(&mut ctx)?;
+        // phase 1 — server -> workers
+        {
+            let mut ctx = RoundCtx {
+                k,
+                m,
+                upload_bytes: self.cfg.upload_bytes,
+                links: &self.links,
+                comm: &mut self.comm,
+                fresh: Vec::new(),
+                deferred: Vec::new(),
+            };
+            self.algo.broadcast(&mut ctx)?;
+        }
+        // phase 2 — sample minibatches (worker-private RNG streams),
+        // build the self-contained jobs, execute them on the transport
+        let mut jobs: Vec<(usize, WorkerJob)> = Vec::with_capacity(m);
         for w in 0..m {
             let batch = self.data.sample_batch(
                 &self.partition.shards[w],
                 self.cfg.batch,
                 &mut self.rngs[w],
             );
-            self.algo.local_step(&mut ctx, w, &batch, compute)?;
+            jobs.push((w, self.algo.make_step(k, w, batch)?));
         }
-        self.algo.aggregate(&mut ctx)?;
-        self.algo.server_update(&mut ctx, compute)?;
+        let outcomes = self
+            .transport
+            .as_mut()
+            .expect("transport initialised above")
+            .execute(jobs, compute)?;
+        {
+            let mut ctx = RoundCtx {
+                k,
+                m,
+                upload_bytes: self.cfg.upload_bytes,
+                links: &self.links,
+                comm: &mut self.comm,
+                fresh: Vec::new(),
+                deferred: Vec::new(),
+            };
+            // outcomes arrive sorted by worker id: the fold order (and
+            // therefore every float) is transport-independent
+            for (w, out) in outcomes {
+                self.algo.absorb_step(&mut ctx, w, out)?;
+            }
+        }
+        // settle the round's uploads: price against the links, apply the
+        // participation policy, advance the event clock
+        let pending = self.algo.pending_uploads(k);
+        let policy = if self.algo.kind() == AlgorithmKind::LocalUpdate {
+            // model averaging needs every local model: always fully sync
+            Participation::Full
+        } else {
+            self.cfg.comm.participation()
+        };
+        let verdict = self.links.settle_uploads(
+            k, &pending, self.cfg.upload_bytes, policy);
+        for &(w, t) in &verdict.arrival_s {
+            self.comm.count_upload(w, self.cfg.upload_bytes, t);
+        }
+        self.comm.stale_uploads += verdict.deferred.len() as u64;
+        self.comm.lost_uploads += verdict.lost.len() as u64;
+        self.comm.advance_clock(verdict.upload_dt_s);
+        // phases 3 + 4 — aggregate the settled uploads, server step
+        {
+            let mut ctx = RoundCtx {
+                k,
+                m,
+                upload_bytes: self.cfg.upload_bytes,
+                links: &self.links,
+                comm: &mut self.comm,
+                fresh: verdict.fresh,
+                deferred: verdict.deferred,
+            };
+            self.algo.aggregate(&mut ctx)?;
+            self.algo.server_update(&mut ctx, compute)?;
+        }
         if self.cfg.trace_cap > 0 {
             if let Some(ev) = self.algo.round_event(k) {
                 self.trace.push(ev);
@@ -363,8 +604,34 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         self
     }
 
-    /// Validate, allocate the algorithm's state and the per-worker RNG
-    /// streams, and hand back a ready [`Trainer`].
+    /// Replace the whole `[comm]` engine config at once.
+    pub fn comm(mut self, comm: CommCfg) -> Self {
+        self.cfg.comm = comm;
+        self
+    }
+
+    /// Select the execution transport (default: `InProc`).
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.cfg.comm.transport = transport;
+        self
+    }
+
+    /// Semi-sync quorum: the server proceeds after the fastest `k`
+    /// uploads of a round (0 = wait for everyone).
+    pub fn semi_sync_k(mut self, k: usize) -> Self {
+        self.cfg.comm.semi_sync_k = k;
+        self
+    }
+
+    /// Log-normal upload straggler jitter (`sigma` = 0 disables).
+    pub fn jitter(mut self, sigma: f64, seed: u64) -> Self {
+        self.cfg.comm.jitter_sigma = sigma;
+        self.cfg.comm.jitter_seed = seed;
+        self
+    }
+
+    /// Validate, allocate the algorithm's state, the per-worker RNG
+    /// streams and link models, and hand back a ready [`Trainer`].
     pub fn build(self) -> anyhow::Result<Trainer<'a, A>> {
         let algo = self
             .algo
@@ -386,14 +653,17 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         anyhow::ensure!(self.cfg.batch >= 1, "batch must be >= 1");
         let m = partition.num_workers();
         anyhow::ensure!(m >= 1, "partition has no workers");
+        self.cfg.comm.validate()?;
         algo.init(&init_theta, m)?;
         let root = Rng::new(self.cfg.seed);
         let rngs = (0..m).map(|w| root.fork(w as u64 + 1)).collect();
+        let links = self.cfg.comm.build_links(m, &self.cfg.cost_model);
         let label = self
             .label
             .unwrap_or_else(|| algo.name().to_string());
         Ok(Trainer {
             trace: EventTrace::new(self.cfg.trace_cap),
+            comm: CommStats::for_workers(m),
             cfg: self.cfg,
             algo,
             data,
@@ -401,7 +671,9 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
             eval_batch,
             label,
             rngs,
-            comm: CommStats::default(),
+            links,
+            transport: None,
+            poisoned: false,
         })
     }
 }
@@ -458,6 +730,28 @@ mod tests {
     }
 
     #[test]
+    fn builder_rejects_clock_corrupting_comm_cfg() {
+        let (_, data, partition) = workload();
+        let mut algo = FedAvg::new(0.1, 2);
+        let err = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1]))
+            .init_theta(vec![0.0; 1024])
+            .jitter(-0.5, 3)
+            .build()
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("jitter_sigma"), "{err}");
+        // and from_doc rejects NaN/negative multipliers
+        let doc = toml::parse("[comm.links]\nlatency_mult = [1, -2]\n")
+            .unwrap();
+        let err = TrainCfg::from_doc(&doc).err().unwrap();
+        assert!(err.to_string().contains("finite and >= 0"), "{err}");
+    }
+
+    #[test]
     fn eval_cadence_and_label() {
         let (mut compute, data, partition) = workload();
         let mut algo = Cada::new(CadaCfg::basic(RuleKind::Always, amsgrad()));
@@ -507,6 +801,15 @@ mod tests {
             cost_model: CostModel::default(),
             upload_bytes: 4 * 23,
             trace_cap: 128,
+            comm: CommCfg {
+                transport: TransportKind::Threaded,
+                semi_sync_k: 7,
+                jitter_sigma: 0.5,
+                jitter_seed: 11,
+                latency_mult: vec![1.0, 2.0, 4.0],
+                bw_mult: vec![1.0, 0.5],
+                asymmetry_mult: Vec::new(),
+            },
         };
         let text = cfg.to_toml();
         let doc = toml::parse(&text).unwrap();
@@ -518,6 +821,12 @@ mod tests {
         // unknown keys are rejected
         let bad = toml::parse("[train]\nitters = 3\n").unwrap();
         assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[comm]\ntransporter = \"beam\"\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[comm]\ntransport = \"beam\"\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[comm.links]\nlatency_mult = 3\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
         // negative / fractional integer fields are rejected, not
         // saturated or truncated
         for src in ["[train]\niters = -100\n", "[train]\nbatch = 2.7\n",
@@ -527,5 +836,22 @@ mod tests {
             assert!(err.to_string().contains("non-negative integer"),
                     "{src}: {err}");
         }
+    }
+
+    #[test]
+    fn seed_above_2_pow_53_roundtrips_exactly() {
+        // the seed used to be routed through f64 and silently lost its
+        // low bits; it must now survive to_toml -> parse -> from_doc
+        for seed in [(1u64 << 53) + 1, u64::MAX, u64::MAX - 12345] {
+            let cfg = TrainCfg { seed, ..TrainCfg::default() };
+            let doc = toml::parse(&cfg.to_toml()).unwrap();
+            let back = TrainCfg::from_doc(&doc).unwrap();
+            assert_eq!(back.seed, seed, "seed {seed} corrupted");
+        }
+        // a float-notation seed that cannot be represented exactly is an
+        // error, not a silent rounding
+        let doc = toml::parse("[train]\nseed = 1.00000000000000005e300\n")
+            .unwrap();
+        assert!(TrainCfg::from_doc(&doc).is_err());
     }
 }

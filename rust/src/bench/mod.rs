@@ -137,6 +137,38 @@ impl Runner {
             "benchmark", "mean", "median", "p95"
         );
     }
+
+    /// Write every recorded result as a JSON array (the CI perf artifact
+    /// — `BENCH_engine.json` — starts the cross-PR perf trajectory).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>)
+                      -> anyhow::Result<()> {
+        use crate::util::json::ObjWriter;
+        let mut out = String::from("[");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let mut obj = ObjWriter::new()
+                .str("name", &r.name)
+                .int("iters", r.iters)
+                .num("mean_ns", r.mean_ns)
+                .num("median_ns", r.median_ns)
+                .num("p95_ns", r.p95_ns);
+            if let Some(b) = r.bytes_per_iter {
+                obj = obj.int("bytes_per_iter", b);
+            }
+            out.push_str(&obj.finish());
+        }
+        out.push(']');
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
 }
 
 /// Prevent the optimiser from discarding a computed value.
@@ -165,6 +197,26 @@ mod tests {
         assert!(res.iters >= 5);
         assert!(res.mean_ns > 0.0);
         assert!(res.median_ns <= res.p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_array() {
+        let mut r = Runner {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(5),
+            min_iters: 3,
+            results: Vec::new(),
+        };
+        r.bench_bytes("k", 64, || {});
+        let path = std::env::temp_dir().join("cada_bench_summary.json");
+        r.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("k"));
+        assert!(arr[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! Per-worker link models and the round event clock's settlement logic.
+//!
+//! The seed's single global [`CostModel`](super::CostModel) charged every
+//! worker the same latency and advanced simulated time additively, so a
+//! round's cost ignored stragglers entirely. Here every worker gets its
+//! own [`LinkModel`] (heterogeneous latency/bandwidth/asymmetry plus a
+//! seeded log-normal straggler jitter), and [`LinkSet::settle_uploads`]
+//! turns one round's upload set into an event-clock verdict: which
+//! uploads the server waits for (the participation policy), which arrive
+//! late, and by how much the simulated clock advances — the max over the
+//! awaited workers, not the sum.
+//!
+//! Determinism is a hard requirement (the `Threaded` transport must be
+//! bit-identical to `InProc`): the jitter for (round k, worker w) is a
+//! pure function of `(jitter_seed, k, w)`, never of execution order.
+
+use std::cmp::Ordering;
+
+use super::CostModel;
+use crate::util::rng::Rng;
+
+/// One worker's simulated network link: an asymmetric-uplink cost model
+/// plus a multiplicative log-normal jitter on the upload path (the
+/// straggler model of arXiv:2201.04301's heterogeneous-worker setting).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkModel {
+    pub cost: CostModel,
+    /// sigma of the log-normal upload jitter; 0 disables jitter exactly
+    /// (the multiplier is the constant 1.0, not a degenerate draw)
+    pub jitter_sigma: f64,
+}
+
+impl LinkModel {
+    pub fn new(cost: CostModel) -> Self {
+        LinkModel { cost, jitter_sigma: 0.0 }
+    }
+}
+
+/// The M per-worker links of one run plus the jitter stream seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSet {
+    links: Vec<LinkModel>,
+    jitter_seed: u64,
+}
+
+/// When does the server stop waiting for a round's uploads?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Participation {
+    /// Fully synchronous: wait for every upload (the paper's setting).
+    Full,
+    /// Semi-synchronous: proceed after the fastest `k` arrivals; the
+    /// remaining uploads are folded in stale next round (the semi-sync
+    /// averaging regime of arXiv:2007.06134).
+    SemiSync { k: usize },
+}
+
+/// One round's settlement: who the server waited for, who straggled, and
+/// the event-clock advance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundVerdict {
+    /// uploads folded this round, in worker order
+    pub fresh: Vec<usize>,
+    /// uploads arriving after the quorum closed but within finite
+    /// simulated time, in worker order (stale-folded next round)
+    pub deferred: Vec<usize>,
+    /// uploads the quorum left behind whose simulated arrival time is
+    /// not finite (dead links): transmitted, charged, never delivered
+    pub lost: Vec<usize>,
+    /// event-clock advance for the upload phase: the simulated arrival
+    /// time of the slowest awaited upload (0 when nothing uploads;
+    /// infinite when a full quorum must wait on a dead link)
+    pub upload_dt_s: f64,
+    /// simulated arrival time of every pending upload, `(worker, s)`
+    pub arrival_s: Vec<(usize, f64)>,
+}
+
+impl LinkSet {
+    pub fn new(links: Vec<LinkModel>, jitter_seed: u64) -> Self {
+        LinkSet { links, jitter_seed }
+    }
+
+    /// All `m` workers share one cost model, jitter off — the exact
+    /// semantics of the seed's global [`CostModel`].
+    pub fn homogeneous(m: usize, cost: CostModel) -> Self {
+        LinkSet::new(vec![LinkModel::new(cost); m], 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    pub fn link(&self, w: usize) -> &LinkModel {
+        &self.links[w]
+    }
+
+    /// Deterministic straggler multiplier for (round `k`, worker `w`):
+    /// `exp(sigma * z)` with `z` standard normal drawn from a stream
+    /// keyed by `(jitter_seed, k, w)` only. Exactly 1.0 when sigma is 0,
+    /// so jitter-off runs are bit-identical to the unjittered model.
+    pub fn jitter_mult(&self, k: u64, w: usize) -> f64 {
+        let sigma = self.links[w].jitter_sigma;
+        if sigma <= 0.0 {
+            return 1.0;
+        }
+        let stream = k
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(w as u64 + 1)
+            .wrapping_mul(0xA24BAED4963EE407);
+        let mut rng = Rng::new(self.jitter_seed ^ stream);
+        (sigma * rng.normal()).exp()
+    }
+
+    /// Simulated upload time of worker `w` at round `k` (jittered).
+    pub fn upload_time_s(&self, k: u64, w: usize, bytes: usize) -> f64 {
+        self.links[w].cost.upload_time_s(bytes) * self.jitter_mult(k, w)
+    }
+
+    /// Broadcast cost: downloads proceed in parallel, so the clock
+    /// advances by the SLOWEST worker's download — under heterogeneous
+    /// links the seed's "one latency hit for all workers" is wrong.
+    pub fn max_download_s(&self, bytes: usize) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.cost.download_time_s(bytes))
+            .fold(0.0, f64::max)
+    }
+
+    /// Settle one round's upload set under a participation policy.
+    ///
+    /// `pending` is the set of workers whose rule fired this round, in
+    /// worker order. The verdict's `fresh`/`deferred` sets come back in
+    /// worker order too, so folding them is deterministic regardless of
+    /// (simulated or physical) arrival order; with `Full` — or
+    /// `SemiSync { k >= pending.len() }` — `fresh == pending` and the
+    /// clock advances by the slowest upload, reducing exactly to the
+    /// fully-synchronous semantics.
+    pub fn settle_uploads(&self, k: u64, pending: &[usize], bytes: usize,
+                          policy: Participation) -> RoundVerdict {
+        let arrival_s: Vec<(usize, f64)> = pending
+            .iter()
+            .map(|&w| (w, self.upload_time_s(k, w, bytes)))
+            .collect();
+        let quorum = match policy {
+            Participation::Full => pending.len(),
+            // a quorum of 0 would stall the server forever; wait for at
+            // least one arrival (and never more than there are uploads)
+            Participation::SemiSync { k } => k.max(1).min(pending.len()),
+        };
+        let mut order: Vec<usize> = (0..arrival_s.len()).collect();
+        order.sort_by(|&a, &b| {
+            arrival_s[a]
+                .1
+                .partial_cmp(&arrival_s[b].1)
+                .unwrap_or(Ordering::Equal)
+                .then(arrival_s[a].0.cmp(&arrival_s[b].0))
+        });
+        let mut fresh: Vec<usize> =
+            order[..quorum].iter().map(|&i| arrival_s[i].0).collect();
+        // behind the quorum, only finitely-late uploads ever arrive; a
+        // dead link's (infinite-time) upload must not fold next round
+        let mut deferred = Vec::new();
+        let mut lost = Vec::new();
+        for &i in &order[quorum..] {
+            let (w, t) = arrival_s[i];
+            if t.is_finite() {
+                deferred.push(w);
+            } else {
+                lost.push(w);
+            }
+        }
+        fresh.sort_unstable();
+        deferred.sort_unstable();
+        lost.sort_unstable();
+        let upload_dt_s = order[..quorum]
+            .iter()
+            .map(|&i| arrival_s[i].1)
+            .fold(0.0, f64::max);
+        RoundVerdict { fresh, deferred, lost, upload_dt_s, arrival_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(latency_s: f64, down_bw: f64, asymmetry: f64) -> CostModel {
+        CostModel { latency_s, down_bw, asymmetry }
+    }
+
+    #[test]
+    fn homogeneous_matches_single_cost_model() {
+        let base = CostModel::default();
+        let links = LinkSet::homogeneous(4, base.clone());
+        assert_eq!(links.len(), 4);
+        for w in 0..4 {
+            assert_eq!(links.upload_time_s(9, w, 400),
+                       base.upload_time_s(400));
+        }
+        assert_eq!(links.max_download_s(400), base.download_time_s(400));
+    }
+
+    #[test]
+    fn free_links_advance_no_time() {
+        let links = LinkSet::homogeneous(3, CostModel::free());
+        let v = links.settle_uploads(0, &[0, 1, 2], 4096,
+                                     Participation::Full);
+        assert_eq!(v.upload_dt_s, 0.0);
+        assert_eq!(links.max_download_s(1 << 20), 0.0);
+        assert!(v.arrival_s.iter().all(|&(_, t)| t == 0.0));
+    }
+
+    #[test]
+    fn zero_bandwidth_link_is_infinitely_slow() {
+        let links = LinkSet::new(
+            vec![LinkModel::new(cost(0.01, 0.0, 1.0))], 0);
+        assert!(links.upload_time_s(0, 0, 100).is_infinite());
+        // ...but a zero-byte message still costs only its latency
+        assert_eq!(links.upload_time_s(0, 0, 0), 0.01);
+    }
+
+    #[test]
+    fn infinite_bandwidth_is_latency_only() {
+        let links = LinkSet::new(
+            vec![LinkModel::new(cost(0.25, f64::INFINITY, 10.0))], 0);
+        assert_eq!(links.upload_time_s(0, 0, 1 << 30), 0.25);
+        assert_eq!(links.max_download_s(1 << 30), 0.25);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed_round_worker() {
+        let mut link = LinkModel::new(CostModel::default());
+        link.jitter_sigma = 0.7;
+        let a = LinkSet::new(vec![link.clone(); 3], 42);
+        let b = LinkSet::new(vec![link.clone(); 3], 42);
+        let c = LinkSet::new(vec![link; 3], 43);
+        for k in 0..20 {
+            for w in 0..3 {
+                // same (seed, k, w) => same draw, independent of call order
+                assert_eq!(a.jitter_mult(k, w), b.jitter_mult(k, w));
+                assert!(a.jitter_mult(k, w) > 0.0);
+            }
+            // different rounds/workers/seeds decorrelate
+            assert_ne!(a.jitter_mult(k, 0), a.jitter_mult(k, 1));
+            assert_ne!(a.jitter_mult(k, 0), a.jitter_mult(k + 1, 0));
+        }
+        assert_ne!(a.jitter_mult(0, 0), c.jitter_mult(0, 0));
+    }
+
+    #[test]
+    fn sigma_zero_is_exactly_one() {
+        let links = LinkSet::homogeneous(2, CostModel::default());
+        for k in 0..50 {
+            assert_eq!(links.jitter_mult(k, 0), 1.0);
+            assert_eq!(links.jitter_mult(k, 1), 1.0);
+        }
+    }
+
+    #[test]
+    fn full_participation_waits_for_slowest() {
+        // worker 1 has 10x the latency: it is the straggler
+        let links = LinkSet::new(
+            vec![
+                LinkModel::new(cost(0.01, 1000.0, 1.0)),
+                LinkModel::new(cost(0.10, 1000.0, 1.0)),
+            ],
+            0,
+        );
+        let v = links.settle_uploads(0, &[0, 1], 0, Participation::Full);
+        assert_eq!(v.fresh, vec![0, 1]);
+        assert!(v.deferred.is_empty());
+        assert_eq!(v.upload_dt_s, 0.10);
+    }
+
+    #[test]
+    fn semi_sync_defers_stragglers_and_shrinks_round_time() {
+        let links = LinkSet::new(
+            vec![
+                LinkModel::new(cost(0.01, 1000.0, 1.0)),
+                LinkModel::new(cost(0.50, 1000.0, 1.0)),
+                LinkModel::new(cost(0.02, 1000.0, 1.0)),
+            ],
+            0,
+        );
+        let v = links.settle_uploads(3, &[0, 1, 2], 0,
+                                     Participation::SemiSync { k: 2 });
+        assert_eq!(v.fresh, vec![0, 2]);
+        assert_eq!(v.deferred, vec![1]);
+        assert_eq!(v.upload_dt_s, 0.02);
+    }
+
+    #[test]
+    fn semi_sync_k_at_least_m_reduces_to_full() {
+        let links = LinkSet::homogeneous(4, CostModel::default());
+        let pending = [0usize, 2, 3];
+        let full = links.settle_uploads(7, &pending, 128,
+                                        Participation::Full);
+        for k in [3usize, 4, 99] {
+            let semi = links.settle_uploads(
+                7, &pending, 128, Participation::SemiSync { k });
+            assert_eq!(semi, full, "k={k}");
+        }
+    }
+
+    #[test]
+    fn dead_link_uploads_are_lost_not_deferred() {
+        // worker 1 has zero bandwidth: its upload never arrives
+        let links = LinkSet::new(
+            vec![
+                LinkModel::new(cost(0.01, 1000.0, 1.0)),
+                LinkModel::new(cost(0.01, 0.0, 1.0)),
+                LinkModel::new(cost(0.02, 1000.0, 1.0)),
+            ],
+            0,
+        );
+        let v = links.settle_uploads(0, &[0, 1, 2], 64,
+                                     Participation::SemiSync { k: 2 });
+        assert_eq!(v.fresh, vec![0, 2]);
+        assert!(v.deferred.is_empty());
+        assert_eq!(v.lost, vec![1]);
+        assert!(v.upload_dt_s.is_finite());
+        // a FULL quorum over a dead link waits forever, consistently
+        let full = links.settle_uploads(0, &[0, 1, 2], 64,
+                                        Participation::Full);
+        assert_eq!(full.fresh, vec![0, 1, 2]);
+        assert!(full.upload_dt_s.is_infinite());
+    }
+
+    #[test]
+    fn empty_round_settles_to_zero() {
+        let links = LinkSet::homogeneous(3, CostModel::default());
+        for policy in [Participation::Full,
+                       Participation::SemiSync { k: 2 }] {
+            let v = links.settle_uploads(0, &[], 128, policy);
+            assert!(v.fresh.is_empty() && v.deferred.is_empty());
+            assert_eq!(v.upload_dt_s, 0.0);
+        }
+    }
+}

@@ -1,13 +1,38 @@
-//! Simulated communication substrate: upload/download accounting and an
-//! asymmetric-uplink latency model.
+//! Simulated communication substrate: counters, the round event clock,
+//! per-worker link models and the transport-abstracted execution engine.
 //!
 //! The paper's figures use *communication uploads* (count of
 //! worker-to-server gradient transmissions) as the x-axis; wall-clock on
-//! the authors' testbed is not reproducible, so we model time with a
-//! configurable cellular-style cost model (section 1: "communication
-//! uplink and downlink are not symmetric ... upload ... is costly").
+//! the authors' testbed is not reproducible, so we model time. The
+//! architecture, bottom-up:
+//!
+//! * [`CostModel`] — one link's asymmetric-uplink cost: per-message
+//!   latency + bandwidth term, uplink `asymmetry`x slower (section 1:
+//!   "communication uplink and downlink are not symmetric ... upload ...
+//!   is costly").
+//! * [`LinkModel`] / [`LinkSet`] ([`link`]) — per-worker heterogeneous
+//!   links plus a seeded log-normal straggler jitter, and the round
+//!   settlement logic: which uploads the server waits for under a
+//!   [`Participation`] policy and how far the clock advances.
+//! * [`CommStats`] — cumulative counters plus the **event clock**:
+//!   `sim_time_s` advances once per round phase by the *max* over
+//!   participating workers (broadcasts in parallel, uploads bounded by
+//!   the slowest awaited worker), never additively per message — so
+//!   simulated time reflects stragglers.
+//! * [`Transport`] ([`transport`]) — HOW worker jobs execute: [`InProc`]
+//!   (sequential, the golden-parity reference) or [`Threaded`]
+//!   (persistent worker threads + channel mailboxes). Both are
+//!   bit-identical because every simulated quantity is a pure function
+//!   of the round, not of execution interleaving.
 
-/// Cumulative communication counters for one run.
+pub mod link;
+pub mod transport;
+
+pub use link::{LinkModel, LinkSet, Participation, RoundVerdict};
+pub use transport::{InProc, JobOut, Threaded, Transport, TransportKind,
+                    WorkerJob};
+
+/// Cumulative communication counters + the event clock for one run.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     /// worker -> server gradient/innovation transmissions (the paper's
@@ -21,23 +46,59 @@ pub struct CommStats {
     pub download_bytes: u64,
     /// stochastic gradient evaluations across all workers
     pub grad_evals: u64,
-    /// simulated wall-clock under the latency model, seconds
+    /// event-clock simulated time, seconds: per round, the broadcast
+    /// phase advances by the slowest download and the upload phase by
+    /// the slowest AWAITED upload (semi-sync stragglers excluded)
     pub sim_time_s: f64,
+    /// uploads that arrived after a semi-sync quorum closed (folded into
+    /// the server state one round late; the final round's stragglers —
+    /// at most M-1 — are still in flight when the run ends and stay
+    /// unapplied, like a real deployment stopped mid-round)
+    pub stale_uploads: u64,
+    /// uploads a semi-sync quorum left behind on a dead link (infinite
+    /// simulated transmission time): transmitted and charged, but their
+    /// payload never reaches the server
+    pub lost_uploads: u64,
+    /// per-worker cumulative simulated upload seconds (stragglers show
+    /// up as outliers here); sized by [`CommStats::for_workers`]
+    pub worker_upload_s: Vec<f64>,
+    /// per-worker upload counts
+    pub worker_uploads: Vec<u64>,
 }
 
 impl CommStats {
-    pub fn record_upload(&mut self, bytes: usize, model: &CostModel) {
-        self.uploads += 1;
-        self.upload_bytes += bytes as u64;
-        self.sim_time_s += model.upload_time_s(bytes);
+    /// Stats with the per-worker breakdown sized for `m` workers.
+    pub fn for_workers(m: usize) -> Self {
+        CommStats {
+            worker_upload_s: vec![0.0; m],
+            worker_uploads: vec![0; m],
+            ..Default::default()
+        }
     }
 
-    pub fn record_broadcast(&mut self, workers: usize, bytes: usize,
-                            model: &CostModel) {
+    /// Count one upload by worker `w` whose simulated transmission takes
+    /// `time_s`. Counters only — the event clock advances separately,
+    /// once per round, via [`CommStats::advance_clock`].
+    pub fn count_upload(&mut self, w: usize, bytes: usize, time_s: f64) {
+        self.uploads += 1;
+        self.upload_bytes += bytes as u64;
+        if let Some(t) = self.worker_upload_s.get_mut(w) {
+            *t += time_s;
+        }
+        if let Some(c) = self.worker_uploads.get_mut(w) {
+            *c += 1;
+        }
+    }
+
+    /// Count a model broadcast to `workers` workers (counters only).
+    pub fn count_broadcast(&mut self, workers: usize, bytes: usize) {
         self.downloads += workers as u64;
         self.download_bytes += (workers * bytes) as u64;
-        // broadcasts to all workers proceed in parallel: one latency hit
-        self.sim_time_s += model.download_time_s(bytes);
+    }
+
+    /// Advance the event clock by one settled phase's duration.
+    pub fn advance_clock(&mut self, dt_s: f64) {
+        self.sim_time_s += dt_s;
     }
 
     pub fn record_grad_evals(&mut self, count: u64) {
@@ -45,8 +106,8 @@ impl CommStats {
     }
 }
 
-/// Link cost model: per-message setup latency + bandwidth term, with an
-/// uplink that is `asymmetry`x slower than the downlink.
+/// One link's cost model: per-message setup latency + bandwidth term,
+/// with an uplink that is `asymmetry`x slower than the downlink.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostModel {
     /// per-message latency, seconds
@@ -70,10 +131,17 @@ impl Default for CostModel {
 
 impl CostModel {
     pub fn upload_time_s(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            // avoid 0/0 = NaN on zero-bandwidth links
+            return self.latency_s;
+        }
         self.latency_s + bytes as f64 / (self.down_bw / self.asymmetry)
     }
 
     pub fn download_time_s(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return self.latency_s;
+        }
         self.latency_s + bytes as f64 / self.down_bw
     }
 
@@ -84,6 +152,104 @@ impl CostModel {
             down_bw: f64::INFINITY,
             asymmetry: 1.0,
         }
+    }
+}
+
+/// `[comm]` engine configuration: transport, participation policy,
+/// straggler jitter, and per-worker link heterogeneity (`[comm.links]`).
+///
+/// The multiplier vectors are cycled over the M workers (worker `w` gets
+/// `mult[w % mult.len()]`; empty means "1.0 for everyone"), so one
+/// config serves any worker count.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommCfg {
+    pub transport: TransportKind,
+    /// semi-sync quorum K: the server proceeds after the fastest K
+    /// uploads of a round; 0 = wait for everyone (fully synchronous).
+    /// Applies to server-centric methods; model-averaging methods need
+    /// every local model and always run fully synchronous.
+    pub semi_sync_k: usize,
+    /// sigma of the log-normal upload straggler jitter (0 = off)
+    pub jitter_sigma: f64,
+    pub jitter_seed: u64,
+    /// per-worker latency multipliers, cycled (empty = homogeneous)
+    pub latency_mult: Vec<f64>,
+    /// per-worker bandwidth multipliers, cycled
+    pub bw_mult: Vec<f64>,
+    /// per-worker uplink-asymmetry multipliers, cycled
+    pub asymmetry_mult: Vec<f64>,
+}
+
+impl CommCfg {
+    /// Reject configurations that would corrupt the event clock:
+    /// negative or non-finite jitter and negative/NaN link multipliers
+    /// parse as numbers but make simulated time run backwards or NaN —
+    /// silently, in exactly the metric the engine exists to model.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.jitter_sigma >= 0.0 && self.jitter_sigma.is_finite(),
+            "[comm] jitter_sigma must be finite and >= 0, got {}",
+            self.jitter_sigma
+        );
+        let mults = [
+            ("latency_mult", &self.latency_mult),
+            ("bw_mult", &self.bw_mult),
+            ("asymmetry_mult", &self.asymmetry_mult),
+        ];
+        for (key, v) in mults {
+            for &x in v {
+                anyhow::ensure!(
+                    x >= 0.0 && x.is_finite(),
+                    "[comm.links] {key} entries must be finite and >= 0, \
+                     got {x}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The participation policy this config asks for.
+    pub fn participation(&self) -> Participation {
+        if self.semi_sync_k == 0 {
+            Participation::Full
+        } else {
+            Participation::SemiSync { k: self.semi_sync_k }
+        }
+    }
+
+    /// Materialise the per-worker [`LinkSet`] for `m` workers on top of
+    /// the base cost model.
+    pub fn build_links(&self, m: usize, base: &CostModel) -> LinkSet {
+        let mult = |v: &[f64], w: usize| {
+            if v.is_empty() {
+                1.0
+            } else {
+                v[w % v.len()]
+            }
+        };
+        let links = (0..m)
+            .map(|w| LinkModel {
+                cost: CostModel {
+                    latency_s: base.latency_s
+                        * mult(&self.latency_mult, w),
+                    down_bw: base.down_bw * mult(&self.bw_mult, w),
+                    asymmetry: base.asymmetry
+                        * mult(&self.asymmetry_mult, w),
+                },
+                jitter_sigma: self.jitter_sigma,
+            })
+            .collect();
+        LinkSet::new(links, self.jitter_seed)
+    }
+
+    /// Does this config leave the homogeneous, jitter-free, fully-sync
+    /// semantics of the seed untouched?
+    pub fn is_uniform_sync(&self) -> bool {
+        self.semi_sync_k == 0
+            && self.jitter_sigma == 0.0
+            && self.latency_mult.is_empty()
+            && self.bw_mult.is_empty()
+            && self.asymmetry_mult.is_empty()
     }
 }
 
@@ -164,19 +330,109 @@ mod tests {
     }
 
     #[test]
+    fn zero_byte_messages_cost_latency_only() {
+        let m = CostModel {
+            latency_s: 0.5,
+            down_bw: 0.0, // pathological link: bandwidth term would be 0/0
+            asymmetry: 2.0,
+        };
+        assert_eq!(m.upload_time_s(0), 0.5);
+        assert_eq!(m.download_time_s(0), 0.5);
+        assert!(m.upload_time_s(1).is_infinite());
+    }
+
+    #[test]
     fn stats_accumulate() {
-        let model = CostModel::free();
-        let mut s = CommStats::default();
-        s.record_upload(400, &model);
-        s.record_upload(400, &model);
-        s.record_broadcast(10, 400, &model);
+        let mut s = CommStats::for_workers(10);
+        s.count_upload(0, 400, 1.5);
+        s.count_upload(3, 400, 2.5);
+        s.count_broadcast(10, 400);
         s.record_grad_evals(20);
+        // counters never touch the clock...
+        assert_eq!(s.sim_time_s, 0.0);
+        // ...the per-round settlement does
+        s.advance_clock(2.5);
         assert_eq!(s.uploads, 2);
         assert_eq!(s.upload_bytes, 800);
         assert_eq!(s.downloads, 10);
         assert_eq!(s.download_bytes, 4000);
         assert_eq!(s.grad_evals, 20);
-        assert_eq!(s.sim_time_s, 0.0);
+        assert_eq!(s.sim_time_s, 2.5);
+        assert_eq!(s.worker_uploads[0], 1);
+        assert_eq!(s.worker_uploads[3], 1);
+        assert_eq!(s.worker_upload_s[3], 2.5);
+        assert_eq!(s.worker_uploads[1], 0);
+    }
+
+    #[test]
+    fn stats_without_worker_breakdown_still_count() {
+        // CommStats::default() has no per-worker arrays; counting against
+        // an out-of-range worker must not panic.
+        let mut s = CommStats::default();
+        s.count_upload(7, 100, 1.0);
+        assert_eq!(s.uploads, 1);
+        assert!(s.worker_uploads.is_empty());
+    }
+
+    #[test]
+    fn comm_cfg_builds_heterogeneous_links() {
+        let cfg = CommCfg {
+            latency_mult: vec![1.0, 2.0],
+            ..Default::default()
+        };
+        let base = CostModel {
+            latency_s: 0.1,
+            down_bw: f64::INFINITY,
+            asymmetry: 1.0,
+        };
+        let links = cfg.build_links(5, &base);
+        assert_eq!(links.len(), 5);
+        // multipliers cycle over workers: 1, 2, 1, 2, 1
+        assert_eq!(links.link(0).cost.latency_s, 0.1);
+        assert_eq!(links.link(1).cost.latency_s, 0.2);
+        assert_eq!(links.link(2).cost.latency_s, 0.1);
+        assert_eq!(links.link(3).cost.latency_s, 0.2);
+        assert!(!cfg.is_uniform_sync());
+        assert!(CommCfg::default().is_uniform_sync());
+    }
+
+    #[test]
+    fn uniform_links_are_bit_identical_to_base() {
+        // empty multiplier vectors must not perturb the base model (the
+        // golden-parity suite depends on this being exact)
+        let cfg = CommCfg::default();
+        let base = CostModel::default();
+        let links = cfg.build_links(3, &base);
+        for w in 0..3 {
+            assert_eq!(links.link(w).cost, base);
+            assert_eq!(links.upload_time_s(11, w, 92),
+                       base.upload_time_s(92));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_clock_corrupting_configs() {
+        assert!(CommCfg::default().validate().is_ok());
+        // bw_mult = 0 is a legitimate dead-link scenario
+        let dead = CommCfg { bw_mult: vec![1.0, 0.0], ..Default::default() };
+        assert!(dead.validate().is_ok());
+        for bad in [
+            CommCfg { jitter_sigma: -0.5, ..Default::default() },
+            CommCfg { jitter_sigma: f64::NAN, ..Default::default() },
+            CommCfg { latency_mult: vec![1.0, -1.0],
+                      ..Default::default() },
+            CommCfg { asymmetry_mult: vec![f64::NAN],
+                      ..Default::default() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn participation_policy_from_k() {
+        assert_eq!(CommCfg::default().participation(), Participation::Full);
+        let semi = CommCfg { semi_sync_k: 3, ..Default::default() };
+        assert_eq!(semi.participation(), Participation::SemiSync { k: 3 });
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Transport abstraction for the round engine: HOW a round's worker jobs
+//! execute, decoupled from WHAT they compute.
+//!
+//! A [`WorkerJob`] is a self-contained closure built by the algorithm
+//! (see [`Algorithm::make_step`](crate::algorithms::Algorithm::make_step)):
+//! it owns everything it touches — the worker's state, the round-frozen
+//! broadcast tensors behind `Arc`s, its minibatch — so a transport may
+//! run it on any thread. Two implementations:
+//!
+//! * [`InProc`] — runs each job inline on the caller's backend, in
+//!   worker order: the deterministic sequential semantics the golden
+//!   parity suite pins down.
+//! * [`Threaded`] — one persistent thread per worker, each owning a
+//!   forked [`Compute`] backend, fed through channel mailboxes with the
+//!   server collecting completions as an event-driven aggregator.
+//!   Completion order is nondeterministic, but outcomes are re-sorted
+//!   into worker order before the algorithm folds them, and all
+//!   *simulated* quantities (link times, jitter, participation) are pure
+//!   functions of the round — so `Threaded` is bit-identical to
+//!   [`InProc`] (enforced by `tests/golden_parity.rs`).
+//!
+//! The mailbox message types ([`ToWorker`](crate::coordinator::ToWorker) /
+//! [`FromWorker`](crate::coordinator::FromWorker)) live in
+//! [`crate::coordinator`] next to the rest of the server/worker protocol.
+
+use std::any::Any;
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::{FromWorker, ToWorker};
+use crate::runtime::Compute;
+
+/// Opaque outcome of one worker job; the algorithm that built the job
+/// downcasts it back in `absorb_step`.
+pub type JobOut = Box<dyn Any + Send>;
+
+/// A self-contained worker-round computation: runs on whatever backend
+/// the executing thread owns.
+pub type WorkerJob =
+    Box<dyn FnOnce(&mut dyn Compute) -> anyhow::Result<JobOut> + Send>;
+
+/// Which transport a run uses (the `[comm] transport` knob).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    #[default]
+    InProc,
+    Threaded,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> anyhow::Result<TransportKind> {
+        match s {
+            "inproc" => Ok(TransportKind::InProc),
+            "threaded" => Ok(TransportKind::Threaded),
+            other => anyhow::bail!(
+                "unknown transport '{other}' (have: inproc, threaded)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Threaded => "threaded",
+        }
+    }
+}
+
+/// Executes one round of worker jobs and returns every outcome **in
+/// worker order**, whatever the physical completion order was.
+pub trait Transport {
+    fn name(&self) -> &'static str;
+
+    fn execute(&mut self, jobs: Vec<(usize, WorkerJob)>,
+               compute: &mut dyn Compute)
+               -> anyhow::Result<Vec<(usize, JobOut)>>;
+}
+
+/// Best-effort rendering of a panic payload (worker-thread jobs turn
+/// panics into error completions instead of deadlocking the round).
+fn panic_message(panic: &(dyn Any + Send)) -> &str {
+    if let Some(s) = panic.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Sequential in-process execution on the caller's backend.
+pub struct InProc;
+
+impl Transport for InProc {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn execute(&mut self, jobs: Vec<(usize, WorkerJob)>,
+               compute: &mut dyn Compute)
+               -> anyhow::Result<Vec<(usize, JobOut)>> {
+        let mut out = Vec::with_capacity(jobs.len());
+        for (w, job) in jobs {
+            out.push((w, job(compute)?));
+        }
+        Ok(out)
+    }
+}
+
+/// Persistent worker threads with channel mailboxes; the server thread
+/// dispatches a round's jobs and collects completions as they arrive.
+pub struct Threaded {
+    mailboxes: Vec<mpsc::Sender<ToWorker>>,
+    results: mpsc::Receiver<FromWorker>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Threaded {
+    /// Spawn one thread per backend; worker `w` owns `backends[w]` for
+    /// its whole life (backends come from [`Compute::fork`]).
+    pub fn spawn(backends: Vec<Box<dyn Compute + Send>>)
+                 -> anyhow::Result<Threaded> {
+        let (res_tx, res_rx) = mpsc::channel::<FromWorker>();
+        let mut mailboxes = Vec::with_capacity(backends.len());
+        let mut handles = Vec::with_capacity(backends.len());
+        for (w, mut compute) in backends.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<ToWorker>();
+            let out = res_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cada-worker-{w}"))
+                .spawn(move || {
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            ToWorker::Job(job) => {
+                                // a panicking job must still produce a
+                                // completion message, or the server's
+                                // collect loop would block forever
+                                let outcome = std::panic::catch_unwind(
+                                    AssertUnwindSafe(|| {
+                                        job(&mut *compute)
+                                    }))
+                                .unwrap_or_else(|panic| {
+                                    Err(anyhow::anyhow!(
+                                        "worker thread {w} panicked: {}",
+                                        panic_message(panic.as_ref())))
+                                });
+                                if out.send(FromWorker { w, outcome })
+                                    .is_err()
+                                {
+                                    break; // server side is gone
+                                }
+                            }
+                            ToWorker::Shutdown => break,
+                        }
+                    }
+                })
+                .map_err(|e| anyhow::anyhow!(
+                    "spawning worker thread {w}: {e}"))?;
+            mailboxes.push(tx);
+            handles.push(handle);
+        }
+        Ok(Threaded { mailboxes, results: res_rx, handles })
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.mailboxes.len()
+    }
+}
+
+impl Transport for Threaded {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn execute(&mut self, jobs: Vec<(usize, WorkerJob)>,
+               _compute: &mut dyn Compute)
+               -> anyhow::Result<Vec<(usize, JobOut)>> {
+        // Dispatch; on a dead mailbox, stop dispatching but fall through
+        // to collect what was already sent — bailing out here would
+        // leave those completions queued for the NEXT round to consume.
+        let mut dispatched = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        for (w, job) in jobs {
+            let sent = self
+                .mailboxes
+                .get(w)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "no worker thread {w} (transport has {})",
+                    self.mailboxes.len()))
+                .and_then(|tx| {
+                    tx.send(ToWorker::Job(job)).map_err(|_| {
+                        anyhow::anyhow!("worker thread {w} is gone")
+                    })
+                });
+            match sent {
+                Ok(()) => dispatched += 1,
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        // Collect every dispatched completion (draining even after an
+        // error, so a failed round cannot leave stale results behind).
+        let mut out = Vec::with_capacity(dispatched);
+        for _ in 0..dispatched {
+            match self.results.recv() {
+                Ok(FromWorker { w, outcome }) => match outcome {
+                    Ok(o) => out.push((w, o)),
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                },
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "worker threads exited before completing \
+                             the round"));
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // physical completion order is racy; the fold order is worker
+        // order, which is what makes Threaded bit-identical to InProc
+        out.sort_by_key(|&(w, _)| w);
+        Ok(out)
+    }
+}
+
+impl Drop for Threaded {
+    fn drop(&mut self) {
+        for tx in &self.mailboxes {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeLogReg;
+
+    fn forked(m: usize) -> Vec<Box<dyn Compute + Send>> {
+        let base = NativeLogReg::for_spec(4, 16);
+        (0..m).map(|_| base.fork().expect("native forks")).collect()
+    }
+
+    fn square_job(w: usize) -> WorkerJob {
+        Box::new(move |_c: &mut dyn Compute| {
+            Ok(Box::new(w * w) as JobOut)
+        })
+    }
+
+    #[test]
+    fn inproc_runs_in_worker_order() {
+        let mut t = InProc;
+        let mut base = NativeLogReg::for_spec(4, 16);
+        let jobs: Vec<(usize, WorkerJob)> =
+            (0..5).map(|w| (w, square_job(w))).collect();
+        let out = t.execute(jobs, &mut base).unwrap();
+        let vals: Vec<usize> = out
+            .into_iter()
+            .map(|(w, o)| {
+                assert_eq!(*o.downcast::<usize>().unwrap(), w * w);
+                w
+            })
+            .collect();
+        assert_eq!(vals, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn threaded_returns_outcomes_in_worker_order() {
+        let mut t = Threaded::spawn(forked(8)).unwrap();
+        assert_eq!(t.workers(), 8);
+        let mut base = NativeLogReg::for_spec(4, 16);
+        for round in 0..10 {
+            let jobs: Vec<(usize, WorkerJob)> =
+                (0..8).map(|w| (w, square_job(w + round))).collect();
+            let out = t.execute(jobs, &mut base).unwrap();
+            assert_eq!(out.len(), 8);
+            for (i, (w, o)) in out.into_iter().enumerate() {
+                assert_eq!(w, i);
+                assert_eq!(*o.downcast::<usize>().unwrap(),
+                           (w + round) * (w + round));
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_propagates_job_errors_and_survives() {
+        let mut t = Threaded::spawn(forked(3)).unwrap();
+        let mut base = NativeLogReg::for_spec(4, 16);
+        let jobs: Vec<(usize, WorkerJob)> = (0..3)
+            .map(|w| {
+                let job: WorkerJob = if w == 1 {
+                    Box::new(|_c: &mut dyn Compute| {
+                        Err(anyhow::anyhow!("boom"))
+                    })
+                } else {
+                    square_job(w)
+                };
+                (w, job)
+            })
+            .collect();
+        let err = t.execute(jobs, &mut base).unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+        // the failed round drained fully: the next round is clean
+        let jobs: Vec<(usize, WorkerJob)> =
+            (0..3).map(|w| (w, square_job(w))).collect();
+        let out = t.execute(jobs, &mut base).unwrap();
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn threaded_turns_job_panics_into_errors_not_deadlocks() {
+        let mut t = Threaded::spawn(forked(3)).unwrap();
+        let mut base = NativeLogReg::for_spec(4, 16);
+        let jobs: Vec<(usize, WorkerJob)> = (0..3)
+            .map(|w| {
+                let job: WorkerJob = if w == 2 {
+                    Box::new(|_c: &mut dyn Compute| -> anyhow::Result<JobOut> {
+                        panic!("job exploded")
+                    })
+                } else {
+                    square_job(w)
+                };
+                (w, job)
+            })
+            .collect();
+        let err = t.execute(jobs, &mut base).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(err.to_string().contains("job exploded"), "{err}");
+        // the panicking round still settled fully: the next one is clean
+        let jobs: Vec<(usize, WorkerJob)> =
+            (0..3).map(|w| (w, square_job(w))).collect();
+        let out = t.execute(jobs, &mut base).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().enumerate().all(|(i, (w, _))| i == *w));
+    }
+
+    #[test]
+    fn dispatch_failure_drains_already_sent_jobs() {
+        let mut t = Threaded::spawn(forked(2)).unwrap();
+        let mut base = NativeLogReg::for_spec(4, 16);
+        // worker 5 does not exist: jobs 0 and 1 are already dispatched
+        // when the bad send fails; execute must still collect them so
+        // the next round starts from an empty results channel
+        let jobs: Vec<(usize, WorkerJob)> = vec![
+            (0, square_job(0)),
+            (1, square_job(1)),
+            (5, square_job(5)),
+        ];
+        let err = t.execute(jobs, &mut base).unwrap_err();
+        assert!(err.to_string().contains("no worker thread 5"), "{err}");
+        let jobs: Vec<(usize, WorkerJob)> =
+            (0..2).map(|w| (w, square_job(w))).collect();
+        let out = t.execute(jobs, &mut base).unwrap();
+        assert_eq!(out.len(), 2);
+        for (i, (w, o)) in out.into_iter().enumerate() {
+            assert_eq!(w, i);
+            assert_eq!(*o.downcast::<usize>().unwrap(), w * w);
+        }
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("inproc").unwrap(),
+                   TransportKind::InProc);
+        assert_eq!(TransportKind::parse("threaded").unwrap(),
+                   TransportKind::Threaded);
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::Threaded.name(), "threaded");
+    }
+}

@@ -10,7 +10,7 @@ pub mod toml;
 
 pub use crate::algorithms::TrainCfg;
 
-use crate::comm::CostModel;
+use crate::comm::{CommCfg, CostModel};
 use crate::data::{DatasetKind, PartitionScheme};
 
 /// Stepsize schedule (paper: constant in experiments; 1/sqrt(K) for
@@ -93,6 +93,11 @@ pub struct ExpConfig {
     pub cost_model: CostModel,
     /// per-run event-trace capacity (0 disables; `[train] trace_cap`)
     pub trace_cap: usize,
+    /// execution-engine configuration: transport, semi-sync quorum,
+    /// straggler jitter, per-worker link heterogeneity (`[comm]` /
+    /// `[comm.links]` TOML sections and the CLI `--transport`,
+    /// `--semi-sync-k`, `--jitter-sigma`, `--jitter-seed` flags)
+    pub comm: CommCfg,
     pub algos: Vec<AlgoConfig>,
 }
 
@@ -125,6 +130,7 @@ pub fn fig2_covtype() -> ExpConfig {
         target_loss: 0.32,
         cost_model: CostModel::default(),
         trace_cap: 0,
+        comm: CommCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.005) },
             AlgoConfig::Cada1 { alpha: C(0.005), c: 0.6, d_max: 10,
@@ -156,6 +162,7 @@ pub fn fig3_ijcnn() -> ExpConfig {
         target_loss: 0.18,
         cost_model: CostModel::default(),
         trace_cap: 0,
+        comm: CommCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.01) },
             AlgoConfig::Cada1 { alpha: C(0.01), c: 0.6, d_max: 10,
@@ -187,6 +194,7 @@ pub fn fig4_mnist(use_cnn: bool) -> ExpConfig {
         target_loss: 0.30,
         cost_model: CostModel::default(),
         trace_cap: 0,
+        comm: CommCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(5e-4) },
             AlgoConfig::Cada1 { alpha: C(5e-4), c: 0.6, d_max: 10,
@@ -218,6 +226,7 @@ pub fn fig5_cifar() -> ExpConfig {
         target_loss: 0.8,
         cost_model: CostModel::default(),
         trace_cap: 0,
+        comm: CommCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.01) },
             AlgoConfig::Cada1 { alpha: C(0.01), c: 0.3, d_max: 2,
@@ -270,6 +279,21 @@ pub fn preset(name: &str) -> anyhow::Result<ExpConfig> {
     })
 }
 
+/// Apply the engine's CLI knobs — `--transport`, `--semi-sync-k`,
+/// `--jitter-sigma`, `--jitter-seed` — shared by `cada train` and the
+/// `cargo bench fig*` drivers so the two entry points cannot diverge.
+pub fn apply_comm_cli_overrides(comm: &mut CommCfg,
+                                args: &crate::cli::Args)
+                                -> anyhow::Result<()> {
+    if let Some(t) = args.str_opt("transport") {
+        comm.transport = crate::comm::TransportKind::parse(t)?;
+    }
+    comm.semi_sync_k = args.usize_or("semi-sync-k", comm.semi_sync_k)?;
+    comm.jitter_sigma = args.f64_or("jitter-sigma", comm.jitter_sigma)?;
+    comm.jitter_seed = args.u64_or("jitter-seed", comm.jitter_seed)?;
+    comm.validate()
+}
+
 /// Apply `[experiment]` overrides from a TOML doc (launcher config file).
 pub fn apply_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
                        -> anyhow::Result<()> {
@@ -290,8 +314,11 @@ pub fn apply_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
             .ok_or_else(|| anyhow::anyhow!("runs must be a number"))? as u32;
     }
     if let Some(v) = doc.get("experiment", "seed") {
-        cfg.seed = v.as_f64()
-            .ok_or_else(|| anyhow::anyhow!("seed must be a number"))? as u64;
+        // exact-integer path: a 64-bit seed must not round through f64
+        cfg.seed = v.as_u64().ok_or_else(|| {
+            anyhow::anyhow!("seed must be a non-negative integer \
+                             representable without precision loss")
+        })?;
     }
     if let Some(v) = doc.get("experiment", "eval_every") {
         cfg.eval_every = v.as_usize()
@@ -304,15 +331,20 @@ pub fn apply_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
     apply_train_overrides(cfg, doc)
 }
 
-/// Apply the unified `[train]` / `[train.cost_model]` sections
-/// ([`TrainCfg`] syntax) on top of an experiment config. Keys that are
-/// derived from the artifact spec at run time (`batch`, `upload_bytes`)
-/// cannot be overridden per-experiment and are rejected explicitly
-/// rather than silently ignored.
+/// Apply the unified `[train]` / `[train.cost_model]` / `[comm]` /
+/// `[comm.links]` sections ([`TrainCfg`] syntax) on top of an experiment
+/// config. Keys that are derived from the artifact spec at run time
+/// (`batch`, `upload_bytes`) cannot be overridden per-experiment and are
+/// rejected explicitly rather than silently ignored.
 fn apply_train_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
                          -> anyhow::Result<()> {
     let train = doc.sections.get("train");
-    if train.is_none() && !doc.sections.contains_key("train.cost_model") {
+    let has_comm = doc.sections.contains_key("comm")
+        || doc.sections.contains_key("comm.links");
+    if train.is_none()
+        && !doc.sections.contains_key("train.cost_model")
+        && !has_comm
+    {
         return Ok(());
     }
     // full key/type validation happens in TrainCfg::from_doc
@@ -339,6 +371,9 @@ fn apply_train_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
     }
     if doc.sections.contains_key("train.cost_model") {
         cfg.cost_model = parsed.cost_model;
+    }
+    if has_comm {
+        cfg.comm = parsed.comm;
     }
     Ok(())
 }
@@ -421,6 +456,41 @@ mod tests {
         // and invalid values are rejected by TrainCfg::from_doc
         let neg = toml::parse("[train]\niters = -3\n").unwrap();
         assert!(apply_overrides(&mut cfg, &neg).is_err());
+    }
+
+    #[test]
+    fn comm_section_overrides_apply() {
+        let mut cfg = fig3_ijcnn();
+        let doc = toml::parse(
+            "[comm]\ntransport = \"threaded\"\nsemi_sync_k = 4\n\
+             jitter_sigma = 0.5\njitter_seed = 9\n\
+             [comm.links]\nlatency_mult = [1, 3]\n",
+        )
+        .unwrap();
+        apply_overrides(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.comm.transport, crate::comm::TransportKind::Threaded);
+        assert_eq!(cfg.comm.semi_sync_k, 4);
+        assert_eq!(cfg.comm.jitter_sigma, 0.5);
+        assert_eq!(cfg.comm.jitter_seed, 9);
+        assert_eq!(cfg.comm.latency_mult, vec![1.0, 3.0]);
+        // untouched knobs keep their preset values
+        assert_eq!(cfg.cost_model, CostModel::default());
+        assert_eq!(cfg.iters, 1_500);
+        // unknown [comm] keys are rejected
+        let bad = toml::parse("[comm]\nwarp_factor = 9\n").unwrap();
+        assert!(apply_overrides(&mut cfg, &bad).is_err());
+    }
+
+    #[test]
+    fn experiment_seed_is_exact() {
+        let mut cfg = fig3_ijcnn();
+        let big = (1u64 << 53) + 1;
+        let doc = toml::parse(&format!("[experiment]\nseed = {big}\n"))
+            .unwrap();
+        apply_overrides(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.seed, big);
+        let bad = toml::parse("[experiment]\nseed = 2.5\n").unwrap();
+        assert!(apply_overrides(&mut cfg, &bad).is_err());
     }
 
     #[test]

@@ -3,13 +3,21 @@
 //! with string/number/bool/flat-array values, `#` comments. This covers
 //! the whole config surface of the launcher; anything fancier is a parse
 //! error rather than a silent misread.
+//!
+//! Integer tokens (no `.`/`e`) are kept as exact `u64`s
+//! ([`Value::Int`]), NOT routed through f64 — a seed above 2^53 written
+//! as `seed = 9007199254740993` must survive bit-exactly, and
+//! [`Value::as_u64`] refuses float tokens that cannot round-trip.
 
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
     Str(String),
+    /// float token (contains `.`, `e`, or a sign making it non-u64)
     Num(f64),
+    /// exact non-negative integer token
+    Int(u64),
     Bool(bool),
     Arr(Vec<Value>),
 }
@@ -25,12 +33,33 @@ impl Value {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
+            // lossy above 2^53, which is fine for float contexts
+            Value::Int(n) => Some(*n as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact non-negative integer: integer tokens verbatim; float tokens
+    /// only when they round-trip through u64 without precision loss
+    /// (so `seed = 2.0` is accepted but `seed = 1e300` and `seed = 2.7`
+    /// are errors at the call site, never silent corruption).
+    pub fn as_u64(&self) -> Option<u64> {
+        match *self {
+            Value::Int(n) => Some(n),
+            Value::Num(f)
+                if f >= 0.0
+                    && f.fract() == 0.0
+                    && f < u64::MAX as f64 =>
+            {
+                let n = f as u64;
+                (n as f64 == f).then_some(n)
+            }
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().filter(|n| *n >= 0.0).map(|n| n as usize)
+        self.as_u64().map(|n| n as usize)
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -131,6 +160,12 @@ fn parse_value(s: &str) -> anyhow::Result<Value> {
         "false" => return Ok(Value::Bool(false)),
         _ => {}
     }
+    // exact integers first, so 64-bit seeds never round through f64
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(n) = s.parse::<u64>() {
+            return Ok(Value::Int(n));
+        }
+    }
     s.parse::<f64>()
         .map(Value::Num)
         .map_err(|_| anyhow::anyhow!("cannot parse value '{s}'"))
@@ -178,5 +213,41 @@ mod tests {
     fn hash_inside_string_kept() {
         let doc = parse("k = \"a#b\"").unwrap();
         assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn integers_are_exact_to_64_bits() {
+        // 2^53 + 1 is the first integer f64 cannot represent
+        let doc = parse(
+            "a = 9007199254740993\nb = 18446744073709551615\nc = 7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_u64(),
+                   Some(9_007_199_254_740_993));
+        assert_eq!(doc.get("", "b").unwrap().as_u64(), Some(u64::MAX));
+        assert_eq!(doc.get("", "c").unwrap(), &Value::Int(7));
+        // integer tokens still serve float contexts
+        assert_eq!(doc.get("", "c").unwrap().as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn as_u64_refuses_precision_loss() {
+        // exact integral floats round-trip...
+        assert_eq!(Value::Num(2.0).as_u64(), Some(2));
+        assert_eq!(Value::Num(1e15).as_u64(), Some(1_000_000_000_000_000));
+        // ...everything lossy or out of range is refused
+        assert_eq!(Value::Num(2.7).as_u64(), None);
+        assert_eq!(Value::Num(-1.0).as_u64(), None);
+        assert_eq!(Value::Num(1e300).as_u64(), None);
+        assert_eq!(Value::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Value::Str("7".into()).as_u64(), None);
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers_still_parse_as_floats() {
+        let doc = parse("a = -4\nb = 2.5e3\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap(), &Value::Num(-4.0));
+        assert_eq!(doc.get("", "a").unwrap().as_u64(), None);
+        assert_eq!(doc.get("", "b").unwrap().as_f64(), Some(2500.0));
     }
 }

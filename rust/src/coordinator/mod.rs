@@ -1,5 +1,6 @@
-//! The paper's L3 building blocks: the CADA parameter server and the
-//! workers with adaptive upload rules.
+//! The paper's L3 building blocks: the CADA parameter server, the
+//! workers with adaptive upload rules, and the server<->worker message
+//! protocol of the threaded execution engine.
 //!
 //! Structure mirrors Algorithm 1 of the paper:
 //!
@@ -13,13 +14,36 @@
 //! * [`server`]   — the aggregate-gradient recursion (Eq. 3) and the
 //!                  AMSGrad/SGD update (Eq. 2a-2c), native or Pallas-artifact
 //!                  backed.
+//! * [`ToWorker`] / [`FromWorker`] — the mailbox messages the
+//!   [`Threaded`](crate::comm::Threaded) transport moves between the
+//!   server thread and the persistent worker threads.
 //!
 //! The iteration loop itself lives in [`crate::algorithms`]: the
 //! [`Cada`](crate::algorithms::Cada) algorithm composes these pieces into
-//! the `broadcast → local_step → aggregate → server_update` lifecycle and
-//! the generic [`Trainer`](crate::algorithms::Trainer) drives it.
+//! the `broadcast → worker jobs → aggregate → server_update` lifecycle
+//! and the generic [`Trainer`](crate::algorithms::Trainer) drives it over
+//! a [`Transport`](crate::comm::Transport).
 
 pub mod history;
 pub mod rules;
 pub mod server;
 pub mod worker;
+
+use crate::comm::transport::{JobOut, WorkerJob};
+
+/// Server -> worker mailbox message (one per round per worker under the
+/// threaded transport).
+pub enum ToWorker {
+    /// Execute one round job on the worker thread's own backend.
+    Job(WorkerJob),
+    /// Drain the mailbox and exit the worker thread.
+    Shutdown,
+}
+
+/// Worker -> server completion message: the job's opaque outcome, tagged
+/// with the worker id so the event-driven aggregator can re-impose
+/// worker order on racy arrivals.
+pub struct FromWorker {
+    pub w: usize,
+    pub outcome: anyhow::Result<JobOut>,
+}

@@ -28,6 +28,8 @@ pub fn figure_bench(preset: &str) -> anyhow::Result<()> {
     cfg.n = args.usize_or("n", cfg.n)?;
     cfg.workers = args.usize_or("workers", cfg.workers)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
+    // engine knobs: transport, semi-sync quorum, straggler jitter
+    config::apply_comm_cli_overrides(&mut cfg.comm, &args)?;
     // `cargo bench` passes --bench to the binary; accept and ignore it.
     let _ = args.bool("bench");
     args.reject_unknown()?;
@@ -49,6 +51,9 @@ pub fn figure_bench(preset: &str) -> anyhow::Result<()> {
     for r in &results {
         print_series(&r.mean_curve);
     }
+    // under heterogeneous links / jitter / semi-sync the per-worker
+    // breakdown is where stragglers become visible
+    print!("{}", crate::exp::render_breakdowns(&cfg, &results));
     let curves: Vec<Curve> = results
         .iter()
         .flat_map(|r| r.curves.iter().cloned())

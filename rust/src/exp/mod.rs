@@ -152,6 +152,21 @@ impl Experiment {
     }
 }
 
+/// Per-worker breakdown tables for every result, when the engine config
+/// makes stragglers possible (shared by `cada train` and the figure
+/// benches; empty under the uniform fully-sync default).
+pub fn render_breakdowns(cfg: &ExpConfig, results: &[RunResult])
+                         -> String {
+    if cfg.comm.is_uniform_sync() {
+        return String::new();
+    }
+    results
+        .iter()
+        .map(|r| crate::telemetry::render_worker_breakdown(&r.algo,
+                                                           &r.comm))
+        .collect()
+}
+
 /// Map a dataset kind + spec geometry to an actual synthetic dataset.
 pub fn make_dataset(kind: DatasetKind, spec: &SpecEntry, n: usize,
                     seed: u64) -> Dataset {
@@ -265,6 +280,7 @@ fn run_one(
             cost_model: cfg.cost_model.clone(),
             upload_bytes: spec.upload_bytes(),
             trace_cap: cfg.trace_cap,
+            comm: cfg.comm.clone(),
         })
         .algorithm(&mut *algorithm)
         .dataset(data)

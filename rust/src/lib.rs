@@ -22,10 +22,13 @@
 //! ## Quick tour
 //!
 //! Every training method implements one [`algorithms::Algorithm`] trait
-//! (round lifecycle `broadcast → local_step → aggregate →
+//! (round lifecycle `broadcast → worker jobs → aggregate →
 //! server_update`), and one builder-style [`algorithms::Trainer`] drives
-//! the loop, evaluation, communication accounting and telemetry for all
-//! of them:
+//! the engine for all of them: per-worker minibatch RNG streams, the
+//! execution [`Transport`](comm::Transport) (sequential `InProc`, or
+//! `Threaded` with one persistent thread per worker), per-worker
+//! [`LinkModel`](comm::LinkModel)s with an event clock that advances by
+//! the slowest participating worker, evaluation and telemetry:
 //!
 //! ```
 //! use cada::prelude::*;
@@ -47,7 +50,9 @@
 //!         use_artifact: false,
 //!     },
 //! ));
-//! // ... driven by the one generic Trainer
+//! // ... driven by the one generic Trainer; swap
+//! // `TransportKind::Threaded` in and the run is bit-identical, just
+//! // spread over worker threads
 //! let mut trainer = Trainer::builder()
 //!     .algorithm(&mut algo)
 //!     .dataset(&data)
@@ -57,6 +62,7 @@
 //!     .iters(60)
 //!     .eval_every(20)
 //!     .seed(7)
+//!     .transport(TransportKind::InProc)
 //!     .build()
 //!     .unwrap();
 //! let curve = trainer.run(0, &mut compute).unwrap();
@@ -69,8 +75,25 @@
 //! Swapping the method is one line — `FedAvg::new(0.1, 8)`,
 //! `LocalMomentum::new(0.05, 0.9, 8)`, `FedAdam::new(...)` or another
 //! [`RuleKind`](coordinator::rules::RuleKind) — everything else
-//! (`Trainer`, metrics, experiment driver) is shared. See
-//! `examples/quickstart.rs` for an end-to-end comparison run and
+//! (`Trainer`, metrics, experiment driver) is shared.
+//!
+//! ## Scenario knobs (the `[comm]` config section)
+//!
+//! * **transport** — `inproc` (sequential reference) or `threaded`
+//!   (persistent worker threads + channel mailboxes; enforced
+//!   bit-identical by `tests/golden_parity.rs`).
+//! * **heterogeneous links** — `[comm.links]` latency/bandwidth/
+//!   asymmetry multipliers, cycled over workers; broadcasts and uploads
+//!   are charged against each worker's own link and the event clock
+//!   advances by the slowest participant.
+//! * **straggler jitter** — seeded log-normal multiplier on upload
+//!   times; a pure function of `(seed, round, worker)`, so runs stay
+//!   reproducible.
+//! * **semi-sync** — `semi_sync_k = K`: the server proceeds once the
+//!   fastest K uploads of a round arrive; stragglers fold in stale next
+//!   round (server-centric methods only).
+//!
+//! See `examples/quickstart.rs` for an end-to-end comparison run and
 //! [`exp::Experiment`] for the paper-figure presets.
 
 pub mod algorithms;
@@ -93,7 +116,8 @@ pub mod prelude {
         Algorithm, AlgorithmKind, Cada, CadaCfg, FedAdam, FedAdamCfg,
         FedAvg, LocalMomentum, TrainCfg, Trainer,
     };
-    pub use crate::comm::{CommStats, CostModel};
+    pub use crate::comm::{CommCfg, CommStats, CostModel, LinkModel,
+                          LinkSet, Participation, TransportKind};
     pub use crate::config::Schedule;
     pub use crate::coordinator::{rules::RuleKind, server::Optimizer};
     pub use crate::data::{Dataset, DatasetKind, Partition, PartitionScheme};

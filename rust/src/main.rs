@@ -56,9 +56,11 @@ USAGE:
 TRAIN OPTIONS:
   --preset NAME       experiment preset (paper figure)
   --config FILE       TOML overrides: [experiment] iters/n/workers/... and
-                      the unified [train] / [train.cost_model] sections
-                      (iters, eval_every, seed, trace_cap; latency_s,
-                      down_bw, asymmetry)
+                      the unified [train] / [train.cost_model] / [comm] /
+                      [comm.links] sections (iters, eval_every, seed,
+                      trace_cap; latency_s, down_bw, asymmetry; transport,
+                      semi_sync_k, jitter_sigma, jitter_seed; per-worker
+                      latency_mult / bw_mult / asymmetry_mult arrays)
   --algo NAME         run only this algorithm from the preset
   --iters N           override iteration count
   --runs N            override Monte-Carlo run count
@@ -66,6 +68,12 @@ TRAIN OPTIONS:
   --workers M         override worker count
   --seed S            override base seed
   --target-loss X     override summary target loss
+  --transport T       worker execution engine: inproc (sequential,
+                      default) or threaded (persistent worker threads)
+  --semi-sync-k K     server proceeds after the fastest K uploads of a
+                      round; stragglers fold in stale (0 = wait for all)
+  --jitter-sigma S    log-normal upload straggler jitter (0 = off)
+  --jitter-seed N     seed of the jitter stream
   --artifacts DIR     artifacts directory (default ./artifacts)
   --out FILE          write curves as JSONL
   --quiet             less logging
@@ -87,6 +95,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.workers = args.usize_or("workers", cfg.workers)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.target_loss = args.f64_or("target-loss", cfg.target_loss)?;
+    config::apply_comm_cli_overrides(&mut cfg.comm, args)?;
     if let Some(name) = args.str_opt("algo") {
         let name = name.to_string();
         cfg.algos.retain(|a| a.name() == name);
@@ -110,6 +119,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "{}",
         telemetry::render_table(&cfg.name, cfg.target_loss, &rows)
     );
+    // stragglers only exist under heterogeneous/jittered links; show
+    // who paid the simulated time (empty under the uniform default)
+    print!("{}", cada::exp::render_breakdowns(&cfg, &results));
     if let Some(path) = out {
         let curves: Vec<_> = results
             .iter()

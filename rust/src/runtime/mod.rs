@@ -54,6 +54,16 @@ pub trait Compute {
 
     /// Human-readable backend name (telemetry).
     fn backend_name(&self) -> &'static str;
+
+    /// Fork an independent instance of this backend for a worker thread:
+    /// the [`Threaded`](crate::comm::Threaded) transport gives each
+    /// persistent worker its own backend. Stateless native backends
+    /// return a clone; backends tied to one runtime/device (PJRT) keep
+    /// the default `None`, and the engine reports that the threaded
+    /// transport is unavailable for them.
+    fn fork(&self) -> Option<Box<dyn Compute + Send>> {
+        None
+    }
 }
 
 /// Resolve (spec, compute backend, initial theta) for `spec_name`.

@@ -29,6 +29,7 @@ fn sigmoid(z: f32) -> f32 {
 
 /// Binary logistic regression with l2 regularisation, flat layout
 /// `[b, w...]` padded to `p_pad`.
+#[derive(Clone)]
 pub struct NativeLogReg {
     pub d: usize,
     pub p_pad: usize,
@@ -134,6 +135,11 @@ impl Compute for NativeLogReg {
 
     fn backend_name(&self) -> &'static str {
         "native"
+    }
+
+    fn fork(&self) -> Option<Box<dyn Compute + Send>> {
+        // stateless: a worker-thread clone computes bit-identical floats
+        Some(Box::new(self.clone()))
     }
 }
 

@@ -176,6 +176,49 @@ pub fn render_table(title: &str, target_loss: f64, rows: &[SummaryRow])
     out
 }
 
+/// Render the per-worker communication/time breakdown of a run: upload
+/// counts and cumulative simulated upload seconds per worker, with the
+/// straggler (max upload-seconds worker) marked. Empty string when the
+/// run kept no per-worker stats.
+pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
+    if comm.worker_uploads.is_empty() {
+        return String::new();
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "\n-- {algo}: per-worker comm breakdown ({} stale uploads) --\n",
+        comm.stale_uploads
+    ));
+    out.push_str(&format!(
+        "{:>8} {:>10} {:>12}\n", "worker", "uploads", "upload_s"));
+    let slowest = comm
+        .worker_upload_s
+        .iter()
+        .cloned()
+        .fold(0.0, f64::max);
+    // only a UNIQUE maximum is a straggler; under homogeneous links all
+    // workers tie and marking every row would be noise
+    let at_max = comm
+        .worker_upload_s
+        .iter()
+        .filter(|&&s| s == slowest)
+        .count();
+    for (w, (&n, &s)) in comm
+        .worker_uploads
+        .iter()
+        .zip(&comm.worker_upload_s)
+        .enumerate()
+    {
+        let marker = if s == slowest && slowest > 0.0 && at_max == 1 {
+            "  <- straggler"
+        } else {
+            ""
+        };
+        out.push_str(&format!("{w:>8} {n:>10} {s:>12.3}{marker}\n"));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +264,28 @@ mod tests {
         let line = c.to_jsonl();
         let v = crate::util::json::parse(line.trim()).unwrap();
         assert_eq!(v.get("loss").unwrap().as_f64(), Some(0.9));
+    }
+
+    #[test]
+    fn worker_breakdown_marks_straggler() {
+        let mut comm = CommStats::for_workers(3);
+        comm.count_upload(0, 100, 1.0);
+        comm.count_upload(1, 100, 9.0);
+        comm.count_upload(2, 100, 2.0);
+        let t = render_worker_breakdown("cada2", &comm);
+        let straggler_line =
+            t.lines().find(|l| l.contains("straggler")).unwrap();
+        assert!(straggler_line.trim_start().starts_with('1'),
+                "{straggler_line}");
+        // no per-worker stats -> no table
+        assert_eq!(render_worker_breakdown("x", &CommStats::default()), "");
+        // homogeneous links tie every worker: nobody is THE straggler
+        let mut tied = CommStats::for_workers(3);
+        for w in 0..3 {
+            tied.count_upload(w, 100, 2.0);
+        }
+        let t = render_worker_breakdown("adam", &tied);
+        assert!(!t.contains("straggler"), "{t}");
     }
 
     #[test]

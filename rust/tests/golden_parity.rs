@@ -1,18 +1,26 @@
-//! Golden-seed parity: the unified `Trainer` must reproduce the
+//! Golden-seed parity: the engine-based `Trainer` must reproduce the
 //! pre-refactor `ServerLoop` / `LocalLoop` behaviour EXACTLY — same loss
 //! curves, same upload/download/grad-eval counters, same simulated
-//! communication time, same final iterate — for fixed seeds.
+//! event-clock time, same final iterate — for fixed seeds, and the
+//! `Threaded` transport must be bit-identical to `InProc`.
 //!
-//! The legacy loops were deleted in the refactor, so faithful inline
+//! The legacy loops were deleted in the refactors, so faithful inline
 //! twins of their `step()`/`run()` bodies are kept here, built from the
 //! same primitives (`WorkerState`, `ServerState`, `DeltaHistory`, the
 //! tensor kernels and the forked RNG streams). Every float op happens in
 //! the same order, so all comparisons are exact (`==`), not tolerances.
+//! The twins charge communication the way the engine's event clock does
+//! (uniform links, jitter off, full participation): one slowest-download
+//! advance per broadcast, one slowest-upload advance per round — which,
+//! under a single shared `CostModel`, means one download hit per
+//! broadcast and one upload hit per uploading round.
 //!
-//! Run with `cargo test golden`.
+//! Run with `cargo test golden` (and `cargo test threaded_matches` for
+//! the transport parity half).
 
-use cada::algorithms::{Cada, CadaCfg, FedAdam, FedAdamCfg, FedAvg, Trainer};
-use cada::comm::{CommStats, CostModel};
+use cada::algorithms::{Algorithm, Cada, CadaCfg, FedAdam, FedAdamCfg,
+                       FedAvg, Trainer};
+use cada::comm::{CommStats, CostModel, TransportKind};
 use cada::config::Schedule;
 use cada::coordinator::history::DeltaHistory;
 use cada::coordinator::rules::RuleKind;
@@ -60,7 +68,8 @@ const BATCH: usize = 16;
 const UPLOAD_BYTES: usize = 92;
 const SEED: u64 = 2020;
 
-/// Faithful twin of the old `ServerLoop::run` (scheduler.rs pre-refactor).
+/// Faithful twin of the old `ServerLoop::run` (scheduler.rs
+/// pre-refactor), with communication charged per the event clock.
 #[allow(clippy::too_many_arguments)]
 fn legacy_server_run(
     rule: RuleKind,
@@ -82,7 +91,7 @@ fn legacy_server_run(
     let mut server = ServerState::new(init.clone(), m, opt);
     let mut history = DeltaHistory::new(d_max);
     let mut snapshot = init;
-    let mut comm = CommStats::default();
+    let mut comm = CommStats::for_workers(m);
     let mut points = Vec::new();
 
     let record = |server: &ServerState, comm: &CommStats,
@@ -96,9 +105,12 @@ fn legacy_server_run(
         if rule.needs_snapshot() && k % max_delay as u64 == 0 {
             snapshot.copy_from_slice(&server.theta);
         }
-        // line 3: broadcast theta^k
-        comm.record_broadcast(m, UPLOAD_BYTES, cost_model);
+        // line 3: broadcast theta^k; downloads run in parallel, so the
+        // event clock takes one (slowest = shared) download hit
+        comm.count_broadcast(m, UPLOAD_BYTES);
+        comm.advance_clock(cost_model.download_time_s(UPLOAD_BYTES));
         let rhs = history.rhs(rule.c());
+        let mut round_upload_s = 0.0f64;
         for wi in 0..m {
             let batch = w.data.sample_batch(&w.partition.shards[wi], BATCH,
                                             &mut rngs[wi]);
@@ -111,9 +123,13 @@ fn legacy_server_run(
             if step.decision.upload {
                 // the legacy loop folded each innovation inline
                 server.apply_innovation(workers[wi].last_delta());
-                comm.record_upload(UPLOAD_BYTES, cost_model);
+                let t = cost_model.upload_time_s(UPLOAD_BYTES);
+                comm.count_upload(wi, UPLOAD_BYTES, t);
+                round_upload_s = round_upload_s.max(t);
             }
         }
+        // uploads run in parallel: the round waits for the slowest one
+        comm.advance_clock(round_upload_s);
         let sq_step = server.step(k, compute).unwrap();
         history.push(sq_step);
         if (k + 1) % EVAL_EVERY as u64 == 0 {
@@ -136,7 +152,7 @@ enum LegacyLocal {
 }
 
 /// Faithful twin of the old `LocalLoop::run` (algorithms/mod.rs
-/// pre-refactor).
+/// pre-refactor), with communication charged per the event clock.
 fn legacy_local_run(
     method: &LegacyLocal,
     h: u32,
@@ -154,7 +170,7 @@ fn legacy_local_run(
     let mut m1 = vec![0.0f32; p];
     let mut m2 = vec![0.0f32; p];
     let mut grad = vec![0.0f32; p];
-    let mut comm = CommStats::default();
+    let mut comm = CommStats::for_workers(m);
     let mut points = Vec::new();
 
     let record = |theta: &[f32], comm: &CommStats,
@@ -179,9 +195,12 @@ fn legacy_local_run(
             }
         }
         if (k + 1) % h as u64 == 0 {
-            for _ in 0..m {
-                comm.record_upload(UPLOAD_BYTES, cost_model);
+            // all M model uploads run in parallel: one slowest-upload hit
+            let t = cost_model.upload_time_s(UPLOAD_BYTES);
+            for wi in 0..m {
+                comm.count_upload(wi, UPLOAD_BYTES, t);
             }
+            comm.advance_clock(t);
             let parts: Vec<&[f32]> =
                 thetas.iter().map(|t| t.as_slice()).collect();
             match *method {
@@ -203,7 +222,8 @@ fn legacy_local_run(
                     }
                 }
             }
-            comm.record_broadcast(m, UPLOAD_BYTES, cost_model);
+            comm.count_broadcast(m, UPLOAD_BYTES);
+            comm.advance_clock(cost_model.download_time_s(UPLOAD_BYTES));
             for t in &mut thetas {
                 t.copy_from_slice(&theta);
             }
@@ -215,10 +235,12 @@ fn legacy_local_run(
     (points, comm, theta)
 }
 
-/// Run an algorithm through the new Trainer with the shared golden knobs.
+/// Run an algorithm through the engine Trainer with the shared golden
+/// knobs, on the given transport.
 fn trainer_run(
-    algo: &mut dyn cada::algorithms::Algorithm,
+    algo: &mut dyn Algorithm,
     cost_model: CostModel,
+    transport: TransportKind,
     w: &Workload,
     compute: &mut dyn Compute,
 ) -> (Vec<LegacyPoint>, CommStats, Vec<f32>) {
@@ -233,6 +255,7 @@ fn trainer_run(
         .batch(BATCH)
         .upload_bytes(UPLOAD_BYTES)
         .cost_model(cost_model)
+        .transport(transport)
         .seed(SEED)
         .build()
         .unwrap();
@@ -248,19 +271,31 @@ fn trainer_run(
 }
 
 fn assert_parity(
-    legacy: (Vec<LegacyPoint>, CommStats, Vec<f32>),
-    new: (Vec<LegacyPoint>, CommStats, Vec<f32>),
+    legacy: &(Vec<LegacyPoint>, CommStats, Vec<f32>),
+    new: &(Vec<LegacyPoint>, CommStats, Vec<f32>),
     label: &str,
 ) {
     let (lp, lc, lt) = legacy;
     let (np, nc, nt) = new;
     assert_eq!(lp.len(), np.len(), "{label}: curve length");
-    for (i, (l, n)) in lp.iter().zip(&np).enumerate() {
+    for (i, (l, n)) in lp.iter().zip(np).enumerate() {
         assert_eq!(l, n, "{label}: curve point {i} diverged");
     }
     assert_eq!(lc, nc, "{label}: CommStats diverged");
-    let drift = tensor::sqnorm_diff(&lt, &nt);
+    let drift = tensor::sqnorm_diff(lt, nt);
     assert_eq!(drift, 0.0, "{label}: final iterate diverged by {drift}");
+}
+
+fn cada_algo(rule: RuleKind, alpha: f32, max_delay: u32, d_max: usize)
+             -> Cada {
+    Cada::new(CadaCfg {
+        rule,
+        opt: amsgrad(alpha),
+        max_delay,
+        snapshot_every: 0,
+        d_max,
+        use_artifact_innov: false,
+    })
 }
 
 #[test]
@@ -270,20 +305,14 @@ fn golden_cada2_matches_legacy_server_loop() {
     let cost = CostModel::default();
     let legacy = legacy_server_run(rule, amsgrad(0.02), 20, 10, &cost, &w,
                                    &mut compute);
-    let mut algo = Cada::new(CadaCfg {
-        rule,
-        opt: amsgrad(0.02),
-        max_delay: 20,
-        snapshot_every: 0,
-        d_max: 10,
-        use_artifact_innov: false,
-    });
-    let new = trainer_run(&mut algo, cost, &w, &mut compute);
+    let mut algo = cada_algo(rule, 0.02, 20, 10);
+    let new = trainer_run(&mut algo, cost, TransportKind::InProc, &w,
+                          &mut compute);
     // the adaptive rule must actually have skipped something, or the
     // parity check proves nothing interesting
     assert!(legacy.1.uploads < (ITERS * 5) as u64,
             "cada2 never skipped: {}", legacy.1.uploads);
-    assert_parity(legacy, new, "cada2");
+    assert_parity(&legacy, &new, "cada2");
 }
 
 #[test]
@@ -293,16 +322,10 @@ fn golden_cada1_matches_legacy_server_loop() {
     let cost = CostModel::default();
     let legacy = legacy_server_run(rule, amsgrad(0.02), 20, 10, &cost, &w,
                                    &mut compute);
-    let mut algo = Cada::new(CadaCfg {
-        rule,
-        opt: amsgrad(0.02),
-        max_delay: 20,
-        snapshot_every: 0,
-        d_max: 10,
-        use_artifact_innov: false,
-    });
-    let new = trainer_run(&mut algo, cost, &w, &mut compute);
-    assert_parity(legacy, new, "cada1");
+    let mut algo = cada_algo(rule, 0.02, 20, 10);
+    let new = trainer_run(&mut algo, cost, TransportKind::InProc, &w,
+                          &mut compute);
+    assert_parity(&legacy, &new, "cada1");
 }
 
 #[test]
@@ -314,16 +337,10 @@ fn golden_adam_matches_legacy_server_loop() {
     // distributed Adam uploads M gradients every iteration
     assert_eq!(legacy.1.uploads, (ITERS * 5) as u64);
     assert_eq!(legacy.1.grad_evals, (ITERS * 5) as u64);
-    let mut algo = Cada::new(CadaCfg {
-        rule: RuleKind::Always,
-        opt: amsgrad(0.02),
-        max_delay: u32::MAX,
-        snapshot_every: 0,
-        d_max: 1,
-        use_artifact_innov: false,
-    });
-    let new = trainer_run(&mut algo, cost, &w, &mut compute);
-    assert_parity(legacy, new, "adam");
+    let mut algo = cada_algo(RuleKind::Always, 0.02, u32::MAX, 1);
+    let new = trainer_run(&mut algo, cost, TransportKind::InProc, &w,
+                          &mut compute);
+    assert_parity(&legacy, &new, "adam");
 }
 
 #[test]
@@ -336,8 +353,9 @@ fn golden_fedavg_matches_legacy_local_loop() {
     assert_eq!(legacy.1.uploads, 48);
     assert_eq!(legacy.1.grad_evals, (ITERS * 4) as u64);
     let mut algo = FedAvg::new(0.1, 5);
-    let new = trainer_run(&mut algo, cost, &w, &mut compute);
-    assert_parity(legacy, new, "fedavg");
+    let new = trainer_run(&mut algo, cost, TransportKind::InProc, &w,
+                          &mut compute);
+    assert_parity(&legacy, &new, "fedavg");
 }
 
 #[test]
@@ -361,6 +379,49 @@ fn golden_fedadam_matches_legacy_local_loop() {
         eps: 1e-8,
         h: 4,
     });
-    let new = trainer_run(&mut algo, cost, &w, &mut compute);
-    assert_parity(legacy, new, "fedadam");
+    let new = trainer_run(&mut algo, cost, TransportKind::InProc, &w,
+                          &mut compute);
+    assert_parity(&legacy, &new, "fedadam");
+}
+
+/// The tentpole's acceptance gate: with jitter off, the `Threaded`
+/// transport is bit-identical to `InProc` across the whole golden suite
+/// — adam / cada1 / cada2 / fedavg / fedadam.
+#[test]
+fn threaded_matches_inproc_bit_for_bit() {
+    let (mut compute, w) = workload(5);
+    let cost = CostModel::default();
+    let build: Vec<(&str, Box<dyn Fn() -> Box<dyn Algorithm>>)> = vec![
+        ("adam", Box::new(|| {
+            Box::new(cada_algo(RuleKind::Always, 0.02, u32::MAX, 1))
+        })),
+        ("cada1", Box::new(|| {
+            Box::new(cada_algo(RuleKind::Cada1 { c: 0.6 }, 0.02, 20, 10))
+        })),
+        ("cada2", Box::new(|| {
+            Box::new(cada_algo(RuleKind::Cada2 { c: 0.6 }, 0.02, 20, 10))
+        })),
+        ("fedavg", Box::new(|| Box::new(FedAvg::new(0.1, 5)))),
+        ("fedadam", Box::new(|| {
+            Box::new(FedAdam::new(FedAdamCfg {
+                alpha_local: 0.1,
+                alpha_server: 0.05,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                h: 4,
+            }))
+        })),
+    ];
+    for (label, make) in &build {
+        let mut inproc_algo = make();
+        let inproc = trainer_run(inproc_algo.as_mut(), cost.clone(),
+                                 TransportKind::InProc, &w, &mut compute);
+        let mut threaded_algo = make();
+        let threaded = trainer_run(threaded_algo.as_mut(), cost.clone(),
+                                   TransportKind::Threaded, &w,
+                                   &mut compute);
+        assert_parity(&inproc, &threaded,
+                      &format!("{label}: threaded vs inproc"));
+    }
 }

@@ -307,7 +307,9 @@ fn prop_amsgrad_vhat_monotone_and_padding_inert() {
 
 #[test]
 fn prop_comm_accounting_consistent() {
-    // uploads * bytes == upload_bytes for any cost model.
+    // uploads * bytes == upload_bytes for any cost model, and the event
+    // clock advances by the settled round time (max over uploaders),
+    // never additively per message.
     check(
         Config { cases: 50, ..Config::default() },
         "comm byte accounting",
@@ -318,10 +320,16 @@ fn prop_comm_accounting_consistent() {
         },
         |&(n_up, bytes)| {
             let model = CostModel::default();
-            let mut stats = cada::comm::CommStats::default();
-            for _ in 0..n_up {
-                stats.record_upload(bytes, &model);
+            let links = cada::comm::LinkSet::homogeneous(n_up.max(1),
+                                                         model.clone());
+            let pending: Vec<usize> = (0..n_up).collect();
+            let verdict = links.settle_uploads(
+                0, &pending, bytes, cada::comm::Participation::Full);
+            let mut stats = cada::comm::CommStats::for_workers(n_up.max(1));
+            for &(w, t) in &verdict.arrival_s {
+                stats.count_upload(w, bytes, t);
             }
+            stats.advance_clock(verdict.upload_dt_s);
             if stats.uploads != n_up as u64 {
                 return Err("upload count".into());
             }
@@ -330,6 +338,18 @@ fn prop_comm_accounting_consistent() {
             }
             if n_up > 0 && stats.sim_time_s <= 0.0 {
                 return Err("no simulated time accrued".into());
+            }
+            // event clock: one round of parallel uploads costs the max,
+            // i.e. exactly one homogeneous upload time
+            if n_up > 0
+                && (stats.sim_time_s - model.upload_time_s(bytes)).abs()
+                    > 1e-12
+            {
+                return Err(format!(
+                    "clock {} != one parallel upload {}",
+                    stats.sim_time_s,
+                    model.upload_time_s(bytes)
+                ));
             }
             Ok(())
         },
