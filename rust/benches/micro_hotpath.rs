@@ -8,12 +8,15 @@
 //! * one full Trainer round on the tiny spec — the end-to-end per-round
 //!   overhead of the unified coordinator.
 
+use std::sync::Arc;
+
 use cada::algorithms::{Cada, CadaCfg, Trainer};
 use cada::bench::{black_box, Runner};
 use cada::comm::{CostModel, TransportKind};
 use cada::config::Schedule;
 use cada::coordinator::rules::RuleKind;
-use cada::coordinator::server::Optimizer;
+use cada::coordinator::server::{Optimizer, ServerState};
+use cada::coordinator::shard::{ShardLayout, SnapshotBuffers};
 use cada::data::{Dataset, Partition, PartitionScheme};
 use cada::runtime::native::NativeLogReg;
 use cada::runtime::{Compute, Engine, Manifest, SpecEntry};
@@ -49,6 +52,67 @@ fn main() {
             tensor::amsgrad_update(&mut theta, &mut h, &mut vhat, &g,
                                    1e-4, 0.9, 0.999, 1e-8);
         });
+    }
+
+    // ---------------- sharded server round at >= 1M parameters ---------
+    // fold 5 innovations + fused AMSGrad step + step-norm blocks, per
+    // shard on scoped threads: the [comm] server_shards scaling curve
+    // the CI regression gate watches (bit-identical across shard counts)
+    {
+        let p = 1_048_576usize;
+        let m = 5;
+        let deltas: Vec<Vec<f32>> =
+            (0..m).map(|i| randv(p, 40 + i as u64)).collect();
+        let delta_refs: Vec<&[f32]> =
+            deltas.iter().map(|d| d.as_slice()).collect();
+        let opt = || Optimizer::Amsgrad {
+            alpha: Schedule::Constant(1e-4),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            use_artifact: false,
+        };
+        let mut dummy = NativeLogReg::for_spec(8, 1024);
+        // reads: 5 deltas + theta/h/vhat/agg + the norm pass
+        let bytes = (4 * (m + 4) * p) as u64;
+        r.header("sharded server fold+step (p=1048576, 5 uploads)");
+        for shards in [1usize, 2, 4, 8] {
+            let mut server = ServerState::new_sharded(
+                randv(p, 39), m, opt(), shards);
+            let mut k = 0u64;
+            r.bench_bytes(
+                &format!("server fold+step  p=1048576 shards={shards}"),
+                bytes,
+                || {
+                    black_box(
+                        server
+                            .fold_and_step(k, &delta_refs, &mut dummy)
+                            .unwrap(),
+                    );
+                    k += 1;
+                },
+            );
+        }
+
+        // double-buffered broadcast freeze vs the naive per-round clone
+        r.header("broadcast freeze (p=1048576, 4 shards)");
+        let src = randv(p, 41);
+        let layout = ShardLayout::new(p, 4);
+        let versions = vec![7u64; layout.num_shards()];
+        let mut bufs = SnapshotBuffers::new();
+        let mut view: Option<Arc<Vec<f32>>> = None;
+        r.bench("freeze reuse      (clean ranges)", || {
+            view = Some(bufs.freeze(&src, &layout, &versions));
+        });
+        let mut dirty = vec![0u64; layout.num_shards()];
+        r.bench("freeze copy       (all ranges dirty)", || {
+            dirty.iter_mut().for_each(|v| *v += 1);
+            view = Some(bufs.freeze(&src, &layout, &dirty));
+        });
+        r.bench("naive Arc clone   (pre-refactor)", || {
+            view = Some(Arc::new(src.clone()));
+        });
+        black_box(view);
     }
 
     // shared tiny-logreg workload (spec geometry matches test_logreg)

@@ -6,16 +6,23 @@
 //! * `broadcast` — refresh the CADA1 snapshot every D iterations, count
 //!   the theta^k broadcast, freeze this round's drift threshold RHS, and
 //!   freeze theta^k / the snapshot behind `Arc`s for the worker jobs.
+//!   The frozen views come from double-buffered
+//!   [`SnapshotBuffers`](crate::coordinator::shard::SnapshotBuffers):
+//!   no per-round full-vector clone — only shard ranges dirtied since a
+//!   buffer last held them are copied.
 //! * `make_step`/`absorb_step` — lines 5–14: each worker job evaluates
 //!   its rule LHS against the frozen RHS and decides whether to upload;
 //!   jobs own their [`WorkerState`] for the duration, so any transport
 //!   can run them concurrently, and outcomes fold back in worker order.
-//! * `aggregate` — Eq. 3: fold the settled (`ctx.fresh`) innovations
-//!   delta_m/M into the server aggregate, in worker order; under the
-//!   semi-sync policy, `ctx.deferred` stragglers are queued and folded
-//!   stale at the top of the next round's aggregate.
-//! * `server_update` — Eq. 2 (AMSGrad) or Eq. 4 (SGD), then push the
-//!   squared step norm into the drift history ring.
+//! * `aggregate` — Eq. 3: record the settled (`ctx.fresh`) innovations
+//!   for the round's fold, in worker order (queued semi-sync stragglers
+//!   first, one round late); `ctx.deferred` stragglers are queued for
+//!   the next round.
+//! * `server_update` — one sharded pass over the server state: fold the
+//!   recorded innovations delta_m/M and apply Eq. 2 (AMSGrad) or Eq. 4
+//!   (SGD) per parameter shard (`[comm] server_shards` scoped threads,
+//!   bit-identical for every shard count), then push the squared step
+//!   norm into the drift history ring.
 
 use std::sync::Arc;
 
@@ -24,6 +31,8 @@ use crate::comm::{JobOut, RoundEvent, WorkerJob};
 use crate::coordinator::history::DeltaHistory;
 use crate::coordinator::rules::RuleKind;
 use crate::coordinator::server::{Optimizer, ServerState};
+use crate::coordinator::shard::{ShardLayout, ShardStats, SnapshotBuffers,
+                                SnapshotStats};
 use crate::coordinator::worker::{WorkerState, WorkerStep};
 use crate::data::Batch;
 use crate::runtime::Compute;
@@ -67,8 +76,20 @@ pub struct Cada {
     pub server: ServerState,
     pub workers: Vec<WorkerState>,
     pub history: DeltaHistory,
+    /// server-shard count (engine hint, set before `init`; 1 = the
+    /// sequential reference path)
+    shards: usize,
     /// CADA1 snapshot theta-tilde (refreshed every D iterations)
     snapshot: Vec<f32>,
+    /// bumped on every snapshot refresh (drives the snapshot buffers)
+    snapshot_version: u64,
+    /// double-buffered frozen views of theta^k / the snapshot: reused
+    /// allocations, copy-on-dirty per shard range
+    theta_bufs: SnapshotBuffers,
+    snap_bufs: SnapshotBuffers,
+    /// single-range layout for the snapshot buffers (the snapshot only
+    /// changes wholesale, every D rounds)
+    snap_layout: ShardLayout,
     /// round-frozen theta^k shared with the worker jobs
     round_theta: Arc<Vec<f32>>,
     /// round-frozen snapshot (CADA1 only)
@@ -90,6 +111,11 @@ pub struct Cada {
     /// mid-round; [`Cada::stale_backlog`] exposes the tail (at most M-1
     /// entries).
     stale_queue: Vec<Vec<f32>>,
+    /// this round's fold order, recorded by `aggregate` and consumed by
+    /// `server_update`'s single sharded fold+step pass: stale straggler
+    /// innovations first, then fresh uploads in worker order
+    fold_stale: Vec<Vec<f32>>,
+    fold_fresh: Vec<usize>,
     lhs_sum: f64,
     lhs_count: usize,
 }
@@ -101,12 +127,19 @@ impl Cada {
             server: ServerState::new(Vec::new(), 1, opt),
             workers: Vec::new(),
             history: DeltaHistory::new(cfg.d_max.max(1)),
+            shards: 1,
             snapshot: Vec::new(),
+            snapshot_version: 0,
+            theta_bufs: SnapshotBuffers::new(),
+            snap_bufs: SnapshotBuffers::new(),
+            snap_layout: ShardLayout::single(0),
             round_theta: Arc::new(Vec::new()),
             round_snapshot: None,
             rhs: 0.0,
             uploaded: Vec::new(),
             stale_queue: Vec::new(),
+            fold_stale: Vec::new(),
+            fold_fresh: Vec::new(),
             lhs_sum: 0.0,
             lhs_count: 0,
             cfg,
@@ -122,6 +155,12 @@ impl Cada {
     pub fn stale_backlog(&self) -> usize {
         self.stale_queue.len()
     }
+
+    /// Double-buffered broadcast counters: how often the frozen theta^k
+    /// and CADA1-snapshot views reused a buffer vs fell back to a clone.
+    pub fn snapshot_stats(&self) -> (SnapshotStats, SnapshotStats) {
+        (self.theta_bufs.stats(), self.snap_bufs.stats())
+    }
 }
 
 impl Algorithm for Cada {
@@ -133,17 +172,29 @@ impl Algorithm for Cada {
         AlgorithmKind::ServerCentric
     }
 
+    fn set_server_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+    }
+
     fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()> {
         anyhow::ensure!(self.cfg.d_max >= 1, "d_max must be >= 1");
         let p = init_theta.len();
-        self.server =
-            ServerState::new(init_theta.to_vec(), m, self.cfg.opt.clone());
+        self.server = ServerState::new_sharded(
+            init_theta.to_vec(), m, self.cfg.opt.clone(), self.shards);
         self.workers = (0..m)
             .map(|w| WorkerState::new(w, p, self.cfg.rule))
             .collect();
         self.history = DeltaHistory::new(self.cfg.d_max);
         self.snapshot = init_theta.to_vec();
+        self.snapshot_version = 0;
+        // fresh buffers: held versions from a previous run must never
+        // alias a new run's counters
+        self.theta_bufs = SnapshotBuffers::new();
+        self.snap_bufs = SnapshotBuffers::new();
+        self.snap_layout = ShardLayout::single(p);
         self.stale_queue.clear();
+        self.fold_stale.clear();
+        self.fold_fresh.clear();
         Ok(())
     }
 
@@ -162,17 +213,24 @@ impl Algorithm for Cada {
             && ctx.k % snap_period as u64 == 0
         {
             self.snapshot.copy_from_slice(&self.server.theta);
+            self.snapshot_version += 1;
         }
         // line 3: broadcast theta^k (counted once per worker; the event
         // clock advances by the slowest download across the links)
         ctx.count_broadcast(ctx.upload_bytes);
         // freeze this round's shared state: every worker job compares
         // against the same RHS and reads the same theta^k/snapshot even
-        // though jobs may run concurrently on worker threads
+        // though jobs may run concurrently on worker threads. The views
+        // come from the double buffers: dirty shard ranges are copied,
+        // clean ones (and, between refreshes, the whole snapshot) reuse
+        // the buffer the round-(k-2) jobs have since released.
         self.rhs = self.history.rhs(self.cfg.rule.c());
-        self.round_theta = Arc::new(self.server.theta.clone());
+        self.round_theta = self.theta_bufs.freeze(
+            &self.server.theta, self.server.layout(),
+            self.server.versions());
         self.round_snapshot = if self.cfg.rule.needs_snapshot() {
-            Some(Arc::new(self.snapshot.clone()))
+            Some(self.snap_bufs.freeze(&self.snapshot, &self.snap_layout,
+                                       &[self.snapshot_version]))
         } else {
             None
         };
@@ -236,15 +294,14 @@ impl Algorithm for Cada {
     }
 
     fn aggregate(&mut self, ctx: &mut RoundCtx) -> anyhow::Result<()> {
-        // semi-sync stragglers from the previous round arrive first:
-        // their innovations fold stale (Eq. 3 one round late)
-        for delta in std::mem::take(&mut self.stale_queue) {
-            self.server.apply_innovation(&delta);
-        }
-        // Eq. 3, in worker order (float-identical to folding inline)
-        for &w in &ctx.fresh {
-            self.server.apply_innovation(self.workers[w].last_delta());
-        }
+        // record the round's fold order; the actual folds run inside
+        // `server_update`'s single per-shard pass. Semi-sync stragglers
+        // from the previous round fold first (Eq. 3 one round late),
+        // then the fresh uploads in worker order — elementwise the same
+        // sequence as folding inline, so bit-identical.
+        self.fold_stale = std::mem::take(&mut self.stale_queue);
+        self.fold_fresh.clear();
+        self.fold_fresh.extend_from_slice(&ctx.fresh);
         for &w in &ctx.deferred {
             self.stale_queue.push(self.workers[w].last_delta().to_vec());
         }
@@ -253,7 +310,15 @@ impl Algorithm for Cada {
 
     fn server_update(&mut self, ctx: &mut RoundCtx,
                      compute: &mut dyn Compute) -> anyhow::Result<()> {
-        let sq_step = self.server.step(ctx.k, compute)?;
+        // one sharded pass: fold the recorded innovations (Eq. 3) and
+        // apply the optimizer step (Eq. 2/4) per parameter range
+        let stale = std::mem::take(&mut self.fold_stale);
+        let fresh = std::mem::take(&mut self.fold_fresh);
+        let mut deltas: Vec<&[f32]> =
+            Vec::with_capacity(stale.len() + fresh.len());
+        deltas.extend(stale.iter().map(|d| d.as_slice()));
+        deltas.extend(fresh.iter().map(|&w| self.workers[w].last_delta()));
+        let sq_step = self.server.fold_and_step(ctx.k, &deltas, compute)?;
         self.history.push(sq_step);
         Ok(())
     }
@@ -274,6 +339,10 @@ impl Algorithm for Cada {
 
     fn max_staleness(&self) -> u32 {
         self.workers.iter().map(|w| w.tau).max().unwrap_or(0)
+    }
+
+    fn shard_stats(&self) -> Option<ShardStats> {
+        Some(self.server.shard_stats().clone())
     }
 }
 
@@ -413,6 +482,74 @@ mod tests {
         let cada = run_theta(RuleKind::Cada2 { c: 0.0 }, &mut compute);
         let diff = crate::tensor::sqnorm_diff(&adam, &cada);
         assert!(diff < 1e-8, "divergence {diff}");
+    }
+
+    #[test]
+    fn server_shards_are_bit_identical_and_reuse_broadcast_buffers() {
+        // p = 4096 -> 4 reduction blocks, so 2/4 shards genuinely split
+        // the server state; every shard count must reproduce the 1-shard
+        // run exactly, and the double-buffered broadcast must stop
+        // cloning after its two buffers are warm
+        let mut compute = NativeLogReg::for_spec(22, 4096);
+        let data = synthetic::ijcnn_like(600, 9);
+        let mut rng = Rng::new(10);
+        let partition =
+            Partition::build(PartitionScheme::Uniform, &data, 4, &mut rng);
+        let eval = data.gather(&(0..64).collect::<Vec<_>>());
+        let iters = 30usize;
+        let mut run = |shards: usize| {
+            let mut cfg = CadaCfg::basic(RuleKind::Cada1 { c: 0.8 },
+                                         amsgrad(0.02));
+            cfg.max_delay = 10;
+            let mut algo = Cada::new(cfg);
+            let mut trainer = Trainer::builder()
+                .algorithm(&mut algo)
+                .dataset(&data)
+                .partition(&partition)
+                .eval_batch(eval.clone())
+                .init_theta(vec![0.0; 4096])
+                .iters(iters)
+                .eval_every(5)
+                .server_shards(shards)
+                .seed(7)
+                .build()
+                .unwrap();
+            let curve = trainer.run(0, &mut compute).unwrap();
+            let losses: Vec<f64> =
+                curve.points.iter().map(|p| p.loss).collect();
+            let uploads = trainer.comm.uploads;
+            drop(trainer);
+            let (theta_stats, snap_stats) = algo.snapshot_stats();
+            let shard_stats = algo.shard_stats().unwrap();
+            (losses, uploads, algo.server.theta.clone(), theta_stats,
+             snap_stats, shard_stats)
+        };
+        let reference = run(1);
+        assert_eq!(reference.5.num_shards(), 1);
+        for shards in [2usize, 4] {
+            let sharded = run(shards);
+            assert_eq!(reference.0, sharded.0,
+                       "loss curve diverged at {shards} shards");
+            assert_eq!(reference.1, sharded.1);
+            assert_eq!(reference.2, sharded.2,
+                       "final theta diverged at {shards} shards");
+            assert_eq!(sharded.5.num_shards(), shards);
+            assert_eq!(sharded.5.rounds, iters as u64);
+            // p = 4096 splits into non-empty ranges for 2/4 shards, so
+            // every shard must have accumulated real timed work over 30
+            // rounds (a zero means its task never ran or its timing was
+            // attributed to the wrong slot)
+            assert!(sharded.5.shard_s.iter().all(|&s| s > 0.0),
+                    "untouched shard timing: {:?}", sharded.5.shard_s);
+        }
+        // double buffers: two warm-up clones each, then pure reuse —
+        // theta ranges copy every round (the step dirties them), the
+        // CADA1 snapshot only re-copies after a refresh
+        let (theta_stats, snap_stats) = (reference.3, reference.4);
+        assert_eq!(theta_stats.full_clones, 2);
+        assert_eq!(snap_stats.full_clones, 2);
+        assert!(snap_stats.ranges_reused > 0,
+                "snapshot buffer never reused: {snap_stats:?}");
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //! [`Participation::Full`](crate::comm::Participation) for the
 //! `LocalUpdate` family and the semi-sync quorum only applies to the
 //! server-centric methods.
+//!
+//! Sharding note: the `[comm] server_shards` hint is ignored here (the
+//! trait default). These methods keep no server-side parameter-range
+//! state on the round hot path — averaging happens once every H rounds
+//! and already runs over per-worker vectors; sharding FedAdam's server
+//! Adam the way [`crate::coordinator::shard`] shards CADA's is a
+//! follow-up if H-small sweeps ever make it hot.
 
 use super::{Algorithm, AlgorithmKind, RoundCtx};
 use crate::comm::{JobOut, WorkerJob};

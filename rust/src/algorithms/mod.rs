@@ -138,6 +138,16 @@ pub trait Algorithm {
     /// Family tag (server-centric vs local-update).
     fn kind(&self) -> AlgorithmKind;
 
+    /// Engine hint, delivered before [`Algorithm::init`]: shard the
+    /// server-side parameter state into this many contiguous ranges
+    /// (the `[comm] server_shards` knob, resolved to cores when 0).
+    /// Sharding is a pure execution strategy — results must stay
+    /// bit-identical for every shard count — so methods without server
+    /// state simply ignore it (the default).
+    fn set_server_shards(&mut self, shards: usize) {
+        let _ = shards;
+    }
+
     /// Allocate all model state for `m` workers from the initial iterate.
     /// Called exactly once, by
     /// [`TrainerBuilder::build`](trainer::TrainerBuilder::build).
@@ -186,5 +196,11 @@ pub trait Algorithm {
     /// Maximum per-worker staleness tau (0 for local-update methods).
     fn max_staleness(&self) -> u32 {
         0
+    }
+
+    /// Per-shard server-update timing of the run so far (None for
+    /// methods without sharded server state).
+    fn shard_stats(&self) -> Option<crate::coordinator::shard::ShardStats> {
+        None
     }
 }

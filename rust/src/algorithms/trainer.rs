@@ -16,6 +16,7 @@
 //!     .init_theta(init)
 //!     .cost_model(CostModel::default())
 //!     .transport(TransportKind::Threaded)   // or InProc (default)
+//!     .server_shards(4)                     // shard the server state
 //!     .semi_sync_k(8)                       // fastest 8 of M quorum
 //!     .jitter(0.5, 7)                       // straggler jitter (sigma, seed)
 //!     .eval_every(25)
@@ -121,6 +122,7 @@ impl TrainCfg {
              \n\
              [comm]\n\
              transport = \"{}\"\n\
+             server_shards = {}\n\
              semi_sync_k = {}\n\
              jitter_sigma = {}\n\
              jitter_seed = {}\n",
@@ -134,6 +136,7 @@ impl TrainCfg {
             self.cost_model.down_bw,
             self.cost_model.asymmetry,
             self.comm.transport.name(),
+            self.comm.server_shards,
             self.comm.semi_sync_k,
             self.comm.jitter_sigma,
             self.comm.jitter_seed,
@@ -215,6 +218,14 @@ impl TrainCfg {
                                 "[comm] transport must be a string")
                         })?;
                         cfg.comm.transport = TransportKind::parse(s)?;
+                    }
+                    "server_shards" => {
+                        cfg.comm.server_shards =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] server_shards must \
+                                                 be a non-negative integer \
+                                                 (0 = one shard per core)")
+                            })? as usize;
                     }
                     "semi_sync_k" => {
                         cfg.comm.semi_sync_k =
@@ -616,6 +627,15 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         self
     }
 
+    /// Shard the server's parameter state across this many contiguous
+    /// ranges, each folded and updated on its own scoped thread
+    /// (default 1 = sequential; 0 = one shard per available core).
+    /// Bit-identical for every shard count.
+    pub fn server_shards(mut self, shards: usize) -> Self {
+        self.cfg.comm.server_shards = shards;
+        self
+    }
+
     /// Semi-sync quorum: the server proceeds after the fastest `k`
     /// uploads of a round (0 = wait for everyone).
     pub fn semi_sync_k(mut self, k: usize) -> Self {
@@ -654,6 +674,15 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         let m = partition.num_workers();
         anyhow::ensure!(m >= 1, "partition has no workers");
         self.cfg.comm.validate()?;
+        // resolve the server-shard count (0 = one shard per core) and
+        // hand it to the algorithm before it allocates server state
+        let shards = match self.cfg.comm.server_shards {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            n => n,
+        };
+        algo.set_server_shards(shards);
         algo.init(&init_theta, m)?;
         let root = Rng::new(self.cfg.seed);
         let rngs = (0..m).map(|w| root.fork(w as u64 + 1)).collect();
@@ -803,6 +832,7 @@ mod tests {
             trace_cap: 128,
             comm: CommCfg {
                 transport: TransportKind::Threaded,
+                server_shards: 4,
                 semi_sync_k: 7,
                 jitter_sigma: 0.5,
                 jitter_seed: 11,

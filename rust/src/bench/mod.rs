@@ -8,6 +8,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::percentile;
 
 /// Result of one timed benchmark.
@@ -26,6 +27,20 @@ impl BenchResult {
     pub fn throughput_gbs(&self) -> Option<f64> {
         self.bytes_per_iter
             .map(|b| b as f64 / self.mean_ns)
+    }
+
+    /// The JSON object this result contributes to a bench summary file.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        m.insert("median_ns".to_string(), Json::Num(self.median_ns));
+        m.insert("p95_ns".to_string(), Json::Num(self.p95_ns));
+        if let Some(b) = self.bytes_per_iter {
+            m.insert("bytes_per_iter".to_string(), Json::Num(b as f64));
+        }
+        Json::Obj(m)
     }
 
     pub fn render(&self) -> String {
@@ -139,36 +154,196 @@ impl Runner {
     }
 
     /// Write every recorded result as a JSON array (the CI perf artifact
-    /// — `BENCH_engine.json` — starts the cross-PR perf trajectory).
+    /// — `BENCH_engine.json` — feeds the cross-PR regression gate).
+    ///
+    /// Merges by bench name into an existing file: multi-invocation
+    /// bench runs (several `cargo bench` targets, or re-runs of one)
+    /// update their own entries and leave everything else in place
+    /// instead of clobbering the whole file. A current result replaces a
+    /// same-named entry; an unparseable existing file is overwritten.
     pub fn write_json(&self, path: impl AsRef<std::path::Path>)
                       -> anyhow::Result<()> {
-        use crate::util::json::ObjWriter;
-        let mut out = String::from("[");
-        for (i, r) in self.results.iter().enumerate() {
-            if i > 0 {
-                out.push(',');
-            }
-            let mut obj = ObjWriter::new()
-                .str("name", &r.name)
-                .int("iters", r.iters)
-                .num("mean_ns", r.mean_ns)
-                .num("median_ns", r.median_ns)
-                .num("p95_ns", r.p95_ns);
-            if let Some(b) = r.bytes_per_iter {
-                obj = obj.int("bytes_per_iter", b);
-            }
-            out.push_str(&obj.finish());
-        }
-        out.push(']');
         let path = path.as_ref();
+        let mut entries: Vec<(String, Json)> = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            match crate::util::json::parse(&text) {
+                Ok(Json::Arr(old)) => {
+                    for v in old {
+                        if let Some(name) =
+                            v.get("name").and_then(|n| n.as_str())
+                        {
+                            let name = name.to_string();
+                            entries.push((name, v));
+                        }
+                    }
+                }
+                _ => eprintln!(
+                    "warning: {} held no bench array; overwriting",
+                    path.display()
+                ),
+            }
+        }
+        for r in &self.results {
+            let v = r.to_json();
+            match entries.iter_mut().find(|(n, _)| n == &r.name) {
+                Some(slot) => slot.1 = v,
+                None => entries.push((r.name.clone(), v)),
+            }
+        }
+        let merged =
+            Json::Arr(entries.into_iter().map(|(_, v)| v).collect());
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        std::fs::write(path, out)?;
+        std::fs::write(path, crate::util::json::render(&merged))?;
         Ok(())
     }
+}
+
+/// One bench's baseline-vs-current comparison (by name, median ns).
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    /// None = baseline entry seeded without a timing (or bench is new)
+    pub baseline_ns: Option<f64>,
+    /// None = bench missing from the current run. Once the baseline
+    /// entry is armed this FAILS the gate (see [`missing_armed`]) —
+    /// which is why baselines must only be refreshed from artifacts of
+    /// the same CI job that gates them: a baseline containing benches
+    /// the gate job cannot run (e.g. PJRT-only ones) would fail forever.
+    pub current_ns: Option<f64>,
+}
+
+impl BenchDelta {
+    /// current/baseline median ratio; None unless both sides timed.
+    pub fn ratio(&self) -> Option<f64> {
+        match (self.baseline_ns, self.current_ns) {
+            (Some(b), Some(c)) if b > 0.0 => Some(c / b),
+            _ => None,
+        }
+    }
+
+    /// Does this bench regress beyond `max_regress` (e.g. 0.25 = +25%)?
+    pub fn regressed(&self, max_regress: f64) -> bool {
+        self.ratio().is_some_and(|r| r > 1.0 + max_regress)
+    }
+}
+
+fn median_of(v: &Json) -> Option<f64> {
+    v.get("median_ns").and_then(|m| m.as_f64())
+}
+
+/// Compare two bench-summary JSON arrays (as written by
+/// [`Runner::write_json`]) by bench name. Baseline order is kept, new
+/// benches append; entries whose baseline median is `null` are "seeded"
+/// rows that report but never gate (how a fresh baseline bootstraps).
+pub fn compare_bench_json(baseline: &Json, current: &Json)
+                          -> anyhow::Result<Vec<BenchDelta>> {
+    let base = baseline
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("baseline is not a JSON array"))?;
+    let cur = current
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("current is not a JSON array"))?;
+    let name_of = |v: &Json| -> anyhow::Result<String> {
+        Ok(v.req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("bench name must be a string"))?
+            .to_string())
+    };
+    let mut deltas = Vec::new();
+    for b in base {
+        let name = name_of(b)?;
+        let current_ns = cur
+            .iter()
+            .find(|c| c.get("name").and_then(|n| n.as_str())
+                == Some(name.as_str()))
+            .and_then(median_of);
+        deltas.push(BenchDelta {
+            baseline_ns: median_of(b),
+            current_ns,
+            name,
+        });
+    }
+    for c in cur {
+        let name = name_of(c)?;
+        if !deltas.iter().any(|d| d.name == name) {
+            deltas.push(BenchDelta {
+                name,
+                baseline_ns: None,
+                current_ns: median_of(c),
+            });
+        }
+    }
+    Ok(deltas)
+}
+
+/// Names of the benches regressing beyond `max_regress`.
+pub fn regressions(deltas: &[BenchDelta], max_regress: f64) -> Vec<String> {
+    deltas
+        .iter()
+        .filter(|d| d.regressed(max_regress))
+        .map(|d| d.name.clone())
+        .collect()
+}
+
+/// Benches the baseline gates on (non-null median) that the current run
+/// never produced. A rename or an accidentally dropped bench would
+/// otherwise silently disarm the gate, so the checker fails on these
+/// too — renames must refresh the baseline in the same PR.
+pub fn missing_armed(deltas: &[BenchDelta]) -> Vec<String> {
+    deltas
+        .iter()
+        .filter(|d| d.baseline_ns.is_some() && d.current_ns.is_none())
+        .map(|d| d.name.clone())
+        .collect()
+}
+
+/// Render the per-bench delta table (markdown, for the CI job summary).
+pub fn render_delta_table(deltas: &[BenchDelta], max_regress: f64)
+                          -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## micro_hotpath vs baseline (gate: median +{:.0}%)\n\n",
+        max_regress * 100.0
+    ));
+    out.push_str("| bench | baseline | current | delta | status |\n");
+    out.push_str("|---|---:|---:|---:|---|\n");
+    for d in deltas {
+        let fmt = |ns: Option<f64>| match ns {
+            Some(ns) => fmt_ns(ns),
+            None => "—".to_string(),
+        };
+        let (delta, status) = match d.ratio() {
+            Some(r) => (
+                format!("{:+.1}%", (r - 1.0) * 100.0),
+                if d.regressed(max_regress) {
+                    "REGRESSED"
+                } else {
+                    "ok"
+                },
+            ),
+            None => (
+                "—".to_string(),
+                match (d.baseline_ns, d.current_ns) {
+                    (None, Some(_)) => "seeded/new",
+                    (_, None) => "not run",
+                    _ => "—",
+                },
+            ),
+        };
+        out.push_str(&format!(
+            "| `{}` | {} | {} | {} | {} |\n",
+            d.name.trim(),
+            fmt(d.baseline_ns),
+            fmt(d.current_ns),
+            delta,
+            status
+        ));
+    }
+    out
 }
 
 /// Prevent the optimiser from discarding a computed value.
@@ -209,6 +384,9 @@ mod tests {
         };
         r.bench_bytes("k", 64, || {});
         let path = std::env::temp_dir().join("cada_bench_summary.json");
+        // write_json merges into an existing file by design; start clean
+        // so a leftover from an aborted earlier run cannot leak in
+        let _ = std::fs::remove_file(&path);
         r.write_json(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let parsed = crate::util::json::parse(&text).unwrap();
@@ -217,6 +395,85 @@ mod tests {
         assert_eq!(arr[0].get("name").unwrap().as_str(), Some("k"));
         assert!(arr[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn write_json_merges_by_name_across_invocations() {
+        let path = std::env::temp_dir().join("cada_bench_merge.json");
+        let _ = std::fs::remove_file(&path);
+        let quick = || Runner {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(5),
+            min_iters: 3,
+            results: Vec::new(),
+        };
+        // first invocation writes benches a + b
+        let mut r1 = quick();
+        r1.bench("a", || {});
+        r1.bench("b", || {});
+        r1.write_json(&path).unwrap();
+        // second invocation re-times b and adds c: a must survive, b
+        // must be replaced (not duplicated), c must append
+        let mut r2 = quick();
+        r2.bench("b", || {});
+        r2.bench("c", || {});
+        r2.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let arr_val = crate::util::json::parse(&text).unwrap();
+        let arr = arr_val.as_arr().unwrap();
+        let names: Vec<&str> = arr
+            .iter()
+            .map(|v| v.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        let b_median = arr[1].get("median_ns").unwrap().as_f64().unwrap();
+        let r2_b = r2.results.iter().find(|r| r.name == "b").unwrap();
+        assert_eq!(b_median, r2_b.median_ns, "b must hold the re-run");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_skips_seeded_rows() {
+        let baseline = crate::util::json::parse(
+            r#"[{"name":"fast","median_ns":100},
+                {"name":"slow","median_ns":100},
+                {"name":"seeded","median_ns":null},
+                {"name":"gone","median_ns":50}]"#,
+        )
+        .unwrap();
+        let current = crate::util::json::parse(
+            r#"[{"name":"fast","median_ns":110},
+                {"name":"slow","median_ns":200},
+                {"name":"seeded","median_ns":900},
+                {"name":"fresh","median_ns":5}]"#,
+        )
+        .unwrap();
+        let deltas = compare_bench_json(&baseline, &current).unwrap();
+        assert_eq!(deltas.len(), 5);
+        // +10% passes a 25% gate, +100% fails it
+        assert_eq!(regressions(&deltas, 0.25), vec!["slow".to_string()]);
+        // the same +10% fails a 5% gate
+        assert_eq!(regressions(&deltas, 0.05),
+                   vec!["fast".to_string(), "slow".to_string()]);
+        // null-seeded baselines and benches absent from one side never
+        // gate, whatever their numbers
+        let seeded = deltas.iter().find(|d| d.name == "seeded").unwrap();
+        assert!(seeded.ratio().is_none());
+        assert!(!seeded.regressed(0.0));
+        let gone = deltas.iter().find(|d| d.name == "gone").unwrap();
+        assert!(gone.current_ns.is_none() && !gone.regressed(0.0));
+        // ...but an ARMED baseline bench missing from the current run is
+        // flagged separately, so renames cannot silently disarm the gate
+        // (seeded rows are exempt: they gate nothing yet)
+        assert_eq!(missing_armed(&deltas), vec!["gone".to_string()]);
+        let table = render_delta_table(&deltas, 0.25);
+        assert!(table.contains("REGRESSED"), "{table}");
+        assert!(table.contains("seeded/new"), "{table}");
+        assert!(table.contains("not run"), "{table}");
+        assert!(table.contains("| `fast` |"), "{table}");
+        // malformed inputs error instead of silently passing the gate
+        let bad = crate::util::json::parse("{}").unwrap();
+        assert!(compare_bench_json(&bad, &current).is_err());
     }
 
     #[test]

@@ -155,15 +155,22 @@ impl CostModel {
     }
 }
 
-/// `[comm]` engine configuration: transport, participation policy,
-/// straggler jitter, and per-worker link heterogeneity (`[comm.links]`).
+/// `[comm]` engine configuration: transport, server-state sharding,
+/// participation policy, straggler jitter, and per-worker link
+/// heterogeneity (`[comm.links]`).
 ///
 /// The multiplier vectors are cycled over the M workers (worker `w` gets
 /// `mult[w % mult.len()]`; empty means "1.0 for everyone"), so one
 /// config serves any worker count.
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CommCfg {
     pub transport: TransportKind,
+    /// shard the server's parameter state (theta/h/vhat/aggregate) into
+    /// this many contiguous ranges, folded and updated on scoped threads
+    /// (1 = sequential reference, 0 = one shard per available core).
+    /// Pure execution strategy: results are bit-identical for every
+    /// value, so this knob never appears in golden comparisons.
+    pub server_shards: usize,
     /// semi-sync quorum K: the server proceeds after the fastest K
     /// uploads of a round; 0 = wait for everyone (fully synchronous).
     /// Applies to server-centric methods; model-averaging methods need
@@ -180,6 +187,21 @@ pub struct CommCfg {
     pub asymmetry_mult: Vec<f64>,
 }
 
+impl Default for CommCfg {
+    fn default() -> Self {
+        CommCfg {
+            transport: TransportKind::default(),
+            server_shards: 1,
+            semi_sync_k: 0,
+            jitter_sigma: 0.0,
+            jitter_seed: 0,
+            latency_mult: Vec::new(),
+            bw_mult: Vec::new(),
+            asymmetry_mult: Vec::new(),
+        }
+    }
+}
+
 impl CommCfg {
     /// Reject configurations that would corrupt the event clock:
     /// negative or non-finite jitter and negative/NaN link multipliers
@@ -190,6 +212,14 @@ impl CommCfg {
             self.jitter_sigma >= 0.0 && self.jitter_sigma.is_finite(),
             "[comm] jitter_sigma must be finite and >= 0, got {}",
             self.jitter_sigma
+        );
+        // a runaway shard count would spawn that many scoped threads
+        // per round; no machine this targets has more cores than this
+        anyhow::ensure!(
+            self.server_shards <= 1024,
+            "[comm] server_shards must be <= 1024 (0 = one per core), \
+             got {}",
+            self.server_shards
         );
         let mults = [
             ("latency_mult", &self.latency_mult),
@@ -408,6 +438,21 @@ mod tests {
             assert_eq!(links.upload_time_s(11, w, 92),
                        base.upload_time_s(92));
         }
+    }
+
+    #[test]
+    fn server_shards_defaults_to_one_and_validates() {
+        let cfg = CommCfg::default();
+        assert_eq!(cfg.server_shards, 1);
+        // sharding never perturbs numerics, so it is irrelevant to the
+        // uniform-sync (golden-comparable) property
+        assert!(cfg.is_uniform_sync());
+        let auto = CommCfg { server_shards: 0, ..Default::default() };
+        assert!(auto.validate().is_ok(), "0 means one shard per core");
+        let many = CommCfg { server_shards: 1024, ..Default::default() };
+        assert!(many.validate().is_ok());
+        let absurd = CommCfg { server_shards: 1025, ..Default::default() };
+        assert!(absurd.validate().is_err());
     }
 
     #[test]

@@ -279,15 +279,18 @@ pub fn preset(name: &str) -> anyhow::Result<ExpConfig> {
     })
 }
 
-/// Apply the engine's CLI knobs — `--transport`, `--semi-sync-k`,
-/// `--jitter-sigma`, `--jitter-seed` — shared by `cada train` and the
-/// `cargo bench fig*` drivers so the two entry points cannot diverge.
+/// Apply the engine's CLI knobs — `--transport`, `--server-shards`,
+/// `--semi-sync-k`, `--jitter-sigma`, `--jitter-seed` — shared by
+/// `cada train` and the `cargo bench fig*` drivers so the two entry
+/// points cannot diverge.
 pub fn apply_comm_cli_overrides(comm: &mut CommCfg,
                                 args: &crate::cli::Args)
                                 -> anyhow::Result<()> {
     if let Some(t) = args.str_opt("transport") {
         comm.transport = crate::comm::TransportKind::parse(t)?;
     }
+    comm.server_shards =
+        args.usize_or("server-shards", comm.server_shards)?;
     comm.semi_sync_k = args.usize_or("semi-sync-k", comm.semi_sync_k)?;
     comm.jitter_sigma = args.f64_or("jitter-sigma", comm.jitter_sigma)?;
     comm.jitter_seed = args.u64_or("jitter-seed", comm.jitter_seed)?;
@@ -459,16 +462,39 @@ mod tests {
     }
 
     #[test]
+    fn comm_cli_overrides_apply() {
+        let mut comm = crate::comm::CommCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--server-shards", "8", "--semi-sync-k", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        apply_comm_cli_overrides(&mut comm, &args).unwrap();
+        assert_eq!(comm.server_shards, 8);
+        assert_eq!(comm.semi_sync_k, 3);
+        // validation still runs: an absurd shard count is rejected
+        let mut comm = crate::comm::CommCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--server-shards", "99999"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(apply_comm_cli_overrides(&mut comm, &args).is_err());
+    }
+
+    #[test]
     fn comm_section_overrides_apply() {
         let mut cfg = fig3_ijcnn();
         let doc = toml::parse(
-            "[comm]\ntransport = \"threaded\"\nsemi_sync_k = 4\n\
+            "[comm]\ntransport = \"threaded\"\nserver_shards = 2\n\
+             semi_sync_k = 4\n\
              jitter_sigma = 0.5\njitter_seed = 9\n\
              [comm.links]\nlatency_mult = [1, 3]\n",
         )
         .unwrap();
         apply_overrides(&mut cfg, &doc).unwrap();
         assert_eq!(cfg.comm.transport, crate::comm::TransportKind::Threaded);
+        assert_eq!(cfg.comm.server_shards, 2);
         assert_eq!(cfg.comm.semi_sync_k, 4);
         assert_eq!(cfg.comm.jitter_sigma, 0.5);
         assert_eq!(cfg.comm.jitter_seed, 9);

@@ -13,7 +13,10 @@
 //!                  rule-specific stores (snapshot innovation / old iterate).
 //! * [`server`]   — the aggregate-gradient recursion (Eq. 3) and the
 //!                  AMSGrad/SGD update (Eq. 2a-2c), native or Pallas-artifact
-//!                  backed.
+//!                  backed, sharded by contiguous parameter range.
+//! * [`shard`]    — the sharding substrate: block-aligned [`shard::ShardLayout`]
+//!                  range partitions, the double-buffered broadcast
+//!                  [`shard::SnapshotBuffers`], and per-shard timing stats.
 //! * [`ToWorker`] / [`FromWorker`] — the mailbox messages the
 //!   [`Threaded`](crate::comm::Threaded) transport moves between the
 //!   server thread and the persistent worker threads.
@@ -27,6 +30,7 @@
 pub mod history;
 pub mod rules;
 pub mod server;
+pub mod shard;
 pub mod worker;
 
 use crate::comm::transport::{JobOut, WorkerJob};

@@ -1,7 +1,23 @@
 //! Parameter-server state: the aggregate-gradient recursion (Eq. 3) and
-//! the model update (Eq. 2a–2c for CADA/Adam, Eq. 4's SGD step for LAG).
+//! the model update (Eq. 2a–2c for CADA/Adam, Eq. 4's SGD step for LAG),
+//! sharded by contiguous parameter range so both scale across cores.
+//!
+//! All server-side work is elementwise (innovation folds are `axpy`, the
+//! AMSGrad/SGD steps touch each coordinate independently), so running it
+//! per-shard on a scoped thread pool is bit-identical to the sequential
+//! path: within each shard the innovations fold in the same worker
+//! order, and each element sees the exact same float ops whichever shard
+//! owns it. The squared step norm feeding the drift history is the one
+//! reduction; it is computed per [`SHARD_BLOCK`]-sized block with the
+//! block partials summed in global block order, so the reduction tree —
+//! and therefore every bit of the result — is independent of the shard
+//! count (`server_shards = 1` IS the reference path, enforced by
+//! `tests/golden_parity.rs`).
+
+use std::time::Instant;
 
 use crate::config::Schedule;
+use crate::coordinator::shard::{ShardLayout, ShardStats, SHARD_BLOCK};
 use crate::runtime::Compute;
 use crate::tensor;
 
@@ -33,7 +49,81 @@ impl Optimizer {
     }
 }
 
-/// Server-side state for one run.
+/// The round-`k`-resolved update kernel a shard applies to its range.
+#[derive(Clone, Copy, Debug)]
+enum StepKernel {
+    Amsgrad { alpha: f32, beta1: f32, beta2: f32, eps: f32 },
+    Sgd { eta: f32 },
+}
+
+/// The determinism-critical step-norm reduction, shared by the native
+/// per-shard path and the whole-vector artifact path so the two can
+/// never drift apart: per-[`SHARD_BLOCK`] f32 partials (the last block
+/// may be short), one per `blocks` slot, in block order. `new`/`old`
+/// must start on a global block boundary (shard ranges always do).
+fn block_norms_into(new: &[f32], old: &[f32], blocks: &mut [f64]) {
+    let mut lo = 0usize;
+    for b in blocks.iter_mut() {
+        let hi = (lo + SHARD_BLOCK).min(new.len());
+        *b = tensor::sqnorm_diff(&new[lo..hi], &old[lo..hi]) as f64;
+        lo = hi;
+    }
+}
+
+/// One shard's slice of every parameter-sized vector, plus its step-norm
+/// blocks; built fresh per round by splitting the flat server vectors.
+struct ShardTask<'a> {
+    s: usize,
+    range: std::ops::Range<usize>,
+    theta: &'a mut [f32],
+    h: &'a mut [f32],
+    vhat: &'a mut [f32],
+    agg: &'a mut [f32],
+    prev: &'a mut [f32],
+    blocks: &'a mut [f64],
+}
+
+impl ShardTask<'_> {
+    /// Fold the round's innovations only (in upload order) — the
+    /// artifact path, whose fused update runs over the whole vector
+    /// afterwards. Returns the wall seconds spent.
+    fn fold_only(self, deltas: &[&[f32]], inv_m: f32) -> f64 {
+        let t0 = Instant::now();
+        for d in deltas {
+            tensor::axpy(self.agg, inv_m, &d[self.range.clone()]);
+        }
+        t0.elapsed().as_secs_f64()
+    }
+
+    /// Fold the round's innovations (in upload order), apply the update
+    /// kernel, and refresh this shard's step-norm blocks. Returns the
+    /// wall seconds spent (per-shard timing breakdown). The 1-shard
+    /// reference path runs this exact code over `0..p`, so sharded and
+    /// sequential execution cannot drift apart.
+    fn run(self, deltas: &[&[f32]], inv_m: f32, kernel: StepKernel) -> f64 {
+        let t0 = Instant::now();
+        self.prev.copy_from_slice(self.theta);
+        for d in deltas {
+            tensor::axpy(self.agg, inv_m, &d[self.range.clone()]);
+        }
+        match kernel {
+            StepKernel::Amsgrad { alpha, beta1, beta2, eps } => {
+                tensor::amsgrad_update(self.theta, self.h, self.vhat,
+                                       self.agg, alpha, beta1, beta2, eps);
+            }
+            StepKernel::Sgd { eta } => {
+                tensor::sgd_update(self.theta, self.agg, eta);
+            }
+        }
+        // per-block squared step norms: block boundaries are global
+        // (multiples of SHARD_BLOCK, this shard starts on one), so the
+        // partials are identical for every shard count
+        block_norms_into(self.theta, self.prev, self.blocks);
+        t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Server-side state for one run, sharded by contiguous parameter range.
 pub struct ServerState {
     /// current iterate theta^k (padded flat vector)
     pub theta: Vec<f32>,
@@ -48,11 +138,31 @@ pub struct ServerState {
     pub m: usize,
     /// scratch: previous theta for the step-norm computation
     prev_theta: Vec<f32>,
+    /// contiguous parameter ranges the state is sharded into
+    layout: ShardLayout,
+    /// per-shard version counters, bumped whenever a shard's range is
+    /// updated; the broadcast double-buffers copy only moved-on ranges
+    versions: Vec<u64>,
+    /// scratch: per-block squared step-norm partials
+    block_norms: Vec<f64>,
+    /// cumulative per-shard fold+step seconds (telemetry)
+    stats: ShardStats,
 }
 
 impl ServerState {
     pub fn new(init_theta: Vec<f32>, m: usize, opt: Optimizer) -> Self {
+        Self::new_sharded(init_theta, m, opt, 1)
+    }
+
+    /// Shard `theta`/`h`/`vhat`/`grad_agg` into `shards` contiguous
+    /// ranges; folds and updates run per-shard on scoped threads when
+    /// `shards > 1` (bit-identical to `shards = 1`).
+    pub fn new_sharded(init_theta: Vec<f32>, m: usize, opt: Optimizer,
+                       shards: usize) -> Self {
         let p = init_theta.len();
+        let layout = ShardLayout::new(p, shards);
+        let n = layout.num_shards();
+        let nblocks = layout.num_blocks();
         ServerState {
             prev_theta: init_theta.clone(),
             theta: init_theta,
@@ -61,11 +171,32 @@ impl ServerState {
             grad_agg: vec![0.0; p],
             opt,
             m,
+            versions: vec![0; n],
+            block_norms: vec![0.0; nblocks],
+            stats: ShardStats::for_shards(n),
+            layout,
         }
     }
 
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    /// Per-shard version counters (see [`ServerState::layout`]); the
+    /// broadcast buffers use these to skip copying unchanged ranges.
+    pub fn versions(&self) -> &[u64] {
+        &self.versions
+    }
+
+    /// Per-shard cumulative fold+step timing.
+    pub fn shard_stats(&self) -> &ShardStats {
+        &self.stats
+    }
+
     /// Fold one worker's gradient innovation into the aggregate:
-    /// nabla^k += delta_m / M   (Eq. 3).
+    /// nabla^k += delta_m / M   (Eq. 3). Sequential over the full range;
+    /// the round hot path folds inside [`ServerState::fold_and_step`]
+    /// instead so folds and the update share one per-shard pass.
     pub fn apply_innovation(&mut self, delta: &[f32]) {
         tensor::axpy(&mut self.grad_agg, 1.0 / self.m as f32, delta);
     }
@@ -74,25 +205,171 @@ impl ServerState {
     /// ||theta^{k+1} - theta^k||^2 for the drift history.
     pub fn step(&mut self, k: u64, compute: &mut dyn Compute)
                 -> anyhow::Result<f64> {
-        self.prev_theta.copy_from_slice(&self.theta);
-        match self.opt.clone() {
+        self.fold_and_step(k, &[], compute)
+    }
+
+    /// One server round over the sharded state: fold `deltas` (in upload
+    /// order) into the aggregate, apply the optimizer step for iteration
+    /// `k`, and return ||theta^{k+1} - theta^k||^2 for the drift history.
+    /// Runs per-shard on scoped threads when the layout has more than
+    /// one (non-empty) shard; bit-identical to the sequential path.
+    pub fn fold_and_step(&mut self, k: u64, deltas: &[&[f32]],
+                         compute: &mut dyn Compute) -> anyhow::Result<f64> {
+        let inv_m = 1.0 / self.m as f32;
+        let kernel = match self.opt.clone() {
             Optimizer::Amsgrad { alpha, beta1, beta2, eps, use_artifact } => {
-                let a = alpha.at(k);
                 if use_artifact {
+                    // the fused Pallas artifact consumes the full flat
+                    // vectors; folds still shard, the step runs whole
+                    // (and its time is attributed to shard 0)
+                    self.run_shards(deltas, inv_m, None);
+                    let t0 = Instant::now();
+                    self.prev_theta.copy_from_slice(&self.theta);
                     compute.update(&mut self.theta, &mut self.h,
-                                   &mut self.vhat, &self.grad_agg, a)?;
-                } else {
-                    tensor::amsgrad_update(&mut self.theta, &mut self.h,
-                                           &mut self.vhat, &self.grad_agg,
-                                           a, beta1, beta2, eps);
+                                   &mut self.vhat, &self.grad_agg,
+                                   alpha.at(k))?;
+                    self.refresh_block_norms();
+                    if let Some(t) = self.stats.shard_s.get_mut(0) {
+                        *t += t0.elapsed().as_secs_f64();
+                    }
+                    self.close_round();
+                    return Ok(self.block_norms.iter().sum());
+                }
+                StepKernel::Amsgrad {
+                    alpha: alpha.at(k),
+                    beta1,
+                    beta2,
+                    eps,
                 }
             }
-            Optimizer::Sgd { eta } => {
-                tensor::sgd_update(&mut self.theta, &self.grad_agg,
-                                   eta.at(k));
+            Optimizer::Sgd { eta } => StepKernel::Sgd { eta: eta.at(k) },
+        };
+        self.run_shards(deltas, inv_m, Some(kernel));
+        self.close_round();
+        Ok(self.block_norms.iter().sum())
+    }
+
+    /// Bump every shard's version and count the round (the update writes
+    /// every live range; empty surplus shards stay at version 0).
+    fn close_round(&mut self) {
+        for (s, v) in self.versions.iter_mut().enumerate() {
+            if !self.layout.range(s).is_empty() {
+                *v += 1;
             }
         }
-        Ok(tensor::sqnorm_diff(&self.theta, &self.prev_theta) as f64)
+        self.stats.rounds += 1;
+    }
+
+    /// Recompute every step-norm block sequentially (artifact path).
+    fn refresh_block_norms(&mut self) {
+        block_norms_into(&self.theta, &self.prev_theta,
+                         &mut self.block_norms);
+    }
+
+    /// Split the state into per-shard tasks and run them — inline for a
+    /// single shard, on scoped threads otherwise. `kernel = None` folds
+    /// only (artifact path applies the update afterwards).
+    ///
+    /// Threads are scoped per round (spawned and joined inside this
+    /// call): the tasks borrow disjoint slices of the state, so no
+    /// `unsafe` and no ownership restructuring is needed, at the cost of
+    /// one spawn+join (~tens of µs) per shard per round. That overhead
+    /// only amortises on big ranges — which is exactly when sharding
+    /// helps at all — so the default stays `server_shards = 1` and the
+    /// micro_hotpath bench pins the crossover at ≥ 1M parameters. A
+    /// persistent shard pool (threads owning their range across rounds,
+    /// like the `Threaded` transport's workers) is the follow-up if
+    /// mid-sized specs ever want shard counts > 1.
+    fn run_shards(&mut self, deltas: &[&[f32]], inv_m: f32,
+                  kernel: Option<StepKernel>) {
+        let n = self.layout.num_shards();
+        if n == 1 {
+            // the reference path is literally one task spanning 0..p run
+            // inline: sharded execution can never drift from it, because
+            // it IS the same code
+            let task = ShardTask {
+                s: 0,
+                range: 0..self.theta.len(),
+                theta: &mut self.theta,
+                h: &mut self.h,
+                vhat: &mut self.vhat,
+                agg: &mut self.grad_agg,
+                prev: &mut self.prev_theta,
+                blocks: &mut self.block_norms,
+            };
+            let dt = match kernel {
+                Some(kernel) => task.run(deltas, inv_m, kernel),
+                None => task.fold_only(deltas, inv_m),
+            };
+            self.stats.shard_s[0] += dt;
+            return;
+        }
+        let mut tasks: Vec<ShardTask> = Vec::with_capacity(n);
+        {
+            let mut theta = self.theta.as_mut_slice();
+            let mut h = self.h.as_mut_slice();
+            let mut vhat = self.vhat.as_mut_slice();
+            let mut agg = self.grad_agg.as_mut_slice();
+            let mut prev = self.prev_theta.as_mut_slice();
+            let mut blocks = self.block_norms.as_mut_slice();
+            for s in 0..n {
+                let range = self.layout.range(s);
+                let len = range.len();
+                let nb = self.layout.block_range(s).len();
+                let (t_head, t_tail) =
+                    std::mem::take(&mut theta).split_at_mut(len);
+                theta = t_tail;
+                let (h_head, h_tail) =
+                    std::mem::take(&mut h).split_at_mut(len);
+                h = h_tail;
+                let (v_head, v_tail) =
+                    std::mem::take(&mut vhat).split_at_mut(len);
+                vhat = v_tail;
+                let (a_head, a_tail) =
+                    std::mem::take(&mut agg).split_at_mut(len);
+                agg = a_tail;
+                let (p_head, p_tail) =
+                    std::mem::take(&mut prev).split_at_mut(len);
+                prev = p_tail;
+                let (b_head, b_tail) =
+                    std::mem::take(&mut blocks).split_at_mut(nb);
+                blocks = b_tail;
+                tasks.push(ShardTask {
+                    s,
+                    range,
+                    theta: t_head,
+                    h: h_head,
+                    vhat: v_head,
+                    agg: a_head,
+                    prev: p_head,
+                    blocks: b_head,
+                });
+            }
+        }
+        let timings: Vec<(usize, f64)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = tasks
+                .into_iter()
+                .filter(|t| !t.range.is_empty())
+                .map(|t| {
+                    let s = t.s;
+                    let handle = scope.spawn(move || match kernel {
+                        Some(kernel) => t.run(deltas, inv_m, kernel),
+                        None => t.fold_only(deltas, inv_m),
+                    });
+                    (s, handle)
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|(s, h)| match h.join() {
+                    Ok(dt) => (s, dt),
+                    Err(panic) => std::panic::resume_unwind(panic),
+                })
+                .collect()
+        });
+        for (s, dt) in timings {
+            self.stats.shard_s[s] += dt;
+        }
     }
 }
 
@@ -170,5 +447,130 @@ mod tests {
         assert_eq!(s.theta, theta);
         assert_eq!(s.h, h);
         assert_eq!(s.vhat, vhat);
+    }
+
+    fn amsgrad(alpha: f32) -> Optimizer {
+        Optimizer::Amsgrad {
+            alpha: Schedule::Constant(alpha),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            use_artifact: false,
+        }
+    }
+
+    #[test]
+    fn sharded_fold_and_step_is_bit_identical_to_single_shard() {
+        // several blocks, uneven tail, random deltas: every shard count
+        // must produce the exact same state AND the exact same step norm
+        let p = 4096 + 513;
+        let m = 3;
+        let mut rng = crate::util::rng::Rng::new(11);
+        let init: Vec<f32> =
+            (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let rounds: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|_| {
+                (0..m)
+                    .map(|_| {
+                        (0..p).map(|_| rng.normal_f32(0.0, 0.1)).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let run = |shards: usize| {
+            let mut server = ServerState::new_sharded(
+                init.clone(), m, amsgrad(0.05), shards);
+            let mut norms = Vec::new();
+            for (k, deltas) in rounds.iter().enumerate() {
+                let refs: Vec<&[f32]> =
+                    deltas.iter().map(|d| d.as_slice()).collect();
+                norms.push(
+                    server
+                        .fold_and_step(k as u64, &refs,
+                                       &mut dummy_compute())
+                        .unwrap(),
+                );
+            }
+            (server.theta, server.h, server.vhat, server.grad_agg, norms)
+        };
+        let reference = run(1);
+        for shards in [2, 3, 4, 8, 64] {
+            let sharded = run(shards);
+            assert_eq!(reference.0, sharded.0, "theta, shards={shards}");
+            assert_eq!(reference.1, sharded.1, "h, shards={shards}");
+            assert_eq!(reference.2, sharded.2, "vhat, shards={shards}");
+            assert_eq!(reference.3, sharded.3, "agg, shards={shards}");
+            assert_eq!(reference.4, sharded.4, "norms, shards={shards}");
+        }
+    }
+
+    #[test]
+    fn fold_and_step_matches_independent_reference() {
+        // pin the fused pass against an INDEPENDENT inline reference
+        // built straight from the tensor kernels: fold deltas/M in
+        // order, one amsgrad step, and the documented step-norm
+        // semantics — per-SHARD_BLOCK f32 partials summed in f64 in
+        // block order (p = 2048 + 300: two full blocks and a tail, so
+        // the blocked reduction genuinely differs from a flat one)
+        let p = 2048 + 300;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let init: Vec<f32> =
+            (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let d0: Vec<f32> =
+            (0..p).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let d1: Vec<f32> =
+            (0..p).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+
+        let mut want_theta = init.clone();
+        let mut want_h = vec![0.0f32; p];
+        let mut want_vhat = vec![0.0f32; p];
+        let mut want_agg = vec![0.0f32; p];
+        tensor::axpy(&mut want_agg, 0.5, &d0);
+        tensor::axpy(&mut want_agg, 0.5, &d1);
+        tensor::amsgrad_update(&mut want_theta, &mut want_h,
+                               &mut want_vhat, &want_agg, 0.1, 0.9,
+                               0.999, 1e-8);
+        let mut want_sq = 0.0f64;
+        let mut lo = 0usize;
+        while lo < p {
+            let hi = (lo + crate::coordinator::shard::SHARD_BLOCK).min(p);
+            want_sq +=
+                tensor::sqnorm_diff(&want_theta[lo..hi], &init[lo..hi])
+                    as f64;
+            lo = hi;
+        }
+
+        // both the fused path and the two-phase (apply_innovation then
+        // step) path must reproduce the reference exactly
+        let mut fused = ServerState::new(init.clone(), 2, amsgrad(0.1));
+        let sq_fused = fused
+            .fold_and_step(5, &[&d0, &d1], &mut dummy_compute())
+            .unwrap();
+        assert_eq!(fused.theta, want_theta);
+        assert_eq!(fused.h, want_h);
+        assert_eq!(fused.vhat, want_vhat);
+        assert_eq!(fused.grad_agg, want_agg);
+        assert_eq!(sq_fused, want_sq);
+
+        let mut two_phase = ServerState::new(init, 2, amsgrad(0.1));
+        two_phase.apply_innovation(&d0);
+        two_phase.apply_innovation(&d1);
+        let sq_two = two_phase.step(5, &mut dummy_compute()).unwrap();
+        assert_eq!(two_phase.theta, want_theta);
+        assert_eq!(sq_two, want_sq);
+    }
+
+    #[test]
+    fn versions_and_stats_track_rounds() {
+        let mut s = ServerState::new_sharded(vec![0.0; 3000], 1,
+                                             amsgrad(0.01), 4);
+        assert_eq!(s.versions(), &[0, 0, 0, 0]);
+        assert_eq!(s.layout().num_shards(), 4);
+        s.step(0, &mut dummy_compute()).unwrap();
+        s.step(1, &mut dummy_compute()).unwrap();
+        // 3000 params = 3 blocks: shard 3 is empty and never dirties
+        assert_eq!(s.versions(), &[2, 2, 2, 0]);
+        assert_eq!(s.shard_stats().rounds, 2);
+        assert_eq!(s.shard_stats().num_shards(), 4);
     }
 }

@@ -1,0 +1,333 @@
+//! Sharding of the server's parameter-range state and the
+//! double-buffered broadcast snapshots that ride on top of it.
+//!
+//! The server folds innovations (Eq. 3) and runs the AMSGrad step
+//! (Eq. 2a–2c) over flat parameter vectors; both are elementwise, so
+//! splitting `theta`/`h`/`vhat`/`grad_agg` by contiguous parameter range
+//! lets the update scale across cores while staying bit-identical to the
+//! sequential path — every element sees the exact same sequence of
+//! float operations whichever shard owns it. The one order-sensitive
+//! piece is the squared step norm feeding the drift history: it is
+//! reduced per [`SHARD_BLOCK`]-sized block (block boundaries are global,
+//! never shard-relative) and the block partials are summed in block
+//! order, so the reduction tree is identical for every shard count
+//! (enforced by `tests/golden_parity.rs` and the shard-layout property
+//! tests).
+//!
+//! * [`ShardLayout`] — contiguous, block-aligned ranges partitioning
+//!   `0..p` exactly (no gap, no overlap, for any `p` and shard count).
+//! * [`SnapshotBuffers`] — two reusable broadcast buffers with per-shard
+//!   version tracking: `make_step` jobs freeze a round view of theta^k
+//!   behind an `Arc` without the per-round full-vector clone; only
+//!   ranges dirtied since the buffer last held them are copied.
+//! * [`ShardStats`] — per-shard cumulative fold+step seconds, surfaced
+//!   by the telemetry breakdown tables.
+
+use std::sync::Arc;
+
+/// Granularity of the step-norm reduction AND the shard boundary
+/// alignment. Matches the AOT pipeline's tile size (p_pad is a multiple
+/// of 1024), so artifact-sized specs shard into whole tiles.
+pub const SHARD_BLOCK: usize = 1024;
+
+/// Contiguous parameter ranges partitioning `0..p` across shards.
+///
+/// Interior boundaries are multiples of [`SHARD_BLOCK`]; blocks are
+/// distributed as evenly as possible (the first `nblocks % shards`
+/// shards get one extra). Degenerate sizes stay exact partitions:
+/// `p < shards` leaves trailing shards empty, `p = 0` leaves all empty.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardLayout {
+    p: usize,
+    /// shard `s` owns blocks `block_bounds[s]..block_bounds[s + 1]`
+    block_bounds: Vec<usize>,
+}
+
+impl ShardLayout {
+    pub fn new(p: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let nblocks = p.div_ceil(SHARD_BLOCK);
+        let q = nblocks / shards;
+        let r = nblocks % shards;
+        let mut block_bounds = Vec::with_capacity(shards + 1);
+        let mut acc = 0usize;
+        block_bounds.push(0);
+        for s in 0..shards {
+            acc += q + usize::from(s < r);
+            block_bounds.push(acc);
+        }
+        ShardLayout { p, block_bounds }
+    }
+
+    /// The unsharded layout: one range covering `0..p`.
+    pub fn single(p: usize) -> Self {
+        Self::new(p, 1)
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.block_bounds.len() - 1
+    }
+
+    /// Total number of [`SHARD_BLOCK`]-sized reduction blocks.
+    pub fn num_blocks(&self) -> usize {
+        *self.block_bounds.last().expect("bounds never empty")
+    }
+
+    /// Element range of shard `s` (empty for surplus shards).
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        let lo = (self.block_bounds[s] * SHARD_BLOCK).min(self.p);
+        let hi = (self.block_bounds[s + 1] * SHARD_BLOCK).min(self.p);
+        lo..hi
+    }
+
+    /// Reduction-block range of shard `s`.
+    pub fn block_range(&self, s: usize) -> std::ops::Range<usize> {
+        self.block_bounds[s]..self.block_bounds[s + 1]
+    }
+
+    /// Iterate the element ranges in shard order.
+    pub fn ranges(&self) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        (0..self.num_shards()).map(|s| self.range(s))
+    }
+}
+
+/// Counters of the double-buffered broadcast path (telemetry).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SnapshotStats {
+    /// freezes that fell back to a fresh full-vector allocation (buffer
+    /// still referenced by in-flight jobs, or first use)
+    pub full_clones: u64,
+    /// shard ranges copied because their version moved on
+    pub ranges_copied: u64,
+    /// shard ranges the buffer already held at the current version
+    pub ranges_reused: u64,
+}
+
+/// Two reusable broadcast buffers with per-shard version tracking.
+///
+/// Each round the algorithm freezes a read-only view of the server's
+/// `theta` (and, for CADA1, the snapshot) behind an `Arc` for the worker
+/// jobs. Cloning the full vector every round is O(p) allocation +
+/// copy; instead `freeze` alternates between two buffers — the round-k
+/// jobs may still hold the other one — and, when the target buffer is
+/// exclusively owned, copies only the shard ranges whose version counter
+/// moved since the buffer last held them. Versions are bumped by the
+/// server per shard per update, so an unchanged range (e.g. the CADA1
+/// snapshot between refreshes) costs nothing to re-freeze.
+pub struct SnapshotBuffers {
+    bufs: [Arc<Vec<f32>>; 2],
+    /// per-shard version each buffer holds (empty = never filled)
+    held: [Vec<u64>; 2],
+    active: usize,
+    stats: SnapshotStats,
+}
+
+impl Default for SnapshotBuffers {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotBuffers {
+    pub fn new() -> Self {
+        SnapshotBuffers {
+            bufs: [Arc::new(Vec::new()), Arc::new(Vec::new())],
+            held: [Vec::new(), Vec::new()],
+            active: 0,
+            stats: SnapshotStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> SnapshotStats {
+        self.stats
+    }
+
+    /// Freeze a round view of `src`: returns an `Arc` whose contents
+    /// equal `src`, copying only shard ranges whose `versions[s]` differs
+    /// from what the target buffer last held. Falls back to a full clone
+    /// when the buffer is still referenced elsewhere or sizes changed.
+    pub fn freeze(&mut self, src: &[f32], layout: &ShardLayout,
+                  versions: &[u64]) -> Arc<Vec<f32>> {
+        debug_assert_eq!(layout.num_shards(), versions.len());
+        debug_assert_eq!(layout.p(), src.len());
+        self.active ^= 1;
+        let slot = self.active;
+        let reused = match Arc::get_mut(&mut self.bufs[slot]) {
+            Some(buf)
+                if buf.len() == src.len()
+                    && self.held[slot].len() == versions.len() =>
+            {
+                for (s, r) in layout.ranges().enumerate() {
+                    if self.held[slot][s] == versions[s] {
+                        self.stats.ranges_reused += 1;
+                    } else {
+                        buf[r.clone()].copy_from_slice(&src[r]);
+                        self.held[slot][s] = versions[s];
+                        self.stats.ranges_copied += 1;
+                    }
+                }
+                true
+            }
+            _ => false,
+        };
+        if !reused {
+            self.bufs[slot] = Arc::new(src.to_vec());
+            self.held[slot] = versions.to_vec();
+            self.stats.full_clones += 1;
+        }
+        Arc::clone(&self.bufs[slot])
+    }
+}
+
+/// Per-shard timing of the server's fold+step work (cumulative over a
+/// run; `shard_s[s]` is the wall seconds shard `s`'s slice spent in
+/// innovation folds + the optimizer step + the step-norm blocks).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStats {
+    pub shard_s: Vec<f64>,
+    pub rounds: u64,
+}
+
+impl ShardStats {
+    pub fn for_shards(n: usize) -> Self {
+        ShardStats { shard_s: vec![0.0; n], rounds: 0 }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shard_s.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_partitions(p: usize, shards: usize) {
+        let layout = ShardLayout::new(p, shards);
+        assert_eq!(layout.num_shards(), shards.max(1), "p={p} shards={shards}");
+        let mut next = 0usize;
+        for s in 0..layout.num_shards() {
+            let r = layout.range(s);
+            assert_eq!(r.start, next,
+                       "gap/overlap at shard {s} (p={p} shards={shards})");
+            assert!(r.end >= r.start);
+            next = r.end;
+        }
+        assert_eq!(next, p, "ranges must cover 0..{p} exactly");
+        // block ranges partition 0..num_blocks the same way
+        let mut bnext = 0usize;
+        for s in 0..layout.num_shards() {
+            let b = layout.block_range(s);
+            assert_eq!(b.start, bnext);
+            bnext = b.end;
+        }
+        assert_eq!(bnext, layout.num_blocks());
+    }
+
+    #[test]
+    fn layout_partitions_awkward_sizes_exactly() {
+        // p = 0, p < shards, p % shards != 0, p smaller/larger than a
+        // block, and block-aligned p
+        for &p in &[0usize, 1, 3, 7, 1023, 1024, 1025, 4096, 5000, 102_400] {
+            for shards in 1..=9 {
+                assert_partitions(p, shards);
+            }
+        }
+        assert_partitions(2_739_200, 16);
+    }
+
+    #[test]
+    fn layout_zero_shards_clamps_to_one() {
+        let layout = ShardLayout::new(100, 0);
+        assert_eq!(layout.num_shards(), 1);
+        assert_eq!(layout.range(0), 0..100);
+    }
+
+    #[test]
+    fn interior_boundaries_are_block_aligned() {
+        let layout = ShardLayout::new(10_000, 3);
+        for s in 0..layout.num_shards() {
+            let r = layout.range(s);
+            if r.end != layout.p() {
+                assert_eq!(r.end % SHARD_BLOCK, 0, "shard {s}: {r:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn surplus_shards_are_empty_not_overlapping() {
+        // p = 100 fits one block; shards 2.. get empty ranges
+        let layout = ShardLayout::new(100, 4);
+        assert_eq!(layout.range(0), 0..100);
+        for s in 1..4 {
+            assert!(layout.range(s).is_empty(), "shard {s}");
+            assert_eq!(layout.range(s).start, 100);
+        }
+    }
+
+    #[test]
+    fn freeze_returns_src_contents_and_reuses_buffers() {
+        let p = 3000;
+        let layout = ShardLayout::new(p, 3);
+        let mut src: Vec<f32> = (0..p).map(|i| i as f32).collect();
+        let mut versions = vec![0u64; layout.num_shards()];
+        let mut bufs = SnapshotBuffers::new();
+
+        let a = bufs.freeze(&src, &layout, &versions);
+        assert_eq!(a.as_slice(), src.as_slice());
+        assert_eq!(bufs.stats().full_clones, 1);
+
+        // second round: other slot, first use -> second full clone
+        let b = bufs.freeze(&src, &layout, &versions);
+        assert_eq!(b.as_slice(), src.as_slice());
+        assert_eq!(bufs.stats().full_clones, 2);
+
+        // drop the round-0 view; round 2 reuses slot 0 without cloning
+        drop(a);
+        src[1024] = -7.0;
+        versions[1] += 1;
+        let c = bufs.freeze(&src, &layout, &versions);
+        assert_eq!(c.as_slice(), src.as_slice());
+        let stats = bufs.stats();
+        assert_eq!(stats.full_clones, 2, "no new allocation");
+        assert_eq!(stats.ranges_copied, 1, "only the dirtied shard copies");
+        assert_eq!(stats.ranges_reused, 2);
+
+        // an outstanding reference to the target buffer forces the safe
+        // full-clone fallback: the next freeze flips back to b's slot
+        let _hold = b;
+        drop(c);
+        src[0] = 42.0;
+        versions[0] += 1;
+        let d = bufs.freeze(&src, &layout, &versions);
+        assert_eq!(d.as_slice(), src.as_slice());
+        assert_eq!(bufs.stats().full_clones, 3);
+    }
+
+    #[test]
+    fn freeze_detects_stale_ranges_across_both_buffers() {
+        // a shard dirtied every round must be re-copied in BOTH buffers
+        // (each lags by two versions in steady state)
+        let p = 2048;
+        let layout = ShardLayout::new(p, 2);
+        let mut src = vec![0.0f32; p];
+        let mut versions = vec![0u64; 2];
+        let mut bufs = SnapshotBuffers::new();
+        let mut last: Option<Arc<Vec<f32>>> = None;
+        for round in 0..6 {
+            src[2047] = round as f32;
+            versions[1] += 1;
+            let view = bufs.freeze(&src, &layout, &versions);
+            assert_eq!(view[2047], round as f32, "round {round}");
+            assert_eq!(view.as_slice(), src.as_slice());
+            last = Some(view); // hold one round view, like the algorithm
+        }
+        drop(last);
+        // steady state: two initial clones, then range copies only
+        assert_eq!(bufs.stats().full_clones, 2);
+    }
+}

@@ -26,6 +26,9 @@ pub struct RunResult {
     /// point-wise Monte-Carlo average
     pub mean_curve: Curve,
     pub comm: CommStats,
+    /// per-shard server-update timing of the last run (None for methods
+    /// without sharded server state)
+    pub shard_stats: Option<crate::coordinator::shard::ShardStats>,
 }
 
 /// One experiment: workload + algorithms (one paper figure family).
@@ -73,6 +76,7 @@ impl Experiment {
     ) -> anyhow::Result<RunResult> {
         let mut curves = Vec::new();
         let mut comm = CommStats::default();
+        let mut shard_stats = None;
         for run in 0..self.cfg.runs {
             let run_seed = self
                 .cfg
@@ -84,7 +88,7 @@ impl Experiment {
             let partition = Partition::build(self.cfg.partition, &data,
                                              self.cfg.workers, &mut rng);
             let eval_batch = self.make_eval_batch(&data, &mut rng);
-            let (curve, run_comm) = run_one(
+            let (curve, run_comm, run_shards) = run_one(
                 &self.cfg,
                 &self.spec,
                 algo,
@@ -97,6 +101,7 @@ impl Experiment {
                 run,
             )?;
             comm = run_comm;
+            shard_stats = run_shards;
             curves.push(curve);
         }
         let mean_curve = average_curves(&curves);
@@ -105,6 +110,7 @@ impl Experiment {
             curves,
             mean_curve,
             comm,
+            shard_stats,
         })
     }
 
@@ -152,19 +158,26 @@ impl Experiment {
     }
 }
 
-/// Per-worker breakdown tables for every result, when the engine config
-/// makes stragglers possible (shared by `cada train` and the figure
-/// benches; empty under the uniform fully-sync default).
+/// Per-worker and per-shard breakdown tables for every result, when the
+/// engine config makes them informative (shared by `cada train` and the
+/// figure benches; empty under the uniform fully-sync unsharded
+/// default).
 pub fn render_breakdowns(cfg: &ExpConfig, results: &[RunResult])
                          -> String {
-    if cfg.comm.is_uniform_sync() {
-        return String::new();
+    let mut out = String::new();
+    if !cfg.comm.is_uniform_sync() {
+        out.extend(results.iter().map(|r| {
+            crate::telemetry::render_worker_breakdown(&r.algo, &r.comm)
+        }));
     }
-    results
-        .iter()
-        .map(|r| crate::telemetry::render_worker_breakdown(&r.algo,
-                                                           &r.comm))
-        .collect()
+    if cfg.comm.server_shards != 1 {
+        out.extend(results.iter().filter_map(|r| {
+            r.shard_stats.as_ref().map(|s| {
+                crate::telemetry::render_shard_breakdown(&r.algo, s)
+            })
+        }));
+    }
+    out
 }
 
 /// Map a dataset kind + spec geometry to an actual synthetic dataset.
@@ -269,7 +282,11 @@ fn run_one(
     eval_batch: Batch,
     run_seed: u64,
     run: u32,
-) -> anyhow::Result<(Curve, CommStats)> {
+) -> anyhow::Result<(
+    Curve,
+    CommStats,
+    Option<crate::coordinator::shard::ShardStats>,
+)> {
     let mut algorithm = build_algorithm(algo, spec);
     let mut trainer = Trainer::builder()
         .cfg(TrainCfg {
@@ -290,5 +307,7 @@ fn run_one(
         .label(algo.name())
         .build()?;
     let curve = trainer.run(run, compute)?;
-    Ok((curve, trainer.comm.clone()))
+    let comm = trainer.comm.clone();
+    drop(trainer);
+    Ok((curve, comm, algorithm.shard_stats()))
 }

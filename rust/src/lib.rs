@@ -82,6 +82,21 @@
 //! * **transport** — `inproc` (sequential reference) or `threaded`
 //!   (persistent worker threads + channel mailboxes; enforced
 //!   bit-identical by `tests/golden_parity.rs`).
+//! * **server sharding** — `server_shards = N` (CLI `--server-shards`,
+//!   builder `.server_shards(n)`, 0 = one shard per core): the server's
+//!   parameter state (theta/h/vhat/aggregate and the stale-gradient
+//!   folds) splits into N contiguous block-aligned ranges
+//!   ([`coordinator::shard::ShardLayout`]); innovation folds and the
+//!   AMSGrad/SGD step run per shard on scoped threads, with worker
+//!   order preserved inside each shard and the step-norm reduced per
+//!   fixed-size block — so every shard count is bit-identical to the
+//!   1-shard reference (also golden-enforced). Broadcast views of
+//!   theta^k (and the CADA1 snapshot) come from double-buffered
+//!   [`coordinator::shard::SnapshotBuffers`]: no per-round full-vector
+//!   clone, only dirtied shard ranges are copied. This is what lets the
+//!   server keep up once the threaded transport parallelises the
+//!   workers, and the layout a future real-network transport will
+//!   partition state over.
 //! * **heterogeneous links** — `[comm.links]` latency/bandwidth/
 //!   asymmetry multipliers, cycled over workers; broadcasts and uploads
 //!   are charged against each worker's own link and the event clock
@@ -120,6 +135,8 @@ pub mod prelude {
                           LinkSet, Participation, TransportKind};
     pub use crate::config::Schedule;
     pub use crate::coordinator::{rules::RuleKind, server::Optimizer};
+    pub use crate::coordinator::shard::{ShardLayout, ShardStats,
+                                        SnapshotBuffers, SnapshotStats};
     pub use crate::data::{Dataset, DatasetKind, Partition, PartitionScheme};
     pub use crate::exp::{Experiment, RunResult};
     pub use crate::runtime::{Compute, Engine, Manifest, SpecEntry};

@@ -5,6 +5,7 @@
 //!   list          list artifact specs and experiment presets
 //!   print-config  show a preset's full configuration (paper Tables 1-4)
 //!   inspect       dump manifest details for one spec
+//!   bench-check   gate a bench summary against the committed baseline
 //!
 //! Examples:
 //!   cada train --preset fig3 --iters 500 --runs 1
@@ -37,6 +38,7 @@ fn run() -> anyhow::Result<()> {
         "list" => cmd_list(&args),
         "print-config" => cmd_print_config(&args),
         "inspect" => cmd_inspect(&args),
+        "bench-check" => cmd_bench_check(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -52,6 +54,8 @@ USAGE:
   cada list [--artifacts DIR]
   cada print-config --preset <name>
   cada inspect --spec <name> [--artifacts DIR]
+  cada bench-check [--baseline FILE] [--current FILE]
+                   [--max-regress R] [--summary FILE]
 
 TRAIN OPTIONS:
   --preset NAME       experiment preset (paper figure)
@@ -70,6 +74,9 @@ TRAIN OPTIONS:
   --target-loss X     override summary target loss
   --transport T       worker execution engine: inproc (sequential,
                       default) or threaded (persistent worker threads)
+  --server-shards N   shard the server state into N contiguous parameter
+                      ranges updated on scoped threads (default 1;
+                      0 = one shard per core; bit-identical always)
   --semi-sync-k K     server proceeds after the fastest K uploads of a
                       round; stragglers fold in stale (0 = wait for all)
   --jitter-sigma S    log-normal upload straggler jitter (0 = off)
@@ -77,6 +84,16 @@ TRAIN OPTIONS:
   --artifacts DIR     artifacts directory (default ./artifacts)
   --out FILE          write curves as JSONL
   --quiet             less logging
+
+BENCH-CHECK OPTIONS (the CI perf-regression gate):
+  --baseline FILE     committed baseline (default bench/baseline.json;
+                      entries with a null median report but never gate)
+  --current FILE      fresh summary from `CADA_BENCH_JSON=... cargo
+                      bench` (default BENCH_engine.json)
+  --max-regress R     fail when current median > baseline * (1 + R)
+                      on any bench (default 0.25)
+  --summary FILE      also append the markdown delta table here (CI
+                      passes $GITHUB_STEP_SUMMARY)
 "#;
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -171,6 +188,55 @@ fn cmd_print_config(args: &Args) -> anyhow::Result<()> {
     let cfg = config::preset(&preset)?;
     args.reject_unknown()?;
     println!("{cfg:#?}");
+    Ok(())
+}
+
+fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
+    let baseline_path = args.str_or("baseline", "bench/baseline.json");
+    let current_path = args.str_or("current", "BENCH_engine.json");
+    let max_regress = args.f64_or("max-regress", 0.25)?;
+    let summary = args.str_opt("summary").map(str::to_string);
+    args.reject_unknown()?;
+    anyhow::ensure!(
+        max_regress >= 0.0 && max_regress.is_finite(),
+        "--max-regress must be finite and >= 0"
+    );
+    let read = |path: &str| -> anyhow::Result<cada::util::json::Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        cada::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    };
+    let base = read(&baseline_path)?;
+    let cur = read(&current_path)?;
+    let deltas = cada::bench::compare_bench_json(&base, &cur)?;
+    let table = cada::bench::render_delta_table(&deltas, max_regress);
+    print!("{table}");
+    if let Some(path) = summary {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
+        f.write_all(table.as_bytes())?;
+    }
+    let missing = cada::bench::missing_armed(&deltas);
+    anyhow::ensure!(
+        missing.is_empty(),
+        "armed baseline benches missing from the current run (renamed or \
+         dropped? refresh {baseline_path} in the same PR): {}",
+        missing.join(", ")
+    );
+    let regressed = cada::bench::regressions(&deltas, max_regress);
+    anyhow::ensure!(
+        regressed.is_empty(),
+        "median regression beyond {:.0}% on: {}",
+        max_regress * 100.0,
+        regressed.join(", ")
+    );
+    println!("\nbench-check ok: {} benches compared, none regressed",
+             deltas.len());
     Ok(())
 }
 

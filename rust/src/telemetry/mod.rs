@@ -5,6 +5,7 @@ use std::io::Write as _;
 use std::path::Path;
 
 use crate::comm::CommStats;
+use crate::coordinator::shard::ShardStats;
 use crate::util::json::ObjWriter;
 
 /// One evaluation point on a training curve.
@@ -219,6 +220,37 @@ pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
     out
 }
 
+/// Render the per-shard server-update timing breakdown of a run: the
+/// cumulative fold+step seconds each parameter shard's thread spent,
+/// with the hottest shard marked (a skewed table means the block
+/// distribution, not the work, is unbalanced). Empty string when the
+/// server ran unsharded or never stepped.
+pub fn render_shard_breakdown(algo: &str, stats: &ShardStats) -> String {
+    if stats.num_shards() <= 1 || stats.rounds == 0 {
+        return String::new();
+    }
+    let total: f64 = stats.shard_s.iter().sum();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "\n-- {algo}: per-shard server update breakdown ({} rounds) --\n",
+        stats.rounds
+    ));
+    out.push_str(&format!("{:>8} {:>12} {:>8}\n", "shard", "busy_s",
+                          "share"));
+    let hottest = stats.shard_s.iter().cloned().fold(0.0, f64::max);
+    let at_max = stats.shard_s.iter().filter(|&&s| s == hottest).count();
+    for (s, &busy) in stats.shard_s.iter().enumerate() {
+        let share = if total > 0.0 { busy / total * 100.0 } else { 0.0 };
+        let marker = if busy == hottest && hottest > 0.0 && at_max == 1 {
+            "  <- hottest"
+        } else {
+            ""
+        };
+        out.push_str(&format!("{s:>8} {busy:>12.4} {share:>7.1}%{marker}\n"));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +318,23 @@ mod tests {
         }
         let t = render_worker_breakdown("adam", &tied);
         assert!(!t.contains("straggler"), "{t}");
+    }
+
+    #[test]
+    fn shard_breakdown_marks_hottest_and_hides_unsharded() {
+        let stats = ShardStats {
+            shard_s: vec![0.5, 2.0, 0.5],
+            rounds: 10,
+        };
+        let t = render_shard_breakdown("cada2", &stats);
+        assert!(t.contains("10 rounds"), "{t}");
+        let hot = t.lines().find(|l| l.contains("hottest")).unwrap();
+        assert!(hot.trim_start().starts_with('1'), "{hot}");
+        // unsharded runs and untouched stats render nothing
+        assert_eq!(
+            render_shard_breakdown("x", &ShardStats::for_shards(1)), "");
+        assert_eq!(
+            render_shard_breakdown("x", &ShardStats::for_shards(4)), "");
     }
 
     #[test]

@@ -242,6 +242,35 @@ impl<'a> Parser<'a> {
 }
 
 // ------------------------------------------------------------------ write
+/// Render a [`Json`] value back to compact JSON text (object keys in
+/// `BTreeMap` order; non-finite numbers become `null`, mirroring
+/// [`ObjWriter::num`]).
+pub fn render(v: &Json) -> String {
+    match v {
+        Json::Null => "null".to_string(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(n) => {
+            if n.is_finite() {
+                format!("{n}")
+            } else {
+                "null".to_string()
+            }
+        }
+        Json::Str(s) => quote(s),
+        Json::Arr(items) => {
+            let parts: Vec<String> = items.iter().map(render).collect();
+            format!("[{}]", parts.join(","))
+        }
+        Json::Obj(m) => {
+            let parts: Vec<String> = m
+                .iter()
+                .map(|(k, v)| format!("{}:{}", quote(k), render(v)))
+                .collect();
+            format!("{{{}}}", parts.join(","))
+        }
+    }
+}
+
 /// Escape + quote a string for JSON output.
 pub fn quote(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -349,5 +378,14 @@ mod tests {
     fn nan_becomes_null() {
         let line = ObjWriter::new().num("x", f64::NAN).finish();
         assert_eq!(line, "{\"x\":null}");
+    }
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let src = r#"{"a":[1,{"b":"x\ny"},null,true],"c":-2.5}"#;
+        let v = parse(src).unwrap();
+        let text = render(&v);
+        assert_eq!(parse(&text).unwrap(), v);
+        assert_eq!(render(&Json::Num(f64::INFINITY)), "null");
     }
 }

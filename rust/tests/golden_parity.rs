@@ -9,6 +9,17 @@
 //! same primitives (`WorkerState`, `ServerState`, `DeltaHistory`, the
 //! tensor kernels and the forked RNG streams). Every float op happens in
 //! the same order, so all comparisons are exact (`==`), not tolerances.
+//!
+//! One deliberate numerics change rides along with PR 3's server
+//! sharding: `ServerState::step`'s squared step norm is now reduced per
+//! fixed 1024-element block (f32 partials summed in f64, block order)
+//! instead of one flat four-lane f32 pass, so the value is independent
+//! of the shard count. For p = 1024 — the size this whole suite runs at
+//! — one block IS the flat pass, so these twins still pin the exact
+//! pre-refactor behaviour; at larger p the drift-history values (and
+//! hence CADA upload decisions) differ in the last bits from pre-PR-3
+//! releases. The blocked semantics themselves are pinned independently
+//! in `coordinator::server`'s `fold_and_step_matches_independent_reference`.
 //! The twins charge communication the way the engine's event clock does
 //! (uniform links, jitter off, full participation): one slowest-download
 //! advance per broadcast, one slowest-upload advance per round — which,
@@ -236,11 +247,15 @@ fn legacy_local_run(
 }
 
 /// Run an algorithm through the engine Trainer with the shared golden
-/// knobs, on the given transport.
-fn trainer_run(
+/// knobs, on the given transport. `server_shards = 1` is the reference
+/// the legacy twins pin down; other shard counts must be bit-identical
+/// to it.
+fn trainer_run_sharded(
     algo: &mut dyn Algorithm,
     cost_model: CostModel,
     transport: TransportKind,
+    p: usize,
+    server_shards: usize,
     w: &Workload,
     compute: &mut dyn Compute,
 ) -> (Vec<LegacyPoint>, CommStats, Vec<f32>) {
@@ -249,13 +264,14 @@ fn trainer_run(
         .dataset(&w.data)
         .partition(&w.partition)
         .eval_batch(w.eval.clone())
-        .init_theta(vec![0.0; 1024])
+        .init_theta(vec![0.0; p])
         .iters(ITERS)
         .eval_every(EVAL_EVERY)
         .batch(BATCH)
         .upload_bytes(UPLOAD_BYTES)
         .cost_model(cost_model)
         .transport(transport)
+        .server_shards(server_shards)
         .seed(SEED)
         .build()
         .unwrap();
@@ -268,6 +284,17 @@ fn trainer_run(
     let comm = trainer.comm.clone();
     drop(trainer);
     (points, comm, algo.theta().to_vec())
+}
+
+/// The golden default: 1024 parameters, one server shard.
+fn trainer_run(
+    algo: &mut dyn Algorithm,
+    cost_model: CostModel,
+    transport: TransportKind,
+    w: &Workload,
+    compute: &mut dyn Compute,
+) -> (Vec<LegacyPoint>, CommStats, Vec<f32>) {
+    trainer_run_sharded(algo, cost_model, transport, 1024, 1, w, compute)
 }
 
 fn assert_parity(
@@ -423,5 +450,47 @@ fn threaded_matches_inproc_bit_for_bit() {
                                    &mut compute);
         assert_parity(&inproc, &threaded,
                       &format!("{label}: threaded vs inproc"));
+    }
+}
+
+/// The sharded-server acceptance gate: `server_shards ∈ {1, 2, 4}` must
+/// produce bit-identical curves, counters and final iterates, on BOTH
+/// transports, for the adaptive and the always-upload rule. Run at
+/// p = 4096 (four reduction blocks) so shard counts 2 and 4 genuinely
+/// split the server state instead of collapsing to one range.
+#[test]
+fn golden_sharded_server_matches_single_shard_bit_for_bit() {
+    let p = 4096;
+    let mut compute = NativeLogReg::for_spec(22, p);
+    let data = synthetic::ijcnn_like(800, 9);
+    let mut rng = Rng::new(10);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 5, &mut rng);
+    let eval = data.gather(&(0..128).collect::<Vec<_>>());
+    let w = Workload { data, partition, eval };
+    let cost = CostModel::default();
+    let rules: [(&str, RuleKind, u32, usize); 2] = [
+        ("adam", RuleKind::Always, u32::MAX, 1),
+        ("cada2", RuleKind::Cada2 { c: 0.6 }, 20, 10),
+    ];
+    for transport in [TransportKind::InProc, TransportKind::Threaded] {
+        for &(label, rule, max_delay, d_max) in &rules {
+            let mut ref_algo = cada_algo(rule, 0.02, max_delay, d_max);
+            let reference = trainer_run_sharded(
+                &mut ref_algo, cost.clone(), transport, p, 1, &w,
+                &mut compute);
+            for shards in [2usize, 4] {
+                let mut algo = cada_algo(rule, 0.02, max_delay, d_max);
+                let sharded = trainer_run_sharded(
+                    &mut algo, cost.clone(), transport, p, shards, &w,
+                    &mut compute);
+                assert_parity(
+                    &reference,
+                    &sharded,
+                    &format!("{label} [{}]: {shards} shards vs 1",
+                             transport.name()),
+                );
+            }
+        }
     }
 }

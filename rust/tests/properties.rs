@@ -8,6 +8,7 @@ use cada::config::Schedule;
 use cada::coordinator::history::DeltaHistory;
 use cada::coordinator::rules::{decide, RuleKind};
 use cada::coordinator::server::Optimizer;
+use cada::coordinator::shard::{ShardLayout, SHARD_BLOCK};
 use cada::data::{Dataset, Partition, PartitionScheme};
 use cada::runtime::native::NativeLogReg;
 use cada::tensor;
@@ -299,6 +300,137 @@ fn prop_amsgrad_vhat_monotone_and_padding_inert() {
                     return Err("padding became nonzero".into());
                 }
                 prev.copy_from_slice(&vhat);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shard_layout_partitions_exactly() {
+    // for ANY (p, shards) — p = 0, p < shards, p % shards != 0, p not
+    // block-aligned — the shard ranges must cover 0..p contiguously
+    // with no gap or overlap, and interior boundaries must stay
+    // block-aligned (the step-norm reduction's determinism depends on
+    // it).
+    check(
+        Config { cases: 120, ..Config::default() },
+        "shard ranges partition 0..p",
+        |rng| {
+            let p = match rng.below(5) {
+                0 => 0,
+                1 => rng.below(8),                      // p < shards
+                2 => SHARD_BLOCK * rng.below(9),        // block-aligned
+                3 => SHARD_BLOCK * rng.below(9) + 1 + rng.below(1023),
+                _ => rng.below(3_000_000),
+            };
+            (p, 1 + rng.below(16))
+        },
+        |&(p, shards)| {
+            let layout = ShardLayout::new(p, shards);
+            if layout.num_shards() != shards {
+                return Err(format!("{} shards, wanted {shards}",
+                                   layout.num_shards()));
+            }
+            let mut next = 0usize;
+            for s in 0..shards {
+                let r = layout.range(s);
+                if r.start != next {
+                    return Err(format!(
+                        "shard {s}: starts at {} expected {next} \
+                         (p={p} shards={shards})",
+                        r.start
+                    ));
+                }
+                if r.end < r.start {
+                    return Err(format!("shard {s}: inverted {r:?}"));
+                }
+                if r.end != p && r.end % SHARD_BLOCK != 0 {
+                    return Err(format!(
+                        "shard {s}: interior boundary {} not \
+                         block-aligned",
+                        r.end
+                    ));
+                }
+                next = r.end;
+            }
+            if next != p {
+                return Err(format!("ranges end at {next}, p = {p}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_server_shards_bit_identical_to_one_shard() {
+    // the sharded server is a pure execution strategy: for random
+    // workloads, seeds and shard counts, the loss curve, comm counters
+    // and final iterate must equal the server_shards = 1 reference
+    // bit for bit (p = 4096 -> 4 blocks, so 2.. shards really split).
+    check(
+        Config { cases: 6, ..Config::default() },
+        "server_shards invariance",
+        |rng| (rng.next_u64(), 2 + rng.below(3), 2 + rng.below(7)),
+        |&(seed, workers, shards)| {
+            let p = 4096;
+            let mut rng = Rng::new(seed);
+            let data = logreg_data(&mut rng, 200, 6);
+            let partition = Partition::build(PartitionScheme::Uniform,
+                                             &data, workers, &mut rng);
+            let mut compute = NativeLogReg::for_spec(6, p);
+            let eval = data.gather(&[0, 1, 2, 3]);
+            type RunOut =
+                (Vec<f64>, cada::comm::CommStats, Vec<f32>);
+            let mut run = |n_shards: usize| -> Result<RunOut, String> {
+                let mut cfg = CadaCfg::basic(
+                    RuleKind::Cada2 { c: 0.8 },
+                    Optimizer::Amsgrad {
+                        alpha: Schedule::Constant(0.05),
+                        beta1: 0.9,
+                        beta2: 0.999,
+                        eps: 1e-8,
+                        use_artifact: false,
+                    },
+                );
+                cfg.max_delay = 6;
+                let mut algo = Cada::new(cfg);
+                let mut trainer = Trainer::builder()
+                    .algorithm(&mut algo)
+                    .dataset(&data)
+                    .partition(&partition)
+                    .eval_batch(eval.clone())
+                    .init_theta(vec![0.0; p])
+                    .iters(12)
+                    .eval_every(3)
+                    .batch(8)
+                    .server_shards(n_shards)
+                    .seed(seed ^ 5)
+                    .build()
+                    .map_err(|e| e.to_string())?;
+                let curve = trainer
+                    .run(0, &mut compute)
+                    .map_err(|e| e.to_string())?;
+                let losses: Vec<f64> =
+                    curve.points.iter().map(|pt| pt.loss).collect();
+                let comm = trainer.comm.clone();
+                drop(trainer);
+                Ok((losses, comm, algo.server.theta.clone()))
+            };
+            let reference = run(1)?;
+            let sharded = run(shards)?;
+            if reference.0 != sharded.0 {
+                return Err(format!("loss curves diverged at {shards} \
+                                    shards"));
+            }
+            if reference.1 != sharded.1 {
+                return Err(format!("comm stats diverged at {shards} \
+                                    shards"));
+            }
+            let drift = tensor::sqnorm_diff(&reference.2, &sharded.2);
+            if drift != 0.0 {
+                return Err(format!(
+                    "final theta diverged by {drift} at {shards} shards"));
             }
             Ok(())
         },
