@@ -14,6 +14,7 @@ use cada::algorithms::{Cada, CadaCfg, Trainer};
 use cada::bench::{black_box, Runner};
 use cada::comm::{CostModel, TransportKind};
 use cada::config::Schedule;
+use cada::coordinator::pool::ShardExec;
 use cada::coordinator::rules::RuleKind;
 use cada::coordinator::server::{Optimizer, ServerState};
 use cada::coordinator::shard::{ShardLayout, SnapshotBuffers};
@@ -56,8 +57,9 @@ fn main() {
 
     // ---------------- sharded server round at >= 1M parameters ---------
     // fold 5 innovations + fused AMSGrad step + step-norm blocks, per
-    // shard on scoped threads: the [comm] server_shards scaling curve
-    // the CI regression gate watches (bit-identical across shard counts)
+    // shard on the persistent pool (the default exec): the [comm]
+    // server_shards scaling curve the CI regression gate watches
+    // (bit-identical across shard counts)
     {
         let p = 1_048_576usize;
         let m = 5;
@@ -113,6 +115,98 @@ fn main() {
             view = Some(Arc::new(src.clone()));
         });
         black_box(view);
+    }
+
+    // ------- persistent pool vs scoped spawn+join at mid-sized p -------
+    // the pool's raison d'être: at 64k parameters the per-shard work is
+    // ~tens of µs, so PR 3's spawn+join per round ate the whole win;
+    // parked mailbox threads make shards > 1 profitable here
+    {
+        let p = 65_536usize;
+        let m = 5;
+        let deltas: Vec<Vec<f32>> =
+            (0..m).map(|i| randv(p, 50 + i as u64)).collect();
+        let delta_refs: Vec<&[f32]> =
+            deltas.iter().map(|d| d.as_slice()).collect();
+        let opt = || Optimizer::Amsgrad {
+            alpha: Schedule::Constant(1e-4),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            use_artifact: false,
+        };
+        let mut dummy = NativeLogReg::for_spec(8, 1024);
+        let bytes = (4 * (m + 4) * p) as u64;
+        r.header("server fold+step at p=65536 (pool vs scoped, 5 uploads)");
+        {
+            let mut server =
+                ServerState::new_sharded(randv(p, 49), m, opt(), 1);
+            let mut k = 0u64;
+            r.bench_bytes("server fold+step  p=65536 shards=1", bytes,
+                          || {
+                black_box(
+                    server
+                        .fold_and_step(k, &delta_refs, &mut dummy)
+                        .unwrap(),
+                );
+                k += 1;
+            });
+        }
+        for exec in [ShardExec::Pool, ShardExec::Scoped] {
+            let mut server = ServerState::new_sharded_with(
+                randv(p, 49), m, opt(), 4, exec);
+            let mut k = 0u64;
+            r.bench_bytes(
+                &format!("server fold+step  p=65536 shards=4 [{}]",
+                         exec.name()),
+                bytes,
+                || {
+                    black_box(
+                        server
+                            .fold_and_step(k, &delta_refs, &mut dummy)
+                            .unwrap(),
+                    );
+                    k += 1;
+                },
+            );
+        }
+    }
+
+    // ------- blocked two-pass gradient vs sample-at-a-time -------------
+    // the dominant per-round worker compute: blocked logits + fused
+    // single-exp activations + group-of-4 gradient folds, against the
+    // retained scalar reference path
+    {
+        let d = 128usize;
+        let n = 256usize;
+        let p_pad = 1024usize;
+        let mut native = NativeLogReg::for_spec(d, p_pad);
+        let mut rng = Rng::new(61);
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut s = 0.0;
+            for _ in 0..d {
+                let v = rng.normal_f32(0.0, 1.0);
+                x.push(v);
+                s += v;
+            }
+            y.push((s > 0.0) as i32);
+        }
+        let grad_data = Dataset::Labeled { x, sample_shape: vec![d], y };
+        let grad_batch = grad_data.gather(&(0..n).collect::<Vec<_>>());
+        let theta = randv(p_pad, 62);
+        let mut g = vec![0.0f32; p_pad];
+        let bytes = (4 * n * d) as u64;
+        r.header("worker gradient kernel (logreg d=128, batch=256)");
+        r.bench_bytes("logreg grad blocked  (d=128, b=256)", bytes, || {
+            black_box(
+                native.grad(&theta, &grad_batch, &mut g).unwrap());
+        });
+        r.bench_bytes("logreg grad scalar   (d=128, b=256)", bytes, || {
+            black_box(
+                native.grad_scalar(&theta, &grad_batch, &mut g).unwrap());
+        });
     }
 
     // shared tiny-logreg workload (spec geometry matches test_logreg)

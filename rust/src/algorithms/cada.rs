@@ -29,6 +29,7 @@ use std::sync::Arc;
 use super::{Algorithm, AlgorithmKind, RoundCtx};
 use crate::comm::{JobOut, RoundEvent, WorkerJob};
 use crate::coordinator::history::DeltaHistory;
+use crate::coordinator::pool::ShardExec;
 use crate::coordinator::rules::RuleKind;
 use crate::coordinator::server::{Optimizer, ServerState};
 use crate::coordinator::shard::{ShardLayout, ShardStats, SnapshotBuffers,
@@ -79,6 +80,9 @@ pub struct Cada {
     /// server-shard count (engine hint, set before `init`; 1 = the
     /// sequential reference path)
     shards: usize,
+    /// multi-shard execution mode (engine hint, set before `init`):
+    /// persistent pool (default) or per-round scoped threads
+    shard_exec: ShardExec,
     /// CADA1 snapshot theta-tilde (refreshed every D iterations)
     snapshot: Vec<f32>,
     /// bumped on every snapshot refresh (drives the snapshot buffers)
@@ -128,6 +132,7 @@ impl Cada {
             workers: Vec::new(),
             history: DeltaHistory::new(cfg.d_max.max(1)),
             shards: 1,
+            shard_exec: ShardExec::default(),
             snapshot: Vec::new(),
             snapshot_version: 0,
             theta_bufs: SnapshotBuffers::new(),
@@ -176,11 +181,16 @@ impl Algorithm for Cada {
         self.shards = shards.max(1);
     }
 
+    fn set_shard_exec(&mut self, exec: ShardExec) {
+        self.shard_exec = exec;
+    }
+
     fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()> {
         anyhow::ensure!(self.cfg.d_max >= 1, "d_max must be >= 1");
         let p = init_theta.len();
-        self.server = ServerState::new_sharded(
-            init_theta.to_vec(), m, self.cfg.opt.clone(), self.shards);
+        self.server = ServerState::new_sharded_with(
+            init_theta.to_vec(), m, self.cfg.opt.clone(), self.shards,
+            self.shard_exec);
         self.workers = (0..m)
             .map(|w| WorkerState::new(w, p, self.cfg.rule))
             .collect();

@@ -148,6 +148,16 @@ pub trait Algorithm {
         let _ = shards;
     }
 
+    /// Engine hint, delivered before [`Algorithm::init`]: how
+    /// multi-shard server rounds execute (`[comm] shard_exec` — the
+    /// persistent [`ShardPool`](crate::coordinator::pool::ShardPool),
+    /// or per-round scoped threads). Pure execution strategy,
+    /// bit-identical either way; methods without sharded server state
+    /// ignore it (the default).
+    fn set_shard_exec(&mut self, exec: crate::coordinator::pool::ShardExec) {
+        let _ = exec;
+    }
+
     /// Allocate all model state for `m` workers from the initial iterate.
     /// Called exactly once, by
     /// [`TrainerBuilder::build`](trainer::TrainerBuilder::build).

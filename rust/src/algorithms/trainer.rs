@@ -53,6 +53,7 @@ use crate::comm::{
     Participation, Threaded, Transport, TransportKind, WorkerJob,
 };
 use crate::config::toml::{Doc, Value};
+use crate::coordinator::pool::ShardExec;
 use crate::data::{Batch, Dataset, Partition};
 use crate::runtime::Compute;
 use crate::telemetry::{Curve, CurvePoint};
@@ -119,10 +120,12 @@ impl TrainCfg {
              latency_s = {}\n\
              down_bw = {}\n\
              asymmetry = {}\n\
+             compute_s = {}\n\
              \n\
              [comm]\n\
              transport = \"{}\"\n\
              server_shards = {}\n\
+             shard_exec = \"{}\"\n\
              semi_sync_k = {}\n\
              jitter_sigma = {}\n\
              jitter_seed = {}\n",
@@ -135,8 +138,10 @@ impl TrainCfg {
             self.cost_model.latency_s,
             self.cost_model.down_bw,
             self.cost_model.asymmetry,
+            self.cost_model.compute_s,
             self.comm.transport.name(),
             self.comm.server_shards,
+            self.comm.shard_exec.name(),
             self.comm.semi_sync_k,
             self.comm.jitter_sigma,
             self.comm.jitter_seed,
@@ -145,6 +150,7 @@ impl TrainCfg {
             ("latency_mult", &self.comm.latency_mult),
             ("bw_mult", &self.comm.bw_mult),
             ("asymmetry_mult", &self.comm.asymmetry_mult),
+            ("compute_mult", &self.comm.compute_mult),
         ];
         if links.iter().any(|(_, v)| !v.is_empty()) {
             out.push_str("\n[comm.links]\n");
@@ -204,6 +210,7 @@ impl TrainCfg {
                     "latency_s" => cfg.cost_model.latency_s = num,
                     "down_bw" => cfg.cost_model.down_bw = num,
                     "asymmetry" => cfg.cost_model.asymmetry = num,
+                    "compute_s" => cfg.cost_model.compute_s = num,
                     other => anyhow::bail!(
                         "unknown [train.cost_model] key '{other}'"),
                 }
@@ -226,6 +233,13 @@ impl TrainCfg {
                                                  be a non-negative integer \
                                                  (0 = one shard per core)")
                             })? as usize;
+                    }
+                    "shard_exec" => {
+                        let s = value.as_str().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "[comm] shard_exec must be a string")
+                        })?;
+                        cfg.comm.shard_exec = ShardExec::parse(s)?;
                     }
                     "semi_sync_k" => {
                         cfg.comm.semi_sync_k =
@@ -274,6 +288,7 @@ impl TrainCfg {
                     "latency_mult" => cfg.comm.latency_mult = arr,
                     "bw_mult" => cfg.comm.bw_mult = arr,
                     "asymmetry_mult" => cfg.comm.asymmetry_mult = arr,
+                    "compute_mult" => cfg.comm.compute_mult = arr,
                     other => anyhow::bail!(
                         "unknown [comm.links] key '{other}'"),
                 }
@@ -628,11 +643,19 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
     }
 
     /// Shard the server's parameter state across this many contiguous
-    /// ranges, each folded and updated on its own scoped thread
+    /// ranges, each folded and updated on its own thread
     /// (default 1 = sequential; 0 = one shard per available core).
     /// Bit-identical for every shard count.
     pub fn server_shards(mut self, shards: usize) -> Self {
         self.cfg.comm.server_shards = shards;
+        self
+    }
+
+    /// How multi-shard server rounds execute: the persistent shard pool
+    /// (default; spawn-free, profitable from mid-sized p) or per-round
+    /// scoped threads (the PR 3 reference). Bit-identical either way.
+    pub fn shard_exec(mut self, exec: ShardExec) -> Self {
+        self.cfg.comm.shard_exec = exec;
         self
     }
 
@@ -683,6 +706,7 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
             n => n,
         };
         algo.set_server_shards(shards);
+        algo.set_shard_exec(self.cfg.comm.shard_exec);
         algo.init(&init_theta, m)?;
         let root = Rng::new(self.cfg.seed);
         let rngs = (0..m).map(|w| root.fork(w as u64 + 1)).collect();
@@ -827,18 +851,21 @@ mod tests {
             eval_every: 25,
             batch: 92,
             seed: 2021,
-            cost_model: CostModel::default(),
+            cost_model: CostModel { compute_s: 0.125,
+                                    ..CostModel::default() },
             upload_bytes: 4 * 23,
             trace_cap: 128,
             comm: CommCfg {
                 transport: TransportKind::Threaded,
                 server_shards: 4,
+                shard_exec: ShardExec::Scoped,
                 semi_sync_k: 7,
                 jitter_sigma: 0.5,
                 jitter_seed: 11,
                 latency_mult: vec![1.0, 2.0, 4.0],
                 bw_mult: vec![1.0, 0.5],
                 asymmetry_mult: Vec::new(),
+                compute_mult: vec![1.0, 8.0],
             },
         };
         let text = cfg.to_toml();
@@ -855,7 +882,14 @@ mod tests {
         assert!(TrainCfg::from_doc(&bad).is_err());
         let bad = toml::parse("[comm]\ntransport = \"beam\"\n").unwrap();
         assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[comm]\nshard_exec = \"forkbomb\"\n")
+            .unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
         let bad = toml::parse("[comm.links]\nlatency_mult = 3\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        // compute multipliers validate like the other link multipliers
+        let bad = toml::parse("[comm.links]\ncompute_mult = [1, -1]\n")
+            .unwrap();
         assert!(TrainCfg::from_doc(&bad).is_err());
         // negative / fractional integer fields are rejected, not
         // saturated or truncated

@@ -280,6 +280,53 @@ pub fn compare_bench_json(baseline: &Json, current: &Json)
     Ok(deltas)
 }
 
+/// Merge a current run's medians into a baseline array (the
+/// `bench-check --update-baseline` write path): every bench in
+/// `current` that carries a NUMERIC `median_ns` gets an ARMED
+/// `{name, median_ns}` row — replacing its existing baseline row, seed
+/// note and all — while baseline-only rows are preserved untouched
+/// (they keep gating whatever job armed them). Entries without a
+/// numeric median are skipped, never written as null: feeding the
+/// command a seed-row file (say, the baseline itself by argument
+/// mix-up) must not silently disarm the gate. Returns the new baseline
+/// array and how many rows were armed.
+pub fn update_baseline(baseline: &Json, current: &Json)
+                       -> anyhow::Result<(Json, usize)> {
+    let cur = current
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("current is not a JSON array"))?;
+    let mut entries: Vec<(String, Json)> = Vec::new();
+    if let Some(base) = baseline.as_arr() {
+        for v in base {
+            if let Some(name) = v.get("name").and_then(|n| n.as_str()) {
+                entries.push((name.to_string(), v.clone()));
+            }
+        }
+    }
+    let mut armed = 0usize;
+    for c in cur {
+        let name = c
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("bench name must be a string"))?
+            .to_string();
+        let Some(median) = c.get("median_ns").and_then(|m| m.as_f64())
+        else {
+            continue;
+        };
+        let mut row = std::collections::BTreeMap::new();
+        row.insert("name".to_string(), Json::Str(name.clone()));
+        row.insert("median_ns".to_string(), Json::Num(median));
+        let row = Json::Obj(row);
+        armed += 1;
+        match entries.iter_mut().find(|(n, _)| n == &name) {
+            Some(slot) => slot.1 = row,
+            None => entries.push((name, row)),
+        }
+    }
+    Ok((Json::Arr(entries.into_iter().map(|(_, v)| v).collect()), armed))
+}
+
 /// Names of the benches regressing beyond `max_regress`.
 pub fn regressions(deltas: &[BenchDelta], max_regress: f64) -> Vec<String> {
     deltas
@@ -474,6 +521,48 @@ mod tests {
         // malformed inputs error instead of silently passing the gate
         let bad = crate::util::json::parse("{}").unwrap();
         assert!(compare_bench_json(&bad, &current).is_err());
+    }
+
+    #[test]
+    fn update_baseline_arms_seed_rows_and_keeps_strangers() {
+        let baseline = crate::util::json::parse(
+            r#"[{"name":"a","median_ns":null,"note":"seeded"},
+                {"name":"pjrt-only","median_ns":123},
+                {"name":"b","median_ns":50}]"#,
+        )
+        .unwrap();
+        let current = crate::util::json::parse(
+            r#"[{"name":"a","median_ns":10,"mean_ns":11},
+                {"name":"b","median_ns":60},
+                {"name":"pjrt-only","median_ns":null},
+                {"name":"fresh","median_ns":5}]"#,
+        )
+        .unwrap();
+        let (updated, armed) =
+            update_baseline(&baseline, &current).unwrap();
+        // the null-median row is SKIPPED, not written: a seed-row file
+        // fed back in by mistake must never disarm existing medians
+        assert_eq!(armed, 3);
+        let arr = updated.as_arr().unwrap();
+        let names: Vec<&str> = arr
+            .iter()
+            .map(|v| v.get("name").unwrap().as_str().unwrap())
+            .collect();
+        // baseline order kept, new benches append
+        assert_eq!(names, vec!["a", "pjrt-only", "b", "fresh"]);
+        // seed row armed (note dropped), existing row refreshed
+        assert_eq!(arr[0].get("median_ns").unwrap().as_f64(), Some(10.0));
+        assert!(arr[0].get("note").is_none());
+        assert_eq!(arr[2].get("median_ns").unwrap().as_f64(), Some(60.0));
+        // a bench the current run cannot produce survives untouched
+        assert_eq!(arr[1].get("median_ns").unwrap().as_f64(), Some(123.0));
+        assert_eq!(arr[3].get("median_ns").unwrap().as_f64(), Some(5.0));
+        // the armed file round-trips straight back into the gate
+        let deltas = compare_bench_json(&updated, &current).unwrap();
+        assert!(regressions(&deltas, 0.0).is_empty());
+        // malformed current is an error, not an empty write
+        let bad = crate::util::json::parse("{}").unwrap();
+        assert!(update_baseline(&baseline, &bad).is_err());
     }
 
     #[test]

@@ -4,11 +4,15 @@
 //! worker the same latency and advanced simulated time additively, so a
 //! round's cost ignored stragglers entirely. Here every worker gets its
 //! own [`LinkModel`] (heterogeneous latency/bandwidth/asymmetry plus a
-//! seeded log-normal straggler jitter), and [`LinkSet::settle_uploads`]
-//! turns one round's upload set into an event-clock verdict: which
-//! uploads the server waits for (the participation policy), which arrive
-//! late, and by how much the simulated clock advances — the max over the
-//! awaited workers, not the sum.
+//! seeded log-normal straggler jitter and a device compute multiplier,
+//! so slow DEVICES are priced as well as slow links), and
+//! [`LinkSet::settle_uploads`] turns one round's upload set into an
+//! event-clock verdict: which uploads the server waits for (the
+//! participation policy), which arrive late, and by how much the
+//! simulated clock advances — the max over the awaited workers, not the
+//! sum. An upload's arrival time is device compute + transmission
+//! ([`LinkSet::arrival_time_s`]); the default compute base of 0 seconds
+//! keeps every pre-compute config bit-identical.
 //!
 //! Determinism is a hard requirement (the `Threaded` transport must be
 //! bit-identical to `InProc`): the jitter for (round k, worker w) is a
@@ -19,20 +23,29 @@ use std::cmp::Ordering;
 use super::CostModel;
 use crate::util::rng::Rng;
 
-/// One worker's simulated network link: an asymmetric-uplink cost model
-/// plus a multiplicative log-normal jitter on the upload path (the
-/// straggler model of arXiv:2201.04301's heterogeneous-worker setting).
+/// One worker's simulated device + network link: an asymmetric-uplink
+/// cost model, a multiplicative log-normal jitter on the upload path
+/// (the straggler model of arXiv:2201.04301's heterogeneous-worker
+/// setting), and a device compute multiplier (the worker-grouping
+/// setting of arXiv:2201.04301 prices slow DEVICES, not just slow
+/// links).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LinkModel {
     pub cost: CostModel,
     /// sigma of the log-normal upload jitter; 0 disables jitter exactly
     /// (the multiplier is the constant 1.0, not a degenerate draw)
     pub jitter_sigma: f64,
+    /// device speed factor scaling the base per-round compute time
+    /// ([`CostModel::compute_s`]): a 2.0 device takes twice the base
+    /// compute seconds before its upload leaves. 1.0 = nominal; with
+    /// the default `compute_s = 0` the multiplier is inert and every
+    /// simulated time is bit-identical to the pre-compute model.
+    pub compute_mult: f64,
 }
 
 impl LinkModel {
     pub fn new(cost: CostModel) -> Self {
-        LinkModel { cost, jitter_sigma: 0.0 }
+        LinkModel { cost, jitter_sigma: 0.0, compute_mult: 1.0 }
     }
 }
 
@@ -67,10 +80,14 @@ pub struct RoundVerdict {
     /// not finite (dead links): transmitted, charged, never delivered
     pub lost: Vec<usize>,
     /// event-clock advance for the upload phase: the simulated arrival
-    /// time of the slowest awaited upload (0 when nothing uploads;
-    /// infinite when a full quorum must wait on a dead link)
+    /// time of the slowest awaited upload; under full participation
+    /// additionally floored by the slowest device's compute across ALL
+    /// workers, so a no-upload round still costs `max compute` (0 only
+    /// when nothing uploads AND the compute base is 0; infinite when a
+    /// full quorum must wait on a dead link)
     pub upload_dt_s: f64,
-    /// simulated arrival time of every pending upload, `(worker, s)`
+    /// simulated arrival time of every pending upload, `(worker, s)` —
+    /// device compute + transmission (see [`LinkSet::arrival_time_s`])
     pub arrival_s: Vec<(usize, f64)>,
 }
 
@@ -119,6 +136,22 @@ impl LinkSet {
         self.links[w].cost.upload_time_s(bytes) * self.jitter_mult(k, w)
     }
 
+    /// Simulated device compute seconds of one round on worker `w`:
+    /// base [`CostModel::compute_s`] scaled by the worker's
+    /// [`LinkModel::compute_mult`]. Exactly 0 under the default
+    /// `compute_s = 0`, so compute-free configs never perturb the clock.
+    pub fn compute_time_s(&self, w: usize) -> f64 {
+        self.links[w].cost.compute_s * self.links[w].compute_mult
+    }
+
+    /// When worker `w`'s round-`k` upload reaches the server, measured
+    /// from the start of the round's local phase: the device computes
+    /// its gradient step first, then transmits — so slow devices
+    /// straggle exactly like slow links.
+    pub fn arrival_time_s(&self, k: u64, w: usize, bytes: usize) -> f64 {
+        self.compute_time_s(w) + self.upload_time_s(k, w, bytes)
+    }
+
     /// Broadcast cost: downloads proceed in parallel, so the clock
     /// advances by the SLOWEST worker's download — under heterogeneous
     /// links the seed's "one latency hit for all workers" is wrong.
@@ -136,13 +169,18 @@ impl LinkSet {
     /// worker order too, so folding them is deterministic regardless of
     /// (simulated or physical) arrival order; with `Full` — or
     /// `SemiSync { k >= pending.len() }` — `fresh == pending` and the
-    /// clock advances by the slowest upload, reducing exactly to the
-    /// fully-synchronous semantics.
+    /// clock advances by the slowest upload arrival. Under `Full` the
+    /// advance is additionally floored by the slowest device's compute
+    /// time across ALL workers (skippers still compute and report their
+    /// decision in a synchronous round); semi-sync quorums — including
+    /// `k >= pending.len()` — deliberately never wait on non-pending
+    /// devices, so the two policies coincide exactly only while the
+    /// compute base is 0.
     pub fn settle_uploads(&self, k: u64, pending: &[usize], bytes: usize,
                           policy: Participation) -> RoundVerdict {
         let arrival_s: Vec<(usize, f64)> = pending
             .iter()
-            .map(|&w| (w, self.upload_time_s(k, w, bytes)))
+            .map(|&w| (w, self.arrival_time_s(k, w, bytes)))
             .collect();
         let quorum = match policy {
             Participation::Full => pending.len(),
@@ -175,10 +213,23 @@ impl LinkSet {
         fresh.sort_unstable();
         deferred.sort_unstable();
         lost.sort_unstable();
-        let upload_dt_s = order[..quorum]
+        let mut upload_dt_s = order[..quorum]
             .iter()
             .map(|&i| arrival_s[i].1)
             .fold(0.0, f64::max);
+        if matches!(policy, Participation::Full) {
+            // a fully-synchronous round closes only once EVERY device
+            // has finished its local compute — workers whose rule skips
+            // the upload still evaluate their gradients and report the
+            // decision, so a slow device gates the round even when it
+            // transmits nothing. (Semi-sync quorums explicitly do not
+            // wait, so no floor there.) Exactly 0 under the default
+            // compute base, preserving bit-identical pre-compute runs.
+            let compute_floor = (0..self.links.len())
+                .map(|w| self.compute_time_s(w))
+                .fold(0.0, f64::max);
+            upload_dt_s = upload_dt_s.max(compute_floor);
+        }
         RoundVerdict { fresh, deferred, lost, upload_dt_s, arrival_s }
     }
 }
@@ -188,7 +239,7 @@ mod tests {
     use super::*;
 
     fn cost(latency_s: f64, down_bw: f64, asymmetry: f64) -> CostModel {
-        CostModel { latency_s, down_bw, asymmetry }
+        CostModel { latency_s, down_bw, asymmetry, compute_s: 0.0 }
     }
 
     #[test]
@@ -257,6 +308,47 @@ mod tests {
             assert_eq!(links.jitter_mult(k, 0), 1.0);
             assert_eq!(links.jitter_mult(k, 1), 1.0);
         }
+    }
+
+    #[test]
+    fn compute_multiplier_prices_slow_devices() {
+        // identical links; worker 1's device is 10x slower. Its upload
+        // ARRIVES later (compute + transmit), so a k=1 quorum defers it
+        // and the full quorum waits for it.
+        let mut base = cost(0.01, 1000.0, 1.0);
+        base.compute_s = 0.1;
+        let mut slow = LinkModel::new(base.clone());
+        slow.compute_mult = 10.0;
+        let links = LinkSet::new(
+            vec![LinkModel::new(base.clone()), slow], 0);
+        assert_eq!(links.compute_time_s(0), 0.1);
+        assert_eq!(links.compute_time_s(1), 1.0);
+        // transmission itself is untouched by device speed
+        assert_eq!(links.upload_time_s(0, 0, 0),
+                   links.upload_time_s(0, 1, 0));
+        assert_eq!(links.arrival_time_s(0, 1, 0),
+                   1.0 + links.upload_time_s(0, 1, 0));
+        let full = links.settle_uploads(0, &[0, 1], 0,
+                                        Participation::Full);
+        assert_eq!(full.upload_dt_s, 1.0 + 0.01);
+        let semi = links.settle_uploads(0, &[0, 1], 0,
+                                        Participation::SemiSync { k: 1 });
+        assert_eq!(semi.fresh, vec![0]);
+        assert_eq!(semi.deferred, vec![1]);
+        assert_eq!(semi.upload_dt_s, 0.1 + 0.01);
+        // fully-sync rounds wait for every DEVICE even when its rule
+        // skips the upload: worker 1 pends nothing, yet its compute
+        // time floors the round
+        let skip = links.settle_uploads(0, &[0], 0, Participation::Full);
+        assert_eq!(skip.fresh, vec![0]);
+        assert_eq!(skip.upload_dt_s, 1.0);
+        // the default base compute of 0 keeps the clock bit-identical
+        let free = LinkSet::new(
+            vec![LinkModel { compute_mult: 50.0,
+                             ..LinkModel::new(cost(0.01, 1000.0, 1.0)) }],
+            0);
+        assert_eq!(free.arrival_time_s(3, 0, 64),
+                   free.upload_time_s(3, 0, 64));
     }
 
     #[test]

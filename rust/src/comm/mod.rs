@@ -11,9 +11,11 @@
 //!   "communication uplink and downlink are not symmetric ... upload ...
 //!   is costly").
 //! * [`LinkModel`] / [`LinkSet`] ([`link`]) — per-worker heterogeneous
-//!   links plus a seeded log-normal straggler jitter, and the round
-//!   settlement logic: which uploads the server waits for under a
-//!   [`Participation`] policy and how far the clock advances.
+//!   links plus a seeded log-normal straggler jitter and a device
+//!   compute multiplier over [`CostModel::compute_s`] (slow devices
+//!   straggle like slow links), and the round settlement logic: which
+//!   uploads the server waits for under a [`Participation`] policy and
+//!   how far the clock advances.
 //! * [`CommStats`] — cumulative counters plus the **event clock**:
 //!   `sim_time_s` advances once per round phase by the *max* over
 //!   participating workers (broadcasts in parallel, uploads bounded by
@@ -31,6 +33,8 @@ pub mod transport;
 pub use link::{LinkModel, LinkSet, Participation, RoundVerdict};
 pub use transport::{InProc, JobOut, Threaded, Transport, TransportKind,
                     WorkerJob};
+
+use crate::coordinator::pool::ShardExec;
 
 /// Cumulative communication counters + the event clock for one run.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -59,8 +63,10 @@ pub struct CommStats {
     /// simulated transmission time): transmitted and charged, but their
     /// payload never reaches the server
     pub lost_uploads: u64,
-    /// per-worker cumulative simulated upload seconds (stragglers show
-    /// up as outliers here); sized by [`CommStats::for_workers`]
+    /// per-worker cumulative simulated seconds from round start to
+    /// upload arrival — device compute + transmission — so both slow
+    /// links and slow devices show up as outliers here; sized by
+    /// [`CommStats::for_workers`]
     pub worker_upload_s: Vec<f64>,
     /// per-worker upload counts
     pub worker_uploads: Vec<u64>,
@@ -107,7 +113,9 @@ impl CommStats {
 }
 
 /// One link's cost model: per-message setup latency + bandwidth term,
-/// with an uplink that is `asymmetry`x slower than the downlink.
+/// with an uplink that is `asymmetry`x slower than the downlink, plus
+/// the base per-round device compute time (scaled per worker by
+/// [`LinkModel::compute_mult`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostModel {
     /// per-message latency, seconds
@@ -116,6 +124,11 @@ pub struct CostModel {
     pub down_bw: f64,
     /// uplink slowdown factor (>= 1; cellular uplinks are slower)
     pub asymmetry: f64,
+    /// base device compute seconds per worker round (a nominal device's
+    /// local gradient work; `[train.cost_model] compute_s`). Default 0:
+    /// the event clock prices communication only, bit-identical to the
+    /// pre-compute model.
+    pub compute_s: f64,
 }
 
 impl Default for CostModel {
@@ -125,6 +138,7 @@ impl Default for CostModel {
             latency_s: 0.02,
             down_bw: 12.5e6,
             asymmetry: 10.0,
+            compute_s: 0.0,
         }
     }
 }
@@ -151,6 +165,7 @@ impl CostModel {
             latency_s: 0.0,
             down_bw: f64::INFINITY,
             asymmetry: 1.0,
+            compute_s: 0.0,
         }
     }
 }
@@ -166,11 +181,15 @@ impl CostModel {
 pub struct CommCfg {
     pub transport: TransportKind,
     /// shard the server's parameter state (theta/h/vhat/aggregate) into
-    /// this many contiguous ranges, folded and updated on scoped threads
+    /// this many contiguous ranges, folded and updated per shard
     /// (1 = sequential reference, 0 = one shard per available core).
     /// Pure execution strategy: results are bit-identical for every
     /// value, so this knob never appears in golden comparisons.
     pub server_shards: usize,
+    /// how multi-shard server rounds execute: the persistent shard pool
+    /// (default) or per-round scoped threads. Pure execution strategy,
+    /// bit-identical either way (`[comm] shard_exec` / `--shard-exec`).
+    pub shard_exec: ShardExec,
     /// semi-sync quorum K: the server proceeds after the fastest K
     /// uploads of a round; 0 = wait for everyone (fully synchronous).
     /// Applies to server-centric methods; model-averaging methods need
@@ -185,6 +204,10 @@ pub struct CommCfg {
     pub bw_mult: Vec<f64>,
     /// per-worker uplink-asymmetry multipliers, cycled
     pub asymmetry_mult: Vec<f64>,
+    /// per-worker device compute multipliers, cycled — scale the base
+    /// [`CostModel::compute_s`] so the event clock prices slow devices
+    /// as well as slow links (inert while `compute_s = 0`)
+    pub compute_mult: Vec<f64>,
 }
 
 impl Default for CommCfg {
@@ -192,12 +215,14 @@ impl Default for CommCfg {
         CommCfg {
             transport: TransportKind::default(),
             server_shards: 1,
+            shard_exec: ShardExec::default(),
             semi_sync_k: 0,
             jitter_sigma: 0.0,
             jitter_seed: 0,
             latency_mult: Vec::new(),
             bw_mult: Vec::new(),
             asymmetry_mult: Vec::new(),
+            compute_mult: Vec::new(),
         }
     }
 }
@@ -225,6 +250,7 @@ impl CommCfg {
             ("latency_mult", &self.latency_mult),
             ("bw_mult", &self.bw_mult),
             ("asymmetry_mult", &self.asymmetry_mult),
+            ("compute_mult", &self.compute_mult),
         ];
         for (key, v) in mults {
             for &x in v {
@@ -265,8 +291,10 @@ impl CommCfg {
                     down_bw: base.down_bw * mult(&self.bw_mult, w),
                     asymmetry: base.asymmetry
                         * mult(&self.asymmetry_mult, w),
+                    compute_s: base.compute_s,
                 },
                 jitter_sigma: self.jitter_sigma,
+                compute_mult: mult(&self.compute_mult, w),
             })
             .collect();
         LinkSet::new(links, self.jitter_seed)
@@ -280,6 +308,7 @@ impl CommCfg {
             && self.latency_mult.is_empty()
             && self.bw_mult.is_empty()
             && self.asymmetry_mult.is_empty()
+            && self.compute_mult.is_empty()
     }
 }
 
@@ -352,6 +381,7 @@ mod tests {
             latency_s: 0.01,
             down_bw: 1000.0,
             asymmetry: 10.0,
+            compute_s: 0.0,
         };
         let up = m.upload_time_s(1000);
         let down = m.download_time_s(1000);
@@ -365,6 +395,7 @@ mod tests {
             latency_s: 0.5,
             down_bw: 0.0, // pathological link: bandwidth term would be 0/0
             asymmetry: 2.0,
+            compute_s: 0.0,
         };
         assert_eq!(m.upload_time_s(0), 0.5);
         assert_eq!(m.download_time_s(0), 0.5);
@@ -408,12 +439,14 @@ mod tests {
     fn comm_cfg_builds_heterogeneous_links() {
         let cfg = CommCfg {
             latency_mult: vec![1.0, 2.0],
+            compute_mult: vec![1.0, 1.0, 4.0],
             ..Default::default()
         };
         let base = CostModel {
             latency_s: 0.1,
             down_bw: f64::INFINITY,
             asymmetry: 1.0,
+            compute_s: 0.25,
         };
         let links = cfg.build_links(5, &base);
         assert_eq!(links.len(), 5);
@@ -422,8 +455,16 @@ mod tests {
         assert_eq!(links.link(1).cost.latency_s, 0.2);
         assert_eq!(links.link(2).cost.latency_s, 0.1);
         assert_eq!(links.link(3).cost.latency_s, 0.2);
+        // compute multipliers cycle too: 1, 1, 4, 1, 1
+        assert_eq!(links.compute_time_s(0), 0.25);
+        assert_eq!(links.compute_time_s(2), 1.0);
+        assert_eq!(links.compute_time_s(3), 0.25);
         assert!(!cfg.is_uniform_sync());
         assert!(CommCfg::default().is_uniform_sync());
+        // a compute-skewed config is not golden-comparable either
+        let dev = CommCfg { compute_mult: vec![1.0, 9.0],
+                            ..Default::default() };
+        assert!(!dev.is_uniform_sync());
     }
 
     #[test]
@@ -467,6 +508,8 @@ mod tests {
             CommCfg { latency_mult: vec![1.0, -1.0],
                       ..Default::default() },
             CommCfg { asymmetry_mult: vec![f64::NAN],
+                      ..Default::default() },
+            CommCfg { compute_mult: vec![-2.0],
                       ..Default::default() },
         ] {
             assert!(bad.validate().is_err(), "{bad:?}");

@@ -30,6 +30,7 @@ use std::thread::JoinHandle;
 
 use crate::coordinator::{FromWorker, ToWorker};
 use crate::runtime::Compute;
+use crate::util::panic_message;
 
 /// Opaque outcome of one worker job; the algorithm that built the job
 /// downcasts it back in `absorb_step`.
@@ -74,18 +75,6 @@ pub trait Transport {
     fn execute(&mut self, jobs: Vec<(usize, WorkerJob)>,
                compute: &mut dyn Compute)
                -> anyhow::Result<Vec<(usize, JobOut)>>;
-}
-
-/// Best-effort rendering of a panic payload (worker-thread jobs turn
-/// panics into error completions instead of deadlocking the round).
-fn panic_message(panic: &(dyn Any + Send)) -> &str {
-    if let Some(s) = panic.downcast_ref::<&'static str>() {
-        s
-    } else if let Some(s) = panic.downcast_ref::<String>() {
-        s
-    } else {
-        "non-string panic payload"
-    }
 }
 
 /// Sequential in-process execution on the caller's backend.

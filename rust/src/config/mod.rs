@@ -280,9 +280,9 @@ pub fn preset(name: &str) -> anyhow::Result<ExpConfig> {
 }
 
 /// Apply the engine's CLI knobs — `--transport`, `--server-shards`,
-/// `--semi-sync-k`, `--jitter-sigma`, `--jitter-seed` — shared by
-/// `cada train` and the `cargo bench fig*` drivers so the two entry
-/// points cannot diverge.
+/// `--shard-exec`, `--semi-sync-k`, `--jitter-sigma`, `--jitter-seed` —
+/// shared by `cada train` and the `cargo bench fig*` drivers so the two
+/// entry points cannot diverge.
 pub fn apply_comm_cli_overrides(comm: &mut CommCfg,
                                 args: &crate::cli::Args)
                                 -> anyhow::Result<()> {
@@ -291,6 +291,9 @@ pub fn apply_comm_cli_overrides(comm: &mut CommCfg,
     }
     comm.server_shards =
         args.usize_or("server-shards", comm.server_shards)?;
+    if let Some(e) = args.str_opt("shard-exec") {
+        comm.shard_exec = crate::coordinator::pool::ShardExec::parse(e)?;
+    }
     comm.semi_sync_k = args.usize_or("semi-sync-k", comm.semi_sync_k)?;
     comm.jitter_sigma = args.f64_or("jitter-sigma", comm.jitter_sigma)?;
     comm.jitter_seed = args.u64_or("jitter-seed", comm.jitter_seed)?;
@@ -465,7 +468,8 @@ mod tests {
     fn comm_cli_overrides_apply() {
         let mut comm = crate::comm::CommCfg::default();
         let args = crate::cli::Args::parse(
-            ["--server-shards", "8", "--semi-sync-k", "3"]
+            ["--server-shards", "8", "--semi-sync-k", "3",
+             "--shard-exec", "scoped"]
                 .iter()
                 .map(|s| s.to_string()),
         )
@@ -473,6 +477,15 @@ mod tests {
         apply_comm_cli_overrides(&mut comm, &args).unwrap();
         assert_eq!(comm.server_shards, 8);
         assert_eq!(comm.semi_sync_k, 3);
+        assert_eq!(comm.shard_exec,
+                   crate::coordinator::pool::ShardExec::Scoped);
+        // a typo'd exec mode is rejected, not silently defaulted
+        let mut comm = crate::comm::CommCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--shard-exec", "scooped"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(apply_comm_cli_overrides(&mut comm, &args).is_err());
         // validation still runs: an absurd shard count is rejected
         let mut comm = crate::comm::CommCfg::default();
         let args = crate::cli::Args::parse(

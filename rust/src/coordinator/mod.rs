@@ -17,6 +17,11 @@
 //! * [`shard`]    — the sharding substrate: block-aligned [`shard::ShardLayout`]
 //!                  range partitions, the double-buffered broadcast
 //!                  [`shard::SnapshotBuffers`], and per-shard timing stats.
+//! * [`pool`]     — the persistent shard pool: one parked thread per
+//!                  non-empty shard, spawned once per run, executing the
+//!                  server's fold+step rounds spawn-free (the
+//!                  [`pool::ShardExec`] knob selects it vs the per-round
+//!                  scoped-thread reference; both bit-identical).
 //! * [`ToWorker`] / [`FromWorker`] — the mailbox messages the
 //!   [`Threaded`](crate::comm::Threaded) transport moves between the
 //!   server thread and the persistent worker threads.
@@ -28,6 +33,7 @@
 //! a [`Transport`](crate::comm::Transport).
 
 pub mod history;
+pub mod pool;
 pub mod rules;
 pub mod server;
 pub mod shard;

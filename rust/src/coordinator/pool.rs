@@ -1,0 +1,449 @@
+//! Persistent shard pool: the spawn-free execution engine of the
+//! sharded server round.
+//!
+//! PR 3's scoped threads spawned and joined one OS thread per shard per
+//! round. The spawn+join pair costs tens of microseconds, so shard
+//! counts > 1 only paid off on ≥ 1M-parameter ranges and mid-sized
+//! specs were locked to `server_shards = 1`. Here the threads are
+//! spawned ONCE (lazily, on the first multi-shard round of a
+//! [`ServerState`](super::server::ServerState)), each permanently owns
+//! its [`ShardLayout`] range, and between rounds they park on channel
+//! mailboxes — exactly the persistent-worker design of the `Threaded`
+//! transport in [`crate::comm::transport`]. A round is then two channel
+//! hops per shard instead of a spawn+join, and the hot path allocates
+//! nothing parameter-sized.
+//!
+//! Determinism: the pool runs the same
+//! [`ShardTask`](super::server::ShardTask) code over the same
+//! block-aligned ranges as the scoped path and the 1-shard inline
+//! reference — worker order inside each shard and the fixed
+//! 1024-element step-norm blocks are untouched — so all three execution
+//! modes are bit-identical for every shard count, on every transport
+//! (enforced by `tests/golden_parity.rs` and
+//! `tests/properties.rs::prop_server_shards_bit_identical_to_one_shard`).
+//!
+//! # Safety
+//!
+//! The shard threads write through raw pointers into the server's flat
+//! vectors. This is sound because [`ShardPool::run_round`]:
+//!
+//! 1. holds exclusive (`&mut`) borrows of every vector for the whole
+//!    call, and never touches them itself between dispatch and the last
+//!    completion;
+//! 2. blocks until EVERY dispatched shard reports back before
+//!    returning, so no thread can outlive the borrows it writes through
+//!    (a panicking task still reports, via `catch_unwind`);
+//! 3. hands each thread a disjoint range — [`ShardLayout`] ranges
+//!    partition `0..p` exactly (property-tested), so two threads never
+//!    alias.
+//!
+//! All `unsafe` in this crate lives in this file's two
+//! `slice::from_raw_parts*` reconstructions.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::server::{ShardTask, StepKernel};
+use super::shard::ShardLayout;
+use crate::util::panic_message;
+
+/// How the sharded server state executes its per-round fold+step pass
+/// (the `[comm] shard_exec` knob / `--shard-exec`). A pure execution
+/// strategy: both modes are bit-identical to the 1-shard reference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardExec {
+    /// Persistent shard pool: threads spawned once per run, parked on
+    /// mailboxes between rounds (the default — profitable from
+    /// mid-sized parameter ranges, ~64k, upward).
+    #[default]
+    Pool,
+    /// One scoped spawn+join per shard per round (the PR 3 path, kept
+    /// as the pool's correctness + perf reference; only amortised on
+    /// ≥ 1M-parameter ranges).
+    Scoped,
+}
+
+impl ShardExec {
+    pub fn parse(s: &str) -> anyhow::Result<ShardExec> {
+        match s {
+            "pool" => Ok(ShardExec::Pool),
+            "scoped" => Ok(ShardExec::Scoped),
+            other => anyhow::bail!(
+                "unknown shard_exec '{other}' (have: pool, scoped)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardExec::Pool => "pool",
+            ShardExec::Scoped => "scoped",
+        }
+    }
+}
+
+/// One round's borrowed view of the full server state, handed to
+/// [`ShardPool::run_round`]; shard threads carve their own fixed range
+/// out of it.
+pub(crate) struct PoolRound<'a> {
+    pub(crate) theta: &'a mut [f32],
+    pub(crate) h: &'a mut [f32],
+    pub(crate) vhat: &'a mut [f32],
+    pub(crate) agg: &'a mut [f32],
+    pub(crate) prev: &'a mut [f32],
+    pub(crate) blocks: &'a mut [f64],
+    /// full-length innovation vectors, in fold (upload) order
+    pub(crate) deltas: &'a [&'a [f32]],
+    pub(crate) inv_m: f32,
+    /// `None` folds only (artifact path applies the update afterwards)
+    pub(crate) kernel: Option<StepKernel>,
+}
+
+/// Raw (pointer, len) image of [`PoolRound`], sent by value to every
+/// shard thread each round. See the module-level safety argument.
+#[derive(Clone, Copy)]
+struct RoundRaw {
+    theta: *mut f32,
+    h: *mut f32,
+    vhat: *mut f32,
+    agg: *mut f32,
+    prev: *mut f32,
+    blocks: *mut f64,
+    /// base pointers + lens of the round's full-length delta slices
+    deltas: *const (*const f32, usize),
+    n_deltas: usize,
+    inv_m: f32,
+    kernel: Option<StepKernel>,
+}
+
+// SAFETY: the pointers target disjoint-per-thread ranges of buffers the
+// dispatching `run_round` call exclusively borrows until every thread
+// reports completion (see the module docs).
+unsafe impl Send for RoundRaw {}
+
+enum ToShard {
+    Round(RoundRaw),
+    Shutdown,
+}
+
+struct FromShard {
+    s: usize,
+    /// wall seconds the shard spent, or a rendered panic payload
+    outcome: Result<f64, String>,
+}
+
+/// The persistent pool: one parked thread per non-empty shard, each
+/// owning its element + block range for the life of the pool.
+pub struct ShardPool {
+    /// `(shard id, mailbox)` for every thread-backed shard
+    mailboxes: Vec<(usize, mpsc::Sender<ToShard>)>,
+    results: mpsc::Receiver<FromShard>,
+    handles: Vec<JoinHandle<()>>,
+    /// element / reduction-block counts the spawn-time ranges index
+    /// into (every round's buffers must match — safety invariant)
+    p: usize,
+    nblocks: usize,
+}
+
+impl ShardPool {
+    /// Spawn one thread per NON-EMPTY shard of `layout` (surplus shards
+    /// own no elements and would only burn a parked thread). Panics on
+    /// OS thread-spawn failure — resource exhaustion at `<= 1024`
+    /// validated shards is not a recoverable configuration error.
+    pub fn spawn(layout: &ShardLayout) -> ShardPool {
+        let (res_tx, res_rx) = mpsc::channel::<FromShard>();
+        let mut mailboxes = Vec::new();
+        let mut handles = Vec::new();
+        for s in 0..layout.num_shards() {
+            let range = layout.range(s);
+            if range.is_empty() {
+                continue;
+            }
+            let block_range = layout.block_range(s);
+            let (tx, rx) = mpsc::channel::<ToShard>();
+            let out = res_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cada-shard-{s}"))
+                .spawn(move || {
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            ToShard::Round(raw) => {
+                                let outcome = std::panic::catch_unwind(
+                                    AssertUnwindSafe(|| {
+                                        run_shard(s, &range, &block_range,
+                                                  raw)
+                                    }))
+                                .map_err(|panic| {
+                                    panic_message(panic.as_ref())
+                                        .to_string()
+                                });
+                                if out.send(FromShard { s, outcome })
+                                    .is_err()
+                                {
+                                    break; // pool side is gone
+                                }
+                            }
+                            ToShard::Shutdown => break,
+                        }
+                    }
+                })
+                .unwrap_or_else(|e| {
+                    panic!("spawning shard-pool thread {s}: {e}")
+                });
+            mailboxes.push((s, tx));
+            handles.push(handle);
+        }
+        // drop the spawn-side result sender: `recv` must error (instead
+        // of parking forever) if every thread is somehow gone
+        drop(res_tx);
+        ShardPool {
+            mailboxes,
+            results: res_rx,
+            handles,
+            p: layout.p(),
+            nblocks: layout.num_blocks(),
+        }
+    }
+
+    /// Number of (non-empty, thread-backed) shards.
+    pub fn workers(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    /// Execute one fold(+step) round across the pool and block until
+    /// every shard is done. Returns `(shard, wall_seconds)` per shard,
+    /// in completion order. Propagates any shard panic AFTER all other
+    /// shards settled, so a failed round never leaves stale completions
+    /// behind for the next one.
+    pub(crate) fn run_round(&mut self, round: PoolRound<'_>)
+                            -> Vec<(usize, f64)> {
+        // the threads' spawn-time ranges index into these buffers: a
+        // length mismatch would void the safety argument, so check it
+        // here (cheap — once per round) rather than trust the caller
+        assert!(round.theta.len() == self.p
+                    && round.h.len() == self.p
+                    && round.vhat.len() == self.p
+                    && round.agg.len() == self.p
+                    && round.prev.len() == self.p
+                    && round.blocks.len() == self.nblocks,
+                "pool round buffers disagree with the spawn layout");
+        // raw images of the round's delta slices; lives until every
+        // completion arrived, i.e. strictly longer than any reader
+        let delta_raw: Vec<(*const f32, usize)> = round
+            .deltas
+            .iter()
+            .map(|d| (d.as_ptr(), d.len()))
+            .collect();
+        let raw = RoundRaw {
+            theta: round.theta.as_mut_ptr(),
+            h: round.h.as_mut_ptr(),
+            vhat: round.vhat.as_mut_ptr(),
+            agg: round.agg.as_mut_ptr(),
+            prev: round.prev.as_mut_ptr(),
+            blocks: round.blocks.as_mut_ptr(),
+            deltas: delta_raw.as_ptr(),
+            n_deltas: delta_raw.len(),
+            inv_m: round.inv_m,
+            kernel: round.kernel,
+        };
+        let mut dispatched = 0usize;
+        let mut dead: Option<usize> = None;
+        for (s, tx) in &self.mailboxes {
+            if tx.send(ToShard::Round(raw)).is_err() {
+                // that thread already panicked out of an earlier round.
+                // Stop dispatching, but KEEP the round barrier over what
+                // was already sent: unwinding right here would release
+                // the `&mut` borrows (and free `delta_raw`) while the
+                // dispatched shards still write through the raw
+                // pointers — the exact UB the safety argument forbids.
+                dead = Some(*s);
+                break;
+            }
+            dispatched += 1;
+        }
+        let mut timings = Vec::with_capacity(dispatched);
+        let mut panicked: Option<String> = None;
+        for _ in 0..dispatched {
+            match self.results.recv() {
+                Ok(FromShard { s, outcome }) => match outcome {
+                    Ok(dt) => timings.push((s, dt)),
+                    Err(msg) => panicked = Some(format!(
+                        "shard-pool thread {s} panicked: {msg}")),
+                },
+                Err(_) => {
+                    // recv only errors once every thread has exited —
+                    // nothing holds the round's pointers any more
+                    panicked = Some(
+                        "shard-pool threads exited before completing \
+                         the round"
+                            .to_string(),
+                    );
+                    break;
+                }
+            }
+        }
+        if let Some(s) = dead {
+            panic!("shard-pool thread {s} is gone");
+        }
+        if let Some(msg) = panicked {
+            panic!("{msg}");
+        }
+        timings
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for (_, tx) in &self.mailboxes {
+            let _ = tx.send(ToShard::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Reconstruct shard `s`'s disjoint slices from the round image and run
+/// the shared [`ShardTask`] over them. Runs on the shard's own thread.
+fn run_shard(s: usize, range: &std::ops::Range<usize>,
+             block_range: &std::ops::Range<usize>, raw: RoundRaw) -> f64 {
+    let len = range.len();
+    let nb = block_range.len();
+    // SAFETY: `run_round` exclusively borrows the underlying vectors and
+    // blocks until this function's completion message is received;
+    // `range` / `block_range` come from the same ShardLayout for every
+    // thread, and layout ranges partition 0..p (resp. 0..nblocks)
+    // disjointly — so each `from_raw_parts_mut` slice is uniquely owned
+    // by this thread for the duration of the call. The delta images are
+    // read-only and outlive the call the same way.
+    unsafe {
+        let task = ShardTask {
+            s,
+            range: range.clone(),
+            theta: std::slice::from_raw_parts_mut(
+                raw.theta.add(range.start), len),
+            h: std::slice::from_raw_parts_mut(raw.h.add(range.start), len),
+            vhat: std::slice::from_raw_parts_mut(
+                raw.vhat.add(range.start), len),
+            agg: std::slice::from_raw_parts_mut(
+                raw.agg.add(range.start), len),
+            prev: std::slice::from_raw_parts_mut(
+                raw.prev.add(range.start), len),
+            blocks: std::slice::from_raw_parts_mut(
+                raw.blocks.add(block_range.start), nb),
+        };
+        let delta_raw =
+            std::slice::from_raw_parts(raw.deltas, raw.n_deltas);
+        // lazily reconstruct each delta slice as the fold consumes it:
+        // no per-round collection on the hot path
+        let deltas = delta_raw.iter().map(|&(ptr, len)|
+            // SAFETY: same argument as above — read-only images held
+            // alive by `run_round` until this shard reports completion
+            unsafe { std::slice::from_raw_parts(ptr, len) });
+        match raw.kernel {
+            Some(kernel) => task.run(deltas, raw.inv_m, kernel),
+            None => task.fold_only(deltas, raw.inv_m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_exec_parses() {
+        assert_eq!(ShardExec::parse("pool").unwrap(), ShardExec::Pool);
+        assert_eq!(ShardExec::parse("scoped").unwrap(), ShardExec::Scoped);
+        assert!(ShardExec::parse("fork-per-round").is_err());
+        assert_eq!(ShardExec::Pool.name(), "pool");
+        assert_eq!(ShardExec::Scoped.name(), "scoped");
+        assert_eq!(ShardExec::default(), ShardExec::Pool);
+    }
+
+    #[test]
+    fn pool_spawns_only_non_empty_shards() {
+        // 3000 params = 3 blocks: shard 4 of 4 owns nothing
+        let layout = ShardLayout::new(3000, 4);
+        let pool = ShardPool::spawn(&layout);
+        assert_eq!(pool.workers(), 3);
+        // p < one block: everything lives in shard 0
+        let tiny = ShardPool::spawn(&ShardLayout::new(100, 8));
+        assert_eq!(tiny.workers(), 1);
+    }
+
+    #[test]
+    fn pool_round_folds_and_times_every_shard() {
+        // a pure fold round (kernel = None) has an exact expected
+        // result: agg += inv_m * (d0 + d1), elementwise, per shard
+        let p = 4096 + 200;
+        let layout = ShardLayout::new(p, 3);
+        let mut pool = ShardPool::spawn(&layout);
+        let mut theta = vec![0.0f32; p];
+        let mut h = vec![0.0f32; p];
+        let mut vhat = vec![0.0f32; p];
+        let mut agg = vec![1.0f32; p];
+        let mut prev = vec![0.0f32; p];
+        let mut blocks = vec![0.0f64; layout.num_blocks()];
+        let d0: Vec<f32> = (0..p).map(|i| i as f32).collect();
+        let d1: Vec<f32> = (0..p).map(|i| -2.0 * i as f32).collect();
+        for round in 0..3 {
+            let deltas: Vec<&[f32]> = vec![&d0, &d1];
+            let timings = pool.run_round(PoolRound {
+                theta: &mut theta,
+                h: &mut h,
+                vhat: &mut vhat,
+                agg: &mut agg,
+                prev: &mut prev,
+                blocks: &mut blocks,
+                deltas: &deltas,
+                inv_m: 0.5,
+                kernel: None,
+            });
+            assert_eq!(timings.len(), 3, "round {round}");
+            let mut shards: Vec<usize> =
+                timings.iter().map(|&(s, _)| s).collect();
+            shards.sort_unstable();
+            assert_eq!(shards, vec![0, 1, 2]);
+        }
+        // 3 rounds of += 0.5*(i - 2i) = -0.5*i each
+        for i in 0..p {
+            let want = 1.0 + 3.0 * (-0.5 * i as f32);
+            assert_eq!(agg[i], want, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn pool_propagates_shard_panics_without_deadlock() {
+        // an out-of-range delta makes exactly the LAST shard's
+        // `&d[range]` slicing panic; run_round must drain the healthy
+        // completions and re-panic with the shard's message
+        let p = 2048;
+        let layout = ShardLayout::new(p, 2);
+        let mut pool = ShardPool::spawn(&layout);
+        let mut theta = vec![0.0f32; p];
+        let mut h = vec![0.0f32; p];
+        let mut vhat = vec![0.0f32; p];
+        let mut agg = vec![0.0f32; p];
+        let mut prev = vec![0.0f32; p];
+        let mut blocks = vec![0.0f64; layout.num_blocks()];
+        let short = vec![0.0f32; 1024]; // covers shard 0 only
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let deltas: Vec<&[f32]> = vec![&short];
+            pool.run_round(PoolRound {
+                theta: &mut theta,
+                h: &mut h,
+                vhat: &mut vhat,
+                agg: &mut agg,
+                prev: &mut prev,
+                blocks: &mut blocks,
+                deltas: &deltas,
+                inv_m: 1.0,
+                kernel: None,
+            });
+        }));
+        let payload = result.unwrap_err();
+        let msg = panic_message(payload.as_ref());
+        assert!(msg.contains("shard-pool thread 1 panicked"), "{msg}");
+    }
+}

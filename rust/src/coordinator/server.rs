@@ -4,10 +4,10 @@
 //!
 //! All server-side work is elementwise (innovation folds are `axpy`, the
 //! AMSGrad/SGD steps touch each coordinate independently), so running it
-//! per-shard on a scoped thread pool is bit-identical to the sequential
-//! path: within each shard the innovations fold in the same worker
-//! order, and each element sees the exact same float ops whichever shard
-//! owns it. The squared step norm feeding the drift history is the one
+//! per-shard — on the persistent [`ShardPool`] (default) or on per-round
+//! scoped threads — is bit-identical to the sequential path: within each
+//! shard the innovations fold in the same worker order, and each element
+//! sees the exact same float ops whichever shard owns it. The squared step norm feeding the drift history is the one
 //! reduction; it is computed per [`SHARD_BLOCK`]-sized block with the
 //! block partials summed in global block order, so the reduction tree —
 //! and therefore every bit of the result — is independent of the shard
@@ -17,6 +17,7 @@
 use std::time::Instant;
 
 use crate::config::Schedule;
+use crate::coordinator::pool::{PoolRound, ShardExec, ShardPool};
 use crate::coordinator::shard::{ShardLayout, ShardStats, SHARD_BLOCK};
 use crate::runtime::Compute;
 use crate::tensor;
@@ -50,8 +51,9 @@ impl Optimizer {
 }
 
 /// The round-`k`-resolved update kernel a shard applies to its range.
+/// `pub(crate)` so the persistent [`ShardPool`] ships it to its threads.
 #[derive(Clone, Copy, Debug)]
-enum StepKernel {
+pub(crate) enum StepKernel {
     Amsgrad { alpha: f32, beta1: f32, beta2: f32, eps: f32 },
     Sgd { eta: f32 },
 }
@@ -71,23 +73,31 @@ fn block_norms_into(new: &[f32], old: &[f32], blocks: &mut [f64]) {
 }
 
 /// One shard's slice of every parameter-sized vector, plus its step-norm
-/// blocks; built fresh per round by splitting the flat server vectors.
-struct ShardTask<'a> {
-    s: usize,
-    range: std::ops::Range<usize>,
-    theta: &'a mut [f32],
-    h: &'a mut [f32],
-    vhat: &'a mut [f32],
-    agg: &'a mut [f32],
-    prev: &'a mut [f32],
-    blocks: &'a mut [f64],
+/// blocks; built per round by splitting the flat server vectors —
+/// inline for one shard, on scoped threads, or on the persistent
+/// [`ShardPool`]'s threads (which run this exact same code over the
+/// exact same ranges, so all three execution modes are bit-identical).
+pub(crate) struct ShardTask<'a> {
+    pub(crate) s: usize,
+    pub(crate) range: std::ops::Range<usize>,
+    pub(crate) theta: &'a mut [f32],
+    pub(crate) h: &'a mut [f32],
+    pub(crate) vhat: &'a mut [f32],
+    pub(crate) agg: &'a mut [f32],
+    pub(crate) prev: &'a mut [f32],
+    pub(crate) blocks: &'a mut [f64],
 }
 
 impl ShardTask<'_> {
     /// Fold the round's innovations only (in upload order) — the
     /// artifact path, whose fused update runs over the whole vector
-    /// afterwards. Returns the wall seconds spent.
-    fn fold_only(self, deltas: &[&[f32]], inv_m: f32) -> f64 {
+    /// afterwards. Returns the wall seconds spent. Deltas arrive as an
+    /// iterator of full-length slices so the pool threads can feed
+    /// their raw-pointer reconstructions without collecting a per-round
+    /// `Vec`.
+    pub(crate) fn fold_only<'d>(self,
+                                deltas: impl IntoIterator<Item = &'d [f32]>,
+                                inv_m: f32) -> f64 {
         let t0 = Instant::now();
         for d in deltas {
             tensor::axpy(self.agg, inv_m, &d[self.range.clone()]);
@@ -100,7 +110,9 @@ impl ShardTask<'_> {
     /// wall seconds spent (per-shard timing breakdown). The 1-shard
     /// reference path runs this exact code over `0..p`, so sharded and
     /// sequential execution cannot drift apart.
-    fn run(self, deltas: &[&[f32]], inv_m: f32, kernel: StepKernel) -> f64 {
+    pub(crate) fn run<'d>(self,
+                          deltas: impl IntoIterator<Item = &'d [f32]>,
+                          inv_m: f32, kernel: StepKernel) -> f64 {
         let t0 = Instant::now();
         self.prev.copy_from_slice(self.theta);
         for d in deltas {
@@ -147,6 +159,11 @@ pub struct ServerState {
     block_norms: Vec<f64>,
     /// cumulative per-shard fold+step seconds (telemetry)
     stats: ShardStats,
+    /// how multi-shard rounds execute (persistent pool vs scoped)
+    exec: ShardExec,
+    /// the persistent shard pool, spawned lazily on the first
+    /// multi-shard round and reused (parked) for the rest of the run
+    pool: Option<ShardPool>,
 }
 
 impl ServerState {
@@ -155,10 +172,21 @@ impl ServerState {
     }
 
     /// Shard `theta`/`h`/`vhat`/`grad_agg` into `shards` contiguous
-    /// ranges; folds and updates run per-shard on scoped threads when
-    /// `shards > 1` (bit-identical to `shards = 1`).
+    /// ranges; folds and updates run per-shard on the default
+    /// [`ShardExec`] (the persistent pool) when `shards > 1` —
+    /// bit-identical to `shards = 1`.
     pub fn new_sharded(init_theta: Vec<f32>, m: usize, opt: Optimizer,
                        shards: usize) -> Self {
+        Self::new_sharded_with(init_theta, m, opt, shards,
+                               ShardExec::default())
+    }
+
+    /// [`ServerState::new_sharded`] with an explicit execution mode:
+    /// `Pool` parks one persistent thread per non-empty shard across
+    /// rounds, `Scoped` spawns+joins per round (the PR 3 reference).
+    /// Both are bit-identical to each other and to one shard.
+    pub fn new_sharded_with(init_theta: Vec<f32>, m: usize, opt: Optimizer,
+                            shards: usize, exec: ShardExec) -> Self {
         let p = init_theta.len();
         let layout = ShardLayout::new(p, shards);
         let n = layout.num_shards();
@@ -175,11 +203,18 @@ impl ServerState {
             block_norms: vec![0.0; nblocks],
             stats: ShardStats::for_shards(n),
             layout,
+            exec,
+            pool: None,
         }
     }
 
     pub fn layout(&self) -> &ShardLayout {
         &self.layout
+    }
+
+    /// The execution mode multi-shard rounds run under.
+    pub fn shard_exec(&self) -> ShardExec {
+        self.exec
     }
 
     /// Per-shard version counters (see [`ServerState::layout`]); the
@@ -211,8 +246,10 @@ impl ServerState {
     /// One server round over the sharded state: fold `deltas` (in upload
     /// order) into the aggregate, apply the optimizer step for iteration
     /// `k`, and return ||theta^{k+1} - theta^k||^2 for the drift history.
-    /// Runs per-shard on scoped threads when the layout has more than
-    /// one (non-empty) shard; bit-identical to the sequential path.
+    /// Runs per-shard when the layout has more than one shard — on the
+    /// persistent pool or per-round scoped threads per the configured
+    /// [`ShardExec`] — and is bit-identical to the sequential path
+    /// either way.
     pub fn fold_and_step(&mut self, k: u64, deltas: &[&[f32]],
                          compute: &mut dyn Compute) -> anyhow::Result<f64> {
         let inv_m = 1.0 / self.m as f32;
@@ -267,26 +304,26 @@ impl ServerState {
     }
 
     /// Split the state into per-shard tasks and run them — inline for a
-    /// single shard, on scoped threads otherwise. `kernel = None` folds
-    /// only (artifact path applies the update afterwards).
-    ///
-    /// Threads are scoped per round (spawned and joined inside this
-    /// call): the tasks borrow disjoint slices of the state, so no
-    /// `unsafe` and no ownership restructuring is needed, at the cost of
-    /// one spawn+join (~tens of µs) per shard per round. That overhead
-    /// only amortises on big ranges — which is exactly when sharding
-    /// helps at all — so the default stays `server_shards = 1` and the
-    /// micro_hotpath bench pins the crossover at ≥ 1M parameters. A
-    /// persistent shard pool (threads owning their range across rounds,
-    /// like the `Threaded` transport's workers) is the follow-up if
-    /// mid-sized specs ever want shard counts > 1.
+    /// single shard, otherwise per [`ShardExec`]: on the persistent
+    /// shard pool (the default — threads spawned once on the first
+    /// multi-shard round, parked on mailboxes between rounds, two
+    /// channel hops per shard per round) or on per-round scoped threads
+    /// (the PR 3 reference; one spawn+join of ~tens of µs per shard per
+    /// round, only amortised on ≥ 1M-parameter ranges). `kernel = None`
+    /// folds only (artifact path applies the update afterwards). All
+    /// three paths run the same [`ShardTask`] code over the same
+    /// block-aligned ranges, so they are bit-identical.
     fn run_shards(&mut self, deltas: &[&[f32]], inv_m: f32,
                   kernel: Option<StepKernel>) {
         let n = self.layout.num_shards();
-        if n == 1 {
+        if n == 1 || self.layout.num_blocks() <= 1 {
             // the reference path is literally one task spanning 0..p run
             // inline: sharded execution can never drift from it, because
-            // it IS the same code
+            // it IS the same code. Also taken when p fits one reduction
+            // block — then shard 0 owns 0..p and every other shard is
+            // empty, so dispatching to threads would buy zero
+            // parallelism (e.g. a small spec under `server_shards = 0`
+            // on a many-core box).
             let task = ShardTask {
                 s: 0,
                 range: 0..self.theta.len(),
@@ -298,12 +335,51 @@ impl ServerState {
                 blocks: &mut self.block_norms,
             };
             let dt = match kernel {
-                Some(kernel) => task.run(deltas, inv_m, kernel),
-                None => task.fold_only(deltas, inv_m),
+                Some(kernel) => {
+                    task.run(deltas.iter().copied(), inv_m, kernel)
+                }
+                None => task.fold_only(deltas.iter().copied(), inv_m),
             };
             self.stats.shard_s[0] += dt;
             return;
         }
+        match self.exec {
+            ShardExec::Pool => self.run_shards_pool(deltas, inv_m, kernel),
+            ShardExec::Scoped => {
+                self.run_shards_scoped(deltas, inv_m, kernel)
+            }
+        }
+    }
+
+    /// The spawn-free hot path: dispatch the round to the persistent
+    /// pool (spawning it on first use) and fold the per-shard timings.
+    fn run_shards_pool(&mut self, deltas: &[&[f32]], inv_m: f32,
+                       kernel: Option<StepKernel>) {
+        if self.pool.is_none() {
+            self.pool = Some(ShardPool::spawn(&self.layout));
+        }
+        let pool = self.pool.as_mut().expect("spawned above");
+        let timings = pool.run_round(PoolRound {
+            theta: &mut self.theta,
+            h: &mut self.h,
+            vhat: &mut self.vhat,
+            agg: &mut self.grad_agg,
+            prev: &mut self.prev_theta,
+            blocks: &mut self.block_norms,
+            deltas,
+            inv_m,
+            kernel,
+        });
+        for (s, dt) in timings {
+            self.stats.shard_s[s] += dt;
+        }
+    }
+
+    /// The per-round scoped reference: safe borrow-splitting, one
+    /// spawn+join per shard per round.
+    fn run_shards_scoped(&mut self, deltas: &[&[f32]], inv_m: f32,
+                         kernel: Option<StepKernel>) {
+        let n = self.layout.num_shards();
         let mut tasks: Vec<ShardTask> = Vec::with_capacity(n);
         {
             let mut theta = self.theta.as_mut_slice();
@@ -353,8 +429,12 @@ impl ServerState {
                 .map(|t| {
                     let s = t.s;
                     let handle = scope.spawn(move || match kernel {
-                        Some(kernel) => t.run(deltas, inv_m, kernel),
-                        None => t.fold_only(deltas, inv_m),
+                        Some(kernel) => {
+                            t.run(deltas.iter().copied(), inv_m, kernel)
+                        }
+                        None => {
+                            t.fold_only(deltas.iter().copied(), inv_m)
+                        }
                     });
                     (s, handle)
                 })
@@ -477,9 +557,9 @@ mod tests {
                     .collect()
             })
             .collect();
-        let run = |shards: usize| {
-            let mut server = ServerState::new_sharded(
-                init.clone(), m, amsgrad(0.05), shards);
+        let run = |shards: usize, exec: ShardExec| {
+            let mut server = ServerState::new_sharded_with(
+                init.clone(), m, amsgrad(0.05), shards, exec);
             let mut norms = Vec::new();
             for (k, deltas) in rounds.iter().enumerate() {
                 let refs: Vec<&[f32]> =
@@ -493,14 +573,17 @@ mod tests {
             }
             (server.theta, server.h, server.vhat, server.grad_agg, norms)
         };
-        let reference = run(1);
-        for shards in [2, 3, 4, 8, 64] {
-            let sharded = run(shards);
-            assert_eq!(reference.0, sharded.0, "theta, shards={shards}");
-            assert_eq!(reference.1, sharded.1, "h, shards={shards}");
-            assert_eq!(reference.2, sharded.2, "vhat, shards={shards}");
-            assert_eq!(reference.3, sharded.3, "agg, shards={shards}");
-            assert_eq!(reference.4, sharded.4, "norms, shards={shards}");
+        let reference = run(1, ShardExec::Pool);
+        for exec in [ShardExec::Pool, ShardExec::Scoped] {
+            for shards in [2, 3, 4, 8, 64] {
+                let label = format!("shards={shards} [{}]", exec.name());
+                let sharded = run(shards, exec);
+                assert_eq!(reference.0, sharded.0, "theta, {label}");
+                assert_eq!(reference.1, sharded.1, "h, {label}");
+                assert_eq!(reference.2, sharded.2, "vhat, {label}");
+                assert_eq!(reference.3, sharded.3, "agg, {label}");
+                assert_eq!(reference.4, sharded.4, "norms, {label}");
+            }
         }
     }
 

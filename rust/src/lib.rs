@@ -87,16 +87,38 @@
 //!   parameter state (theta/h/vhat/aggregate and the stale-gradient
 //!   folds) splits into N contiguous block-aligned ranges
 //!   ([`coordinator::shard::ShardLayout`]); innovation folds and the
-//!   AMSGrad/SGD step run per shard on scoped threads, with worker
-//!   order preserved inside each shard and the step-norm reduced per
-//!   fixed-size block — so every shard count is bit-identical to the
-//!   1-shard reference (also golden-enforced). Broadcast views of
+//!   AMSGrad/SGD step run per shard on the persistent
+//!   [`coordinator::pool::ShardPool`] — threads spawned once per run,
+//!   each owning its range, parked on channel mailboxes between rounds,
+//!   so the round hot path is spawn-free and shard counts > 1 pay off
+//!   from mid-sized (~64k-parameter) specs (`shard_exec = "scoped"` /
+//!   `--shard-exec scoped` keeps PR 3's per-round spawn+join as the
+//!   reference). Worker order is preserved inside each shard and the
+//!   step-norm reduced per fixed-size block, so every shard count and
+//!   both execution modes are bit-identical to the 1-shard reference
+//!   (golden-enforced). Broadcast views of
 //!   theta^k (and the CADA1 snapshot) come from double-buffered
 //!   [`coordinator::shard::SnapshotBuffers`]: no per-round full-vector
 //!   clone, only dirtied shard ranges are copied. This is what lets the
 //!   server keep up once the threaded transport parallelises the
 //!   workers, and the layout a future real-network transport will
 //!   partition state over.
+//! * **blocked gradient kernel** — the native backend computes each
+//!   worker batch's gradient as a two-pass blocked kernel: all logits
+//!   of a sample block first ([`tensor::gemv_block`], bit-identical to
+//!   per-sample dots), then one fused exponential per sample for
+//!   sigmoid + softplus ([`runtime::native::sigmoid_softplus`]) and a
+//!   fixed group-of-4 residual fold ([`tensor::ger_acc`]) — on
+//!   backend-owned scratch, so steady-state rounds allocate nothing.
+//!   Pinned against the retained sample-at-a-time reference by the
+//!   comparator tests in [`runtime::native`].
+//! * **device compute time** — `[train.cost_model] compute_s` (base
+//!   per-round device seconds) with per-worker `[comm.links]
+//!   compute_mult` multipliers: an upload's simulated arrival is
+//!   compute + transmission, and fully-sync rounds are floored by the
+//!   slowest device even when its rule skips the upload — so the event
+//!   clock and the semi-sync quorum price slow devices as well as slow
+//!   links (0 = off, bit-identical to the pre-compute model).
 //! * **heterogeneous links** — `[comm.links]` latency/bandwidth/
 //!   asymmetry multipliers, cycled over workers; broadcasts and uploads
 //!   are charged against each worker's own link and the event clock
@@ -135,6 +157,7 @@ pub mod prelude {
                           LinkSet, Participation, TransportKind};
     pub use crate::config::Schedule;
     pub use crate::coordinator::{rules::RuleKind, server::Optimizer};
+    pub use crate::coordinator::pool::{ShardExec, ShardPool};
     pub use crate::coordinator::shard::{ShardLayout, ShardStats,
                                         SnapshotBuffers, SnapshotStats};
     pub use crate::data::{Dataset, DatasetKind, Partition, PartitionScheme};

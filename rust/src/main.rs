@@ -56,6 +56,7 @@ USAGE:
   cada inspect --spec <name> [--artifacts DIR]
   cada bench-check [--baseline FILE] [--current FILE]
                    [--max-regress R] [--summary FILE]
+                   [--update-baseline]
 
 TRAIN OPTIONS:
   --preset NAME       experiment preset (paper figure)
@@ -75,8 +76,11 @@ TRAIN OPTIONS:
   --transport T       worker execution engine: inproc (sequential,
                       default) or threaded (persistent worker threads)
   --server-shards N   shard the server state into N contiguous parameter
-                      ranges updated on scoped threads (default 1;
+                      ranges updated per shard (default 1;
                       0 = one shard per core; bit-identical always)
+  --shard-exec E      multi-shard execution: pool (persistent shard
+                      pool, default) or scoped (per-round spawn+join);
+                      bit-identical either way
   --semi-sync-k K     server proceeds after the fastest K uploads of a
                       round; stragglers fold in stale (0 = wait for all)
   --jitter-sigma S    log-normal upload straggler jitter (0 = off)
@@ -94,6 +98,9 @@ BENCH-CHECK OPTIONS (the CI perf-regression gate):
                       on any bench (default 0.25)
   --summary FILE      also append the markdown delta table here (CI
                       passes $GITHUB_STEP_SUMMARY)
+  --update-baseline   write the current run's medians into the baseline
+                      file (arming its seed rows) instead of gating;
+                      prints the delta table vs the old baseline first
 "#;
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -196,6 +203,7 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
     let current_path = args.str_or("current", "BENCH_engine.json");
     let max_regress = args.f64_or("max-regress", 0.25)?;
     let summary = args.str_opt("summary").map(str::to_string);
+    let update_baseline = args.bool("update-baseline");
     args.reject_unknown()?;
     anyhow::ensure!(
         max_regress >= 0.0 && max_regress.is_finite(),
@@ -207,7 +215,16 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
         cada::util::json::parse(&text)
             .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
     };
-    let base = read(&baseline_path)?;
+    // with --update-baseline a missing/empty baseline is a bootstrap,
+    // not an error: the run's medians become the first armed entries
+    let base = match read(&baseline_path) {
+        Ok(v) => v,
+        Err(e) if update_baseline => {
+            eprintln!("note: starting a fresh baseline ({e})");
+            cada::util::json::Json::Arr(Vec::new())
+        }
+        Err(e) => return Err(e),
+    };
     let cur = read(&current_path)?;
     let deltas = cada::bench::compare_bench_json(&base, &cur)?;
     let table = cada::bench::render_delta_table(&deltas, max_regress);
@@ -220,6 +237,21 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
             .open(&path)
             .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
         f.write_all(table.as_bytes())?;
+    }
+    if update_baseline {
+        // report-only: write the run's medians over the baseline's
+        // entries (arming seed rows) instead of gating against them
+        let (updated, armed) =
+            cada::bench::update_baseline(&base, &cur)?;
+        std::fs::write(&baseline_path,
+                       cada::util::json::render(&updated))
+            .map_err(|e| anyhow::anyhow!(
+                "writing {baseline_path}: {e}"))?;
+        println!(
+            "\nbaseline updated: {armed} bench medians written to \
+             {baseline_path}"
+        );
+        return Ok(());
     }
     let missing = cada::bench::missing_armed(&deltas);
     anyhow::ensure!(

@@ -7,6 +7,20 @@
 //! PJRT overhead on tiny models would dominate (ablated in the
 //! micro_hotpath bench).
 //!
+//! The gradient — the dominant compute of every worker round (two grad
+//! evals per round for CADA1/CADA2) — runs as a two-pass **blocked
+//! kernel** over [`GRAD_BLOCK`]-sample blocks: pass 1 computes the whole
+//! block's logits `z = X·w + b` ([`tensor::gemv_block`], bit-identical
+//! to per-sample dots), pass 2 derives sigmoid AND softplus from **one**
+//! exponential per sample ([`sigmoid_softplus`]) and folds the residuals
+//! into the gradient with a fixed group-of-4 accumulation order
+//! ([`tensor::ger_acc`]). The scratch buffers live on the backend, so a
+//! steady-state round allocates nothing. The pre-blocked sample-at-a-time
+//! path is retained as [`NativeLogReg::loss_grad_scalar`] — the
+//! comparator tests pin the blocked kernel against it (tolerance) and
+//! against an independent reference of the documented accumulation order
+//! (bit-for-bit, PR-3-style).
+//!
 //! Flat layout note: `jax.flatten_util.ravel_pytree` flattens dict keys in
 //! sorted order, so for `{"w": f32[d], "b": f32[]}` the flat vector is
 //! `[b, w_0, ..., w_{d-1}]`, padded with zeros to `p_pad`. This backend
@@ -16,15 +30,41 @@ use super::Compute;
 use crate::data::{Array, Batch};
 use crate::tensor;
 
+/// Samples per block of the blocked gradient kernel. A multiple of
+/// [`tensor::GER_GROUP`], so the gradient's fixed 4-row accumulation
+/// groups fall on the same sample boundaries whatever the block size —
+/// the accumulated bits depend only on the sample order, never on
+/// `GRAD_BLOCK`.
+const GRAD_BLOCK: usize = 64;
+
 /// Numerically stable softplus: ln(1 + e^z).
 #[inline]
 fn softplus(z: f32) -> f32 {
     z.max(0.0) + (-z.abs()).exp().ln_1p()
 }
 
+/// The historical sigmoid (its own exponential); retained for the
+/// sample-at-a-time reference path.
 #[inline]
 fn sigmoid(z: f32) -> f32 {
     1.0 / (1.0 + (-z).exp())
+}
+
+/// Fused logistic pair: (sigmoid(z), softplus(z)) from ONE exponential.
+///
+/// With `t = e^{-|z|}` (the only transcendental):
+/// `softplus(z) = max(z, 0) + ln1p(t)` — exactly the standalone
+/// [`softplus`] — and `sigmoid(z) = 1/(1+t)` for `z >= 0`, `t/(1+t)`
+/// for `z < 0`. For `z >= 0` the sigmoid is bit-identical to the
+/// historical `1/(1+e^{-z})`; for `z < 0` it differs in the last ulps
+/// (same mathematical value, better conditioning), which the comparator
+/// test bounds.
+#[inline]
+pub fn sigmoid_softplus(z: f32) -> (f32, f32) {
+    let t = (-z.abs()).exp();
+    let sp = z.max(0.0) + t.ln_1p();
+    let sig = if z >= 0.0 { 1.0 / (1.0 + t) } else { t / (1.0 + t) };
+    (sig, sp)
 }
 
 /// Binary logistic regression with l2 regularisation, flat layout
@@ -37,13 +77,27 @@ pub struct NativeLogReg {
     pub beta1: f32,
     pub beta2: f32,
     pub eps: f32,
+    /// scratch: one block of logits (blocked gradient kernel; owned by
+    /// the backend so steady-state rounds allocate nothing)
+    z_buf: Vec<f32>,
+    /// scratch: one block of residuals `(sigmoid(z) - y) / n`
+    r_buf: Vec<f32>,
 }
 
 impl NativeLogReg {
     pub fn new(d: usize, p_pad: usize, lam: f32, beta1: f32, beta2: f32,
                eps: f32) -> Self {
         assert!(p_pad >= d + 1);
-        NativeLogReg { d, p_pad, lam, beta1, beta2, eps }
+        NativeLogReg {
+            d,
+            p_pad,
+            lam,
+            beta1,
+            beta2,
+            eps,
+            z_buf: vec![0.0; GRAD_BLOCK],
+            r_buf: vec![0.0; GRAD_BLOCK],
+        }
     }
 
     /// Matches the python spec defaults (lam=1e-5, Adam betas).
@@ -66,9 +120,83 @@ impl NativeLogReg {
         Ok((x, y))
     }
 
-    /// loss + optional gradient accumulation (shared fwd/bwd core).
-    fn loss_grad(&self, theta: &[f32], x: &[f32], y: &[i32],
+    /// loss + optional gradient accumulation (shared fwd/bwd core) — the
+    /// blocked two-pass kernel (see the module docs): per
+    /// [`GRAD_BLOCK`]-sample block, compute all logits first
+    /// ([`tensor::gemv_block`]), then one fused exponential per sample
+    /// ([`sigmoid_softplus`]) and a group-of-4 gradient fold
+    /// ([`tensor::ger_acc`]). Logits, loss and the accuracy count are
+    /// bit-identical to the sample-at-a-time reference
+    /// ([`NativeLogReg::loss_grad_scalar`]); the gradient — the bias
+    /// included, whose residuals go through the fused sigmoid (last-ulp
+    /// different for z < 0) — matches it to accumulation tolerance, and
+    /// its exact bits are pinned by the fixed-order comparator test
+    /// instead.
+    fn loss_grad(&mut self, theta: &[f32], x: &[f32], y: &[i32],
                  mut grad: Option<&mut [f32]>) -> (f32, f32) {
+        let d = self.d;
+        let b = theta[0];
+        let w = &theta[1..1 + d];
+        let n = y.len();
+        let inv_n = 1.0 / n as f32;
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+        let mut loss = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + GRAD_BLOCK).min(n);
+            let nb = hi - lo;
+            let xb = &x[lo * d..hi * d];
+            // pass 1: the block's raw logits X·w (z_buf[i] + b below)
+            tensor::gemv_block(&mut self.z_buf[..nb], xb, w);
+            if let Some(g) = grad.as_deref_mut() {
+                for (i, &yi) in y[lo..hi].iter().enumerate() {
+                    let z = self.z_buf[i] + b;
+                    let yf = yi as f32;
+                    // pass 2a: ONE exponential yields both activations
+                    let (sig, sp) = sigmoid_softplus(z);
+                    loss += sp - yf * z;
+                    if ((z > 0.0) as i32) == yi {
+                        correct += 1.0;
+                    }
+                    let r = (sig - yf) * inv_n;
+                    self.r_buf[i] = r;
+                    g[0] += r;
+                }
+                // pass 2b: fold the block's residuals, 4 rows per pass
+                tensor::ger_acc(&mut g[1..1 + d], xb,
+                                &self.r_buf[..nb]);
+            } else {
+                for (i, &yi) in y[lo..hi].iter().enumerate() {
+                    let z = self.z_buf[i] + b;
+                    let yf = yi as f32;
+                    loss += softplus(z) - yf * z;
+                    if ((z > 0.0) as i32) == yi {
+                        correct += 1.0;
+                    }
+                }
+            }
+            lo = hi;
+        }
+        loss *= inv_n;
+        // l2 over all live params (w AND b), matching the jax _l2 helper
+        let live = &theta[..1 + d];
+        loss += 0.5 * self.lam * tensor::sqnorm(live);
+        if let Some(g) = grad.as_deref_mut() {
+            tensor::axpy(&mut g[..1 + d], self.lam, live);
+        }
+        (loss, correct)
+    }
+
+    /// The pre-blocked sample-at-a-time path, retained verbatim as the
+    /// comparator reference: per sample, one `dot`, separate
+    /// `sigmoid`/`softplus` exponentials, one `axpy` into the gradient.
+    /// Used by the comparator tests and the micro_hotpath
+    /// blocked-vs-scalar ablation — NOT on the training hot path.
+    pub fn loss_grad_scalar(&self, theta: &[f32], x: &[f32], y: &[i32],
+                            mut grad: Option<&mut [f32]>) -> (f32, f32) {
         let b = theta[0];
         let w = &theta[1..1 + self.d];
         let n = y.len();
@@ -93,13 +221,22 @@ impl NativeLogReg {
             }
         }
         loss *= inv_n;
-        // l2 over all live params (w AND b), matching the jax _l2 helper
         let live = &theta[..1 + self.d];
         loss += 0.5 * self.lam * tensor::sqnorm(live);
         if let Some(g) = grad.as_deref_mut() {
             tensor::axpy(&mut g[..1 + self.d], self.lam, live);
         }
         (loss, correct)
+    }
+
+    /// Gradient through the sample-at-a-time reference path (see
+    /// [`NativeLogReg::loss_grad_scalar`]); same contract as
+    /// [`Compute::grad`].
+    pub fn grad_scalar(&self, theta: &[f32], batch: &Batch,
+                       out_grad: &mut [f32]) -> anyhow::Result<f32> {
+        let (x, y) = self.unpack_batch(batch)?;
+        let (loss, _) = self.loss_grad_scalar(theta, x, y, Some(out_grad));
+        Ok(loss)
     }
 }
 
@@ -194,6 +331,149 @@ mod tests {
         }
         // padding carries zero gradient
         assert!(g[d + 1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fused_helper_matches_separate_activations() {
+        // softplus: bit-identical everywhere (same expression); sigmoid:
+        // bit-identical for z >= 0, last-ulp-close for z < 0
+        let grid: Vec<f32> = (-400..=400).map(|i| i as f32 * 0.25).collect();
+        for &z in grid.iter().chain(&[0.0, -0.0, 1e-30, -1e-30, 88.0,
+                                      -88.0]) {
+            let (sig, sp) = sigmoid_softplus(z);
+            assert_eq!(sp, softplus(z), "softplus at z={z}");
+            if z >= 0.0 {
+                assert_eq!(sig, sigmoid(z), "sigmoid at z={z}");
+            } else {
+                assert!((sig - sigmoid(z)).abs()
+                            <= 1e-6 * (1.0 + sigmoid(z).abs()),
+                        "sigmoid at z={z}: {sig} vs {}", sigmoid(z));
+            }
+            assert!((0.0..=1.0).contains(&sig), "sig out of range at {z}");
+            assert!(sp >= 0.0 && sp.is_finite(), "softplus at z={z}: {sp}");
+        }
+        // extremes stay finite/saturated, never NaN
+        assert_eq!(sigmoid_softplus(1e4).0, 1.0);
+        assert_eq!(sigmoid_softplus(-1e4).0, 0.0);
+        assert_eq!(sigmoid_softplus(-1e4).1, 0.0);
+        assert_eq!(sigmoid_softplus(1e4).1, 1e4);
+    }
+
+    /// The blocked-kernel comparator (the PR acceptance gate): the
+    /// blocked path must match the sample-at-a-time reference to f32
+    /// accumulation tolerance — loss, every gradient coordinate, and
+    /// the accuracy count EXACTLY (logits are bit-identical).
+    #[test]
+    fn blocked_grad_matches_scalar_reference() {
+        let mut rng = Rng::new(17);
+        // n spans: < one group, exact group, < one block, exact block,
+        // block+tail, several blocks
+        for &(n, d) in &[(1usize, 6usize), (3, 6), (4, 6), (63, 6),
+                         (64, 6), (65, 6), (130, 22), (256, 9)] {
+            let data = toy_data(n, d, 100 + n as u64);
+            let batch = data.gather(&(0..n).collect::<Vec<_>>());
+            let p = (d + 2).next_power_of_two().max(16);
+            let mut m = NativeLogReg::for_spec(d, p);
+            let mut theta = vec![0.0f32; p];
+            for t in theta[..d + 1].iter_mut() {
+                *t = rng.normal_f32(0.0, 0.5);
+            }
+            let mut g_blocked = vec![0.0f32; p];
+            let loss_blocked =
+                m.grad(&theta, &batch, &mut g_blocked).unwrap();
+            let mut g_scalar = vec![0.0f32; p];
+            let loss_scalar =
+                m.grad_scalar(&theta, &batch, &mut g_scalar).unwrap();
+            assert!((loss_blocked - loss_scalar).abs()
+                        <= 1e-5 * (1.0 + loss_scalar.abs()),
+                    "(n={n}, d={d}): loss {loss_blocked} vs {loss_scalar}");
+            for j in 0..p {
+                assert!((g_blocked[j] - g_scalar[j]).abs()
+                            <= 1e-4 * (1.0 + g_scalar[j].abs()),
+                        "(n={n}, d={d}) coord {j}: {} vs {}",
+                        g_blocked[j], g_scalar[j]);
+            }
+            // eval shares the blocked logits pass; accuracy counts are
+            // decided on bit-identical z, so they must agree exactly
+            let (_, correct) = m.eval(&theta, &batch).unwrap();
+            let (_, correct_ref) =
+                m.loss_grad_scalar(&theta, match &batch.arrays[0].0 {
+                    crate::data::Array::F32(v) => v,
+                    _ => unreachable!(),
+                }, match &batch.arrays[1].0 {
+                    crate::data::Array::I32(v) => v,
+                    _ => unreachable!(),
+                }, None);
+            assert_eq!(correct, correct_ref, "(n={n}, d={d})");
+        }
+    }
+
+    /// PR-3-style bit-level pin: an INDEPENDENT inline reference of the
+    /// documented blocked semantics — per-sample `dot` logits, the fused
+    /// single-exp activations, bias/loss accumulated in sample order,
+    /// weight gradient in `ger_acc`'s fixed 4-row groups over the whole
+    /// batch (valid because GRAD_BLOCK is a multiple of GER_GROUP) —
+    /// must reproduce the production kernel exactly.
+    #[test]
+    fn blocked_grad_is_pinned_to_documented_order_bit_for_bit() {
+        let mut rng = Rng::new(23);
+        for &(n, d) in &[(70usize, 22usize), (64, 9), (5, 3)] {
+            let data = toy_data(n, d, 300 + n as u64);
+            let batch = data.gather(&(0..n).collect::<Vec<_>>());
+            let (x, y) = match (&batch.arrays[0].0, &batch.arrays[1].0) {
+                (crate::data::Array::F32(x), crate::data::Array::I32(y)) => {
+                    (x.as_slice(), y.as_slice())
+                }
+                _ => unreachable!(),
+            };
+            let p = 64;
+            let mut m = NativeLogReg::for_spec(d, p);
+            let mut theta = vec![0.0f32; p];
+            for t in theta[..d + 1].iter_mut() {
+                *t = rng.normal_f32(0.0, 0.5);
+            }
+            let mut got = vec![0.0f32; p];
+            let loss_got = m.grad(&theta, &batch, &mut got).unwrap();
+
+            // ---- independent reference ----
+            let b = theta[0];
+            let w = &theta[1..1 + d];
+            let inv_n = 1.0 / n as f32;
+            let mut want = vec![0.0f32; p];
+            let mut r = vec![0.0f32; n];
+            let mut loss_want = 0.0f32;
+            for i in 0..n {
+                let z = tensor::dot(&x[i * d..(i + 1) * d], w) + b;
+                let yf = y[i] as f32;
+                let (sig, sp) = sigmoid_softplus(z);
+                loss_want += sp - yf * z;
+                r[i] = (sig - yf) * inv_n;
+                want[0] += r[i];
+            }
+            let mut i = 0;
+            while i + tensor::GER_GROUP <= n {
+                for j in 0..d {
+                    want[1 + j] += (r[i] * x[i * d + j]
+                        + r[i + 1] * x[(i + 1) * d + j])
+                        + (r[i + 2] * x[(i + 2) * d + j]
+                            + r[i + 3] * x[(i + 3) * d + j]);
+                }
+                i += tensor::GER_GROUP;
+            }
+            while i < n {
+                for j in 0..d {
+                    want[1 + j] += r[i] * x[i * d + j];
+                }
+                i += 1;
+            }
+            loss_want *= inv_n;
+            let live = &theta[..1 + d];
+            loss_want += 0.5 * m.lam * tensor::sqnorm(live);
+            tensor::axpy(&mut want[..1 + d], m.lam, live);
+
+            assert_eq!(loss_got, loss_want, "(n={n}, d={d}): loss");
+            assert_eq!(got, want, "(n={n}, d={d}): gradient");
+        }
     }
 
     #[test]

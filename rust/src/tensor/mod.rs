@@ -10,6 +10,13 @@
 //! Loops are written 4-way unrolled over exact chunks so LLVM reliably
 //! autovectorises them; the remainder loop handles the tail (p_pad is a
 //! multiple of 1024, but the functions stay correct for any length).
+//!
+//! [`gemv_block`] / [`ger_acc`] are the batch-level kernels of the
+//! native backend's blocked gradient path: one pass computing a sample
+//! block's logits (bit-identical to per-row [`dot`]), one pass folding
+//! the residuals into the gradient with a fixed, documented group-of-4
+//! accumulation order (pinned by the comparator tests in
+//! [`crate::runtime::native`]).
 
 /// y += a * x
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
@@ -66,6 +73,98 @@ pub fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
         s += d * d;
     }
     s
+}
+
+/// Rows per fixed accumulation group of [`ger_acc`]. The blocked
+/// gradient kernel's block size must be a multiple of this so the group
+/// boundaries — and therefore every bit of the accumulated gradient —
+/// are independent of how the sample batch is blocked.
+pub const GER_GROUP: usize = 4;
+
+/// Blocked GEMV logits pass: `z[i] = dot(x[i*d .. (i+1)*d], w)` for
+/// every row `i` of the row-major sample block `x` (`d = w.len()`).
+///
+/// Rows are processed two at a time so one streamed read of `w` feeds
+/// two dot products, but each row's accumulation follows [`dot`]'s exact
+/// order (four f32 lanes over the 4-chunks, lanes summed left to right,
+/// then the scalar tail) — rows are independent, so every `z[i]` is
+/// bit-identical to `dot(&x[i*d..(i+1)*d], w)` whatever the row
+/// blocking. Pinned by `gemv_block_bit_equals_per_row_dot`.
+pub fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
+    let d = w.len();
+    assert_eq!(x.len(), z.len() * d);
+    let rows = z.len();
+    let chunks = d / 4;
+    let mut i = 0;
+    while i + 1 < rows {
+        let x0 = &x[i * d..(i + 1) * d];
+        let x1 = &x[(i + 1) * d..(i + 2) * d];
+        let mut a0 = [0.0f32; 4];
+        let mut a1 = [0.0f32; 4];
+        for c in 0..chunks {
+            let j = c * 4;
+            a0[0] += x0[j] * w[j];
+            a0[1] += x0[j + 1] * w[j + 1];
+            a0[2] += x0[j + 2] * w[j + 2];
+            a0[3] += x0[j + 3] * w[j + 3];
+            a1[0] += x1[j] * w[j];
+            a1[1] += x1[j + 1] * w[j + 1];
+            a1[2] += x1[j + 2] * w[j + 2];
+            a1[3] += x1[j + 3] * w[j + 3];
+        }
+        let mut s0 = a0[0] + a0[1] + a0[2] + a0[3];
+        let mut s1 = a1[0] + a1[1] + a1[2] + a1[3];
+        for j in chunks * 4..d {
+            s0 += x0[j] * w[j];
+            s1 += x1[j] * w[j];
+        }
+        z[i] = s0;
+        z[i + 1] = s1;
+        i += 2;
+    }
+    if i < rows {
+        z[i] = dot(&x[i * d..(i + 1) * d], w);
+    }
+}
+
+/// Blocked rank-accumulation `g += Xᵀ r` over a row-major sample block
+/// (`d = g.len()`, row `i` is `x[i*d .. (i+1)*d]` with residual `r[i]`).
+///
+/// The accumulation order is FIXED and documented — it is what the
+/// comparator test in `runtime::native` pins bit-for-bit: rows fold in
+/// groups of [`GER_GROUP`] = 4 (in row order), and within a group each
+/// coordinate accumulates
+/// `g[j] += (r0*x0[j] + r1*x1[j]) + (r2*x2[j] + r3*x3[j])`;
+/// trailing rows (< 4) fold one at a time in row order. One read-write
+/// pass over `g` per group instead of one per row is where the win
+/// comes from. NOTE: this is a different float summation order than the
+/// historical sample-at-a-time `axpy` loop — a deliberate PR-3-style
+/// determinism trade (the old order is retained as
+/// `NativeLogReg::loss_grad_scalar` for tolerance comparison).
+pub fn ger_acc(g: &mut [f32], x: &[f32], r: &[f32]) {
+    let d = g.len();
+    assert_eq!(x.len(), r.len() * d);
+    let rows = r.len();
+    let groups = rows / GER_GROUP;
+    for gi in 0..groups {
+        let i = gi * GER_GROUP;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &x[i * d..(i + 1) * d];
+        let x1 = &x[(i + 1) * d..(i + 2) * d];
+        let x2 = &x[(i + 2) * d..(i + 3) * d];
+        let x3 = &x[(i + 3) * d..(i + 4) * d];
+        for j in 0..d {
+            g[j] +=
+                (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in groups * GER_GROUP..rows {
+        let ri = r[i];
+        let xi = &x[i * d..(i + 1) * d];
+        for j in 0..d {
+            g[j] += ri * xi[j];
+        }
+    }
 }
 
 /// out = a - b
@@ -163,6 +262,87 @@ mod tests {
         let mut d = vec![0.0; a.len()];
         sub_into(&mut d, &a, &b);
         approx(sqnorm_diff(&a, &b), sqnorm(&d), 1e-5);
+    }
+
+    #[test]
+    fn gemv_block_bit_equals_per_row_dot() {
+        // the logits pass must be bit-identical to one dot() per row for
+        // every (rows, d) shape: even/odd row counts, d not a multiple
+        // of 4, d < 4, d = 0
+        let mut rng = crate::util::rng::Rng::new(9);
+        for &(rows, d) in &[(0usize, 7usize), (1, 7), (2, 7), (5, 22),
+                            (8, 3), (7, 1), (3, 0), (64, 17), (63, 16)] {
+            let x: Vec<f32> = (0..rows * d)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let w: Vec<f32> =
+                (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut z = vec![0.0f32; rows];
+            gemv_block(&mut z, &x, &w);
+            for i in 0..rows {
+                let want = dot(&x[i * d..(i + 1) * d], &w);
+                assert_eq!(z[i], want,
+                           "row {i} of (rows={rows}, d={d})");
+            }
+        }
+    }
+
+    #[test]
+    fn ger_acc_matches_documented_fixed_order_bit_for_bit() {
+        // independent inline reference of the documented semantics:
+        // 4-row groups, pairwise within a group, trailing rows singly
+        let mut rng = crate::util::rng::Rng::new(11);
+        for &(rows, d) in &[(0usize, 5usize), (1, 5), (3, 5), (4, 5),
+                            (5, 5), (11, 22), (64, 9), (66, 9)] {
+            let x: Vec<f32> = (0..rows * d)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let r: Vec<f32> =
+                (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> =
+                (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut g = init.clone();
+            ger_acc(&mut g, &x, &r);
+            let mut want = init;
+            let mut i = 0;
+            while i + GER_GROUP <= rows {
+                for j in 0..d {
+                    want[j] += (r[i] * x[i * d + j]
+                        + r[i + 1] * x[(i + 1) * d + j])
+                        + (r[i + 2] * x[(i + 2) * d + j]
+                            + r[i + 3] * x[(i + 3) * d + j]);
+                }
+                i += GER_GROUP;
+            }
+            while i < rows {
+                for j in 0..d {
+                    want[j] += r[i] * x[i * d + j];
+                }
+                i += 1;
+            }
+            assert_eq!(g, want, "(rows={rows}, d={d})");
+        }
+    }
+
+    #[test]
+    fn ger_acc_matches_sample_at_a_time_to_tolerance() {
+        // vs the historical per-row axpy order: same sum, different
+        // float association — must agree to f32 accumulation tolerance
+        let mut rng = crate::util::rng::Rng::new(13);
+        let (rows, d) = (130usize, 22usize);
+        let x: Vec<f32> =
+            (0..rows * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let r: Vec<f32> =
+            (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut g = vec![0.0f32; d];
+        ger_acc(&mut g, &x, &r);
+        let mut want = vec![0.0f32; d];
+        for i in 0..rows {
+            axpy(&mut want, r[i], &x[i * d..(i + 1) * d]);
+        }
+        for j in 0..d {
+            approx(g[j], want[j], 1e-4);
+        }
     }
 
     #[test]

@@ -8,3 +8,32 @@ pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;
+
+/// Best-effort rendering of a caught panic payload, shared by every
+/// thread boundary that turns panics into messages (the `Threaded`
+/// transport's workers and the server's shard pool).
+pub fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = panic.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_message_renders_common_payloads() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("static str");
+        assert_eq!(panic_message(s.as_ref()), "static str");
+        let owned: Box<dyn std::any::Any + Send> =
+            Box::new(String::from("owned"));
+        assert_eq!(panic_message(owned.as_ref()), "owned");
+        let other: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert_eq!(panic_message(other.as_ref()), "non-string panic payload");
+    }
+}

@@ -265,6 +265,55 @@ fn dead_uplink_uploads_are_charged_but_never_fold() {
 }
 
 #[test]
+fn slow_device_worker_straggles_under_semi_sync() {
+    // Compute-time modelling: all five links are identical, but worker
+    // 4's DEVICE is 100x slower (compute_mult over the base compute_s).
+    // Under a semi-sync quorum of 4 its uploads always arrive after the
+    // quorum closes: deferred every round, stale-folded next round —
+    // and the event clock carries everyone's compute time.
+    let (mut compute, w) = workload();
+    let cost = CostModel { compute_s: 0.005, ..CostModel::default() };
+    let scenario = CommCfg {
+        semi_sync_k: 4,
+        compute_mult: vec![1.0, 1.0, 1.0, 1.0, 100.0],
+        ..Default::default()
+    };
+    let out = run(RuleKind::Always, scenario, cost.clone(), &w,
+                  &mut compute);
+    // every transmission still counts on the paper's uploads axis
+    assert_eq!(out.1.uploads, (ITERS * WORKERS) as u64);
+    // the slow device misses the quorum every round (links are equal,
+    // so only its compute time can push it behind)
+    assert_eq!(out.1.stale_uploads, ITERS as u64);
+    assert_eq!(out.1.lost_uploads, 0);
+    // per-worker upload seconds include the device time: the slow
+    // device's tally dwarfs a nominal worker's
+    assert!(out.1.worker_upload_s[4] > 10.0 * out.1.worker_upload_s[0],
+            "{:?}", out.1.worker_upload_s);
+    // the clock prices compute: strictly slower than the identical
+    // scenario with free devices
+    let free_dev = CommCfg {
+        semi_sync_k: 4,
+        compute_mult: vec![1.0, 1.0, 1.0, 1.0, 100.0],
+        ..Default::default()
+    };
+    let baseline = run(RuleKind::Always, free_dev,
+                       CostModel::default(), &w, &mut compute);
+    assert!(out.1.sim_time_s > baseline.1.sim_time_s,
+            "{} !> {}", out.1.sim_time_s, baseline.1.sim_time_s);
+    // a 100x device with a ZERO compute base is inert: bit-identical to
+    // the no-multiplier run (the golden suites rely on this)
+    let no_mult = run(
+        RuleKind::Always,
+        CommCfg { semi_sync_k: 4, ..Default::default() },
+        CostModel::default(), &w, &mut compute);
+    assert_identical(&baseline, &no_mult, "compute_mult with zero base");
+    // stale folds keep the method descending
+    assert!(out.0.final_loss() < out.0.points[0].loss,
+            "slow-device run did not descend: {:?}", out.0);
+}
+
+#[test]
 fn free_cost_model_keeps_event_clock_at_zero() {
     let (mut compute, w) = workload();
     let scenario = CommCfg {

@@ -20,6 +20,13 @@
 //! hence CADA upload decisions) differ in the last bits from pre-PR-3
 //! releases. The blocked semantics themselves are pinned independently
 //! in `coordinator::server`'s `fold_and_step_matches_independent_reference`.
+//! A second such trade rides along with the blocked gradient kernel
+//! (PR 4): the native backend's weight-gradient accumulation order and
+//! its `z < 0` sigmoid differ in the last ulps from pre-PR-4 releases.
+//! Twins and Trainer share the one backend, so every comparison here
+//! stays exact; the blocked kernel itself is pinned against the
+//! retained sample-at-a-time reference and an independent fixed-order
+//! twin in `runtime::native`'s comparator tests.
 //! The twins charge communication the way the engine's event clock does
 //! (uniform links, jitter off, full participation): one slowest-download
 //! advance per broadcast, one slowest-upload advance per round — which,
@@ -34,6 +41,7 @@ use cada::algorithms::{Algorithm, Cada, CadaCfg, FedAdam, FedAdamCfg,
 use cada::comm::{CommStats, CostModel, TransportKind};
 use cada::config::Schedule;
 use cada::coordinator::history::DeltaHistory;
+use cada::coordinator::pool::ShardExec;
 use cada::coordinator::rules::RuleKind;
 use cada::coordinator::server::{Optimizer, ServerState};
 use cada::coordinator::worker::WorkerState;
@@ -248,14 +256,16 @@ fn legacy_local_run(
 
 /// Run an algorithm through the engine Trainer with the shared golden
 /// knobs, on the given transport. `server_shards = 1` is the reference
-/// the legacy twins pin down; other shard counts must be bit-identical
-/// to it.
+/// the legacy twins pin down; other shard counts — under either
+/// execution mode, persistent pool or scoped threads — must be
+/// bit-identical to it.
 fn trainer_run_sharded(
     algo: &mut dyn Algorithm,
     cost_model: CostModel,
     transport: TransportKind,
     p: usize,
     server_shards: usize,
+    shard_exec: ShardExec,
     w: &Workload,
     compute: &mut dyn Compute,
 ) -> (Vec<LegacyPoint>, CommStats, Vec<f32>) {
@@ -272,6 +282,7 @@ fn trainer_run_sharded(
         .cost_model(cost_model)
         .transport(transport)
         .server_shards(server_shards)
+        .shard_exec(shard_exec)
         .seed(SEED)
         .build()
         .unwrap();
@@ -294,7 +305,8 @@ fn trainer_run(
     w: &Workload,
     compute: &mut dyn Compute,
 ) -> (Vec<LegacyPoint>, CommStats, Vec<f32>) {
-    trainer_run_sharded(algo, cost_model, transport, 1024, 1, w, compute)
+    trainer_run_sharded(algo, cost_model, transport, 1024, 1,
+                        ShardExec::default(), w, compute)
 }
 
 fn assert_parity(
@@ -455,9 +467,11 @@ fn threaded_matches_inproc_bit_for_bit() {
 
 /// The sharded-server acceptance gate: `server_shards ∈ {1, 2, 4}` must
 /// produce bit-identical curves, counters and final iterates, on BOTH
-/// transports, for the adaptive and the always-upload rule. Run at
-/// p = 4096 (four reduction blocks) so shard counts 2 and 4 genuinely
-/// split the server state instead of collapsing to one range.
+/// transports, for the adaptive and the always-upload rule — and under
+/// BOTH shard execution modes, the persistent pool (default) and the
+/// scoped spawn+join reference. Run at p = 4096 (four reduction blocks)
+/// so shard counts 2 and 4 genuinely split the server state instead of
+/// collapsing to one range.
 #[test]
 fn golden_sharded_server_matches_single_shard_bit_for_bit() {
     let p = 4096;
@@ -477,19 +491,23 @@ fn golden_sharded_server_matches_single_shard_bit_for_bit() {
         for &(label, rule, max_delay, d_max) in &rules {
             let mut ref_algo = cada_algo(rule, 0.02, max_delay, d_max);
             let reference = trainer_run_sharded(
-                &mut ref_algo, cost.clone(), transport, p, 1, &w,
-                &mut compute);
-            for shards in [2usize, 4] {
-                let mut algo = cada_algo(rule, 0.02, max_delay, d_max);
-                let sharded = trainer_run_sharded(
-                    &mut algo, cost.clone(), transport, p, shards, &w,
-                    &mut compute);
-                assert_parity(
-                    &reference,
-                    &sharded,
-                    &format!("{label} [{}]: {shards} shards vs 1",
-                             transport.name()),
-                );
+                &mut ref_algo, cost.clone(), transport, p, 1,
+                ShardExec::Pool, &w, &mut compute);
+            for exec in [ShardExec::Pool, ShardExec::Scoped] {
+                for shards in [2usize, 4] {
+                    let mut algo =
+                        cada_algo(rule, 0.02, max_delay, d_max);
+                    let sharded = trainer_run_sharded(
+                        &mut algo, cost.clone(), transport, p, shards,
+                        exec, &w, &mut compute);
+                    assert_parity(
+                        &reference,
+                        &sharded,
+                        &format!("{label} [{}]: {shards} shards [{}] \
+                                  vs 1",
+                                 transport.name(), exec.name()),
+                    );
+                }
             }
         }
     }

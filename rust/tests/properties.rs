@@ -6,6 +6,7 @@ use cada::algorithms::{Cada, CadaCfg, Trainer};
 use cada::comm::CostModel;
 use cada::config::Schedule;
 use cada::coordinator::history::DeltaHistory;
+use cada::coordinator::pool::ShardExec;
 use cada::coordinator::rules::{decide, RuleKind};
 use cada::coordinator::server::Optimizer;
 use cada::coordinator::shard::{ShardLayout, SHARD_BLOCK};
@@ -367,10 +368,12 @@ fn prop_server_shards_bit_identical_to_one_shard() {
     // the sharded server is a pure execution strategy: for random
     // workloads, seeds and shard counts, the loss curve, comm counters
     // and final iterate must equal the server_shards = 1 reference
-    // bit for bit (p = 4096 -> 4 blocks, so 2.. shards really split).
+    // bit for bit (p = 4096 -> 4 blocks, so 2.. shards really split) —
+    // under BOTH execution modes, the persistent pool and the scoped
+    // spawn+join reference.
     check(
         Config { cases: 6, ..Config::default() },
-        "server_shards invariance",
+        "server_shards invariance (pool + scoped)",
         |rng| (rng.next_u64(), 2 + rng.below(3), 2 + rng.below(7)),
         |&(seed, workers, shards)| {
             let p = 4096;
@@ -382,7 +385,8 @@ fn prop_server_shards_bit_identical_to_one_shard() {
             let eval = data.gather(&[0, 1, 2, 3]);
             type RunOut =
                 (Vec<f64>, cada::comm::CommStats, Vec<f32>);
-            let mut run = |n_shards: usize| -> Result<RunOut, String> {
+            let mut run = |n_shards: usize, exec: ShardExec|
+                -> Result<RunOut, String> {
                 let mut cfg = CadaCfg::basic(
                     RuleKind::Cada2 { c: 0.8 },
                     Optimizer::Amsgrad {
@@ -405,6 +409,7 @@ fn prop_server_shards_bit_identical_to_one_shard() {
                     .eval_every(3)
                     .batch(8)
                     .server_shards(n_shards)
+                    .shard_exec(exec)
                     .seed(seed ^ 5)
                     .build()
                     .map_err(|e| e.to_string())?;
@@ -417,20 +422,23 @@ fn prop_server_shards_bit_identical_to_one_shard() {
                 drop(trainer);
                 Ok((losses, comm, algo.server.theta.clone()))
             };
-            let reference = run(1)?;
-            let sharded = run(shards)?;
-            if reference.0 != sharded.0 {
-                return Err(format!("loss curves diverged at {shards} \
-                                    shards"));
-            }
-            if reference.1 != sharded.1 {
-                return Err(format!("comm stats diverged at {shards} \
-                                    shards"));
-            }
-            let drift = tensor::sqnorm_diff(&reference.2, &sharded.2);
-            if drift != 0.0 {
-                return Err(format!(
-                    "final theta diverged by {drift} at {shards} shards"));
+            let reference = run(1, ShardExec::Pool)?;
+            for exec in [ShardExec::Pool, ShardExec::Scoped] {
+                let sharded = run(shards, exec)?;
+                let label = format!("{shards} shards [{}]", exec.name());
+                if reference.0 != sharded.0 {
+                    return Err(format!(
+                        "loss curves diverged at {label}"));
+                }
+                if reference.1 != sharded.1 {
+                    return Err(format!(
+                        "comm stats diverged at {label}"));
+                }
+                let drift = tensor::sqnorm_diff(&reference.2, &sharded.2);
+                if drift != 0.0 {
+                    return Err(format!(
+                        "final theta diverged by {drift} at {label}"));
+                }
             }
             Ok(())
         },
