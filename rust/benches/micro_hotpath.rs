@@ -209,6 +209,37 @@ fn main() {
         });
     }
 
+    // ------- wire codec (socket transport) ------------------------------
+    // encode/decode of a worker's 65536-float innovation delta: the
+    // socket transport's per-round serialization cost on each side of
+    // the connection, gated so codec regressions show up in bench-check
+    {
+        let p = 65_536usize;
+        let delta = randv(p, 70);
+        let msg = cada::comm::wire::Msg::Step(cada::comm::wire::WireStep {
+            w: 3,
+            decision: cada::coordinator::rules::Decision {
+                upload: true,
+                rule_triggered: true,
+            },
+            lhs: 0.5,
+            loss: 0.25,
+            grad_evals: 2,
+            delta,
+        });
+        let mut buf = Vec::new();
+        let bytes = (4 * p) as u64;
+        r.header("wire codec (socket transport, 65536-float delta)");
+        r.bench_bytes("wire encode step  p=65536", bytes, || {
+            cada::comm::wire::encode(&msg, &mut buf);
+            black_box(buf.len());
+        });
+        cada::comm::wire::encode(&msg, &mut buf);
+        r.bench_bytes("wire decode step  p=65536", bytes, || {
+            black_box(cada::comm::wire::decode(&buf).unwrap());
+        });
+    }
+
     // shared tiny-logreg workload (spec geometry matches test_logreg)
     let spec = SpecEntry::builtin_logreg("test_logreg")
         .expect("builtin test spec");

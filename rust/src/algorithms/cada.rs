@@ -27,7 +27,7 @@
 use std::sync::Arc;
 
 use super::{Algorithm, AlgorithmKind, RoundCtx};
-use crate::comm::{JobOut, RoundEvent, WorkerJob};
+use crate::comm::{wire, JobOut, RoundEvent, WorkerJob};
 use crate::coordinator::history::DeltaHistory;
 use crate::coordinator::pool::ShardExec;
 use crate::coordinator::rules::RuleKind;
@@ -227,7 +227,7 @@ impl Algorithm for Cada {
         }
         // line 3: broadcast theta^k (counted once per worker; the event
         // clock advances by the slowest download across the links)
-        ctx.count_broadcast(ctx.upload_bytes);
+        ctx.count_broadcast(ctx.broadcast_bytes);
         // freeze this round's shared state: every worker job compares
         // against the same RHS and reads the same theta^k/snapshot even
         // though jobs may run concurrently on worker threads. The views
@@ -353,6 +353,57 @@ impl Algorithm for Cada {
 
     fn shard_stats(&self) -> Option<ShardStats> {
         Some(self.server.shard_stats().clone())
+    }
+
+    fn wire_config(&self) -> anyhow::Result<wire::WireWorkerCfg> {
+        Ok(wire::WireWorkerCfg {
+            rule: self.cfg.rule,
+            max_delay: self.cfg.max_delay,
+            use_artifact_innov: self.cfg.use_artifact_innov,
+            p: self.server.theta.len(),
+        })
+    }
+
+    fn make_wire_step(&self, k: u64) -> anyhow::Result<wire::WireRound> {
+        // the round state `broadcast` froze, as wire data: the shared
+        // RHS plus the theta^k / snapshot views and the versions the
+        // socket transport diffs per-worker acks against
+        Ok(wire::WireRound {
+            k,
+            rhs: self.rhs,
+            theta: Arc::clone(&self.round_theta),
+            layout: self.server.layout().clone(),
+            versions: self.server.versions().to_vec(),
+            snapshot: self
+                .round_snapshot
+                .as_ref()
+                .map(|s| (Arc::clone(s), self.snapshot_version)),
+        })
+    }
+
+    fn absorb_wire_step(&mut self, ctx: &mut RoundCtx, w: usize,
+                        step: wire::WireStep) -> anyhow::Result<()> {
+        // the remote mirror of absorb_step: same lhs/grad-eval
+        // accounting, and the shipped innovation lands in the worker
+        // slot exactly where an in-process job would have left it —
+        // aggregate/server_update run unchanged
+        anyhow::ensure!(
+            step.w == w,
+            "cada: wire step for worker {} folded into slot {w}",
+            step.w
+        );
+        ctx.comm.record_grad_evals(step.grad_evals);
+        if step.lhs.is_finite() {
+            self.lhs_sum += step.lhs;
+            self.lhs_count += 1;
+        }
+        if step.decision.upload {
+            self.workers[w].absorb_remote_upload(&step.delta)?;
+            self.uploaded.push(w);
+        } else {
+            self.workers[w].absorb_remote_skip();
+        }
+        Ok(())
     }
 }
 

@@ -101,7 +101,7 @@ impl LocalModels {
 
     /// Broadcast the global model back to every worker.
     fn push_down(&mut self, ctx: &mut RoundCtx) {
-        ctx.count_broadcast(ctx.upload_bytes);
+        ctx.count_broadcast(ctx.broadcast_bytes);
         for t in &mut self.thetas {
             t.copy_from_slice(&self.theta);
         }

@@ -106,8 +106,14 @@ pub struct RoundCtx<'c> {
     pub k: u64,
     /// number of workers M
     pub m: usize,
-    /// payload of one gradient/model upload, bytes
+    /// payload of one UPLINK gradient/innovation upload, bytes
     pub upload_bytes: usize,
+    /// payload of one DOWNLINK model broadcast, bytes. Defaults to
+    /// `upload_bytes` (a full model down, a full gradient up — the
+    /// seed's assumption, preserved bit-for-bit), but the two are
+    /// distinct quantities: wire-measured socket payloads and
+    /// compressed-upload experiments (arXiv:2111.00705) diverge them.
+    pub broadcast_bytes: usize,
     /// this run's per-worker link models
     pub links: &'c LinkSet,
     pub comm: &'c mut CommStats,
@@ -212,5 +218,49 @@ pub trait Algorithm {
     /// methods without sharded server state).
     fn shard_stats(&self) -> Option<crate::coordinator::shard::ShardStats> {
         None
+    }
+
+    /// Socket transport, handshake: the static per-run worker config a
+    /// `cada worker` process needs (rule, delay cap, parameter count).
+    /// A [`WorkerJob`] is a closure and cannot cross a process
+    /// boundary, so socket runs speak the serializable round protocol
+    /// instead — methods that cannot express their round as wire data
+    /// (the local-update family moves whole models, not rule-checked
+    /// innovations) keep this default and fail fast at build time.
+    fn wire_config(&self)
+                   -> anyhow::Result<crate::comm::wire::WireWorkerCfg> {
+        anyhow::bail!(
+            "algorithm '{}' does not support the socket transport yet \
+             (server-centric methods only; use transport = \"inproc\" \
+             or \"threaded\")",
+            self.name()
+        )
+    }
+
+    /// Socket transport, phase 2a: the round's frozen server state as
+    /// wire data — called after [`Algorithm::broadcast`], in place of
+    /// [`Algorithm::make_step`]. The transport turns it into per-worker
+    /// round headers (shipping only shard ranges the worker has not
+    /// acknowledged at the current version).
+    fn make_wire_step(&self, k: u64)
+                      -> anyhow::Result<crate::comm::wire::WireRound> {
+        let _ = k;
+        anyhow::bail!(
+            "algorithm '{}' does not support the socket transport yet",
+            self.name()
+        )
+    }
+
+    /// Socket transport, phase 2b: fold worker `w`'s wire step result —
+    /// the remote mirror of [`Algorithm::absorb_step`], called in
+    /// worker order.
+    fn absorb_wire_step(&mut self, ctx: &mut RoundCtx, w: usize,
+                        step: crate::comm::wire::WireStep)
+                        -> anyhow::Result<()> {
+        let _ = (ctx, w, step);
+        anyhow::bail!(
+            "algorithm '{}' does not support the socket transport yet",
+            self.name()
+        )
     }
 }

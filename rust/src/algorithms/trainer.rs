@@ -15,7 +15,8 @@
 //!     .eval_batch(eval)
 //!     .init_theta(init)
 //!     .cost_model(CostModel::default())
-//!     .transport(TransportKind::Threaded)   // or InProc (default)
+//!     .transport(TransportKind::Threaded)   // InProc (default) /
+//!                                           // Threaded / Socket
 //!     .server_shards(4)                     // shard the server state
 //!     .semi_sync_k(8)                       // fastest 8 of M quorum
 //!     .jitter(0.5, 7)                       // straggler jitter (sigma, seed)
@@ -49,8 +50,9 @@ use std::time::Instant;
 
 use super::{Algorithm, AlgorithmKind, RoundCtx};
 use crate::comm::{
-    CommCfg, CommStats, CostModel, EventTrace, InProc, LinkSet,
-    Participation, Threaded, Transport, TransportKind, WorkerJob,
+    wire, CommCfg, CommStats, CostModel, EventTrace, InProc, LinkSet,
+    Participation, SocketServer, Threaded, Transport, TransportKind,
+    WireStats, WorkerJob,
 };
 use crate::config::toml::{Doc, Value};
 use crate::coordinator::pool::ShardExec;
@@ -73,8 +75,15 @@ pub struct TrainCfg {
     /// base link cost model (per-worker links derive from it via
     /// `[comm.links]` multipliers)
     pub cost_model: CostModel,
-    /// bytes of one gradient/model upload (manifest: 4 * p live floats)
+    /// bytes of one UPLINK gradient/innovation upload (manifest:
+    /// 4 * p live floats)
     pub upload_bytes: usize,
+    /// bytes of one DOWNLINK model broadcast; 0 (the default) means
+    /// "same as `upload_bytes`" — the seed's symmetric-payload
+    /// assumption, preserved bit-for-bit. Compressed-upload experiments
+    /// and wire-measured socket runs set it explicitly to diverge the
+    /// two honestly.
+    pub broadcast_bytes: usize,
     /// keep at most this many round events in the trace (0 disables)
     pub trace_cap: usize,
     /// execution engine configuration (`[comm]` / `[comm.links]`)
@@ -90,6 +99,7 @@ impl Default for TrainCfg {
             seed: 0,
             cost_model: CostModel::free(),
             upload_bytes: 0,
+            broadcast_bytes: 0,
             trace_cap: 0,
             comm: CommCfg::default(),
         }
@@ -114,6 +124,7 @@ impl TrainCfg {
              batch = {}\n\
              seed = {}\n\
              upload_bytes = {}\n\
+             broadcast_bytes = {}\n\
              trace_cap = {}\n\
              \n\
              [train.cost_model]\n\
@@ -134,6 +145,7 @@ impl TrainCfg {
             self.batch,
             self.seed,
             self.upload_bytes,
+            self.broadcast_bytes,
             self.trace_cap,
             self.cost_model.latency_s,
             self.cost_model.down_bw,
@@ -146,6 +158,15 @@ impl TrainCfg {
             self.comm.jitter_sigma,
             self.comm.jitter_seed,
         );
+        // socket addresses only appear when set, so the default output
+        // (and every pre-socket golden config) is byte-identical
+        if !self.comm.listen.is_empty() {
+            out.push_str(&format!("listen = \"{}\"\n", self.comm.listen));
+        }
+        if !self.comm.connect.is_empty() {
+            out.push_str(&format!("connect = \"{}\"\n",
+                                  self.comm.connect));
+        }
         let links = [
             ("latency_mult", &self.comm.latency_mult),
             ("bw_mult", &self.comm.bw_mult),
@@ -192,6 +213,9 @@ impl TrainCfg {
                     "seed" => cfg.seed = int(value)?,
                     "upload_bytes" => {
                         cfg.upload_bytes = int(value)? as usize
+                    }
+                    "broadcast_bytes" => {
+                        cfg.broadcast_bytes = int(value)? as usize
                     }
                     "trace_cap" => cfg.trace_cap = int(value)? as usize,
                     other => {
@@ -263,6 +287,24 @@ impl TrainCfg {
                                                  integer")
                             })?;
                     }
+                    "listen" => {
+                        cfg.comm.listen = value
+                            .as_str()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("[comm] listen must be a \
+                                                 string (host:port)")
+                            })?
+                            .to_string();
+                    }
+                    "connect" => {
+                        cfg.comm.connect = value
+                            .as_str()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("[comm] connect must be a \
+                                                 string (host:port)")
+                            })?
+                            .to_string();
+                    }
                     other => anyhow::bail!("unknown [comm] key '{other}'"),
                 }
             }
@@ -297,6 +339,17 @@ impl TrainCfg {
         cfg.comm.validate()?;
         Ok(cfg)
     }
+
+    /// The downlink broadcast payload this config means: the explicit
+    /// `broadcast_bytes`, or `upload_bytes` when left at the 0 default
+    /// (the seed's symmetric assumption).
+    pub fn effective_broadcast_bytes(&self) -> usize {
+        if self.broadcast_bytes == 0 {
+            self.upload_bytes
+        } else {
+            self.broadcast_bytes
+        }
+    }
 }
 
 /// One training run: an [`Algorithm`] plus the workload it trains on.
@@ -312,6 +365,12 @@ pub struct Trainer<'a, A: Algorithm + ?Sized> {
     /// lazily constructed on the first step (the threaded transport
     /// forks per-worker backends off the compute handed to `step`/`run`)
     transport: Option<Box<dyn Transport>>,
+    /// socket transport: the server endpoint, bound at build time (so a
+    /// caller can read [`Trainer::wire_addr`] and launch the worker
+    /// processes before the first step blocks on the handshake)
+    wire: Option<SocketServer>,
+    /// socket transport: the static handshake config
+    wire_cfg: Option<wire::WireWorkerCfg>,
     /// set when a round errors: worker state may have been moved into a
     /// job that never came home, so further steps must not run
     poisoned: bool,
@@ -351,6 +410,20 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         &self.links
     }
 
+    /// Socket transport: the bound listen address (the actual port when
+    /// `[comm] listen` asked for port 0). `None` on in-process
+    /// transports.
+    pub fn wire_addr(&self) -> Option<std::net::SocketAddr> {
+        self.wire.as_ref().and_then(|w| w.local_addr().ok())
+    }
+
+    /// Socket transport: the bytes that actually crossed the wire —
+    /// measured upload/broadcast sizes, as opposed to the simulated
+    /// `upload_bytes` constant. `None` on in-process transports.
+    pub fn wire_stats(&self) -> Option<&WireStats> {
+        self.wire.as_ref().map(|w| w.stats())
+    }
+
     /// Maximum per-worker staleness (0 for local-update methods).
     pub fn max_staleness(&self) -> u32 {
         self.algo.max_staleness()
@@ -363,6 +436,10 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         }
         let m = self.rngs.len();
         let transport: Box<dyn Transport> = match self.cfg.comm.transport {
+            TransportKind::Socket => anyhow::bail!(
+                "the socket transport is driven by the wire engine, not \
+                 a Transport impl (internal error)"
+            ),
             TransportKind::InProc => Box::new(InProc),
             TransportKind::Threaded => {
                 let mut backends = Vec::with_capacity(m);
@@ -406,51 +483,46 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
 
     fn step_inner(&mut self, k: u64, compute: &mut dyn Compute)
                   -> anyhow::Result<()> {
-        self.ensure_transport(compute)?;
         let m = self.rngs.len();
-        // phase 1 — server -> workers
-        {
-            let mut ctx = RoundCtx {
-                k,
-                m,
-                upload_bytes: self.cfg.upload_bytes,
-                links: &self.links,
-                comm: &mut self.comm,
-                fresh: Vec::new(),
-                deferred: Vec::new(),
-            };
-            self.algo.broadcast(&mut ctx)?;
-        }
-        // phase 2 — sample minibatches (worker-private RNG streams),
-        // build the self-contained jobs, execute them on the transport
-        let mut jobs: Vec<(usize, WorkerJob)> = Vec::with_capacity(m);
-        for w in 0..m {
-            let batch = self.data.sample_batch(
-                &self.partition.shards[w],
-                self.cfg.batch,
-                &mut self.rngs[w],
-            );
-            jobs.push((w, self.algo.make_step(k, w, batch)?));
-        }
-        let outcomes = self
-            .transport
-            .as_mut()
-            .expect("transport initialised above")
-            .execute(jobs, compute)?;
-        {
-            let mut ctx = RoundCtx {
-                k,
-                m,
-                upload_bytes: self.cfg.upload_bytes,
-                links: &self.links,
-                comm: &mut self.comm,
-                fresh: Vec::new(),
-                deferred: Vec::new(),
-            };
-            // outcomes arrive sorted by worker id: the fold order (and
-            // therefore every float) is transport-independent
-            for (w, out) in outcomes {
-                self.algo.absorb_step(&mut ctx, w, out)?;
+        if self.cfg.comm.transport == TransportKind::Socket {
+            // phases 1 + 2 run over the wire: serializable round
+            // headers out to the worker processes, step results back
+            self.wire_phases(k)?;
+        } else {
+            self.ensure_transport(compute)?;
+            // phase 1 — server -> workers
+            {
+                let mut ctx = round_ctx(&self.cfg, &self.links,
+                                        &mut self.comm, k, m,
+                                        Vec::new(), Vec::new());
+                self.algo.broadcast(&mut ctx)?;
+            }
+            // phase 2 — sample minibatches (worker-private RNG streams),
+            // build the self-contained jobs, execute them on the
+            // transport
+            let mut jobs: Vec<(usize, WorkerJob)> = Vec::with_capacity(m);
+            for w in 0..m {
+                let batch = self.data.sample_batch(
+                    &self.partition.shards[w],
+                    self.cfg.batch,
+                    &mut self.rngs[w],
+                );
+                jobs.push((w, self.algo.make_step(k, w, batch)?));
+            }
+            let outcomes = self
+                .transport
+                .as_mut()
+                .expect("transport initialised above")
+                .execute(jobs, compute)?;
+            {
+                let mut ctx = round_ctx(&self.cfg, &self.links,
+                                        &mut self.comm, k, m,
+                                        Vec::new(), Vec::new());
+                // outcomes arrive sorted by worker id: the fold order
+                // (and therefore every float) is transport-independent
+                for (w, out) in outcomes {
+                    self.algo.absorb_step(&mut ctx, w, out)?;
+                }
             }
         }
         // settle the round's uploads: price against the links, apply the
@@ -467,26 +539,96 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         for &(w, t) in &verdict.arrival_s {
             self.comm.count_upload(w, self.cfg.upload_bytes, t);
         }
+        // dead-link uploads were transmitted (counted + charged above,
+        // with their non-finite time kept out of the per-worker
+        // seconds); the lost column records where they went
+        for &w in &verdict.lost {
+            self.comm.mark_lost(w);
+        }
         self.comm.stale_uploads += verdict.deferred.len() as u64;
         self.comm.lost_uploads += verdict.lost.len() as u64;
         self.comm.advance_clock(verdict.upload_dt_s);
         // phases 3 + 4 — aggregate the settled uploads, server step
         {
-            let mut ctx = RoundCtx {
-                k,
-                m,
-                upload_bytes: self.cfg.upload_bytes,
-                links: &self.links,
-                comm: &mut self.comm,
-                fresh: verdict.fresh,
-                deferred: verdict.deferred,
-            };
+            let mut ctx = round_ctx(&self.cfg, &self.links,
+                                    &mut self.comm, k, m,
+                                    verdict.fresh, verdict.deferred);
             self.algo.aggregate(&mut ctx)?;
             self.algo.server_update(&mut ctx, compute)?;
         }
         if self.cfg.trace_cap > 0 {
             if let Some(ev) = self.algo.round_event(k) {
                 self.trace.push(ev);
+            }
+        }
+        Ok(())
+    }
+
+    /// Socket-transport phases 1 + 2 of round `k`: handshake the worker
+    /// processes on first use, freeze the round server-side, ship each
+    /// worker its header (batch indices + unacknowledged theta/snapshot
+    /// ranges), and fold the wire step results back in worker order.
+    /// Simulated accounting (links, jitter, participation) is untouched
+    /// — it stays a pure function of the round — so a loopback socket
+    /// run is bit-identical to `InProc`.
+    fn wire_phases(&mut self, k: u64) -> anyhow::Result<()> {
+        let m = self.rngs.len();
+        let wire_ready = self
+            .wire
+            .as_ref()
+            .expect("socket server bound in build")
+            .needs_handshake();
+        if wire_ready {
+            // fingerprinting hashes the whole dataset: once per run,
+            // not per round
+            let data_fp = self.data.fingerprint();
+            let data_len = self.data.len();
+            let wcfg =
+                self.wire_cfg.as_ref().expect("wire cfg set in build");
+            self.wire
+                .as_mut()
+                .expect("socket server bound in build")
+                .handshake(wcfg, self.cfg.batch, data_len, data_fp)?;
+        }
+        // phase 1 — server -> workers
+        {
+            let mut ctx = round_ctx(&self.cfg, &self.links,
+                                    &mut self.comm, k, m,
+                                    Vec::new(), Vec::new());
+            self.algo.broadcast(&mut ctx)?;
+        }
+        // phase 2 — the server samples every worker's minibatch INDICES
+        // from the same per-worker RNG streams the in-process
+        // transports feed into `sample_batch`, and ships them in the
+        // round headers; workers gather from their own dataset copy, so
+        // the batches are bit-identical without batch payloads crossing
+        // the wire
+        let round = self.algo.make_wire_step(k)?;
+        let mut batches: Vec<Vec<u32>> = Vec::with_capacity(m);
+        for w in 0..m {
+            let picks = self.data.sample_picks(
+                &self.partition.shards[w],
+                self.cfg.batch,
+                &mut self.rngs[w],
+            );
+            batches.push(picks.into_iter().map(|i| i as u32).collect());
+        }
+        let steps = self
+            .wire
+            .as_mut()
+            .expect("socket server bound in build")
+            .run_round(&round, &batches)?;
+        {
+            let mut ctx = round_ctx(&self.cfg, &self.links,
+                                    &mut self.comm, k, m,
+                                    Vec::new(), Vec::new());
+            // the socket server reads connections in worker order, so
+            // the fold order (and therefore every float) matches the
+            // in-process transports; folding by POSITION (not by the
+            // step's self-reported id) lets the algorithm's
+            // step.w-vs-slot check catch a misordered drain
+            for (w, step) in steps.into_iter().enumerate() {
+                self.algo.absorb_wire_step(&mut ctx, w, step)?;
             }
         }
         Ok(())
@@ -531,6 +673,27 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
             sim_time_s: self.comm.sim_time_s,
             wall_s: wall0.elapsed().as_secs_f64(),
         }
+    }
+}
+
+/// Build one phase's [`RoundCtx`]: the single definition of how the
+/// run's config maps onto a round context, shared by every phase of
+/// both the in-process and the wire step paths (a method taking `&mut
+/// self` would conflict with the disjoint field borrows the call sites
+/// rely on).
+fn round_ctx<'c>(cfg: &TrainCfg, links: &'c LinkSet,
+                 comm: &'c mut CommStats, k: u64, m: usize,
+                 fresh: Vec<usize>, deferred: Vec<usize>)
+                 -> RoundCtx<'c> {
+    RoundCtx {
+        k,
+        m,
+        upload_bytes: cfg.upload_bytes,
+        broadcast_bytes: cfg.effective_broadcast_bytes(),
+        links,
+        comm,
+        fresh,
+        deferred,
     }
 }
 
@@ -625,6 +788,21 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         self
     }
 
+    /// Downlink broadcast payload (0, the default, means "same as
+    /// `upload_bytes`" — the seed's symmetric assumption).
+    pub fn broadcast_bytes(mut self, bytes: usize) -> Self {
+        self.cfg.broadcast_bytes = bytes;
+        self
+    }
+
+    /// Socket transport: the `host:port` the server listens on (port 0
+    /// binds an ephemeral port — read it back via
+    /// [`Trainer::wire_addr`]).
+    pub fn listen(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.comm.listen = addr.into();
+        self
+    }
+
     pub fn trace_cap(mut self, cap: usize) -> Self {
         self.cfg.trace_cap = cap;
         self
@@ -714,6 +892,30 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         let label = self
             .label
             .unwrap_or_else(|| algo.name().to_string());
+        // socket transport: verify the algorithm can speak the wire
+        // protocol and bind the listener NOW, so the caller can read
+        // the bound address (port 0 -> ephemeral) and launch worker
+        // processes before the first step blocks on the handshake
+        let (wire, wire_cfg) =
+            if self.cfg.comm.transport == TransportKind::Socket {
+                anyhow::ensure!(
+                    !self.cfg.comm.listen.is_empty(),
+                    "transport = \"socket\" needs a listen address \
+                     ([comm] listen / --listen / \
+                     TrainerBuilder::listen)"
+                );
+                let wcfg = algo.wire_config()?;
+                anyhow::ensure!(
+                    data.len() <= u32::MAX as usize,
+                    "the socket transport ships u32 batch indices; the \
+                     dataset has {} samples",
+                    data.len()
+                );
+                (Some(SocketServer::bind(&self.cfg.comm.listen, m)?),
+                 Some(wcfg))
+            } else {
+                (None, None)
+            };
         Ok(Trainer {
             trace: EventTrace::new(self.cfg.trace_cap),
             comm: CommStats::for_workers(m),
@@ -726,6 +928,8 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
             rngs,
             links,
             transport: None,
+            wire,
+            wire_cfg,
             poisoned: false,
         })
     }
@@ -854,9 +1058,12 @@ mod tests {
             cost_model: CostModel { compute_s: 0.125,
                                     ..CostModel::default() },
             upload_bytes: 4 * 23,
+            broadcast_bytes: 4 * 19,
             trace_cap: 128,
             comm: CommCfg {
-                transport: TransportKind::Threaded,
+                transport: TransportKind::Socket,
+                listen: "127.0.0.1:7700".into(),
+                connect: "cada-server:7700".into(),
                 server_shards: 4,
                 shard_exec: ShardExec::Scoped,
                 semi_sync_k: 7,
@@ -900,6 +1107,55 @@ mod tests {
             assert!(err.to_string().contains("non-negative integer"),
                     "{src}: {err}");
         }
+    }
+
+    #[test]
+    fn broadcast_bytes_default_follows_upload_bytes() {
+        // the 0 default keeps the seed's symmetric-payload assumption
+        // (and every golden run) intact; explicit values diverge the
+        // uplink and downlink honestly
+        let cfg = TrainCfg { upload_bytes: 92, ..TrainCfg::default() };
+        assert_eq!(cfg.effective_broadcast_bytes(), 92);
+        let split = TrainCfg {
+            upload_bytes: 92,
+            broadcast_bytes: 40,
+            ..TrainCfg::default()
+        };
+        assert_eq!(split.effective_broadcast_bytes(), 40);
+    }
+
+    #[test]
+    fn socket_transport_validates_at_build() {
+        let (_, data, partition) = workload();
+        // a missing listen address fails before any bind
+        let mut algo = Cada::new(CadaCfg::basic(RuleKind::Always,
+                                                amsgrad()));
+        let err = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1]))
+            .init_theta(vec![0.0; 1024])
+            .transport(TransportKind::Socket)
+            .build()
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("listen"), "{err}");
+        // local-update methods say so clearly instead of hanging a run
+        let mut algo = FedAvg::new(0.1, 2);
+        let err = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1]))
+            .init_theta(vec![0.0; 1024])
+            .transport(TransportKind::Socket)
+            .listen("127.0.0.1:0")
+            .build()
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("socket"), "{err}");
+        assert!(err.to_string().contains("fedavg"), "{err}");
     }
 
     #[test]

@@ -22,15 +22,24 @@
 //!   the slowest awaited worker), never additively per message — so
 //!   simulated time reflects stragglers.
 //! * [`Transport`] ([`transport`]) — HOW worker jobs execute: [`InProc`]
-//!   (sequential, the golden-parity reference) or [`Threaded`]
-//!   (persistent worker threads + channel mailboxes). Both are
-//!   bit-identical because every simulated quantity is a pure function
-//!   of the round, not of execution interleaving.
+//!   (sequential, the golden-parity reference), [`Threaded`]
+//!   (persistent worker threads + channel mailboxes), or the TCP
+//!   [`socket`] transport (one `cada serve` server process + M `cada
+//!   worker` processes speaking the length-prefixed [`wire`] protocol —
+//!   closures cannot cross a process boundary, so sockets ship a
+//!   serializable round: header with batch indices + theta/snapshot
+//!   delta-broadcasts down, step results + innovation deltas up). All
+//!   three are bit-identical because every simulated quantity is a pure
+//!   function of the round, not of execution interleaving — and floats
+//!   cross the wire as exact bit patterns.
 
 pub mod link;
+pub mod socket;
 pub mod transport;
+pub mod wire;
 
 pub use link::{LinkModel, LinkSet, Participation, RoundVerdict};
+pub use socket::{run_worker, SocketServer, WireStats, WorkerReport};
 pub use transport::{InProc, JobOut, Threaded, Transport, TransportKind,
                     WorkerJob};
 
@@ -65,11 +74,18 @@ pub struct CommStats {
     pub lost_uploads: u64,
     /// per-worker cumulative simulated seconds from round start to
     /// upload arrival — device compute + transmission — so both slow
-    /// links and slow devices show up as outliers here; sized by
+    /// links and slow devices show up as outliers here. Only FINITE
+    /// arrival times accumulate: a dead link's lost upload happened (it
+    /// is counted and charged), but its infinite "arrival" must not
+    /// poison the cumulative seconds forever; sized by
     /// [`CommStats::for_workers`]
     pub worker_upload_s: Vec<f64>,
     /// per-worker upload counts
     pub worker_uploads: Vec<u64>,
+    /// per-worker uploads transmitted into a dead link (counted in
+    /// `worker_uploads`, never delivered — the per-worker view of
+    /// [`CommStats::lost_uploads`])
+    pub worker_lost: Vec<u64>,
 }
 
 impl CommStats {
@@ -78,20 +94,35 @@ impl CommStats {
         CommStats {
             worker_upload_s: vec![0.0; m],
             worker_uploads: vec![0; m],
+            worker_lost: vec![0; m],
             ..Default::default()
         }
     }
 
     /// Count one upload by worker `w` whose simulated transmission takes
     /// `time_s`. Counters only — the event clock advances separately,
-    /// once per round, via [`CommStats::advance_clock`].
+    /// once per round, via [`CommStats::advance_clock`]. A non-finite
+    /// `time_s` (dead link) still counts the upload and its bytes — the
+    /// transmission happened — but is kept out of the per-worker
+    /// upload-seconds tally, which must stay renderable.
     pub fn count_upload(&mut self, w: usize, bytes: usize, time_s: f64) {
         self.uploads += 1;
         self.upload_bytes += bytes as u64;
-        if let Some(t) = self.worker_upload_s.get_mut(w) {
-            *t += time_s;
+        if time_s.is_finite() {
+            if let Some(t) = self.worker_upload_s.get_mut(w) {
+                *t += time_s;
+            }
         }
         if let Some(c) = self.worker_uploads.get_mut(w) {
+            *c += 1;
+        }
+    }
+
+    /// Mark worker `w`'s already-counted round upload as lost on a dead
+    /// link (the per-worker side of the engine's `lost_uploads`
+    /// classification).
+    pub fn mark_lost(&mut self, w: usize) {
+        if let Some(c) = self.worker_lost.get_mut(w) {
             *c += 1;
         }
     }
@@ -180,6 +211,13 @@ impl CostModel {
 #[derive(Clone, Debug, PartialEq)]
 pub struct CommCfg {
     pub transport: TransportKind,
+    /// socket transport, server side: the `host:port` the `cada serve`
+    /// process listens on (`[comm] listen` / `--listen`; port 0 binds
+    /// an ephemeral port). Empty unless the transport is `socket`.
+    pub listen: String,
+    /// socket transport, worker side: the server address a `cada
+    /// worker` process dials (`[comm] connect` / `--connect`)
+    pub connect: String,
     /// shard the server's parameter state (theta/h/vhat/aggregate) into
     /// this many contiguous ranges, folded and updated per shard
     /// (1 = sequential reference, 0 = one shard per available core).
@@ -214,6 +252,8 @@ impl Default for CommCfg {
     fn default() -> Self {
         CommCfg {
             transport: TransportKind::default(),
+            listen: String::new(),
+            connect: String::new(),
             server_shards: 1,
             shard_exec: ShardExec::default(),
             semi_sync_k: 0,
@@ -329,6 +369,14 @@ pub struct RoundEvent {
 /// Bounded in-memory event trace (ring buffer semantics). Backed by a
 /// `VecDeque` so eviction at capacity is O(1) — with a `Vec` the
 /// `remove(0)` shift made every traced round O(trace_cap) on long runs.
+///
+/// Allocation policy: [`EventTrace::new`] pre-reserves at most
+/// [`EventTrace::PREALLOC`] slots (a soft floor — an absurd `trace_cap`
+/// must not allocate gigabytes up front). A larger cap grows while the
+/// ring fills, doubling but **clamped to the cap** ([`EventTrace::push`]),
+/// so the backing buffer never overshoots `cap` the way unchecked
+/// `VecDeque` doubling would; once full, pushes evict without ever
+/// reallocating again.
 #[derive(Clone, Debug)]
 pub struct EventTrace {
     pub events: std::collections::VecDeque<RoundEvent>,
@@ -336,9 +384,13 @@ pub struct EventTrace {
 }
 
 impl EventTrace {
+    /// Soft floor of the up-front reservation (see the type docs).
+    pub const PREALLOC: usize = 4096;
+
     pub fn new(cap: usize) -> Self {
         EventTrace {
-            events: std::collections::VecDeque::with_capacity(cap.min(4096)),
+            events: std::collections::VecDeque::with_capacity(
+                cap.min(Self::PREALLOC)),
             cap,
         }
     }
@@ -349,6 +401,13 @@ impl EventTrace {
         }
         if self.events.len() == self.cap {
             self.events.pop_front();
+        } else if self.events.len() == self.events.capacity() {
+            // grow toward the cap without overshooting it: double, but
+            // never reserve past `cap` (plain push_back doubling would
+            // leave a cap-sized ring holding up to 2x cap slots)
+            let grow = (self.cap - self.events.len())
+                .min(self.events.len().max(1));
+            self.events.reserve_exact(grow);
         }
         self.events.push_back(ev);
     }
@@ -366,6 +425,9 @@ impl EventTrace {
         self.events.is_empty()
     }
 
+    /// The LOGICAL capacity (the `trace_cap` bound on retained events);
+    /// the backing allocation may be smaller until the ring has filled
+    /// (see the type-level allocation policy).
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -423,6 +485,28 @@ mod tests {
         assert_eq!(s.worker_uploads[3], 1);
         assert_eq!(s.worker_upload_s[3], 2.5);
         assert_eq!(s.worker_uploads[1], 0);
+    }
+
+    #[test]
+    fn lost_uploads_charge_counters_but_not_upload_seconds() {
+        // a dead link's upload is transmitted (count + bytes) but never
+        // arrives: its infinite time must not corrupt the per-worker
+        // seconds, and the lost column records where the bytes went
+        let mut s = CommStats::for_workers(3);
+        s.count_upload(0, 400, 1.5);
+        s.count_upload(1, 400, f64::INFINITY);
+        s.mark_lost(1);
+        assert_eq!(s.uploads, 2);
+        assert_eq!(s.upload_bytes, 800);
+        assert_eq!(s.worker_uploads, vec![1, 1, 0]);
+        assert_eq!(s.worker_upload_s, vec![1.5, 0.0, 0.0]);
+        assert_eq!(s.worker_lost, vec![0, 1, 0]);
+        assert!(s.worker_upload_s.iter().all(|t| t.is_finite()));
+        // NaN (a corrupt model rather than a dead link) is kept out too
+        s.count_upload(2, 400, f64::NAN);
+        assert_eq!(s.worker_upload_s[2], 0.0);
+        // out-of-range workers never panic
+        s.mark_lost(99);
     }
 
     #[test]
@@ -554,6 +638,36 @@ mod tests {
         });
         assert!(t.is_empty());
         assert_eq!(t.capacity(), 0);
+    }
+
+    #[test]
+    fn trace_growth_never_overshoots_the_cap() {
+        // a cap above the PREALLOC soft floor fills the ring by doubling
+        // clamped to the cap: the backing buffer ends at >= cap (one
+        // final exact reservation) and never at the 2x-cap a plain
+        // VecDeque doubling would leave behind
+        let cap = EventTrace::PREALLOC + 1904; // 6000
+        let mut t = EventTrace::new(cap);
+        assert!(t.events.capacity() < cap, "preallocation is soft-floored");
+        for i in 0..cap as u64 + 500 {
+            t.push(RoundEvent {
+                iter: i,
+                uploaded: vec![],
+                staleness: vec![],
+                mean_lhs: 0.0,
+                rhs: 0.0,
+            });
+        }
+        assert_eq!(t.len(), cap);
+        assert_eq!(t.capacity(), cap, "capacity() reports the logical cap");
+        assert!(t.events.capacity() >= cap);
+        assert!(t.events.capacity() < 2 * cap,
+                "ring over-allocated: {} slots for cap {cap}",
+                t.events.capacity());
+        assert_eq!(t.events.front().unwrap().iter, 500);
+        // an absurd cap must not preallocate absurd memory
+        let huge = EventTrace::new(usize::MAX / 1024);
+        assert!(huge.events.capacity() <= EventTrace::PREALLOC);
     }
 
     #[test]

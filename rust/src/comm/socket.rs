@@ -1,0 +1,628 @@
+//! The TCP socket transport: one training run spanning real OS
+//! processes — a [`SocketServer`] inside the server process's
+//! [`Trainer`](crate::algorithms::Trainer) and one [`run_worker`] loop
+//! per worker process (`cada serve` / `cada worker`).
+//!
+//! Because a [`WorkerJob`](super::WorkerJob) is a closure, the socket
+//! transport does not execute jobs — it speaks the serializable round
+//! protocol of [`super::wire`]: per round, the server ships each worker
+//! a [`RoundMsg`](super::wire::RoundMsg) (iteration, frozen RHS,
+//! server-sampled batch indices, and theta/snapshot *delta broadcasts* —
+//! only shard ranges whose version advanced since that worker's last
+//! acknowledged round) and collects one
+//! [`WireStep`](super::wire::WireStep) per worker. Every simulated
+//! quantity (link times, jitter, participation) stays a pure function
+//! of the round on the server, and floats cross the wire bit-exactly,
+//! so a loopback socket run reproduces `InProc` bit-for-bit (enforced
+//! by `tests/golden_parity.rs::socket_matches_inproc_bit_for_bit`).
+//!
+//! Unlike the simulated `upload_bytes` config constant, [`WireStats`]
+//! counts the bytes that actually crossed the wire — the measured
+//! upload/broadcast sizes the compressed-upload line of work needs.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Msg, RoundMsg, WireRound, WireStep, WireWorkerCfg};
+use crate::coordinator::worker::WorkerState;
+use crate::data::Dataset;
+use crate::runtime::Compute;
+
+/// How long the server waits for workers to connect / answer, and a
+/// worker waits for the next round, before declaring the peer hung.
+/// Generous: a slow CI box must never trip it, a genuine hang must not
+/// stall a job forever.
+pub const SOCKET_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Measured wire traffic of one socket run (actual bytes on the wire,
+/// not the simulated `upload_bytes` constant).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// rounds driven over the wire
+    pub rounds: u64,
+    /// server -> worker bytes (handshake + round headers): the measured
+    /// broadcast/download traffic
+    pub bytes_sent: u64,
+    /// worker -> server bytes (handshake + step results): the measured
+    /// upload traffic
+    pub bytes_received: u64,
+    /// theta ranges shipped in round headers (dirty ranges only)
+    pub theta_ranges_sent: u64,
+    /// payload bytes of those theta ranges (4 bytes per f32)
+    pub theta_range_bytes: u64,
+    /// CADA1 snapshot ranges shipped (only after a refresh)
+    pub snapshot_ranges_sent: u64,
+    pub snapshot_range_bytes: u64,
+}
+
+/// One connected worker process, with the per-shard versions it last
+/// acknowledged (the delta-broadcast bookkeeping).
+struct WorkerConn {
+    stream: TcpStream,
+    /// per-shard theta versions this worker holds (empty = nothing yet)
+    held_theta: Vec<u64>,
+    /// snapshot version this worker holds
+    held_snap: Option<u64>,
+}
+
+/// Server side of the socket transport: owns the listener, the M worker
+/// connections, their ack state, and the measured byte counters.
+pub struct SocketServer {
+    listener: TcpListener,
+    conns: Vec<WorkerConn>,
+    m: usize,
+    stats: WireStats,
+    scratch: Vec<u8>,
+    timeout: Duration,
+}
+
+impl SocketServer {
+    /// Bind the listen address (port 0 picks an ephemeral port; see
+    /// [`SocketServer::local_addr`]). Workers are accepted later, by
+    /// [`SocketServer::handshake`] — so a caller can learn the bound
+    /// address and launch workers before the first round blocks.
+    pub fn bind(addr: &str, m: usize) -> anyhow::Result<SocketServer> {
+        anyhow::ensure!(m >= 1, "socket transport needs >= 1 worker");
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            anyhow::anyhow!("binding socket transport on {addr}: {e}")
+        })?;
+        Ok(SocketServer {
+            listener,
+            conns: Vec::new(),
+            m,
+            stats: WireStats::default(),
+            scratch: Vec::new(),
+            timeout: SOCKET_TIMEOUT,
+        })
+    }
+
+    /// The bound listen address (the actual port when bound to port 0).
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Number of worker processes this server coordinates.
+    pub fn workers(&self) -> usize {
+        self.m
+    }
+
+    /// Measured wire traffic so far.
+    pub fn stats(&self) -> &WireStats {
+        &self.stats
+    }
+
+    /// Does the next round need to accept + handshake workers first?
+    /// (Lets the caller compute the dataset fingerprint only once.)
+    pub fn needs_handshake(&self) -> bool {
+        self.conns.is_empty()
+    }
+
+    /// Accept the M worker connections and exchange the handshake
+    /// (no-op once connected): each worker's `Hello` fingerprint
+    /// (dataset length + content checksum, backend parameter count)
+    /// must match this run, and gets back a `Welcome` with its assigned
+    /// id and the static run config.
+    pub fn handshake(&mut self, cfg: &WireWorkerCfg, batch: usize,
+                     data_len: usize, data_fp: u64) -> anyhow::Result<()> {
+        if !self.conns.is_empty() {
+            return Ok(());
+        }
+        self.listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + self.timeout;
+        while self.conns.len() < self.m {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let w = self.conns.len();
+                    self.greet(stream, peer, w, cfg, batch, data_len,
+                               data_fp)
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "handshake with worker {w} ({peer}): {e:#}")
+                        })?;
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "timed out waiting for {} of {} worker \
+                         process(es) to connect (start them with `cada \
+                         worker --connect <this address>`)",
+                        self.m - self.conns.len(),
+                        self.m
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        self.listener.set_nonblocking(false)?;
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn greet(&mut self, mut stream: TcpStream, peer: SocketAddr, w: usize,
+             cfg: &WireWorkerCfg, batch: usize, data_len: usize,
+             data_fp: u64) -> anyhow::Result<()> {
+        stream.set_nodelay(true)?;
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        let hello = match wire::recv(&mut stream, &mut self.scratch)? {
+            Some((msg, bytes)) => {
+                self.stats.bytes_received += bytes as u64;
+                msg
+            }
+            None => anyhow::bail!("{peer} closed before saying hello"),
+        };
+        let (n, fp, p) = match hello {
+            Msg::Hello { n, fp, p } => (n as usize, fp, p as usize),
+            other => anyhow::bail!("expected Hello, got {other:?}"),
+        };
+        anyhow::ensure!(
+            n == data_len,
+            "worker dataset has {n} samples, this run needs {data_len} \
+             (same preset/seed/n on both sides?)"
+        );
+        // length alone cannot tell a wrong --seed/--run apart: the
+        // content checksum fails silent divergence at connect time
+        anyhow::ensure!(
+            fp == data_fp,
+            "worker dataset content differs from this run's \
+             (fingerprint {fp:#018x} vs {data_fp:#018x}): same \
+             preset/seed/n/run on both sides?"
+        );
+        anyhow::ensure!(
+            p == cfg.p,
+            "worker backend has p = {p}, this run needs p = {}",
+            cfg.p
+        );
+        let welcome = Msg::Welcome {
+            w: w as u32,
+            m: self.m as u32,
+            batch: batch as u32,
+            cfg: *cfg,
+        };
+        self.stats.bytes_sent +=
+            wire::send(&mut stream, &welcome, &mut self.scratch)? as u64;
+        self.conns.push(WorkerConn {
+            stream,
+            held_theta: Vec::new(),
+            held_snap: None,
+        });
+        Ok(())
+    }
+
+    /// Build worker `w`'s round header: the shared round state plus only
+    /// the ranges this connection has not acknowledged at the current
+    /// version.
+    fn header_for(conn: &mut WorkerConn, round: &WireRound,
+                  batch: &[u32], stats: &mut WireStats) -> RoundMsg {
+        let mut theta = Vec::new();
+        for (s, r) in round.layout.ranges().enumerate() {
+            if r.is_empty() {
+                continue;
+            }
+            if conn.held_theta.get(s) != Some(&round.versions[s]) {
+                stats.theta_ranges_sent += 1;
+                stats.theta_range_bytes += 4 * r.len() as u64;
+                theta.push(wire::RangeDelta {
+                    start: r.start as u32,
+                    data: round.theta[r].to_vec(),
+                });
+            }
+        }
+        conn.held_theta.clear();
+        conn.held_theta.extend_from_slice(&round.versions);
+        let mut snapshot = Vec::new();
+        if let Some((snap, version)) = &round.snapshot {
+            if conn.held_snap != Some(*version) {
+                stats.snapshot_ranges_sent += 1;
+                stats.snapshot_range_bytes += 4 * snap.len() as u64;
+                snapshot.push(wire::RangeDelta {
+                    start: 0,
+                    data: snap.as_slice().to_vec(),
+                });
+                conn.held_snap = Some(*version);
+            }
+        }
+        RoundMsg {
+            k: round.k,
+            rhs: round.rhs,
+            batch: batch.to_vec(),
+            theta,
+            snapshot,
+        }
+    }
+
+    /// Drive one round across the worker processes: ship each its
+    /// header, collect one step result per worker, and return them in
+    /// worker order. On a failure mid-round the results of workers that
+    /// did receive a header are still drained (mirroring the `Threaded`
+    /// transport), then the first error is returned.
+    pub fn run_round(&mut self, round: &WireRound,
+                     batches: &[Vec<u32>])
+                     -> anyhow::Result<Vec<WireStep>> {
+        anyhow::ensure!(
+            self.conns.len() == self.m && batches.len() == self.m,
+            "run_round wants {} workers (have {} connected, {} batches)",
+            self.m,
+            self.conns.len(),
+            batches.len()
+        );
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut dispatched = 0usize;
+        for (w, conn) in self.conns.iter_mut().enumerate() {
+            let header = Self::header_for(conn, round, &batches[w],
+                                          &mut self.stats);
+            match wire::send(&mut conn.stream, &Msg::Round(header),
+                             &mut self.scratch) {
+                Ok(bytes) => {
+                    self.stats.bytes_sent += bytes as u64;
+                    dispatched += 1;
+                }
+                Err(e) => {
+                    first_err = Some(anyhow::anyhow!(
+                        "sending round {} to worker {w}: {e:#}",
+                        round.k
+                    ));
+                    break;
+                }
+            }
+        }
+        // collect every dispatched worker's result, draining even after
+        // an error so no completion leaks into a later read
+        let mut steps = Vec::with_capacity(dispatched);
+        for (w, conn) in self.conns.iter_mut().take(dispatched).enumerate()
+        {
+            match wire::recv(&mut conn.stream, &mut self.scratch) {
+                Ok(Some((Msg::Step(step), bytes))) => {
+                    self.stats.bytes_received += bytes as u64;
+                    if step.w != w {
+                        if first_err.is_none() {
+                            first_err = Some(anyhow::anyhow!(
+                                "worker {w} answered as worker {}",
+                                step.w
+                            ));
+                        }
+                        continue;
+                    }
+                    steps.push(step);
+                }
+                Ok(Some((other, _))) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "worker {w}: expected a step result, got \
+                             {other:?}"
+                        ));
+                    }
+                }
+                Ok(None) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "worker {w} disconnected during round {}",
+                            round.k
+                        ));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "reading worker {w}'s round-{} result: {e:#}",
+                            round.k
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        self.stats.rounds += 1;
+        Ok(steps)
+    }
+}
+
+impl Drop for SocketServer {
+    fn drop(&mut self) {
+        // best-effort: let worker processes exit cleanly instead of
+        // discovering the EOF
+        for conn in &mut self.conns {
+            let _ = wire::send(&mut conn.stream, &Msg::Shutdown,
+                               &mut self.scratch);
+        }
+    }
+}
+
+/// Outcome of one worker process's run (logging/tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerReport {
+    /// the id the server assigned in the handshake
+    pub w: usize,
+    pub rounds: u64,
+    pub uploads: u64,
+}
+
+/// Connect with retries until `timeout` (the server process may still
+/// be binding when a worker launches). Every attempt is individually
+/// bounded via [`TcpStream::connect_timeout`], so a black-holed SYN
+/// (firewall DROP) cannot stretch the overall deadline by the kernel's
+/// multi-minute TCP connect timeout.
+pub fn connect_retry(addr: &str, timeout: Duration)
+                     -> anyhow::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let deadline = Instant::now() + timeout;
+    let mut last_err = String::from("no addresses resolved");
+    loop {
+        // re-resolve each attempt: the name may start resolving while
+        // the server host boots
+        match addr.to_socket_addrs() {
+            Ok(addrs) => {
+                for sa in addrs {
+                    let left = deadline
+                        .saturating_duration_since(Instant::now());
+                    // per-attempt bound: short enough to stay
+                    // responsive, never zero (connect_timeout rejects
+                    // a zero duration)
+                    let per = left
+                        .min(Duration::from_secs(5))
+                        .max(Duration::from_millis(50));
+                    match TcpStream::connect_timeout(&sa, per) {
+                        Ok(stream) => return Ok(stream),
+                        Err(e) => last_err = e.to_string(),
+                    }
+                }
+            }
+            Err(e) => last_err = e.to_string(),
+        }
+        if Instant::now() >= deadline {
+            return Err(anyhow::anyhow!(
+                "connecting to cada server at {addr}: {last_err}"));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The worker process's whole life: connect, handshake, then answer
+/// round headers until the server says shutdown (or closes the
+/// connection between rounds, which a finished run also does).
+///
+/// `data` must be the same dataset the server samples indices from
+/// (same preset, run seed and size — the handshake cross-checks both
+/// the length and a whole-dataset content fingerprint), and `compute`
+/// a backend with the server's parameter count.
+pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
+                  -> anyhow::Result<WorkerReport> {
+    let mut stream = connect_retry(addr, SOCKET_TIMEOUT)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(SOCKET_TIMEOUT))?;
+    let mut scratch = Vec::new();
+    wire::send(
+        &mut stream,
+        &Msg::Hello {
+            n: data.len() as u64,
+            fp: data.fingerprint(),
+            p: compute.p_pad() as u64,
+        },
+        &mut scratch,
+    )?;
+    let welcome = wire::recv(&mut stream, &mut scratch)?;
+    let (w, cfg, batch) = match welcome {
+        Some((Msg::Welcome { w, cfg, batch, .. }, _)) => {
+            (w as usize, cfg, batch as usize)
+        }
+        Some((other, _)) => {
+            anyhow::bail!("expected Welcome, got {other:?}")
+        }
+        None => anyhow::bail!(
+            "server closed during the handshake (dataset/backend \
+             mismatch, or too many workers for this run?)"
+        ),
+    };
+    anyhow::ensure!(
+        cfg.p == compute.p_pad(),
+        "server wants p = {}, backend has p = {}",
+        cfg.p,
+        compute.p_pad()
+    );
+    let mut state = WorkerState::new(w, cfg.p, cfg.rule);
+    let mut theta = vec![0.0f32; cfg.p];
+    let mut snapshot = cfg
+        .rule
+        .needs_snapshot()
+        .then(|| vec![0.0f32; cfg.p]);
+    let mut report = WorkerReport { w, rounds: 0, uploads: 0 };
+    loop {
+        let round = match wire::recv(&mut stream, &mut scratch)? {
+            Some((Msg::Round(round), _)) => round,
+            Some((Msg::Shutdown, _)) | None => return Ok(report),
+            Some((other, _)) => {
+                anyhow::bail!("expected a round header, got {other:?}")
+            }
+        };
+        for delta in &round.theta {
+            delta.apply(&mut theta)?;
+        }
+        if let Some(snap) = snapshot.as_mut() {
+            for delta in &round.snapshot {
+                delta.apply(snap)?;
+            }
+        }
+        anyhow::ensure!(
+            round.batch.len() == batch,
+            "round {} header carries {} batch indices, expected {batch}",
+            round.k,
+            round.batch.len()
+        );
+        let mut picks = Vec::with_capacity(round.batch.len());
+        for &i in &round.batch {
+            let i = i as usize;
+            anyhow::ensure!(
+                i < data.len(),
+                "round {} batch index {i} outside the {}-sample dataset \
+                 (mismatched dataset?)",
+                round.k,
+                data.len()
+            );
+            picks.push(i);
+        }
+        let minibatch = data.gather(&picks);
+        let step = state.step(
+            round.k,
+            cfg.rule,
+            cfg.max_delay,
+            &theta,
+            snapshot.as_deref(),
+            round.rhs,
+            &minibatch,
+            compute,
+            cfg.use_artifact_innov,
+        )?;
+        let delta = if step.decision.upload {
+            report.uploads += 1;
+            state.last_delta().to_vec()
+        } else {
+            Vec::new()
+        };
+        wire::send(
+            &mut stream,
+            &Msg::Step(WireStep {
+                w,
+                decision: step.decision,
+                lhs: step.lhs,
+                loss: step.loss,
+                grad_evals: step.grad_evals,
+                delta,
+            }),
+            &mut scratch,
+        )?;
+        report.rounds += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shard::ShardLayout;
+    use std::sync::Arc;
+
+    fn round(k: u64, p: usize, shards: usize, versions: Vec<u64>,
+             snapshot: Option<(Arc<Vec<f32>>, u64)>) -> WireRound {
+        WireRound {
+            k,
+            rhs: 0.5,
+            theta: Arc::new((0..p).map(|i| i as f32).collect()),
+            layout: ShardLayout::new(p, shards),
+            versions,
+            snapshot,
+        }
+    }
+
+    #[test]
+    fn header_ships_only_dirty_ranges() {
+        let p = 2048;
+        let snap = Arc::new(vec![1.0f32; p]);
+        let mut conn = WorkerConn {
+            // a bound-but-unused stream stand-in is overkill; connect a
+            // loopback pair just to own a TcpStream
+            stream: loopback_stream(),
+            held_theta: Vec::new(),
+            held_snap: None,
+        };
+        let mut stats = WireStats::default();
+        // first round: everything is dirty
+        let r0 = round(0, p, 2, vec![0, 0], Some((Arc::clone(&snap), 1)));
+        let h0 = SocketServer::header_for(&mut conn, &r0, &[3, 1],
+                                          &mut stats);
+        assert_eq!(h0.theta.len(), 2);
+        assert_eq!(h0.snapshot.len(), 1);
+        assert_eq!(h0.batch, vec![3, 1]);
+        assert_eq!(stats.theta_ranges_sent, 2);
+        assert_eq!(stats.theta_range_bytes, 4 * p as u64);
+        assert_eq!(stats.snapshot_ranges_sent, 1);
+        // second round: shard 1 moved, snapshot did not
+        let r1 = round(1, p, 2, vec![0, 1], Some((snap, 1)));
+        let h1 = SocketServer::header_for(&mut conn, &r1, &[2, 2],
+                                          &mut stats);
+        assert_eq!(h1.theta.len(), 1);
+        assert_eq!(h1.theta[0].start, 1024);
+        assert!(h1.snapshot.is_empty());
+        assert_eq!(stats.theta_ranges_sent, 3);
+        assert_eq!(stats.snapshot_ranges_sent, 1);
+    }
+
+    fn loopback_stream() -> TcpStream {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stream = TcpStream::connect(addr).unwrap();
+        let _accepted = listener.accept().unwrap();
+        stream
+    }
+
+    #[test]
+    fn handshake_rejects_mismatched_fingerprints() {
+        let cfg = WireWorkerCfg {
+            rule: crate::coordinator::rules::RuleKind::Always,
+            max_delay: 50,
+            use_artifact_innov: false,
+            p: 64,
+        };
+        let mut server = SocketServer::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let bad = std::thread::spawn(move || {
+            let mut stream =
+                connect_retry(&addr, Duration::from_secs(10)).unwrap();
+            let mut scratch = Vec::new();
+            // dataset length 7 != the server's 100
+            wire::send(&mut stream, &Msg::Hello { n: 7, fp: 1, p: 64 },
+                       &mut scratch)
+                .unwrap();
+            // the server drops us without a Welcome
+            assert!(wire::recv(&mut stream, &mut scratch)
+                .map(|m| m.is_none())
+                .unwrap_or(true));
+        });
+        let err = server.handshake(&cfg, 8, 100, 1).unwrap_err();
+        assert!(err.to_string().contains("samples"), "{err}");
+        bad.join().unwrap();
+
+        // right length, wrong CONTENT: the fingerprint catches a worker
+        // regenerated from the wrong seed/run
+        let mut server = SocketServer::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let bad = std::thread::spawn(move || {
+            let mut stream =
+                connect_retry(&addr, Duration::from_secs(10)).unwrap();
+            let mut scratch = Vec::new();
+            wire::send(&mut stream,
+                       &Msg::Hello { n: 100, fp: 2, p: 64 },
+                       &mut scratch)
+                .unwrap();
+            assert!(wire::recv(&mut stream, &mut scratch)
+                .map(|m| m.is_none())
+                .unwrap_or(true));
+        });
+        let err = server.handshake(&cfg, 8, 100, 1).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        bad.join().unwrap();
+    }
+}

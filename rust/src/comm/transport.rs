@@ -47,6 +47,13 @@ pub enum TransportKind {
     #[default]
     InProc,
     Threaded,
+    /// TCP sockets across OS processes: `WorkerJob`s cannot cross a
+    /// process boundary, so this transport is driven through the
+    /// serializable round protocol of [`crate::comm::wire`] (a
+    /// [`SocketServer`](crate::comm::socket::SocketServer) inside the
+    /// trainer + one `cada worker` process per worker) instead of
+    /// [`Transport::execute`].
+    Socket,
 }
 
 impl TransportKind {
@@ -54,8 +61,10 @@ impl TransportKind {
         match s {
             "inproc" => Ok(TransportKind::InProc),
             "threaded" => Ok(TransportKind::Threaded),
+            "socket" => Ok(TransportKind::Socket),
             other => anyhow::bail!(
-                "unknown transport '{other}' (have: inproc, threaded)"),
+                "unknown transport '{other}' (have: inproc, threaded, \
+                 socket)"),
         }
     }
 
@@ -63,6 +72,7 @@ impl TransportKind {
         match self {
             TransportKind::InProc => "inproc",
             TransportKind::Threaded => "threaded",
+            TransportKind::Socket => "socket",
         }
     }
 }
@@ -367,7 +377,10 @@ mod tests {
                    TransportKind::InProc);
         assert_eq!(TransportKind::parse("threaded").unwrap(),
                    TransportKind::Threaded);
+        assert_eq!(TransportKind::parse("socket").unwrap(),
+                   TransportKind::Socket);
         assert!(TransportKind::parse("carrier-pigeon").is_err());
         assert_eq!(TransportKind::Threaded.name(), "threaded");
+        assert_eq!(TransportKind::Socket.name(), "socket");
     }
 }

@@ -1,0 +1,666 @@
+//! The socket transport's round protocol: a hand-rolled, length-prefixed
+//! binary codec (repo policy: vendored/offline, no serde) carrying one
+//! training round across OS processes.
+//!
+//! A [`WorkerJob`](super::WorkerJob) is a closure — it cannot cross a
+//! process boundary — so the socket transport speaks in *data*, not
+//! code. The message set mirrors one round of the engine:
+//!
+//! * [`Msg::Hello`] / [`Msg::Welcome`] — the handshake: the worker
+//!   announces its dataset/backend fingerprint, the server assigns a
+//!   worker id and ships the static per-run config ([`WireWorkerCfg`]:
+//!   rule, max delay, parameter count, batch size).
+//! * [`Msg::Round`] — the round header: iteration `k`, the frozen drift
+//!   RHS, the server-sampled minibatch indices, and the theta /
+//!   CADA1-snapshot **delta broadcasts** — only shard ranges whose
+//!   [`SnapshotBuffers`](crate::coordinator::shard::SnapshotBuffers)
+//!   version advanced since the worker's last acknowledged round ship
+//!   as [`RangeDelta`]s.
+//! * [`Msg::Step`] — the worker's result: the upload decision, rule
+//!   LHS, loss, gradient-evaluation count, and (on upload) the
+//!   innovation delta.
+//! * [`Msg::Shutdown`] — drain and exit the worker process.
+//!
+//! Framing is `[u32 LE payload length][payload]`, payload byte 0 a
+//! message tag; all integers little-endian, floats as their LE bit
+//! patterns — so every `f32`/`f64` round-trips bit-exactly, which is
+//! what lets the socket transport reproduce `InProc` golden runs
+//! bit-for-bit. Frames are capped at [`MAX_FRAME`] so a corrupt or
+//! hostile length prefix cannot OOM the peer.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use crate::coordinator::rules::{Decision, RuleKind};
+use crate::coordinator::shard::ShardLayout;
+
+/// Protocol magic ("CADA") + version; bumped on any wire-format change.
+pub const MAGIC: u32 = 0x4341_4441;
+pub const PROTO_VERSION: u16 = 1;
+
+/// Upper bound on one frame's payload (a 2.7M-parameter delta is ~11 MB;
+/// 256 MB leaves headroom for every artifact spec while keeping a
+/// garbage length prefix from allocating the moon).
+pub const MAX_FRAME: usize = 256 << 20;
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_ROUND: u8 = 3;
+const TAG_STEP: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+/// Static per-run worker configuration, shipped once in the handshake.
+/// Produced by [`Algorithm::wire_config`](crate::algorithms::Algorithm::wire_config)
+/// (server-centric methods only for now).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireWorkerCfg {
+    pub rule: RuleKind,
+    /// D: staleness cap forcing an upload
+    pub max_delay: u32,
+    /// route innovation norms through the Pallas artifact
+    pub use_artifact_innov: bool,
+    /// parameter count (padded); worker buffers are sized by this
+    pub p: usize,
+}
+
+/// One contiguous dirty range of a broadcast vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RangeDelta {
+    pub start: u32,
+    pub data: Vec<f32>,
+}
+
+impl RangeDelta {
+    /// Overwrite `dst[start..start+len]` with this delta.
+    pub fn apply(&self, dst: &mut [f32]) -> anyhow::Result<()> {
+        let start = self.start as usize;
+        let end = start
+            .checked_add(self.data.len())
+            .filter(|&e| e <= dst.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "range delta {}..{} exceeds the {}-parameter vector",
+                    start,
+                    start + self.data.len(),
+                    dst.len()
+                )
+            })?;
+        dst[start..end].copy_from_slice(&self.data);
+        Ok(())
+    }
+}
+
+/// One round header as it crosses the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundMsg {
+    pub k: u64,
+    /// the round's frozen drift threshold RHS
+    pub rhs: f64,
+    /// server-sampled minibatch indices into the worker's dataset copy
+    pub batch: Vec<u32>,
+    /// theta^k ranges dirtied since this worker's last ack
+    pub theta: Vec<RangeDelta>,
+    /// CADA1 snapshot ranges (empty between refreshes)
+    pub snapshot: Vec<RangeDelta>,
+}
+
+/// One worker's round result as it crosses the wire (the
+/// [`WorkerStep`](crate::coordinator::worker::WorkerStep) fields plus
+/// the innovation payload).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireStep {
+    pub w: usize,
+    pub decision: Decision,
+    pub lhs: f64,
+    pub loss: f32,
+    pub grad_evals: u64,
+    /// innovation delta_m^k; empty unless `decision.upload`
+    pub delta: Vec<f32>,
+}
+
+/// Server-side frozen state of one round, produced by
+/// [`Algorithm::make_wire_step`](crate::algorithms::Algorithm::make_wire_step):
+/// everything the socket transport needs to build per-worker round
+/// headers (per-worker dirtiness is the transport's job — it tracks
+/// what each connection last acknowledged).
+#[derive(Clone, Debug)]
+pub struct WireRound {
+    pub k: u64,
+    pub rhs: f64,
+    /// the round-frozen theta^k view
+    pub theta: Arc<Vec<f32>>,
+    /// the server's shard layout: delta-broadcast granularity
+    pub layout: ShardLayout,
+    /// per-shard versions of `theta` at freeze time
+    pub versions: Vec<u64>,
+    /// CADA1 snapshot view and its refresh version (None for rules
+    /// without a snapshot)
+    pub snapshot: Option<(Arc<Vec<f32>>, u64)>,
+}
+
+/// Every message the socket protocol speaks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// worker -> server: dataset length + content fingerprint
+    /// ([`Dataset::fingerprint`](crate::data::Dataset::fingerprint))
+    /// + backend parameter count, so a mismatched worker — wrong
+    /// seed/run/preset, even at the same dataset size — fails the
+    /// handshake instead of silently diverging later
+    Hello { n: u64, fp: u64, p: u64 },
+    /// server -> worker: assigned id + static run config
+    Welcome {
+        w: u32,
+        m: u32,
+        batch: u32,
+        cfg: WireWorkerCfg,
+    },
+    Round(RoundMsg),
+    Step(WireStep),
+    Shutdown,
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u32(buf, v.len() as u32);
+    buf.reserve(4 * v.len());
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_deltas(buf: &mut Vec<u8>, deltas: &[RangeDelta]) {
+    put_u32(buf, deltas.len() as u32);
+    for d in deltas {
+        put_u32(buf, d.start);
+        put_f32s(buf, &d.data);
+    }
+}
+
+fn put_rule(buf: &mut Vec<u8>, rule: RuleKind) {
+    let (tag, c, h) = match rule {
+        RuleKind::Always => (0u8, 0.0, 0u32),
+        RuleKind::Cada1 { c } => (1, c, 0),
+        RuleKind::Cada2 { c } => (2, c, 0),
+        RuleKind::Lag { c } => (3, c, 0),
+        RuleKind::Periodic { h } => (4, 0.0, h),
+        RuleKind::Never => (5, 0.0, 0),
+    };
+    buf.push(tag);
+    put_f32(buf, c);
+    put_u32(buf, h);
+}
+
+/// Serialize `msg` into `buf` (cleared first; no length prefix — that is
+/// [`write_frame`]'s job).
+pub fn encode(msg: &Msg, buf: &mut Vec<u8>) {
+    buf.clear();
+    match msg {
+        Msg::Hello { n, fp, p } => {
+            buf.push(TAG_HELLO);
+            put_u32(buf, MAGIC);
+            put_u16(buf, PROTO_VERSION);
+            put_u64(buf, *n);
+            put_u64(buf, *fp);
+            put_u64(buf, *p);
+        }
+        Msg::Welcome { w, m, batch, cfg } => {
+            buf.push(TAG_WELCOME);
+            put_u32(buf, MAGIC);
+            put_u16(buf, PROTO_VERSION);
+            put_u32(buf, *w);
+            put_u32(buf, *m);
+            put_u32(buf, *batch);
+            put_rule(buf, cfg.rule);
+            put_u32(buf, cfg.max_delay);
+            buf.push(cfg.use_artifact_innov as u8);
+            put_u64(buf, cfg.p as u64);
+        }
+        Msg::Round(r) => {
+            buf.push(TAG_ROUND);
+            put_u64(buf, r.k);
+            put_f64(buf, r.rhs);
+            put_u32(buf, r.batch.len() as u32);
+            for &i in &r.batch {
+                put_u32(buf, i);
+            }
+            put_deltas(buf, &r.theta);
+            put_deltas(buf, &r.snapshot);
+        }
+        Msg::Step(s) => {
+            buf.push(TAG_STEP);
+            put_u32(buf, s.w as u32);
+            buf.push(s.decision.upload as u8);
+            buf.push(s.decision.rule_triggered as u8);
+            put_f64(buf, s.lhs);
+            put_f32(buf, s.loss);
+            put_u64(buf, s.grad_evals);
+            put_f32s(buf, &s.delta);
+        }
+        Msg::Shutdown => buf.push(TAG_SHUTDOWN),
+    }
+}
+
+// ---------------------------------------------------------------- decode
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.b.len());
+        let end = end.ok_or_else(|| {
+            anyhow::anyhow!(
+                "truncated wire message: wanted {n} bytes at offset {} of {}",
+                self.pos,
+                self.b.len()
+            )
+        })?;
+        let out = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("len 2")))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+    }
+
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+    }
+
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(4 * n)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().expect("len 4")));
+        }
+        Ok(out)
+    }
+
+    fn deltas(&mut self) -> anyhow::Result<Vec<RangeDelta>> {
+        let n = self.u32()? as usize;
+        // each delta is at least 8 header bytes; reject counts the
+        // remaining payload cannot possibly hold
+        anyhow::ensure!(
+            n <= (self.b.len() - self.pos) / 8,
+            "corrupt wire message: {n} range deltas in {} bytes",
+            self.b.len() - self.pos
+        );
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let start = self.u32()?;
+            let data = self.f32s()?;
+            out.push(RangeDelta { start, data });
+        }
+        Ok(out)
+    }
+
+    fn rule(&mut self) -> anyhow::Result<RuleKind> {
+        let tag = self.u8()?;
+        let c = self.f32()?;
+        let h = self.u32()?;
+        Ok(match tag {
+            0 => RuleKind::Always,
+            1 => RuleKind::Cada1 { c },
+            2 => RuleKind::Cada2 { c },
+            3 => RuleKind::Lag { c },
+            4 => RuleKind::Periodic { h },
+            5 => RuleKind::Never,
+            other => anyhow::bail!("unknown wire rule tag {other}"),
+        })
+    }
+
+    fn check_magic(&mut self) -> anyhow::Result<()> {
+        let magic = self.u32()?;
+        let proto = self.u16()?;
+        anyhow::ensure!(
+            magic == MAGIC,
+            "peer is not speaking the cada wire protocol \
+             (magic {magic:#x})"
+        );
+        anyhow::ensure!(
+            proto == PROTO_VERSION,
+            "wire protocol version mismatch: peer {proto}, \
+             ours {PROTO_VERSION}"
+        );
+        Ok(())
+    }
+}
+
+/// Parse one payload produced by [`encode`].
+pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
+    let mut r = Reader { b: payload, pos: 0 };
+    let msg = match r.u8()? {
+        TAG_HELLO => {
+            r.check_magic()?;
+            Msg::Hello { n: r.u64()?, fp: r.u64()?, p: r.u64()? }
+        }
+        TAG_WELCOME => {
+            r.check_magic()?;
+            let w = r.u32()?;
+            let m = r.u32()?;
+            let batch = r.u32()?;
+            let rule = r.rule()?;
+            let max_delay = r.u32()?;
+            let use_artifact_innov = r.u8()? != 0;
+            let p = r.u64()? as usize;
+            Msg::Welcome {
+                w,
+                m,
+                batch,
+                cfg: WireWorkerCfg { rule, max_delay, use_artifact_innov, p },
+            }
+        }
+        TAG_ROUND => {
+            let k = r.u64()?;
+            let rhs = r.f64()?;
+            let nb = r.u32()? as usize;
+            anyhow::ensure!(
+                nb <= (r.b.len() - r.pos) / 4,
+                "corrupt wire message: {nb} batch indices in {} bytes",
+                r.b.len() - r.pos
+            );
+            let mut batch = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                batch.push(r.u32()?);
+            }
+            let theta = r.deltas()?;
+            let snapshot = r.deltas()?;
+            Msg::Round(RoundMsg { k, rhs, batch, theta, snapshot })
+        }
+        TAG_STEP => {
+            let w = r.u32()? as usize;
+            let upload = r.u8()? != 0;
+            let rule_triggered = r.u8()? != 0;
+            Msg::Step(WireStep {
+                w,
+                decision: Decision { upload, rule_triggered },
+                lhs: r.f64()?,
+                loss: r.f32()?,
+                grad_evals: r.u64()?,
+                delta: r.f32s()?,
+            })
+        }
+        TAG_SHUTDOWN => Msg::Shutdown,
+        other => anyhow::bail!("unknown wire message tag {other}"),
+    };
+    anyhow::ensure!(
+        r.pos == payload.len(),
+        "trailing garbage after wire message ({} of {} bytes consumed)",
+        r.pos,
+        payload.len()
+    );
+    Ok(msg)
+}
+
+// ---------------------------------------------------------------- frames
+
+/// Write one `[u32 LE length][payload]` frame; returns the total bytes
+/// put on the wire (4 + payload).
+pub fn write_frame(w: &mut impl Write, payload: &[u8])
+                   -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        payload.len() <= MAX_FRAME,
+        "wire frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(4 + payload.len())
+}
+
+/// Read one frame into `buf` (resized to the payload); returns the total
+/// bytes taken off the wire, or `None` on a clean EOF at a frame
+/// boundary (the peer closed the connection between messages).
+pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>)
+                  -> anyhow::Result<Option<usize>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Ok(None);
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    anyhow::ensure!(
+        len <= MAX_FRAME,
+        "incoming wire frame claims {len} bytes (max {MAX_FRAME}); \
+         corrupt stream or protocol mismatch"
+    );
+    buf.resize(len, 0);
+    r.read_exact(buf)
+        .map_err(|e| anyhow::anyhow!("mid-frame disconnect: {e}"))?;
+    Ok(Some(4 + len))
+}
+
+/// Encode + frame `msg` onto `w`; returns the bytes written.
+pub fn send(w: &mut impl Write, msg: &Msg, scratch: &mut Vec<u8>)
+            -> anyhow::Result<usize> {
+    encode(msg, scratch);
+    write_frame(w, scratch)
+}
+
+/// Read + decode one message from `r`; `None` on clean EOF between
+/// frames.
+pub fn recv(r: &mut impl Read, scratch: &mut Vec<u8>)
+            -> anyhow::Result<Option<(Msg, usize)>> {
+    match read_frame(r, scratch)? {
+        None => Ok(None),
+        Some(bytes) => Ok(Some((decode(scratch)?, bytes))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let mut buf = Vec::new();
+        encode(&msg, &mut buf);
+        let back = decode(&buf).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Hello { n: 800, fp: 0xDEAD_BEEF, p: 1024 });
+        roundtrip(Msg::Welcome {
+            w: 3,
+            m: 5,
+            batch: 16,
+            cfg: WireWorkerCfg {
+                rule: RuleKind::Cada2 { c: 0.6 },
+                max_delay: 20,
+                use_artifact_innov: false,
+                p: 1024,
+            },
+        });
+        roundtrip(Msg::Round(RoundMsg {
+            k: 41,
+            rhs: 0.125,
+            batch: vec![7, 0, 7, 3],
+            theta: vec![
+                RangeDelta { start: 0, data: vec![1.0, -2.5] },
+                RangeDelta { start: 1024, data: vec![f32::MIN_POSITIVE] },
+            ],
+            snapshot: Vec::new(),
+        }));
+        roundtrip(Msg::Step(WireStep {
+            w: 2,
+            decision: Decision { upload: true, rule_triggered: false },
+            lhs: 3.25,
+            loss: 0.5,
+            grad_evals: 2,
+            delta: vec![0.0, -1.0, 2.0],
+        }));
+        roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn every_rule_kind_roundtrips() {
+        for rule in [
+            RuleKind::Always,
+            RuleKind::Cada1 { c: 0.25 },
+            RuleKind::Cada2 { c: 1.5 },
+            RuleKind::Lag { c: 0.6 },
+            RuleKind::Periodic { h: 7 },
+            RuleKind::Never,
+        ] {
+            roundtrip(Msg::Welcome {
+                w: 0,
+                m: 1,
+                batch: 8,
+                cfg: WireWorkerCfg {
+                    rule,
+                    max_delay: 50,
+                    use_artifact_innov: true,
+                    p: 16,
+                },
+            });
+        }
+    }
+
+    #[test]
+    fn floats_cross_the_wire_bit_exactly() {
+        // bit-exactness is what lets the socket transport match InProc
+        // golden runs; exercise values a lossy text path would mangle
+        let data: Vec<f32> = vec![
+            0.1, -0.2, f32::MIN_POSITIVE, f32::MAX, 1.0 + f32::EPSILON,
+            -0.0,
+        ];
+        let msg = Msg::Step(WireStep {
+            w: 0,
+            decision: Decision { upload: true, rule_triggered: true },
+            lhs: 0.1f64 + 0.2f64,
+            loss: 0.30000001,
+            grad_evals: 1,
+            delta: data.clone(),
+        });
+        let mut buf = Vec::new();
+        encode(&msg, &mut buf);
+        match decode(&buf).unwrap() {
+            Msg::Step(s) => {
+                for (a, b) in s.delta.iter().zip(&data) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(s.lhs.to_bits(), (0.1f64 + 0.2f64).to_bits());
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_over_a_byte_pipe() {
+        let mut wire = Vec::new();
+        let mut scratch = Vec::new();
+        let a = Msg::Hello { n: 1, fp: 7, p: 2 };
+        let b = Msg::Shutdown;
+        let wrote_a = send(&mut wire, &a, &mut scratch).unwrap();
+        let wrote_b = send(&mut wire, &b, &mut scratch).unwrap();
+        let mut cursor = &wire[..];
+        let (got_a, read_a) = recv(&mut cursor, &mut scratch)
+            .unwrap()
+            .unwrap();
+        let (got_b, read_b) = recv(&mut cursor, &mut scratch)
+            .unwrap()
+            .unwrap();
+        assert_eq!(got_a, a);
+        assert_eq!(got_b, b);
+        assert_eq!(wrote_a, read_a);
+        assert_eq!(wrote_b, read_b);
+        // clean EOF at the frame boundary
+        assert!(recv(&mut cursor, &mut scratch).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_and_garbage_are_errors_not_panics() {
+        let mut buf = Vec::new();
+        encode(&Msg::Hello { n: 9, fp: 9, p: 9 }, &mut buf);
+        // truncated payload
+        assert!(decode(&buf[..buf.len() - 3]).is_err());
+        // trailing garbage
+        buf.push(0xFF);
+        assert!(decode(&buf).is_err());
+        // unknown tag
+        assert!(decode(&[42]).is_err());
+        // absurd frame length never allocates
+        let bogus = u32::MAX.to_le_bytes();
+        let mut scratch = Vec::new();
+        assert!(read_frame(&mut &bogus[..], &mut scratch).is_err());
+        // wrong magic
+        let mut hello = Vec::new();
+        encode(&Msg::Hello { n: 0, fp: 0, p: 0 }, &mut hello);
+        hello[1] ^= 0xFF;
+        let err = decode(&hello).unwrap_err();
+        assert!(err.to_string().contains("protocol"), "{err}");
+        // a delta count the payload cannot hold is rejected up front
+        let mut round = Vec::new();
+        encode(
+            &Msg::Round(RoundMsg {
+                k: 0,
+                rhs: 0.0,
+                batch: vec![],
+                theta: vec![],
+                snapshot: vec![],
+            }),
+            &mut round,
+        );
+        let cut = round.len() - 8; // theta delta count field
+        round[cut..cut + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&round).is_err());
+    }
+
+    #[test]
+    fn range_delta_applies_and_bounds_checks() {
+        let mut dst = vec![0.0f32; 8];
+        let d = RangeDelta { start: 2, data: vec![1.0, 2.0, 3.0] };
+        d.apply(&mut dst).unwrap();
+        assert_eq!(dst, vec![0.0, 0.0, 1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        let oob = RangeDelta { start: 7, data: vec![1.0, 2.0] };
+        assert!(oob.apply(&mut dst).is_err());
+        let overflow = RangeDelta { start: u32::MAX, data: vec![1.0] };
+        assert!(overflow.apply(&mut dst).is_err());
+    }
+}

@@ -91,6 +91,11 @@ pub struct ExpConfig {
     /// simulated link cost model for every run of this experiment
     /// (overridable via the unified `[train.cost_model]` TOML section)
     pub cost_model: CostModel,
+    /// downlink broadcast payload bytes; 0 (every preset's default)
+    /// means "same as the spec-derived upload payload". Settable via
+    /// `[train] broadcast_bytes` so compressed-upload experiments can
+    /// diverge the uplink and downlink honestly.
+    pub broadcast_bytes: usize,
     /// per-run event-trace capacity (0 disables; `[train] trace_cap`)
     pub trace_cap: usize,
     /// execution-engine configuration: transport, semi-sync quorum,
@@ -129,6 +134,7 @@ pub fn fig2_covtype() -> ExpConfig {
         seed: 2020,
         target_loss: 0.32,
         cost_model: CostModel::default(),
+        broadcast_bytes: 0,
         trace_cap: 0,
         comm: CommCfg::default(),
         algos: vec![
@@ -161,6 +167,7 @@ pub fn fig3_ijcnn() -> ExpConfig {
         seed: 2021,
         target_loss: 0.18,
         cost_model: CostModel::default(),
+        broadcast_bytes: 0,
         trace_cap: 0,
         comm: CommCfg::default(),
         algos: vec![
@@ -193,6 +200,7 @@ pub fn fig4_mnist(use_cnn: bool) -> ExpConfig {
         seed: 2022,
         target_loss: 0.30,
         cost_model: CostModel::default(),
+        broadcast_bytes: 0,
         trace_cap: 0,
         comm: CommCfg::default(),
         algos: vec![
@@ -225,6 +233,7 @@ pub fn fig5_cifar() -> ExpConfig {
         seed: 2023,
         target_loss: 0.8,
         cost_model: CostModel::default(),
+        broadcast_bytes: 0,
         trace_cap: 0,
         comm: CommCfg::default(),
         algos: vec![
@@ -279,15 +288,22 @@ pub fn preset(name: &str) -> anyhow::Result<ExpConfig> {
     })
 }
 
-/// Apply the engine's CLI knobs — `--transport`, `--server-shards`,
-/// `--shard-exec`, `--semi-sync-k`, `--jitter-sigma`, `--jitter-seed` —
-/// shared by `cada train` and the `cargo bench fig*` drivers so the two
+/// Apply the engine's CLI knobs — `--transport`, `--listen`,
+/// `--connect`, `--server-shards`, `--shard-exec`, `--semi-sync-k`,
+/// `--jitter-sigma`, `--jitter-seed` — shared by `cada train` / `cada
+/// serve` / `cada worker` and the `cargo bench fig*` drivers so the
 /// entry points cannot diverge.
 pub fn apply_comm_cli_overrides(comm: &mut CommCfg,
                                 args: &crate::cli::Args)
                                 -> anyhow::Result<()> {
     if let Some(t) = args.str_opt("transport") {
         comm.transport = crate::comm::TransportKind::parse(t)?;
+    }
+    if let Some(addr) = args.str_opt("listen") {
+        comm.listen = addr.to_string();
+    }
+    if let Some(addr) = args.str_opt("connect") {
+        comm.connect = addr.to_string();
     }
     comm.server_shards =
         args.usize_or("server-shards", comm.server_shards)?;
@@ -372,6 +388,11 @@ fn apply_train_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
     if has("seed") {
         cfg.seed = parsed.seed;
     }
+    if has("broadcast_bytes") {
+        // unlike upload_bytes (spec-derived), the downlink payload is a
+        // free experiment knob: 0 keeps it equal to the uplink
+        cfg.broadcast_bytes = parsed.broadcast_bytes;
+    }
     if has("trace_cap") {
         cfg.trace_cap = parsed.trace_cap;
     }
@@ -455,6 +476,12 @@ mod tests {
         // untouched knobs keep their preset values
         assert_eq!(cfg.eval_every, 25);
 
+        // the downlink payload IS a free experiment knob (compressed
+        // uploads diverge it from the spec-derived uplink)
+        let doc = toml::parse("[train]\nbroadcast_bytes = 40\n").unwrap();
+        apply_overrides(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.broadcast_bytes, 40);
+
         // spec-derived knobs cannot be overridden here
         let bad = toml::parse("[train]\nbatch = 8\n").unwrap();
         let err = apply_overrides(&mut cfg, &bad).err().unwrap();
@@ -469,7 +496,8 @@ mod tests {
         let mut comm = crate::comm::CommCfg::default();
         let args = crate::cli::Args::parse(
             ["--server-shards", "8", "--semi-sync-k", "3",
-             "--shard-exec", "scoped"]
+             "--shard-exec", "scoped", "--transport", "socket",
+             "--listen", "127.0.0.1:7700", "--connect", "10.0.0.9:7700"]
                 .iter()
                 .map(|s| s.to_string()),
         )
@@ -479,6 +507,9 @@ mod tests {
         assert_eq!(comm.semi_sync_k, 3);
         assert_eq!(comm.shard_exec,
                    crate::coordinator::pool::ShardExec::Scoped);
+        assert_eq!(comm.transport, crate::comm::TransportKind::Socket);
+        assert_eq!(comm.listen, "127.0.0.1:7700");
+        assert_eq!(comm.connect, "10.0.0.9:7700");
         // a typo'd exec mode is rejected, not silently defaulted
         let mut comm = crate::comm::CommCfg::default();
         let args = crate::cli::Args::parse(

@@ -24,7 +24,12 @@
 //!                  scoped-thread reference; both bit-identical).
 //! * [`ToWorker`] / [`FromWorker`] — the mailbox messages the
 //!   [`Threaded`](crate::comm::Threaded) transport moves between the
-//!   server thread and the persistent worker threads.
+//!   server thread and the persistent worker threads. These carry
+//!   closures, so they cannot leave the process; their cross-process
+//!   counterpart is the serializable round protocol of
+//!   [`crate::comm::wire`], which the TCP
+//!   [`socket`](crate::comm::socket) transport speaks between a `cada
+//!   serve` server and `cada worker` processes.
 //!
 //! The iteration loop itself lives in [`crate::algorithms`]: the
 //! [`Cada`](crate::algorithms::Cada) algorithm composes these pieces into

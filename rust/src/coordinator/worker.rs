@@ -156,6 +156,34 @@ impl WorkerState {
     pub fn last_delta(&self) -> &[f32] {
         &self.delta
     }
+
+    /// Socket-transport mirror of an uploading [`WorkerState::step`]:
+    /// the REMOTE worker process ran lines 5–14 and shipped this
+    /// innovation delta over the wire; install it and replay the
+    /// upload-side bookkeeping (tau reset, upload count) so
+    /// `aggregate`/`server_update` and the staleness telemetry see
+    /// exactly what an in-process step would have left behind. The
+    /// gradient scratch (`g_stale` etc.) stays untouched — it lives in
+    /// the worker process.
+    pub fn absorb_remote_upload(&mut self, delta: &[f32])
+                                -> anyhow::Result<()> {
+        anyhow::ensure!(
+            delta.len() == self.delta.len(),
+            "worker {}: wire delta has {} elements, state holds {}",
+            self.id,
+            delta.len(),
+            self.delta.len()
+        );
+        self.delta.copy_from_slice(delta);
+        self.tau = 1;
+        self.uploads += 1;
+        Ok(())
+    }
+
+    /// Socket-transport mirror of a skipping [`WorkerState::step`].
+    pub fn absorb_remote_skip(&mut self) {
+        self.tau += 1;
+    }
 }
 
 #[cfg(test)]

@@ -109,10 +109,56 @@ impl Dataset {
         }
     }
 
+    /// Order-sensitive FNV-1a over the dataset's exact contents (f32 /
+    /// i32 bit patterns plus geometry): the socket handshake's cheap
+    /// whole-dataset checksum. Length alone cannot distinguish a worker
+    /// regenerated from the wrong seed/run/preset — same `n`, different
+    /// samples — which would silently break the transport's bit-parity
+    /// contract; the fingerprint fails such a worker at connect time.
+    pub fn fingerprint(&self) -> u64 {
+        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h = (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        match self {
+            Dataset::Labeled { x, sample_shape, y } => {
+                h = eat(h, &(x.len() as u64).to_le_bytes());
+                for s in sample_shape {
+                    h = eat(h, &(*s as u64).to_le_bytes());
+                }
+                for v in x {
+                    h = eat(h, &v.to_le_bytes());
+                }
+                for v in y {
+                    h = eat(h, &v.to_le_bytes());
+                }
+            }
+            Dataset::Tokens { t, seq_plus_one } => {
+                h = eat(h, &(*seq_plus_one as u64).to_le_bytes());
+                for v in t {
+                    h = eat(h, &v.to_le_bytes());
+                }
+            }
+        }
+        h
+    }
+
+    /// The dataset indices one `sample_batch` call would gather
+    /// (uniform, with replacement). Split out so the socket transport
+    /// can ship indices across processes instead of assembled batches:
+    /// `gather(sample_picks(...))` IS `sample_batch(...)` on the same
+    /// RNG stream, bit-identically.
+    pub fn sample_picks(&self, shard: &[usize], b: usize,
+                        rng: &mut Rng) -> Vec<usize> {
+        (0..b).map(|_| shard[rng.below(shard.len())]).collect()
+    }
+
     /// Uniform with-replacement minibatch from a shard (index subset).
     pub fn sample_batch(&self, shard: &[usize], b: usize, rng: &mut Rng) -> Batch {
-        let picks: Vec<usize> =
-            (0..b).map(|_| shard[rng.below(shard.len())]).collect();
+        let picks = self.sample_picks(shard, b, rng);
         self.gather(&picks)
     }
 }
@@ -163,6 +209,31 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn fingerprint_separates_equal_length_datasets() {
+        let a = toy();
+        let b = toy();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "deterministic");
+        // same n, one flipped label: different fingerprint
+        let c = Dataset::Labeled {
+            x: (0..12).map(|v| v as f32).collect(),
+            sample_shape: vec![2],
+            y: vec![0, 1, 0, 1, 0, 0],
+        };
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // same n, one perturbed feature: different fingerprint
+        let mut x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        x[7] += 1e-3;
+        let d = Dataset::Labeled { x, sample_shape: vec![2],
+                                   y: vec![0, 1, 0, 1, 0, 1] };
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        let t = Dataset::Tokens { t: (0..20).collect(), seq_plus_one: 5 };
+        assert_ne!(t.fingerprint(),
+                   Dataset::Tokens { t: (0..20).collect(),
+                                     seq_plus_one: 4 }
+                       .fingerprint());
     }
 
     #[test]

@@ -29,6 +29,17 @@ pub struct RunResult {
     /// per-shard server-update timing of the last run (None for methods
     /// without sharded server state)
     pub shard_stats: Option<crate::coordinator::shard::ShardStats>,
+    /// measured wire traffic of the last run (None off the socket
+    /// transport)
+    pub wire: Option<crate::comm::WireStats>,
+}
+
+/// The per-run seed of Monte-Carlo run `run`. `cada worker` processes
+/// regenerate the server's run dataset from this, so it is THE contract
+/// between `cada serve` and its workers — change it only with a wire
+/// protocol version bump.
+pub fn run_seed(seed: u64, run: u32) -> u64 {
+    seed.wrapping_mul(0x9E37).wrapping_add(run as u64)
 }
 
 /// One experiment: workload + algorithms (one paper figure family).
@@ -77,18 +88,15 @@ impl Experiment {
         let mut curves = Vec::new();
         let mut comm = CommStats::default();
         let mut shard_stats = None;
+        let mut wire = None;
         for run in 0..self.cfg.runs {
-            let run_seed = self
-                .cfg
-                .seed
-                .wrapping_mul(0x9E37)
-                .wrapping_add(run as u64);
+            let run_seed = run_seed(self.cfg.seed, run);
             let data = self.make_dataset(run_seed);
             let mut rng = Rng::new(run_seed ^ EVAL_SEED);
             let partition = Partition::build(self.cfg.partition, &data,
                                              self.cfg.workers, &mut rng);
             let eval_batch = self.make_eval_batch(&data, &mut rng);
-            let (curve, run_comm, run_shards) = run_one(
+            let (curve, run_comm, run_shards, run_wire) = run_one(
                 &self.cfg,
                 &self.spec,
                 algo,
@@ -102,6 +110,7 @@ impl Experiment {
             )?;
             comm = run_comm;
             shard_stats = run_shards;
+            wire = run_wire;
             curves.push(curve);
         }
         let mean_curve = average_curves(&curves);
@@ -111,6 +120,7 @@ impl Experiment {
             mean_curve,
             comm,
             shard_stats,
+            wire,
         })
     }
 
@@ -177,6 +187,12 @@ pub fn render_breakdowns(cfg: &ExpConfig, results: &[RunResult])
             })
         }));
     }
+    // socket runs also report what actually crossed the wire
+    out.extend(results.iter().filter_map(|r| {
+        r.wire
+            .as_ref()
+            .map(|w| crate::telemetry::render_wire_stats(&r.algo, w))
+    }));
     out
 }
 
@@ -286,6 +302,7 @@ fn run_one(
     Curve,
     CommStats,
     Option<crate::coordinator::shard::ShardStats>,
+    Option<crate::comm::WireStats>,
 )> {
     let mut algorithm = build_algorithm(algo, spec);
     let mut trainer = Trainer::builder()
@@ -296,6 +313,7 @@ fn run_one(
             seed: run_seed,
             cost_model: cfg.cost_model.clone(),
             upload_bytes: spec.upload_bytes(),
+            broadcast_bytes: cfg.broadcast_bytes,
             trace_cap: cfg.trace_cap,
             comm: cfg.comm.clone(),
         })
@@ -308,6 +326,7 @@ fn run_one(
         .build()?;
     let curve = trainer.run(run, compute)?;
     let comm = trainer.comm.clone();
+    let wire = trainer.wire_stats().cloned();
     drop(trainer);
-    Ok((curve, comm, algorithm.shard_stats()))
+    Ok((curve, comm, algorithm.shard_stats(), wire))
 }

@@ -79,9 +79,18 @@
 //!
 //! ## Scenario knobs (the `[comm]` config section)
 //!
-//! * **transport** — `inproc` (sequential reference) or `threaded`
-//!   (persistent worker threads + channel mailboxes; enforced
-//!   bit-identical by `tests/golden_parity.rs`).
+//! * **transport** — `inproc` (sequential reference), `threaded`
+//!   (persistent worker threads + channel mailboxes), or `socket`
+//!   (real TCP across OS processes: one `cada serve` server + M `cada
+//!   worker` processes speaking the hand-rolled length-prefixed
+//!   [`comm::wire`] protocol — round headers carry the iteration,
+//!   frozen rule RHS, server-sampled batch indices and theta/snapshot
+//!   *delta broadcasts*, step results carry the upload decision and
+//!   innovation payload; [`comm::WireStats`] counts the bytes that
+//!   actually crossed the wire). All three are enforced bit-identical
+//!   by `tests/golden_parity.rs`; the socket path covers the
+//!   server-centric family (local-update methods fail fast with a
+//!   clear error for now).
 //! * **server sharding** — `server_shards = N` (CLI `--server-shards`,
 //!   builder `.server_shards(n)`, 0 = one shard per core): the server's
 //!   parameter state (theta/h/vhat/aggregate and the stale-gradient
@@ -101,8 +110,9 @@
 //!   [`coordinator::shard::SnapshotBuffers`]: no per-round full-vector
 //!   clone, only dirtied shard ranges are copied. This is what lets the
 //!   server keep up once the threaded transport parallelises the
-//!   workers, and the layout a future real-network transport will
-//!   partition state over.
+//!   workers — and the shard versions double as the socket transport's
+//!   delta-broadcast bookkeeping: a round header ships only the ranges
+//!   a worker process has not acknowledged at the current version.
 //! * **blocked gradient kernel** — the native backend computes each
 //!   worker batch's gradient as a two-pass blocked kernel: all logits
 //!   of a sample block first ([`tensor::gemv_block`], bit-identical to
@@ -153,8 +163,10 @@ pub mod prelude {
         Algorithm, AlgorithmKind, Cada, CadaCfg, FedAdam, FedAdamCfg,
         FedAvg, LocalMomentum, TrainCfg, Trainer,
     };
-    pub use crate::comm::{CommCfg, CommStats, CostModel, LinkModel,
-                          LinkSet, Participation, TransportKind};
+    pub use crate::comm::{run_worker, CommCfg, CommStats, CostModel,
+                          LinkModel, LinkSet, Participation,
+                          SocketServer, TransportKind, WireStats,
+                          WorkerReport};
     pub use crate::config::Schedule;
     pub use crate::coordinator::{rules::RuleKind, server::Optimizer};
     pub use crate::coordinator::pool::{ShardExec, ShardPool};

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   train         run one experiment preset (or a single algorithm)
+//!   serve         run one algorithm as the socket-transport server,
+//!                 coordinating M `cada worker` processes over TCP
+//!   worker        join a `cada serve` run as one worker process
 //!   list          list artifact specs and experiment presets
 //!   print-config  show a preset's full configuration (paper Tables 1-4)
 //!   inspect       dump manifest details for one spec
@@ -10,6 +13,8 @@
 //! Examples:
 //!   cada train --preset fig3 --iters 500 --runs 1
 //!   cada train --preset fig2 --algo cada2 --out results/fig2.jsonl
+//!   cada serve --preset fig3 --algo cada2 --listen 127.0.0.1:7700
+//!   cada worker --preset fig3 --connect 127.0.0.1:7700
 //!   cada list
 
 use cada::cli::Args;
@@ -35,6 +40,8 @@ fn run() -> anyhow::Result<()> {
         .unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "list" => cmd_list(&args),
         "print-config" => cmd_print_config(&args),
         "inspect" => cmd_inspect(&args),
@@ -51,6 +58,8 @@ const HELP: &str = r#"cada — Communication-Adaptive Distributed Adam (paper re
 
 USAGE:
   cada train --preset <fig2|fig3|fig4|fig4_cnn|fig5|fig6|fig7> [options]
+  cada serve --preset <name> --algo <name> --listen HOST:PORT [options]
+  cada worker --preset <name> --connect HOST:PORT [options]
   cada list [--artifacts DIR]
   cada print-config --preset <name>
   cada inspect --spec <name> [--artifacts DIR]
@@ -74,7 +83,9 @@ TRAIN OPTIONS:
   --seed S            override base seed
   --target-loss X     override summary target loss
   --transport T       worker execution engine: inproc (sequential,
-                      default) or threaded (persistent worker threads)
+                      default), threaded (persistent worker threads) or
+                      socket (real TCP across processes; use `cada
+                      serve` + `cada worker`)
   --server-shards N   shard the server state into N contiguous parameter
                       ranges updated per shard (default 1;
                       0 = one shard per core; bit-identical always)
@@ -88,6 +99,21 @@ TRAIN OPTIONS:
   --artifacts DIR     artifacts directory (default ./artifacts)
   --out FILE          write curves as JSONL
   --quiet             less logging
+
+SERVE OPTIONS (cada serve; accepts the TRAIN options too):
+  --listen HOST:PORT  TCP address the server binds; M worker processes
+                      must dial it (`cada worker --connect ...`)
+  --algo NAME         required: the one algorithm to run over sockets
+                      (server-centric only: adam/cada1/cada2/lag/sgd).
+                      A serve run is a single Monte-Carlo run.
+
+WORKER OPTIONS (cada worker):
+  --connect HOST:PORT the `cada serve` address to join
+  --preset NAME       same preset the server runs (the worker rebuilds
+                      the run's dataset locally; batch indices arrive
+                      over the wire)
+  --n N / --seed S    must match the server's overrides, if any
+  --run R             Monte-Carlo run index to regenerate (default 0)
 
 BENCH-CHECK OPTIONS (the CI perf-regression gate):
   --baseline FILE     committed baseline (default bench/baseline.json;
@@ -132,9 +158,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     args.reject_unknown()?;
 
+    run_and_report(&cfg, &artifacts, out)
+}
+
+/// Shared tail of `cada train` / `cada serve`: load the backend, run
+/// every configured algorithm, render the summary table + breakdowns,
+/// optionally write the JSONL curves. One source of truth so the two
+/// entry points cannot drift.
+fn run_and_report(cfg: &cada::config::ExpConfig, artifacts: &str,
+                  out: Option<String>) -> anyhow::Result<()> {
     info!("loading backend for spec '{}'", cfg.spec);
     let (spec, mut compute, init) =
-        cada::runtime::load_backend(&artifacts, &cfg.spec)?;
+        cada::runtime::load_backend(artifacts, &cfg.spec)?;
     info!("backend: {}", compute.backend_name());
     let experiment = Experiment::new(cfg.clone(), spec)?;
     let results = experiment.run_all(&mut *compute, &init)?;
@@ -143,9 +178,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "{}",
         telemetry::render_table(&cfg.name, cfg.target_loss, &rows)
     );
-    // stragglers only exist under heterogeneous/jittered links; show
-    // who paid the simulated time (empty under the uniform default)
-    print!("{}", cada::exp::render_breakdowns(&cfg, &results));
+    // stragglers only exist under heterogeneous/jittered links, and
+    // wire traffic only on the socket transport; both render empty
+    // under the uniform in-process default
+    print!("{}", cada::exp::render_breakdowns(cfg, &results));
     if let Some(path) = out {
         let curves: Vec<_> = results
             .iter()
@@ -154,6 +190,117 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         telemetry::write_jsonl(&path, &curves)?;
         info!("wrote curves to {path}");
     }
+    Ok(())
+}
+
+/// Run one algorithm as the socket-transport server: bind `--listen`,
+/// wait for the preset's M worker processes, drive the run over TCP.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let preset = args
+        .str_opt("preset")
+        .ok_or_else(|| anyhow::anyhow!("--preset required; see `cada help`"))?
+        .to_string();
+    let mut cfg = config::preset(&preset)?;
+    if let Some(path) = args.str_opt("config") {
+        let doc = config::toml::parse(&std::fs::read_to_string(path)?)?;
+        config::apply_overrides(&mut cfg, &doc)?;
+    }
+    cfg.iters = args.usize_or("iters", cfg.iters)?;
+    cfg.n = args.usize_or("n", cfg.n)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.target_loss = args.f64_or("target-loss", cfg.target_loss)?;
+    config::apply_comm_cli_overrides(&mut cfg.comm, args)?;
+    cfg.comm.transport = cada::comm::TransportKind::Socket;
+    anyhow::ensure!(
+        !cfg.comm.listen.is_empty(),
+        "cada serve needs --listen HOST:PORT (or [comm] listen)"
+    );
+    // port 0 (ephemeral) is for in-process tests that can read the
+    // bound port back; worker processes dial the address printed below
+    // VERBATIM, so the CLI needs a concrete port
+    anyhow::ensure!(
+        !cfg.comm.listen.ends_with(":0"),
+        "cada serve cannot use an ephemeral port (--listen {}): worker \
+         processes must dial this exact address — pick a concrete port",
+        cfg.comm.listen
+    );
+    // one run only: reconnecting a fresh worker fleet per Monte-Carlo
+    // run is a deployment concern, not a training-loop one
+    let runs = args.u64_or("runs", 1)?;
+    if runs != 1 {
+        info!("cada serve drives exactly one Monte-Carlo run; \
+               ignoring --runs {runs}");
+    }
+    cfg.runs = 1;
+    let algo = args
+        .str_opt("algo")
+        .ok_or_else(|| {
+            anyhow::anyhow!("cada serve needs --algo (one of the \
+                             preset's server-centric algorithms)")
+        })?
+        .to_string();
+    cfg.algos.retain(|a| a.name() == algo);
+    anyhow::ensure!(!cfg.algos.is_empty(), "no algorithm named '{algo}'");
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let out = args.str_opt("out").map(str::to_string);
+    if args.bool("quiet") {
+        cada::util::logging::set_level(cada::util::logging::Level::Warn);
+    }
+    args.reject_unknown()?;
+
+    info!(
+        "serving '{algo}' on {} — waiting for {} worker process(es) \
+         (cada worker --preset {preset} --connect {})",
+        cfg.comm.listen, cfg.workers, cfg.comm.listen
+    );
+    run_and_report(&cfg, &artifacts, out)
+}
+
+/// Join a `cada serve` run as one worker process: rebuild the run's
+/// dataset locally, dial the server, and answer round headers until it
+/// shuts the run down.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let preset = args
+        .str_opt("preset")
+        .ok_or_else(|| anyhow::anyhow!("--preset required; see `cada help`"))?
+        .to_string();
+    let mut cfg = config::preset(&preset)?;
+    if let Some(path) = args.str_opt("config") {
+        let doc = config::toml::parse(&std::fs::read_to_string(path)?)?;
+        config::apply_overrides(&mut cfg, &doc)?;
+    }
+    cfg.n = args.usize_or("n", cfg.n)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    config::apply_comm_cli_overrides(&mut cfg.comm, args)?;
+    anyhow::ensure!(
+        !cfg.comm.connect.is_empty(),
+        "cada worker needs --connect HOST:PORT (or [comm] connect)"
+    );
+    let run = args.u64_or("run", 0)? as u32;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    if args.bool("quiet") {
+        cada::util::logging::set_level(cada::util::logging::Level::Warn);
+    }
+    args.reject_unknown()?;
+
+    let (spec, mut compute, _init) =
+        cada::runtime::load_backend(&artifacts, &cfg.spec)?;
+    // the same dataset the server samples indices from: preset + run
+    // seed pin it exactly (the handshake cross-checks the length)
+    let run_seed = cada::exp::run_seed(cfg.seed, run);
+    let data = cada::exp::make_dataset(cfg.dataset, &spec, cfg.n, run_seed);
+    info!(
+        "worker joining {} (preset {preset}, run {run}, {} samples)",
+        cfg.comm.connect,
+        data.len()
+    );
+    let report =
+        cada::comm::run_worker(&cfg.comm.connect, &data, &mut *compute)?;
+    info!(
+        "worker {} done: {} rounds, {} uploads",
+        report.w, report.rounds, report.uploads
+    );
     Ok(())
 }
 

@@ -178,20 +178,26 @@ pub fn render_table(title: &str, target_loss: f64, rows: &[SummaryRow])
 }
 
 /// Render the per-worker communication/time breakdown of a run: upload
-/// counts and cumulative simulated upload seconds per worker, with the
-/// straggler (max upload-seconds worker) marked. Empty string when the
-/// run kept no per-worker stats.
+/// counts, cumulative simulated upload seconds and dead-link losses per
+/// worker, with the straggler (max upload-seconds worker) marked. The
+/// seconds are finite by construction — lost uploads are counted (the
+/// transmission happened) but their infinite arrival never accumulates
+/// (see [`CommStats::count_upload`]), so this table stays renderable
+/// under dead-link scenarios. Empty string when the run kept no
+/// per-worker stats.
 pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
     if comm.worker_uploads.is_empty() {
         return String::new();
     }
     let mut out = String::new();
     out.push_str(&format!(
-        "\n-- {algo}: per-worker comm breakdown ({} stale uploads) --\n",
-        comm.stale_uploads
+        "\n-- {algo}: per-worker comm breakdown ({} stale, {} lost \
+         uploads) --\n",
+        comm.stale_uploads, comm.lost_uploads
     ));
     out.push_str(&format!(
-        "{:>8} {:>10} {:>12}\n", "worker", "uploads", "upload_s"));
+        "{:>8} {:>10} {:>12} {:>8}\n",
+        "worker", "uploads", "upload_s", "lost"));
     let slowest = comm
         .worker_upload_s
         .iter()
@@ -210,13 +216,40 @@ pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
         .zip(&comm.worker_upload_s)
         .enumerate()
     {
+        let lost = comm.worker_lost.get(w).copied().unwrap_or(0);
         let marker = if s == slowest && slowest > 0.0 && at_max == 1 {
             "  <- straggler"
         } else {
             ""
         };
-        out.push_str(&format!("{w:>8} {n:>10} {s:>12.3}{marker}\n"));
+        out.push_str(&format!(
+            "{w:>8} {n:>10} {s:>12.3} {lost:>8}{marker}\n"));
     }
+    out
+}
+
+/// Render a socket run's measured wire traffic: the bytes that actually
+/// crossed the TCP connections (vs the simulated `upload_bytes`
+/// constant), plus how many theta/snapshot ranges the delta-broadcast
+/// headers shipped.
+pub fn render_wire_stats(algo: &str,
+                         wire: &crate::comm::WireStats) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "\n-- {algo}: measured wire traffic ({} rounds) --\n",
+        wire.rounds
+    ));
+    out.push_str(&format!(
+        "  sent (broadcast):  {:>12} B  ({} theta ranges, {} B; \
+         {} snapshot ranges, {} B)\n",
+        wire.bytes_sent,
+        wire.theta_ranges_sent,
+        wire.theta_range_bytes,
+        wire.snapshot_ranges_sent,
+        wire.snapshot_range_bytes,
+    ));
+    out.push_str(&format!(
+        "  received (upload): {:>12} B\n", wire.bytes_received));
     out
 }
 
@@ -318,6 +351,53 @@ mod tests {
         }
         let t = render_worker_breakdown("adam", &tied);
         assert!(!t.contains("straggler"), "{t}");
+    }
+
+    #[test]
+    fn worker_breakdown_stays_finite_under_dead_links() {
+        // worker 1 transmits into a dead link every round: its uploads
+        // count, its seconds stay finite (zero here), and the lost
+        // column says where the bytes went — the straggler marker goes
+        // to the slowest FINITE worker, not to infinity
+        let mut comm = CommStats::for_workers(3);
+        for _ in 0..4 {
+            comm.count_upload(0, 100, 1.0);
+            comm.count_upload(1, 100, f64::INFINITY);
+            comm.mark_lost(1);
+            comm.count_upload(2, 100, 3.0);
+        }
+        comm.lost_uploads = 4;
+        let t = render_worker_breakdown("cada2", &comm);
+        assert!(!t.contains("inf"), "{t}");
+        assert!(t.contains("lost"), "{t}");
+        assert!(t.contains("4 lost"), "{t}");
+        let straggler_line =
+            t.lines().find(|l| l.contains("straggler")).unwrap();
+        assert!(straggler_line.trim_start().starts_with('2'),
+                "{straggler_line}");
+        let dead_line = t
+            .lines()
+            .find(|l| l.trim_start().starts_with('1'))
+            .unwrap();
+        assert!(dead_line.split_whitespace().any(|f| f == "4"),
+                "lost count missing: {dead_line}");
+    }
+
+    #[test]
+    fn wire_stats_render() {
+        let wire = crate::comm::WireStats {
+            rounds: 60,
+            bytes_sent: 123_456,
+            bytes_received: 654_321,
+            theta_ranges_sent: 300,
+            theta_range_bytes: 300 * 4096,
+            snapshot_ranges_sent: 15,
+            snapshot_range_bytes: 15 * 4096,
+        };
+        let t = render_wire_stats("cada1", &wire);
+        assert!(t.contains("60 rounds"), "{t}");
+        assert!(t.contains("123456"), "{t}");
+        assert!(t.contains("15 snapshot ranges"), "{t}");
     }
 
     #[test]

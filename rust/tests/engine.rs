@@ -3,7 +3,7 @@
 //! event clock under heterogeneous links, and the CostModel edge cases.
 
 use cada::algorithms::{Cada, CadaCfg, Trainer};
-use cada::comm::{CommCfg, CommStats, CostModel, TransportKind};
+use cada::comm::{wire, CommCfg, CommStats, CostModel, TransportKind};
 use cada::config::Schedule;
 use cada::coordinator::rules::RuleKind;
 use cada::coordinator::server::Optimizer;
@@ -256,12 +256,134 @@ fn dead_uplink_uploads_are_charged_but_never_fold() {
     assert_eq!(out.1.stale_uploads, ITERS as u64);
     assert_eq!(out.1.lost_uploads, ITERS as u64);
     // the quorum never waits on the dead link: the clock stays finite,
-    // while the dead worker's own upload-time tally shows the void
+    // and so does the dead worker's upload-time tally — the infinite
+    // "arrival" is kept out of the breakdown (the transmission is still
+    // counted + charged) with the lost column carrying the tally
     assert!(out.1.sim_time_s.is_finite());
-    assert!(out.1.worker_upload_s[4].is_infinite());
+    assert_eq!(out.1.worker_upload_s[4], 0.0);
+    assert_eq!(out.1.worker_lost[4], ITERS as u64);
     // training still descends on the surviving workers' data
     assert!(out.0.final_loss() < out.0.points[0].loss,
             "dead-uplink run did not descend: {:?}", out.0);
+}
+
+#[test]
+fn dead_link_breakdown_stays_finite_with_lost_column() {
+    // Regression for the dead-link accounting bug: `bw_mult = [1.0,
+    // 0.0]` (the dead-link config CommCfg::validate explicitly allows)
+    // used to push +inf into `worker_upload_s` for every lost upload,
+    // corrupting the per-worker breakdown forever and misfiring its
+    // unique-maximum straggler marker.
+    let (mut compute, w) = workload();
+    let dead = CommCfg {
+        semi_sync_k: 3,
+        bw_mult: vec![1.0, 0.0],
+        ..Default::default()
+    };
+    let out = run(RuleKind::Always, dead, CostModel::default(), &w,
+                  &mut compute);
+    // workers 1 and 3 (the multiplier cycles over 5 workers) transmit
+    // into the void every round: charged on the uploads axis, counted
+    // in the lost column, never delivered
+    assert_eq!(out.1.uploads, (ITERS * WORKERS) as u64);
+    assert_eq!(out.1.lost_uploads, 2 * ITERS as u64);
+    assert_eq!(out.1.worker_lost,
+               vec![0, ITERS as u64, 0, ITERS as u64, 0]);
+    assert_eq!(out.1.worker_uploads, vec![ITERS as u64; WORKERS]);
+    // the infinite arrivals never reach the per-worker seconds
+    assert!(out.1.worker_upload_s.iter().all(|t| t.is_finite()),
+            "{:?}", out.1.worker_upload_s);
+    assert_eq!(out.1.worker_upload_s[1], 0.0);
+    assert_eq!(out.1.worker_upload_s[3], 0.0);
+    // the rendered table is finite, carries the lost column, and the
+    // healthy workers' three-way tie means nobody is marked straggler
+    // (the old inf corruption pinned the marker on a dead worker)
+    let table =
+        cada::telemetry::render_worker_breakdown("adam", &out.1);
+    assert!(!table.contains("inf"), "{table}");
+    assert!(table.contains("lost"), "{table}");
+    assert!(!table.contains("straggler"), "{table}");
+    // training still descends on the workers the server can hear
+    assert!(out.0.final_loss() < out.0.points[0].loss,
+            "dead-link run did not descend: {:?}", out.0);
+}
+
+#[test]
+fn socket_worker_disconnect_errors_cleanly_without_hanging() {
+    // A worker process vanishing mid-round must surface as a clean
+    // error on the server (mirroring the Threaded transport's
+    // drain-on-failure semantics), never as a hang.
+    let data = synthetic::ijcnn_like(200, 3);
+    let mut rng = Rng::new(4);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 2, &mut rng);
+    let eval = data.gather(&(0..32).collect::<Vec<_>>());
+    let mut compute = NativeLogReg::for_spec(22, 1024);
+    let mut algo = cada(RuleKind::Always);
+    let mut trainer = Trainer::builder()
+        .algorithm(&mut algo)
+        .dataset(&data)
+        .partition(&partition)
+        .eval_batch(eval)
+        .init_theta(vec![0.0; 1024])
+        .iters(4)
+        .upload_bytes(UPLOAD_BYTES)
+        .comm(CommCfg {
+            transport: TransportKind::Socket,
+            listen: "127.0.0.1:0".into(),
+            ..Default::default()
+        })
+        .seed(5)
+        .build()
+        .unwrap();
+    let addr = trainer.wire_addr().unwrap().to_string();
+    let err = std::thread::scope(|s| {
+        // the good worker answers rounds until the server goes away
+        // (shutdown frame or EOF — both are a clean exit)
+        {
+            let addr = addr.clone();
+            let data = &data;
+            s.spawn(move || {
+                let mut c = NativeLogReg::for_spec(22, 1024);
+                let _ = cada::comm::run_worker(&addr, data, &mut c);
+            });
+        }
+        // the bad worker handshakes (with the REAL dataset fingerprint,
+        // so the handshake succeeds), takes its first round header,
+        // then drops the connection instead of answering
+        {
+            let addr = addr.clone();
+            let n = data.len() as u64;
+            let fp = data.fingerprint();
+            s.spawn(move || {
+                let mut stream =
+                    std::net::TcpStream::connect(addr).unwrap();
+                let mut scratch = Vec::new();
+                wire::send(&mut stream,
+                           &wire::Msg::Hello { n, fp, p: 1024 },
+                           &mut scratch)
+                    .unwrap();
+                match wire::recv(&mut stream, &mut scratch).unwrap() {
+                    Some((wire::Msg::Welcome { .. }, _)) => {}
+                    other => panic!("expected Welcome, got {other:?}"),
+                }
+                let _first_round =
+                    wire::recv(&mut stream, &mut scratch);
+                drop(stream);
+            });
+        }
+        let err = trainer.step(0, &mut compute).unwrap_err();
+        // the failed round poisoned the trainer: no further steps
+        let poisoned = trainer.step(1, &mut compute).unwrap_err();
+        assert!(poisoned.to_string().contains("previous round"),
+                "{poisoned}");
+        // dropping the trainer shuts the surviving worker down so the
+        // scope can join
+        drop(trainer);
+        err
+    });
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker"), "{msg}");
 }
 
 #[test]

@@ -465,6 +465,101 @@ fn threaded_matches_inproc_bit_for_bit() {
     }
 }
 
+/// The socket-transport acceptance gate: a loopback `cada serve`-style
+/// run — the Trainer on a bound TCP listener, M worker threads running
+/// the worker binary's entry fn ([`cada::comm::run_worker`]) against
+/// their own dataset copies and backends — must reproduce the `InProc`
+/// golden curves, counters and final iterate bit-for-bit for
+/// adam/cada1/cada2. The wire byte counters additionally pin the
+/// delta-broadcast contract: theta ships every round (the server step
+/// dirties it), the CADA1 snapshot ships only after a refresh, and
+/// adam/cada2 ship no snapshot at all.
+#[test]
+fn socket_matches_inproc_bit_for_bit() {
+    let (mut compute, w) = workload(5);
+    let m = 5;
+    let cost = CostModel::default();
+    let rules: [(&str, RuleKind, u32, usize); 3] = [
+        ("adam", RuleKind::Always, u32::MAX, 1),
+        ("cada1", RuleKind::Cada1 { c: 0.6 }, 20, 10),
+        ("cada2", RuleKind::Cada2 { c: 0.6 }, 20, 10),
+    ];
+    for &(label, rule, max_delay, d_max) in &rules {
+        let mut inproc_algo = cada_algo(rule, 0.02, max_delay, d_max);
+        let inproc = trainer_run(&mut inproc_algo, cost.clone(),
+                                 TransportKind::InProc, &w, &mut compute);
+
+        let mut algo = cada_algo(rule, 0.02, max_delay, d_max);
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&w.data)
+            .partition(&w.partition)
+            .eval_batch(w.eval.clone())
+            .init_theta(vec![0.0; 1024])
+            .iters(ITERS)
+            .eval_every(EVAL_EVERY)
+            .batch(BATCH)
+            .upload_bytes(UPLOAD_BYTES)
+            .cost_model(cost.clone())
+            .transport(TransportKind::Socket)
+            .listen("127.0.0.1:0")
+            .seed(SEED)
+            .build()
+            .unwrap();
+        let addr = trainer.wire_addr().unwrap().to_string();
+        let (socket, wire) = std::thread::scope(|s| {
+            // M worker "processes": each runs the worker entry fn on
+            // its own dataset copy and its own backend, exactly like a
+            // `cada worker` process would
+            for _ in 0..m {
+                let addr = addr.clone();
+                let data = &w.data;
+                s.spawn(move || {
+                    let mut worker_compute =
+                        NativeLogReg::for_spec(22, 1024);
+                    cada::comm::run_worker(&addr, data,
+                                           &mut worker_compute)
+                        .expect("worker runs to shutdown");
+                });
+            }
+            let curve = trainer.run(0, &mut compute).unwrap();
+            let points: Vec<LegacyPoint> = curve
+                .points
+                .iter()
+                .map(|p| (p.loss, p.uploads, p.grad_evals, p.sim_time_s))
+                .collect();
+            let comm = trainer.comm.clone();
+            let wire = trainer.wire_stats().cloned().unwrap();
+            // dropping the trainer sends the shutdown frames the worker
+            // threads join on
+            drop(trainer);
+            ((points, comm), wire)
+        });
+        let socket = (socket.0, socket.1, algo.theta().to_vec());
+        assert_parity(&inproc, &socket,
+                      &format!("{label}: socket vs inproc"));
+
+        // the wire-measured delta-broadcast contract
+        assert_eq!(wire.rounds, ITERS as u64, "{label}");
+        // theta: one single-shard range per worker per round (the
+        // server step bumps its version every round)
+        assert_eq!(wire.theta_ranges_sent, (ITERS * m) as u64,
+                   "{label}");
+        assert_eq!(wire.theta_range_bytes,
+                   (ITERS * m * 4 * 1024) as u64, "{label}");
+        let refreshes = match rule {
+            // snapshot refresh every max_delay rounds: k = 0, 20, 40
+            RuleKind::Cada1 { .. } => ITERS.div_ceil(max_delay as usize),
+            _ => 0,
+        };
+        assert_eq!(wire.snapshot_ranges_sent, (refreshes * m) as u64,
+                   "{label}: snapshot must ship only after a refresh");
+        assert_eq!(wire.snapshot_range_bytes,
+                   (refreshes * m * 4 * 1024) as u64, "{label}");
+        assert!(wire.bytes_received > 0 && wire.bytes_sent > 0);
+    }
+}
+
 /// The sharded-server acceptance gate: `server_shards ∈ {1, 2, 4}` must
 /// produce bit-identical curves, counters and final iterates, on BOTH
 /// transports, for the adaptive and the always-upload rule — and under
