@@ -13,6 +13,7 @@ use std::sync::Arc;
 use cada::algorithms::{Cada, CadaCfg, Trainer};
 use cada::bench::{black_box, Runner};
 use cada::comm::{CostModel, TransportKind};
+use cada::compress::{CompressCfg, Payload, Purpose, Scheme};
 use cada::config::Schedule;
 use cada::coordinator::pool::ShardExec;
 use cada::coordinator::rules::RuleKind;
@@ -225,7 +226,7 @@ fn main() {
             lhs: 0.5,
             loss: 0.25,
             grad_evals: 2,
-            delta,
+            payload: Payload::Dense(delta),
         });
         let mut buf = Vec::new();
         let bytes = (4 * p) as u64;
@@ -237,6 +238,45 @@ fn main() {
         cada::comm::wire::encode(&msg, &mut buf);
         r.bench_bytes("wire decode step  p=65536", bytes, || {
             black_box(cada::comm::wire::decode(&buf).unwrap());
+        });
+    }
+
+    // ------- upload compressors (the lossy socket/sim hot path) ---------
+    // compress: what every uploading worker pays per round under a lossy
+    // scheme; decompress: what the server pays per absorbed upload (and
+    // what the rule-LHS probe pays every round)
+    {
+        let p = 65_536usize;
+        let x = randv(p, 71);
+        let topk = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.05,
+            ..CompressCfg::default()
+        };
+        let quant = CompressCfg {
+            scheme: Scheme::QuantB,
+            bits: 4,
+            ..CompressCfg::default()
+        };
+        let bytes = (4 * p) as u64;
+        r.header("upload compressors (p=65536)");
+        let mut k = 0u64;
+        r.bench_bytes("compress topk     p=65536", bytes, || {
+            black_box(topk.compress(&x, k, 0, Purpose::Upload));
+            k += 1;
+        });
+        let sparse = topk.compress(&x, 0, 0, Purpose::Upload);
+        r.bench_bytes("decompress topk   p=65536", bytes, || {
+            black_box(sparse.decompress().unwrap());
+        });
+        let mut k = 0u64;
+        r.bench_bytes("compress quant    p=65536", bytes, || {
+            black_box(quant.compress(&x, k, 0, Purpose::Upload));
+            k += 1;
+        });
+        let packed = quant.compress(&x, 0, 0, Purpose::Upload);
+        r.bench_bytes("decompress quant  p=65536", bytes, || {
+            black_box(packed.decompress().unwrap());
         });
     }
 

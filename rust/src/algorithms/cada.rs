@@ -28,6 +28,7 @@ use std::sync::Arc;
 
 use super::{Algorithm, AlgorithmKind, RoundCtx};
 use crate::comm::{wire, JobOut, RoundEvent, WorkerJob};
+use crate::compress::CompressCfg;
 use crate::coordinator::history::DeltaHistory;
 use crate::coordinator::pool::ShardExec;
 use crate::coordinator::rules::RuleKind;
@@ -83,6 +84,10 @@ pub struct Cada {
     /// multi-shard execution mode (engine hint, set before `init`):
     /// persistent pool (default) or per-round scoped threads
     shard_exec: ShardExec,
+    /// upload compression (engine hint, set before `init`); each
+    /// worker's state owns the error-feedback residual, the server
+    /// only needs the config to describe the wire protocol
+    compress: CompressCfg,
     /// CADA1 snapshot theta-tilde (refreshed every D iterations)
     snapshot: Vec<f32>,
     /// bumped on every snapshot refresh (drives the snapshot buffers)
@@ -133,6 +138,7 @@ impl Cada {
             history: DeltaHistory::new(cfg.d_max.max(1)),
             shards: 1,
             shard_exec: ShardExec::default(),
+            compress: CompressCfg::default(),
             snapshot: Vec::new(),
             snapshot_version: 0,
             theta_bufs: SnapshotBuffers::new(),
@@ -185,6 +191,12 @@ impl Algorithm for Cada {
         self.shard_exec = exec;
     }
 
+    fn set_compress(&mut self, cfg: CompressCfg) -> anyhow::Result<()> {
+        cfg.validate()?;
+        self.compress = cfg;
+        Ok(())
+    }
+
     fn init(&mut self, init_theta: &[f32], m: usize) -> anyhow::Result<()> {
         anyhow::ensure!(self.cfg.d_max >= 1, "d_max must be >= 1");
         let p = init_theta.len();
@@ -192,7 +204,11 @@ impl Algorithm for Cada {
             init_theta.to_vec(), m, self.cfg.opt.clone(), self.shards,
             self.shard_exec);
         self.workers = (0..m)
-            .map(|w| WorkerState::new(w, p, self.cfg.rule))
+            .map(|w| {
+                let mut ws = WorkerState::new(w, p, self.cfg.rule);
+                ws.set_compress(self.compress);
+                ws
+            })
             .collect();
         self.history = DeltaHistory::new(self.cfg.d_max);
         self.snapshot = init_theta.to_vec();
@@ -361,6 +377,7 @@ impl Algorithm for Cada {
             max_delay: self.cfg.max_delay,
             use_artifact_innov: self.cfg.use_artifact_innov,
             p: self.server.theta.len(),
+            compress: self.compress,
         })
     }
 
@@ -398,7 +415,12 @@ impl Algorithm for Cada {
             self.lhs_count += 1;
         }
         if step.decision.upload {
-            self.workers[w].absorb_remote_upload(&step.delta)?;
+            // the server folds what it received: decompress the shipped
+            // payload (Dense for Identity — exact bytes, bit-identical
+            // to the pre-compression protocol) before it lands in the
+            // worker slot
+            let dense = step.payload.decompress()?;
+            self.workers[w].absorb_remote_upload(&dense)?;
             self.uploaded.push(w);
         } else {
             self.workers[w].absorb_remote_skip();

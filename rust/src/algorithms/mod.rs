@@ -164,6 +164,24 @@ pub trait Algorithm {
         let _ = exec;
     }
 
+    /// Engine hint, delivered before [`Algorithm::init`]: the upload
+    /// compression config (the `[compress]` section). Lossy schemes
+    /// only make sense for methods that upload innovation deltas, so
+    /// the default accepts `Identity` (a no-op) and fails fast on
+    /// TopK/QuantB — a clean build-time error instead of silently
+    /// uncompressed uploads.
+    fn set_compress(&mut self, cfg: crate::compress::CompressCfg)
+                    -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !cfg.is_lossy(),
+            "algorithm '{}' does not support compressed uploads \
+             (lossy schemes apply to the server-centric innovation \
+             uploads; use [compress] scheme = \"identity\")",
+            self.name()
+        );
+        Ok(())
+    }
+
     /// Allocate all model state for `m` workers from the initial iterate.
     /// Called exactly once, by
     /// [`TrainerBuilder::build`](trainer::TrainerBuilder::build).

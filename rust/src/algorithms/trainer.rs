@@ -54,6 +54,7 @@ use crate::comm::{
     Participation, SocketServer, Threaded, Transport, TransportKind,
     WireStats, WorkerJob,
 };
+use crate::compress::{CompressCfg, Scheme};
 use crate::config::toml::{Doc, Value};
 use crate::coordinator::pool::ShardExec;
 use crate::data::{Batch, Dataset, Partition};
@@ -88,6 +89,10 @@ pub struct TrainCfg {
     pub trace_cap: usize,
     /// execution engine configuration (`[comm]` / `[comm.links]`)
     pub comm: CommCfg,
+    /// upload compression (`[compress]`): how the innovation uploads
+    /// CADA does not skip are shrunk on the wire. `Identity` (default)
+    /// is bit-identical to no compression at all.
+    pub compress: CompressCfg,
 }
 
 impl Default for TrainCfg {
@@ -102,6 +107,7 @@ impl Default for TrainCfg {
             broadcast_bytes: 0,
             trace_cap: 0,
             comm: CommCfg::default(),
+            compress: CompressCfg::default(),
         }
     }
 }
@@ -181,6 +187,22 @@ impl TrainCfg {
                                           fmt_f64_array(v)));
                 }
             }
+        }
+        // the [compress] section only appears when it deviates from the
+        // Identity default, so every pre-compression golden config is
+        // byte-identical
+        if self.compress != CompressCfg::default() {
+            out.push_str(&format!(
+                "\n[compress]\n\
+                 scheme = \"{}\"\n\
+                 topk_frac = {}\n\
+                 bits = {}\n\
+                 seed = {}\n",
+                self.compress.scheme.name(),
+                self.compress.topk_frac,
+                self.compress.bits,
+                self.compress.seed,
+            ));
         }
         out
     }
@@ -309,6 +331,46 @@ impl TrainCfg {
                 }
             }
         }
+        if let Some(section) = doc.sections.get("compress") {
+            for (key, value) in section {
+                match key.as_str() {
+                    "scheme" => {
+                        let s = value.as_str().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "[compress] scheme must be a string \
+                                 (identity / topk / quant)")
+                        })?;
+                        cfg.compress.scheme = Scheme::parse(s)?;
+                    }
+                    "topk_frac" => {
+                        cfg.compress.topk_frac =
+                            value.as_f64().ok_or_else(|| {
+                                anyhow::anyhow!("[compress] topk_frac \
+                                                 must be a number")
+                            })?;
+                    }
+                    "bits" => {
+                        cfg.compress.bits =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[compress] bits must be \
+                                                 a non-negative integer")
+                            })? as u32;
+                    }
+                    "seed" => {
+                        cfg.compress.seed =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[compress] seed must be \
+                                                 an exact non-negative \
+                                                 integer")
+                            })?;
+                    }
+                    other => {
+                        anyhow::bail!("unknown [compress] key '{other}'")
+                    }
+                }
+            }
+            cfg.compress.validate()?;
+        }
         if let Some(section) = doc.sections.get("comm.links") {
             for (key, value) in section {
                 let arr = match value {
@@ -371,6 +433,10 @@ pub struct Trainer<'a, A: Algorithm + ?Sized> {
     wire: Option<SocketServer>,
     /// socket transport: the static handshake config
     wire_cfg: Option<wire::WireWorkerCfg>,
+    /// bytes one compressed upload occupies in the simulated accounting
+    /// (payload sizes are data-independent, so this is one constant per
+    /// run); equals `cfg.upload_bytes` when compression is off
+    sim_upload_bytes: usize,
     /// set when a round errors: worker state may have been moved into a
     /// job that never came home, so further steps must not run
     poisoned: bool,
@@ -534,10 +600,14 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         } else {
             self.cfg.comm.participation()
         };
+        // compressed uploads are priced (and clocked) at their on-wire
+        // size; the raw dense size feeds the per-worker compression
+        // ratio. Identity keeps both equal to `upload_bytes` exactly.
         let verdict = self.links.settle_uploads(
-            k, &pending, self.cfg.upload_bytes, policy);
+            k, &pending, self.sim_upload_bytes, policy);
         for &(w, t) in &verdict.arrival_s {
-            self.comm.count_upload(w, self.cfg.upload_bytes, t);
+            self.comm.count_upload_sized(
+                w, self.sim_upload_bytes, self.cfg.upload_bytes, t);
         }
         // dead-link uploads were transmitted (counted + charged above,
         // with their non-finite time kept out of the per-worker
@@ -851,6 +921,13 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         self
     }
 
+    /// Upload compression (`[compress]`; default [`Scheme::Identity`],
+    /// bit-identical to no compression).
+    pub fn compress(mut self, compress: CompressCfg) -> Self {
+        self.cfg.compress = compress;
+        self
+    }
+
     /// Validate, allocate the algorithm's state, the per-worker RNG
     /// streams and link models, and hand back a ready [`Trainer`].
     pub fn build(self) -> anyhow::Result<Trainer<'a, A>> {
@@ -885,7 +962,18 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         };
         algo.set_server_shards(shards);
         algo.set_shard_exec(self.cfg.comm.shard_exec);
+        // hand the algorithm the compression config before init so the
+        // worker states allocate their error-feedback residuals;
+        // algorithms without compressed-upload support reject lossy
+        // schemes here rather than silently ignoring them
+        algo.set_compress(self.cfg.compress)?;
         algo.init(&init_theta, m)?;
+        // payload sizes are data-independent, so one constant covers
+        // every simulated upload of the run
+        let sim_upload_bytes = self
+            .cfg
+            .compress
+            .sim_upload_bytes(init_theta.len(), self.cfg.upload_bytes);
         let root = Rng::new(self.cfg.seed);
         let rngs = (0..m).map(|w| root.fork(w as u64 + 1)).collect();
         let links = self.cfg.comm.build_links(m, &self.cfg.cost_model);
@@ -930,6 +1018,7 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
             transport: None,
             wire,
             wire_cfg,
+            sim_upload_bytes,
             poisoned: false,
         })
     }
@@ -1074,11 +1163,20 @@ mod tests {
                 asymmetry_mult: Vec::new(),
                 compute_mult: vec![1.0, 8.0],
             },
+            compress: CompressCfg {
+                scheme: Scheme::TopK,
+                topk_frac: 0.1,
+                bits: 5,
+                seed: 9,
+            },
         };
         let text = cfg.to_toml();
         let doc = toml::parse(&text).unwrap();
         let back = TrainCfg::from_doc(&doc).unwrap();
         assert_eq!(back, cfg);
+        // the default Identity config emits no [compress] section at
+        // all, so pre-compression golden configs stay byte-identical
+        assert!(!TrainCfg::default().to_toml().contains("[compress]"));
         // defaults survive an empty doc
         let empty = TrainCfg::from_doc(&toml::parse("").unwrap()).unwrap();
         assert_eq!(empty, TrainCfg::default());
@@ -1093,6 +1191,18 @@ mod tests {
             .unwrap();
         assert!(TrainCfg::from_doc(&bad).is_err());
         let bad = toml::parse("[comm.links]\nlatency_mult = 3\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[compress]\nschema = \"topk\"\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[compress]\nscheme = \"gzip\"\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        // lossy configs are validated at parse time: 9-bit quantization
+        // and a zero top-k density are config errors, not run surprises
+        let bad = toml::parse(
+            "[compress]\nscheme = \"quant\"\nbits = 9\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse(
+            "[compress]\nscheme = \"topk\"\ntopk_frac = 0\n").unwrap();
         assert!(TrainCfg::from_doc(&bad).is_err());
         // compute multipliers validate like the other link multipliers
         let bad = toml::parse("[comm.links]\ncompute_mult = [1, -1]\n")
@@ -1156,6 +1266,82 @@ mod tests {
             .unwrap();
         assert!(err.to_string().contains("socket"), "{err}");
         assert!(err.to_string().contains("fedavg"), "{err}");
+    }
+
+    #[test]
+    fn lossy_compression_is_rejected_by_unsupporting_algorithms() {
+        // local-update methods never route through the innovation
+        // upload path, so a lossy scheme on them must fail at build
+        // time with a clear message, not silently train uncompressed
+        let (_, data, partition) = workload();
+        let mut algo = FedAvg::new(0.1, 2);
+        let err = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1]))
+            .init_theta(vec![0.0; 1024])
+            .compress(CompressCfg {
+                scheme: Scheme::TopK,
+                topk_frac: 0.1,
+                bits: 4,
+                seed: 0,
+            })
+            .build()
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("compressed uploads"), "{err}");
+        assert!(err.to_string().contains("fedavg"), "{err}");
+        // Identity is fine everywhere
+        let mut algo = FedAvg::new(0.1, 2);
+        assert!(Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1]))
+            .init_theta(vec![0.0; 1024])
+            .compress(CompressCfg::default())
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn lossy_compression_shrinks_simulated_upload_bytes() {
+        // the simulated accounting prices compressed uploads at their
+        // data-independent on-wire size; the raw dense size lands in
+        // the per-worker ratio columns
+        let (mut compute, data, partition) = workload();
+        let compress = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.05,
+            bits: 4,
+            seed: 3,
+        };
+        let mut algo = Cada::new(CadaCfg::basic(RuleKind::Always,
+                                                amsgrad()));
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&(0..32).collect::<Vec<_>>()))
+            .init_theta(vec![0.0; 1024])
+            .iters(4)
+            .upload_bytes(4 * 1024)
+            .compress(compress)
+            .build()
+            .unwrap();
+        trainer.run(0, &mut compute).unwrap();
+        // Always uploads every round: 4 rounds x 3 workers
+        assert_eq!(trainer.comm.uploads, 12);
+        let per_upload =
+            crate::compress::Payload::sparse_bytes(compress.topk_k(1024));
+        assert_eq!(trainer.comm.upload_bytes, 12 * per_upload as u64);
+        assert_eq!(trainer.comm.worker_raw_bytes, vec![4 * 4096; 3]);
+        assert_eq!(trainer.comm.worker_wire_bytes,
+                   vec![4 * per_upload as u64; 3]);
+        // >= 4x measured reduction at 5% density
+        assert!(4 * per_upload <= 4096,
+                "per-upload {per_upload} bytes not >= 4x under 4096");
     }
 
     #[test]

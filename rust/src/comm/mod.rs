@@ -86,6 +86,14 @@ pub struct CommStats {
     /// `worker_uploads`, never delivered — the per-worker view of
     /// [`CommStats::lost_uploads`])
     pub worker_lost: Vec<u64>,
+    /// per-worker uncompressed innovation bytes (what the uploads
+    /// *carry*, before any lossy compression); equal to
+    /// `worker_wire_bytes` when compression is off
+    pub worker_raw_bytes: Vec<u64>,
+    /// per-worker bytes actually charged to the link (the compressed
+    /// on-wire size); `worker_raw_bytes / worker_wire_bytes` is the
+    /// measured per-worker compression ratio
+    pub worker_wire_bytes: Vec<u64>,
 }
 
 impl CommStats {
@@ -95,6 +103,8 @@ impl CommStats {
             worker_upload_s: vec![0.0; m],
             worker_uploads: vec![0; m],
             worker_lost: vec![0; m],
+            worker_raw_bytes: vec![0; m],
+            worker_wire_bytes: vec![0; m],
             ..Default::default()
         }
     }
@@ -106,8 +116,19 @@ impl CommStats {
     /// transmission happened — but is kept out of the per-worker
     /// upload-seconds tally, which must stay renderable.
     pub fn count_upload(&mut self, w: usize, bytes: usize, time_s: f64) {
+        self.count_upload_sized(w, bytes, bytes, time_s);
+    }
+
+    /// [`CommStats::count_upload`] with the compressed/uncompressed
+    /// split made explicit: `wire_bytes` is what actually crossed the
+    /// link (and what the event clock and `upload_bytes` charge),
+    /// `raw_bytes` is the dense innovation those bytes decompress to.
+    /// The two coincide when compression is off, so `count_upload`
+    /// delegates here with `raw == wire`.
+    pub fn count_upload_sized(&mut self, w: usize, wire_bytes: usize,
+                              raw_bytes: usize, time_s: f64) {
         self.uploads += 1;
-        self.upload_bytes += bytes as u64;
+        self.upload_bytes += wire_bytes as u64;
         if time_s.is_finite() {
             if let Some(t) = self.worker_upload_s.get_mut(w) {
                 *t += time_s;
@@ -115,6 +136,12 @@ impl CommStats {
         }
         if let Some(c) = self.worker_uploads.get_mut(w) {
             *c += 1;
+        }
+        if let Some(b) = self.worker_raw_bytes.get_mut(w) {
+            *b += raw_bytes as u64;
+        }
+        if let Some(b) = self.worker_wire_bytes.get_mut(w) {
+            *b += wire_bytes as u64;
         }
     }
 
@@ -485,6 +512,24 @@ mod tests {
         assert_eq!(s.worker_uploads[3], 1);
         assert_eq!(s.worker_upload_s[3], 2.5);
         assert_eq!(s.worker_uploads[1], 0);
+    }
+
+    #[test]
+    fn sized_uploads_split_raw_and_wire_bytes() {
+        let mut s = CommStats::for_workers(2);
+        // a 4x-compressed upload: the link (and upload_bytes) see 100,
+        // the ratio columns see 400 raw vs 100 on the wire
+        s.count_upload_sized(0, 100, 400, 1.0);
+        s.count_upload_sized(0, 100, 400, 1.0);
+        // uncompressed path: count_upload keeps raw == wire
+        s.count_upload(1, 400, 1.0);
+        assert_eq!(s.uploads, 3);
+        assert_eq!(s.upload_bytes, 600);
+        assert_eq!(s.worker_raw_bytes, vec![800, 400]);
+        assert_eq!(s.worker_wire_bytes, vec![200, 400]);
+        // out-of-range workers never panic
+        s.count_upload_sized(9, 1, 2, 0.1);
+        assert_eq!(s.uploads, 4);
     }
 
     #[test]

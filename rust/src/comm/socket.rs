@@ -24,6 +24,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
 use super::wire::{self, Msg, RoundMsg, WireRound, WireStep, WireWorkerCfg};
+use crate::compress::Payload;
 use crate::coordinator::worker::WorkerState;
 use crate::data::Dataset;
 use crate::runtime::Compute;
@@ -53,6 +54,13 @@ pub struct WireStats {
     /// CADA1 snapshot ranges shipped (only after a refresh)
     pub snapshot_ranges_sent: u64,
     pub snapshot_range_bytes: u64,
+    /// dense bytes the delivered innovation uploads decompress to
+    /// (4 bytes per f32 per upload): what the uploads *carry*
+    pub upload_raw_bytes: u64,
+    /// encoded bytes of those upload payloads as they crossed the wire;
+    /// `upload_raw_bytes / upload_wire_bytes` is the measured
+    /// compression ratio (1x under `Identity`)
+    pub upload_wire_bytes: u64,
 }
 
 /// One connected worker process, with the per-shard versions it last
@@ -306,6 +314,12 @@ impl SocketServer {
                         }
                         continue;
                     }
+                    if step.decision.upload {
+                        self.stats.upload_raw_bytes +=
+                            step.payload.raw_bytes() as u64;
+                        self.stats.upload_wire_bytes +=
+                            step.payload.encoded_bytes() as u64;
+                    }
                     steps.push(step);
                 }
                 Ok(Some((other, _))) => {
@@ -445,6 +459,10 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
         compute.p_pad()
     );
     let mut state = WorkerState::new(w, cfg.p, cfg.rule);
+    // the server's compression config: the worker compresses (rule LHS
+    // on the decompressed innovation, error-feedback residual), the
+    // server decodes what arrives
+    state.set_compress(cfg.compress);
     let mut theta = vec![0.0f32; cfg.p];
     let mut snapshot = cfg
         .rule
@@ -497,11 +515,16 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
             compute,
             cfg.use_artifact_innov,
         )?;
-        let delta = if step.decision.upload {
+        let payload = if step.decision.upload {
             report.uploads += 1;
-            state.last_delta().to_vec()
+            // lossy schemes stash the encoded payload in the worker
+            // state; Identity ships the dense innovation exactly as the
+            // pre-compression protocol did
+            state.take_payload().unwrap_or_else(|| {
+                Payload::Dense(state.last_delta().to_vec())
+            })
         } else {
-            Vec::new()
+            Payload::Dense(Vec::new())
         };
         wire::send(
             &mut stream,
@@ -511,7 +534,7 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
                 lhs: step.lhs,
                 loss: step.loss,
                 grad_evals: step.grad_evals,
-                delta,
+                payload,
             }),
             &mut scratch,
         )?;
@@ -585,6 +608,7 @@ mod tests {
             max_delay: 50,
             use_artifact_innov: false,
             p: 64,
+            compress: crate::compress::CompressCfg::default(),
         };
         let mut server = SocketServer::bind("127.0.0.1:0", 1).unwrap();
         let addr = server.local_addr().unwrap().to_string();

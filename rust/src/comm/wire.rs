@@ -18,7 +18,9 @@
 //!   as [`RangeDelta`]s.
 //! * [`Msg::Step`] — the worker's result: the upload decision, rule
 //!   LHS, loss, gradient-evaluation count, and (on upload) the
-//!   innovation delta.
+//!   innovation [`Payload`] — dense for `Identity`, index+value pairs
+//!   for `TopK`, bit-packed codes for `QuantB`; the frame length (and
+//!   so [`WireStats`](super::WireStats)) measures the compressed size.
 //! * [`Msg::Shutdown`] — drain and exit the worker process.
 //!
 //! Framing is `[u32 LE payload length][payload]`, payload byte 0 a
@@ -31,12 +33,15 @@
 use std::io::{Read, Write};
 use std::sync::Arc;
 
+use crate::compress::{CompressCfg, Payload, Scheme};
 use crate::coordinator::rules::{Decision, RuleKind};
 use crate::coordinator::shard::ShardLayout;
 
 /// Protocol magic ("CADA") + version; bumped on any wire-format change.
+/// v2: `Welcome` carries the compression config, `Step` carries a
+/// tagged [`Payload`] instead of a raw dense delta.
 pub const MAGIC: u32 = 0x4341_4441;
-pub const PROTO_VERSION: u16 = 1;
+pub const PROTO_VERSION: u16 = 2;
 
 /// Upper bound on one frame's payload (a 2.7M-parameter delta is ~11 MB;
 /// 256 MB leaves headroom for every artifact spec while keeping a
@@ -61,6 +66,9 @@ pub struct WireWorkerCfg {
     pub use_artifact_innov: bool,
     /// parameter count (padded); worker buffers are sized by this
     pub p: usize,
+    /// upload compression; the worker applies it (rule LHS on the
+    /// decompressed innovation, error feedback), the server decodes
+    pub compress: CompressCfg,
 }
 
 /// One contiguous dirty range of a broadcast vector.
@@ -114,8 +122,9 @@ pub struct WireStep {
     pub lhs: f64,
     pub loss: f32,
     pub grad_evals: u64,
-    /// innovation delta_m^k; empty unless `decision.upload`
-    pub delta: Vec<f32>,
+    /// innovation delta_m^k, possibly compressed; `Dense(vec![])`
+    /// unless `decision.upload`
+    pub payload: Payload,
 }
 
 /// Server-side frozen state of one round, produced by
@@ -197,6 +206,50 @@ fn put_deltas(buf: &mut Vec<u8>, deltas: &[RangeDelta]) {
     }
 }
 
+fn put_compress(buf: &mut Vec<u8>, cfg: &CompressCfg) {
+    let scheme = match cfg.scheme {
+        Scheme::Identity => 0u8,
+        Scheme::TopK => 1,
+        Scheme::QuantB => 2,
+    };
+    buf.push(scheme);
+    put_f64(buf, cfg.topk_frac);
+    put_u32(buf, cfg.bits);
+    put_u64(buf, cfg.seed);
+}
+
+const PAYLOAD_DENSE: u8 = 0;
+const PAYLOAD_SPARSE: u8 = 1;
+const PAYLOAD_QUANT: u8 = 2;
+
+fn put_payload(buf: &mut Vec<u8>, payload: &Payload) {
+    match payload {
+        Payload::Dense(v) => {
+            buf.push(PAYLOAD_DENSE);
+            put_f32s(buf, v);
+        }
+        Payload::Sparse { p, idx, val } => {
+            buf.push(PAYLOAD_SPARSE);
+            put_u32(buf, *p);
+            put_u32(buf, idx.len() as u32);
+            for &i in idx {
+                put_u32(buf, i);
+            }
+            for &v in val {
+                put_f32(buf, v);
+            }
+        }
+        Payload::Quant { p, bits, scale, codes } => {
+            buf.push(PAYLOAD_QUANT);
+            put_u32(buf, *p);
+            buf.push(*bits);
+            put_f32(buf, *scale);
+            put_u32(buf, codes.len() as u32);
+            buf.extend_from_slice(codes);
+        }
+    }
+}
+
 fn put_rule(buf: &mut Vec<u8>, rule: RuleKind) {
     let (tag, c, h) = match rule {
         RuleKind::Always => (0u8, 0.0, 0u32),
@@ -235,6 +288,7 @@ pub fn encode(msg: &Msg, buf: &mut Vec<u8>) {
             put_u32(buf, cfg.max_delay);
             buf.push(cfg.use_artifact_innov as u8);
             put_u64(buf, cfg.p as u64);
+            put_compress(buf, &cfg.compress);
         }
         Msg::Round(r) => {
             buf.push(TAG_ROUND);
@@ -255,7 +309,7 @@ pub fn encode(msg: &Msg, buf: &mut Vec<u8>) {
             put_f64(buf, s.lhs);
             put_f32(buf, s.loss);
             put_u64(buf, s.grad_evals);
-            put_f32s(buf, &s.delta);
+            put_payload(buf, &s.payload);
         }
         Msg::Shutdown => buf.push(TAG_SHUTDOWN),
     }
@@ -335,6 +389,74 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
+    fn compress(&mut self) -> anyhow::Result<CompressCfg> {
+        let scheme = match self.u8()? {
+            0 => Scheme::Identity,
+            1 => Scheme::TopK,
+            2 => Scheme::QuantB,
+            other => anyhow::bail!("unknown wire compression scheme {other}"),
+        };
+        let cfg = CompressCfg {
+            scheme,
+            topk_frac: self.f64()?,
+            bits: self.u32()?,
+            seed: self.u64()?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn payload(&mut self) -> anyhow::Result<Payload> {
+        let payload = match self.u8()? {
+            PAYLOAD_DENSE => Payload::Dense(self.f32s()?),
+            PAYLOAD_SPARSE => {
+                let p = self.u32()?;
+                // a decoded payload decompresses to p f32s; keep a
+                // hostile dimension from allocating past a frame
+                anyhow::ensure!(
+                    (p as usize) <= MAX_FRAME / 4,
+                    "sparse payload claims {p} parameters (max {})",
+                    MAX_FRAME / 4
+                );
+                let k = self.u32()? as usize;
+                // each pair is 8 bytes; reject counts the remaining
+                // payload cannot possibly hold before allocating
+                anyhow::ensure!(
+                    k <= (self.b.len() - self.pos) / 8,
+                    "corrupt wire message: {k} sparse pairs in {} bytes",
+                    self.b.len() - self.pos
+                );
+                let mut idx = Vec::with_capacity(k);
+                for _ in 0..k {
+                    idx.push(self.u32()?);
+                }
+                let mut val = Vec::with_capacity(k);
+                for _ in 0..k {
+                    val.push(self.f32()?);
+                }
+                Payload::Sparse { p, idx, val }
+            }
+            PAYLOAD_QUANT => {
+                let p = self.u32()?;
+                anyhow::ensure!(
+                    (p as usize) <= MAX_FRAME / 4,
+                    "quantized payload claims {p} parameters (max {})",
+                    MAX_FRAME / 4
+                );
+                let bits = self.u8()?;
+                let scale = self.f32()?;
+                let n = self.u32()? as usize;
+                let codes = self.take(n)?.to_vec();
+                Payload::Quant { p, bits, scale, codes }
+            }
+            other => anyhow::bail!("unknown wire payload tag {other}"),
+        };
+        // structural invariants (sorted in-range indices, code-buffer
+        // length, finite scale) hold from here on
+        payload.validate()?;
+        Ok(payload)
+    }
+
     fn rule(&mut self) -> anyhow::Result<RuleKind> {
         let tag = self.u8()?;
         let c = self.f32()?;
@@ -384,11 +506,18 @@ pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
             let max_delay = r.u32()?;
             let use_artifact_innov = r.u8()? != 0;
             let p = r.u64()? as usize;
+            let compress = r.compress()?;
             Msg::Welcome {
                 w,
                 m,
                 batch,
-                cfg: WireWorkerCfg { rule, max_delay, use_artifact_innov, p },
+                cfg: WireWorkerCfg {
+                    rule,
+                    max_delay,
+                    use_artifact_innov,
+                    p,
+                    compress,
+                },
             }
         }
         TAG_ROUND => {
@@ -418,7 +547,7 @@ pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
                 lhs: r.f64()?,
                 loss: r.f32()?,
                 grad_evals: r.u64()?,
-                delta: r.f32s()?,
+                payload: r.payload()?,
             })
         }
         TAG_SHUTDOWN => Msg::Shutdown,
@@ -515,6 +644,7 @@ mod tests {
                 max_delay: 20,
                 use_artifact_innov: false,
                 p: 1024,
+                compress: CompressCfg::default(),
             },
         });
         roundtrip(Msg::Round(RoundMsg {
@@ -533,9 +663,84 @@ mod tests {
             lhs: 3.25,
             loss: 0.5,
             grad_evals: 2,
-            delta: vec![0.0, -1.0, 2.0],
+            payload: Payload::Dense(vec![0.0, -1.0, 2.0]),
         }));
         roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn compressed_payloads_and_configs_roundtrip() {
+        // every compression scheme crosses the handshake ...
+        for compress in [
+            CompressCfg::default(),
+            CompressCfg {
+                scheme: Scheme::TopK,
+                topk_frac: 0.1,
+                bits: 4,
+                seed: 7,
+            },
+            CompressCfg {
+                scheme: Scheme::QuantB,
+                topk_frac: 0.05,
+                bits: 3,
+                seed: u64::MAX,
+            },
+        ] {
+            roundtrip(Msg::Welcome {
+                w: 1,
+                m: 4,
+                batch: 16,
+                cfg: WireWorkerCfg {
+                    rule: RuleKind::Cada1 { c: 0.8 },
+                    max_delay: 10,
+                    use_artifact_innov: false,
+                    p: 512,
+                    compress,
+                },
+            });
+        }
+        // ... and every payload shape crosses the step, bit-exactly
+        let step = |payload| {
+            Msg::Step(WireStep {
+                w: 0,
+                decision: Decision { upload: true, rule_triggered: true },
+                lhs: 1.5,
+                loss: 0.25,
+                grad_evals: 1,
+                payload,
+            })
+        };
+        roundtrip(step(Payload::Dense(vec![f32::MIN_POSITIVE, -0.0])));
+        roundtrip(step(Payload::Sparse {
+            p: 16,
+            idx: vec![0, 3, 15],
+            val: vec![1.5, -2.25, f32::MAX],
+        }));
+        roundtrip(step(Payload::Quant {
+            p: 9,
+            bits: 3,
+            scale: 0.125,
+            codes: vec![0b1010_1010, 0b0101_0101, 0b0000_0111, 0x01],
+        }));
+        // on-wire size of a step payload is exactly what the simulated
+        // accounting predicts
+        let mut buf = Vec::new();
+        let sparse = Payload::Sparse {
+            p: 16,
+            idx: vec![0, 3, 15],
+            val: vec![1.5, -2.25, f32::MAX],
+        };
+        put_payload(&mut buf, &sparse);
+        assert_eq!(buf.len() as u64, sparse.encoded_bytes());
+        buf.clear();
+        let quant = Payload::Quant {
+            p: 9,
+            bits: 3,
+            scale: 0.125,
+            codes: vec![0b1010_1010, 0b0101_0101, 0b0000_0111, 0x01],
+        };
+        put_payload(&mut buf, &quant);
+        assert_eq!(buf.len() as u64, quant.encoded_bytes());
     }
 
     #[test]
@@ -557,6 +762,7 @@ mod tests {
                     max_delay: 50,
                     use_artifact_innov: true,
                     p: 16,
+                    compress: CompressCfg::default(),
                 },
             });
         }
@@ -576,16 +782,16 @@ mod tests {
             lhs: 0.1f64 + 0.2f64,
             loss: 0.30000001,
             grad_evals: 1,
-            delta: data.clone(),
+            payload: Payload::Dense(data.clone()),
         });
         let mut buf = Vec::new();
         encode(&msg, &mut buf);
         match decode(&buf).unwrap() {
-            Msg::Step(s) => {
-                for (a, b) in s.delta.iter().zip(&data) {
+            Msg::Step(WireStep { payload: Payload::Dense(d), lhs, .. }) => {
+                for (a, b) in d.iter().zip(&data) {
                     assert_eq!(a.to_bits(), b.to_bits());
                 }
-                assert_eq!(s.lhs.to_bits(), (0.1f64 + 0.2f64).to_bits());
+                assert_eq!(lhs.to_bits(), (0.1f64 + 0.2f64).to_bits());
             }
             other => panic!("wrong message: {other:?}"),
         }
@@ -650,6 +856,204 @@ mod tests {
         let cut = round.len() - 8; // theta delta count field
         round[cut..cut + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode(&round).is_err());
+    }
+
+    #[test]
+    fn hostile_payload_counts_never_overallocate() {
+        // hand-build step payloads whose length claims exceed what the
+        // frame holds; the decoder must reject them from the header
+        // fields alone (the `Vec::with_capacity` guards), not trust
+        // them and allocate
+        let step_header = |buf: &mut Vec<u8>| {
+            buf.push(TAG_STEP);
+            put_u32(buf, 0); // w
+            buf.push(1); // upload
+            buf.push(1); // rule_triggered
+            put_f64(buf, 0.0);
+            put_f32(buf, 0.0);
+            put_u64(buf, 1);
+        };
+        // sparse pair count far past the payload
+        let mut buf = Vec::new();
+        step_header(&mut buf);
+        buf.push(PAYLOAD_SPARSE);
+        put_u32(&mut buf, 16); // p
+        put_u32(&mut buf, u32::MAX); // k
+        let err = decode(&buf).unwrap_err();
+        assert!(err.to_string().contains("sparse pairs"), "{err}");
+        // sparse dimension past MAX_FRAME/4
+        let mut buf = Vec::new();
+        step_header(&mut buf);
+        buf.push(PAYLOAD_SPARSE);
+        put_u32(&mut buf, u32::MAX); // p
+        put_u32(&mut buf, 0);
+        assert!(decode(&buf).is_err());
+        // quantized dimension past MAX_FRAME/4
+        let mut buf = Vec::new();
+        step_header(&mut buf);
+        buf.push(PAYLOAD_QUANT);
+        put_u32(&mut buf, u32::MAX); // p
+        buf.push(4);
+        put_f32(&mut buf, 1.0);
+        put_u32(&mut buf, 0);
+        assert!(decode(&buf).is_err());
+        // quantized code-buffer length past the payload
+        let mut buf = Vec::new();
+        step_header(&mut buf);
+        buf.push(PAYLOAD_QUANT);
+        put_u32(&mut buf, 8);
+        buf.push(4);
+        put_f32(&mut buf, 1.0);
+        put_u32(&mut buf, u32::MAX);
+        assert!(decode(&buf).is_err());
+        // dense element count past the payload (pre-existing guard)
+        let mut buf = Vec::new();
+        step_header(&mut buf);
+        buf.push(PAYLOAD_DENSE);
+        put_u32(&mut buf, u32::MAX);
+        assert!(decode(&buf).is_err());
+        // unknown payload tag
+        let mut buf = Vec::new();
+        step_header(&mut buf);
+        buf.push(7);
+        let err = decode(&buf).unwrap_err();
+        assert!(err.to_string().contains("payload tag"), "{err}");
+        // structurally invalid sparse payloads (unsorted / out-of-range
+        // indices) are rejected by the post-decode validation
+        let mut buf = Vec::new();
+        step_header(&mut buf);
+        buf.push(PAYLOAD_SPARSE);
+        put_u32(&mut buf, 4); // p
+        put_u32(&mut buf, 2); // k
+        put_u32(&mut buf, 3);
+        put_u32(&mut buf, 1); // descending
+        put_f32(&mut buf, 1.0);
+        put_f32(&mut buf, 2.0);
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn every_proper_prefix_of_each_message_fails_cleanly() {
+        // truncation property: any strict prefix of a valid frame is a
+        // clean decode error — some field is always cut short before
+        // the parse can complete
+        let msgs = vec![
+            Msg::Hello { n: 800, fp: 1, p: 1024 },
+            Msg::Welcome {
+                w: 1,
+                m: 4,
+                batch: 16,
+                cfg: WireWorkerCfg {
+                    rule: RuleKind::Cada2 { c: 0.6 },
+                    max_delay: 20,
+                    use_artifact_innov: false,
+                    p: 64,
+                    compress: CompressCfg {
+                        scheme: Scheme::TopK,
+                        topk_frac: 0.1,
+                        bits: 4,
+                        seed: 3,
+                    },
+                },
+            },
+            Msg::Round(RoundMsg {
+                k: 9,
+                rhs: 0.5,
+                batch: vec![1, 2, 3],
+                theta: vec![RangeDelta { start: 0, data: vec![1.0, 2.0] }],
+                snapshot: vec![],
+            }),
+            Msg::Step(WireStep {
+                w: 2,
+                decision: Decision { upload: true, rule_triggered: true },
+                lhs: 1.0,
+                loss: 0.5,
+                grad_evals: 1,
+                payload: Payload::Sparse {
+                    p: 8,
+                    idx: vec![1, 5],
+                    val: vec![-1.0, 2.0],
+                },
+            }),
+            Msg::Step(WireStep {
+                w: 3,
+                decision: Decision { upload: true, rule_triggered: true },
+                lhs: 1.0,
+                loss: 0.5,
+                grad_evals: 1,
+                payload: Payload::Quant {
+                    p: 5,
+                    bits: 2,
+                    scale: 0.5,
+                    codes: vec![0b01_10_01_10, 0b10],
+                },
+            }),
+        ];
+        let mut buf = Vec::new();
+        for msg in msgs {
+            encode(&msg, &mut buf);
+            assert_eq!(decode(&buf).unwrap(), msg);
+            for cut in 0..buf.len() {
+                assert!(
+                    decode(&buf[..cut]).is_err(),
+                    "prefix {cut}/{} of {msg:?} decoded",
+                    buf.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fuzzed_frames_never_panic() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF0_22);
+        // pure-noise payloads: every outcome must be a clean Result
+        for trial in 0..2000u64 {
+            let n = (rng.next_u64() % 200) as usize;
+            let mut buf: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            // bias half the trials toward plausible frames: a valid
+            // message tag gets past the first dispatch
+            if trial % 2 == 0 && !buf.is_empty() {
+                buf[0] = [TAG_HELLO, TAG_WELCOME, TAG_ROUND, TAG_STEP,
+                          TAG_SHUTDOWN][(trial / 2) as usize % 5];
+            }
+            let _ = decode(&buf);
+        }
+        // mutation fuzzing: corrupt single bytes of a real compressed
+        // step and re-decode; decode either errors cleanly or yields a
+        // message whose canonical encoding is a byte-wise fixed point.
+        // (Byte comparison, not PartialEq: a mutation can smuggle in a
+        // NaN, which compares unequal to itself; and non-canonical
+        // booleans decode fine but re-encode as 0/1, so the mutated
+        // buffer itself is not the fixed point — its re-encoding is.)
+        let msg = Msg::Step(WireStep {
+            w: 1,
+            decision: Decision { upload: true, rule_triggered: true },
+            lhs: 2.0,
+            loss: 0.75,
+            grad_evals: 1,
+            payload: Payload::Sparse {
+                p: 32,
+                idx: vec![0, 7, 31],
+                val: vec![1.0, -2.0, 3.0],
+            },
+        });
+        let mut pristine = Vec::new();
+        encode(&msg, &mut pristine);
+        for _ in 0..2000 {
+            let mut buf = pristine.clone();
+            let at = (rng.next_u64() as usize) % buf.len();
+            buf[at] ^= (rng.next_u64() & 0xFF) as u8;
+            if let Ok(decoded) = decode(&buf) {
+                let mut once = Vec::new();
+                encode(&decoded, &mut once);
+                let mut twice = Vec::new();
+                encode(&decode(&once).unwrap(), &mut twice);
+                assert_eq!(once, twice,
+                           "decode/encode not idempotent on {decoded:?}");
+            }
+        }
     }
 
     #[test]

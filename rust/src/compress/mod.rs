@@ -1,0 +1,734 @@
+//! Lossy upload compression: shrink the innovation uploads CADA does
+//! not skip.
+//!
+//! CADA's contribution is *skipping* uploads; this layer is the
+//! complementary axis — making the uploads that do happen smaller. A
+//! [`CompressCfg`] selects one of three [`Scheme`]s:
+//!
+//! * **`Identity`** — the exact pre-compression path. Workers run the
+//!   same code they always ran; every golden parity suite stays
+//!   bit-identical (enforced by `tests/golden_parity.rs`).
+//! * **`TopK`** — magnitude sparsification: keep the `ceil(frac * p)`
+//!   largest-|x| coordinates as (index, value) pairs, drop the rest.
+//! * **`QuantB`** — b-bit stochastic quantization onto a symmetric
+//!   uniform grid (`2^b - 1` levels scaled by the vector's max-|x|).
+//!   The rounding randomness is a pure function of
+//!   `(seed, round, worker, purpose)` — the same construction as the
+//!   `LinkSet` straggler jitter — so a run is reproducible and the
+//!   server and worker sides of the socket transport agree without any
+//!   extra wire traffic.
+//!
+//! Both lossy schemes sit behind per-worker **error feedback**: the mass
+//! a round truncates is kept in a residual accumulator and added back
+//! into the next round's candidate, so compression delays gradient
+//! information instead of destroying it. The compressors are built so
+//! that the conservation law
+//!
+//! ```text
+//! decompress(compress(candidate)) + residual' == candidate   (exact, f32)
+//! ```
+//!
+//! holds *exactly*, elementwise, every round: `TopK` keeps exact values
+//! and drops the rest into the residual; `QuantB` snaps any coordinate
+//! whose rounding would not reconstruct exactly to the zero code (both
+//! ends see the snapped code, so they still agree). The property test
+//! below asserts `==`, not a tolerance.
+//!
+//! Composition with the CADA rules: the CADA1/CADA2/LAG skip-rule LHS is
+//! computed on the *decompressed* innovation (see
+//! [`crate::coordinator::worker::WorkerState`]), i.e. on what the server
+//! would actually receive, so the skip logic and the compressor compose
+//! instead of the rule reasoning about bytes that never cross the wire.
+//!
+//! Payload sizes are a pure function of `(scheme, p)` — never of the
+//! data — which is what lets the simulated `upload_bytes` accounting and
+//! the measured socket `WireStats` agree on the compression ratio.
+
+use crate::util::rng::Rng;
+
+/// Which compressor runs on the upload path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scheme {
+    /// no compression: the exact pre-compression code path
+    #[default]
+    Identity,
+    /// top-k magnitude sparsification (index + value pairs)
+    TopK,
+    /// b-bit stochastic quantization (seeded, symmetric grid)
+    QuantB,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Identity => "identity",
+            Scheme::TopK => "topk",
+            Scheme::QuantB => "quant",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Scheme> {
+        match s {
+            "identity" | "none" => Ok(Scheme::Identity),
+            "topk" => Ok(Scheme::TopK),
+            "quant" | "quantb" => Ok(Scheme::QuantB),
+            other => anyhow::bail!(
+                "unknown compression scheme '{other}' (expected \
+                 identity | topk | quant)"
+            ),
+        }
+    }
+}
+
+/// The `[compress]` config section: scheme + knobs + RNG seed.
+///
+/// `Copy` because the socket handshake ships it inside the by-value
+/// [`crate::comm::wire::WireWorkerCfg`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressCfg {
+    pub scheme: Scheme,
+    /// `TopK`: fraction of coordinates kept, in (0, 1]
+    pub topk_frac: f64,
+    /// `QuantB`: bits per coordinate, in 2..=8
+    pub bits: u32,
+    /// seed of the stochastic-rounding streams (pure function of
+    /// `(seed, round, worker, purpose)`, like the `LinkSet` jitter)
+    pub seed: u64,
+}
+
+impl Default for CompressCfg {
+    fn default() -> Self {
+        CompressCfg {
+            scheme: Scheme::Identity,
+            topk_frac: 0.05,
+            bits: 4,
+            seed: 0,
+        }
+    }
+}
+
+/// Decorrelation tags for the two compression uses inside one round:
+/// the rule-LHS probe and the actual upload must not share a stream.
+#[derive(Clone, Copy, Debug)]
+pub enum Purpose {
+    Rule,
+    Upload,
+}
+
+impl Purpose {
+    fn tag(self) -> u64 {
+        match self {
+            Purpose::Rule => 1,
+            Purpose::Upload => 2,
+        }
+    }
+}
+
+impl CompressCfg {
+    /// True when uploads are actually transformed (TopK / QuantB).
+    /// `Identity` runs the exact pre-compression code paths.
+    pub fn is_lossy(&self) -> bool {
+        self.scheme != Scheme::Identity
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !self.is_lossy() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.topk_frac.is_finite()
+                && self.topk_frac > 0.0
+                && self.topk_frac <= 1.0,
+            "[compress] topk_frac must be in (0, 1], got {}",
+            self.topk_frac
+        );
+        anyhow::ensure!(
+            (2..=8).contains(&self.bits),
+            "[compress] bits must be in 2..=8, got {}",
+            self.bits
+        );
+        Ok(())
+    }
+
+    /// `TopK`: coordinates kept for a p-dimensional vector.
+    pub fn topk_k(&self, p: usize) -> usize {
+        ((self.topk_frac * p as f64).ceil() as usize).clamp(1, p.max(1))
+    }
+
+    /// Simulated uplink payload of one upload: `dense_bytes` (the
+    /// configured nominal) under `Identity` — byte-identical to the
+    /// pre-compression accounting — or the deterministic encoded size
+    /// of the lossy payload. Sizes are data-independent, so the event
+    /// clock stays a pure function of the round.
+    pub fn sim_upload_bytes(&self, p: usize, dense_bytes: usize) -> usize {
+        match self.scheme {
+            Scheme::Identity => dense_bytes,
+            Scheme::TopK => Payload::sparse_bytes(self.topk_k(p)) as usize,
+            Scheme::QuantB => Payload::quant_bytes(p, self.bits) as usize,
+        }
+    }
+
+    /// The seeded RNG stream of `(round k, worker w, purpose)` — the
+    /// `LinkSet` jitter construction plus a purpose fork.
+    pub fn stream(&self, k: u64, w: usize, purpose: Purpose) -> Rng {
+        let stream = k
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(w as u64 + 1)
+            .wrapping_mul(0xA24BAED4963EE407);
+        Rng::new(self.seed ^ stream).fork(purpose.tag())
+    }
+
+    /// Compress `x` for `(round k, worker w, purpose)`. Pure function of
+    /// its arguments — both ends of a socket run compute identical
+    /// payloads without coordination.
+    pub fn compress(&self, x: &[f32], k: u64, w: usize, purpose: Purpose)
+                    -> Payload {
+        match self.scheme {
+            Scheme::Identity => Payload::Dense(x.to_vec()),
+            Scheme::TopK => top_k(x, self.topk_k(x.len())),
+            Scheme::QuantB => {
+                quantize(x, self.bits as u8,
+                         &mut self.stream(k, w, purpose))
+            }
+        }
+    }
+}
+
+/// One compressed upload: what crosses the wire in a
+/// [`crate::comm::wire::WireStep`], and what the in-process transports
+/// decompress locally.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// uncompressed f32 innovation (also the skip-round empty payload)
+    Dense(Vec<f32>),
+    /// top-k sparsification: strictly increasing indices + their values
+    Sparse { p: u32, idx: Vec<u32>, val: Vec<f32> },
+    /// b-bit quantization: `ceil(p * bits / 8)` packed little-endian
+    /// codes on the grid `(code - bias) * scale`
+    Quant { p: u32, bits: u8, scale: f32, codes: Vec<u8> },
+}
+
+impl Payload {
+    /// Encoded size of a sparse payload with k entries (wire framing:
+    /// tag + p + k + k * (u32 idx + f32 val)).
+    pub fn sparse_bytes(k: usize) -> u64 {
+        1 + 4 + 4 + 8 * k as u64
+    }
+
+    /// Encoded size of a b-bit quant payload of dimension p (wire
+    /// framing: tag + p + bits + scale + count + packed codes).
+    pub fn quant_bytes(p: usize, bits: u32) -> u64 {
+        1 + 4 + 1 + 4 + 4 + (p as u64 * bits as u64).div_ceil(8)
+    }
+
+    /// The dense dimension this payload decompresses to.
+    pub fn dim(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::Sparse { p, .. } => *p as usize,
+            Payload::Quant { p, .. } => *p as usize,
+        }
+    }
+
+    /// Bytes of the dense f32 vector this payload stands for.
+    pub fn raw_bytes(&self) -> u64 {
+        4 * self.dim() as u64
+    }
+
+    /// Bytes this payload occupies inside a wire Step frame.
+    pub fn encoded_bytes(&self) -> u64 {
+        match self {
+            Payload::Dense(v) => 1 + 4 + 4 * v.len() as u64,
+            Payload::Sparse { idx, .. } => Payload::sparse_bytes(idx.len()),
+            Payload::Quant { p, bits, .. } => {
+                Payload::quant_bytes(*p as usize, *bits as u32)
+            }
+        }
+    }
+
+    /// Structural validity: index bounds/order, code-buffer sizing.
+    /// Wire decoding calls this so a hostile frame cannot smuggle an
+    /// out-of-range index into the fold.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            Payload::Dense(_) => Ok(()),
+            Payload::Sparse { p, idx, val } => {
+                anyhow::ensure!(
+                    idx.len() == val.len(),
+                    "sparse payload: {} indices vs {} values",
+                    idx.len(),
+                    val.len()
+                );
+                anyhow::ensure!(
+                    idx.len() <= *p as usize,
+                    "sparse payload: {} entries in dimension {p}",
+                    idx.len()
+                );
+                let mut prev: Option<u32> = None;
+                for &i in idx {
+                    anyhow::ensure!(
+                        i < *p,
+                        "sparse payload: index {i} out of range (p={p})"
+                    );
+                    anyhow::ensure!(
+                        prev.map_or(true, |q| i > q),
+                        "sparse payload: indices must be strictly \
+                         increasing"
+                    );
+                    prev = Some(i);
+                }
+                Ok(())
+            }
+            Payload::Quant { p, bits, scale, codes } => {
+                anyhow::ensure!(
+                    (1..=8).contains(bits),
+                    "quant payload: bits {bits} out of range"
+                );
+                anyhow::ensure!(
+                    scale.is_finite(),
+                    "quant payload: non-finite scale"
+                );
+                let want = (*p as u64 * *bits as u64).div_ceil(8);
+                anyhow::ensure!(
+                    codes.len() as u64 == want,
+                    "quant payload: {} code bytes for p={p}, bits={bits} \
+                     (want {want})",
+                    codes.len()
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Decompress to the dense innovation the server folds.
+    /// Deterministic: both transports and both ends of the socket see
+    /// identical floats.
+    pub fn decompress(&self) -> anyhow::Result<Vec<f32>> {
+        self.validate()?;
+        Ok(match self {
+            Payload::Dense(v) => v.clone(),
+            Payload::Sparse { p, idx, val } => {
+                let mut out = vec![0.0f32; *p as usize];
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+            Payload::Quant { p, bits, scale, codes } => {
+                let bias = quant_bias(*bits);
+                let mut out = Vec::with_capacity(*p as usize);
+                for i in 0..*p as usize {
+                    let code = read_code(codes, *bits, i);
+                    out.push((code as f32 - bias) * scale);
+                }
+                out
+            }
+        })
+    }
+}
+
+/// Keep the k largest-|x| coordinates. Ties break toward the lower
+/// index, so selection is a deterministic total order.
+fn top_k(x: &[f32], k: usize) -> Payload {
+    let k = k.min(x.len());
+    let mut order: Vec<u32> = (0..x.len() as u32).collect();
+    let key = |i: u32| {
+        // NaN sorts as smallest-magnitude so it is dropped (and then
+        // carried by the residual) rather than crowning the selection
+        let a = x[i as usize].abs();
+        if a.is_nan() { f32::NEG_INFINITY } else { a }
+    };
+    if k < order.len() {
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            key(b).partial_cmp(&key(a)).unwrap().then(a.cmp(&b))
+        });
+        order.truncate(k);
+    }
+    order.sort_unstable();
+    let val = order.iter().map(|&i| x[i as usize]).collect();
+    Payload::Sparse { p: x.len() as u32, idx: order, val }
+}
+
+/// Center code of the symmetric (2^b - 1)-level grid.
+fn quant_bias(bits: u8) -> f32 {
+    ((1u32 << bits) - 2) as f32 / 2.0
+}
+
+fn read_code(codes: &[u8], bits: u8, i: usize) -> u32 {
+    let bit = i * bits as usize;
+    let (byte, off) = (bit / 8, bit % 8);
+    let lo = (codes[byte] as u32) >> off;
+    let hi = if off + bits as usize > 8 {
+        (*codes.get(byte + 1).unwrap_or(&0) as u32) << (8 - off)
+    } else {
+        0
+    };
+    (lo | hi) & ((1u32 << bits) - 1)
+}
+
+fn write_code(codes: &mut [u8], bits: u8, i: usize, code: u32) {
+    let bit = i * bits as usize;
+    let (byte, off) = (bit / 8, bit % 8);
+    let mask = (1u32 << bits) - 1;
+    codes[byte] &= !((mask << off) as u8);
+    codes[byte] |= ((code & mask) << off) as u8;
+    if off + bits as usize > 8 {
+        let spill = 8 - off;
+        codes[byte + 1] &= !((mask >> spill) as u8);
+        codes[byte + 1] |= ((code & mask) >> spill) as u8;
+    }
+}
+
+/// b-bit stochastic quantization onto the symmetric grid
+/// `(code - bias) * scale`, `scale = max|x| / bias`. Each coordinate
+/// rounds up with probability equal to its fractional position
+/// (unbiased); any coordinate whose grid value would not reconstruct
+/// exactly under error feedback (`fl(x - q) + q != x`) snaps to the
+/// zero code, which keeps the conservation law exact without the two
+/// ends of the wire ever disagreeing.
+fn quantize(x: &[f32], bits: u8, rng: &mut Rng) -> Payload {
+    let p = x.len();
+    let bias = quant_bias(bits);
+    let top = ((1u32 << bits) - 2) as f32; // largest usable code
+    let max_abs = x
+        .iter()
+        .map(|v| v.abs())
+        .filter(|v| v.is_finite())
+        .fold(0.0f32, f32::max);
+    let scale = if max_abs > 0.0 { max_abs / bias } else { 0.0 };
+    let mut codes =
+        vec![0u8; ((p as u64 * bits as u64).div_ceil(8)) as usize];
+    let zero_code = bias as u32;
+    for (i, &v) in x.iter().enumerate() {
+        let code = if scale == 0.0 || !v.is_finite() {
+            zero_code
+        } else {
+            let t = (v / scale + bias).clamp(0.0, top);
+            let floor = t.floor();
+            let up = rng.f64() < (t - floor) as f64;
+            let c = (floor as u32 + up as u32).min(top as u32);
+            // exact-reconstruction guard: if the residual would lose
+            // bits, ship zero instead and carry all of v in the residual
+            let q = (c as f32 - bias) * scale;
+            if (v - q) + q == v { c } else { zero_code }
+        };
+        write_code(&mut codes, bits, i, code);
+    }
+    Payload::Quant { p: p as u32, bits, scale, codes }
+}
+
+/// One error-feedback round on a candidate vector: compress, measure
+/// what survived, and fold the truncated mass into `residual` for the
+/// next round. Returns the payload and its decompressed (server-side)
+/// view. Exact conservation: `decomp[i] + residual[i] == candidate[i]`
+/// for every finite coordinate.
+pub fn compress_with_feedback(
+    cfg: &CompressCfg,
+    candidate: &[f32],
+    residual: &mut [f32],
+    k: u64,
+    w: usize,
+    purpose: Purpose,
+) -> anyhow::Result<(Payload, Vec<f32>)> {
+    let payload = cfg.compress(candidate, k, w, purpose);
+    let decomp = payload.decompress()?;
+    for ((r, &c), &d) in
+        residual.iter_mut().zip(candidate).zip(&decomp)
+    {
+        *r = c - d;
+    }
+    Ok((payload, decomp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randv(p: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn identity_is_dense_and_exact() {
+        let cfg = CompressCfg::default();
+        assert!(!cfg.is_lossy());
+        let x = randv(33, 1);
+        let payload = cfg.compress(&x, 5, 2, Purpose::Upload);
+        assert_eq!(payload, Payload::Dense(x.clone()));
+        assert_eq!(payload.decompress().unwrap(), x);
+        assert_eq!(cfg.sim_upload_bytes(33, 4 * 33), 4 * 33);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let cfg = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.25,
+            ..CompressCfg::default()
+        };
+        let x = vec![0.1, -5.0, 0.2, 3.0, -0.3, 0.0, 1.0, 0.4];
+        let payload = cfg.compress(&x, 0, 0, Purpose::Upload);
+        match &payload {
+            Payload::Sparse { p, idx, val } => {
+                assert_eq!(*p, 8);
+                assert_eq!(idx, &[1, 3]); // |-5| and |3|
+                assert_eq!(val, &[-5.0, 3.0]);
+            }
+            other => panic!("expected sparse, got {other:?}"),
+        }
+        let dense = payload.decompress().unwrap();
+        assert_eq!(dense, vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_tie_break_is_deterministic() {
+        let cfg = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.5,
+            ..CompressCfg::default()
+        };
+        // all-equal magnitudes: the lower indices win, stably
+        let x = vec![1.0f32; 6];
+        match cfg.compress(&x, 0, 0, Purpose::Upload) {
+            Payload::Sparse { idx, .. } => assert_eq!(idx, vec![0, 1, 2]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn quant_roundtrip_is_bounded_and_seeded() {
+        let cfg = CompressCfg {
+            scheme: Scheme::QuantB,
+            bits: 4,
+            seed: 9,
+            ..CompressCfg::default()
+        };
+        let x = randv(257, 3);
+        let payload = cfg.compress(&x, 7, 1, Purpose::Upload);
+        let max_abs = x.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        let step = max_abs / quant_bias(4);
+        let dense = payload.decompress().unwrap();
+        for (a, b) in x.iter().zip(&dense) {
+            // one grid cell of error at most (zero-snapped coords can
+            // err by |a| <= max_abs, still bounded by the grid range)
+            assert!((a - b).abs() <= max_abs + step, "{a} vs {b}");
+        }
+        // pure function of (seed, k, w, purpose)
+        let again = cfg.compress(&x, 7, 1, Purpose::Upload);
+        assert_eq!(payload, again);
+        let other_round = cfg.compress(&x, 8, 1, Purpose::Upload);
+        assert_ne!(payload, other_round);
+        let other_worker = cfg.compress(&x, 7, 2, Purpose::Upload);
+        assert_ne!(payload, other_worker);
+        let other_purpose = cfg.compress(&x, 7, 1, Purpose::Rule);
+        assert_ne!(payload, other_purpose);
+    }
+
+    #[test]
+    fn quant_rounding_is_unbiased_in_expectation() {
+        let cfg = CompressCfg {
+            scheme: Scheme::QuantB,
+            bits: 2,
+            seed: 17,
+            ..CompressCfg::default()
+        };
+        // a coordinate exactly halfway between grid points should round
+        // up about half the time across rounds
+        let x = vec![0.5f32, 1.0];
+        let mut ups = 0;
+        for k in 0..2000 {
+            let dense = cfg
+                .compress(&x, k, 0, Purpose::Upload)
+                .decompress()
+                .unwrap();
+            if dense[0] == 1.0 {
+                ups += 1;
+            } else {
+                assert_eq!(dense[0], 0.0);
+            }
+        }
+        assert!((800..1200).contains(&ups), "ups = {ups}");
+    }
+
+    #[test]
+    fn error_feedback_conserves_exactly() {
+        // the satellite property test: (decompressed delta + residual)
+        // == candidate, EXACTLY, for both lossy schemes, many rounds
+        for cfg in [
+            CompressCfg {
+                scheme: Scheme::TopK,
+                topk_frac: 0.1,
+                ..CompressCfg::default()
+            },
+            CompressCfg {
+                scheme: Scheme::QuantB,
+                bits: 3,
+                seed: 5,
+                ..CompressCfg::default()
+            },
+        ] {
+            let p = 513;
+            let mut residual = vec![0.0f32; p];
+            let mut rng = Rng::new(99);
+            for k in 0..50 {
+                let g: Vec<f32> =
+                    (0..p).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+                let candidate: Vec<f32> = g
+                    .iter()
+                    .zip(&residual)
+                    .map(|(&g, &r)| g + r)
+                    .collect();
+                let (_, decomp) = compress_with_feedback(
+                    &cfg, &candidate, &mut residual, k, 0,
+                    Purpose::Upload,
+                )
+                .unwrap();
+                for i in 0..p {
+                    assert_eq!(
+                        decomp[i] + residual[i],
+                        candidate[i],
+                        "{:?} round {k} coord {i}",
+                        cfg.scheme
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn payload_sizes_match_their_formulas() {
+        let topk = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.05,
+            ..CompressCfg::default()
+        };
+        let p = 1024;
+        let x = randv(p, 4);
+        let payload = topk.compress(&x, 0, 0, Purpose::Upload);
+        assert_eq!(payload.encoded_bytes(),
+                   topk.sim_upload_bytes(p, 4 * p) as u64);
+        assert_eq!(payload.raw_bytes(), 4 * p as u64);
+        // >= 4x reduction at 5% density
+        assert!(payload.encoded_bytes() * 4 <= payload.raw_bytes());
+
+        let quant = CompressCfg {
+            scheme: Scheme::QuantB,
+            bits: 4,
+            ..CompressCfg::default()
+        };
+        let payload = quant.compress(&x, 0, 0, Purpose::Upload);
+        assert_eq!(payload.encoded_bytes(),
+                   quant.sim_upload_bytes(p, 4 * p) as u64);
+        assert!(payload.encoded_bytes() * 4 <= payload.raw_bytes());
+    }
+
+    #[test]
+    fn payload_validation_rejects_malformed() {
+        // out-of-range index
+        let bad = Payload::Sparse { p: 4, idx: vec![4], val: vec![1.0] };
+        assert!(bad.decompress().is_err());
+        // unsorted indices
+        let bad =
+            Payload::Sparse { p: 4, idx: vec![2, 1], val: vec![1.0, 2.0] };
+        assert!(bad.decompress().is_err());
+        // duplicate indices
+        let bad =
+            Payload::Sparse { p: 4, idx: vec![1, 1], val: vec![1.0, 2.0] };
+        assert!(bad.decompress().is_err());
+        // mismatched lengths
+        let bad = Payload::Sparse { p: 4, idx: vec![1], val: vec![] };
+        assert!(bad.decompress().is_err());
+        // wrong code-buffer size
+        let bad = Payload::Quant {
+            p: 16,
+            bits: 4,
+            scale: 1.0,
+            codes: vec![0; 7],
+        };
+        assert!(bad.decompress().is_err());
+        // non-finite scale
+        let bad = Payload::Quant {
+            p: 2,
+            bits: 4,
+            scale: f32::NAN,
+            codes: vec![0; 1],
+        };
+        assert!(bad.decompress().is_err());
+        // bits out of range
+        let bad =
+            Payload::Quant { p: 2, bits: 9, scale: 1.0, codes: vec![0; 3] };
+        assert!(bad.decompress().is_err());
+    }
+
+    #[test]
+    fn code_packing_roundtrips_all_widths() {
+        for bits in 1u8..=8 {
+            let n = 67;
+            let mut codes =
+                vec![0u8; (n * bits as usize).div_ceil(8)];
+            let mask = (1u32 << bits) - 1;
+            let vals: Vec<u32> =
+                (0..n).map(|i| (i as u32 * 2654435761) & mask).collect();
+            for (i, &v) in vals.iter().enumerate() {
+                write_code(&mut codes, bits, i, v);
+            }
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(read_code(&codes, bits, i), v,
+                           "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cfg_validation_and_parsing() {
+        assert!(CompressCfg::default().validate().is_ok());
+        let bad = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.0,
+            ..CompressCfg::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 1.5,
+            ..CompressCfg::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = CompressCfg {
+            scheme: Scheme::QuantB,
+            bits: 1,
+            ..CompressCfg::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = CompressCfg {
+            scheme: Scheme::QuantB,
+            bits: 9,
+            ..CompressCfg::default()
+        };
+        assert!(bad.validate().is_err());
+        assert_eq!(Scheme::parse("topk").unwrap(), Scheme::TopK);
+        assert_eq!(Scheme::parse("quant").unwrap(), Scheme::QuantB);
+        assert_eq!(Scheme::parse("identity").unwrap(), Scheme::Identity);
+        assert!(Scheme::parse("gzip").is_err());
+        for s in [Scheme::Identity, Scheme::TopK, Scheme::QuantB] {
+            assert_eq!(Scheme::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn topk_k_bounds() {
+        let cfg = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.05,
+            ..CompressCfg::default()
+        };
+        assert_eq!(cfg.topk_k(1024), 52); // ceil(51.2)
+        assert_eq!(cfg.topk_k(3), 1);     // floor of 1
+        let all = CompressCfg {
+            topk_frac: 1.0,
+            ..cfg
+        };
+        assert_eq!(all.topk_k(10), 10);
+    }
+}

@@ -11,6 +11,7 @@ pub mod toml;
 pub use crate::algorithms::TrainCfg;
 
 use crate::comm::{CommCfg, CostModel};
+use crate::compress::CompressCfg;
 use crate::data::{DatasetKind, PartitionScheme};
 
 /// Stepsize schedule (paper: constant in experiments; 1/sqrt(K) for
@@ -103,6 +104,11 @@ pub struct ExpConfig {
     /// `[comm.links]` TOML sections and the CLI `--transport`,
     /// `--semi-sync-k`, `--jitter-sigma`, `--jitter-seed` flags)
     pub comm: CommCfg,
+    /// upload compression: scheme + knobs (`[compress]` TOML section and
+    /// the CLI `--compress`, `--topk-frac`, `--compress-bits`,
+    /// `--compress-seed` flags). Identity reproduces the
+    /// pre-compression runs bit-for-bit.
+    pub compress: CompressCfg,
     pub algos: Vec<AlgoConfig>,
 }
 
@@ -137,6 +143,7 @@ pub fn fig2_covtype() -> ExpConfig {
         broadcast_bytes: 0,
         trace_cap: 0,
         comm: CommCfg::default(),
+        compress: CompressCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.005) },
             AlgoConfig::Cada1 { alpha: C(0.005), c: 0.6, d_max: 10,
@@ -170,6 +177,7 @@ pub fn fig3_ijcnn() -> ExpConfig {
         broadcast_bytes: 0,
         trace_cap: 0,
         comm: CommCfg::default(),
+        compress: CompressCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.01) },
             AlgoConfig::Cada1 { alpha: C(0.01), c: 0.6, d_max: 10,
@@ -203,6 +211,7 @@ pub fn fig4_mnist(use_cnn: bool) -> ExpConfig {
         broadcast_bytes: 0,
         trace_cap: 0,
         comm: CommCfg::default(),
+        compress: CompressCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(5e-4) },
             AlgoConfig::Cada1 { alpha: C(5e-4), c: 0.6, d_max: 10,
@@ -236,6 +245,7 @@ pub fn fig5_cifar() -> ExpConfig {
         broadcast_bytes: 0,
         trace_cap: 0,
         comm: CommCfg::default(),
+        compress: CompressCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.01) },
             AlgoConfig::Cada1 { alpha: C(0.01), c: 0.3, d_max: 2,
@@ -363,9 +373,11 @@ fn apply_train_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
     let train = doc.sections.get("train");
     let has_comm = doc.sections.contains_key("comm")
         || doc.sections.contains_key("comm.links");
+    let has_compress = doc.sections.contains_key("compress");
     if train.is_none()
         && !doc.sections.contains_key("train.cost_model")
         && !has_comm
+        && !has_compress
     {
         return Ok(());
     }
@@ -402,7 +414,27 @@ fn apply_train_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
     if has_comm {
         cfg.comm = parsed.comm;
     }
+    if has_compress {
+        cfg.compress = parsed.compress;
+    }
     Ok(())
+}
+
+/// Apply the compression CLI knobs — `--compress <scheme>`,
+/// `--topk-frac`, `--compress-bits`, `--compress-seed` — shared by
+/// `cada train` / `cada serve` so every entry point spells the upload
+/// compressor the same way.
+pub fn apply_compress_cli_overrides(compress: &mut CompressCfg,
+                                    args: &crate::cli::Args)
+                                    -> anyhow::Result<()> {
+    if let Some(s) = args.str_opt("compress") {
+        compress.scheme = crate::compress::Scheme::parse(s)?;
+    }
+    compress.topk_frac = args.f64_or("topk-frac", compress.topk_frac)?;
+    compress.bits =
+        args.usize_or("compress-bits", compress.bits as usize)? as u32;
+    compress.seed = args.u64_or("compress-seed", compress.seed)?;
+    compress.validate()
 }
 
 #[cfg(test)]
@@ -549,6 +581,56 @@ mod tests {
         // unknown [comm] keys are rejected
         let bad = toml::parse("[comm]\nwarp_factor = 9\n").unwrap();
         assert!(apply_overrides(&mut cfg, &bad).is_err());
+    }
+
+    #[test]
+    fn compress_section_and_cli_overrides_apply() {
+        use crate::compress::Scheme;
+        // TOML section replaces the preset's (default) compression
+        let mut cfg = fig3_ijcnn();
+        assert_eq!(cfg.compress, CompressCfg::default());
+        let doc = toml::parse(
+            "[compress]\nscheme = \"topk\"\ntopk_frac = 0.1\nseed = 7\n",
+        )
+        .unwrap();
+        apply_overrides(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.compress.scheme, Scheme::TopK);
+        assert_eq!(cfg.compress.topk_frac, 0.1);
+        assert_eq!(cfg.compress.seed, 7);
+        // other sections' knobs untouched
+        assert_eq!(cfg.iters, 1_500);
+
+        // CLI flags layer on top
+        let mut compress = CompressCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--compress", "quant", "--compress-bits", "3",
+             "--compress-seed", "11"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        apply_compress_cli_overrides(&mut compress, &args).unwrap();
+        assert_eq!(compress.scheme, Scheme::QuantB);
+        assert_eq!(compress.bits, 3);
+        assert_eq!(compress.seed, 11);
+
+        // invalid configurations are rejected, not defaulted
+        let mut compress = CompressCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--compress", "gzip"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(
+            apply_compress_cli_overrides(&mut compress, &args).is_err());
+        let mut compress = CompressCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--compress", "topk", "--topk-frac", "0"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(
+            apply_compress_cli_overrides(&mut compress, &args).is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! innovation delta_m^k = g(theta^k; xi^k) - g(theta_hat; xi_hat).
 
 use super::rules::{decide, Decision, RuleKind};
+use crate::compress::{self, CompressCfg, Payload, Purpose};
 use crate::data::Batch;
 use crate::runtime::Compute;
 use crate::tensor;
@@ -38,6 +39,17 @@ pub struct WorkerState {
     delta: Vec<f32>,
     /// telemetry: total uploads by this worker
     pub uploads: u64,
+    /// upload compression; `Identity` (the default) keeps every code
+    /// path below byte-for-byte on the pre-compression route
+    compress: CompressCfg,
+    /// lossy only: per-worker error-feedback residual — the upload mass
+    /// truncated so far, re-entering the next upload's candidate
+    residual: Vec<f32>,
+    /// lossy only: candidate / rule-diff scratch
+    scratch: Vec<f32>,
+    /// lossy only: the encoded payload of the last uploading step (the
+    /// socket worker ships this instead of the dense delta)
+    payload: Option<Payload>,
 }
 
 impl WorkerState {
@@ -57,7 +69,42 @@ impl WorkerState {
             },
             delta: vec![0.0; p],
             uploads: 0,
+            compress: CompressCfg::default(),
+            residual: Vec::new(),
+            scratch: Vec::new(),
+            payload: None,
         }
+    }
+
+    /// Install the upload compressor (default: `Identity`). Lossy
+    /// schemes allocate the error-feedback residual; `Identity` keeps
+    /// the worker on the exact pre-compression code paths.
+    pub fn set_compress(&mut self, cfg: CompressCfg) {
+        self.compress = cfg;
+        let p = if cfg.is_lossy() { self.g_stale.len() } else { 0 };
+        self.residual = vec![0.0; p];
+        self.scratch = vec![0.0; p];
+        self.payload = None;
+    }
+
+    /// Lossy compression only: the error-feedback residual (None under
+    /// `Identity`). Exposed for the conservation property tests.
+    pub fn ef_residual(&self) -> Option<&[f32]> {
+        self.compress.is_lossy().then_some(self.residual.as_slice())
+    }
+
+    /// Rule LHS on the *decompressed* probe: what would the server
+    /// actually receive if this diff were uploaded right now? Compresses
+    /// `self.scratch` on the round's `Purpose::Rule` stream, decompresses
+    /// it back, and returns the squared norm — so the skip rule and the
+    /// compressor compose instead of the rule reasoning about truncated
+    /// mass that never crosses the wire.
+    fn decompressed_lhs(&self, k: u64) -> anyhow::Result<f64> {
+        let dense = self
+            .compress
+            .compress(&self.scratch, k, self.id, Purpose::Rule)
+            .decompress()?;
+        Ok(tensor::sqnorm(&dense) as f64)
     }
 
     /// Run lines 5–14 of Algorithm 1 for this worker at iteration `k`.
@@ -95,7 +142,10 @@ impl WorkerState {
             })
         };
 
-        // rule-specific LHS
+        // rule-specific LHS; lossy compression swaps the raw innovation
+        // norm for the norm of its decompressed probe (Identity keeps
+        // the exact legacy expression)
+        let lossy = self.compress.is_lossy();
         let lhs = match rule {
             RuleKind::Cada1 { .. } => {
                 let snap = snapshot.expect("CADA1 requires a snapshot");
@@ -108,7 +158,13 @@ impl WorkerState {
                     .dtilde_stored
                     .as_ref()
                     .expect("CADA1 state allocated");
-                innov(compute, &self.dtilde_new, stored)?
+                if lossy {
+                    tensor::sub_into(&mut self.scratch,
+                                     &self.dtilde_new, stored);
+                    self.decompressed_lhs(k)?
+                } else {
+                    innov(compute, &self.dtilde_new, stored)?
+                }
             }
             RuleKind::Cada2 { .. } => {
                 let stored = self
@@ -118,20 +174,58 @@ impl WorkerState {
                 // second gradient: same sample xi^k at the old iterate
                 compute.grad(stored, batch, &mut self.g_aux)?;
                 grad_evals += 1;
-                innov(compute, &self.g_new, &self.g_aux)?
+                if lossy {
+                    tensor::sub_into(&mut self.scratch, &self.g_new,
+                                     &self.g_aux);
+                    self.decompressed_lhs(k)?
+                } else {
+                    innov(compute, &self.g_new, &self.g_aux)?
+                }
             }
             RuleKind::Lag { .. } => {
                 // fresh vs STORED gradient: different iterates AND
                 // different samples — the variance trap of section 2.1
-                innov(compute, &self.g_new, &self.g_stale)?
+                if lossy {
+                    tensor::sub_into(&mut self.scratch, &self.g_new,
+                                     &self.g_stale);
+                    self.decompressed_lhs(k)?
+                } else {
+                    innov(compute, &self.g_new, &self.g_stale)?
+                }
             }
             _ => f64::NAN,
         };
 
         let decision = decide(rule, k, lhs, rhs, self.tau, max_delay);
         if decision.upload {
-            // delta_m^k = g_new - g_stale; server folds delta/M (Eq. 3)
-            tensor::sub_into(&mut self.delta, &self.g_new, &self.g_stale);
+            if lossy {
+                // error feedback: candidate = (g_new - g_stale) +
+                // residual; ship C(candidate), fold D(C(candidate)),
+                // carry the truncated remainder into the next round
+                for i in 0..self.scratch.len() {
+                    self.scratch[i] = (self.g_new[i] - self.g_stale[i])
+                        + self.residual[i];
+                }
+                let (payload, decomp) = compress::compress_with_feedback(
+                    &self.compress,
+                    &self.scratch,
+                    &mut self.residual,
+                    k,
+                    self.id,
+                    Purpose::Upload,
+                )?;
+                // the server folds the DECOMPRESSED innovation — the
+                // in-process transports install it directly, the socket
+                // worker ships `payload` and the server decompresses
+                // before folding
+                self.delta.copy_from_slice(&decomp);
+                self.payload = Some(payload);
+            } else {
+                // delta_m^k = g_new - g_stale; server folds delta/M
+                // (Eq. 3)
+                tensor::sub_into(&mut self.delta, &self.g_new,
+                                 &self.g_stale);
+            }
             self.g_stale.copy_from_slice(&self.g_new);
             if let Some(d) = self.dtilde_stored.as_mut() {
                 d.copy_from_slice(&self.dtilde_new);
@@ -155,6 +249,14 @@ impl WorkerState {
     /// The innovation payload produced by the last uploading `step`.
     pub fn last_delta(&self) -> &[f32] {
         &self.delta
+    }
+
+    /// Lossy compression: take the encoded payload of the last
+    /// uploading `step` (the socket worker ships this). `None` under
+    /// `Identity` — the caller ships the dense [`Self::last_delta`]
+    /// exactly as before.
+    pub fn take_payload(&mut self) -> Option<Payload> {
+        self.payload.take()
     }
 
     /// Socket-transport mirror of an uploading [`WorkerState::step`]:
@@ -298,6 +400,105 @@ mod tests {
         }
         // k=0 (forced) then whenever tau hits 3: k=3, k=6
         assert_eq!(uploads, 3);
+    }
+
+    #[test]
+    fn lossy_lhs_is_computed_on_decompressed_innovation() {
+        // The acceptance-criterion assertion: with a lossy compressor
+        // installed, the LAG-family LHS must equal the squared norm of
+        // the DECOMPRESSED probe — not the raw innovation norm.
+        use crate::compress::{CompressCfg, Purpose, Scheme};
+        let rule = RuleKind::Lag { c: 1.0 };
+        let (mut compute, data, mut w) = setup(rule);
+        let cfg = CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.01, // k = 1 of 16: aggressively truncated
+            ..CompressCfg::default()
+        };
+        w.set_compress(cfg);
+        let theta = vec![0.1f32; 16];
+        let ba = data.gather(&[0, 1, 2, 3]);
+        let bb = data.gather(&[8, 9, 10, 11]);
+        // k=0 uploads (forced): g_stale becomes grad(theta; ba)
+        w.step(0, rule, 50, &theta, None, 0.0, &ba, &mut compute, false)
+            .unwrap();
+        let s = w
+            .step(1, rule, 50, &theta, None, 1e30, &bb, &mut compute,
+                  false)
+            .unwrap();
+        // recompute the probe independently
+        let mut ga = vec![0.0f32; 16];
+        let mut gb = vec![0.0f32; 16];
+        compute.grad(&theta, &ba, &mut ga).unwrap();
+        compute.grad(&theta, &bb, &mut gb).unwrap();
+        let diff: Vec<f32> =
+            gb.iter().zip(&ga).map(|(b, a)| b - a).collect();
+        let probe = cfg
+            .compress(&diff, 1, 0, Purpose::Rule)
+            .decompress()
+            .unwrap();
+        let want = tensor::sqnorm(&probe) as f64;
+        let raw = tensor::sqnorm(&diff) as f64;
+        assert_eq!(s.lhs, want, "LHS must come from the decompressed probe");
+        assert!(s.lhs < raw,
+                "top-1 of 16 coords must shrink the norm: {} vs {raw}",
+                s.lhs);
+    }
+
+    #[test]
+    fn lossy_step_conserves_candidate_through_error_feedback() {
+        // Per-round conservation through the REAL step path: the dense
+        // delta the server folds plus the new residual must equal the
+        // round's candidate (g_new - g_stale + old residual), exactly.
+        use crate::compress::{CompressCfg, Scheme};
+        for cfg in [
+            CompressCfg {
+                scheme: Scheme::TopK,
+                topk_frac: 0.2,
+                ..CompressCfg::default()
+            },
+            CompressCfg {
+                scheme: Scheme::QuantB,
+                bits: 3,
+                seed: 21,
+                ..CompressCfg::default()
+            },
+        ] {
+            let rule = RuleKind::Always;
+            let (mut compute, data, mut w) = setup(rule);
+            w.set_compress(cfg);
+            let mut rng = Rng::new(6);
+            let shard: Vec<usize> = (0..64).collect();
+            let mut theta = vec![0.1f32; 16];
+            let mut g_stale_prev = vec![0.0f32; 16];
+            for k in 0..8u64 {
+                let batch = data.sample_batch(&shard, 4, &mut rng);
+                let residual_before = w.ef_residual().unwrap().to_vec();
+                let s = w
+                    .step(k, rule, 50, &theta, None, 0.0, &batch,
+                          &mut compute, false)
+                    .unwrap();
+                assert!(s.decision.upload);
+                let mut g_new = vec![0.0f32; 16];
+                compute.grad(&theta, &batch, &mut g_new).unwrap();
+                let residual_after = w.ef_residual().unwrap();
+                for i in 0..16 {
+                    let candidate = (g_new[i] - g_stale_prev[i])
+                        + residual_before[i];
+                    assert_eq!(
+                        w.last_delta()[i] + residual_after[i],
+                        candidate,
+                        "{:?} k={k} i={i}",
+                        cfg.scheme
+                    );
+                }
+                g_stale_prev.copy_from_slice(&g_new);
+                // move theta so later rounds have non-trivial innovations
+                for (t, g) in theta.iter_mut().zip(&g_new) {
+                    *t -= 0.05 * g;
+                }
+            }
+        }
     }
 
     #[test]

@@ -175,7 +175,9 @@ impl Experiment {
 pub fn render_breakdowns(cfg: &ExpConfig, results: &[RunResult])
                          -> String {
     let mut out = String::new();
-    if !cfg.comm.is_uniform_sync() {
+    // lossy compression makes the per-worker table informative (raw vs
+    // on-wire bytes) even under uniform fully-sync links
+    if !cfg.comm.is_uniform_sync() || cfg.compress.is_lossy() {
         out.extend(results.iter().map(|r| {
             crate::telemetry::render_worker_breakdown(&r.algo, &r.comm)
         }));
@@ -316,6 +318,7 @@ fn run_one(
             broadcast_bytes: cfg.broadcast_bytes,
             trace_cap: cfg.trace_cap,
             comm: cfg.comm.clone(),
+            compress: cfg.compress,
         })
         .algorithm(&mut *algorithm)
         .dataset(data)

@@ -133,6 +133,21 @@
 //!   asymmetry multipliers, cycled over workers; broadcasts and uploads
 //!   are charged against each worker's own link and the event clock
 //!   advances by the slowest participant.
+//! * **upload compression** — the `[compress]` section (CLI
+//!   `--compress topk|quant`, builder `.compress(...)`) runs the
+//!   innovation uploads CADA does *not* skip through a lossy
+//!   [`compress`] stage: `TopK` magnitude sparsification or `QuantB`
+//!   b-bit stochastic quantization (seeded, a pure function of
+//!   `(seed, round, worker)` like the jitter), each behind a per-worker
+//!   error-feedback residual so truncated mass re-enters later rounds.
+//!   The CADA1/CADA2/LAG skip-rule LHS is computed on the
+//!   *decompressed* innovation — the rule reasons about what the server
+//!   actually receives, so skipping and shrinking compose. Payload
+//!   sizes are data-independent, so the simulated `upload_bytes`
+//!   accounting and the socket transport's measured
+//!   [`comm::WireStats`] agree on the compression ratio; `Identity`
+//!   (the default) runs the exact pre-compression code paths and stays
+//!   golden-enforced bit-identical on all three transports.
 //! * **straggler jitter** — seeded log-normal multiplier on upload
 //!   times; a pure function of `(seed, round, worker)`, so runs stay
 //!   reproducible.
@@ -147,6 +162,7 @@ pub mod algorithms;
 pub mod bench;
 pub mod cli;
 pub mod comm;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -167,6 +183,7 @@ pub mod prelude {
                           LinkModel, LinkSet, Participation,
                           SocketServer, TransportKind, WireStats,
                           WorkerReport};
+    pub use crate::compress::{CompressCfg, Payload, Scheme};
     pub use crate::config::Schedule;
     pub use crate::coordinator::{rules::RuleKind, server::Optimizer};
     pub use crate::coordinator::pool::{ShardExec, ShardPool};

@@ -71,10 +71,12 @@ TRAIN OPTIONS:
   --preset NAME       experiment preset (paper figure)
   --config FILE       TOML overrides: [experiment] iters/n/workers/... and
                       the unified [train] / [train.cost_model] / [comm] /
-                      [comm.links] sections (iters, eval_every, seed,
-                      trace_cap; latency_s, down_bw, asymmetry; transport,
-                      semi_sync_k, jitter_sigma, jitter_seed; per-worker
-                      latency_mult / bw_mult / asymmetry_mult arrays)
+                      [comm.links] / [compress] sections (iters,
+                      eval_every, seed, trace_cap; latency_s, down_bw,
+                      asymmetry; transport, semi_sync_k, jitter_sigma,
+                      jitter_seed; per-worker latency_mult / bw_mult /
+                      asymmetry_mult arrays; scheme, topk_frac, bits,
+                      seed)
   --algo NAME         run only this algorithm from the preset
   --iters N           override iteration count
   --runs N            override Monte-Carlo run count
@@ -96,6 +98,16 @@ TRAIN OPTIONS:
                       round; stragglers fold in stale (0 = wait for all)
   --jitter-sigma S    log-normal upload straggler jitter (0 = off)
   --jitter-seed N     seed of the jitter stream
+  --compress S        upload compressor: identity (default, bit-identical
+                      to the uncompressed paths), topk (magnitude
+                      sparsification) or quant (b-bit stochastic
+                      quantization); lossy schemes run per-worker error
+                      feedback, CADA rules evaluate the decompressed
+                      innovation
+  --topk-frac F       topk: fraction of coordinates kept, in (0,1]
+                      (default 0.05)
+  --compress-bits B   quant: bits per coordinate, 2..=8 (default 4)
+  --compress-seed N   seed of the stochastic-rounding streams
   --artifacts DIR     artifacts directory (default ./artifacts)
   --out FILE          write curves as JSONL
   --quiet             less logging
@@ -146,6 +158,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.target_loss = args.f64_or("target-loss", cfg.target_loss)?;
     config::apply_comm_cli_overrides(&mut cfg.comm, args)?;
+    config::apply_compress_cli_overrides(&mut cfg.compress, args)?;
     if let Some(name) = args.str_opt("algo") {
         let name = name.to_string();
         cfg.algos.retain(|a| a.name() == name);
@@ -211,6 +224,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.target_loss = args.f64_or("target-loss", cfg.target_loss)?;
     config::apply_comm_cli_overrides(&mut cfg.comm, args)?;
+    config::apply_compress_cli_overrides(&mut cfg.compress, args)?;
     cfg.comm.transport = cada::comm::TransportKind::Socket;
     anyhow::ensure!(
         !cfg.comm.listen.is_empty(),

@@ -195,9 +195,23 @@ pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
          uploads) --\n",
         comm.stale_uploads, comm.lost_uploads
     ));
-    out.push_str(&format!(
-        "{:>8} {:>10} {:>12} {:>8}\n",
-        "worker", "uploads", "upload_s", "lost"));
+    // the raw-vs-wire columns only appear when some worker's uploads
+    // were actually transformed; Identity runs keep the exact old table
+    let compressed = comm
+        .worker_raw_bytes
+        .iter()
+        .zip(&comm.worker_wire_bytes)
+        .any(|(r, w)| r != w);
+    if compressed {
+        out.push_str(&format!(
+            "{:>8} {:>10} {:>12} {:>8} {:>12} {:>12} {:>7}\n",
+            "worker", "uploads", "upload_s", "lost", "raw_B", "wire_B",
+            "ratio"));
+    } else {
+        out.push_str(&format!(
+            "{:>8} {:>10} {:>12} {:>8}\n",
+            "worker", "uploads", "upload_s", "lost"));
+    }
     let slowest = comm
         .worker_upload_s
         .iter()
@@ -222,8 +236,21 @@ pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
         } else {
             ""
         };
-        out.push_str(&format!(
-            "{w:>8} {n:>10} {s:>12.3} {lost:>8}{marker}\n"));
+        if compressed {
+            let raw = comm.worker_raw_bytes.get(w).copied().unwrap_or(0);
+            let wire = comm.worker_wire_bytes.get(w).copied().unwrap_or(0);
+            let ratio = if wire > 0 {
+                format!("{:.1}x", raw as f64 / wire as f64)
+            } else {
+                "--".to_string()
+            };
+            out.push_str(&format!(
+                "{w:>8} {n:>10} {s:>12.3} {lost:>8} {raw:>12} \
+                 {wire:>12} {ratio:>7}{marker}\n"));
+        } else {
+            out.push_str(&format!(
+                "{w:>8} {n:>10} {s:>12.3} {lost:>8}{marker}\n"));
+        }
     }
     out
 }
@@ -250,6 +277,22 @@ pub fn render_wire_stats(algo: &str,
     ));
     out.push_str(&format!(
         "  received (upload): {:>12} B\n", wire.bytes_received));
+    // measured compression ratio of the upload payloads themselves:
+    // dense innovation bytes vs what crossed the socket. Only printed
+    // when a lossy compressor actually shrank something — Identity's
+    // dense framing is a few bytes LARGER than raw, which is overhead,
+    // not compression
+    if wire.upload_raw_bytes > wire.upload_wire_bytes
+        && wire.upload_wire_bytes > 0
+    {
+        out.push_str(&format!(
+            "  upload payloads:   {:>12} B raw -> {} B on wire \
+             ({:.1}x compression)\n",
+            wire.upload_raw_bytes,
+            wire.upload_wire_bytes,
+            wire.upload_raw_bytes as f64 / wire.upload_wire_bytes as f64,
+        ));
+    }
     out
 }
 
@@ -354,6 +397,31 @@ mod tests {
     }
 
     #[test]
+    fn worker_breakdown_shows_compression_ratio() {
+        // uncompressed runs keep the legacy table exactly
+        let mut plain = CommStats::for_workers(2);
+        plain.count_upload(0, 400, 1.0);
+        let t = render_worker_breakdown("cada2", &plain);
+        assert!(!t.contains("ratio"), "{t}");
+        assert!(!t.contains("wire_B"), "{t}");
+
+        // a sized upload (raw != wire) grows the raw/wire/ratio columns
+        let mut comm = CommStats::for_workers(2);
+        comm.count_upload_sized(0, 100, 400, 1.0);
+        comm.count_upload_sized(0, 100, 400, 1.0);
+        comm.count_upload_sized(1, 100, 400, 2.0);
+        let t = render_worker_breakdown("cada2", &comm);
+        assert!(t.contains("ratio"), "{t}");
+        let w0 = t
+            .lines()
+            .find(|l| l.trim_start().starts_with('0'))
+            .unwrap();
+        assert!(w0.contains("800"), "{w0}");
+        assert!(w0.contains("200"), "{w0}");
+        assert!(w0.contains("4.0x"), "{w0}");
+    }
+
+    #[test]
     fn worker_breakdown_stays_finite_under_dead_links() {
         // worker 1 transmits into a dead link every round: its uploads
         // count, its seconds stay finite (zero here), and the lost
@@ -393,11 +461,35 @@ mod tests {
             theta_range_bytes: 300 * 4096,
             snapshot_ranges_sent: 15,
             snapshot_range_bytes: 15 * 4096,
+            upload_raw_bytes: 0,
+            upload_wire_bytes: 0,
         };
         let t = render_wire_stats("cada1", &wire);
         assert!(t.contains("60 rounds"), "{t}");
         assert!(t.contains("123456"), "{t}");
         assert!(t.contains("15 snapshot ranges"), "{t}");
+        // no compression -> no payload-ratio line
+        assert!(!t.contains("compression"), "{t}");
+
+        let compressed = crate::comm::WireStats {
+            upload_raw_bytes: 40_000,
+            upload_wire_bytes: 8_000,
+            ..wire
+        };
+        let t = render_wire_stats("cada1", &compressed);
+        assert!(t.contains("40000"), "{t}");
+        assert!(t.contains("8000"), "{t}");
+        assert!(t.contains("5.0x compression"), "{t}");
+
+        // identity's dense framing overhead (wire a hair over raw) is
+        // not compression and must not render as such
+        let identity = crate::comm::WireStats {
+            upload_raw_bytes: 40_000,
+            upload_wire_bytes: 40_050,
+            ..compressed
+        };
+        let t = render_wire_stats("cada1", &identity);
+        assert!(!t.contains("compression"), "{t}");
     }
 
     #[test]

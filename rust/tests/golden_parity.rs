@@ -39,6 +39,7 @@
 use cada::algorithms::{Algorithm, Cada, CadaCfg, FedAdam, FedAdamCfg,
                        FedAvg, Trainer};
 use cada::comm::{CommStats, CostModel, TransportKind};
+use cada::compress::{CompressCfg, Scheme};
 use cada::config::Schedule;
 use cada::coordinator::history::DeltaHistory;
 use cada::coordinator::pool::ShardExec;
@@ -557,6 +558,198 @@ fn socket_matches_inproc_bit_for_bit() {
         assert_eq!(wire.snapshot_range_bytes,
                    (refreshes * m * 4 * 1024) as u64, "{label}");
         assert!(wire.bytes_received > 0 && wire.bytes_sent > 0);
+    }
+}
+
+/// A golden run with an explicit upload compressor installed, on any of
+/// the in-process transports.
+fn trainer_run_compressed(
+    algo: &mut dyn Algorithm,
+    cost_model: CostModel,
+    transport: TransportKind,
+    compress: CompressCfg,
+    w: &Workload,
+    compute: &mut dyn Compute,
+) -> (Vec<LegacyPoint>, CommStats, Vec<f32>) {
+    let mut trainer = Trainer::builder()
+        .algorithm(&mut *algo)
+        .dataset(&w.data)
+        .partition(&w.partition)
+        .eval_batch(w.eval.clone())
+        .init_theta(vec![0.0; 1024])
+        .iters(ITERS)
+        .eval_every(EVAL_EVERY)
+        .batch(BATCH)
+        .upload_bytes(UPLOAD_BYTES)
+        .cost_model(cost_model)
+        .transport(transport)
+        .compress(compress)
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let curve = trainer.run(0, compute).unwrap();
+    let points = curve
+        .points
+        .iter()
+        .map(|p| (p.loss, p.uploads, p.grad_evals, p.sim_time_s))
+        .collect();
+    let comm = trainer.comm.clone();
+    drop(trainer);
+    (points, comm, algo.theta().to_vec())
+}
+
+/// A loopback-socket golden run with an explicit upload compressor:
+/// the Trainer on a bound TCP listener, M worker threads running the
+/// worker binary's entry fn; the compressor config travels in the
+/// Welcome handshake.
+fn socket_run_compressed(
+    rule: RuleKind,
+    max_delay: u32,
+    d_max: usize,
+    compress: CompressCfg,
+    m: usize,
+    w: &Workload,
+    compute: &mut dyn Compute,
+) -> ((Vec<LegacyPoint>, CommStats, Vec<f32>), cada::comm::WireStats) {
+    let mut algo = cada_algo(rule, 0.02, max_delay, d_max);
+    let mut trainer = Trainer::builder()
+        .algorithm(&mut algo)
+        .dataset(&w.data)
+        .partition(&w.partition)
+        .eval_batch(w.eval.clone())
+        .init_theta(vec![0.0; 1024])
+        .iters(ITERS)
+        .eval_every(EVAL_EVERY)
+        .batch(BATCH)
+        .upload_bytes(UPLOAD_BYTES)
+        .cost_model(CostModel::default())
+        .transport(TransportKind::Socket)
+        .listen("127.0.0.1:0")
+        .compress(compress)
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let addr = trainer.wire_addr().unwrap().to_string();
+    let (points, comm, wire) = std::thread::scope(|s| {
+        for _ in 0..m {
+            let addr = addr.clone();
+            let data = &w.data;
+            s.spawn(move || {
+                let mut worker_compute = NativeLogReg::for_spec(22, 1024);
+                cada::comm::run_worker(&addr, data, &mut worker_compute)
+                    .expect("worker runs to shutdown");
+            });
+        }
+        let curve = trainer.run(0, compute).unwrap();
+        let points: Vec<LegacyPoint> = curve
+            .points
+            .iter()
+            .map(|p| (p.loss, p.uploads, p.grad_evals, p.sim_time_s))
+            .collect();
+        let comm = trainer.comm.clone();
+        let wire = trainer.wire_stats().cloned().unwrap();
+        drop(trainer);
+        (points, comm, wire)
+    });
+    ((points, comm, algo.theta().to_vec()), wire)
+}
+
+/// PR 6 regression gate, satellite 3: an EXPLICITLY installed
+/// `Identity` compressor — with non-default knob values, which are
+/// inert while the scheme is identity — must be bit-identical to the
+/// plain golden run on all three transports. This is the claim that
+/// the compression subsystem's default path adds nothing to the
+/// numerics, the counters, or the event clock.
+#[test]
+fn explicit_identity_compression_is_bit_identical() {
+    let (mut compute, w) = workload(5);
+    let cost = CostModel::default();
+    let rule = RuleKind::Cada2 { c: 0.6 };
+    let identity = CompressCfg {
+        scheme: Scheme::Identity,
+        topk_frac: 0.5,
+        bits: 7,
+        seed: 99,
+    };
+    let mut base_algo = cada_algo(rule, 0.02, 20, 10);
+    let baseline = trainer_run(&mut base_algo, cost.clone(),
+                               TransportKind::InProc, &w, &mut compute);
+    for transport in [TransportKind::InProc, TransportKind::Threaded] {
+        let mut algo = cada_algo(rule, 0.02, 20, 10);
+        let run = trainer_run_compressed(&mut algo, cost.clone(),
+                                         transport, identity, &w,
+                                         &mut compute);
+        assert_parity(&baseline, &run,
+                      &format!("identity[{}]", transport.name()));
+    }
+    let (run, wire) =
+        socket_run_compressed(rule, 20, 10, identity, 5, &w, &mut compute);
+    assert_parity(&baseline, &run, "identity[socket]");
+    // dense payloads measure 5 framing bytes (tag + length) over raw —
+    // overhead, not compression
+    assert_eq!(wire.upload_wire_bytes,
+               wire.upload_raw_bytes + 5 * run.1.uploads,
+               "identity[socket]: dense payload accounting");
+}
+
+/// PR 6 acceptance gate: a LOSSY compressed CADA2 run must be
+/// bit-identical between `InProc` and the measured loopback socket —
+/// compression is a pure function of `(seed, round, worker)`, so both
+/// ends compute the same payloads without coordination — and the
+/// measured upload bytes must shrink at least 4x vs the dense
+/// innovations, with the simulated accounting agreeing exactly with
+/// what crossed the TCP connection.
+#[test]
+fn compressed_cada2_socket_matches_inproc_and_shrinks_the_wire() {
+    let (mut compute, w) = workload(5);
+    let cost = CostModel::default();
+    let rule = RuleKind::Cada2 { c: 0.6 };
+    let p = 1024usize;
+    for compress in [
+        CompressCfg {
+            scheme: Scheme::TopK,
+            topk_frac: 0.05,
+            bits: 4,
+            seed: 3,
+        },
+        CompressCfg {
+            scheme: Scheme::QuantB,
+            topk_frac: 0.05,
+            bits: 4,
+            seed: 3,
+        },
+    ] {
+        let label = compress.scheme.name();
+        let mut inproc_algo = cada_algo(rule, 0.02, 20, 10);
+        let inproc = trainer_run_compressed(&mut inproc_algo,
+                                            cost.clone(),
+                                            TransportKind::InProc,
+                                            compress, &w, &mut compute);
+        let (socket, wire) = socket_run_compressed(rule, 20, 10, compress,
+                                                   5, &w, &mut compute);
+        assert_parity(&inproc, &socket,
+                      &format!("cada2+{label}: socket vs inproc"));
+
+        // measured per-upload payload == the data-independent formula
+        // the simulated accounting uses
+        let enc = compress.sim_upload_bytes(p, 4 * p) as u64;
+        let uploads = socket.1.uploads;
+        assert!(uploads > 0, "{label}");
+        assert_eq!(wire.upload_raw_bytes, uploads * (4 * p) as u64,
+                   "{label}: raw accounting");
+        assert_eq!(wire.upload_wire_bytes, uploads * enc,
+                   "{label}: wire accounting");
+        // the >= 4x acceptance bar, on MEASURED bytes
+        assert!(wire.upload_wire_bytes * 4 <= wire.upload_raw_bytes,
+                "{label}: {} * 4 > {}",
+                wire.upload_wire_bytes, wire.upload_raw_bytes);
+        // and the lossy trajectory must genuinely differ from the
+        // uncompressed one (this is not an Identity in disguise)
+        let mut plain_algo = cada_algo(rule, 0.02, 20, 10);
+        let plain = trainer_run(&mut plain_algo, cost.clone(),
+                                TransportKind::InProc, &w, &mut compute);
+        assert_ne!(plain.2, inproc.2,
+                   "{label}: lossy run must change the trajectory");
     }
 }
 
