@@ -13,7 +13,7 @@ use std::sync::Arc;
 use cada::algorithms::{Cada, CadaCfg, Trainer};
 use cada::bench::{black_box, Runner};
 use cada::comm::{CostModel, TransportKind};
-use cada::compress::{CompressCfg, Payload, Purpose, Scheme};
+use cada::compress::{CompressCfg, Payload, PayloadRef, Purpose, Scheme};
 use cada::config::Schedule;
 use cada::coordinator::pool::ShardExec;
 use cada::coordinator::rules::RuleKind;
@@ -54,6 +54,93 @@ fn main() {
             tensor::amsgrad_update(&mut theta, &mut h, &mut vhat, &g,
                                    1e-4, 0.9, 0.999, 1e-8);
         });
+    }
+
+    // ---------------- SIMD kernels vs their scalar twins ---------------
+    // each dispatched hot-path kernel (8-lane SIMD when built with
+    // `--features simd` and CADA_SIMD != 0, scalar otherwise) next to
+    // its always-available scalar twin: with the feature on, each pair
+    // measures the kernel's SIMD speedup; without it the rows track
+    // each other. The twin rows also arm the baseline for both build
+    // configs.
+    {
+        let p = 65_536usize;
+        let a = randv(p, 20);
+        let b = randv(p, 21);
+        let mut y = randv(p, 22);
+        r.header(&format!(
+            "simd kernels vs scalar twins (simd_active={})",
+            tensor::simd_active()
+        ));
+        let two_in = (8 * p) as u64;
+        r.bench_bytes("dot               p=65536", two_in, || {
+            black_box(tensor::dot(&a, &b));
+        });
+        r.bench_bytes("dot scalar        p=65536", two_in, || {
+            black_box(tensor::scalar::dot(&a, &b));
+        });
+        r.bench_bytes("sqnorm_diff scalar p=65536", two_in, || {
+            black_box(tensor::scalar::sqnorm_diff(&a, &b));
+        });
+        r.bench_bytes("sqnorm_diff       p=65536", two_in, || {
+            black_box(tensor::sqnorm_diff(&a, &b));
+        });
+        r.bench_bytes("axpy              p=65536", two_in, || {
+            tensor::axpy(&mut y, 0.5, &a);
+        });
+        r.bench_bytes("axpy scalar       p=65536", two_in, || {
+            tensor::scalar::axpy(&mut y, 0.5, &a);
+        });
+        black_box(&y);
+        // the fused server step, dispatched vs scalar twin at one p
+        let mut theta = randv(p, 23);
+        let mut h = randv(p, 24);
+        let mut vhat: Vec<f32> =
+            randv(p, 25).iter().map(|v| v.abs()).collect();
+        let g = randv(p, 26);
+        let amsgrad_bytes = (4 * 4 * p) as u64;
+        r.bench_bytes("amsgrad_update    p=65536", amsgrad_bytes, || {
+            tensor::amsgrad_update(&mut theta, &mut h, &mut vhat, &g,
+                                   1e-4, 0.9, 0.999, 1e-8);
+        });
+        r.bench_bytes("amsgrad scalar    p=65536", amsgrad_bytes, || {
+            tensor::scalar::amsgrad_update(&mut theta, &mut h, &mut vhat,
+                                           &g, 1e-4, 0.9, 0.999, 1e-8);
+        });
+        // the blocked-gradient inner kernels at the logreg geometry
+        let d = 128usize;
+        let n = 256usize;
+        let x = randv(n * d, 27);
+        let w = randv(d, 28);
+        let mut z = vec![0.0f32; n];
+        let res = randv(n, 29);
+        let mut grad = vec![0.0f32; d];
+        let gemv_bytes = (4 * n * d) as u64;
+        r.bench_bytes("gemv_block        d=128 b=256", gemv_bytes, || {
+            tensor::gemv_block(&mut z, &x, &w);
+        });
+        r.bench_bytes("gemv_block scalar d=128 b=256", gemv_bytes, || {
+            tensor::scalar::gemv_block(&mut z, &x, &w);
+        });
+        r.bench_bytes("ger_acc           d=128 b=256", gemv_bytes, || {
+            tensor::ger_acc(&mut grad, &x, &res);
+        });
+        r.bench_bytes("ger_acc scalar    d=128 b=256", gemv_bytes, || {
+            tensor::scalar::ger_acc(&mut grad, &x, &res);
+        });
+        black_box((&z, &grad));
+        // fused activations over one gradient block
+        let zb = randv(256, 30);
+        let mut sig = vec![0.0f32; 256];
+        let mut sp = vec![0.0f32; 256];
+        r.bench_bytes("sigmoid_softplus  b=256", 4 * 256, || {
+            tensor::sigmoid_softplus_block(&zb, &mut sig, &mut sp);
+        });
+        r.bench_bytes("sigmoid_softplus scalar b=256", 4 * 256, || {
+            tensor::scalar::sigmoid_softplus_block(&zb, &mut sig,
+                                                   &mut sp);
+        });
+        black_box((&sig, &sp));
     }
 
     // ---------------- sharded server round at >= 1M parameters ---------
@@ -215,29 +302,50 @@ fn main() {
     // socket transport's per-round serialization cost on each side of
     // the connection, gated so codec regressions show up in bench-check
     {
+        use cada::comm::wire;
         let p = 65_536usize;
         let delta = randv(p, 70);
-        let msg = cada::comm::wire::Msg::Step(cada::comm::wire::WireStep {
+        let decision = cada::coordinator::rules::Decision {
+            upload: true,
+            rule_triggered: true,
+        };
+        let msg = wire::Msg::Step(wire::WireStep {
             w: 3,
-            decision: cada::coordinator::rules::Decision {
-                upload: true,
-                rule_triggered: true,
-            },
+            decision,
             lhs: 0.5,
             loss: 0.25,
             grad_evals: 2,
-            payload: Payload::Dense(delta),
+            payload: Payload::Dense(delta.clone()),
         });
         let mut buf = Vec::new();
         let bytes = (4 * p) as u64;
         r.header("wire codec (socket transport, 65536-float delta)");
         r.bench_bytes("wire encode step  p=65536", bytes, || {
-            cada::comm::wire::encode(&msg, &mut buf);
+            wire::encode(&msg, &mut buf);
             black_box(buf.len());
         });
-        cada::comm::wire::encode(&msg, &mut buf);
+        // the zero-copy worker path: same bytes, no owned payload build
+        let borrowed = wire::WireStepRef {
+            w: 3,
+            decision,
+            lhs: 0.5,
+            loss: 0.25,
+            grad_evals: 2,
+            payload: PayloadRef::Dense(&delta),
+        };
+        r.bench_bytes("wire encode step borrowed p=65536", bytes, || {
+            wire::encode_step(&borrowed, &mut buf);
+            black_box(buf.len());
+        });
+        wire::encode(&msg, &mut buf);
         r.bench_bytes("wire decode step  p=65536", bytes, || {
-            black_box(cada::comm::wire::decode(&buf).unwrap());
+            black_box(wire::decode(&buf).unwrap());
+        });
+        // the zero-copy server path: borrowed view + decompress straight
+        // into the dense fold vector
+        r.bench_bytes("wire decode step view p=65536", bytes, || {
+            let view = wire::decode_step_view(&buf).unwrap();
+            black_box(view.payload.decompress().unwrap());
         });
     }
 

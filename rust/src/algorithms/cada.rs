@@ -414,12 +414,14 @@ impl Algorithm for Cada {
             self.lhs_sum += step.lhs;
             self.lhs_count += 1;
         }
-        if step.decision.upload {
-            // the server folds what it received: decompress the shipped
-            // payload (Dense for Identity — exact bytes, bit-identical
-            // to the pre-compression protocol) before it lands in the
-            // worker slot
-            let dense = step.payload.decompress()?;
+        let decision = step.decision;
+        if decision.upload {
+            // the server folds what it received: the transport already
+            // decompressed the shipped payload into a dense vector
+            // (Dense for Identity — exact bytes, bit-identical to the
+            // pre-compression protocol), so this is a move, not a
+            // p-sized clone per upload
+            let dense = step.payload.into_dense()?;
             self.workers[w].absorb_remote_upload(&dense)?;
             self.uploaded.push(w);
         } else {

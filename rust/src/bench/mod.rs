@@ -336,6 +336,29 @@ pub fn regressions(deltas: &[BenchDelta], max_regress: f64) -> Vec<String> {
         .collect()
 }
 
+/// Detailed gate-failure lines for the regressing benches: one row per
+/// offender, naming the bench with its baseline/current medians and the
+/// measured delta — a red CI job points at the exact kernel rows at
+/// fault without anyone re-reading the full delta table.
+pub fn regression_report(deltas: &[BenchDelta], max_regress: f64)
+                         -> String {
+    deltas
+        .iter()
+        .filter(|d| d.regressed(max_regress))
+        .map(|d| {
+            format!(
+                "  {}: {} -> {} ({:+.1}%, gate is +{:.0}%)",
+                d.name,
+                fmt_ns(d.baseline_ns.unwrap_or(f64::NAN)),
+                fmt_ns(d.current_ns.unwrap_or(f64::NAN)),
+                (d.ratio().unwrap_or(1.0) - 1.0) * 100.0,
+                max_regress * 100.0
+            )
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 /// Benches the baseline gates on (non-null median) that the current run
 /// never produced. A rename or an accidentally dropped bench would
 /// otherwise silently disarm the gate, so the checker fails on these
@@ -502,6 +525,14 @@ mod tests {
         // the same +10% fails a 5% gate
         assert_eq!(regressions(&deltas, 0.05),
                    vec!["fast".to_string(), "slow".to_string()]);
+        // the failure report names exactly the offending rows, with
+        // both medians and the measured delta
+        let report = regression_report(&deltas, 0.25);
+        assert!(report.contains("slow"), "{report}");
+        assert!(report.contains("+100.0%"), "{report}");
+        assert!(report.contains("100 ns -> 200 ns"), "{report}");
+        assert!(!report.contains("fast"), "{report}");
+        assert!(regression_report(&deltas, 2.0).is_empty());
         // null-seeded baselines and benches absent from one side never
         // gate, whatever their numbers
         let seeded = deltas.iter().find(|d| d.name == "seeded").unwrap();

@@ -23,8 +23,8 @@
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-use super::wire::{self, Msg, RoundMsg, WireRound, WireStep, WireWorkerCfg};
-use crate::compress::Payload;
+use super::wire::{self, Msg, WireRound, WireStep, WireWorkerCfg};
+use crate::compress::{Payload, PayloadRef};
 use crate::coordinator::worker::WorkerState;
 use crate::data::Dataset;
 use crate::runtime::Compute;
@@ -61,6 +61,12 @@ pub struct WireStats {
     /// `upload_raw_bytes / upload_wire_bytes` is the measured
     /// compression ratio (1x under `Identity`)
     pub upload_wire_bytes: u64,
+    /// wall time the server spent building + encoding round headers
+    /// (dirty-range scan and serialization, not the socket write)
+    pub header_encode_ns: u64,
+    /// wall time the server spent parsing + decompressing step frames
+    /// (not the socket read)
+    pub step_decode_ns: u64,
 }
 
 /// One connected worker process, with the per-shard versions it last
@@ -220,11 +226,18 @@ impl SocketServer {
         Ok(())
     }
 
-    /// Build worker `w`'s round header: the shared round state plus only
-    /// the ranges this connection has not acknowledged at the current
-    /// version.
-    fn header_for(conn: &mut WorkerConn, round: &WireRound,
-                  batch: &[u32], stats: &mut WireStats) -> RoundMsg {
+    /// Collect worker `w`'s dirty ranges: only the shard ranges this
+    /// connection has not acknowledged at the current version, as
+    /// `(start, slice)` pairs borrowing the round-frozen vectors. The
+    /// caller hands them straight to
+    /// [`wire::encode_round_header`] — building a per-worker header
+    /// copies no floats outside the output frame itself (the old path
+    /// cloned every dirty range into an owned
+    /// [`RoundMsg`](super::wire::RoundMsg) first).
+    #[allow(clippy::type_complexity)]
+    fn dirty_ranges<'r>(conn: &mut WorkerConn, round: &'r WireRound,
+                        stats: &mut WireStats)
+                        -> (Vec<(u32, &'r [f32])>, Vec<(u32, &'r [f32])>) {
         let mut theta = Vec::new();
         for (s, r) in round.layout.ranges().enumerate() {
             if r.is_empty() {
@@ -233,10 +246,7 @@ impl SocketServer {
             if conn.held_theta.get(s) != Some(&round.versions[s]) {
                 stats.theta_ranges_sent += 1;
                 stats.theta_range_bytes += 4 * r.len() as u64;
-                theta.push(wire::RangeDelta {
-                    start: r.start as u32,
-                    data: round.theta[r].to_vec(),
-                });
+                theta.push((r.start as u32, &round.theta[r]));
             }
         }
         conn.held_theta.clear();
@@ -246,20 +256,11 @@ impl SocketServer {
             if conn.held_snap != Some(*version) {
                 stats.snapshot_ranges_sent += 1;
                 stats.snapshot_range_bytes += 4 * snap.len() as u64;
-                snapshot.push(wire::RangeDelta {
-                    start: 0,
-                    data: snap.as_slice().to_vec(),
-                });
+                snapshot.push((0u32, snap.as_slice()));
                 conn.held_snap = Some(*version);
             }
         }
-        RoundMsg {
-            k: round.k,
-            rhs: round.rhs,
-            batch: batch.to_vec(),
-            theta,
-            snapshot,
-        }
+        (theta, snapshot)
     }
 
     /// Drive one round across the worker processes: ship each its
@@ -280,10 +281,24 @@ impl SocketServer {
         let mut first_err: Option<anyhow::Error> = None;
         let mut dispatched = 0usize;
         for (w, conn) in self.conns.iter_mut().enumerate() {
-            let header = Self::header_for(conn, round, &batches[w],
-                                          &mut self.stats);
-            match wire::send(&mut conn.stream, &Msg::Round(header),
-                             &mut self.scratch) {
+            // zero-copy header: collect borrowed dirty ranges and
+            // serialize them straight into the frame scratch
+            let t0 = Instant::now();
+            let (theta, snapshot) =
+                Self::dirty_ranges(conn, round, &mut self.stats);
+            wire::encode_round_header(
+                &wire::RoundHeaderRef {
+                    k: round.k,
+                    rhs: round.rhs,
+                    batch: batches[w].as_slice(),
+                    theta: &theta,
+                    snapshot: &snapshot,
+                },
+                &mut self.scratch,
+            );
+            self.stats.header_encode_ns +=
+                t0.elapsed().as_nanos() as u64;
+            match wire::write_frame(&mut conn.stream, &self.scratch) {
                 Ok(bytes) => {
                     self.stats.bytes_sent += bytes as u64;
                     dispatched += 1;
@@ -302,32 +317,55 @@ impl SocketServer {
         let mut steps = Vec::with_capacity(dispatched);
         for (w, conn) in self.conns.iter_mut().take(dispatched).enumerate()
         {
-            match wire::recv(&mut conn.stream, &mut self.scratch) {
-                Ok(Some((Msg::Step(step), bytes))) => {
+            match wire::read_frame(&mut conn.stream, &mut self.scratch) {
+                Ok(Some(bytes)) => {
                     self.stats.bytes_received += bytes as u64;
-                    if step.w != w {
-                        if first_err.is_none() {
-                            first_err = Some(anyhow::anyhow!(
-                                "worker {w} answered as worker {}",
-                                step.w
-                            ));
+                    // parse the frame as a borrowed view and decompress
+                    // straight into the dense vector the fold consumes:
+                    // one parse, one allocation, no intermediate owned
+                    // payload copy
+                    let t0 = Instant::now();
+                    let parsed = wire::decode_step_view(&self.scratch)
+                        .and_then(|view| {
+                            let dense = view.payload.decompress()?;
+                            Ok((view, dense))
+                        });
+                    self.stats.step_decode_ns +=
+                        t0.elapsed().as_nanos() as u64;
+                    match parsed {
+                        Ok((view, dense)) => {
+                            if view.w != w {
+                                if first_err.is_none() {
+                                    first_err = Some(anyhow::anyhow!(
+                                        "worker {w} answered as worker {}",
+                                        view.w
+                                    ));
+                                }
+                                continue;
+                            }
+                            if view.decision.upload {
+                                self.stats.upload_raw_bytes +=
+                                    view.payload.raw_bytes();
+                                self.stats.upload_wire_bytes +=
+                                    view.payload.encoded_bytes();
+                            }
+                            steps.push(WireStep {
+                                w: view.w,
+                                decision: view.decision,
+                                lhs: view.lhs,
+                                loss: view.loss,
+                                grad_evals: view.grad_evals,
+                                payload: Payload::Dense(dense),
+                            });
                         }
-                        continue;
-                    }
-                    if step.decision.upload {
-                        self.stats.upload_raw_bytes +=
-                            step.payload.raw_bytes() as u64;
-                        self.stats.upload_wire_bytes +=
-                            step.payload.encoded_bytes() as u64;
-                    }
-                    steps.push(step);
-                }
-                Ok(Some((other, _))) => {
-                    if first_err.is_none() {
-                        first_err = Some(anyhow::anyhow!(
-                            "worker {w}: expected a step result, got \
-                             {other:?}"
-                        ));
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(anyhow::anyhow!(
+                                    "worker {w}'s round-{} result: {e:#}",
+                                    round.k
+                                ));
+                            }
+                        }
                     }
                 }
                 Ok(None) => {
@@ -515,27 +553,33 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
             compute,
             cfg.use_artifact_innov,
         )?;
-        let payload = if step.decision.upload {
+        // lossy schemes stash the encoded payload in the worker state;
+        // Identity ships the dense innovation exactly as the
+        // pre-compression protocol did — borrowed straight from the
+        // worker's delta buffer, never cloned into an owned payload
+        let stashed = if step.decision.upload {
             report.uploads += 1;
-            // lossy schemes stash the encoded payload in the worker
-            // state; Identity ships the dense innovation exactly as the
-            // pre-compression protocol did
-            state.take_payload().unwrap_or_else(|| {
-                Payload::Dense(state.last_delta().to_vec())
-            })
+            state.take_payload()
         } else {
-            Payload::Dense(Vec::new())
+            None
         };
-        wire::send(
+        let payload = match &stashed {
+            Some(p) => p.as_payload_ref(),
+            None if step.decision.upload => {
+                PayloadRef::Dense(state.last_delta())
+            }
+            None => PayloadRef::Dense(&[]),
+        };
+        wire::send_step(
             &mut stream,
-            &Msg::Step(WireStep {
+            &wire::WireStepRef {
                 w,
                 decision: step.decision,
                 lhs: step.lhs,
                 loss: step.loss,
                 grad_evals: step.grad_evals,
                 payload,
-            }),
+            },
             &mut scratch,
         )?;
         report.rounds += 1;
@@ -574,21 +618,45 @@ mod tests {
         let mut stats = WireStats::default();
         // first round: everything is dirty
         let r0 = round(0, p, 2, vec![0, 0], Some((Arc::clone(&snap), 1)));
-        let h0 = SocketServer::header_for(&mut conn, &r0, &[3, 1],
-                                          &mut stats);
-        assert_eq!(h0.theta.len(), 2);
-        assert_eq!(h0.snapshot.len(), 1);
-        assert_eq!(h0.batch, vec![3, 1]);
+        let (theta0, snap0) =
+            SocketServer::dirty_ranges(&mut conn, &r0, &mut stats);
+        assert_eq!(theta0.len(), 2);
+        assert_eq!(snap0.len(), 1);
         assert_eq!(stats.theta_ranges_sent, 2);
         assert_eq!(stats.theta_range_bytes, 4 * p as u64);
         assert_eq!(stats.snapshot_ranges_sent, 1);
+        // the borrowed ranges encode into the round header the worker
+        // decodes back — same message the old owned path shipped
+        let mut buf = Vec::new();
+        wire::encode_round_header(
+            &wire::RoundHeaderRef {
+                k: r0.k,
+                rhs: r0.rhs,
+                batch: &[3, 1],
+                theta: &theta0,
+                snapshot: &snap0,
+            },
+            &mut buf,
+        );
+        match wire::decode(&buf).unwrap() {
+            Msg::Round(h0) => {
+                assert_eq!(h0.k, 0);
+                assert_eq!(h0.batch, vec![3, 1]);
+                assert_eq!(h0.theta.len(), 2);
+                assert_eq!(h0.theta[0].start, 0);
+                assert_eq!(h0.theta[1].start, 1024);
+                assert_eq!(h0.snapshot.len(), 1);
+                assert_eq!(h0.snapshot[0].data, *snap);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
         // second round: shard 1 moved, snapshot did not
         let r1 = round(1, p, 2, vec![0, 1], Some((snap, 1)));
-        let h1 = SocketServer::header_for(&mut conn, &r1, &[2, 2],
-                                          &mut stats);
-        assert_eq!(h1.theta.len(), 1);
-        assert_eq!(h1.theta[0].start, 1024);
-        assert!(h1.snapshot.is_empty());
+        let (theta1, snap1) =
+            SocketServer::dirty_ranges(&mut conn, &r1, &mut stats);
+        assert_eq!(theta1.len(), 1);
+        assert_eq!(theta1[0].0, 1024);
+        assert!(snap1.is_empty());
         assert_eq!(stats.theta_ranges_sent, 3);
         assert_eq!(stats.snapshot_ranges_sent, 1);
     }

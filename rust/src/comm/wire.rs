@@ -29,11 +29,28 @@
 //! what lets the socket transport reproduce `InProc` golden runs
 //! bit-for-bit. Frames are capped at [`MAX_FRAME`] so a corrupt or
 //! hostile length prefix cannot OOM the peer.
+//!
+//! # Zero-copy hot paths
+//!
+//! The per-round encode/decode traffic has borrowing twins of the owned
+//! types, byte-identical on the wire by construction (one shared body
+//! writer each, pinned by the `*_byte_identical` tests):
+//!
+//! * [`encode_round_header`] writes a [`RoundHeaderRef`] — unacked
+//!   ranges borrowed straight from the frozen theta/snapshot buffers —
+//!   without materialising a [`RangeDelta`] `Vec` per range first.
+//! * [`encode_step`] / [`send_step`] write a [`WireStepRef`] whose
+//!   [`PayloadRef`] borrows the worker's innovation/compressor buffers.
+//! * [`decode_step_view`] parses a Step frame into a [`WireStepView`]
+//!   whose [`PayloadView`] borrows the receive buffer (raw LE bytes —
+//!   alignment forbids borrowing `&[f32]`), so the server decompresses
+//!   quant codes and sparse pairs straight from the frame with no
+//!   intermediate `to_vec`.
 
 use std::io::{Read, Write};
 use std::sync::Arc;
 
-use crate::compress::{CompressCfg, Payload, Scheme};
+use crate::compress::{self, CompressCfg, Payload, PayloadRef, Scheme};
 use crate::coordinator::rules::{Decision, RuleKind};
 use crate::coordinator::shard::ShardLayout;
 
@@ -190,20 +207,39 @@ fn put_f64(buf: &mut Vec<u8>, v: f64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Bulk little-endian append of an f32 slice (no count prefix): one
+/// resize, then in-place 4-byte stores — the hot inner write of every
+/// dense payload and range delta (the old per-element
+/// `extend_from_slice` paid a length/capacity check per float).
+fn put_f32_bytes(buf: &mut Vec<u8>, v: &[f32]) {
+    let at = buf.len();
+    buf.resize(at + 4 * v.len(), 0);
+    for (dst, &x) in buf[at..].chunks_exact_mut(4).zip(v) {
+        dst.copy_from_slice(&x.to_le_bytes());
+    }
+}
+
 fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
     put_u32(buf, v.len() as u32);
-    buf.reserve(4 * v.len());
-    for &x in v {
-        buf.extend_from_slice(&x.to_le_bytes());
+    put_f32_bytes(buf, v);
+}
+
+/// The one writer of range-delta lists: both the owned
+/// ([`RangeDelta`]) and the borrowed ([`RoundHeaderRef`]) round-header
+/// encodes feed it, which is what makes them byte-identical by
+/// construction.
+fn put_ranges<'a>(buf: &mut Vec<u8>, count: usize,
+                  ranges: impl Iterator<Item = (u32, &'a [f32])>) {
+    put_u32(buf, count as u32);
+    for (start, data) in ranges {
+        put_u32(buf, start);
+        put_f32s(buf, data);
     }
 }
 
 fn put_deltas(buf: &mut Vec<u8>, deltas: &[RangeDelta]) {
-    put_u32(buf, deltas.len() as u32);
-    for d in deltas {
-        put_u32(buf, d.start);
-        put_f32s(buf, &d.data);
-    }
+    put_ranges(buf, deltas.len(),
+               deltas.iter().map(|d| (d.start, d.data.as_slice())));
 }
 
 fn put_compress(buf: &mut Vec<u8>, cfg: &CompressCfg) {
@@ -222,32 +258,36 @@ const PAYLOAD_DENSE: u8 = 0;
 const PAYLOAD_SPARSE: u8 = 1;
 const PAYLOAD_QUANT: u8 = 2;
 
-fn put_payload(buf: &mut Vec<u8>, payload: &Payload) {
+/// The one writer of step payloads (the owned [`put_payload`] borrows
+/// and delegates here — byte-identity by construction).
+fn put_payload_ref(buf: &mut Vec<u8>, payload: PayloadRef<'_>) {
     match payload {
-        Payload::Dense(v) => {
+        PayloadRef::Dense(v) => {
             buf.push(PAYLOAD_DENSE);
             put_f32s(buf, v);
         }
-        Payload::Sparse { p, idx, val } => {
+        PayloadRef::Sparse { p, idx, val } => {
             buf.push(PAYLOAD_SPARSE);
-            put_u32(buf, *p);
+            put_u32(buf, p);
             put_u32(buf, idx.len() as u32);
             for &i in idx {
                 put_u32(buf, i);
             }
-            for &v in val {
-                put_f32(buf, v);
-            }
+            put_f32_bytes(buf, val);
         }
-        Payload::Quant { p, bits, scale, codes } => {
+        PayloadRef::Quant { p, bits, scale, codes } => {
             buf.push(PAYLOAD_QUANT);
-            put_u32(buf, *p);
-            buf.push(*bits);
-            put_f32(buf, *scale);
+            put_u32(buf, p);
+            buf.push(bits);
+            put_f32(buf, scale);
             put_u32(buf, codes.len() as u32);
             buf.extend_from_slice(codes);
         }
     }
+}
+
+fn put_payload(buf: &mut Vec<u8>, payload: &Payload) {
+    put_payload_ref(buf, payload.as_payload_ref());
 }
 
 fn put_rule(buf: &mut Vec<u8>, rule: RuleKind) {
@@ -301,18 +341,92 @@ pub fn encode(msg: &Msg, buf: &mut Vec<u8>) {
             put_deltas(buf, &r.theta);
             put_deltas(buf, &r.snapshot);
         }
-        Msg::Step(s) => {
-            buf.push(TAG_STEP);
-            put_u32(buf, s.w as u32);
-            buf.push(s.decision.upload as u8);
-            buf.push(s.decision.rule_triggered as u8);
-            put_f64(buf, s.lhs);
-            put_f32(buf, s.loss);
-            put_u64(buf, s.grad_evals);
-            put_payload(buf, &s.payload);
-        }
+        Msg::Step(s) => put_step_body(
+            buf,
+            &WireStepRef {
+                w: s.w,
+                decision: s.decision,
+                lhs: s.lhs,
+                loss: s.loss,
+                grad_evals: s.grad_evals,
+                payload: s.payload.as_payload_ref(),
+            },
+        ),
         Msg::Shutdown => buf.push(TAG_SHUTDOWN),
     }
+}
+
+/// A round header borrowing the server's frozen buffers: each
+/// theta/snapshot entry is `(start, &frozen[range])` — the unacked
+/// ranges sliced straight out of the round-frozen vectors, so building
+/// and encoding a per-worker header copies no floats outside the output
+/// frame itself.
+#[derive(Clone, Debug)]
+pub struct RoundHeaderRef<'a> {
+    pub k: u64,
+    pub rhs: f64,
+    pub batch: &'a [u32],
+    pub theta: &'a [(u32, &'a [f32])],
+    pub snapshot: &'a [(u32, &'a [f32])],
+}
+
+/// Serialize a borrowed round header into `buf` (cleared first).
+/// Byte-identical to [`encode`] of the equivalent
+/// [`Msg::Round`]`(`[`RoundMsg`]`)` — same tag, same field order, same
+/// [`put_ranges`] body — pinned by
+/// `borrowed_round_header_encode_is_byte_identical`.
+pub fn encode_round_header(hdr: &RoundHeaderRef<'_>, buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.push(TAG_ROUND);
+    put_u64(buf, hdr.k);
+    put_f64(buf, hdr.rhs);
+    put_u32(buf, hdr.batch.len() as u32);
+    for &i in hdr.batch {
+        put_u32(buf, i);
+    }
+    put_ranges(buf, hdr.theta.len(), hdr.theta.iter().copied());
+    put_ranges(buf, hdr.snapshot.len(), hdr.snapshot.iter().copied());
+}
+
+/// A step result borrowing the worker's payload buffers (see
+/// [`PayloadRef`]): what [`encode_step`]/[`send_step`] put on the wire
+/// without first cloning the innovation into an owned
+/// [`Payload`].
+#[derive(Clone, Copy, Debug)]
+pub struct WireStepRef<'a> {
+    pub w: usize,
+    pub decision: Decision,
+    pub lhs: f64,
+    pub loss: f32,
+    pub grad_evals: u64,
+    pub payload: PayloadRef<'a>,
+}
+
+/// The one writer of step bodies: [`encode`]'s `Msg::Step` arm borrows
+/// into it, so owned and borrowed step encodes are byte-identical by
+/// construction (pinned by `borrowed_step_encode_is_byte_identical`).
+fn put_step_body(buf: &mut Vec<u8>, s: &WireStepRef<'_>) {
+    buf.push(TAG_STEP);
+    put_u32(buf, s.w as u32);
+    buf.push(s.decision.upload as u8);
+    buf.push(s.decision.rule_triggered as u8);
+    put_f64(buf, s.lhs);
+    put_f32(buf, s.loss);
+    put_u64(buf, s.grad_evals);
+    put_payload_ref(buf, s.payload);
+}
+
+/// Serialize a borrowed step into `buf` (cleared first).
+pub fn encode_step(step: &WireStepRef<'_>, buf: &mut Vec<u8>) {
+    buf.clear();
+    put_step_body(buf, step);
+}
+
+/// Encode + frame a borrowed step onto `w`; returns the bytes written.
+pub fn send_step(w: &mut impl Write, step: &WireStepRef<'_>,
+                 scratch: &mut Vec<u8>) -> anyhow::Result<usize> {
+    encode_step(step, scratch);
+    write_frame(w, scratch)
 }
 
 // ---------------------------------------------------------------- decode
@@ -406,9 +520,17 @@ impl<'a> Reader<'a> {
         Ok(cfg)
     }
 
-    fn payload(&mut self) -> anyhow::Result<Payload> {
-        let payload = match self.u8()? {
-            PAYLOAD_DENSE => Payload::Dense(self.f32s()?),
+    /// The ONE hostile-input payload parser: returns a borrowed view
+    /// over the frame; [`Reader::payload`] materialises it. Every
+    /// length/dimension claim is checked against the remaining frame
+    /// BEFORE any allocation.
+    fn payload_view(&mut self) -> anyhow::Result<PayloadView<'a>> {
+        Ok(match self.u8()? {
+            PAYLOAD_DENSE => {
+                let n = self.u32()? as usize;
+                let raw = self.take(4 * n)?;
+                PayloadView::Dense { n, raw }
+            }
             PAYLOAD_SPARSE => {
                 let p = self.u32()?;
                 // a decoded payload decompresses to p f32s; keep a
@@ -426,15 +548,9 @@ impl<'a> Reader<'a> {
                     "corrupt wire message: {k} sparse pairs in {} bytes",
                     self.b.len() - self.pos
                 );
-                let mut idx = Vec::with_capacity(k);
-                for _ in 0..k {
-                    idx.push(self.u32()?);
-                }
-                let mut val = Vec::with_capacity(k);
-                for _ in 0..k {
-                    val.push(self.f32()?);
-                }
-                Payload::Sparse { p, idx, val }
+                let idx_raw = self.take(4 * k)?;
+                let val_raw = self.take(4 * k)?;
+                PayloadView::Sparse { p, idx_raw, val_raw }
             }
             PAYLOAD_QUANT => {
                 let p = self.u32()?;
@@ -446,15 +562,16 @@ impl<'a> Reader<'a> {
                 let bits = self.u8()?;
                 let scale = self.f32()?;
                 let n = self.u32()? as usize;
-                let codes = self.take(n)?.to_vec();
-                Payload::Quant { p, bits, scale, codes }
+                PayloadView::Quant { p, bits, scale, codes: self.take(n)? }
             }
             other => anyhow::bail!("unknown wire payload tag {other}"),
-        };
+        })
+    }
+
+    fn payload(&mut self) -> anyhow::Result<Payload> {
         // structural invariants (sorted in-range indices, code-buffer
-        // length, finite scale) hold from here on
-        payload.validate()?;
-        Ok(payload)
+        // length, finite scale) are checked by to_payload
+        self.payload_view()?.to_payload()
     }
 
     fn rule(&mut self) -> anyhow::Result<RuleKind> {
@@ -560,6 +677,212 @@ pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
         payload.len()
     );
     Ok(msg)
+}
+
+/// A payload parsed but not yet materialised: length-checked slices
+/// straight into the receive buffer. The frame's f32/u32 arrays stay as
+/// little-endian bytes (a `&[u8]` from the socket has no alignment
+/// guarantee, so reinterpreting as `&[f32]` would be UB); consumers
+/// either [`decompress`](PayloadView::decompress) straight into the
+/// dense fold buffer or [`to_payload`](PayloadView::to_payload) when an
+/// owned [`Payload`] is genuinely needed. Either way the quant code
+/// buffer is read in place — the old decode path's `to_vec()` copy is
+/// gone.
+#[derive(Clone, Copy, Debug)]
+pub enum PayloadView<'a> {
+    Dense { n: usize, raw: &'a [u8] },
+    Sparse { p: u32, idx_raw: &'a [u8], val_raw: &'a [u8] },
+    Quant { p: u32, bits: u8, scale: f32, codes: &'a [u8] },
+}
+
+impl PayloadView<'_> {
+    /// The dense dimension this payload decompresses to (mirrors
+    /// [`Payload::dim`]).
+    pub fn dim(&self) -> usize {
+        match self {
+            PayloadView::Dense { n, .. } => *n,
+            PayloadView::Sparse { p, .. } => *p as usize,
+            PayloadView::Quant { p, .. } => *p as usize,
+        }
+    }
+
+    /// Bytes of the dense f32 vector this payload stands for.
+    pub fn raw_bytes(&self) -> u64 {
+        4 * self.dim() as u64
+    }
+
+    /// Bytes this payload occupies inside a wire Step frame (mirrors
+    /// [`Payload::encoded_bytes`]).
+    pub fn encoded_bytes(&self) -> u64 {
+        match self {
+            PayloadView::Dense { n, .. } => 1 + 4 + 4 * *n as u64,
+            PayloadView::Sparse { idx_raw, .. } => {
+                Payload::sparse_bytes(idx_raw.len() / 4)
+            }
+            PayloadView::Quant { p, bits, .. } => {
+                Payload::quant_bytes(*p as usize, *bits as u32)
+            }
+        }
+    }
+
+    /// Structural validity — the same invariants as
+    /// [`Payload::validate`] (sorted in-range sparse indices, quant
+    /// bits/scale/code-length), checked over the borrowed bytes so a
+    /// hostile frame is rejected before anything is allocated.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            PayloadView::Dense { .. } => Ok(()),
+            PayloadView::Sparse { p, idx_raw, .. } => {
+                let k = idx_raw.len() / 4;
+                anyhow::ensure!(
+                    k <= *p as usize,
+                    "sparse payload: {k} entries in dimension {p}"
+                );
+                let mut prev: Option<u32> = None;
+                for c in idx_raw.chunks_exact(4) {
+                    let i = u32::from_le_bytes(c.try_into().expect("len 4"));
+                    anyhow::ensure!(
+                        i < *p,
+                        "sparse payload: index {i} out of range (p={p})"
+                    );
+                    anyhow::ensure!(
+                        prev.map_or(true, |q| i > q),
+                        "sparse payload: indices must be strictly \
+                         increasing"
+                    );
+                    prev = Some(i);
+                }
+                Ok(())
+            }
+            PayloadView::Quant { p, bits, scale, codes } => {
+                anyhow::ensure!(
+                    (1..=8).contains(bits),
+                    "quant payload: bits {bits} out of range"
+                );
+                anyhow::ensure!(
+                    scale.is_finite(),
+                    "quant payload: non-finite scale"
+                );
+                let want = (*p as u64 * *bits as u64).div_ceil(8);
+                anyhow::ensure!(
+                    codes.len() as u64 == want,
+                    "quant payload: {} code bytes for p={p}, bits={bits} \
+                     (want {want})",
+                    codes.len()
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Validate, then materialise an owned [`Payload`]. Equals what the
+    /// old copying decoder produced, byte for byte.
+    pub fn to_payload(&self) -> anyhow::Result<Payload> {
+        self.validate()?;
+        Ok(match self {
+            PayloadView::Dense { raw, .. } => {
+                Payload::Dense(f32s_from_le(raw))
+            }
+            PayloadView::Sparse { p, idx_raw, val_raw } => Payload::Sparse {
+                p: *p,
+                idx: idx_raw
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().expect("len 4")))
+                    .collect(),
+                val: f32s_from_le(val_raw),
+            },
+            PayloadView::Quant { p, bits, scale, codes } => Payload::Quant {
+                p: *p,
+                bits: *bits,
+                scale: *scale,
+                codes: codes.to_vec(),
+            },
+        })
+    }
+
+    /// Validate, then decompress straight to the dense innovation —
+    /// identical floats to [`Payload::decompress`] of the materialised
+    /// payload (same scatter, same `read_code`/`quant_bias` grid), but
+    /// without the intermediate owned copy of the code buffer.
+    pub fn decompress(&self) -> anyhow::Result<Vec<f32>> {
+        self.validate()?;
+        Ok(match self {
+            PayloadView::Dense { raw, .. } => f32s_from_le(raw),
+            PayloadView::Sparse { p, idx_raw, val_raw } => {
+                let mut out = vec![0.0f32; *p as usize];
+                for (ic, vc) in
+                    idx_raw.chunks_exact(4).zip(val_raw.chunks_exact(4))
+                {
+                    let i = u32::from_le_bytes(ic.try_into().expect("len 4"));
+                    out[i as usize] =
+                        f32::from_le_bytes(vc.try_into().expect("len 4"));
+                }
+                out
+            }
+            PayloadView::Quant { p, bits, scale, codes } => {
+                let bias = compress::quant_bias(*bits);
+                let mut out = Vec::with_capacity(*p as usize);
+                for i in 0..*p as usize {
+                    let code = compress::read_code(codes, *bits, i);
+                    out.push((code as f32 - bias) * scale);
+                }
+                out
+            }
+        })
+    }
+}
+
+fn f32s_from_le(raw: &[u8]) -> Vec<f32> {
+    raw.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("len 4")))
+        .collect()
+}
+
+/// A step frame parsed without materialising its payload: the scalar
+/// fields by value, the innovation as a [`PayloadView`] borrowing the
+/// receive buffer. The server decode path goes `read_frame` →
+/// [`decode_step_view`] → `payload.decompress()` straight into the fold
+/// — one parse, one allocation, no intermediate owned [`Payload`].
+#[derive(Clone, Copy, Debug)]
+pub struct WireStepView<'a> {
+    pub w: usize,
+    pub decision: Decision,
+    pub lhs: f64,
+    pub loss: f32,
+    pub grad_evals: u64,
+    pub payload: PayloadView<'a>,
+}
+
+/// Parse a frame that must be a Step (the only message workers send
+/// after the handshake) into a borrowed [`WireStepView`]. Applies the
+/// same hostile-input guards and the same full-consumption check as
+/// [`decode`]; the payload's structural invariants are checked by
+/// [`PayloadView::validate`] at materialisation time.
+pub fn decode_step_view(payload: &[u8]) -> anyhow::Result<WireStepView<'_>> {
+    let mut r = Reader { b: payload, pos: 0 };
+    let tag = r.u8()?;
+    anyhow::ensure!(
+        tag == TAG_STEP,
+        "expected a step frame, got wire message tag {tag}"
+    );
+    let w = r.u32()? as usize;
+    let upload = r.u8()? != 0;
+    let rule_triggered = r.u8()? != 0;
+    let step = WireStepView {
+        w,
+        decision: Decision { upload, rule_triggered },
+        lhs: r.f64()?,
+        loss: r.f32()?,
+        grad_evals: r.u64()?,
+        payload: r.payload_view()?,
+    };
+    anyhow::ensure!(
+        r.pos == payload.len(),
+        "trailing garbage after wire message ({} of {} bytes consumed)",
+        r.pos,
+        payload.len()
+    );
+    Ok(step)
 }
 
 // ---------------------------------------------------------------- frames
@@ -1019,6 +1342,11 @@ mod tests {
                           TAG_SHUTDOWN][(trial / 2) as usize % 5];
             }
             let _ = decode(&buf);
+            // the borrowed step parser walks the same hostile bytes
+            if let Ok(view) = decode_step_view(&buf) {
+                let _ = view.payload.validate();
+                let _ = view.payload.decompress();
+            }
         }
         // mutation fuzzing: corrupt single bytes of a real compressed
         // step and re-decode; decode either errors cleanly or yields a
@@ -1053,7 +1381,219 @@ mod tests {
                 assert_eq!(once, twice,
                            "decode/encode not idempotent on {decoded:?}");
             }
+            // borrowed and owned step decoders agree on every mutant:
+            // both accept (with byte-equal materialisation) or both
+            // reject
+            match (decode(&buf), decode_step_view(&buf)) {
+                (Ok(Msg::Step(owned)), Ok(view)) => {
+                    let mat = view.payload.to_payload().unwrap();
+                    assert_eq!(mat.encoded_bytes(),
+                               owned.payload.encoded_bytes());
+                    let a = mat.decompress().unwrap();
+                    let b = owned.payload.decompress().unwrap();
+                    assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter().zip(&b) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                (Ok(other), _) => {
+                    panic!("step mutant decoded as {other:?}")
+                }
+                (Err(_), view) => {
+                    // the view defers structural validation; if it
+                    // parsed, materialisation must fail like decode did
+                    if let Ok(v) = view {
+                        assert!(v.payload.to_payload().is_err());
+                    }
+                }
+            }
         }
+    }
+
+    #[test]
+    fn borrowed_round_header_encode_is_byte_identical() {
+        // the zero-copy header writer must be indistinguishable on the
+        // wire from encoding the equivalent owned message — workers
+        // cannot tell which path the server took
+        let theta0 = vec![1.0f32, -2.5, 3.25];
+        let theta1 = vec![f32::MIN_POSITIVE];
+        let snap0 = vec![0.5f32, -0.0];
+        let owned = Msg::Round(RoundMsg {
+            k: 41,
+            rhs: 0.125,
+            batch: vec![7, 0, 7, 3],
+            theta: vec![
+                RangeDelta { start: 0, data: theta0.clone() },
+                RangeDelta { start: 1024, data: theta1.clone() },
+            ],
+            snapshot: vec![RangeDelta { start: 64, data: snap0.clone() }],
+        });
+        let mut want = Vec::new();
+        encode(&owned, &mut want);
+        let theta: Vec<(u32, &[f32])> = vec![(0, &theta0), (1024, &theta1)];
+        let snapshot: Vec<(u32, &[f32])> = vec![(64, &snap0)];
+        let hdr = RoundHeaderRef {
+            k: 41,
+            rhs: 0.125,
+            batch: &[7, 0, 7, 3],
+            theta: &theta,
+            snapshot: &snapshot,
+        };
+        let mut got = vec![0xAA; 3]; // stale scratch must be cleared
+        encode_round_header(&hdr, &mut got);
+        assert_eq!(got, want);
+        // and the borrowed encode parses back as the owned message
+        assert_eq!(decode(&got).unwrap(), owned);
+    }
+
+    #[test]
+    fn borrowed_step_encode_is_byte_identical() {
+        // every payload shape: encode_step over a borrowed PayloadRef
+        // must produce the exact bytes of the owned Msg::Step encode
+        let payloads = vec![
+            Payload::Dense(vec![0.25, -1.0, f32::MAX]),
+            Payload::Sparse {
+                p: 16,
+                idx: vec![0, 3, 15],
+                val: vec![1.5, -2.25, f32::MAX],
+            },
+            Payload::Quant {
+                p: 9,
+                bits: 3,
+                scale: 0.125,
+                codes: vec![0b1010_1010, 0b0101_0101, 0b0000_0111, 0x01],
+            },
+        ];
+        for payload in payloads {
+            let owned = Msg::Step(WireStep {
+                w: 2,
+                decision: Decision { upload: true, rule_triggered: false },
+                lhs: 3.25,
+                loss: 0.5,
+                grad_evals: 7,
+                payload: payload.clone(),
+            });
+            let mut want = Vec::new();
+            encode(&owned, &mut want);
+            let borrowed = WireStepRef {
+                w: 2,
+                decision: Decision { upload: true, rule_triggered: false },
+                lhs: 3.25,
+                loss: 0.5,
+                grad_evals: 7,
+                payload: payload.as_payload_ref(),
+            };
+            let mut got = vec![0x55; 9]; // stale scratch must be cleared
+            encode_step(&borrowed, &mut got);
+            assert_eq!(got, want, "borrowed encode diverged for {payload:?}");
+            // and the framed variant ships length + the same bytes
+            let mut wire = Vec::new();
+            let mut scratch = Vec::new();
+            let wrote = send_step(&mut wire, &borrowed, &mut scratch)
+                .unwrap();
+            assert_eq!(wrote, 4 + want.len());
+            assert_eq!(&wire[4..], &want[..]);
+        }
+    }
+
+    #[test]
+    fn step_view_decode_matches_owned_decode() {
+        // the borrowed step parser sees the same fields and the same
+        // floats as the owned decoder, for every payload shape
+        let payloads = vec![
+            Payload::Dense(vec![0.1, -0.2, f32::MIN_POSITIVE, -0.0]),
+            Payload::Sparse {
+                p: 8,
+                idx: vec![1, 5],
+                val: vec![-1.0, 2.0],
+            },
+            Payload::Quant {
+                p: 5,
+                bits: 2,
+                scale: 0.5,
+                codes: vec![0b01_10_01_10, 0b10],
+            },
+        ];
+        for payload in payloads {
+            let msg = Msg::Step(WireStep {
+                w: 3,
+                decision: Decision { upload: true, rule_triggered: true },
+                lhs: 0.1f64 + 0.2f64,
+                loss: 0.75,
+                grad_evals: 11,
+                payload: payload.clone(),
+            });
+            let mut buf = Vec::new();
+            encode(&msg, &mut buf);
+            let view = decode_step_view(&buf).unwrap();
+            assert_eq!(view.w, 3);
+            assert_eq!(
+                view.decision,
+                Decision { upload: true, rule_triggered: true }
+            );
+            assert_eq!(view.lhs.to_bits(), (0.1f64 + 0.2f64).to_bits());
+            assert_eq!(view.loss.to_bits(), 0.75f32.to_bits());
+            assert_eq!(view.grad_evals, 11);
+            // accounting mirrors the owned payload exactly
+            assert_eq!(view.payload.dim(), payload.dim());
+            assert_eq!(view.payload.raw_bytes(), payload.raw_bytes());
+            assert_eq!(
+                view.payload.encoded_bytes(),
+                payload.encoded_bytes()
+            );
+            // materialisation and in-place decompression both equal the
+            // owned path, bit for bit
+            assert_eq!(view.payload.to_payload().unwrap(), payload);
+            let dense = view.payload.decompress().unwrap();
+            let want = payload.decompress().unwrap();
+            assert_eq!(dense.len(), want.len());
+            for (a, b) in dense.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn step_view_rejects_what_the_owned_decoder_rejects() {
+        // wrong message kind
+        let mut hello = Vec::new();
+        encode(&Msg::Hello { n: 1, fp: 2, p: 3 }, &mut hello);
+        let err = decode_step_view(&hello).unwrap_err();
+        assert!(err.to_string().contains("expected a step frame"), "{err}");
+        // trailing garbage and truncation
+        let mut buf = Vec::new();
+        encode(
+            &Msg::Step(WireStep {
+                w: 0,
+                decision: Decision { upload: true, rule_triggered: false },
+                lhs: 1.0,
+                loss: 0.5,
+                grad_evals: 1,
+                payload: Payload::Sparse {
+                    p: 8,
+                    idx: vec![2, 3],
+                    val: vec![1.0, -1.0],
+                },
+            }),
+            &mut buf,
+        );
+        assert!(decode_step_view(&buf).is_ok());
+        for cut in 0..buf.len() {
+            assert!(decode_step_view(&buf[..cut]).is_err());
+        }
+        buf.push(0xFF);
+        assert!(decode_step_view(&buf).is_err());
+        buf.pop();
+        // a structurally invalid sparse body parses as a view but fails
+        // at materialisation time — same gate the owned decoder applies
+        let descending_idx_at = buf.len() - 16; // idx[0] of k=2 pairs
+        buf[descending_idx_at..descending_idx_at + 4]
+            .copy_from_slice(&7u32.to_le_bytes());
+        let view = decode_step_view(&buf).unwrap();
+        assert!(view.payload.validate().is_err());
+        assert!(view.payload.to_payload().is_err());
+        assert!(view.payload.decompress().is_err());
+        assert!(decode(&buf).is_err());
     }
 
     #[test]

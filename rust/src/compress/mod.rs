@@ -325,6 +325,83 @@ impl Payload {
             }
         })
     }
+
+    /// Like [`Payload::decompress`], but consumes the payload: a dense
+    /// payload gives back its vector by move (the server absorb path —
+    /// no clone of a p-sized buffer per upload), the compressed forms
+    /// decompress as usual.
+    pub fn into_dense(self) -> anyhow::Result<Vec<f32>> {
+        match self {
+            Payload::Dense(v) => Ok(v),
+            other => other.decompress(),
+        }
+    }
+
+    /// Borrow this payload for zero-copy wire encoding.
+    pub fn as_payload_ref(&self) -> PayloadRef<'_> {
+        match self {
+            Payload::Dense(v) => PayloadRef::Dense(v),
+            Payload::Sparse { p, idx, val } => {
+                PayloadRef::Sparse { p: *p, idx, val }
+            }
+            Payload::Quant { p, bits, scale, codes } => PayloadRef::Quant {
+                p: *p,
+                bits: *bits,
+                scale: *scale,
+                codes,
+            },
+        }
+    }
+}
+
+/// A borrowed [`Payload`]: what the wire encoder writes from. Workers
+/// build one straight over their innovation/compressor buffers
+/// (`PayloadRef::Dense(state.last_delta())` for identity uploads), so
+/// encoding a step frame never copies a p-sized vector first. The wire
+/// encoder guarantees byte-identity with encoding the equivalent owned
+/// [`Payload`].
+#[derive(Clone, Copy, Debug)]
+pub enum PayloadRef<'a> {
+    /// uncompressed f32 innovation (also the skip-round empty payload)
+    Dense(&'a [f32]),
+    /// top-k sparsification: strictly increasing indices + their values
+    Sparse { p: u32, idx: &'a [u32], val: &'a [f32] },
+    /// b-bit quantization, packed codes borrowed from the compressor
+    Quant { p: u32, bits: u8, scale: f32, codes: &'a [u8] },
+}
+
+impl PayloadRef<'_> {
+    /// Bytes this payload occupies inside a wire Step frame (mirrors
+    /// [`Payload::encoded_bytes`]).
+    pub fn encoded_bytes(&self) -> u64 {
+        match self {
+            PayloadRef::Dense(v) => 1 + 4 + 4 * v.len() as u64,
+            PayloadRef::Sparse { idx, .. } => {
+                Payload::sparse_bytes(idx.len())
+            }
+            PayloadRef::Quant { p, bits, .. } => {
+                Payload::quant_bytes(*p as usize, *bits as u32)
+            }
+        }
+    }
+
+    /// Clone into an owned [`Payload`] (tests / non-hot paths).
+    pub fn to_payload(&self) -> Payload {
+        match self {
+            PayloadRef::Dense(v) => Payload::Dense(v.to_vec()),
+            PayloadRef::Sparse { p, idx, val } => Payload::Sparse {
+                p: *p,
+                idx: idx.to_vec(),
+                val: val.to_vec(),
+            },
+            PayloadRef::Quant { p, bits, scale, codes } => Payload::Quant {
+                p: *p,
+                bits: *bits,
+                scale: *scale,
+                codes: codes.to_vec(),
+            },
+        }
+    }
 }
 
 /// Keep the k largest-|x| coordinates. Ties break toward the lower
@@ -349,12 +426,14 @@ fn top_k(x: &[f32], k: usize) -> Payload {
     Payload::Sparse { p: x.len() as u32, idx: order, val }
 }
 
-/// Center code of the symmetric (2^b - 1)-level grid.
-fn quant_bias(bits: u8) -> f32 {
+/// Center code of the symmetric (2^b - 1)-level grid. `pub(crate)` so
+/// the wire decode view can unpack quant codes in place without first
+/// copying them into an owned [`Payload`].
+pub(crate) fn quant_bias(bits: u8) -> f32 {
     ((1u32 << bits) - 2) as f32 / 2.0
 }
 
-fn read_code(codes: &[u8], bits: u8, i: usize) -> u32 {
+pub(crate) fn read_code(codes: &[u8], bits: u8, i: usize) -> u32 {
     let bit = i * bits as usize;
     let (byte, off) = (bit / 8, bit % 8);
     let lo = (codes[byte] as u32) >> off;

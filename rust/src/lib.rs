@@ -122,6 +122,26 @@
 //!   backend-owned scratch, so steady-state rounds allocate nothing.
 //!   Pinned against the retained sample-at-a-time reference by the
 //!   comparator tests in [`runtime::native`].
+//! * **SIMD kernels** — the `simd` cargo feature dispatches the hot
+//!   tensor kernels ([`tensor::dot`], [`tensor::sqnorm_diff`],
+//!   [`tensor::axpy`], [`tensor::gemv_block`], [`tensor::ger_acc`],
+//!   [`tensor::amsgrad_update`], the fused sigmoid+softplus, …) to
+//!   explicit 8-lane implementations in [`tensor::simd`] (AVX where the
+//!   CPU has it, a portable 8-lane form otherwise); `CADA_SIMD=0` (or
+//!   `off`/`false`/`scalar`) opts back out at runtime. Every kernel
+//!   keeps its scalar *golden twin* in [`tensor::scalar`]: elementwise
+//!   kernels preserve the scalar expression tree (no FMA contraction)
+//!   and are **bit-identical** across sets; reductions use one
+//!   documented fixed 8-lane combine order (portable == AVX
+//!   bit-for-bit) and are comparator-pinned against the scalar twin to
+//!   reduction tolerance — dispatch is process-wide and uniform, so any
+//!   run is self-consistent and the golden transport/shard parity
+//!   suites hold under both feature configs in CI (comparator tests pin
+//!   every kernel at remainder-lane edge sizes). [`tensor::simd_active`]
+//!   reports what a
+//!   build actually dispatches; [`comm::WireStats`] separately times
+//!   the wire codec (header encode / step decode wall time) so socket
+//!   runs show where round latency goes.
 //! * **device compute time** — `[train.cost_model] compute_s` (base
 //!   per-round device seconds) with per-worker `[comm.links]
 //!   compute_mult` multipliers: an upload's simulated arrival is

@@ -424,9 +424,10 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<()> {
     let regressed = cada::bench::regressions(&deltas, max_regress);
     anyhow::ensure!(
         regressed.is_empty(),
-        "median regression beyond {:.0}% on: {}",
+        "median regression beyond {:.0}% on {} bench(es):\n{}",
         max_regress * 100.0,
-        regressed.join(", ")
+        regressed.len(),
+        cada::bench::regression_report(&deltas, max_regress)
     );
     println!("\nbench-check ok: {} benches compared, none regressed",
              deltas.len());

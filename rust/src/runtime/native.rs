@@ -51,21 +51,11 @@ fn sigmoid(z: f32) -> f32 {
 }
 
 /// Fused logistic pair: (sigmoid(z), softplus(z)) from ONE exponential.
-///
-/// With `t = e^{-|z|}` (the only transcendental):
-/// `softplus(z) = max(z, 0) + ln1p(t)` — exactly the standalone
-/// [`softplus`] — and `sigmoid(z) = 1/(1+t)` for `z >= 0`, `t/(1+t)`
-/// for `z < 0`. For `z >= 0` the sigmoid is bit-identical to the
-/// historical `1/(1+e^{-z})`; for `z < 0` it differs in the last ulps
-/// (same mathematical value, better conditioning), which the comparator
-/// test bounds.
-#[inline]
-pub fn sigmoid_softplus(z: f32) -> (f32, f32) {
-    let t = (-z.abs()).exp();
-    let sp = z.max(0.0) + t.ln_1p();
-    let sig = if z >= 0.0 { 1.0 / (1.0 + t) } else { t / (1.0 + t) };
-    (sig, sp)
-}
+/// The kernel now lives in [`tensor::scalar`] (it is the scalar twin of
+/// the dispatched block form [`tensor::sigmoid_softplus_block`], which
+/// the blocked gradient path below uses); re-exported here because this
+/// backend is its historical home and the comparator tests pin it here.
+pub use crate::tensor::sigmoid_softplus;
 
 /// Binary logistic regression with l2 regularisation, flat layout
 /// `[b, w...]` padded to `p_pad`.
@@ -82,6 +72,10 @@ pub struct NativeLogReg {
     z_buf: Vec<f32>,
     /// scratch: one block of residuals `(sigmoid(z) - y) / n`
     r_buf: Vec<f32>,
+    /// scratch: one block of fused sigmoids (pass 2a block activations)
+    sig_buf: Vec<f32>,
+    /// scratch: one block of fused softplus values
+    sp_buf: Vec<f32>,
 }
 
 impl NativeLogReg {
@@ -97,6 +91,8 @@ impl NativeLogReg {
             eps,
             z_buf: vec![0.0; GRAD_BLOCK],
             r_buf: vec![0.0; GRAD_BLOCK],
+            sig_buf: vec![0.0; GRAD_BLOCK],
+            sp_buf: vec![0.0; GRAD_BLOCK],
         }
     }
 
@@ -152,16 +148,24 @@ impl NativeLogReg {
             // pass 1: the block's raw logits X·w (z_buf[i] + b below)
             tensor::gemv_block(&mut self.z_buf[..nb], xb, w);
             if let Some(g) = grad.as_deref_mut() {
+                // pass 2a: fold the bias into the block's logits, then
+                // ONE exponential per sample yields both activations —
+                // the dispatched block kernel, bit-identical to calling
+                // the fused scalar helper per sample
+                for z in self.z_buf[..nb].iter_mut() {
+                    *z += b;
+                }
+                tensor::sigmoid_softplus_block(&self.z_buf[..nb],
+                                               &mut self.sig_buf[..nb],
+                                               &mut self.sp_buf[..nb]);
                 for (i, &yi) in y[lo..hi].iter().enumerate() {
-                    let z = self.z_buf[i] + b;
+                    let z = self.z_buf[i];
                     let yf = yi as f32;
-                    // pass 2a: ONE exponential yields both activations
-                    let (sig, sp) = sigmoid_softplus(z);
-                    loss += sp - yf * z;
+                    loss += self.sp_buf[i] - yf * z;
                     if ((z > 0.0) as i32) == yi {
                         correct += 1.0;
                     }
-                    let r = (sig - yf) * inv_n;
+                    let r = (self.sig_buf[i] - yf) * inv_n;
                     self.r_buf[i] = r;
                     g[0] += r;
                 }

@@ -293,6 +293,18 @@ pub fn render_wire_stats(algo: &str,
             wire.upload_raw_bytes as f64 / wire.upload_wire_bytes as f64,
         ));
     }
+    // server-side codec wall time (encode headers / decode steps),
+    // separate from socket I/O: how much of a round the wire format
+    // itself costs. Untouched stats (unit tests, fresh servers) render
+    // nothing
+    if wire.header_encode_ns > 0 || wire.step_decode_ns > 0 {
+        out.push_str(&format!(
+            "  codec time:        {:>12.3} ms encode headers, \
+             {:.3} ms decode steps\n",
+            wire.header_encode_ns as f64 / 1e6,
+            wire.step_decode_ns as f64 / 1e6,
+        ));
+    }
     out
 }
 
@@ -463,6 +475,8 @@ mod tests {
             snapshot_range_bytes: 15 * 4096,
             upload_raw_bytes: 0,
             upload_wire_bytes: 0,
+            header_encode_ns: 0,
+            step_decode_ns: 0,
         };
         let t = render_wire_stats("cada1", &wire);
         assert!(t.contains("60 rounds"), "{t}");
@@ -470,6 +484,19 @@ mod tests {
         assert!(t.contains("15 snapshot ranges"), "{t}");
         // no compression -> no payload-ratio line
         assert!(!t.contains("compression"), "{t}");
+        // untouched codec timers -> no codec line
+        assert!(!t.contains("codec time"), "{t}");
+
+        // measured codec wall time renders in milliseconds
+        let timed = crate::comm::WireStats {
+            header_encode_ns: 2_500_000,
+            step_decode_ns: 750_000,
+            ..wire
+        };
+        let t = render_wire_stats("cada1", &timed);
+        assert!(t.contains("codec time"), "{t}");
+        assert!(t.contains("2.500 ms encode headers"), "{t}");
+        assert!(t.contains("0.750 ms decode steps"), "{t}");
 
         let compressed = crate::comm::WireStats {
             upload_raw_bytes: 40_000,

@@ -7,42 +7,65 @@
 //! HLO/Pallas numerics in integration tests, and (c) by the native grad
 //! backend for pure-rust sweeps.
 //!
-//! Loops are written 4-way unrolled over exact chunks so LLVM reliably
-//! autovectorises them; the remainder loop handles the tail (p_pad is a
-//! multiple of 1024, but the functions stay correct for any length).
+//! # Two kernel sets, one dispatch
+//!
+//! Each public kernel here dispatches between two implementations:
+//!
+//! * [`scalar`] — the golden reference: 4-way unrolled loops whose float
+//!   association order is part of the documented contract. This is the
+//!   DEFAULT (the `simd` cargo feature is off by default).
+//! * [`simd`] — explicit 8-lane (`f32x8`) kernels: AVX intrinsics on
+//!   x86_64 with a bit-identical portable emulation elsewhere. Selected
+//!   only when the crate is built with `--features simd` AND the
+//!   `CADA_SIMD` env knob doesn't opt out ([`simd::enabled`]).
+//!
+//! **Scalar-twin policy** (the PR-3/PR-4 determinism trades, extended):
+//! elementwise kernels ([`axpy`], [`scale`], [`sub_into`], [`ger_acc`],
+//! [`amsgrad_update`], [`sigmoid_softplus_block`]) are bit-identical
+//! across the two sets; reductions ([`dot`], [`sqnorm`],
+//! [`sqnorm_diff`], [`gemv_block`]'s row dots) differ — 4 accumulator
+//! lanes vs a documented fixed 8-lane order — and are comparator-pinned:
+//! bit-for-bit against an inline fixed-order twin, tolerance-bounded
+//! against the scalar twin (see `simd`'s module docs). Dispatch is
+//! process-wide and uniform, so any single run is self-consistent and
+//! the golden run-vs-run parity suites (transports, shard counts) hold
+//! under either kernel set.
 //!
 //! [`gemv_block`] / [`ger_acc`] are the batch-level kernels of the
 //! native backend's blocked gradient path: one pass computing a sample
-//! block's logits (bit-identical to per-row [`dot`]), one pass folding
-//! the residuals into the gradient with a fixed, documented group-of-4
-//! accumulation order (pinned by the comparator tests in
-//! [`crate::runtime::native`]).
+//! block's logits (bit-identical to per-row [`dot`] *of the active
+//! set*), one pass folding the residuals into the gradient with a fixed,
+//! documented group-of-4 accumulation order (pinned by the comparator
+//! tests in [`crate::runtime::native`]).
+
+pub mod scalar;
+pub mod simd;
+
+/// True when kernel calls dispatch to the [`simd`] set. `cfg!` makes
+/// the whole check const-false (and the branch dead) without the `simd`
+/// feature; with it, the cached [`simd::enabled`] knob decides once per
+/// process.
+#[inline]
+pub fn simd_active() -> bool {
+    cfg!(feature = "simd") && simd::enabled()
+}
 
 /// y += a * x
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
-    assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += a * *xi;
+    if simd_active() {
+        simd::axpy(y, a, x)
+    } else {
+        scalar::axpy(y, a, x)
     }
 }
 
 /// dot product
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
+    if simd_active() {
+        simd::dot(a, b)
+    } else {
+        scalar::dot(a, b)
     }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..a.len() {
-        s += a[j] * b[j];
-    }
-    s
 }
 
 /// ||x||^2
@@ -53,26 +76,11 @@ pub fn sqnorm(x: &[f32]) -> f32 {
 /// ||a - b||^2 — the innovation norm, LHS of rules (5)/(7)/(10).
 /// Single fused pass (no temporary difference vector).
 pub fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
-    assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        let d0 = a[j] - b[j];
-        let d1 = a[j + 1] - b[j + 1];
-        let d2 = a[j + 2] - b[j + 2];
-        let d3 = a[j + 3] - b[j + 3];
-        acc[0] += d0 * d0;
-        acc[1] += d1 * d1;
-        acc[2] += d2 * d2;
-        acc[3] += d3 * d3;
+    if simd_active() {
+        simd::sqnorm_diff(a, b)
+    } else {
+        scalar::sqnorm_diff(a, b)
     }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..a.len() {
-        let d = a[j] - b[j];
-        s += d * d;
-    }
-    s
 }
 
 /// Rows per fixed accumulation group of [`ger_acc`]. The blocked
@@ -85,45 +93,16 @@ pub const GER_GROUP: usize = 4;
 /// every row `i` of the row-major sample block `x` (`d = w.len()`).
 ///
 /// Rows are processed two at a time so one streamed read of `w` feeds
-/// two dot products, but each row's accumulation follows [`dot`]'s exact
-/// order (four f32 lanes over the 4-chunks, lanes summed left to right,
-/// then the scalar tail) — rows are independent, so every `z[i]` is
+/// two dot products, but each row's accumulation follows the active
+/// set's [`dot`] exactly — rows are independent, so every `z[i]` is
 /// bit-identical to `dot(&x[i*d..(i+1)*d], w)` whatever the row
-/// blocking. Pinned by `gemv_block_bit_equals_per_row_dot`.
+/// blocking. Pinned by `gemv_block_bit_equals_per_row_dot` (which runs
+/// under whichever set is dispatched).
 pub fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
-    let d = w.len();
-    assert_eq!(x.len(), z.len() * d);
-    let rows = z.len();
-    let chunks = d / 4;
-    let mut i = 0;
-    while i + 1 < rows {
-        let x0 = &x[i * d..(i + 1) * d];
-        let x1 = &x[(i + 1) * d..(i + 2) * d];
-        let mut a0 = [0.0f32; 4];
-        let mut a1 = [0.0f32; 4];
-        for c in 0..chunks {
-            let j = c * 4;
-            a0[0] += x0[j] * w[j];
-            a0[1] += x0[j + 1] * w[j + 1];
-            a0[2] += x0[j + 2] * w[j + 2];
-            a0[3] += x0[j + 3] * w[j + 3];
-            a1[0] += x1[j] * w[j];
-            a1[1] += x1[j + 1] * w[j + 1];
-            a1[2] += x1[j + 2] * w[j + 2];
-            a1[3] += x1[j + 3] * w[j + 3];
-        }
-        let mut s0 = a0[0] + a0[1] + a0[2] + a0[3];
-        let mut s1 = a1[0] + a1[1] + a1[2] + a1[3];
-        for j in chunks * 4..d {
-            s0 += x0[j] * w[j];
-            s1 += x1[j] * w[j];
-        }
-        z[i] = s0;
-        z[i + 1] = s1;
-        i += 2;
-    }
-    if i < rows {
-        z[i] = dot(&x[i * d..(i + 1) * d], w);
+    if simd_active() {
+        simd::gemv_block(z, x, w)
+    } else {
+        scalar::gemv_block(z, x, w)
     }
 }
 
@@ -137,55 +116,42 @@ pub fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
 /// `g[j] += (r0*x0[j] + r1*x1[j]) + (r2*x2[j] + r3*x3[j])`;
 /// trailing rows (< 4) fold one at a time in row order. One read-write
 /// pass over `g` per group instead of one per row is where the win
-/// comes from. NOTE: this is a different float summation order than the
-/// historical sample-at-a-time `axpy` loop — a deliberate PR-3-style
-/// determinism trade (the old order is retained as
-/// `NativeLogReg::loss_grad_scalar` for tolerance comparison).
+/// comes from; both kernel sets share this exact order (the simd set
+/// vectorises across coordinates, bit-identically). NOTE: this is a
+/// different float summation order than the historical sample-at-a-time
+/// `axpy` loop — a deliberate PR-3-style determinism trade (the old
+/// order is retained as `NativeLogReg::loss_grad_scalar` for tolerance
+/// comparison).
 pub fn ger_acc(g: &mut [f32], x: &[f32], r: &[f32]) {
-    let d = g.len();
-    assert_eq!(x.len(), r.len() * d);
-    let rows = r.len();
-    let groups = rows / GER_GROUP;
-    for gi in 0..groups {
-        let i = gi * GER_GROUP;
-        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
-        let x0 = &x[i * d..(i + 1) * d];
-        let x1 = &x[(i + 1) * d..(i + 2) * d];
-        let x2 = &x[(i + 2) * d..(i + 3) * d];
-        let x3 = &x[(i + 3) * d..(i + 4) * d];
-        for j in 0..d {
-            g[j] +=
-                (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
-        }
-    }
-    for i in groups * GER_GROUP..rows {
-        let ri = r[i];
-        let xi = &x[i * d..(i + 1) * d];
-        for j in 0..d {
-            g[j] += ri * xi[j];
-        }
+    if simd_active() {
+        simd::ger_acc(g, x, r)
+    } else {
+        scalar::ger_acc(g, x, r)
     }
 }
 
 /// out = a - b
 pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
-    assert_eq!(out.len(), a.len());
-    assert_eq!(a.len(), b.len());
-    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
-        *o = x - y;
+    if simd_active() {
+        simd::sub_into(out, a, b)
+    } else {
+        scalar::sub_into(out, a, b)
     }
 }
 
 /// x *= a
 pub fn scale(x: &mut [f32], a: f32) {
-    for v in x.iter_mut() {
-        *v *= a;
+    if simd_active() {
+        simd::scale(x, a)
+    } else {
+        scalar::scale(x, a)
     }
 }
 
 /// Native fused AMSGrad/CADA step — the rust twin of the Pallas
 /// `cada_update` kernel (paper Eq. 2a–2c), used as its comparator and as
-/// the fast in-process update backend.
+/// the fast in-process update backend. Bit-identical across kernel sets
+/// for finite inputs.
 #[allow(clippy::too_many_arguments)]
 pub fn amsgrad_update(
     theta: &mut [f32],
@@ -197,17 +163,26 @@ pub fn amsgrad_update(
     beta2: f32,
     eps: f32,
 ) {
-    assert_eq!(theta.len(), h.len());
-    assert_eq!(theta.len(), vhat.len());
-    assert_eq!(theta.len(), grad.len());
-    for i in 0..theta.len() {
-        let g = grad[i];
-        let h_new = beta1 * h[i] + (1.0 - beta1) * g;
-        let v_new = beta2 * vhat[i] + (1.0 - beta2) * g * g;
-        let vhat_new = v_new.max(vhat[i]);
-        theta[i] -= alpha * h_new / (eps + vhat_new).sqrt();
-        h[i] = h_new;
-        vhat[i] = vhat_new;
+    if simd_active() {
+        simd::amsgrad_update(theta, h, vhat, grad, alpha, beta1, beta2, eps)
+    } else {
+        scalar::amsgrad_update(theta, h, vhat, grad, alpha, beta1, beta2, eps)
+    }
+}
+
+/// Fused logistic pair: (sigmoid(z), softplus(z)) from ONE exponential
+/// (see [`scalar::sigmoid_softplus`] for the numerics). Single-value
+/// form — no dispatch (there is nothing to vectorise at width 1).
+pub use scalar::sigmoid_softplus;
+
+/// Block form of [`sigmoid_softplus`]: activation pairs for a whole
+/// logits block, in element order. Bit-identical across kernel sets
+/// (the transcendentals stay scalar per lane by policy).
+pub fn sigmoid_softplus_block(z: &[f32], sig: &mut [f32], sp: &mut [f32]) {
+    if simd_active() {
+        simd::sigmoid_softplus_block(z, sig, sp)
+    } else {
+        scalar::sigmoid_softplus_block(z, sig, sp)
     }
 }
 
@@ -262,6 +237,33 @@ mod tests {
         let mut d = vec![0.0; a.len()];
         sub_into(&mut d, &a, &b);
         approx(sqnorm_diff(&a, &b), sqnorm(&d), 1e-5);
+    }
+
+    /// Whichever set is dispatched, the dispatched kernels agree with
+    /// the scalar golden twins: exactly for the elementwise ones, to
+    /// reduction tolerance for the rest. (The bit-level pins per set
+    /// live in `simd::tests`.)
+    #[test]
+    fn dispatched_kernels_match_scalar_twins() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let n = 1025;
+        let a: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        let mut y0 = b.clone();
+        let mut y1 = b.clone();
+        scalar::axpy(&mut y0, 0.37, &a);
+        axpy(&mut y1, 0.37, &a);
+        assert_eq!(y0, y1);
+
+        let mut o0 = vec![0.0; n];
+        let mut o1 = vec![0.0; n];
+        scalar::sub_into(&mut o0, &a, &b);
+        sub_into(&mut o1, &a, &b);
+        assert_eq!(o0, o1);
+
+        approx(dot(&a, &b), scalar::dot(&a, &b), 1e-4);
+        approx(sqnorm_diff(&a, &b), scalar::sqnorm_diff(&a, &b), 1e-4);
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! The scalar golden twins of every dispatched tensor kernel.
+//!
+//! These are the pre-SIMD kernel bodies, moved here verbatim when the
+//! dispatch layer landed: 4-way unrolled loops that LLVM autovectorises,
+//! with the remainder loop handling the tail. They are the *reference
+//! semantics* of the crate — every [`super::simd`] kernel is pinned
+//! against its twin here by the comparator tests (bit-identical for the
+//! elementwise kernels, fixed-order-twin + tolerance for the
+//! reductions), exactly like the PR-3/PR-4 determinism trades.
+//!
+//! Do not "optimise" these: their float association order is part of the
+//! documented contract.
+
+use super::GER_GROUP;
+
+/// y += a * x
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// dot product — four f32 accumulator lanes over the 4-chunks, lanes
+/// summed left to right, then the scalar tail in element order.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// ||x||^2
+pub fn sqnorm(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// ||a - b||^2 — single fused pass, same lane structure as [`dot`].
+pub fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// Blocked GEMV logits pass — rows two at a time, each row accumulated
+/// in [`dot`]'s exact order, so every `z[i]` is bit-identical to
+/// `dot(&x[i*d..(i+1)*d], w)`.
+pub fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
+    let d = w.len();
+    assert_eq!(x.len(), z.len() * d);
+    let rows = z.len();
+    let chunks = d / 4;
+    let mut i = 0;
+    while i + 1 < rows {
+        let x0 = &x[i * d..(i + 1) * d];
+        let x1 = &x[(i + 1) * d..(i + 2) * d];
+        let mut a0 = [0.0f32; 4];
+        let mut a1 = [0.0f32; 4];
+        for c in 0..chunks {
+            let j = c * 4;
+            a0[0] += x0[j] * w[j];
+            a0[1] += x0[j + 1] * w[j + 1];
+            a0[2] += x0[j + 2] * w[j + 2];
+            a0[3] += x0[j + 3] * w[j + 3];
+            a1[0] += x1[j] * w[j];
+            a1[1] += x1[j + 1] * w[j + 1];
+            a1[2] += x1[j + 2] * w[j + 2];
+            a1[3] += x1[j + 3] * w[j + 3];
+        }
+        let mut s0 = a0[0] + a0[1] + a0[2] + a0[3];
+        let mut s1 = a1[0] + a1[1] + a1[2] + a1[3];
+        for j in chunks * 4..d {
+            s0 += x0[j] * w[j];
+            s1 += x1[j] * w[j];
+        }
+        z[i] = s0;
+        z[i + 1] = s1;
+        i += 2;
+    }
+    if i < rows {
+        z[i] = dot(&x[i * d..(i + 1) * d], w);
+    }
+}
+
+/// Blocked rank-accumulation `g += Xᵀ r` with the FIXED documented
+/// order: rows fold in groups of [`GER_GROUP`] = 4 (in row order), and
+/// within a group each coordinate accumulates
+/// `g[j] += (r0*x0[j] + r1*x1[j]) + (r2*x2[j] + r3*x3[j])`;
+/// trailing rows (< 4) fold one at a time in row order.
+pub fn ger_acc(g: &mut [f32], x: &[f32], r: &[f32]) {
+    let d = g.len();
+    assert_eq!(x.len(), r.len() * d);
+    let rows = r.len();
+    let groups = rows / GER_GROUP;
+    for gi in 0..groups {
+        let i = gi * GER_GROUP;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &x[i * d..(i + 1) * d];
+        let x1 = &x[(i + 1) * d..(i + 2) * d];
+        let x2 = &x[(i + 2) * d..(i + 3) * d];
+        let x3 = &x[(i + 3) * d..(i + 4) * d];
+        for j in 0..d {
+            g[j] +=
+                (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in groups * GER_GROUP..rows {
+        let ri = r[i];
+        let xi = &x[i * d..(i + 1) * d];
+        for j in 0..d {
+            g[j] += ri * xi[j];
+        }
+    }
+}
+
+/// out = a - b
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(a.len(), b.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = x - y;
+    }
+}
+
+/// x *= a
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Fused AMSGrad/CADA step (paper Eq. 2a–2c), per element:
+/// `h' = beta1*h + (1-beta1)*g`, `v = beta2*vhat + (1-beta2)*g*g`,
+/// `vhat' = max(v, vhat)`, `theta -= alpha*h' / sqrt(eps + vhat')`.
+#[allow(clippy::too_many_arguments)]
+pub fn amsgrad_update(
+    theta: &mut [f32],
+    h: &mut [f32],
+    vhat: &mut [f32],
+    grad: &[f32],
+    alpha: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+) {
+    assert_eq!(theta.len(), h.len());
+    assert_eq!(theta.len(), vhat.len());
+    assert_eq!(theta.len(), grad.len());
+    for i in 0..theta.len() {
+        let g = grad[i];
+        let h_new = beta1 * h[i] + (1.0 - beta1) * g;
+        let v_new = beta2 * vhat[i] + (1.0 - beta2) * g * g;
+        let vhat_new = v_new.max(vhat[i]);
+        theta[i] -= alpha * h_new / (eps + vhat_new).sqrt();
+        h[i] = h_new;
+        vhat[i] = vhat_new;
+    }
+}
+
+/// Fused logistic pair: (sigmoid(z), softplus(z)) from ONE exponential.
+///
+/// With `t = e^{-|z|}` (the only transcendental):
+/// `softplus(z) = max(z, 0) + ln1p(t)` and `sigmoid(z) = 1/(1+t)` for
+/// `z >= 0`, `t/(1+t)` for `z < 0`. For `z >= 0` the sigmoid is
+/// bit-identical to the historical `1/(1+e^{-z})`; for `z < 0` it
+/// differs in the last ulps (same mathematical value, better
+/// conditioning), which the comparator test in `runtime::native` bounds.
+#[inline]
+pub fn sigmoid_softplus(z: f32) -> (f32, f32) {
+    let t = (-z.abs()).exp();
+    let sp = z.max(0.0) + t.ln_1p();
+    let sig = if z >= 0.0 { 1.0 / (1.0 + t) } else { t / (1.0 + t) };
+    (sig, sp)
+}
+
+/// Block form of [`sigmoid_softplus`]: one fused activation pair per
+/// element of `z`, in element order. Bit-identical to calling the scalar
+/// helper per element (it does exactly that).
+pub fn sigmoid_softplus_block(z: &[f32], sig: &mut [f32], sp: &mut [f32]) {
+    assert_eq!(z.len(), sig.len());
+    assert_eq!(z.len(), sp.len());
+    for i in 0..z.len() {
+        let (s, p) = sigmoid_softplus(z[i]);
+        sig[i] = s;
+        sp[i] = p;
+    }
+}

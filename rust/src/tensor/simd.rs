@@ -1,0 +1,922 @@
+//! Explicit 8-lane SIMD kernels for the tensor hot path.
+//!
+//! Every kernel here is the `f32x8` twin of a scalar golden reference in
+//! [`super::scalar`], selected by the dispatch layer in [`super`] when
+//! the `simd` cargo feature is on (runtime opt-out: `CADA_SIMD=0`). Two
+//! implementations back each kernel:
+//!
+//! * [`avx`] (x86_64 only): `core::arch` AVX intrinsics behind
+//!   `is_x86_feature_detected!("avx")` — f32 mul/add/sub/div/sqrt/max
+//!   are all IEEE-754 single operations on AVX (no FMA contraction
+//!   anywhere in this module), so lane arithmetic is exact.
+//! * [`portable`]: plain-rust 8-lane emulation with the *same expression
+//!   tree per lane*, so the two paths produce **identical bits** on any
+//!   hardware — pinned by the `avx_and_portable_agree_bit_for_bit`
+//!   comparator. Results never depend on which machine ran the kernel.
+//!
+//! # Determinism contract (the PR-3/PR-4-style trade, restated)
+//!
+//! **Elementwise kernels** (`axpy`, `scale`, `sub_into`, `ger_acc`,
+//! `amsgrad_update`, `sigmoid_softplus_block`) keep the scalar twin's
+//! per-element expression tree and are **bit-identical** to it. Caveat:
+//! `amsgrad_update`'s max emulates AVX `vmaxps` (returns the second
+//! operand on NaN or equality), which differs from `f32::max` only for
+//! NaN gradients — outside the kernel contract (gradients are finite).
+//!
+//! **Reductions** (`dot`, `sqnorm`, `sqnorm_diff`, and `gemv_block`'s
+//! per-row dots) necessarily change the float association order: the
+//! scalar twins accumulate in 4 lanes, these kernels in 8. The 8-lane
+//! order is FIXED and documented — one 8-lane accumulator `acc[l]` over
+//! the 8-chunks (lane `l` takes elements `j*8 + l`), then
+//! `q[l] = acc[l] + acc[l+4]` for `l = 0..4`, then
+//! `((q0 + q1) + q2) + q3`, then the scalar tail folds in element
+//! order — implemented identically by both backends and pinned
+//! bit-for-bit by an inline fixed-order twin in the comparator tests;
+//! agreement with the scalar twin is tolerance-bounded. Golden parity
+//! across transports/shards is unaffected: every consumer dispatches
+//! uniformly, so run-vs-run comparisons see one consistent order.
+//!
+//! # Unsafe policy
+//!
+//! The only `unsafe` here is the AVX path: `#[target_feature]` fns
+//! (callers check [`avx::available`] first) doing unaligned
+//! loads/stores through raw pointers whose bounds are established from
+//! slice lengths immediately above each loop. This extends the crate's
+//! audited-unsafe inventory (previously two sites in
+//! `coordinator::pool`).
+
+use super::GER_GROUP;
+use std::sync::OnceLock;
+
+/// SIMD vector width in f32 lanes. Both backends are exactly this wide.
+pub const LANES: usize = 8;
+
+/// Runtime dispatch knob: true unless `CADA_SIMD` is set to
+/// `0`/`off`/`false`/`scalar`. Cached after the first read — flipping
+/// the env var mid-process has no effect (by design: a run uses ONE
+/// kernel set, keeping its floats self-consistent).
+pub fn enabled() -> bool {
+    static KNOB: OnceLock<bool> = OnceLock::new();
+    *KNOB.get_or_init(|| knob_from(std::env::var("CADA_SIMD").ok().as_deref()))
+}
+
+fn knob_from(v: Option<&str>) -> bool {
+    !matches!(
+        v.unwrap_or("").trim().to_ascii_lowercase().as_str(),
+        "0" | "off" | "false" | "scalar"
+    )
+}
+
+/// The documented fixed reduction order for the 8 accumulator lanes:
+/// pairwise fold of lane `l` with lane `l+4`, then a left-to-right sum
+/// of the four partials. Shared by both backends (the AVX kernels store
+/// their accumulator register and reduce through this exact function).
+#[inline]
+fn combine8(acc: [f32; LANES]) -> f32 {
+    let q0 = acc[0] + acc[4];
+    let q1 = acc[1] + acc[5];
+    let q2 = acc[2] + acc[6];
+    let q3 = acc[3] + acc[7];
+    ((q0 + q1) + q2) + q3
+}
+
+/// `vmaxps` semantics in plain rust: returns `b` when `a <= b`, when
+/// either is NaN, and on signed-zero equality — exactly what
+/// `_mm256_max_ps(a, b)` does, so portable and AVX `amsgrad_update`
+/// agree bit-for-bit on EVERY input, not just finite ones.
+#[inline]
+fn maxps(a: f32, b: f32) -> f32 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+// ---------------------------------------------------------------------
+// dispatched kernel surface (same signatures as the scalar twins)
+// ---------------------------------------------------------------------
+
+/// y += a * x (8-lane; bit-identical to the scalar twin)
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx::available() {
+        return unsafe { avx::axpy(y, a, x) };
+    }
+    portable::axpy(y, a, x);
+}
+
+/// dot product in the documented 8-lane fixed order.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx::available() {
+        return unsafe { avx::dot(a, b) };
+    }
+    portable::dot(a, b)
+}
+
+/// ||x||^2 in the documented 8-lane fixed order.
+pub fn sqnorm(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// ||a - b||^2, fused single pass, documented 8-lane fixed order.
+pub fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx::available() {
+        return unsafe { avx::sqnorm_diff(a, b) };
+    }
+    portable::sqnorm_diff(a, b)
+}
+
+/// Blocked GEMV logits pass; every `z[i]` is bit-identical to
+/// [`dot`]`(&x[i*d..(i+1)*d], w)` of THIS module (8-lane order).
+pub fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
+    let d = w.len();
+    assert_eq!(x.len(), z.len() * d);
+    #[cfg(target_arch = "x86_64")]
+    if avx::available() {
+        return unsafe { avx::gemv_block(z, x, w) };
+    }
+    portable::gemv_block(z, x, w);
+}
+
+/// Blocked `g += Xᵀ r` in the scalar twin's fixed group-of-4 order,
+/// vectorised across coordinates (bit-identical to the twin).
+pub fn ger_acc(g: &mut [f32], x: &[f32], r: &[f32]) {
+    let d = g.len();
+    assert_eq!(x.len(), r.len() * d);
+    #[cfg(target_arch = "x86_64")]
+    if avx::available() {
+        return unsafe { avx::ger_acc(g, x, r) };
+    }
+    portable::ger_acc(g, x, r);
+}
+
+/// out = a - b (8-lane; bit-identical to the scalar twin)
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx::available() {
+        return unsafe { avx::sub_into(out, a, b) };
+    }
+    portable::sub_into(out, a, b);
+}
+
+/// x *= a (8-lane; bit-identical to the scalar twin)
+pub fn scale(x: &mut [f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx::available() {
+        return unsafe { avx::scale(x, a) };
+    }
+    portable::scale(x, a);
+}
+
+/// Fused AMSGrad step, 8 coordinates per iteration. Bit-identical to
+/// the scalar twin for finite inputs (see the module docs for the
+/// `vmaxps` NaN caveat).
+#[allow(clippy::too_many_arguments)]
+pub fn amsgrad_update(
+    theta: &mut [f32],
+    h: &mut [f32],
+    vhat: &mut [f32],
+    grad: &[f32],
+    alpha: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+) {
+    assert_eq!(theta.len(), h.len());
+    assert_eq!(theta.len(), vhat.len());
+    assert_eq!(theta.len(), grad.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx::available() {
+        return unsafe {
+            avx::amsgrad_update(theta, h, vhat, grad, alpha, beta1, beta2, eps)
+        };
+    }
+    portable::amsgrad_update(theta, h, vhat, grad, alpha, beta1, beta2, eps);
+}
+
+/// Block fused logistic pair. The exponential and `ln_1p` stay scalar
+/// per lane — vectorising them would change the numerics, and the
+/// bit-identity policy wins over speed here (the kernel is
+/// transcendental-bound either way); the surrounding arithmetic is
+/// 8-lane-structured for the autovectoriser. Bit-identical to the
+/// scalar twin.
+pub fn sigmoid_softplus_block(z: &[f32], sig: &mut [f32], sp: &mut [f32]) {
+    assert_eq!(z.len(), sig.len());
+    assert_eq!(z.len(), sp.len());
+    portable::sigmoid_softplus_block(z, sig, sp);
+}
+
+// ---------------------------------------------------------------------
+// portable 8-lane backend
+// ---------------------------------------------------------------------
+
+/// Plain-rust 8-lane emulation: the bit-exact fallback for the AVX
+/// backend (and the only backend off x86_64). Per-lane expression trees
+/// match [`avx`] operation for operation.
+pub mod portable {
+    use super::{combine8, maxps, GER_GROUP, LANES};
+
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let j = c * LANES;
+            for l in 0..LANES {
+                y[j + l] += a * x[j + l];
+            }
+        }
+        for j in chunks * LANES..n {
+            y[j] += a * x[j];
+        }
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc = [0.0f32; LANES];
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let j = c * LANES;
+            for l in 0..LANES {
+                acc[l] += a[j + l] * b[j + l];
+            }
+        }
+        let mut s = combine8(acc);
+        for j in chunks * LANES..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    pub fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc = [0.0f32; LANES];
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let j = c * LANES;
+            for l in 0..LANES {
+                let d = a[j + l] - b[j + l];
+                acc[l] += d * d;
+            }
+        }
+        let mut s = combine8(acc);
+        for j in chunks * LANES..n {
+            let d = a[j] - b[j];
+            s += d * d;
+        }
+        s
+    }
+
+    pub fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
+        let d = w.len();
+        let rows = z.len();
+        let chunks = d / LANES;
+        let mut i = 0;
+        while i + 1 < rows {
+            let x0 = &x[i * d..(i + 1) * d];
+            let x1 = &x[(i + 1) * d..(i + 2) * d];
+            let mut a0 = [0.0f32; LANES];
+            let mut a1 = [0.0f32; LANES];
+            for c in 0..chunks {
+                let j = c * LANES;
+                for l in 0..LANES {
+                    a0[l] += x0[j + l] * w[j + l];
+                    a1[l] += x1[j + l] * w[j + l];
+                }
+            }
+            let mut s0 = combine8(a0);
+            let mut s1 = combine8(a1);
+            for j in chunks * LANES..d {
+                s0 += x0[j] * w[j];
+                s1 += x1[j] * w[j];
+            }
+            z[i] = s0;
+            z[i + 1] = s1;
+            i += 2;
+        }
+        if i < rows {
+            z[i] = dot(&x[i * d..(i + 1) * d], w);
+        }
+    }
+
+    pub fn ger_acc(g: &mut [f32], x: &[f32], r: &[f32]) {
+        let d = g.len();
+        let rows = r.len();
+        let groups = rows / GER_GROUP;
+        for gi in 0..groups {
+            let i = gi * GER_GROUP;
+            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+            let x0 = &x[i * d..(i + 1) * d];
+            let x1 = &x[(i + 1) * d..(i + 2) * d];
+            let x2 = &x[(i + 2) * d..(i + 3) * d];
+            let x3 = &x[(i + 3) * d..(i + 4) * d];
+            for j in 0..d {
+                g[j] += (r0 * x0[j] + r1 * x1[j])
+                    + (r2 * x2[j] + r3 * x3[j]);
+            }
+        }
+        for i in groups * GER_GROUP..rows {
+            let ri = r[i];
+            let xi = &x[i * d..(i + 1) * d];
+            for j in 0..d {
+                g[j] += ri * xi[j];
+            }
+        }
+    }
+
+    pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+        for i in 0..out.len() {
+            out[i] = a[i] - b[i];
+        }
+    }
+
+    pub fn scale(x: &mut [f32], a: f32) {
+        for v in x.iter_mut() {
+            *v *= a;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn amsgrad_update(
+        theta: &mut [f32],
+        h: &mut [f32],
+        vhat: &mut [f32],
+        grad: &[f32],
+        alpha: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+    ) {
+        let one_m_b1 = 1.0 - beta1;
+        let one_m_b2 = 1.0 - beta2;
+        for i in 0..theta.len() {
+            let g = grad[i];
+            let h_new = beta1 * h[i] + one_m_b1 * g;
+            let v_new = beta2 * vhat[i] + one_m_b2 * g * g;
+            let vhat_new = maxps(v_new, vhat[i]);
+            theta[i] -= alpha * h_new / (eps + vhat_new).sqrt();
+            h[i] = h_new;
+            vhat[i] = vhat_new;
+        }
+    }
+
+    pub fn sigmoid_softplus_block(z: &[f32], sig: &mut [f32],
+                                  sp: &mut [f32]) {
+        let n = z.len();
+        let chunks = n / LANES;
+        let mut t = [0.0f32; LANES];
+        for c in 0..chunks {
+            let j = c * LANES;
+            // the only transcendentals: scalar per lane, by policy
+            for l in 0..LANES {
+                t[l] = (-z[j + l].abs()).exp();
+            }
+            for l in 0..LANES {
+                sp[j + l] = z[j + l].max(0.0) + t[l].ln_1p();
+                sig[j + l] = if z[j + l] >= 0.0 {
+                    1.0 / (1.0 + t[l])
+                } else {
+                    t[l] / (1.0 + t[l])
+                };
+            }
+        }
+        for j in chunks * LANES..n {
+            let (s, p) = super::super::scalar::sigmoid_softplus(z[j]);
+            sig[j] = s;
+            sp[j] = p;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX backend (x86_64)
+// ---------------------------------------------------------------------
+
+/// AVX intrinsic backend. Safety: every fn is `#[target_feature(enable
+/// = "avx")]` and must only be called after [`available`] returned
+/// true (the dispatchers above guarantee this). All loads/stores are
+/// unaligned (`loadu`/`storeu`) and bounded by the slice-length
+/// arithmetic directly above each loop.
+#[cfg(target_arch = "x86_64")]
+// one safety contract for the whole backend (the module doc above):
+// callers go through the dispatchers, which gate on `available()`.
+#[allow(clippy::missing_safety_doc)]
+pub mod avx {
+    use super::{combine8, GER_GROUP, LANES};
+    use std::arch::x86_64::*;
+
+    /// Runtime CPU check (cached by std). AVX (not AVX2) suffices: every
+    /// instruction used here is a 256-bit float op from the AVX set.
+    #[inline]
+    pub fn available() -> bool {
+        std::arch::is_x86_feature_detected!("avx")
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let chunks = n / LANES;
+        let av = _mm256_set1_ps(a);
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        for c in 0..chunks {
+            let j = c * LANES;
+            let yv = _mm256_loadu_ps(yp.add(j));
+            let xv = _mm256_loadu_ps(xp.add(j));
+            _mm256_storeu_ps(yp.add(j),
+                             _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+        }
+        for j in chunks * LANES..n {
+            y[j] += a * x[j];
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut accv = _mm256_setzero_ps();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for c in 0..chunks {
+            let j = c * LANES;
+            let av = _mm256_loadu_ps(ap.add(j));
+            let bv = _mm256_loadu_ps(bp.add(j));
+            accv = _mm256_add_ps(accv, _mm256_mul_ps(av, bv));
+        }
+        let mut acc = [0.0f32; LANES];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        let mut s = combine8(acc);
+        for j in chunks * LANES..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut accv = _mm256_setzero_ps();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for c in 0..chunks {
+            let j = c * LANES;
+            let dv = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)),
+                                   _mm256_loadu_ps(bp.add(j)));
+            accv = _mm256_add_ps(accv, _mm256_mul_ps(dv, dv));
+        }
+        let mut acc = [0.0f32; LANES];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        let mut s = combine8(acc);
+        for j in chunks * LANES..n {
+            let d = a[j] - b[j];
+            s += d * d;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
+        let d = w.len();
+        let rows = z.len();
+        let chunks = d / LANES;
+        let wp = w.as_ptr();
+        let mut i = 0;
+        while i + 1 < rows {
+            let x0 = x.as_ptr().add(i * d);
+            let x1 = x.as_ptr().add((i + 1) * d);
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let j = c * LANES;
+                let wv = _mm256_loadu_ps(wp.add(j));
+                acc0 = _mm256_add_ps(
+                    acc0, _mm256_mul_ps(_mm256_loadu_ps(x0.add(j)), wv));
+                acc1 = _mm256_add_ps(
+                    acc1, _mm256_mul_ps(_mm256_loadu_ps(x1.add(j)), wv));
+            }
+            let mut a0 = [0.0f32; LANES];
+            let mut a1 = [0.0f32; LANES];
+            _mm256_storeu_ps(a0.as_mut_ptr(), acc0);
+            _mm256_storeu_ps(a1.as_mut_ptr(), acc1);
+            let mut s0 = combine8(a0);
+            let mut s1 = combine8(a1);
+            for j in chunks * LANES..d {
+                s0 += *x0.add(j) * w[j];
+                s1 += *x1.add(j) * w[j];
+            }
+            z[i] = s0;
+            z[i + 1] = s1;
+            i += 2;
+        }
+        if i < rows {
+            z[i] = dot(&x[i * d..(i + 1) * d], w);
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn ger_acc(g: &mut [f32], x: &[f32], r: &[f32]) {
+        let d = g.len();
+        let rows = r.len();
+        let groups = rows / GER_GROUP;
+        let chunks = d / LANES;
+        let gp = g.as_mut_ptr();
+        for gi in 0..groups {
+            let i = gi * GER_GROUP;
+            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+            let (r0v, r1v, r2v, r3v) =
+                (_mm256_set1_ps(r0), _mm256_set1_ps(r1),
+                 _mm256_set1_ps(r2), _mm256_set1_ps(r3));
+            let x0 = x.as_ptr().add(i * d);
+            let x1 = x.as_ptr().add((i + 1) * d);
+            let x2 = x.as_ptr().add((i + 2) * d);
+            let x3 = x.as_ptr().add((i + 3) * d);
+            for c in 0..chunks {
+                let j = c * LANES;
+                let t01 = _mm256_add_ps(
+                    _mm256_mul_ps(r0v, _mm256_loadu_ps(x0.add(j))),
+                    _mm256_mul_ps(r1v, _mm256_loadu_ps(x1.add(j))));
+                let t23 = _mm256_add_ps(
+                    _mm256_mul_ps(r2v, _mm256_loadu_ps(x2.add(j))),
+                    _mm256_mul_ps(r3v, _mm256_loadu_ps(x3.add(j))));
+                let gv = _mm256_loadu_ps(gp.add(j));
+                _mm256_storeu_ps(
+                    gp.add(j),
+                    _mm256_add_ps(gv, _mm256_add_ps(t01, t23)));
+            }
+            for j in chunks * LANES..d {
+                g[j] += (r0 * *x0.add(j) + r1 * *x1.add(j))
+                    + (r2 * *x2.add(j) + r3 * *x3.add(j));
+            }
+        }
+        for i in groups * GER_GROUP..rows {
+            let ri = r[i];
+            let riv = _mm256_set1_ps(ri);
+            let xi = x.as_ptr().add(i * d);
+            for c in 0..chunks {
+                let j = c * LANES;
+                let gv = _mm256_loadu_ps(gp.add(j));
+                _mm256_storeu_ps(
+                    gp.add(j),
+                    _mm256_add_ps(
+                        gv, _mm256_mul_ps(riv, _mm256_loadu_ps(xi.add(j)))));
+            }
+            for j in chunks * LANES..d {
+                g[j] += ri * *xi.add(j);
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = out.len();
+        let chunks = n / LANES;
+        let op = out.as_mut_ptr();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for c in 0..chunks {
+            let j = c * LANES;
+            _mm256_storeu_ps(op.add(j),
+                             _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)),
+                                           _mm256_loadu_ps(bp.add(j))));
+        }
+        for j in chunks * LANES..n {
+            out[j] = a[j] - b[j];
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn scale(x: &mut [f32], a: f32) {
+        let n = x.len();
+        let chunks = n / LANES;
+        let av = _mm256_set1_ps(a);
+        let xp = x.as_mut_ptr();
+        for c in 0..chunks {
+            let j = c * LANES;
+            _mm256_storeu_ps(xp.add(j),
+                             _mm256_mul_ps(_mm256_loadu_ps(xp.add(j)), av));
+        }
+        for j in chunks * LANES..n {
+            x[j] *= a;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx")]
+    pub unsafe fn amsgrad_update(
+        theta: &mut [f32],
+        h: &mut [f32],
+        vhat: &mut [f32],
+        grad: &[f32],
+        alpha: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+    ) {
+        let n = theta.len();
+        let chunks = n / LANES;
+        let b1v = _mm256_set1_ps(beta1);
+        let b2v = _mm256_set1_ps(beta2);
+        let omb1v = _mm256_set1_ps(1.0 - beta1);
+        let omb2v = _mm256_set1_ps(1.0 - beta2);
+        let av = _mm256_set1_ps(alpha);
+        let ev = _mm256_set1_ps(eps);
+        let tp = theta.as_mut_ptr();
+        let hp = h.as_mut_ptr();
+        let vp = vhat.as_mut_ptr();
+        let gp = grad.as_ptr();
+        for c in 0..chunks {
+            let j = c * LANES;
+            let gv = _mm256_loadu_ps(gp.add(j));
+            let hv = _mm256_loadu_ps(hp.add(j));
+            let vv = _mm256_loadu_ps(vp.add(j));
+            // h' = beta1*h + (1-beta1)*g
+            let h_new = _mm256_add_ps(_mm256_mul_ps(b1v, hv),
+                                      _mm256_mul_ps(omb1v, gv));
+            // v = beta2*vhat + ((1-beta2)*g)*g  (left-assoc, as scalar)
+            let v_new = _mm256_add_ps(
+                _mm256_mul_ps(b2v, vv),
+                _mm256_mul_ps(_mm256_mul_ps(omb2v, gv), gv));
+            // vhat' = vmaxps(v, vhat)
+            let vhat_new = _mm256_max_ps(v_new, vv);
+            // theta -= (alpha*h') / sqrt(eps + vhat')
+            let step = _mm256_div_ps(
+                _mm256_mul_ps(av, h_new),
+                _mm256_sqrt_ps(_mm256_add_ps(ev, vhat_new)));
+            let tv = _mm256_sub_ps(_mm256_loadu_ps(tp.add(j)), step);
+            _mm256_storeu_ps(tp.add(j), tv);
+            _mm256_storeu_ps(hp.add(j), h_new);
+            _mm256_storeu_ps(vp.add(j), vhat_new);
+        }
+        // tail: the portable per-element path (identical expressions)
+        let k = chunks * LANES;
+        super::portable::amsgrad_update(&mut theta[k..], &mut h[k..],
+                                        &mut vhat[k..], &grad[k..], alpha,
+                                        beta1, beta2, eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scalar;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Odd lengths + remainder-lane edge cases around the 8-lane width
+    /// and the 4-lane scalar-twin width, plus the bench size.
+    const SIZES: &[usize] = &[0, 1, 7, 8, 9, 63, 64, 65, 1023, 1024,
+                              1025, 65536];
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn knob_parsing() {
+        assert!(knob_from(None));
+        assert!(knob_from(Some("")));
+        assert!(knob_from(Some("1")));
+        assert!(knob_from(Some("avx")));
+        assert!(!knob_from(Some("0")));
+        assert!(!knob_from(Some("off")));
+        assert!(!knob_from(Some("OFF ")));
+        assert!(!knob_from(Some("false")));
+        assert!(!knob_from(Some("scalar")));
+        // cached value is stable across calls
+        assert_eq!(enabled(), enabled());
+    }
+
+    #[test]
+    fn elementwise_kernels_bit_equal_scalar_twins() {
+        for (si, &n) in SIZES.iter().enumerate() {
+            let (a, b) = vecs(n, 40 + si as u64);
+            let s = 0.73f32;
+
+            let mut y0 = b.clone();
+            let mut y1 = b.clone();
+            scalar::axpy(&mut y0, s, &a);
+            axpy(&mut y1, s, &a);
+            assert_eq!(y0, y1, "axpy n={n}");
+
+            let mut x0 = a.clone();
+            let mut x1 = a.clone();
+            scalar::scale(&mut x0, s);
+            scale(&mut x1, s);
+            assert_eq!(x0, x1, "scale n={n}");
+
+            let mut o0 = vec![0.0; n];
+            let mut o1 = vec![0.0; n];
+            scalar::sub_into(&mut o0, &a, &b);
+            sub_into(&mut o1, &a, &b);
+            assert_eq!(o0, o1, "sub_into n={n}");
+
+            let mut sg0 = vec![0.0; n];
+            let mut sp0 = vec![0.0; n];
+            let mut sg1 = vec![0.0; n];
+            let mut sp1 = vec![0.0; n];
+            scalar::sigmoid_softplus_block(&a, &mut sg0, &mut sp0);
+            sigmoid_softplus_block(&a, &mut sg1, &mut sp1);
+            assert_eq!(sg0, sg1, "sigmoid block n={n}");
+            assert_eq!(sp0, sp1, "softplus block n={n}");
+        }
+    }
+
+    #[test]
+    fn amsgrad_bit_equals_scalar_twin() {
+        for (si, &n) in SIZES.iter().enumerate() {
+            let (theta, grad) = vecs(n, 60 + si as u64);
+            let (h, vh) = vecs(n, 90 + si as u64);
+            let vh: Vec<f32> = vh.iter().map(|v| v.abs()).collect();
+
+            let mut t0 = theta.clone();
+            let mut h0 = h.clone();
+            let mut v0 = vh.clone();
+            scalar::amsgrad_update(&mut t0, &mut h0, &mut v0, &grad, 0.05,
+                                   0.9, 0.999, 1e-8);
+            let mut t1 = theta.clone();
+            let mut h1 = h.clone();
+            let mut v1 = vh.clone();
+            amsgrad_update(&mut t1, &mut h1, &mut v1, &grad, 0.05, 0.9,
+                           0.999, 1e-8);
+            assert_eq!(t0, t1, "theta n={n}");
+            assert_eq!(h0, h1, "h n={n}");
+            assert_eq!(v0, v1, "vhat n={n}");
+        }
+    }
+
+    #[test]
+    fn ger_acc_bit_equals_scalar_twin() {
+        let mut rng = Rng::new(71);
+        for &(rows, d) in &[(0usize, 7usize), (1, 7), (3, 9), (4, 9),
+                            (5, 16), (11, 65), (64, 63), (66, 1024)] {
+            let x: Vec<f32> =
+                (0..rows * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let r: Vec<f32> =
+                (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let init: Vec<f32> =
+                (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut g0 = init.clone();
+            let mut g1 = init;
+            scalar::ger_acc(&mut g0, &x, &r);
+            ger_acc(&mut g1, &x, &r);
+            assert_eq!(g0, g1, "(rows={rows}, d={d})");
+        }
+    }
+
+    /// The 8-lane reductions against an INDEPENDENT inline twin of the
+    /// documented fixed order — bit-for-bit, both backends.
+    #[test]
+    fn reductions_match_documented_8lane_fixed_order_bit_for_bit() {
+        fn fixed_order_dot(a: &[f32], b: &[f32]) -> f32 {
+            let mut acc = [0.0f32; LANES];
+            let chunks = a.len() / LANES;
+            for c in 0..chunks {
+                for l in 0..LANES {
+                    acc[l] += a[c * LANES + l] * b[c * LANES + l];
+                }
+            }
+            let q = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6],
+                     acc[3] + acc[7]];
+            let mut s = ((q[0] + q[1]) + q[2]) + q[3];
+            for j in chunks * LANES..a.len() {
+                s += a[j] * b[j];
+            }
+            s
+        }
+        for (si, &n) in SIZES.iter().enumerate() {
+            let (a, b) = vecs(n, 120 + si as u64);
+            assert_eq!(dot(&a, &b), fixed_order_dot(&a, &b), "dot n={n}");
+            assert_eq!(sqnorm(&a), fixed_order_dot(&a, &a), "sqnorm n={n}");
+            let d: Vec<f32> =
+                a.iter().zip(&b).map(|(x, y)| x - y).collect();
+            assert_eq!(sqnorm_diff(&a, &b), fixed_order_dot(&d, &d),
+                       "sqnorm_diff n={n}");
+        }
+    }
+
+    /// And against the scalar golden twin: same sum, different float
+    /// association — tolerance-bounded, like every reduction-order trade
+    /// in this repo.
+    #[test]
+    fn reductions_match_scalar_twin_to_tolerance() {
+        for (si, &n) in SIZES.iter().enumerate() {
+            let (a, b) = vecs(n, 150 + si as u64);
+            let tol = 1e-5 * (n.max(1) as f32).sqrt();
+            let ds = scalar::dot(&a, &b);
+            assert!((dot(&a, &b) - ds).abs() <= tol * (1.0 + ds.abs()),
+                    "dot n={n}");
+            let qs = scalar::sqnorm_diff(&a, &b);
+            assert!((sqnorm_diff(&a, &b) - qs).abs()
+                        <= tol * (1.0 + qs.abs()),
+                    "sqnorm_diff n={n}");
+        }
+    }
+
+    #[test]
+    fn gemv_rows_bit_equal_simd_dot() {
+        let mut rng = Rng::new(171);
+        for &(rows, d) in &[(0usize, 7usize), (1, 7), (2, 7), (5, 22),
+                            (8, 3), (7, 1), (3, 0), (63, 16), (64, 65),
+                            (9, 1025)] {
+            let x: Vec<f32> =
+                (0..rows * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w: Vec<f32> =
+                (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut z = vec![0.0f32; rows];
+            gemv_block(&mut z, &x, &w);
+            for i in 0..rows {
+                assert_eq!(z[i], dot(&x[i * d..(i + 1) * d], &w),
+                           "row {i} of (rows={rows}, d={d})");
+            }
+        }
+    }
+
+    /// The hardware-independence pin: on an AVX machine, the portable
+    /// backend must reproduce the intrinsic backend bit-for-bit for
+    /// every kernel (elsewhere this test is vacuous and the portable
+    /// backend IS the simd path).
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx_and_portable_agree_bit_for_bit() {
+        if !avx::available() {
+            return;
+        }
+        for (si, &n) in SIZES.iter().enumerate() {
+            let (a, b) = vecs(n, 200 + si as u64);
+            let s = -1.17f32;
+            unsafe {
+                assert_eq!(portable::dot(&a, &b), avx::dot(&a, &b),
+                           "dot n={n}");
+                assert_eq!(portable::sqnorm_diff(&a, &b),
+                           avx::sqnorm_diff(&a, &b), "sqnorm_diff n={n}");
+
+                let mut y0 = b.clone();
+                let mut y1 = b.clone();
+                portable::axpy(&mut y0, s, &a);
+                avx::axpy(&mut y1, s, &a);
+                assert_eq!(y0, y1, "axpy n={n}");
+
+                let mut x0 = a.clone();
+                let mut x1 = a.clone();
+                portable::scale(&mut x0, s);
+                avx::scale(&mut x1, s);
+                assert_eq!(x0, x1, "scale n={n}");
+
+                let mut o0 = vec![0.0; n];
+                let mut o1 = vec![0.0; n];
+                portable::sub_into(&mut o0, &a, &b);
+                avx::sub_into(&mut o1, &a, &b);
+                assert_eq!(o0, o1, "sub_into n={n}");
+
+                let vh: Vec<f32> = a.iter().map(|v| v.abs()).collect();
+                let mut t0 = a.clone();
+                let mut h0 = b.clone();
+                let mut v0 = vh.clone();
+                portable::amsgrad_update(&mut t0, &mut h0, &mut v0, &b,
+                                         0.05, 0.9, 0.999, 1e-8);
+                let mut t1 = a.clone();
+                let mut h1 = b.clone();
+                let mut v1 = vh;
+                avx::amsgrad_update(&mut t1, &mut h1, &mut v1, &b, 0.05,
+                                    0.9, 0.999, 1e-8);
+                assert_eq!(t0, t1, "amsgrad theta n={n}");
+                assert_eq!(h0, h1, "amsgrad h n={n}");
+                assert_eq!(v0, v1, "amsgrad vhat n={n}");
+            }
+        }
+        let mut rng = Rng::new(231);
+        for &(rows, d) in &[(5usize, 22usize), (64, 63), (7, 1024),
+                            (66, 65)] {
+            let x: Vec<f32> =
+                (0..rows * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w: Vec<f32> =
+                (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let r: Vec<f32> =
+                (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            unsafe {
+                let mut z0 = vec![0.0f32; rows];
+                let mut z1 = vec![0.0f32; rows];
+                portable::gemv_block(&mut z0, &x, &w);
+                avx::gemv_block(&mut z1, &x, &w);
+                assert_eq!(z0, z1, "gemv (rows={rows}, d={d})");
+
+                let mut g0 = w.clone();
+                let mut g1 = w.clone();
+                portable::ger_acc(&mut g0, &x, &r);
+                avx::ger_acc(&mut g1, &x, &r);
+                assert_eq!(g0, g1, "ger_acc (rows={rows}, d={d})");
+            }
+        }
+    }
+}
