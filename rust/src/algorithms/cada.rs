@@ -315,6 +315,16 @@ impl Algorithm for Cada {
         Ok(())
     }
 
+    fn skip_unselected(&mut self, _k: u64, w: usize) -> anyhow::Result<()> {
+        // an unselected worker never saw the round: no job, no upload —
+        // but its staleness still ages, exactly as a remote skip does,
+        // so the rule sees the true rounds-since-last-upload when the
+        // worker is next selected (and max_delay still forces an upload
+        // eventually)
+        self.workers[w].absorb_remote_skip();
+        Ok(())
+    }
+
     fn pending_uploads(&self, _k: u64) -> Vec<usize> {
         self.uploaded.clone()
     }
@@ -352,6 +362,9 @@ impl Algorithm for Cada {
     fn round_event(&self, k: u64) -> Option<RoundEvent> {
         Some(RoundEvent {
             iter: k,
+            // the trainer owns the round's participant draw; it stamps
+            // the selection onto the event after this snapshot
+            selected: Vec::new(),
             uploaded: self.uploaded.clone(),
             staleness: self.workers.iter().map(|w| w.tau).collect(),
             mean_lhs: if self.lhs_count > 0 {
@@ -395,6 +408,11 @@ impl Algorithm for Cada {
                 .round_snapshot
                 .as_ref()
                 .map(|s| (Arc::clone(s), self.snapshot_version)),
+            // per-population-slot staleness: each selected worker's
+            // round header carries its own server-tracked tau, so a
+            // long-unselected (or freshly rejoined) remote worker
+            // resumes with the count the InProc mirror would hold
+            taus: self.workers.iter().map(|w| w.tau).collect(),
         })
     }
 

@@ -122,15 +122,26 @@ pub struct RoundCtx<'c> {
     pub fresh: Vec<usize>,
     /// uploads deferred to a stale fold next round (semi-sync stragglers)
     pub deferred: Vec<usize>,
+    /// this round's selected participants (sorted population slots).
+    /// `0..m` under full participation — the trainer draws it once per
+    /// round with [`ParticipationCfg::select`] so every transport prices
+    /// the same subset.
+    ///
+    /// [`ParticipationCfg::select`]: crate::comm::ParticipationCfg::select
+    pub selected: Vec<usize>,
 }
 
 impl RoundCtx<'_> {
-    /// Count a model broadcast to all `m` workers and advance the event
-    /// clock by the slowest worker's download (broadcasts run in
-    /// parallel, so the round waits for the worst link, not the sum).
+    /// Count a model broadcast to this round's selected workers and
+    /// advance the event clock by the slowest *selected* worker's
+    /// download (broadcasts run in parallel, so the round waits for the
+    /// worst participating link, not the sum; unselected workers receive
+    /// nothing and must not pace the clock). Under full participation
+    /// this is bit-identical to the historical broadcast-to-all
+    /// accounting.
     pub fn count_broadcast(&mut self, bytes: usize) {
-        self.comm.count_broadcast(self.m, bytes);
-        let dt = self.links.max_download_s(bytes);
+        self.comm.count_broadcast(self.selected.len(), bytes);
+        let dt = self.links.max_download_among(&self.selected, bytes);
         self.comm.advance_clock(dt);
     }
 }
@@ -206,6 +217,17 @@ pub trait Algorithm {
     /// accounted.
     fn absorb_step(&mut self, ctx: &mut RoundCtx, w: usize, out: JobOut)
                    -> anyhow::Result<()>;
+
+    /// Phase 2b for a worker the round did *not* select: no job ran, so
+    /// there is nothing to fold — but per-worker bookkeeping (CADA's
+    /// staleness counters) must still advance exactly as if the worker
+    /// had run and skipped its upload. Called in worker order, merged
+    /// with the `absorb_step` calls for selected workers. The default
+    /// no-op suits methods without per-worker round state.
+    fn skip_unselected(&mut self, k: u64, w: usize) -> anyhow::Result<()> {
+        let _ = (k, w);
+        Ok(())
+    }
 
     /// Workers whose round-`k` outcome requests an upload, in worker
     /// order. The engine prices these against the link models, applies

@@ -51,8 +51,8 @@ use std::time::Instant;
 use super::{Algorithm, AlgorithmKind, RoundCtx};
 use crate::comm::{
     wire, CommCfg, CommStats, CostModel, EventTrace, InProc, LinkSet,
-    Participation, SocketServer, Threaded, Transport, TransportKind,
-    WireStats, WorkerJob,
+    Participation, ParticipationCfg, SelectPolicy, SocketServer, Threaded,
+    Transport, TransportKind, WireStats, WorkerJob,
 };
 use crate::compress::{CompressCfg, Scheme};
 use crate::config::toml::{Doc, Value};
@@ -160,10 +160,42 @@ impl TrainCfg {
             self.comm.transport.name(),
             self.comm.server_shards,
             self.comm.shard_exec.name(),
-            self.comm.semi_sync_k,
+            self.comm.participation.quorum,
             self.comm.jitter_sigma,
             self.comm.jitter_seed,
         );
+        // participation knobs beyond the quorum only appear when set,
+        // so the default output (and every pre-selection golden config)
+        // is byte-identical; semi_sync_k stays the quorum's spelling
+        // for config continuity
+        let p = &self.comm.participation;
+        if p.population != 0 {
+            out.push_str(&format!("population = {}\n", p.population));
+        }
+        if p.selected != 0 {
+            out.push_str(&format!("select_s = {}\n", p.selected));
+        }
+        if p.policy != SelectPolicy::default() {
+            out.push_str(&format!("select_policy = \"{}\"\n",
+                                  p.policy.as_str()));
+        }
+        if p.seed != 0 {
+            out.push_str(&format!("select_seed = {}\n", p.seed));
+        }
+        if p.churn {
+            out.push_str("churn = true\n");
+        }
+        if p.min_live != 0 {
+            out.push_str(&format!("min_live = {}\n", p.min_live));
+        }
+        if p.socket_timeout_s != 0 {
+            out.push_str(&format!("socket_timeout_s = {}\n",
+                                  p.socket_timeout_s));
+        }
+        if p.connect_retry_s != 0 {
+            out.push_str(&format!("connect_retry_s = {}\n",
+                                  p.connect_retry_s));
+        }
         // socket addresses only appear when set, so the default output
         // (and every pre-socket golden config) is byte-identical
         if !self.comm.listen.is_empty() {
@@ -288,11 +320,71 @@ impl TrainCfg {
                         cfg.comm.shard_exec = ShardExec::parse(s)?;
                     }
                     "semi_sync_k" => {
-                        cfg.comm.semi_sync_k =
+                        cfg.comm.participation.quorum =
                             value.as_u64().ok_or_else(|| {
                                 anyhow::anyhow!("[comm] semi_sync_k must \
                                                  be a non-negative integer")
                             })? as usize;
+                    }
+                    "population" => {
+                        cfg.comm.participation.population =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] population must \
+                                                 be a non-negative integer")
+                            })? as usize;
+                    }
+                    "select_s" => {
+                        cfg.comm.participation.selected =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] select_s must be \
+                                                 a non-negative integer")
+                            })? as usize;
+                    }
+                    "select_policy" => {
+                        let s = value.as_str().ok_or_else(|| {
+                            anyhow::anyhow!("[comm] select_policy must be \
+                                             a string (uniform|grouped)")
+                        })?;
+                        cfg.comm.participation.policy =
+                            SelectPolicy::parse(s)?;
+                    }
+                    "select_seed" => {
+                        cfg.comm.participation.seed =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] select_seed must \
+                                                 be an exact non-negative \
+                                                 integer")
+                            })?;
+                    }
+                    "churn" => {
+                        cfg.comm.participation.churn =
+                            value.as_bool().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] churn must be a \
+                                                 boolean")
+                            })?;
+                    }
+                    "min_live" => {
+                        cfg.comm.participation.min_live =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] min_live must be \
+                                                 a non-negative integer")
+                            })? as usize;
+                    }
+                    "socket_timeout_s" => {
+                        cfg.comm.participation.socket_timeout_s =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] socket_timeout_s \
+                                                 must be a non-negative \
+                                                 integer")
+                            })?;
+                    }
+                    "connect_retry_s" => {
+                        cfg.comm.participation.connect_retry_s =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[comm] connect_retry_s \
+                                                 must be a non-negative \
+                                                 integer")
+                            })?;
                     }
                     "jitter_sigma" => {
                         cfg.comm.jitter_sigma =
@@ -437,6 +529,13 @@ pub struct Trainer<'a, A: Algorithm + ?Sized> {
     /// (payload sizes are data-independent, so this is one constant per
     /// run); equals `cfg.upload_bytes` when compression is off
     sim_upload_bytes: usize,
+    /// resolved per-round selection seed (`[comm] select_seed`, or the
+    /// train seed when left 0)
+    select_seed: u64,
+    /// per-worker nominal round seconds, frozen at build: the
+    /// deterministic speed ranking [`SelectPolicy::Grouped`] partitions
+    /// by (pure config, no jitter, no round index)
+    speed_s: Vec<f64>,
     /// set when a round errors: worker state may have been moved into a
     /// job that never came home, so further steps must not run
     poisoned: bool,
@@ -547,27 +646,45 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         result
     }
 
+    /// This round's participant subset — a pure function of
+    /// `(select_seed, k)` plus the frozen speed ranking, so every
+    /// transport (and every rerun) draws the identical set.
+    fn round_selection(&self, k: u64) -> Vec<usize> {
+        self.cfg.comm.participation.select(
+            self.rngs.len(), self.select_seed, k, &self.speed_s)
+    }
+
     fn step_inner(&mut self, k: u64, compute: &mut dyn Compute)
                   -> anyhow::Result<()> {
         let m = self.rngs.len();
+        let selected = self.round_selection(k);
+        let selection_active =
+            self.cfg.comm.participation.selection_active(m);
+        self.comm.count_selected(&selected);
         if self.cfg.comm.transport == TransportKind::Socket {
             // phases 1 + 2 run over the wire: serializable round
             // headers out to the worker processes, step results back
-            self.wire_phases(k)?;
+            self.wire_phases(k, &selected)?;
         } else {
             self.ensure_transport(compute)?;
             // phase 1 — server -> workers
             {
                 let mut ctx = round_ctx(&self.cfg, &self.links,
                                         &mut self.comm, k, m,
-                                        Vec::new(), Vec::new());
+                                        Vec::new(), Vec::new(),
+                                        selected.clone());
                 self.algo.broadcast(&mut ctx)?;
             }
             // phase 2 — sample minibatches (worker-private RNG streams),
             // build the self-contained jobs, execute them on the
-            // transport
-            let mut jobs: Vec<(usize, WorkerJob)> = Vec::with_capacity(m);
-            for w in 0..m {
+            // transport. Only SELECTED workers sample and run: an
+            // unselected worker's RNG stream must not advance, so the
+            // batches it sees when next selected are independent of how
+            // often it sat out (and match the socket transport, which
+            // physically ships it nothing)
+            let mut jobs: Vec<(usize, WorkerJob)> =
+                Vec::with_capacity(selected.len());
+            for &w in &selected {
                 let batch = self.data.sample_batch(
                     &self.partition.shards[w],
                     self.cfg.batch,
@@ -583,11 +700,23 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
             {
                 let mut ctx = round_ctx(&self.cfg, &self.links,
                                         &mut self.comm, k, m,
-                                        Vec::new(), Vec::new());
+                                        Vec::new(), Vec::new(),
+                                        selected.clone());
                 // outcomes arrive sorted by worker id: the fold order
-                // (and therefore every float) is transport-independent
-                for (w, out) in outcomes {
-                    self.algo.absorb_step(&mut ctx, w, out)?;
+                // (and therefore every float) is transport-independent.
+                // Unselected workers fold as explicit skips, merged in
+                // the same worker order, so their staleness advances
+                // exactly where a remote skip would land.
+                let mut outcomes = outcomes.into_iter().peekable();
+                for w in 0..m {
+                    match outcomes.peek() {
+                        Some(&(ow, _)) if ow == w => {
+                            let (_, out) = outcomes.next()
+                                .expect("peeked outcome");
+                            self.algo.absorb_step(&mut ctx, w, out)?;
+                        }
+                        _ => self.algo.skip_unselected(k, w)?,
+                    }
                 }
             }
         }
@@ -603,8 +732,16 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         // compressed uploads are priced (and clocked) at their on-wire
         // size; the raw dense size feeds the per-worker compression
         // ratio. Identity keeps both equal to `upload_bytes` exactly.
-        let verdict = self.links.settle_uploads(
-            k, &pending, self.sim_upload_bytes, policy);
+        // Under per-round selection only the selected workers bound the
+        // round (the fully-sync compute floor must not wait on a device
+        // the round never touched).
+        let verdict = if selection_active {
+            self.links.settle_uploads_among(
+                k, &pending, self.sim_upload_bytes, policy, &selected)
+        } else {
+            self.links.settle_uploads(
+                k, &pending, self.sim_upload_bytes, policy)
+        };
         for &(w, t) in &verdict.arrival_s {
             self.comm.count_upload_sized(
                 w, self.sim_upload_bytes, self.cfg.upload_bytes, t);
@@ -622,12 +759,19 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         {
             let mut ctx = round_ctx(&self.cfg, &self.links,
                                     &mut self.comm, k, m,
-                                    verdict.fresh, verdict.deferred);
+                                    verdict.fresh, verdict.deferred,
+                                    selected.clone());
             self.algo.aggregate(&mut ctx)?;
             self.algo.server_update(&mut ctx, compute)?;
         }
         if self.cfg.trace_cap > 0 {
-            if let Some(ev) = self.algo.round_event(k) {
+            if let Some(mut ev) = self.algo.round_event(k) {
+                // the trainer owns the participant draw, so it stamps
+                // the selection (kept empty — meaning "all" — under
+                // full participation, as the trace always has)
+                if selection_active {
+                    ev.selected = selected;
+                }
                 self.trace.push(ev);
             }
         }
@@ -636,12 +780,14 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
 
     /// Socket-transport phases 1 + 2 of round `k`: handshake the worker
     /// processes on first use, freeze the round server-side, ship each
-    /// worker its header (batch indices + unacknowledged theta/snapshot
-    /// ranges), and fold the wire step results back in worker order.
-    /// Simulated accounting (links, jitter, participation) is untouched
-    /// — it stays a pure function of the round — so a loopback socket
-    /// run is bit-identical to `InProc`.
-    fn wire_phases(&mut self, k: u64) -> anyhow::Result<()> {
+    /// SELECTED worker its header (batch indices + unacknowledged
+    /// theta/snapshot ranges), and fold the wire step results back in
+    /// worker order (unselected workers fold as skips). Simulated
+    /// accounting (links, jitter, participation) is untouched — it
+    /// stays a pure function of the round — so a loopback socket run is
+    /// bit-identical to `InProc`.
+    fn wire_phases(&mut self, k: u64, selected: &[usize])
+                   -> anyhow::Result<()> {
         let m = self.rngs.len();
         let wire_ready = self
             .wire
@@ -664,18 +810,21 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
         {
             let mut ctx = round_ctx(&self.cfg, &self.links,
                                     &mut self.comm, k, m,
-                                    Vec::new(), Vec::new());
+                                    Vec::new(), Vec::new(),
+                                    selected.to_vec());
             self.algo.broadcast(&mut ctx)?;
         }
-        // phase 2 — the server samples every worker's minibatch INDICES
-        // from the same per-worker RNG streams the in-process
+        // phase 2 — the server samples each SELECTED worker's minibatch
+        // INDICES from the same per-worker RNG streams the in-process
         // transports feed into `sample_batch`, and ships them in the
         // round headers; workers gather from their own dataset copy, so
         // the batches are bit-identical without batch payloads crossing
-        // the wire
+        // the wire. Unselected streams stay untouched, mirroring the
+        // in-process path exactly.
         let round = self.algo.make_wire_step(k)?;
-        let mut batches: Vec<Vec<u32>> = Vec::with_capacity(m);
-        for w in 0..m {
+        let mut batches: Vec<Vec<u32>> =
+            Vec::with_capacity(selected.len());
+        for &w in selected {
             let picks = self.data.sample_picks(
                 &self.partition.shards[w],
                 self.cfg.batch,
@@ -683,22 +832,43 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
             );
             batches.push(picks.into_iter().map(|i| i as u32).collect());
         }
-        let steps = self
+        let outcome = self
             .wire
             .as_mut()
             .expect("socket server bound in build")
-            .run_round(&round, &batches)?;
+            .run_round(&round, selected, &batches)?;
+        // participation bookkeeping: dropped frames and mid-run
+        // (re)admissions land in the per-worker columns
+        for &w in &outcome.rejected {
+            self.comm.count_rejected(w);
+        }
+        for &w in &outcome.rejoined {
+            self.comm.count_rejoin(w);
+        }
         {
             let mut ctx = round_ctx(&self.cfg, &self.links,
                                     &mut self.comm, k, m,
-                                    Vec::new(), Vec::new());
-            // the socket server reads connections in worker order, so
-            // the fold order (and therefore every float) matches the
-            // in-process transports; folding by POSITION (not by the
-            // step's self-reported id) lets the algorithm's
-            // step.w-vs-slot check catch a misordered drain
-            for (w, step) in steps.into_iter().enumerate() {
-                self.algo.absorb_wire_step(&mut ctx, w, step)?;
+                                    Vec::new(), Vec::new(),
+                                    selected.to_vec());
+            // the socket server returns steps in selected order, so the
+            // merged fold below visits workers in worker order whatever
+            // the physical arrival order was; folding by POSITION (not
+            // by the step's self-reported id) lets the algorithm's
+            // step.w-vs-slot check catch a misordered drain. A vacated
+            // slot's synthesized skip folds like a remote skip; workers
+            // the round never selected fold as local skips.
+            let mut steps = outcome.steps.into_iter();
+            let mut sel = selected.iter().peekable();
+            for w in 0..m {
+                if sel.peek() == Some(&&w) {
+                    sel.next();
+                    let step = steps
+                        .next()
+                        .expect("one wire step per selected worker");
+                    self.algo.absorb_wire_step(&mut ctx, w, step)?;
+                } else {
+                    self.algo.skip_unselected(k, w)?;
+                }
             }
         }
         Ok(())
@@ -753,8 +923,8 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
 /// rely on).
 fn round_ctx<'c>(cfg: &TrainCfg, links: &'c LinkSet,
                  comm: &'c mut CommStats, k: u64, m: usize,
-                 fresh: Vec<usize>, deferred: Vec<usize>)
-                 -> RoundCtx<'c> {
+                 fresh: Vec<usize>, deferred: Vec<usize>,
+                 selected: Vec<usize>) -> RoundCtx<'c> {
     RoundCtx {
         k,
         m,
@@ -764,6 +934,7 @@ fn round_ctx<'c>(cfg: &TrainCfg, links: &'c LinkSet,
         comm,
         fresh,
         deferred,
+        selected,
     }
 }
 
@@ -908,9 +1079,17 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
     }
 
     /// Semi-sync quorum: the server proceeds after the fastest `k`
-    /// uploads of a round (0 = wait for everyone).
+    /// uploads of a round (0 = wait for everyone). Sugar for setting
+    /// [`ParticipationCfg::quorum`] alone.
     pub fn semi_sync_k(mut self, k: usize) -> Self {
-        self.cfg.comm.semi_sync_k = k;
+        self.cfg.comm.participation.quorum = k;
+        self
+    }
+
+    /// Replace the whole participation config at once: population,
+    /// per-round selection, quorum, churn tolerance, socket timeouts.
+    pub fn participation(mut self, p: ParticipationCfg) -> Self {
+        self.cfg.comm.participation = p;
         self
     }
 
@@ -952,6 +1131,26 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         let m = partition.num_workers();
         anyhow::ensure!(m >= 1, "partition has no workers");
         self.cfg.comm.validate()?;
+        let part = &self.cfg.comm.participation;
+        // the trainer runs exactly one simulated slot per partition
+        // shard, so a registered population must match the worker count
+        // (population > M — spare capacity for churn — is socket-server
+        // territory the trainer does not model yet)
+        anyhow::ensure!(
+            part.population == 0 || part.population == m,
+            "[comm] population ({}) must be 0 or equal the run's worker \
+             count ({m})",
+            part.population
+        );
+        anyhow::ensure!(
+            algo.kind() != AlgorithmKind::LocalUpdate
+                || !part.selection_active(m),
+            "per-round selection (select_s = {}) does not apply to \
+             model-averaging methods: '{}' needs every worker's local \
+             model each averaging round",
+            part.selected,
+            algo.name()
+        );
         // resolve the server-shard count (0 = one shard per core) and
         // hand it to the algorithm before it allocates server state
         let shards = match self.cfg.comm.server_shards {
@@ -999,11 +1198,22 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
                      dataset has {} samples",
                     data.len()
                 );
-                (Some(SocketServer::bind(&self.cfg.comm.listen, m)?),
+                (Some(SocketServer::builder(&self.cfg.comm.listen)
+                          .participation(&self.cfg.comm.participation, m)
+                          .build()?),
                  Some(wcfg))
             } else {
                 (None, None)
             };
+        // selection is a pure function of (seed, round): resolve the
+        // seed once (0 = follow the train seed) and freeze the
+        // deterministic speed ranking the grouped policy partitions by
+        let select_seed = if self.cfg.comm.participation.seed == 0 {
+            self.cfg.seed
+        } else {
+            self.cfg.comm.participation.seed
+        };
+        let speed_s = links.nominal_speeds(sim_upload_bytes);
         Ok(Trainer {
             trace: EventTrace::new(self.cfg.trace_cap),
             comm: CommStats::for_workers(m),
@@ -1019,6 +1229,8 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
             wire,
             wire_cfg,
             sim_upload_bytes,
+            select_seed,
+            speed_s,
             poisoned: false,
         })
     }
@@ -1155,7 +1367,17 @@ mod tests {
                 connect: "cada-server:7700".into(),
                 server_shards: 4,
                 shard_exec: ShardExec::Scoped,
-                semi_sync_k: 7,
+                participation: ParticipationCfg {
+                    population: 12,
+                    selected: 9,
+                    quorum: 7,
+                    policy: SelectPolicy::Grouped,
+                    seed: 31,
+                    churn: true,
+                    min_live: 3,
+                    socket_timeout_s: 15,
+                    connect_retry_s: 4,
+                },
                 jitter_sigma: 0.5,
                 jitter_seed: 11,
                 latency_mult: vec![1.0, 2.0, 4.0],
@@ -1189,6 +1411,20 @@ mod tests {
         assert!(TrainCfg::from_doc(&bad).is_err());
         let bad = toml::parse("[comm]\nshard_exec = \"forkbomb\"\n")
             .unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        // participation knobs validate at parse time: a non-boolean
+        // churn, an unknown policy, and a quorum exceeding the
+        // selection are config errors, not run surprises
+        let bad = toml::parse("[comm]\nchurn = 1\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[comm]\nselect_policy = \"fastest\"\n")
+            .unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad =
+            toml::parse("[comm]\nselect_s = 5\nsemi_sync_k = 6\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad =
+            toml::parse("[comm]\npopulation = 3\nselect_s = 5\n").unwrap();
         assert!(TrainCfg::from_doc(&bad).is_err());
         let bad = toml::parse("[comm.links]\nlatency_mult = 3\n").unwrap();
         assert!(TrainCfg::from_doc(&bad).is_err());

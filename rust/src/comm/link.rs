@@ -162,6 +162,37 @@ impl LinkSet {
             .fold(0.0, f64::max)
     }
 
+    /// [`LinkSet::max_download_s`] restricted to a round's selected
+    /// participants: unselected workers receive no broadcast, so they
+    /// must not pace the clock. Iterates in the given order folding
+    /// `f64::max`, so `selected == 0..m` is bit-identical to the
+    /// unrestricted fold.
+    pub fn max_download_among(&self, selected: &[usize], bytes: usize)
+                              -> f64 {
+        selected
+            .iter()
+            .map(|&w| self.links[w].cost.download_time_s(bytes))
+            .fold(0.0, f64::max)
+    }
+
+    /// Worker `w`'s nominal (unjittered) round seconds — device compute
+    /// plus the deterministic upload time of a `bytes`-sized payload.
+    /// This is the pure speed metric [`SelectPolicy::Grouped`] ranks
+    /// workers by: no jitter and no round index, so the ranking (and
+    /// with it the selection) stays a pure function of the config.
+    ///
+    /// [`SelectPolicy::Grouped`]: super::SelectPolicy::Grouped
+    pub fn nominal_round_s(&self, w: usize, bytes: usize) -> f64 {
+        self.compute_time_s(w) + self.links[w].cost.upload_time_s(bytes)
+    }
+
+    /// [`LinkSet::nominal_round_s`] for every worker at once.
+    pub fn nominal_speeds(&self, bytes: usize) -> Vec<f64> {
+        (0..self.links.len())
+            .map(|w| self.nominal_round_s(w, bytes))
+            .collect()
+    }
+
     /// Settle one round's upload set under a participation policy.
     ///
     /// `pending` is the set of workers whose rule fired this round, in
@@ -178,6 +209,23 @@ impl LinkSet {
     /// compute base is 0.
     pub fn settle_uploads(&self, k: u64, pending: &[usize], bytes: usize,
                           policy: Participation) -> RoundVerdict {
+        self.settle_among(k, pending, bytes, policy, None)
+    }
+
+    /// [`LinkSet::settle_uploads`] restricted to a round's selected
+    /// participants: the `Full` compute floor waits only on devices the
+    /// round actually selected — an unselected slow device must not
+    /// gate a round it took no part in. `participants == 0..m` is
+    /// bit-identical to the unrestricted settlement.
+    pub fn settle_uploads_among(&self, k: u64, pending: &[usize],
+                                bytes: usize, policy: Participation,
+                                participants: &[usize]) -> RoundVerdict {
+        self.settle_among(k, pending, bytes, policy, Some(participants))
+    }
+
+    fn settle_among(&self, k: u64, pending: &[usize], bytes: usize,
+                    policy: Participation,
+                    participants: Option<&[usize]>) -> RoundVerdict {
         let arrival_s: Vec<(usize, f64)> = pending
             .iter()
             .map(|&w| (w, self.arrival_time_s(k, w, bytes)))
@@ -225,9 +273,15 @@ impl LinkSet {
             // transmits nothing. (Semi-sync quorums explicitly do not
             // wait, so no floor there.) Exactly 0 under the default
             // compute base, preserving bit-identical pre-compute runs.
-            let compute_floor = (0..self.links.len())
-                .map(|w| self.compute_time_s(w))
-                .fold(0.0, f64::max);
+            let compute_floor = match participants {
+                None => (0..self.links.len())
+                    .map(|w| self.compute_time_s(w))
+                    .fold(0.0, f64::max),
+                Some(p) => p
+                    .iter()
+                    .map(|&w| self.compute_time_s(w))
+                    .fold(0.0, f64::max),
+            };
             upload_dt_s = upload_dt_s.max(compute_floor);
         }
         RoundVerdict { fresh, deferred, lost, upload_dt_s, arrival_s }
@@ -419,6 +473,84 @@ mod tests {
                                         Participation::Full);
         assert_eq!(full.fresh, vec![0, 1, 2]);
         assert!(full.upload_dt_s.is_infinite());
+    }
+
+    #[test]
+    fn settle_among_all_matches_unrestricted_bitwise() {
+        let mut base = cost(0.01, 1000.0, 1.0);
+        base.compute_s = 0.2;
+        let mut slow = LinkModel::new(base.clone());
+        slow.compute_mult = 7.0;
+        slow.jitter_sigma = 0.5;
+        let links = LinkSet::new(
+            vec![LinkModel::new(base.clone()), slow,
+                 LinkModel::new(base)],
+            11,
+        );
+        let all = [0usize, 1, 2];
+        for policy in [Participation::Full,
+                       Participation::SemiSync { k: 2 }] {
+            for k in 0..10u64 {
+                assert_eq!(
+                    links.settle_uploads(k, &[0, 2], 64, policy),
+                    links.settle_uploads_among(k, &[0, 2], 64, policy,
+                                               &all),
+                    "k={k} {policy:?}"
+                );
+            }
+        }
+        assert_eq!(links.max_download_s(512),
+                   links.max_download_among(&all, 512));
+    }
+
+    #[test]
+    fn settle_among_floors_only_on_selected_devices() {
+        // worker 1 is a 10x-slow device but UNSELECTED: its compute
+        // must not gate a full round it took no part in
+        let mut base = cost(0.01, 1000.0, 1.0);
+        base.compute_s = 0.1;
+        let mut slow = LinkModel::new(base.clone());
+        slow.compute_mult = 10.0;
+        let links = LinkSet::new(
+            vec![LinkModel::new(base.clone()), slow,
+                 LinkModel::new(base)],
+            0,
+        );
+        let v = links.settle_uploads_among(0, &[0], 0,
+                                           Participation::Full, &[0, 2]);
+        assert_eq!(v.fresh, vec![0]);
+        assert_eq!(v.upload_dt_s, 0.1 + 0.01);
+        // selecting the slow device restores the old floor
+        let v = links.settle_uploads_among(0, &[0], 0,
+                                           Participation::Full, &[0, 1]);
+        assert_eq!(v.upload_dt_s, 1.0);
+        // broadcasts likewise only pace selected workers
+        let mut lag = LinkModel::new(cost(0.5, 1000.0, 1.0));
+        lag.cost.compute_s = 0.0;
+        let links = LinkSet::new(
+            vec![LinkModel::new(cost(0.01, 1000.0, 1.0)), lag], 0);
+        assert_eq!(links.max_download_among(&[0], 0), 0.01);
+        assert_eq!(links.max_download_among(&[0, 1], 0), 0.5);
+    }
+
+    #[test]
+    fn nominal_speed_is_unjittered_and_deterministic() {
+        let mut base = cost(0.01, 1000.0, 1.0);
+        base.compute_s = 0.1;
+        let mut jittery = LinkModel::new(base.clone());
+        jittery.jitter_sigma = 2.0;
+        jittery.compute_mult = 3.0;
+        let links = LinkSet::new(
+            vec![LinkModel::new(base), jittery], 77);
+        // compute + unjittered upload, independent of the round index
+        assert_eq!(links.nominal_round_s(0, 0), 0.1 + 0.01);
+        assert_eq!(links.nominal_round_s(1, 0), 0.3 + 0.01);
+        assert_eq!(links.nominal_speeds(0),
+                   vec![0.11, links.nominal_round_s(1, 0)]);
+        // the jittered per-round upload time differs; the nominal
+        // metric never does
+        assert_ne!(links.upload_time_s(1, 1, 64),
+                   links.link(1).cost.upload_time_s(64));
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //!   straggle like slow links), and the round settlement logic: which
 //!   uploads the server waits for under a [`Participation`] policy and
 //!   how far the clock advances.
+//! * [`ParticipationCfg`] — who is in a round: the registered worker
+//!   population, a per-round selected subset S ([`SelectPolicy`]:
+//!   seeded-uniform or grouped by nominal speed — both pure functions
+//!   of `(seed, round)`, so selection is bit-reproducible on every
+//!   transport), the semi-sync quorum K within S, and the socket
+//!   transport's churn knobs (vacate-on-disconnect, rejoin catch-up,
+//!   timeouts).
 //! * [`CommStats`] — cumulative counters plus the **event clock**:
 //!   `sim_time_s` advances once per round phase by the *max* over
 //!   participating workers (broadcasts in parallel, uploads bounded by
@@ -39,11 +46,14 @@ pub mod transport;
 pub mod wire;
 
 pub use link::{LinkModel, LinkSet, Participation, RoundVerdict};
-pub use socket::{run_worker, SocketServer, WireStats, WorkerReport};
+pub use socket::{run_worker, run_worker_opts, RoundOutcome, SocketServer,
+                 WireStats, WorkerOpts, WorkerReport};
 pub use transport::{InProc, JobOut, Threaded, Transport, TransportKind,
                     WorkerJob};
 
 use crate::coordinator::pool::ShardExec;
+use crate::util::rng::Rng;
+use std::time::Duration;
 
 /// Cumulative communication counters + the event clock for one run.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -94,6 +104,25 @@ pub struct CommStats {
     /// on-wire size); `worker_raw_bytes / worker_wire_bytes` is the
     /// measured per-worker compression ratio
     pub worker_wire_bytes: Vec<u64>,
+    /// rounds settled so far (the denominator of the per-worker
+    /// selection rate: under full participation every worker is
+    /// selected every round)
+    pub rounds: u64,
+    /// per-worker count of rounds this worker was SELECTED to
+    /// participate in (== `rounds` for every worker under full
+    /// participation)
+    pub worker_selected: Vec<u64>,
+    /// per-worker frames the socket server refused to fold (duplicate
+    /// step for a round, or a step from a worker the round did not
+    /// select); the per-worker view of [`CommStats::rejected_uploads`]
+    pub worker_rejected: Vec<u64>,
+    /// per-worker mid-run reconnects admitted into a vacated
+    /// population slot (socket churn mode)
+    pub worker_rejoins: Vec<u64>,
+    /// total refused frames across workers
+    pub rejected_uploads: u64,
+    /// total mid-run rejoins across workers
+    pub rejoins: u64,
 }
 
 impl CommStats {
@@ -105,7 +134,38 @@ impl CommStats {
             worker_lost: vec![0; m],
             worker_raw_bytes: vec![0; m],
             worker_wire_bytes: vec![0; m],
+            worker_selected: vec![0; m],
+            worker_rejected: vec![0; m],
+            worker_rejoins: vec![0; m],
             ..Default::default()
+        }
+    }
+
+    /// Record one round's participant selection: bumps the round count
+    /// and each selected worker's selection tally.
+    pub fn count_selected(&mut self, selected: &[usize]) {
+        self.rounds += 1;
+        for &w in selected {
+            if let Some(c) = self.worker_selected.get_mut(w) {
+                *c += 1;
+            }
+        }
+    }
+
+    /// Count a refused frame (duplicate or unselected upload) from
+    /// worker `w`.
+    pub fn count_rejected(&mut self, w: usize) {
+        self.rejected_uploads += 1;
+        if let Some(c) = self.worker_rejected.get_mut(w) {
+            *c += 1;
+        }
+    }
+
+    /// Count a mid-run rejoin into population slot `w`.
+    pub fn count_rejoin(&mut self, w: usize) {
+        self.rejoins += 1;
+        if let Some(c) = self.worker_rejoins.get_mut(w) {
+            *c += 1;
         }
     }
 
@@ -228,6 +288,204 @@ impl CostModel {
     }
 }
 
+/// How each round picks its participant subset S out of the
+/// registered population.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SelectPolicy {
+    /// seeded uniform sample of S workers per round
+    #[default]
+    Uniform,
+    /// adaptive speed grouping (arxiv 2201.04301): workers are ranked
+    /// by their deterministic nominal round time (device compute +
+    /// unjittered upload), partitioned into `ceil(N / S)` contiguous
+    /// speed groups, and each round runs one seeded-picked group — so
+    /// co-selected workers finish together and the round is never
+    /// paced by a mixed-in straggler
+    Grouped,
+}
+
+impl SelectPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "uniform" => Ok(SelectPolicy::Uniform),
+            "grouped" => Ok(SelectPolicy::Grouped),
+            other => anyhow::bail!(
+                "unknown selection policy '{other}' \
+                 (expected uniform|grouped)"
+            ),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SelectPolicy::Uniform => "uniform",
+            SelectPolicy::Grouped => "grouped",
+        }
+    }
+}
+
+/// The one home of every participation knob: registered population,
+/// per-round selection, semi-sync quorum, and socket churn tolerance.
+/// Plumbed as the `[comm]` `population`/`select_*`/`churn` keys, the
+/// `--select*` CLI flags, and `TrainerBuilder::participation`.
+///
+/// Every field's zero value means "the pre-selection default", so
+/// `ParticipationCfg::default()` is exactly the fixed-M fully-sync
+/// semantics the repo grew up with: population == selected == quorum
+/// == all M workers, no churn.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParticipationCfg {
+    /// registered worker population N the server admits at handshake.
+    /// 0 = the run's worker count M; a socket run may set it larger
+    /// later once population > M scenarios exist, but today the
+    /// trainer requires 0 or exactly M.
+    pub population: usize,
+    /// per-round selection size S; 0 (or >= population) = everyone
+    /// participates every round
+    pub selected: usize,
+    /// semi-sync quorum K *within the selected subset*: the server
+    /// proceeds after the fastest K selected uploads; 0 = wait for the
+    /// whole subset (the old `semi_sync_k` knob, generalized)
+    pub quorum: usize,
+    /// how the per-round subset is drawn
+    pub policy: SelectPolicy,
+    /// selection seed; 0 = derive from the train seed, so runs stay
+    /// reproducible without extra plumbing
+    pub seed: u64,
+    /// socket churn tolerance: when true the server vacates a
+    /// disconnected worker's population slot (synthesizing a skip for
+    /// the open round) and admits late (re)joiners into vacant slots
+    /// with delta-broadcast catch-up; when false (default) a mid-round
+    /// disconnect is a hard error, as before
+    pub churn: bool,
+    /// minimum live sockets a churn-mode round may proceed with;
+    /// 0 = 1. Dropping below this fails the round even in churn mode.
+    pub min_live: usize,
+    /// socket read/handshake timeout, seconds; 0 = the historical 120
+    pub socket_timeout_s: u64,
+    /// worker connect-retry budget, seconds; 0 = `socket_timeout_s`
+    pub connect_retry_s: u64,
+}
+
+impl ParticipationCfg {
+    /// Historical interactive-scale socket timeout.
+    pub const DEFAULT_TIMEOUT_S: u64 = 120;
+
+    /// The effective selection size for an `m`-worker round.
+    pub fn effective_selected(&self, m: usize) -> usize {
+        if self.selected == 0 || self.selected >= m {
+            m
+        } else {
+            self.selected
+        }
+    }
+
+    /// Is per-round selection actually active for `m` workers?
+    pub fn selection_active(&self, m: usize) -> bool {
+        self.effective_selected(m) < m
+    }
+
+    /// No selection, no churn: the config that leaves every transport
+    /// on the pre-participation code path (quorum aside).
+    pub fn is_trivial(&self) -> bool {
+        self.selected == 0 && !self.churn
+    }
+
+    pub fn socket_timeout(&self) -> Duration {
+        let s = if self.socket_timeout_s == 0 {
+            Self::DEFAULT_TIMEOUT_S
+        } else {
+            self.socket_timeout_s
+        };
+        Duration::from_secs(s)
+    }
+
+    pub fn connect_retry(&self) -> Duration {
+        if self.connect_retry_s == 0 {
+            self.socket_timeout()
+        } else {
+            Duration::from_secs(self.connect_retry_s)
+        }
+    }
+
+    pub fn min_live(&self) -> usize {
+        self.min_live.max(1)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.selected != 0 && self.quorum > self.selected {
+            anyhow::bail!(
+                "[comm] quorum ({}) cannot exceed the per-round \
+                 selection size select_s ({})",
+                self.quorum,
+                self.selected
+            );
+        }
+        if self.population != 0 && self.selected > self.population {
+            anyhow::bail!(
+                "[comm] select_s ({}) cannot exceed the population ({})",
+                self.selected,
+                self.population
+            );
+        }
+        Ok(())
+    }
+
+    /// The participant subset of round `round`, sorted ascending — a
+    /// pure function of `(seed, round)` (plus, for
+    /// [`SelectPolicy::Grouped`], the deterministic per-worker
+    /// `speed_s` ranking), so every transport and every rerun of the
+    /// same seed draws the identical subset. `speed_s` is each
+    /// worker's nominal (unjittered) round seconds; it is only read
+    /// under the grouped policy and may be empty otherwise.
+    pub fn select(&self, m: usize, seed: u64, round: u64,
+                  speed_s: &[f64]) -> Vec<usize> {
+        let s = self.effective_selected(m);
+        if s >= m {
+            // degenerate full participation: no RNG is drawn at all,
+            // keeping the default bit-path identical to pre-selection
+            return (0..m).collect();
+        }
+        // one RNG stream per round, keyed like the straggler jitter:
+        // derived purely from (seed, round), never from worker state
+        let stream = round
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(0xD1B5_4A32_D192_ED03);
+        let mut rng = Rng::new(seed ^ stream);
+        match self.policy {
+            SelectPolicy::Uniform => {
+                let mut pick = rng.sample_indices(m, s);
+                pick.sort_unstable();
+                pick
+            }
+            SelectPolicy::Grouped => {
+                // rank by nominal speed (ties broken by id so the
+                // ranking is total and reproducible)
+                let mut order: Vec<usize> = (0..m).collect();
+                order.sort_by(|&a, &b| {
+                    let sa = speed_s.get(a).copied().unwrap_or(0.0);
+                    let sb = speed_s.get(b).copied().unwrap_or(0.0);
+                    sa.total_cmp(&sb).then(a.cmp(&b))
+                });
+                // ceil(m / s) near-equal contiguous speed groups
+                let g = m.div_ceil(s);
+                let (base, rem) = (m / g, m % g);
+                let pick = rng.below(g as u64) as usize;
+                // groups 0..rem hold base+1 workers, the rest base
+                let start = if pick < rem {
+                    pick * (base + 1)
+                } else {
+                    rem * (base + 1) + (pick - rem) * base
+                };
+                let len = if pick < rem { base + 1 } else { base };
+                let mut members = order[start..start + len].to_vec();
+                members.sort_unstable();
+                members
+            }
+        }
+    }
+}
+
 /// `[comm]` engine configuration: transport, server-state sharding,
 /// participation policy, straggler jitter, and per-worker link
 /// heterogeneity (`[comm.links]`).
@@ -255,11 +513,12 @@ pub struct CommCfg {
     /// (default) or per-round scoped threads. Pure execution strategy,
     /// bit-identical either way (`[comm] shard_exec` / `--shard-exec`).
     pub shard_exec: ShardExec,
-    /// semi-sync quorum K: the server proceeds after the fastest K
-    /// uploads of a round; 0 = wait for everyone (fully synchronous).
-    /// Applies to server-centric methods; model-averaging methods need
-    /// every local model and always run fully synchronous.
-    pub semi_sync_k: usize,
+    /// every participation knob in one place: population, per-round
+    /// selection S, semi-sync quorum K (the old `semi_sync_k`), and
+    /// socket churn tolerance. Applies to server-centric methods;
+    /// model-averaging methods need every local model and always run
+    /// fully synchronous with full participation.
+    pub participation: ParticipationCfg,
     /// sigma of the log-normal upload straggler jitter (0 = off)
     pub jitter_sigma: f64,
     pub jitter_seed: u64,
@@ -283,7 +542,7 @@ impl Default for CommCfg {
             connect: String::new(),
             server_shards: 1,
             shard_exec: ShardExec::default(),
-            semi_sync_k: 0,
+            participation: ParticipationCfg::default(),
             jitter_sigma: 0.0,
             jitter_seed: 0,
             latency_mult: Vec::new(),
@@ -328,15 +587,16 @@ impl CommCfg {
                 );
             }
         }
-        Ok(())
+        self.participation.validate()
     }
 
-    /// The participation policy this config asks for.
+    /// The semi-sync settlement policy this config asks for (the
+    /// quorum applies within the selected subset).
     pub fn participation(&self) -> Participation {
-        if self.semi_sync_k == 0 {
+        if self.participation.quorum == 0 {
             Participation::Full
         } else {
-            Participation::SemiSync { k: self.semi_sync_k }
+            Participation::SemiSync { k: self.participation.quorum }
         }
     }
 
@@ -368,9 +628,10 @@ impl CommCfg {
     }
 
     /// Does this config leave the homogeneous, jitter-free, fully-sync
-    /// semantics of the seed untouched?
+    /// full-participation semantics of the seed untouched?
     pub fn is_uniform_sync(&self) -> bool {
-        self.semi_sync_k == 0
+        self.participation.quorum == 0
+            && self.participation.is_trivial()
             && self.jitter_sigma == 0.0
             && self.latency_mult.is_empty()
             && self.bw_mult.is_empty()
@@ -383,6 +644,9 @@ impl CommCfg {
 #[derive(Clone, Debug)]
 pub struct RoundEvent {
     pub iter: u64,
+    /// workers selected to participate this round; empty means "all"
+    /// (full participation is not worth tracing per round)
+    pub selected: Vec<usize>,
     /// workers that uploaded this round (|M^k| = uploaded.len())
     pub uploaded: Vec<usize>,
     /// staleness tau_m AFTER the round, per worker
@@ -646,10 +910,153 @@ mod tests {
     }
 
     #[test]
-    fn participation_policy_from_k() {
+    fn participation_policy_from_quorum() {
         assert_eq!(CommCfg::default().participation(), Participation::Full);
-        let semi = CommCfg { semi_sync_k: 3, ..Default::default() };
+        let semi = CommCfg {
+            participation: ParticipationCfg {
+                quorum: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
         assert_eq!(semi.participation(), Participation::SemiSync { k: 3 });
+    }
+
+    #[test]
+    fn participation_cfg_defaults_are_the_pre_selection_semantics() {
+        let p = ParticipationCfg::default();
+        assert_eq!(p.effective_selected(5), 5);
+        assert!(!p.selection_active(5));
+        assert!(p.is_trivial());
+        assert_eq!(p.socket_timeout(), Duration::from_secs(120));
+        assert_eq!(p.connect_retry(), Duration::from_secs(120));
+        assert_eq!(p.min_live(), 1);
+        assert!(p.validate().is_ok());
+        // explicit knobs override each derived default
+        let p = ParticipationCfg {
+            socket_timeout_s: 7,
+            min_live: 3,
+            ..Default::default()
+        };
+        assert_eq!(p.socket_timeout(), Duration::from_secs(7));
+        assert_eq!(p.connect_retry(), Duration::from_secs(7));
+        assert_eq!(p.min_live(), 3);
+        let p = ParticipationCfg { connect_retry_s: 2,
+                                   ..Default::default() };
+        assert_eq!(p.connect_retry(), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn participation_cfg_validate_rejects_inconsistent_sizes() {
+        let bad = ParticipationCfg { selected: 2, quorum: 3,
+                                     ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ParticipationCfg { population: 4, selected: 5,
+                                     ..Default::default() };
+        assert!(bad.validate().is_err());
+        let ok = ParticipationCfg { population: 8, selected: 3, quorum: 2,
+                                    ..Default::default() };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn selection_is_a_pure_function_of_seed_and_round() {
+        let p = ParticipationCfg { selected: 3, ..Default::default() };
+        for k in 0..50u64 {
+            let a = p.select(8, 42, k, &[]);
+            let b = p.select(8, 42, k, &[]);
+            assert_eq!(a, b, "round {k} not reproducible");
+            assert_eq!(a.len(), 3);
+            assert!(a.windows(2).all(|w| w[0] < w[1]),
+                    "not sorted/unique: {a:?}");
+            assert!(a.iter().all(|&w| w < 8));
+        }
+        // different seeds and different rounds draw different subsets
+        // somewhere in 50 rounds (astronomically certain)
+        assert!((0..50).any(|k| {
+            p.select(8, 42, k, &[]) != p.select(8, 43, k, &[])
+        }));
+        assert!((1..50).any(|k| {
+            p.select(8, 42, k, &[]) != p.select(8, 42, 0, &[])
+        }));
+    }
+
+    #[test]
+    fn degenerate_selection_is_identity_without_rng() {
+        // S = 0 and S >= M both mean "everyone", and must not depend
+        // on the seed at all (the golden default path)
+        for p in [
+            ParticipationCfg::default(),
+            ParticipationCfg { selected: 5, ..Default::default() },
+            ParticipationCfg { selected: 99, ..Default::default() },
+        ] {
+            assert_eq!(p.select(5, 1, 0, &[]), vec![0, 1, 2, 3, 4]);
+            assert_eq!(p.select(5, 2, 7, &[]), vec![0, 1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn uniform_selection_covers_all_workers_over_time() {
+        let p = ParticipationCfg { selected: 2, ..Default::default() };
+        let mut seen = [false; 6];
+        for k in 0..200u64 {
+            for w in p.select(6, 9, k, &[]) {
+                seen[w] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "starved workers: {seen:?}");
+    }
+
+    #[test]
+    fn grouped_selection_partitions_by_speed() {
+        // 6 workers, speeds make ranks obvious: (5,0) fast, (1,3)
+        // mid, (2,4) slow. S=2 -> 3 contiguous speed groups.
+        let speed = [3.0, 2.0, 9.0, 2.5, 8.0, 1.0];
+        let p = ParticipationCfg {
+            selected: 2,
+            policy: SelectPolicy::Grouped,
+            ..Default::default()
+        };
+        let groups: [Vec<usize>; 3] =
+            [vec![1, 5], vec![0, 3], vec![2, 4]];
+        let mut hit = [false; 3];
+        for k in 0..100u64 {
+            let sel = p.select(6, 4, k, &speed);
+            assert_eq!(p.select(6, 4, k, &speed), sel, "not pure");
+            let g = groups
+                .iter()
+                .position(|g| *g == sel)
+                .unwrap_or_else(|| panic!("{sel:?} is not a speed group"));
+            hit[g] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "unvisited groups: {hit:?}");
+        // uneven m: 5 workers in groups of at most 2 -> sizes 2/2/1
+        let speed5 = [3.0, 2.0, 9.0, 2.5, 1.0];
+        for k in 0..50u64 {
+            let sel = p.select(5, 4, k, &speed5);
+            assert!(!sel.is_empty() && sel.len() <= 2, "{sel:?}");
+            assert!(sel.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn selection_rate_stats_accumulate() {
+        let mut s = CommStats::for_workers(4);
+        s.count_selected(&[0, 2]);
+        s.count_selected(&[1, 2]);
+        s.count_rejected(3);
+        s.count_rejoin(1);
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.worker_selected, vec![1, 1, 2, 0]);
+        assert_eq!(s.worker_rejected, vec![0, 0, 0, 1]);
+        assert_eq!(s.worker_rejoins, vec![0, 1, 0, 0]);
+        assert_eq!(s.rejected_uploads, 1);
+        assert_eq!(s.rejoins, 1);
+        // out-of-range workers never panic
+        s.count_selected(&[99]);
+        s.count_rejected(99);
+        s.count_rejoin(99);
+        assert_eq!(s.rounds, 3);
     }
 
     #[test]
@@ -658,6 +1065,7 @@ mod tests {
         for i in 0..5 {
             t.push(RoundEvent {
                 iter: i,
+                selected: vec![],
                 uploaded: vec![],
                 staleness: vec![],
                 mean_lhs: 0.0,
@@ -676,6 +1084,7 @@ mod tests {
         let mut t = EventTrace::new(0);
         t.push(RoundEvent {
             iter: 0,
+            selected: vec![],
             uploaded: vec![],
             staleness: vec![],
             mean_lhs: 0.0,
@@ -697,6 +1106,7 @@ mod tests {
         for i in 0..cap as u64 + 500 {
             t.push(RoundEvent {
                 iter: i,
+                selected: vec![],
                 uploaded: vec![],
                 staleness: vec![],
                 mean_lhs: 0.0,
@@ -721,6 +1131,7 @@ mod tests {
         for i in 0..10_000u64 {
             t.push(RoundEvent {
                 iter: i,
+                selected: vec![],
                 uploaded: vec![],
                 staleness: vec![],
                 mean_lhs: 0.0,

@@ -5,34 +5,54 @@
 //!
 //! Because a [`WorkerJob`](super::WorkerJob) is a closure, the socket
 //! transport does not execute jobs — it speaks the serializable round
-//! protocol of [`super::wire`]: per round, the server ships each worker
-//! a [`RoundMsg`](super::wire::RoundMsg) (iteration, frozen RHS,
-//! server-sampled batch indices, and theta/snapshot *delta broadcasts* —
-//! only shard ranges whose version advanced since that worker's last
-//! acknowledged round) and collects one
-//! [`WireStep`](super::wire::WireStep) per worker. Every simulated
-//! quantity (link times, jitter, participation) stays a pure function
-//! of the round on the server, and floats cross the wire bit-exactly,
-//! so a loopback socket run reproduces `InProc` bit-for-bit (enforced
-//! by `tests/golden_parity.rs::socket_matches_inproc_bit_for_bit`).
+//! protocol of [`super::wire`]: per round, the server ships each
+//! *selected* worker a [`RoundMsg`](super::wire::RoundMsg) (iteration,
+//! frozen RHS, the recipient's server-tracked staleness, the round's
+//! participant set, server-sampled batch indices, and theta/snapshot
+//! *delta broadcasts* — only shard ranges whose version advanced since
+//! that worker's last acknowledged round) and collects one
+//! [`WireStep`](super::wire::WireStep) per selected worker. Every
+//! simulated quantity (link times, jitter, participation) stays a pure
+//! function of the round on the server, and floats cross the wire
+//! bit-exactly, so a loopback socket run reproduces `InProc`
+//! bit-for-bit (enforced by
+//! `tests/golden_parity.rs::socket_matches_inproc_bit_for_bit`).
+//!
+//! The server is *nonblocking*: a hand-rolled readiness poll over
+//! nonblocking `TcpStream`s (no extra deps) admits a registered
+//! population of N slots at handshake, drives each round over an
+//! externally chosen subset of those slots (the caller draws it with
+//! [`ParticipationCfg::select`]), **rejects duplicate, stale and
+//! unselected step frames** instead of folding them, and — with churn
+//! tolerance on — survives worker disconnects mid-round (the dead
+//! slot's step is synthesized as a skip) and re-admits late
+//! (re)joiners into vacant slots. A fresh connection has acknowledged
+//! nothing, so its next round header re-ships every range: late-joiner
+//! catch-up rides the ordinary delta-broadcast machinery.
 //!
 //! Unlike the simulated `upload_bytes` config constant, [`WireStats`]
 //! counts the bytes that actually crossed the wire — the measured
 //! upload/broadcast sizes the compressed-upload line of work needs.
 
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
 use super::wire::{self, Msg, WireRound, WireStep, WireWorkerCfg};
+use super::ParticipationCfg;
 use crate::compress::{Payload, PayloadRef};
+use crate::coordinator::rules::Decision;
 use crate::coordinator::worker::WorkerState;
 use crate::data::Dataset;
 use crate::runtime::Compute;
 
-/// How long the server waits for workers to connect / answer, and a
-/// worker waits for the next round, before declaring the peer hung.
-/// Generous: a slow CI box must never trip it, a genuine hang must not
-/// stall a job forever.
+/// Default for how long the server waits for workers to connect /
+/// answer, and a worker waits for the next round, before declaring the
+/// peer hung. Generous: a slow CI box must never trip it, a genuine
+/// hang must not stall a job forever. Override via
+/// [`ParticipationCfg::socket_timeout_s`] /
+/// [`SocketServerBuilder::timeout`] — a 256-worker soak should not
+/// inherit interactive-scale patience.
 pub const SOCKET_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Measured wire traffic of one socket run (actual bytes on the wire,
@@ -67,47 +87,309 @@ pub struct WireStats {
     /// wall time the server spent parsing + decompressing step frames
     /// (not the socket read)
     pub step_decode_ns: u64,
+    /// step frames dropped instead of folded: duplicates from a worker
+    /// that already answered, stale frames carrying an old round id,
+    /// frames from unselected workers, or frames whose claimed id
+    /// differs from their connection's slot
+    pub steps_rejected: u64,
+    /// mid-run (re)admissions into vacant population slots (churn mode)
+    pub rejoins: u64,
 }
 
 /// One connected worker process, with the per-shard versions it last
-/// acknowledged (the delta-broadcast bookkeeping).
+/// acknowledged (the delta-broadcast bookkeeping) and its partial-frame
+/// accumulator (the stream is nonblocking, so a step frame may arrive
+/// across several polls).
 struct WorkerConn {
     stream: TcpStream,
+    /// bytes read off the nonblocking stream but not yet consumed as
+    /// complete frames
+    recv: Vec<u8>,
     /// per-shard theta versions this worker holds (empty = nothing yet)
     held_theta: Vec<u64>,
     /// snapshot version this worker holds
     held_snap: Option<u64>,
 }
 
-/// Server side of the socket transport: owns the listener, the M worker
-/// connections, their ack state, and the measured byte counters.
-pub struct SocketServer {
-    listener: TcpListener,
-    conns: Vec<WorkerConn>,
-    m: usize,
-    stats: WireStats,
-    scratch: Vec<u8>,
-    timeout: Duration,
+/// The static per-run facts a handshake needs, retained so mid-run
+/// (re)joiners can be greeted with the same checks and `Welcome` the
+/// startup population got.
+#[derive(Clone, Copy)]
+struct GreetInfo {
+    cfg: WireWorkerCfg,
+    batch: usize,
+    data_len: usize,
+    data_fp: u64,
 }
 
-impl SocketServer {
+/// What one [`SocketServer::run_round`] produced beyond the steps
+/// themselves: the participation bookkeeping the trainer folds into
+/// [`CommStats`](super::CommStats) and telemetry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundOutcome {
+    /// one step per selected worker, in `selected` order; a vacated
+    /// slot's entry is a synthesized skip (NaN `lhs`, no upload)
+    pub steps: Vec<WireStep>,
+    /// population slots whose frames were dropped this round
+    /// (duplicate / stale / unselected / mislabelled), one entry per
+    /// dropped frame
+    pub rejected: Vec<usize>,
+    /// population slots (re)admitted mid-round (churn mode)
+    pub rejoined: Vec<usize>,
+    /// population slots that disconnected mid-round (churn mode)
+    pub vacated: Vec<usize>,
+}
+
+/// The step a vacated slot contributes: an explicit skip (no upload, no
+/// gradient work) so the algorithm's staleness bookkeeping still
+/// advances for the dead worker. `lhs`/`loss` are NaN — the fold guards
+/// its accounting with `is_finite`, so a synthesized skip adds nothing
+/// to the drift terms or the loss curve.
+fn skip_step(k: u64, w: usize) -> WireStep {
+    WireStep {
+        k,
+        w,
+        decision: Decision { upload: false, rule_triggered: false },
+        lhs: f64::NAN,
+        loss: f32::NAN,
+        grad_evals: 0,
+        payload: Payload::Dense(Vec::new()),
+    }
+}
+
+/// Write all of `buf` to a *nonblocking* stream, napping 1 ms on
+/// `WouldBlock` until `deadline`.
+fn write_all_nb(stream: &mut TcpStream, mut buf: &[u8], deadline: Instant)
+                -> anyhow::Result<()> {
+    while !buf.is_empty() {
+        match stream.write(buf) {
+            Ok(0) => anyhow::bail!("connection closed mid-write"),
+            Ok(n) => buf = &buf[n..],
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "send stalled past the socket timeout"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Write one length-prefixed frame (same layout as
+/// [`wire::write_frame`]) to a nonblocking stream. Returns the wire
+/// bytes: 4-byte prefix + payload.
+fn write_frame_nb(stream: &mut TcpStream, payload: &[u8],
+                  deadline: Instant) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        payload.len() <= wire::MAX_FRAME,
+        "frame of {} bytes exceeds the {} byte cap",
+        payload.len(),
+        wire::MAX_FRAME
+    );
+    write_all_nb(stream, &(payload.len() as u32).to_le_bytes(), deadline)?;
+    write_all_nb(stream, payload, deadline)?;
+    Ok(4 + payload.len())
+}
+
+/// Drain everything currently readable from a nonblocking stream into
+/// the connection's frame accumulator. Returns `(hit_eof, bytes_read)`.
+fn fill_recv(conn: &mut WorkerConn) -> std::io::Result<(bool, usize)> {
+    let mut tmp = [0u8; 16 * 1024];
+    let mut total = 0usize;
+    loop {
+        match conn.stream.read(&mut tmp) {
+            Ok(0) => return Ok((true, total)),
+            Ok(n) => {
+                conn.recv.extend_from_slice(&tmp[..n]);
+                total += n;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                return Ok((false, total))
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Pop one complete length-prefixed frame off the accumulator, if one
+/// has fully arrived. Applies the same `MAX_FRAME` hostile-length guard
+/// as [`wire::read_frame`].
+fn take_frame(recv: &mut Vec<u8>) -> anyhow::Result<Option<Vec<u8>>> {
+    if recv.len() < 4 {
+        return Ok(None);
+    }
+    let len =
+        u32::from_le_bytes([recv[0], recv[1], recv[2], recv[3]]) as usize;
+    anyhow::ensure!(
+        len <= wire::MAX_FRAME,
+        "wire frame of {len} bytes exceeds the {} byte cap",
+        wire::MAX_FRAME
+    );
+    if recv.len() < 4 + len {
+        return Ok(None);
+    }
+    let frame = recv[4..4 + len].to_vec();
+    recv.drain(..4 + len);
+    Ok(Some(frame))
+}
+
+/// Builds a [`SocketServer`]: `SocketServer::builder(addr)
+/// .population(n).select(s).quorum(k).build()`. Defaults reproduce the
+/// historical fixed-M server: population 1, everyone selected every
+/// round, no quorum, no churn, 120 s timeouts — the fixed-M path is the
+/// `population == selected == quorum` degenerate case.
+#[derive(Clone, Debug)]
+pub struct SocketServerBuilder {
+    addr: String,
+    population: usize,
+    select: usize,
+    quorum: usize,
+    timeout: Duration,
+    churn: bool,
+    min_live: usize,
+}
+
+impl SocketServerBuilder {
+    /// Registered population N: how many worker slots the handshake
+    /// admits.
+    pub fn population(mut self, n: usize) -> Self {
+        self.population = n;
+        self
+    }
+
+    /// Advisory per-round selection size S (0 = everyone). The caller
+    /// draws each round's actual subset (see
+    /// [`ParticipationCfg::select`]) and passes it to
+    /// [`SocketServer::run_round`]; the builder only validates the
+    /// sizes are consistent.
+    pub fn select(mut self, s: usize) -> Self {
+        self.select = s;
+        self
+    }
+
+    /// Advisory semi-sync quorum K within the selected subset (0 =
+    /// wait for the whole subset). Like `select`, recorded and
+    /// validated here; the event clock applies it.
+    pub fn quorum(mut self, k: usize) -> Self {
+        self.quorum = k;
+        self
+    }
+
+    /// Socket accept/read/write patience (handshake and per-round).
+    pub fn timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Churn tolerance: vacate disconnected slots (synthesizing skip
+    /// steps) instead of failing the round, and admit late (re)joiners
+    /// into vacant slots mid-run. `min_live` is the floor of live
+    /// sockets below which even a churn-mode round fails (0 = 1).
+    pub fn churn(mut self, on: bool, min_live: usize) -> Self {
+        self.churn = on;
+        self.min_live = min_live;
+        self
+    }
+
+    /// Copy every knob [`ParticipationCfg`] carries; `m` is the run's
+    /// worker count (the meaning of `population = 0`).
+    pub fn participation(mut self, p: &ParticipationCfg, m: usize) -> Self {
+        self.population = if p.population == 0 { m } else { p.population };
+        self.select = p.effective_selected(self.population);
+        self.quorum = p.quorum;
+        self.timeout = p.socket_timeout();
+        self.churn = p.churn;
+        self.min_live = if p.churn { p.min_live() } else { 0 };
+        self
+    }
+
     /// Bind the listen address (port 0 picks an ephemeral port; see
     /// [`SocketServer::local_addr`]). Workers are accepted later, by
     /// [`SocketServer::handshake`] — so a caller can learn the bound
     /// address and launch workers before the first round blocks.
-    pub fn bind(addr: &str, m: usize) -> anyhow::Result<SocketServer> {
-        anyhow::ensure!(m >= 1, "socket transport needs >= 1 worker");
-        let listener = TcpListener::bind(addr).map_err(|e| {
-            anyhow::anyhow!("binding socket transport on {addr}: {e}")
+    pub fn build(self) -> anyhow::Result<SocketServer> {
+        anyhow::ensure!(
+            self.population >= 1,
+            "socket transport needs >= 1 worker"
+        );
+        anyhow::ensure!(
+            self.select <= self.population,
+            "per-round selection {} exceeds the population {}",
+            self.select,
+            self.population
+        );
+        let subset = if self.select == 0 {
+            self.population
+        } else {
+            self.select
+        };
+        anyhow::ensure!(
+            self.quorum <= subset,
+            "quorum {} exceeds the per-round selection {subset}",
+            self.quorum
+        );
+        anyhow::ensure!(
+            self.min_live <= self.population,
+            "min_live {} exceeds the population {}",
+            self.min_live,
+            self.population
+        );
+        let listener = TcpListener::bind(&self.addr).map_err(|e| {
+            anyhow::anyhow!("binding socket transport on {}: {e}", self.addr)
         })?;
+        listener.set_nonblocking(true)?;
+        let mut conns = Vec::with_capacity(self.population);
+        conns.resize_with(self.population, || None);
         Ok(SocketServer {
             listener,
-            conns: Vec::new(),
-            m,
+            conns,
+            m: self.population,
+            select: self.select,
+            quorum: self.quorum,
             stats: WireStats::default(),
             scratch: Vec::new(),
-            timeout: SOCKET_TIMEOUT,
+            timeout: self.timeout,
+            churn: self.churn,
+            min_live: self.min_live.max(1),
+            greet_info: None,
         })
+    }
+}
+
+/// Server side of the socket transport: owns the nonblocking listener,
+/// the N population slots (a slot is `None` while vacated by churn),
+/// their ack state, and the measured byte counters.
+pub struct SocketServer {
+    listener: TcpListener,
+    conns: Vec<Option<WorkerConn>>,
+    m: usize,
+    select: usize,
+    quorum: usize,
+    stats: WireStats,
+    scratch: Vec<u8>,
+    timeout: Duration,
+    churn: bool,
+    min_live: usize,
+    greet_info: Option<GreetInfo>,
+}
+
+impl SocketServer {
+    /// Start configuring a server; see [`SocketServerBuilder`].
+    pub fn builder(addr: &str) -> SocketServerBuilder {
+        SocketServerBuilder {
+            addr: addr.to_string(),
+            population: 1,
+            select: 0,
+            quorum: 0,
+            timeout: SOCKET_TIMEOUT,
+            churn: false,
+            min_live: 0,
+        }
     }
 
     /// The bound listen address (the actual port when bound to port 0).
@@ -115,9 +397,19 @@ impl SocketServer {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Number of worker processes this server coordinates.
+    /// Registered population N: worker slots this server coordinates.
     pub fn workers(&self) -> usize {
         self.m
+    }
+
+    /// The advisory per-round selection size (0 = everyone).
+    pub fn select_size(&self) -> usize {
+        self.select
+    }
+
+    /// The advisory semi-sync quorum (0 = the whole subset).
+    pub fn quorum_size(&self) -> usize {
+        self.quorum
     }
 
     /// Measured wire traffic so far.
@@ -128,41 +420,43 @@ impl SocketServer {
     /// Does the next round need to accept + handshake workers first?
     /// (Lets the caller compute the dataset fingerprint only once.)
     pub fn needs_handshake(&self) -> bool {
-        self.conns.is_empty()
+        self.greet_info.is_none()
     }
 
-    /// Accept the M worker connections and exchange the handshake
-    /// (no-op once connected): each worker's `Hello` fingerprint
-    /// (dataset length + content checksum, backend parameter count)
-    /// must match this run, and gets back a `Welcome` with its assigned
-    /// id and the static run config.
+    fn live(&self) -> usize {
+        self.conns.iter().flatten().count()
+    }
+
+    /// Accept the N population connections and exchange the handshake
+    /// (no-op once done): each worker's `Hello` fingerprint (dataset
+    /// length + content checksum, backend parameter count) must match
+    /// this run, and gets back a `Welcome` with its assigned slot and
+    /// the static run config. The config is retained so churn-mode
+    /// (re)joiners can be greeted identically mid-run.
     pub fn handshake(&mut self, cfg: &WireWorkerCfg, batch: usize,
                      data_len: usize, data_fp: u64) -> anyhow::Result<()> {
-        if !self.conns.is_empty() {
+        if self.greet_info.is_some() {
             return Ok(());
         }
-        self.listener.set_nonblocking(true)?;
+        self.greet_info = Some(GreetInfo { cfg: *cfg, batch, data_len,
+                                           data_fp });
         let deadline = Instant::now() + self.timeout;
-        while self.conns.len() < self.m {
+        while self.live() < self.m {
             match self.listener.accept() {
                 Ok((stream, peer)) => {
-                    let w = self.conns.len();
-                    self.greet(stream, peer, w, cfg, batch, data_len,
-                               data_fp)
-                        .map_err(|e| {
-                            anyhow::anyhow!(
-                                "handshake with worker {w} ({peer}): {e:#}")
-                        })?;
+                    self.greet(stream, peer).map_err(|e| {
+                        anyhow::anyhow!("handshake with worker {peer}: {e:#}")
+                    })?;
                 }
                 Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    if e.kind() == ErrorKind::WouldBlock =>
                 {
                     anyhow::ensure!(
                         Instant::now() < deadline,
                         "timed out waiting for {} of {} worker \
                          process(es) to connect (start them with `cada \
                          worker --connect <this address>`)",
-                        self.m - self.conns.len(),
+                        self.m - self.live(),
                         self.m
                     );
                     std::thread::sleep(Duration::from_millis(5));
@@ -170,59 +464,133 @@ impl SocketServer {
                 Err(e) => return Err(e.into()),
             }
         }
-        self.listener.set_nonblocking(false)?;
         Ok(())
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn greet(&mut self, mut stream: TcpStream, peer: SocketAddr, w: usize,
-             cfg: &WireWorkerCfg, batch: usize, data_len: usize,
-             data_fp: u64) -> anyhow::Result<()> {
+    /// Validate one new connection's `Hello`/`Rejoin` against the run
+    /// and install it: `Hello` takes the first vacant slot, `Rejoin`
+    /// the slot it claims (which must be vacant). The stream is
+    /// blocking (bounded by the read timeout) for the exchange, then
+    /// joins the nonblocking pool. Returns the assigned slot.
+    fn greet(&mut self, mut stream: TcpStream, peer: SocketAddr)
+             -> anyhow::Result<usize> {
+        let info = self
+            .greet_info
+            .ok_or_else(|| anyhow::anyhow!("greeting before handshake"))?;
         stream.set_nodelay(true)?;
         stream.set_nonblocking(false)?;
         stream.set_read_timeout(Some(self.timeout))?;
-        let hello = match wire::recv(&mut stream, &mut self.scratch)? {
+        let hail = match wire::recv(&mut stream, &mut self.scratch)? {
             Some((msg, bytes)) => {
                 self.stats.bytes_received += bytes as u64;
                 msg
             }
             None => anyhow::bail!("{peer} closed before saying hello"),
         };
-        let (n, fp, p) = match hello {
-            Msg::Hello { n, fp, p } => (n as usize, fp, p as usize),
-            other => anyhow::bail!("expected Hello, got {other:?}"),
+        let (want_slot, n, fp, p) = match hail {
+            Msg::Hello { n, fp, p } => (None, n as usize, fp, p as usize),
+            Msg::Rejoin { w, n, fp, p } => {
+                (Some(w as usize), n as usize, fp, p as usize)
+            }
+            other => anyhow::bail!("expected Hello or Rejoin, got {other:?}"),
         };
         anyhow::ensure!(
-            n == data_len,
-            "worker dataset has {n} samples, this run needs {data_len} \
-             (same preset/seed/n on both sides?)"
+            n == info.data_len,
+            "worker dataset has {n} samples, this run needs {} \
+             (same preset/seed/n on both sides?)",
+            info.data_len
         );
         // length alone cannot tell a wrong --seed/--run apart: the
         // content checksum fails silent divergence at connect time
         anyhow::ensure!(
-            fp == data_fp,
+            fp == info.data_fp,
             "worker dataset content differs from this run's \
-             (fingerprint {fp:#018x} vs {data_fp:#018x}): same \
-             preset/seed/n/run on both sides?"
+             (fingerprint {fp:#018x} vs {:#018x}): same \
+             preset/seed/n/run on both sides?",
+            info.data_fp
         );
         anyhow::ensure!(
-            p == cfg.p,
+            p == info.cfg.p,
             "worker backend has p = {p}, this run needs p = {}",
-            cfg.p
+            info.cfg.p
         );
+        let w = match want_slot {
+            Some(w) => {
+                anyhow::ensure!(
+                    w < self.m,
+                    "rejoin claims slot {w}, population is {}",
+                    self.m
+                );
+                anyhow::ensure!(
+                    self.conns[w].is_none(),
+                    "rejoin claims slot {w}, which is still connected"
+                );
+                w
+            }
+            None => self
+                .conns
+                .iter()
+                .position(|c| c.is_none())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no vacant slot for {peer} (population {} is \
+                         fully connected)",
+                        self.m
+                    )
+                })?,
+        };
         let welcome = Msg::Welcome {
             w: w as u32,
             m: self.m as u32,
-            batch: batch as u32,
-            cfg: *cfg,
+            batch: info.batch as u32,
+            cfg: info.cfg,
         };
         self.stats.bytes_sent +=
             wire::send(&mut stream, &welcome, &mut self.scratch)? as u64;
-        self.conns.push(WorkerConn {
+        stream.set_nonblocking(true)?;
+        self.conns[w] = Some(WorkerConn {
             stream,
+            recv: Vec::new(),
             held_theta: Vec::new(),
             held_snap: None,
         });
+        Ok(w)
+    }
+
+    /// Churn mode, between polls: admit every connection queued on the
+    /// listener into a vacant slot. A (re)joiner sits out the open
+    /// round — catch-up happens through its cleared ack state when it
+    /// is next selected. A broken joiner (bad fingerprint, no vacant
+    /// slot) is dropped without failing the round.
+    fn admit_joiners(&mut self, rejoined: &mut Vec<usize>)
+                     -> anyhow::Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if let Ok(w) = self.greet(stream, peer) {
+                        self.stats.rejoins += 1;
+                        rejoined.push(w);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return Ok(())
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Vacate slot `w` after a disconnect, enforcing the churn floor.
+    fn vacate(&mut self, w: usize, k: u64) -> anyhow::Result<()> {
+        self.conns[w] = None;
+        let live = self.live();
+        anyhow::ensure!(
+            live >= self.min_live,
+            "worker {w} disconnected in round {k} and only {live} live \
+             socket(s) remain, below the churn floor (min_live = {})",
+            self.min_live
+        );
         Ok(())
     }
 
@@ -263,26 +631,76 @@ impl SocketServer {
         (theta, snapshot)
     }
 
-    /// Drive one round across the worker processes: ship each its
-    /// header, collect one step result per worker, and return them in
-    /// worker order. On a failure mid-round the results of workers that
-    /// did receive a header are still drained (mirroring the `Threaded`
-    /// transport), then the first error is returned.
-    pub fn run_round(&mut self, round: &WireRound,
+    /// Drive one round over `selected` (sorted, unique population
+    /// slots): ship each selected worker its header, collect one step
+    /// per selected worker, and return them in `selected` order
+    /// (physical arrival order never leaks into the fold). The caller
+    /// owns the selection — [`ParticipationCfg::select`] is the
+    /// canonical way to draw it; this method only checks it is
+    /// well-formed. `batches[i]` is the minibatch for `selected[i]`.
+    ///
+    /// Frames that are not the open round's expected next step — a
+    /// duplicate from a worker that already answered, a stale frame
+    /// carrying an old `k`, a frame from an unselected worker, or one
+    /// whose claimed id differs from its connection's slot — are
+    /// dropped and counted ([`WireStats::steps_rejected`],
+    /// [`RoundOutcome::rejected`]) instead of folded. With churn
+    /// tolerance on, a worker disconnecting mid-round vacates its slot
+    /// and its step is synthesized as a skip; new connections are
+    /// admitted into vacant slots between polls.
+    pub fn run_round(&mut self, round: &WireRound, selected: &[usize],
                      batches: &[Vec<u32>])
-                     -> anyhow::Result<Vec<WireStep>> {
+                     -> anyhow::Result<RoundOutcome> {
         anyhow::ensure!(
-            self.conns.len() == self.m && batches.len() == self.m,
-            "run_round wants {} workers (have {} connected, {} batches)",
-            self.m,
-            self.conns.len(),
+            self.greet_info.is_some(),
+            "run_round before the handshake admitted the population"
+        );
+        anyhow::ensure!(
+            !selected.is_empty() && batches.len() == selected.len(),
+            "run_round wants a non-empty selection with one batch per \
+             selected worker (got {} selected, {} batches)",
+            selected.len(),
             batches.len()
         );
-        let mut first_err: Option<anyhow::Error> = None;
-        let mut dispatched = 0usize;
-        for (w, conn) in self.conns.iter_mut().enumerate() {
-            // zero-copy header: collect borrowed dirty ranges and
-            // serialize them straight into the frame scratch
+        anyhow::ensure!(
+            selected.windows(2).all(|p| p[0] < p[1])
+                && selected[selected.len() - 1] < self.m,
+            "run_round selection must be sorted, unique and within the \
+             population of {}",
+            self.m
+        );
+        // position of slot w in the selected list; usize::MAX = not
+        // selected this round
+        let mut pos_of = vec![usize::MAX; self.m];
+        for (i, &w) in selected.iter().enumerate() {
+            pos_of[w] = i;
+        }
+        // full participation ships no list at all, keeping the
+        // degenerate header bytes independent of the selection feature
+        let wire_selected: Vec<u32> = if selected.len() == self.m {
+            Vec::new()
+        } else {
+            selected.iter().map(|&w| w as u32).collect()
+        };
+        let deadline = Instant::now() + self.timeout;
+        let mut outcome = RoundOutcome::default();
+        let mut slots: Vec<Option<WireStep>> =
+            Vec::with_capacity(selected.len());
+        slots.resize_with(selected.len(), || None);
+
+        // dispatch: one header per selected, live worker
+        for (i, &w) in selected.iter().enumerate() {
+            let Some(conn) = self.conns[w].as_mut() else {
+                // vacated in an earlier round and not yet refilled: the
+                // algorithm still folds a skip so staleness advances
+                anyhow::ensure!(
+                    self.churn,
+                    "worker {w} is disconnected (vacant population \
+                     slot) and churn tolerance is off"
+                );
+                slots[i] = Some(skip_step(round.k, w));
+                continue;
+            };
             let t0 = Instant::now();
             let (theta, snapshot) =
                 Self::dirty_ranges(conn, round, &mut self.stats);
@@ -290,7 +708,9 @@ impl SocketServer {
                 &wire::RoundHeaderRef {
                     k: round.k,
                     rhs: round.rhs,
-                    batch: batches[w].as_slice(),
+                    tau: round.taus.get(w).copied().unwrap_or(0),
+                    selected: &wire_selected,
+                    batch: batches[i].as_slice(),
                     theta: &theta,
                     snapshot: &snapshot,
                 },
@@ -298,99 +718,131 @@ impl SocketServer {
             );
             self.stats.header_encode_ns +=
                 t0.elapsed().as_nanos() as u64;
-            match wire::write_frame(&mut conn.stream, &self.scratch) {
-                Ok(bytes) => {
-                    self.stats.bytes_sent += bytes as u64;
-                    dispatched += 1;
-                }
+            match write_frame_nb(&mut conn.stream, &self.scratch, deadline)
+            {
+                Ok(bytes) => self.stats.bytes_sent += bytes as u64,
                 Err(e) => {
-                    first_err = Some(anyhow::anyhow!(
-                        "sending round {} to worker {w}: {e:#}",
-                        round.k
-                    ));
-                    break;
+                    if !self.churn {
+                        return Err(anyhow::anyhow!(
+                            "sending round {} to worker {w}: {e:#}",
+                            round.k
+                        ));
+                    }
+                    self.vacate(w, round.k)?;
+                    slots[i] = Some(skip_step(round.k, w));
+                    outcome.vacated.push(w);
                 }
             }
         }
-        // collect every dispatched worker's result, draining even after
-        // an error so no completion leaks into a later read
-        let mut steps = Vec::with_capacity(dispatched);
-        for (w, conn) in self.conns.iter_mut().take(dispatched).enumerate()
-        {
-            match wire::read_frame(&mut conn.stream, &mut self.scratch) {
-                Ok(Some(bytes)) => {
-                    self.stats.bytes_received += bytes as u64;
+
+        // poll: sweep every live slot for readable frames (and, in
+        // churn mode, the listener for joiners) until each selected
+        // slot has a step
+        while slots.iter().any(|s| s.is_none()) {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "timed out waiting for {} worker step(s) in round {}",
+                slots.iter().filter(|s| s.is_none()).count(),
+                round.k
+            );
+            if self.churn {
+                self.admit_joiners(&mut outcome.rejoined)?;
+            }
+            for w in 0..self.m {
+                let mut eof = false;
+                let mut frames: Vec<Vec<u8>> = Vec::new();
+                {
+                    let Some(conn) = self.conns[w].as_mut() else {
+                        continue;
+                    };
+                    match fill_recv(conn) {
+                        Ok((hit_eof, bytes)) => {
+                            eof = hit_eof;
+                            self.stats.bytes_received += bytes as u64;
+                        }
+                        Err(e) => {
+                            if !self.churn {
+                                return Err(anyhow::anyhow!(
+                                    "reading worker {w}'s round-{} \
+                                     result: {e:#}",
+                                    round.k
+                                ));
+                            }
+                            eof = true;
+                        }
+                    }
+                    while let Some(f) = take_frame(&mut conn.recv)? {
+                        frames.push(f);
+                    }
+                }
+                for frame in frames {
                     // parse the frame as a borrowed view and decompress
                     // straight into the dense vector the fold consumes:
                     // one parse, one allocation, no intermediate owned
                     // payload copy
                     let t0 = Instant::now();
-                    let parsed = wire::decode_step_view(&self.scratch)
+                    let parsed = wire::decode_step_view(&frame)
                         .and_then(|view| {
                             let dense = view.payload.decompress()?;
                             Ok((view, dense))
                         });
                     self.stats.step_decode_ns +=
                         t0.elapsed().as_nanos() as u64;
-                    match parsed {
-                        Ok((view, dense)) => {
-                            if view.w != w {
-                                if first_err.is_none() {
-                                    first_err = Some(anyhow::anyhow!(
-                                        "worker {w} answered as worker {}",
-                                        view.w
-                                    ));
-                                }
-                                continue;
-                            }
-                            if view.decision.upload {
-                                self.stats.upload_raw_bytes +=
-                                    view.payload.raw_bytes();
-                                self.stats.upload_wire_bytes +=
-                                    view.payload.encoded_bytes();
-                            }
-                            steps.push(WireStep {
-                                w: view.w,
-                                decision: view.decision,
-                                lhs: view.lhs,
-                                loss: view.loss,
-                                grad_evals: view.grad_evals,
-                                payload: Payload::Dense(dense),
-                            });
-                        }
-                        Err(e) => {
-                            if first_err.is_none() {
-                                first_err = Some(anyhow::anyhow!(
-                                    "worker {w}'s round-{} result: {e:#}",
-                                    round.k
-                                ));
-                            }
-                        }
-                    }
-                }
-                Ok(None) => {
-                    if first_err.is_none() {
-                        first_err = Some(anyhow::anyhow!(
-                            "worker {w} disconnected during round {}",
+                    let (view, dense) = parsed.map_err(|e| {
+                        anyhow::anyhow!(
+                            "worker {w}'s round-{} result: {e:#}",
                             round.k
-                        ));
+                        )
+                    })?;
+                    let pos = pos_of[w];
+                    let fresh = pos != usize::MAX
+                        && slots[pos].is_none()
+                        && view.k == round.k
+                        && view.w == w;
+                    if !fresh {
+                        // duplicate, stale round, unselected slot, or a
+                        // mislabelled id: drop it, count it, keep going
+                        self.stats.steps_rejected += 1;
+                        outcome.rejected.push(w);
+                        continue;
                     }
+                    if view.decision.upload {
+                        self.stats.upload_raw_bytes +=
+                            view.payload.raw_bytes();
+                        self.stats.upload_wire_bytes +=
+                            view.payload.encoded_bytes();
+                    }
+                    slots[pos] = Some(WireStep {
+                        k: view.k,
+                        w: view.w,
+                        decision: view.decision,
+                        lhs: view.lhs,
+                        loss: view.loss,
+                        grad_evals: view.grad_evals,
+                        payload: Payload::Dense(dense),
+                    });
                 }
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(anyhow::anyhow!(
-                            "reading worker {w}'s round-{} result: {e:#}",
-                            round.k
-                        ));
+                if eof {
+                    anyhow::ensure!(
+                        self.churn,
+                        "worker {w} disconnected during round {}",
+                        round.k
+                    );
+                    self.vacate(w, round.k)?;
+                    outcome.vacated.push(w);
+                    let pos = pos_of[w];
+                    if pos != usize::MAX && slots[pos].is_none() {
+                        slots[pos] = Some(skip_step(round.k, w));
                     }
                 }
             }
+            if slots.iter().any(|s| s.is_none()) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
         }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
+        outcome.steps = slots.into_iter().flatten().collect();
         self.stats.rounds += 1;
-        Ok(steps)
+        Ok(outcome)
     }
 }
 
@@ -398,7 +850,11 @@ impl Drop for SocketServer {
     fn drop(&mut self) {
         // best-effort: let worker processes exit cleanly instead of
         // discovering the EOF
-        for conn in &mut self.conns {
+        for conn in self.conns.iter_mut().flatten() {
+            let _ = conn.stream.set_nonblocking(false);
+            let _ = conn
+                .stream
+                .set_write_timeout(Some(Duration::from_secs(1)));
             let _ = wire::send(&mut conn.stream, &Msg::Shutdown,
                                &mut self.scratch);
         }
@@ -408,10 +864,46 @@ impl Drop for SocketServer {
 /// Outcome of one worker process's run (logging/tests).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkerReport {
-    /// the id the server assigned in the handshake
+    /// the slot the server assigned in the handshake
     pub w: usize,
     pub rounds: u64,
     pub uploads: u64,
+}
+
+/// Per-process knobs for [`run_worker_opts`]. `Default` reproduces
+/// [`run_worker`]: interactive-scale timeouts, fresh `Hello` handshake.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerOpts {
+    /// connect-retry budget (the server may still be binding)
+    pub connect: Duration,
+    /// read timeout: bounds the wait for the *next* round header, so a
+    /// long-unselected worker still notices a hung server
+    pub timeout: Duration,
+    /// claim this population slot with a churn-mode `Rejoin` handshake
+    /// instead of a fresh `Hello`
+    pub rejoin_slot: Option<u32>,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            connect: SOCKET_TIMEOUT,
+            timeout: SOCKET_TIMEOUT,
+            rejoin_slot: None,
+        }
+    }
+}
+
+impl WorkerOpts {
+    /// The worker-side view of a run's [`ParticipationCfg`]: its
+    /// timeout and connect-retry budget.
+    pub fn from_participation(p: &ParticipationCfg) -> Self {
+        WorkerOpts {
+            connect: p.connect_retry(),
+            timeout: p.socket_timeout(),
+            rejoin_slot: None,
+        }
+    }
 }
 
 /// Connect with retries until `timeout` (the server process may still
@@ -454,6 +946,13 @@ pub fn connect_retry(addr: &str, timeout: Duration)
     }
 }
 
+/// [`run_worker_opts`] with the historical defaults (120 s timeouts,
+/// fresh `Hello` handshake).
+pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
+                  -> anyhow::Result<WorkerReport> {
+    run_worker_opts(addr, data, compute, &WorkerOpts::default())
+}
+
 /// The worker process's whole life: connect, handshake, then answer
 /// round headers until the server says shutdown (or closes the
 /// connection between rounds, which a finished run also does).
@@ -461,22 +960,32 @@ pub fn connect_retry(addr: &str, timeout: Duration)
 /// `data` must be the same dataset the server samples indices from
 /// (same preset, run seed and size — the handshake cross-checks both
 /// the length and a whole-dataset content fingerprint), and `compute`
-/// a backend with the server's parameter count.
-pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
-                  -> anyhow::Result<WorkerReport> {
-    let mut stream = connect_retry(addr, SOCKET_TIMEOUT)?;
+/// a backend with the server's parameter count. Under per-round
+/// selection the worker simply blocks until its next header: the
+/// header carries the server-tracked staleness `tau`, which the worker
+/// adopts so its rule sees the same staleness it would on any other
+/// transport (a bit-exact no-op under full participation).
+pub fn run_worker_opts(addr: &str, data: &Dataset,
+                       compute: &mut dyn Compute, opts: &WorkerOpts)
+                       -> anyhow::Result<WorkerReport> {
+    let mut stream = connect_retry(addr, opts.connect)?;
     stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(SOCKET_TIMEOUT))?;
+    stream.set_read_timeout(Some(opts.timeout))?;
     let mut scratch = Vec::new();
-    wire::send(
-        &mut stream,
-        &Msg::Hello {
+    let hail = match opts.rejoin_slot {
+        Some(w) => Msg::Rejoin {
+            w,
             n: data.len() as u64,
             fp: data.fingerprint(),
             p: compute.p_pad() as u64,
         },
-        &mut scratch,
-    )?;
+        None => Msg::Hello {
+            n: data.len() as u64,
+            fp: data.fingerprint(),
+            p: compute.p_pad() as u64,
+        },
+    };
+    wire::send(&mut stream, &hail, &mut scratch)?;
     let welcome = wire::recv(&mut stream, &mut scratch)?;
     let (w, cfg, batch) = match welcome {
         Some((Msg::Welcome { w, cfg, batch, .. }, _)) => {
@@ -490,6 +999,12 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
              mismatch, or too many workers for this run?)"
         ),
     };
+    if let Some(want) = opts.rejoin_slot {
+        anyhow::ensure!(
+            w == want as usize,
+            "rejoin asked for slot {want}, server assigned {w}"
+        );
+    }
     anyhow::ensure!(
         cfg.p == compute.p_pad(),
         "server wants p = {}, backend has p = {}",
@@ -515,6 +1030,17 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
                 anyhow::bail!("expected a round header, got {other:?}")
             }
         };
+        // a header only ever reaches selected workers, but check
+        // anyway: answering an unselected round would desync the fold
+        if !round.selected.is_empty() {
+            anyhow::ensure!(
+                round.selected.binary_search(&(w as u32)).is_ok(),
+                "round {} selects {:?}, but its header reached worker \
+                 {w}",
+                round.k,
+                round.selected
+            );
+        }
         for delta in &round.theta {
             delta.apply(&mut theta)?;
         }
@@ -541,6 +1067,10 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
             );
             picks.push(i);
         }
+        // adopt the server-tracked staleness: a worker left unselected
+        // (or freshly rejoined) resumes with the server's count, so its
+        // rule decides exactly as the InProc mirror does
+        state.tau = round.tau;
         let minibatch = data.gather(&picks);
         let step = state.step(
             round.k,
@@ -573,6 +1103,7 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
         wire::send_step(
             &mut stream,
             &wire::WireStepRef {
+                k: round.k,
                 w,
                 decision: step.decision,
                 lhs: step.lhs,
@@ -590,6 +1121,7 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
 mod tests {
     use super::*;
     use crate::coordinator::shard::ShardLayout;
+    use std::sync::mpsc;
     use std::sync::Arc;
 
     fn round(k: u64, p: usize, shards: usize, versions: Vec<u64>,
@@ -601,6 +1133,67 @@ mod tests {
             layout: ShardLayout::new(p, shards),
             versions,
             snapshot,
+            taus: Vec::new(),
+        }
+    }
+
+    fn test_cfg(p: usize) -> WireWorkerCfg {
+        WireWorkerCfg {
+            rule: crate::coordinator::rules::RuleKind::Always,
+            max_delay: 50,
+            use_artifact_innov: false,
+            p,
+            compress: crate::compress::CompressCfg::default(),
+        }
+    }
+
+    /// Scripted worker: connect, hail, expect a `Welcome`.
+    fn script_connect(addr: &str, hail: Msg) -> (TcpStream, usize) {
+        let mut stream =
+            connect_retry(addr, Duration::from_secs(10)).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut scratch = Vec::new();
+        wire::send(&mut stream, &hail, &mut scratch).unwrap();
+        match wire::recv(&mut stream, &mut scratch).unwrap() {
+            Some((Msg::Welcome { w, .. }, _)) => (stream, w as usize),
+            other => panic!("expected Welcome, got {other:?}"),
+        }
+    }
+
+    fn expect_round(stream: &mut TcpStream, scratch: &mut Vec<u8>)
+                    -> wire::RoundMsg {
+        match wire::recv(stream, scratch).unwrap() {
+            Some((Msg::Round(r), _)) => r,
+            other => panic!("expected a round header, got {other:?}"),
+        }
+    }
+
+    fn send_step(stream: &mut TcpStream, k: u64, w: usize,
+                 scratch: &mut Vec<u8>) {
+        wire::send_step(
+            stream,
+            &wire::WireStepRef {
+                k,
+                w,
+                decision: Decision { upload: false,
+                                     rule_triggered: false },
+                lhs: 0.25,
+                loss: 0.5,
+                grad_evals: 1,
+                payload: PayloadRef::Dense(&[]),
+            },
+            scratch,
+        )
+        .unwrap();
+    }
+
+    fn expect_shutdown(stream: &mut TcpStream, scratch: &mut Vec<u8>) {
+        match wire::recv(stream, scratch).unwrap() {
+            Some((Msg::Shutdown, _)) | None => {}
+            Some((other, _)) => panic!("expected Shutdown, got {other:?}"),
         }
     }
 
@@ -612,6 +1205,7 @@ mod tests {
             // a bound-but-unused stream stand-in is overkill; connect a
             // loopback pair just to own a TcpStream
             stream: loopback_stream(),
+            recv: Vec::new(),
             held_theta: Vec::new(),
             held_snap: None,
         };
@@ -632,6 +1226,8 @@ mod tests {
             &wire::RoundHeaderRef {
                 k: r0.k,
                 rhs: r0.rhs,
+                tau: 0,
+                selected: &[],
                 batch: &[3, 1],
                 theta: &theta0,
                 snapshot: &snap0,
@@ -670,15 +1266,39 @@ mod tests {
     }
 
     #[test]
+    fn builder_validates_population_selection_and_quorum() {
+        assert!(SocketServer::builder("127.0.0.1:0")
+            .population(0)
+            .build()
+            .is_err());
+        assert!(SocketServer::builder("127.0.0.1:0")
+            .population(4)
+            .select(8)
+            .build()
+            .is_err());
+        assert!(SocketServer::builder("127.0.0.1:0")
+            .population(4)
+            .select(2)
+            .quorum(3)
+            .build()
+            .is_err());
+        let s = SocketServer::builder("127.0.0.1:0")
+            .population(4)
+            .select(2)
+            .quorum(2)
+            .build()
+            .unwrap();
+        assert_eq!(s.workers(), 4);
+        assert_eq!(s.select_size(), 2);
+        assert_eq!(s.quorum_size(), 2);
+        assert!(s.needs_handshake());
+    }
+
+    #[test]
     fn handshake_rejects_mismatched_fingerprints() {
-        let cfg = WireWorkerCfg {
-            rule: crate::coordinator::rules::RuleKind::Always,
-            max_delay: 50,
-            use_artifact_innov: false,
-            p: 64,
-            compress: crate::compress::CompressCfg::default(),
-        };
-        let mut server = SocketServer::bind("127.0.0.1:0", 1).unwrap();
+        let cfg = test_cfg(64);
+        let mut server =
+            SocketServer::builder("127.0.0.1:0").build().unwrap();
         let addr = server.local_addr().unwrap().to_string();
         let bad = std::thread::spawn(move || {
             let mut stream =
@@ -699,7 +1319,8 @@ mod tests {
 
         // right length, wrong CONTENT: the fingerprint catches a worker
         // regenerated from the wrong seed/run
-        let mut server = SocketServer::bind("127.0.0.1:0", 1).unwrap();
+        let mut server =
+            SocketServer::builder("127.0.0.1:0").build().unwrap();
         let addr = server.local_addr().unwrap().to_string();
         let bad = std::thread::spawn(move || {
             let mut stream =
@@ -716,5 +1337,196 @@ mod tests {
         let err = server.handshake(&cfg, 8, 100, 1).unwrap_err();
         assert!(err.to_string().contains("fingerprint"), "{err}");
         bad.join().unwrap();
+    }
+
+    /// Duplicate steps from an answered worker and unsolicited steps
+    /// from an unselected worker are dropped + counted, never folded.
+    #[test]
+    fn rejects_duplicate_and_unselected_steps() {
+        const P: usize = 4;
+        let cfg = test_cfg(P);
+        let mut server = SocketServer::builder("127.0.0.1:0")
+            .population(2)
+            .timeout(Duration::from_secs(10))
+            .build()
+            .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let (go_tx, go_rx) = mpsc::channel::<()>();
+        let (rogue_tx, rogue_rx) = mpsc::channel::<()>();
+
+        let a_addr = addr.clone();
+        let a = std::thread::spawn(move || {
+            let (mut stream, w) = script_connect(
+                &a_addr,
+                Msg::Hello { n: 100, fp: 1, p: P as u64 },
+            );
+            assert_eq!(w, 0, "first connector takes slot 0");
+            go_tx.send(()).unwrap();
+            let mut scratch = Vec::new();
+            let r0 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r0.k, 0);
+            assert_eq!(r0.selected, vec![0],
+                       "partial rounds ship the participant set");
+            send_step(&mut stream, 0, 0, &mut scratch);
+            send_step(&mut stream, 0, 0, &mut scratch); // duplicate
+            let r1 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r1.k, 1);
+            send_step(&mut stream, 1, 0, &mut scratch);
+            expect_shutdown(&mut stream, &mut scratch);
+        });
+        let b_addr = addr;
+        let b = std::thread::spawn(move || {
+            go_rx.recv().unwrap();
+            let (mut stream, w) = script_connect(
+                &b_addr,
+                Msg::Hello { n: 100, fp: 1, p: P as u64 },
+            );
+            assert_eq!(w, 1);
+            let mut scratch = Vec::new();
+            // never selected: shove an unsolicited step at the server
+            send_step(&mut stream, 0, 1, &mut scratch);
+            rogue_tx.send(()).unwrap();
+            expect_shutdown(&mut stream, &mut scratch);
+        });
+        server.handshake(&cfg, 2, 100, 1).unwrap();
+        // the rogue step is on the wire before round 0 even starts
+        rogue_rx.recv().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+
+        let r0 = round(0, P, 1, vec![7], None);
+        let out0 = server.run_round(&r0, &[0], &[vec![1, 2]]).unwrap();
+        assert_eq!(out0.steps.len(), 1);
+        assert_eq!(out0.steps[0].w, 0);
+        assert_eq!(out0.steps[0].k, 0);
+        let r1 = round(1, P, 1, vec![7], None);
+        let out1 = server.run_round(&r1, &[0], &[vec![0, 3]]).unwrap();
+        assert_eq!(out1.steps.len(), 1);
+        assert_eq!(out1.steps[0].k, 1);
+        // both rogue frames got rejected by the time their sender's
+        // next accepted frame closed a round (TCP orders per stream):
+        // worker 1's unselected step and worker 0's duplicate
+        let mut rejected = out0.rejected.clone();
+        rejected.extend_from_slice(&out1.rejected);
+        rejected.sort_unstable();
+        assert_eq!(rejected, vec![0, 1],
+                   "one duplicate from worker 0, one unselected step \
+                    from worker 1");
+        assert_eq!(server.stats().steps_rejected, 2);
+        assert_eq!(server.stats().rounds, 2);
+        drop(server);
+        a.join().unwrap();
+        b.join().unwrap();
+    }
+
+    /// A worker dying mid-round vacates its slot (its step synthesized
+    /// as a skip), a rejoiner reclaims the slot mid-run, and its first
+    /// selected round re-ships the full theta — the delta-broadcast
+    /// catch-up reconstructs a bit-identical replica.
+    #[test]
+    fn churn_vacates_dead_workers_and_a_rejoiner_catches_up() {
+        const P: usize = 8;
+        let cfg = test_cfg(P);
+        let mut server = SocketServer::builder("127.0.0.1:0")
+            .population(2)
+            .churn(true, 1)
+            .timeout(Duration::from_secs(10))
+            .build()
+            .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let (go_tx, go_rx) = mpsc::channel::<()>();
+        let (jw_tx, jw_rx) = mpsc::channel::<()>();
+
+        let a_addr = addr.clone();
+        let a = std::thread::spawn(move || {
+            let (mut stream, w) = script_connect(
+                &a_addr,
+                Msg::Hello { n: 100, fp: 1, p: P as u64 },
+            );
+            assert_eq!(w, 0);
+            go_tx.send(()).unwrap();
+            let mut scratch = Vec::new();
+            let r0 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r0.k, 0);
+            send_step(&mut stream, 0, 0, &mut scratch);
+            let r1 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r1.k, 1);
+            assert!(r1.theta.is_empty(),
+                    "the survivor already acked theta");
+            // hold round 1 open until the joiner's Welcome lands, so
+            // the rejoin deterministically happens mid-round
+            jw_rx.recv().unwrap();
+            send_step(&mut stream, 1, 0, &mut scratch);
+            let r2 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r2.k, 2);
+            assert!(r2.theta.is_empty());
+            send_step(&mut stream, 2, 0, &mut scratch);
+            expect_shutdown(&mut stream, &mut scratch);
+        });
+        let b_addr = addr.clone();
+        let b = std::thread::spawn(move || {
+            go_rx.recv().unwrap();
+            let (mut stream, w) = script_connect(
+                &b_addr,
+                Msg::Hello { n: 100, fp: 1, p: P as u64 },
+            );
+            assert_eq!(w, 1);
+            let mut scratch = Vec::new();
+            let r0 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r0.k, 0);
+            // die without answering: the server synthesizes our skip
+        });
+        server.handshake(&cfg, 2, 100, 1).unwrap();
+
+        let r0 = round(0, P, 1, vec![7], None);
+        let out0 = server
+            .run_round(&r0, &[0, 1], &[vec![0, 1], vec![2, 3]])
+            .unwrap();
+        assert_eq!(out0.vacated, vec![1]);
+        assert_eq!(out0.steps.len(), 2);
+        let synth = &out0.steps[1];
+        assert_eq!(synth.w, 1);
+        assert!(!synth.decision.upload);
+        assert!(synth.lhs.is_nan() && synth.grad_evals == 0);
+        b.join().unwrap();
+
+        // a rejoiner reclaims slot 1 while round 1 is open
+        let j_addr = addr;
+        let joiner = std::thread::spawn(move || {
+            let (mut stream, w) = script_connect(
+                &j_addr,
+                Msg::Rejoin { w: 1, n: 100, fp: 1, p: P as u64 },
+            );
+            assert_eq!(w, 1);
+            jw_tx.send(()).unwrap();
+            let mut scratch = Vec::new();
+            // first selected round after the rejoin: nothing is acked,
+            // so the header carries the whole theta
+            let r2 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r2.k, 2);
+            let mut theta = vec![0.0f32; P];
+            for d in &r2.theta {
+                d.apply(&mut theta).unwrap();
+            }
+            let want: Vec<f32> = (0..P).map(|i| i as f32).collect();
+            assert_eq!(theta, want,
+                       "late joiner must reconstruct theta bit-for-bit");
+            send_step(&mut stream, 2, 1, &mut scratch);
+            expect_shutdown(&mut stream, &mut scratch);
+        });
+        let r1 = round(1, P, 1, vec![7], None);
+        let out1 = server.run_round(&r1, &[0], &[vec![0, 1]]).unwrap();
+        assert_eq!(out1.rejoined, vec![1]);
+        assert_eq!(out1.steps.len(), 1);
+        let r2 = round(2, P, 1, vec![7], None);
+        let out2 = server
+            .run_round(&r2, &[0, 1], &[vec![0, 1], vec![2, 3]])
+            .unwrap();
+        assert_eq!(out2.steps.len(), 2);
+        assert!(out2.steps.iter().all(|s| s.k == 2));
+        assert!(out2.vacated.is_empty());
+        assert_eq!(server.stats().rejoins, 1);
+        drop(server);
+        a.join().unwrap();
+        joiner.join().unwrap();
     }
 }

@@ -57,8 +57,12 @@ use crate::coordinator::shard::ShardLayout;
 /// Protocol magic ("CADA") + version; bumped on any wire-format change.
 /// v2: `Welcome` carries the compression config, `Step` carries a
 /// tagged [`Payload`] instead of a raw dense delta.
+/// v3 (participant selection + churn): `Round` carries the selected
+/// worker set and the recipient's server-tracked staleness, `Step`
+/// carries the round id it answers (duplicate/stale rejection), and
+/// [`Msg::Rejoin`] re-admits a worker into a vacated population slot.
 pub const MAGIC: u32 = 0x4341_4441;
-pub const PROTO_VERSION: u16 = 2;
+pub const PROTO_VERSION: u16 = 3;
 
 /// Upper bound on one frame's payload (a 2.7M-parameter delta is ~11 MB;
 /// 256 MB leaves headroom for every artifact spec while keeping a
@@ -70,6 +74,7 @@ const TAG_WELCOME: u8 = 2;
 const TAG_ROUND: u8 = 3;
 const TAG_STEP: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_REJOIN: u8 = 6;
 
 /// Static per-run worker configuration, shipped once in the handshake.
 /// Produced by [`Algorithm::wire_config`](crate::algorithms::Algorithm::wire_config)
@@ -121,6 +126,17 @@ pub struct RoundMsg {
     pub k: u64,
     /// the round's frozen drift threshold RHS
     pub rhs: f64,
+    /// the recipient's server-tracked staleness tau going into this
+    /// round: a worker left unselected for several rounds resumes with
+    /// the server's count, so its rule sees the same tau on every
+    /// transport. Under full participation this always equals the
+    /// worker's own running count (shipping it is a bit-exact no-op).
+    pub tau: u32,
+    /// the round's selected participant set, sorted ascending; EMPTY
+    /// means "everyone participates" (the full-participation default
+    /// ships no list at all). A worker receiving a header defensively
+    /// checks its own id is in the set.
+    pub selected: Vec<u32>,
     /// server-sampled minibatch indices into the worker's dataset copy
     pub batch: Vec<u32>,
     /// theta^k ranges dirtied since this worker's last ack
@@ -134,6 +150,9 @@ pub struct RoundMsg {
 /// the innovation payload).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireStep {
+    /// the round this step answers; the server rejects a step whose
+    /// `k` is not the open round (duplicate or stale frame)
+    pub k: u64,
     pub w: usize,
     pub decision: Decision,
     pub lhs: f64,
@@ -162,6 +181,10 @@ pub struct WireRound {
     /// CADA1 snapshot view and its refresh version (None for rules
     /// without a snapshot)
     pub snapshot: Option<(Arc<Vec<f32>>, u64)>,
+    /// per-population-slot staleness tau going into this round (from
+    /// the algorithm's server-side worker mirrors); each worker's
+    /// round header ships its own entry
+    pub taus: Vec<u32>,
 }
 
 /// Every message the socket protocol speaks.
@@ -183,6 +206,13 @@ pub enum Msg {
     Round(RoundMsg),
     Step(WireStep),
     Shutdown,
+    /// worker -> server (churn mode): reconnect claiming population
+    /// slot `w`, carrying the same dataset/backend fingerprint fields
+    /// as [`Msg::Hello`] so a mismatched rejoiner is refused. The
+    /// server answers with a fresh [`Msg::Welcome`] and re-ships the
+    /// full broadcast state on the next selected round (the rejoiner's
+    /// range acks are cleared).
+    Rejoin { w: u32, n: u64, fp: u64, p: u64 },
 }
 
 // ---------------------------------------------------------------- encode
@@ -334,6 +364,11 @@ pub fn encode(msg: &Msg, buf: &mut Vec<u8>) {
             buf.push(TAG_ROUND);
             put_u64(buf, r.k);
             put_f64(buf, r.rhs);
+            put_u32(buf, r.tau);
+            put_u32(buf, r.selected.len() as u32);
+            for &w in &r.selected {
+                put_u32(buf, w);
+            }
             put_u32(buf, r.batch.len() as u32);
             for &i in &r.batch {
                 put_u32(buf, i);
@@ -344,6 +379,7 @@ pub fn encode(msg: &Msg, buf: &mut Vec<u8>) {
         Msg::Step(s) => put_step_body(
             buf,
             &WireStepRef {
+                k: s.k,
                 w: s.w,
                 decision: s.decision,
                 lhs: s.lhs,
@@ -353,6 +389,15 @@ pub fn encode(msg: &Msg, buf: &mut Vec<u8>) {
             },
         ),
         Msg::Shutdown => buf.push(TAG_SHUTDOWN),
+        Msg::Rejoin { w, n, fp, p } => {
+            buf.push(TAG_REJOIN);
+            put_u32(buf, MAGIC);
+            put_u16(buf, PROTO_VERSION);
+            put_u32(buf, *w);
+            put_u64(buf, *n);
+            put_u64(buf, *fp);
+            put_u64(buf, *p);
+        }
     }
 }
 
@@ -365,6 +410,10 @@ pub fn encode(msg: &Msg, buf: &mut Vec<u8>) {
 pub struct RoundHeaderRef<'a> {
     pub k: u64,
     pub rhs: f64,
+    /// recipient's server-tracked staleness (see [`RoundMsg::tau`])
+    pub tau: u32,
+    /// selected participant set; empty = everyone
+    pub selected: &'a [u32],
     pub batch: &'a [u32],
     pub theta: &'a [(u32, &'a [f32])],
     pub snapshot: &'a [(u32, &'a [f32])],
@@ -380,6 +429,11 @@ pub fn encode_round_header(hdr: &RoundHeaderRef<'_>, buf: &mut Vec<u8>) {
     buf.push(TAG_ROUND);
     put_u64(buf, hdr.k);
     put_f64(buf, hdr.rhs);
+    put_u32(buf, hdr.tau);
+    put_u32(buf, hdr.selected.len() as u32);
+    for &w in hdr.selected {
+        put_u32(buf, w);
+    }
     put_u32(buf, hdr.batch.len() as u32);
     for &i in hdr.batch {
         put_u32(buf, i);
@@ -394,6 +448,8 @@ pub fn encode_round_header(hdr: &RoundHeaderRef<'_>, buf: &mut Vec<u8>) {
 /// [`Payload`].
 #[derive(Clone, Copy, Debug)]
 pub struct WireStepRef<'a> {
+    /// the round this step answers (see [`WireStep::k`])
+    pub k: u64,
     pub w: usize,
     pub decision: Decision,
     pub lhs: f64,
@@ -407,6 +463,7 @@ pub struct WireStepRef<'a> {
 /// construction (pinned by `borrowed_step_encode_is_byte_identical`).
 fn put_step_body(buf: &mut Vec<u8>, s: &WireStepRef<'_>) {
     buf.push(TAG_STEP);
+    put_u64(buf, s.k);
     put_u32(buf, s.w as u32);
     buf.push(s.decision.upload as u8);
     buf.push(s.decision.rule_triggered as u8);
@@ -640,6 +697,17 @@ pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
         TAG_ROUND => {
             let k = r.u64()?;
             let rhs = r.f64()?;
+            let tau = r.u32()?;
+            let ns = r.u32()? as usize;
+            anyhow::ensure!(
+                ns <= (r.b.len() - r.pos) / 4,
+                "corrupt wire message: {ns} selected workers in {} bytes",
+                r.b.len() - r.pos
+            );
+            let mut selected = Vec::with_capacity(ns);
+            for _ in 0..ns {
+                selected.push(r.u32()?);
+            }
             let nb = r.u32()? as usize;
             anyhow::ensure!(
                 nb <= (r.b.len() - r.pos) / 4,
@@ -652,13 +720,23 @@ pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
             }
             let theta = r.deltas()?;
             let snapshot = r.deltas()?;
-            Msg::Round(RoundMsg { k, rhs, batch, theta, snapshot })
+            Msg::Round(RoundMsg {
+                k,
+                rhs,
+                tau,
+                selected,
+                batch,
+                theta,
+                snapshot,
+            })
         }
         TAG_STEP => {
+            let k = r.u64()?;
             let w = r.u32()? as usize;
             let upload = r.u8()? != 0;
             let rule_triggered = r.u8()? != 0;
             Msg::Step(WireStep {
+                k,
                 w,
                 decision: Decision { upload, rule_triggered },
                 lhs: r.f64()?,
@@ -668,6 +746,15 @@ pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
             })
         }
         TAG_SHUTDOWN => Msg::Shutdown,
+        TAG_REJOIN => {
+            r.check_magic()?;
+            Msg::Rejoin {
+                w: r.u32()?,
+                n: r.u64()?,
+                fp: r.u64()?,
+                p: r.u64()?,
+            }
+        }
         other => anyhow::bail!("unknown wire message tag {other}"),
     };
     anyhow::ensure!(
@@ -845,6 +932,8 @@ fn f32s_from_le(raw: &[u8]) -> Vec<f32> {
 /// — one parse, one allocation, no intermediate owned [`Payload`].
 #[derive(Clone, Copy, Debug)]
 pub struct WireStepView<'a> {
+    /// the round this step answers (see [`WireStep::k`])
+    pub k: u64,
     pub w: usize,
     pub decision: Decision,
     pub lhs: f64,
@@ -865,10 +954,12 @@ pub fn decode_step_view(payload: &[u8]) -> anyhow::Result<WireStepView<'_>> {
         tag == TAG_STEP,
         "expected a step frame, got wire message tag {tag}"
     );
+    let k = r.u64()?;
     let w = r.u32()? as usize;
     let upload = r.u8()? != 0;
     let rule_triggered = r.u8()? != 0;
     let step = WireStepView {
+        k,
         w,
         decision: Decision { upload, rule_triggered },
         lhs: r.f64()?,
@@ -973,6 +1064,8 @@ mod tests {
         roundtrip(Msg::Round(RoundMsg {
             k: 41,
             rhs: 0.125,
+            tau: 3,
+            selected: vec![0, 2, 4],
             batch: vec![7, 0, 7, 3],
             theta: vec![
                 RangeDelta { start: 0, data: vec![1.0, -2.5] },
@@ -980,7 +1073,18 @@ mod tests {
             ],
             snapshot: Vec::new(),
         }));
+        // the full-participation header ships no selected list at all
+        roundtrip(Msg::Round(RoundMsg {
+            k: 0,
+            rhs: 1.0,
+            tau: 1,
+            selected: vec![],
+            batch: vec![],
+            theta: vec![],
+            snapshot: vec![],
+        }));
         roundtrip(Msg::Step(WireStep {
+            k: 41,
             w: 2,
             decision: Decision { upload: true, rule_triggered: false },
             lhs: 3.25,
@@ -989,6 +1093,21 @@ mod tests {
             payload: Payload::Dense(vec![0.0, -1.0, 2.0]),
         }));
         roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Rejoin {
+            w: 7,
+            n: 800,
+            fp: 0xDEAD_BEEF,
+            p: 1024,
+        });
+    }
+
+    #[test]
+    fn rejoin_checks_magic_and_version() {
+        let mut buf = Vec::new();
+        encode(&Msg::Rejoin { w: 1, n: 2, fp: 3, p: 4 }, &mut buf);
+        buf[1] ^= 0xFF; // corrupt the magic
+        let err = decode(&buf).unwrap_err();
+        assert!(err.to_string().contains("protocol"), "{err}");
     }
 
     #[test]
@@ -1025,6 +1144,7 @@ mod tests {
         // ... and every payload shape crosses the step, bit-exactly
         let step = |payload| {
             Msg::Step(WireStep {
+                k: 5,
                 w: 0,
                 decision: Decision { upload: true, rule_triggered: true },
                 lhs: 1.5,
@@ -1100,6 +1220,7 @@ mod tests {
             -0.0,
         ];
         let msg = Msg::Step(WireStep {
+            k: 0,
             w: 0,
             decision: Decision { upload: true, rule_triggered: true },
             lhs: 0.1f64 + 0.2f64,
@@ -1170,6 +1291,8 @@ mod tests {
             &Msg::Round(RoundMsg {
                 k: 0,
                 rhs: 0.0,
+                tau: 0,
+                selected: vec![],
                 batch: vec![],
                 theta: vec![],
                 snapshot: vec![],
@@ -1178,6 +1301,24 @@ mod tests {
         );
         let cut = round.len() - 8; // theta delta count field
         round[cut..cut + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&round).is_err());
+        // ... and so is a hostile selected-worker count
+        let mut round = Vec::new();
+        encode(
+            &Msg::Round(RoundMsg {
+                k: 0,
+                rhs: 0.0,
+                tau: 0,
+                selected: vec![],
+                batch: vec![],
+                theta: vec![],
+                snapshot: vec![],
+            }),
+            &mut round,
+        );
+        let sel_count = 1 + 8 + 8 + 4; // tag, k, rhs, tau
+        round[sel_count..sel_count + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode(&round).is_err());
     }
 
@@ -1189,6 +1330,7 @@ mod tests {
         // them and allocate
         let step_header = |buf: &mut Vec<u8>| {
             buf.push(TAG_STEP);
+            put_u64(buf, 0); // k
             put_u32(buf, 0); // w
             buf.push(1); // upload
             buf.push(1); // rule_triggered
@@ -1282,11 +1424,14 @@ mod tests {
             Msg::Round(RoundMsg {
                 k: 9,
                 rhs: 0.5,
+                tau: 2,
+                selected: vec![0, 2],
                 batch: vec![1, 2, 3],
                 theta: vec![RangeDelta { start: 0, data: vec![1.0, 2.0] }],
                 snapshot: vec![],
             }),
             Msg::Step(WireStep {
+                k: 9,
                 w: 2,
                 decision: Decision { upload: true, rule_triggered: true },
                 lhs: 1.0,
@@ -1299,6 +1444,7 @@ mod tests {
                 },
             }),
             Msg::Step(WireStep {
+                k: 10,
                 w: 3,
                 decision: Decision { upload: true, rule_triggered: true },
                 lhs: 1.0,
@@ -1311,6 +1457,7 @@ mod tests {
                     codes: vec![0b01_10_01_10, 0b10],
                 },
             }),
+            Msg::Rejoin { w: 3, n: 800, fp: 77, p: 1024 },
         ];
         let mut buf = Vec::new();
         for msg in msgs {
@@ -1339,7 +1486,8 @@ mod tests {
             // message tag gets past the first dispatch
             if trial % 2 == 0 && !buf.is_empty() {
                 buf[0] = [TAG_HELLO, TAG_WELCOME, TAG_ROUND, TAG_STEP,
-                          TAG_SHUTDOWN][(trial / 2) as usize % 5];
+                          TAG_SHUTDOWN, TAG_REJOIN]
+                    [(trial / 2) as usize % 6];
             }
             let _ = decode(&buf);
             // the borrowed step parser walks the same hostile bytes
@@ -1356,6 +1504,7 @@ mod tests {
         // booleans decode fine but re-encode as 0/1, so the mutated
         // buffer itself is not the fixed point — its re-encoding is.)
         let msg = Msg::Step(WireStep {
+            k: 13,
             w: 1,
             decision: Decision { upload: true, rule_triggered: true },
             lhs: 2.0,
@@ -1421,6 +1570,8 @@ mod tests {
         let owned = Msg::Round(RoundMsg {
             k: 41,
             rhs: 0.125,
+            tau: 4,
+            selected: vec![1, 3],
             batch: vec![7, 0, 7, 3],
             theta: vec![
                 RangeDelta { start: 0, data: theta0.clone() },
@@ -1435,6 +1586,8 @@ mod tests {
         let hdr = RoundHeaderRef {
             k: 41,
             rhs: 0.125,
+            tau: 4,
+            selected: &[1, 3],
             batch: &[7, 0, 7, 3],
             theta: &theta,
             snapshot: &snapshot,
@@ -1466,6 +1619,7 @@ mod tests {
         ];
         for payload in payloads {
             let owned = Msg::Step(WireStep {
+                k: 19,
                 w: 2,
                 decision: Decision { upload: true, rule_triggered: false },
                 lhs: 3.25,
@@ -1476,6 +1630,7 @@ mod tests {
             let mut want = Vec::new();
             encode(&owned, &mut want);
             let borrowed = WireStepRef {
+                k: 19,
                 w: 2,
                 decision: Decision { upload: true, rule_triggered: false },
                 lhs: 3.25,
@@ -1516,6 +1671,7 @@ mod tests {
         ];
         for payload in payloads {
             let msg = Msg::Step(WireStep {
+                k: 23,
                 w: 3,
                 decision: Decision { upload: true, rule_triggered: true },
                 lhs: 0.1f64 + 0.2f64,
@@ -1526,6 +1682,7 @@ mod tests {
             let mut buf = Vec::new();
             encode(&msg, &mut buf);
             let view = decode_step_view(&buf).unwrap();
+            assert_eq!(view.k, 23);
             assert_eq!(view.w, 3);
             assert_eq!(
                 view.decision,
@@ -1564,6 +1721,7 @@ mod tests {
         let mut buf = Vec::new();
         encode(
             &Msg::Step(WireStep {
+                k: 0,
                 w: 0,
                 decision: Decision { upload: true, rule_triggered: false },
                 lhs: 1.0,

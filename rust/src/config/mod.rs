@@ -300,9 +300,10 @@ pub fn preset(name: &str) -> anyhow::Result<ExpConfig> {
 
 /// Apply the engine's CLI knobs — `--transport`, `--listen`,
 /// `--connect`, `--server-shards`, `--shard-exec`, `--semi-sync-k`,
-/// `--jitter-sigma`, `--jitter-seed` — shared by `cada train` / `cada
-/// serve` / `cada worker` and the `cargo bench fig*` drivers so the
-/// entry points cannot diverge.
+/// the `--select-*` participation family, `--jitter-sigma`,
+/// `--jitter-seed` — shared by `cada train` / `cada serve` / `cada
+/// worker` and the `cargo bench fig*` drivers so the entry points
+/// cannot diverge.
 pub fn apply_comm_cli_overrides(comm: &mut CommCfg,
                                 args: &crate::cli::Args)
                                 -> anyhow::Result<()> {
@@ -320,7 +321,23 @@ pub fn apply_comm_cli_overrides(comm: &mut CommCfg,
     if let Some(e) = args.str_opt("shard-exec") {
         comm.shard_exec = crate::coordinator::pool::ShardExec::parse(e)?;
     }
-    comm.semi_sync_k = args.usize_or("semi-sync-k", comm.semi_sync_k)?;
+    let part = &mut comm.participation;
+    part.quorum = args.usize_or("semi-sync-k", part.quorum)?;
+    part.population =
+        args.usize_or("select-population", part.population)?;
+    part.selected = args.usize_or("select-s", part.selected)?;
+    if let Some(p) = args.str_opt("select-policy") {
+        part.policy = crate::comm::SelectPolicy::parse(p)?;
+    }
+    part.seed = args.u64_or("select-seed", part.seed)?;
+    if args.bool("select-churn") {
+        part.churn = true;
+    }
+    part.min_live = args.usize_or("select-min-live", part.min_live)?;
+    part.socket_timeout_s =
+        args.u64_or("select-timeout-s", part.socket_timeout_s)?;
+    part.connect_retry_s =
+        args.u64_or("select-retry-s", part.connect_retry_s)?;
     comm.jitter_sigma = args.f64_or("jitter-sigma", comm.jitter_sigma)?;
     comm.jitter_seed = args.u64_or("jitter-seed", comm.jitter_seed)?;
     comm.validate()
@@ -529,14 +546,27 @@ mod tests {
         let args = crate::cli::Args::parse(
             ["--server-shards", "8", "--semi-sync-k", "3",
              "--shard-exec", "scoped", "--transport", "socket",
-             "--listen", "127.0.0.1:7700", "--connect", "10.0.0.9:7700"]
+             "--listen", "127.0.0.1:7700", "--connect", "10.0.0.9:7700",
+             "--select-population", "16", "--select-s", "5",
+             "--select-policy", "grouped", "--select-seed", "21",
+             "--select-churn", "--select-min-live", "2",
+             "--select-timeout-s", "30", "--select-retry-s", "5"]
                 .iter()
                 .map(|s| s.to_string()),
         )
         .unwrap();
         apply_comm_cli_overrides(&mut comm, &args).unwrap();
         assert_eq!(comm.server_shards, 8);
-        assert_eq!(comm.semi_sync_k, 3);
+        assert_eq!(comm.participation.quorum, 3);
+        assert_eq!(comm.participation.population, 16);
+        assert_eq!(comm.participation.selected, 5);
+        assert_eq!(comm.participation.policy,
+                   crate::comm::SelectPolicy::Grouped);
+        assert_eq!(comm.participation.seed, 21);
+        assert!(comm.participation.churn);
+        assert_eq!(comm.participation.min_live, 2);
+        assert_eq!(comm.participation.socket_timeout_s, 30);
+        assert_eq!(comm.participation.connect_retry_s, 5);
         assert_eq!(comm.shard_exec,
                    crate::coordinator::pool::ShardExec::Scoped);
         assert_eq!(comm.transport, crate::comm::TransportKind::Socket);
@@ -556,6 +586,15 @@ mod tests {
         )
         .unwrap();
         assert!(apply_comm_cli_overrides(&mut comm, &args).is_err());
+        // participation validation runs too: quorum > select_s
+        let mut comm = crate::comm::CommCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--select-s", "2", "--semi-sync-k", "5"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(apply_comm_cli_overrides(&mut comm, &args).is_err());
     }
 
     #[test]
@@ -563,7 +602,7 @@ mod tests {
         let mut cfg = fig3_ijcnn();
         let doc = toml::parse(
             "[comm]\ntransport = \"threaded\"\nserver_shards = 2\n\
-             semi_sync_k = 4\n\
+             semi_sync_k = 4\nselect_s = 6\nselect_policy = \"uniform\"\n\
              jitter_sigma = 0.5\njitter_seed = 9\n\
              [comm.links]\nlatency_mult = [1, 3]\n",
         )
@@ -571,7 +610,10 @@ mod tests {
         apply_overrides(&mut cfg, &doc).unwrap();
         assert_eq!(cfg.comm.transport, crate::comm::TransportKind::Threaded);
         assert_eq!(cfg.comm.server_shards, 2);
-        assert_eq!(cfg.comm.semi_sync_k, 4);
+        assert_eq!(cfg.comm.participation.quorum, 4);
+        assert_eq!(cfg.comm.participation.selected, 6);
+        assert_eq!(cfg.comm.participation.policy,
+                   crate::comm::SelectPolicy::Uniform);
         assert_eq!(cfg.comm.jitter_sigma, 0.5);
         assert_eq!(cfg.comm.jitter_seed, 9);
         assert_eq!(cfg.comm.latency_mult, vec![1.0, 3.0]);

@@ -171,9 +171,24 @@
 //! * **straggler jitter** — seeded log-normal multiplier on upload
 //!   times; a pure function of `(seed, round, worker)`, so runs stay
 //!   reproducible.
-//! * **semi-sync** — `semi_sync_k = K`: the server proceeds once the
-//!   fastest K uploads of a round arrive; stragglers fold in stale next
-//!   round (server-centric methods only).
+//! * **participation** — one [`comm::ParticipationCfg`] holds every
+//!   participation knob (`[comm]` keys, `--select-*` CLI flags, builder
+//!   `.participation(...)`): `semi_sync_k = K` makes the server proceed
+//!   once the fastest K uploads of a round arrive, stragglers folding
+//!   in stale next round; `select_s = S` draws a per-round participant
+//!   subset of S workers — seeded-uniform or `select_policy =
+//!   "grouped"` (ranked by each worker's deterministic nominal round
+//!   time, so co-selected workers finish together) — as a pure function
+//!   of `(select_seed, round)`, bit-identical on every transport, with
+//!   unselected workers skipping the round entirely (server-centric
+//!   methods only; `S = K = M` degenerates to the exact pre-selection
+//!   run). On the socket transport, `population = N` sizes the admitted
+//!   worker fleet at handshake, the nonblocking server rejects
+//!   duplicate and unselected step uploads, and `churn = true` (with
+//!   `min_live`, `socket_timeout_s`, `connect_retry_s`) tolerates
+//!   worker disconnects mid-run: vacated slots fold as skips and a
+//!   `cada worker --rejoin W` process is readmitted into slot W with a
+//!   full catch-up broadcast.
 //!
 //! See `examples/quickstart.rs` for an end-to-end comparison run and
 //! [`exp::Experiment`] for the paper-figure presets.
@@ -199,9 +214,10 @@ pub mod prelude {
         Algorithm, AlgorithmKind, Cada, CadaCfg, FedAdam, FedAdamCfg,
         FedAvg, LocalMomentum, TrainCfg, Trainer,
     };
-    pub use crate::comm::{run_worker, CommCfg, CommStats, CostModel,
-                          LinkModel, LinkSet, Participation,
-                          SocketServer, TransportKind, WireStats,
+    pub use crate::comm::{run_worker, run_worker_opts, CommCfg, CommStats,
+                          CostModel, LinkModel, LinkSet, Participation,
+                          ParticipationCfg, SelectPolicy, SocketServer,
+                          TransportKind, WireStats, WorkerOpts,
                           WorkerReport};
     pub use crate::compress::{CompressCfg, Payload, Scheme};
     pub use crate::config::Schedule;

@@ -73,10 +73,12 @@ TRAIN OPTIONS:
                       the unified [train] / [train.cost_model] / [comm] /
                       [comm.links] / [compress] sections (iters,
                       eval_every, seed, trace_cap; latency_s, down_bw,
-                      asymmetry; transport, semi_sync_k, jitter_sigma,
-                      jitter_seed; per-worker latency_mult / bw_mult /
-                      asymmetry_mult arrays; scheme, topk_frac, bits,
-                      seed)
+                      asymmetry; transport, semi_sync_k, population,
+                      select_s, select_policy, select_seed, churn,
+                      min_live, socket_timeout_s, connect_retry_s,
+                      jitter_sigma, jitter_seed; per-worker latency_mult /
+                      bw_mult / asymmetry_mult arrays; scheme, topk_frac,
+                      bits, seed)
   --algo NAME         run only this algorithm from the preset
   --iters N           override iteration count
   --runs N            override Monte-Carlo run count
@@ -95,7 +97,24 @@ TRAIN OPTIONS:
                       pool, default) or scoped (per-round spawn+join);
                       bit-identical either way
   --semi-sync-k K     server proceeds after the fastest K uploads of a
-                      round; stragglers fold in stale (0 = wait for all)
+                      round's selected subset; stragglers fold in stale
+                      (0 = wait for all selected)
+  --select-s S        per-round participant subset size out of the
+                      worker population (0 = everyone, the default)
+  --select-policy P   how the subset is drawn: uniform (seeded sample,
+                      default) or grouped (by measured worker speed)
+  --select-seed N     seed of the selection stream (0 = the run seed)
+  --select-population N
+                      registered population the socket server admits at
+                      handshake (0 = the run's worker count)
+  --select-churn      tolerate worker disconnects mid-run: vacated
+                      slots fold as skips, late rejoiners catch up
+  --select-min-live N churn mode: abort when live workers drop below N
+  --select-timeout-s T
+                      socket round/handshake timeout in seconds
+                      (default 120)
+  --select-retry-s T  worker connect-retry budget in seconds
+                      (default: the socket timeout)
   --jitter-sigma S    log-normal upload straggler jitter (0 = off)
   --jitter-seed N     seed of the jitter stream
   --compress S        upload compressor: identity (default, bit-identical
@@ -126,6 +145,10 @@ WORKER OPTIONS (cada worker):
                       over the wire)
   --n N / --seed S    must match the server's overrides, if any
   --run R             Monte-Carlo run index to regenerate (default 0)
+  --rejoin W          reclaim population slot W of a churn-mode run
+                      (late-joiner catch-up) instead of a fresh join
+  --select-timeout-s / --select-retry-s
+                      as above; must match the server's run config
 
 BENCH-CHECK OPTIONS (the CI perf-regression gate):
   --baseline FILE     committed baseline (default bench/baseline.json;
@@ -292,6 +315,8 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         "cada worker needs --connect HOST:PORT (or [comm] connect)"
     );
     let run = args.u64_or("run", 0)? as u32;
+    let rejoin = args.str_opt("rejoin").map(str::parse::<u32>).transpose()
+        .map_err(|e| anyhow::anyhow!("--rejoin: {e}"))?;
     let artifacts = args.str_or("artifacts", "artifacts");
     if args.bool("quiet") {
         cada::util::logging::set_level(cada::util::logging::Level::Warn);
@@ -309,8 +334,13 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         cfg.comm.connect,
         data.len()
     );
-    let report =
-        cada::comm::run_worker(&cfg.comm.connect, &data, &mut *compute)?;
+    let opts = cada::comm::WorkerOpts {
+        rejoin_slot: rejoin,
+        ..cada::comm::WorkerOpts::from_participation(
+            &cfg.comm.participation)
+    };
+    let report = cada::comm::run_worker_opts(
+        &cfg.comm.connect, &data, &mut *compute, &opts)?;
     info!(
         "worker {} done: {} rounds, {} uploads",
         report.w, report.rounds, report.uploads

@@ -183,8 +183,12 @@ pub fn render_table(title: &str, target_loss: f64, rows: &[SummaryRow])
 /// seconds are finite by construction — lost uploads are counted (the
 /// transmission happened) but their infinite arrival never accumulates
 /// (see [`CommStats::count_upload`]), so this table stays renderable
-/// under dead-link scenarios. Empty string when the run kept no
-/// per-worker stats.
+/// under dead-link scenarios. Under per-round participant selection
+/// (or socket churn) the table gains `sel` / `rej` / `rejoin` columns —
+/// rounds each worker was selected for, frames the server refused
+/// (duplicate or unselected uploads), and mid-run rejoins; full
+/// participation keeps the exact old table. Empty string when the run
+/// kept no per-worker stats.
 pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
     if comm.worker_uploads.is_empty() {
         return String::new();
@@ -202,16 +206,30 @@ pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
         .iter()
         .zip(&comm.worker_wire_bytes)
         .any(|(r, w)| r != w);
+    // the selection columns only appear when some round actually left
+    // a worker out, or the socket server refused or readmitted frames;
+    // full-participation runs keep the exact old table
+    let selective = comm
+        .worker_selected
+        .iter()
+        .any(|&c| c != comm.rounds)
+        || comm.rejected_uploads > 0
+        || comm.rejoins > 0;
     if compressed {
         out.push_str(&format!(
-            "{:>8} {:>10} {:>12} {:>8} {:>12} {:>12} {:>7}\n",
+            "{:>8} {:>10} {:>12} {:>8} {:>12} {:>12} {:>7}",
             "worker", "uploads", "upload_s", "lost", "raw_B", "wire_B",
             "ratio"));
     } else {
         out.push_str(&format!(
-            "{:>8} {:>10} {:>12} {:>8}\n",
+            "{:>8} {:>10} {:>12} {:>8}",
             "worker", "uploads", "upload_s", "lost"));
     }
+    if selective {
+        out.push_str(&format!(" {:>8} {:>8} {:>8}",
+                              "sel", "rej", "rejoin"));
+    }
+    out.push('\n');
     let slowest = comm
         .worker_upload_s
         .iter()
@@ -246,11 +264,19 @@ pub fn render_worker_breakdown(algo: &str, comm: &CommStats) -> String {
             };
             out.push_str(&format!(
                 "{w:>8} {n:>10} {s:>12.3} {lost:>8} {raw:>12} \
-                 {wire:>12} {ratio:>7}{marker}\n"));
+                 {wire:>12} {ratio:>7}"));
         } else {
             out.push_str(&format!(
-                "{w:>8} {n:>10} {s:>12.3} {lost:>8}{marker}\n"));
+                "{w:>8} {n:>10} {s:>12.3} {lost:>8}"));
         }
+        if selective {
+            let sel = comm.worker_selected.get(w).copied().unwrap_or(0);
+            let rej = comm.worker_rejected.get(w).copied().unwrap_or(0);
+            let rjn = comm.worker_rejoins.get(w).copied().unwrap_or(0);
+            out.push_str(&format!(" {sel:>8} {rej:>8} {rjn:>8}"));
+        }
+        out.push_str(marker);
+        out.push('\n');
     }
     out
 }
@@ -434,6 +460,42 @@ mod tests {
     }
 
     #[test]
+    fn worker_breakdown_selection_columns_gate_on_selectivity() {
+        // full participation: every worker selected every round keeps
+        // the exact legacy table — no sel/rej/rejoin columns
+        let mut comm = CommStats::for_workers(2);
+        comm.count_selected(&[0, 1]);
+        comm.count_upload(0, 100, 1.0);
+        let t = render_worker_breakdown("cada2", &comm);
+        assert!(!t.contains("rejoin"), "{t}");
+        assert!(!t.contains(" sel"), "{t}");
+
+        // a round that leaves worker 1 out grows the selection columns
+        let mut comm = CommStats::for_workers(2);
+        comm.count_selected(&[0, 1]);
+        comm.count_selected(&[0]);
+        comm.count_upload(0, 100, 1.0);
+        comm.count_rejected(1);
+        comm.count_rejoin(1);
+        let t = render_worker_breakdown("cada2", &comm);
+        assert!(t.contains("sel"), "{t}");
+        assert!(t.contains("rejoin"), "{t}");
+        let w0 = t
+            .lines()
+            .find(|l| l.trim_start().starts_with('0'))
+            .unwrap();
+        // worker 0: selected both rounds, nothing rejected
+        assert!(w0.split_whitespace().any(|f| f == "2"), "{w0}");
+        let w1 = t
+            .lines()
+            .find(|l| l.trim_start().starts_with('1'))
+            .unwrap();
+        // worker 1: selected once, one refused frame, one rejoin
+        assert!(w1.split_whitespace().filter(|f| *f == "1").count() >= 3,
+                "{w1}");
+    }
+
+    #[test]
     fn worker_breakdown_stays_finite_under_dead_links() {
         // worker 1 transmits into a dead link every round: its uploads
         // count, its seconds stay finite (zero here), and the lost
@@ -477,6 +539,8 @@ mod tests {
             upload_wire_bytes: 0,
             header_encode_ns: 0,
             step_decode_ns: 0,
+            steps_rejected: 0,
+            rejoins: 0,
         };
         let t = render_wire_stats("cada1", &wire);
         assert!(t.contains("60 rounds"), "{t}");

@@ -3,7 +3,8 @@
 //! event clock under heterogeneous links, and the CostModel edge cases.
 
 use cada::algorithms::{Cada, CadaCfg, Trainer};
-use cada::comm::{wire, CommCfg, CommStats, CostModel, TransportKind};
+use cada::comm::{wire, CommCfg, CommStats, CostModel, ParticipationCfg,
+                 TransportKind};
 use cada::config::Schedule;
 use cada::coordinator::rules::RuleKind;
 use cada::coordinator::server::Optimizer;
@@ -30,6 +31,12 @@ fn workload() -> (NativeLogReg, Workload) {
         Partition::build(PartitionScheme::Uniform, &data, WORKERS, &mut rng);
     let eval = data.gather(&(0..128).collect::<Vec<_>>());
     (compute, Workload { data, partition, eval })
+}
+
+/// A `[comm]` participation block that only sets the semi-sync quorum
+/// (what the old flat `semi_sync_k` field spelled).
+fn quorum(k: usize) -> ParticipationCfg {
+    ParticipationCfg { quorum: k, ..Default::default() }
 }
 
 fn amsgrad(alpha: f32) -> Optimizer {
@@ -97,7 +104,7 @@ fn semi_sync_with_jitter_changes_time_not_upload_counts() {
     let baseline = run(rule, CommCfg::default(), cost.clone(), &w,
                        &mut compute);
     let scenario_cfg = CommCfg {
-        semi_sync_k: 3,
+        participation: quorum(3),
         jitter_sigma: 0.5,
         jitter_seed: 7,
         ..Default::default()
@@ -137,7 +144,7 @@ fn semi_sync_quorum_m_reduces_to_fully_sync() {
     let rule = RuleKind::Cada2 { c: 0.6 };
     let full = run(rule, CommCfg::default(), cost.clone(), &w,
                    &mut compute);
-    let quorum_m = CommCfg { semi_sync_k: WORKERS, ..Default::default() };
+    let quorum_m = CommCfg { participation: quorum(WORKERS), ..Default::default() };
     let semi = run(rule, quorum_m, cost.clone(), &w, &mut compute);
     assert_identical(&full, &semi, "K=M vs fully-sync");
     assert_eq!(semi.1.stale_uploads, 0);
@@ -156,7 +163,7 @@ fn jitter_slows_fully_sync_and_semi_sync_k1_beats_full() {
     let jit = CommCfg { jitter_sigma: 0.5, jitter_seed: 3,
                         ..Default::default() };
     let jittered = run(rule, jit, cost.clone(), &w, &mut compute);
-    let k1 = CommCfg { semi_sync_k: 1, jitter_sigma: 0.5, jitter_seed: 3,
+    let k1 = CommCfg { participation: quorum(1), jitter_sigma: 0.5, jitter_seed: 3,
                        ..Default::default() };
     let fastest = run(rule, k1, cost.clone(), &w, &mut compute);
 
@@ -184,7 +191,7 @@ fn threaded_is_deterministic_even_with_jitter_and_semi_sync() {
     let rule = RuleKind::Cada2 { c: 0.6 };
     let scenario = |transport| CommCfg {
         transport,
-        semi_sync_k: 3,
+        participation: quorum(3),
         jitter_sigma: 0.5,
         jitter_seed: 7,
         latency_mult: vec![1.0, 2.0, 4.0],
@@ -245,7 +252,7 @@ fn dead_uplink_uploads_are_charged_but_never_fold() {
     let (mut compute, w) = workload();
     let cost = CostModel::default();
     let dead = CommCfg {
-        semi_sync_k: 3,
+        participation: quorum(3),
         asymmetry_mult: vec![1.0, 1.0, 1.0, 1.0, 1e308],
         ..Default::default()
     };
@@ -276,7 +283,7 @@ fn dead_link_breakdown_stays_finite_with_lost_column() {
     // unique-maximum straggler marker.
     let (mut compute, w) = workload();
     let dead = CommCfg {
-        semi_sync_k: 3,
+        participation: quorum(3),
         bw_mult: vec![1.0, 0.0],
         ..Default::default()
     };
@@ -387,6 +394,112 @@ fn socket_worker_disconnect_errors_cleanly_without_hanging() {
 }
 
 #[test]
+fn socket_churn_tolerates_disconnect_and_readmits_a_rejoiner() {
+    // Churn mode end to end through the Trainer: a worker that vanishes
+    // after the handshake is vacated (its rounds fold as skips instead
+    // of poisoning the run), and a late rejoiner claiming the vacant
+    // slot is readmitted mid-run and participates to the end.
+    let data = synthetic::ijcnn_like(200, 3);
+    let mut rng = Rng::new(4);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, 2, &mut rng);
+    let eval = data.gather(&(0..32).collect::<Vec<_>>());
+    let mut compute = NativeLogReg::for_spec(22, 1024);
+    let mut algo = cada(RuleKind::Always);
+    let iters = 12usize;
+    let mut trainer = Trainer::builder()
+        .algorithm(&mut algo)
+        .dataset(&data)
+        .partition(&partition)
+        .eval_batch(eval)
+        .init_theta(vec![0.0; 1024])
+        .iters(iters)
+        .upload_bytes(UPLOAD_BYTES)
+        .comm(CommCfg {
+            transport: TransportKind::Socket,
+            listen: "127.0.0.1:0".into(),
+            participation: ParticipationCfg {
+                churn: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .seed(5)
+        .build()
+        .unwrap();
+    let addr = trainer.wire_addr().unwrap().to_string();
+    let (rejoins, worker_rejoins, wire_rejoins) = std::thread::scope(|s| {
+        // the doomed worker: handshakes first (slot 0), then vanishes
+        // without answering a single round
+        {
+            let addr = addr.clone();
+            let n = data.len() as u64;
+            let fp = data.fingerprint();
+            s.spawn(move || {
+                let mut stream =
+                    std::net::TcpStream::connect(addr).unwrap();
+                let mut scratch = Vec::new();
+                wire::send(&mut stream,
+                           &wire::Msg::Hello { n, fp, p: 1024 },
+                           &mut scratch)
+                    .unwrap();
+                match wire::recv(&mut stream, &mut scratch).unwrap() {
+                    Some((wire::Msg::Welcome { .. }, _)) => {}
+                    other => panic!("expected Welcome, got {other:?}"),
+                }
+                drop(stream);
+            });
+        }
+        // connect order pins the slots: the doomed worker dials first
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        // the steady worker (slot 1) answers every round
+        {
+            let addr = addr.clone();
+            let data = &data;
+            s.spawn(move || {
+                let mut c = NativeLogReg::for_spec(22, 1024);
+                cada::comm::run_worker(&addr, data, &mut c)
+                    .expect("steady worker runs to shutdown");
+            });
+        }
+        // round 0: the handshake admits both, the doomed worker's EOF
+        // vacates slot 0 and its step folds as a skip
+        trainer.step(0, &mut compute).unwrap();
+        // a rejoiner claims the vacant slot mid-run
+        {
+            let addr = addr.clone();
+            let data = &data;
+            s.spawn(move || {
+                let mut c = NativeLogReg::for_spec(22, 1024);
+                let opts = cada::comm::WorkerOpts {
+                    rejoin_slot: Some(0),
+                    ..Default::default()
+                };
+                let report = cada::comm::run_worker_opts(
+                    &addr, data, &mut c, &opts)
+                    .expect("rejoiner runs to shutdown");
+                assert_eq!(report.w, 0);
+                assert!(report.rounds > 0,
+                        "rejoiner never saw a round");
+            });
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        for k in 1..iters as u64 {
+            trainer.step(k, &mut compute).unwrap();
+        }
+        let out = (trainer.comm.rejoins,
+                   trainer.comm.worker_rejoins.clone(),
+                   trainer.wire_stats().unwrap().rejoins);
+        // shutdown frames let the worker threads join the scope
+        drop(trainer);
+        out
+    });
+    assert_eq!(rejoins, 1, "expected exactly one readmission");
+    assert_eq!(worker_rejoins, vec![1, 0]);
+    assert_eq!(wire_rejoins, 1);
+}
+
+#[test]
 fn slow_device_worker_straggles_under_semi_sync() {
     // Compute-time modelling: all five links are identical, but worker
     // 4's DEVICE is 100x slower (compute_mult over the base compute_s).
@@ -396,7 +509,7 @@ fn slow_device_worker_straggles_under_semi_sync() {
     let (mut compute, w) = workload();
     let cost = CostModel { compute_s: 0.005, ..CostModel::default() };
     let scenario = CommCfg {
-        semi_sync_k: 4,
+        participation: quorum(4),
         compute_mult: vec![1.0, 1.0, 1.0, 1.0, 100.0],
         ..Default::default()
     };
@@ -415,7 +528,7 @@ fn slow_device_worker_straggles_under_semi_sync() {
     // the clock prices compute: strictly slower than the identical
     // scenario with free devices
     let free_dev = CommCfg {
-        semi_sync_k: 4,
+        participation: quorum(4),
         compute_mult: vec![1.0, 1.0, 1.0, 1.0, 100.0],
         ..Default::default()
     };
@@ -427,7 +540,7 @@ fn slow_device_worker_straggles_under_semi_sync() {
     // the no-multiplier run (the golden suites rely on this)
     let no_mult = run(
         RuleKind::Always,
-        CommCfg { semi_sync_k: 4, ..Default::default() },
+        CommCfg { participation: quorum(4), ..Default::default() },
         CostModel::default(), &w, &mut compute);
     assert_identical(&baseline, &no_mult, "compute_mult with zero base");
     // stale folds keep the method descending
@@ -436,10 +549,85 @@ fn slow_device_worker_straggles_under_semi_sync() {
 }
 
 #[test]
+fn per_round_selection_is_transport_invariant_and_s_m_degenerates() {
+    // Per-round selection is a pure function of (seed, round), so the
+    // same subset sequence must fold identically on every in-process
+    // transport — and the explicit S = M config must stay BIT-identical
+    // to the pre-selection default (the identity selection draws no RNG).
+    let (mut compute, w) = workload();
+    let cost = CostModel::default();
+    let rule = RuleKind::Cada2 { c: 0.6 };
+    let select = |transport| CommCfg {
+        transport,
+        participation: ParticipationCfg {
+            selected: 3,
+            quorum: 2,
+            seed: 11,
+            ..Default::default()
+        },
+        jitter_sigma: 0.5,
+        jitter_seed: 7,
+        ..Default::default()
+    };
+    let inproc = run(rule, select(TransportKind::InProc), cost.clone(),
+                     &w, &mut compute);
+    let threaded = run(rule, select(TransportKind::Threaded),
+                       cost.clone(), &w, &mut compute);
+    assert_identical(&inproc, &threaded, "selection: threaded vs inproc");
+    // every round drew exactly S = 3 of the 5 workers...
+    assert_eq!(inproc.1.rounds, ITERS as u64);
+    assert_eq!(inproc.1.worker_selected.iter().sum::<u64>(),
+               (ITERS * 3) as u64);
+    // ...so at most 3 upload opportunities per round exist
+    assert!(inproc.1.uploads <= (ITERS * 3) as u64,
+            "{} uploads out of {} opportunities",
+            inproc.1.uploads, ITERS * 3);
+    assert!(inproc.1.uploads > 0);
+    // unselected workers hold their iterate; training still descends
+    assert!(inproc.0.final_loss() < inproc.0.points[0].loss,
+            "selection run did not descend: {:?}", inproc.0);
+
+    // the grouped (speed-ranked) policy is deterministic too
+    let grouped = |transport| CommCfg {
+        transport,
+        participation: ParticipationCfg {
+            selected: 2,
+            policy: cada::comm::SelectPolicy::Grouped,
+            seed: 13,
+            ..Default::default()
+        },
+        latency_mult: vec![1.0, 4.0, 2.0, 8.0, 1.0],
+        ..Default::default()
+    };
+    let g_inproc = run(rule, grouped(TransportKind::InProc), cost.clone(),
+                       &w, &mut compute);
+    let g_threaded = run(rule, grouped(TransportKind::Threaded),
+                         cost.clone(), &w, &mut compute);
+    assert_identical(&g_inproc, &g_threaded,
+                     "grouped selection: threaded vs inproc");
+    assert_eq!(g_inproc.1.worker_selected.iter().sum::<u64>(),
+               (ITERS * 2) as u64);
+
+    // S = M (population pinned to M) must be bit-identical to default
+    let full = run(rule, CommCfg::default(), cost.clone(), &w,
+                   &mut compute);
+    let degenerate = CommCfg {
+        participation: ParticipationCfg {
+            population: WORKERS,
+            selected: WORKERS,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let degen = run(rule, degenerate, cost.clone(), &w, &mut compute);
+    assert_identical(&full, &degen, "S=M degenerate vs default");
+}
+
+#[test]
 fn free_cost_model_keeps_event_clock_at_zero() {
     let (mut compute, w) = workload();
     let scenario = CommCfg {
-        semi_sync_k: 2,
+        participation: quorum(2),
         jitter_sigma: 0.9,
         jitter_seed: 5,
         ..Default::default()

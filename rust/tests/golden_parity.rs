@@ -561,6 +561,75 @@ fn socket_matches_inproc_bit_for_bit() {
     }
 }
 
+/// PR 8 degenerate gate: a socket run that spells the new participation
+/// API explicitly — population N, per-round selection S and semi-sync
+/// quorum K all equal to M — must stay bit-identical to the InProc
+/// golden run. The identity selection draws nothing from the selection
+/// RNG, every worker is priced and folded, and the round headers ship
+/// an empty selection list, so this run IS the pre-selection protocol.
+#[test]
+fn socket_with_population_select_quorum_m_matches_inproc() {
+    use cada::comm::ParticipationCfg;
+    let (mut compute, w) = workload(5);
+    let m = 5usize;
+    let cost = CostModel::default();
+    let rule = RuleKind::Cada2 { c: 0.6 };
+    let mut inproc_algo = cada_algo(rule, 0.02, 20, 10);
+    let inproc = trainer_run(&mut inproc_algo, cost.clone(),
+                             TransportKind::InProc, &w, &mut compute);
+
+    let mut algo = cada_algo(rule, 0.02, 20, 10);
+    let mut trainer = Trainer::builder()
+        .algorithm(&mut algo)
+        .dataset(&w.data)
+        .partition(&w.partition)
+        .eval_batch(w.eval.clone())
+        .init_theta(vec![0.0; 1024])
+        .iters(ITERS)
+        .eval_every(EVAL_EVERY)
+        .batch(BATCH)
+        .upload_bytes(UPLOAD_BYTES)
+        .cost_model(cost)
+        .transport(TransportKind::Socket)
+        .listen("127.0.0.1:0")
+        .participation(ParticipationCfg {
+            population: m,
+            selected: m,
+            quorum: m,
+            ..Default::default()
+        })
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let addr = trainer.wire_addr().unwrap().to_string();
+    let (points, comm) = std::thread::scope(|s| {
+        for _ in 0..m {
+            let addr = addr.clone();
+            let data = &w.data;
+            s.spawn(move || {
+                let mut worker_compute = NativeLogReg::for_spec(22, 1024);
+                cada::comm::run_worker(&addr, data, &mut worker_compute)
+                    .expect("worker runs to shutdown");
+            });
+        }
+        let curve = trainer.run(0, &mut compute).unwrap();
+        let points: Vec<LegacyPoint> = curve
+            .points
+            .iter()
+            .map(|p| (p.loss, p.uploads, p.grad_evals, p.sim_time_s))
+            .collect();
+        let comm = trainer.comm.clone();
+        drop(trainer);
+        (points, comm)
+    });
+    // full participation: every worker counts as selected every round
+    assert_eq!(comm.rounds, ITERS as u64);
+    assert_eq!(comm.worker_selected, vec![ITERS as u64; m]);
+    assert_eq!(comm.rejected_uploads, 0);
+    let socket = (points, comm, algo.theta().to_vec());
+    assert_parity(&inproc, &socket, "N=S=K=M socket vs inproc");
+}
+
 /// A golden run with an explicit upload compressor installed, on any of
 /// the in-process transports.
 fn trainer_run_compressed(
