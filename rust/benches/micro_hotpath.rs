@@ -388,6 +388,33 @@ fn main() {
         });
     }
 
+    // ------- checkpoint container (crash-safe save/load) ----------------
+    // what a `[checkpoint] every = N` run pays per save (CRC over the
+    // body + temp-file write + fsync + atomic rename) and what a resume
+    // pays once (read + magic/version/CRC verification), at a 1 MiB
+    // body — four 65536-float server streams, the shape of a mid-sized
+    // spec's state
+    {
+        use cada::coordinator::checkpoint as ckpt;
+        let p = 65_536usize;
+        let dir = std::env::temp_dir()
+            .join(format!("cada_bench_ckpt_{}", std::process::id()));
+        let mut body = Vec::new();
+        for stream in 0..4u64 {
+            ckpt::put_f32s(&mut body, &randv(p, 80 + stream));
+        }
+        let bytes = body.len() as u64;
+        r.header("checkpoint container (atomic save / verified load)");
+        r.bench_bytes("ckpt save         p=65536", bytes, || {
+            black_box(ckpt::save(&dir, 42, &body).unwrap());
+        });
+        let path = ckpt::save(&dir, 42, &body).unwrap();
+        r.bench_bytes("ckpt load         p=65536", bytes, || {
+            black_box(ckpt::load(&path).unwrap());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // shared tiny-logreg workload (spec geometry matches test_logreg)
     let spec = SpecEntry::builtin_logreg("test_logreg")
         .expect("builtin test spec");

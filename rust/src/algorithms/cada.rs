@@ -29,6 +29,7 @@ use std::sync::Arc;
 use super::{Algorithm, AlgorithmKind, RoundCtx};
 use crate::comm::{wire, JobOut, RoundEvent, WorkerJob};
 use crate::compress::CompressCfg;
+use crate::coordinator::checkpoint as ckpt;
 use crate::coordinator::history::DeltaHistory;
 use crate::coordinator::pool::ShardExec;
 use crate::coordinator::rules::RuleKind;
@@ -38,6 +39,10 @@ use crate::coordinator::shard::{ShardLayout, ShardStats, SnapshotBuffers,
 use crate::coordinator::worker::{WorkerState, WorkerStep};
 use crate::data::Batch;
 use crate::runtime::Compute;
+
+/// `b"CADA"` as a little-endian u32: leads the family's checkpoint
+/// blob so a resume against a different algorithm's state fails fast.
+const CADA_BLOB_TAG: u32 = u32::from_le_bytes(*b"CADA");
 
 /// Static configuration of the server-centric family.
 #[derive(Clone, Debug)]
@@ -447,6 +452,140 @@ impl Algorithm for Cada {
         }
         Ok(())
     }
+
+    fn export_state(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        // everything that crosses rounds: server moments + versions,
+        // per-worker rule state, the drift history ring, the CADA1
+        // snapshot, the semi-sync straggler queue, and the completed
+        // round's summary fields. Per-round scratch (frozen Arc views,
+        // fold order, snapshot double buffers) is rebuilt by the next
+        // `broadcast`, so it stays out of the blob.
+        ckpt::put_u32(out, CADA_BLOB_TAG);
+        ckpt::put_u64(out, self.server.theta.len() as u64);
+        ckpt::put_u64(out, self.workers.len() as u64);
+        ckpt::put_f32s(out, &self.server.theta);
+        ckpt::put_f32s(out, &self.server.h);
+        ckpt::put_f32s(out, &self.server.vhat);
+        ckpt::put_f32s(out, &self.server.grad_agg);
+        ckpt::put_u64s(out, self.server.versions());
+        for worker in &self.workers {
+            let wc = worker.export_ckpt();
+            ckpt::put_u32(out, wc.tau);
+            ckpt::put_u64(out, wc.uploads);
+            ckpt::put_f32s(out, &wc.g_stale);
+            ckpt::put_opt_f32s(out, wc.dtilde_stored.as_deref());
+            ckpt::put_opt_f32s(out, wc.theta_stored.as_deref());
+            ckpt::put_f32s(out, &wc.delta);
+            ckpt::put_f32s(out, &wc.residual);
+        }
+        let (ring, head, filled, sum) = self.history.export();
+        ckpt::put_f64s(out, ring);
+        ckpt::put_u64(out, head);
+        ckpt::put_u64(out, filled);
+        ckpt::put_f64(out, sum);
+        ckpt::put_f32s(out, &self.snapshot);
+        ckpt::put_u64(out, self.snapshot_version);
+        ckpt::put_f64(out, self.rhs);
+        let uploaded: Vec<u64> =
+            self.uploaded.iter().map(|&w| w as u64).collect();
+        ckpt::put_u64s(out, &uploaded);
+        ckpt::put_u64(out, self.stale_queue.len() as u64);
+        for stale in &self.stale_queue {
+            ckpt::put_f32s(out, stale);
+        }
+        ckpt::put_f64(out, self.lhs_sum);
+        ckpt::put_u64(out, self.lhs_count);
+        Ok(())
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        // `init` already ran with the run's config, so every restored
+        // buffer is validated against the freshly-built shapes
+        let mut dec = ckpt::Dec::new(bytes);
+        let tag = dec.take_u32()?;
+        anyhow::ensure!(
+            tag == CADA_BLOB_TAG,
+            "checkpoint algorithm blob tag {tag:#010x} is not the \
+             server-centric family's ({CADA_BLOB_TAG:#010x})"
+        );
+        let p = self.server.theta.len();
+        let m = self.workers.len();
+        let ckpt_p = dec.take_u64()? as usize;
+        let ckpt_m = dec.take_u64()? as usize;
+        anyhow::ensure!(
+            ckpt_p == p && ckpt_m == m,
+            "checkpoint was taken at p={ckpt_p}, m={ckpt_m}; this run \
+             has p={p}, m={m}"
+        );
+        let theta = dec.take_f32s()?;
+        let h = dec.take_f32s()?;
+        let vhat = dec.take_f32s()?;
+        let grad_agg = dec.take_f32s()?;
+        let versions = dec.take_u64s()?;
+        self.server.import_ckpt(theta, h, vhat, grad_agg, versions)?;
+        for w in 0..m {
+            let wc = crate::coordinator::worker::WorkerCkpt {
+                tau: dec.take_u32()?,
+                uploads: dec.take_u64()?,
+                g_stale: dec.take_f32s()?,
+                dtilde_stored: dec.take_opt_f32s()?,
+                theta_stored: dec.take_opt_f32s()?,
+                delta: dec.take_f32s()?,
+                residual: dec.take_f32s()?,
+            };
+            self.workers[w].import_ckpt(wc)?;
+        }
+        let ring = dec.take_f64s()?;
+        let head = dec.take_u64()?;
+        let filled = dec.take_u64()?;
+        let sum = dec.take_f64()?;
+        self.history =
+            DeltaHistory::import(self.cfg.d_max, ring, head, filled, sum)?;
+        let snapshot = dec.take_f32s()?;
+        anyhow::ensure!(
+            snapshot.len() == p,
+            "checkpoint snapshot holds {} parameters, the run has {p}",
+            snapshot.len()
+        );
+        self.snapshot = snapshot;
+        self.snapshot_version = dec.take_u64()?;
+        self.rhs = dec.take_f64()?;
+        let uploaded = dec.take_u64s()?;
+        self.uploaded.clear();
+        for w in uploaded {
+            anyhow::ensure!(
+                (w as usize) < m,
+                "checkpoint uploaded-set names worker {w}, the run has \
+                 {m} workers"
+            );
+            self.uploaded.push(w as usize);
+        }
+        let stale_len = dec.take_u64()? as usize;
+        anyhow::ensure!(
+            stale_len < m.max(1),
+            "checkpoint straggler queue holds {stale_len} entries — \
+             the semi-sync queue never exceeds M-1 = {}",
+            m.saturating_sub(1)
+        );
+        self.stale_queue.clear();
+        for _ in 0..stale_len {
+            let stale = dec.take_f32s()?;
+            anyhow::ensure!(
+                stale.len() == p,
+                "checkpoint straggler innovation holds {} parameters, \
+                 the run has {p}",
+                stale.len()
+            );
+            self.stale_queue.push(stale);
+        }
+        self.lhs_sum = dec.take_f64()?;
+        self.lhs_count = dec.take_u64()? as usize;
+        dec.done()?;
+        // per-round scratch: the next broadcast rebuilds all of it
+        self.fold_stale.clear();
+        self.fold_fresh.clear();
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -653,6 +792,50 @@ mod tests {
         assert_eq!(snap_stats.full_clones, 2);
         assert!(snap_stats.ranges_reused > 0,
                 "snapshot buffer never reused: {snap_stats:?}");
+    }
+
+    #[test]
+    fn checkpoint_blob_roundtrips_byte_for_byte() {
+        // grow nontrivial state (snapshots, staleness, drift history),
+        // export it, import into a freshly-initialised twin, and demand
+        // the twin re-exports the exact same bytes — the unit-level
+        // core of the resume-is-bit-identical guarantee
+        let (mut compute, data, partition) = setup();
+        let eval = data.gather(&(0..32).collect::<Vec<_>>());
+        let mut cfg = CadaCfg::basic(RuleKind::Cada1 { c: 0.8 },
+                                     amsgrad(0.02));
+        cfg.max_delay = 5;
+        let mut algo = Cada::new(cfg.clone());
+        let mut trainer = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(eval)
+            .init_theta(vec![0.0; 1024])
+            .iters(12)
+            .seed(7)
+            .build()
+            .unwrap();
+        trainer.run(0, &mut compute).unwrap();
+        drop(trainer);
+        let mut blob = Vec::new();
+        algo.export_state(&mut blob).unwrap();
+        assert!(!blob.is_empty());
+
+        let mut twin = Cada::new(cfg);
+        twin.init(&vec![0.0; 1024], 5).unwrap();
+        twin.import_state(&blob).unwrap();
+        let mut reblob = Vec::new();
+        twin.export_state(&mut reblob).unwrap();
+        assert_eq!(blob, reblob, "import/export is not a fixed point");
+        assert_eq!(algo.server.theta, twin.server.theta);
+
+        // shape mismatches must fail fast, not fold garbage
+        let mut small = Cada::new(CadaCfg::basic(
+            RuleKind::Cada1 { c: 0.8 }, amsgrad(0.02)));
+        small.init(&vec![0.0; 512], 5).unwrap();
+        assert!(small.import_state(&blob).is_err());
+        assert!(twin.import_state(&blob[..blob.len() - 3]).is_err());
     }
 
     #[test]

@@ -303,4 +303,31 @@ pub trait Algorithm {
             self.name()
         )
     }
+
+    /// Checkpointing: append every cross-round field of the method's
+    /// state to `out` (the trainer wraps it in the versioned,
+    /// CRC-guarded checkpoint container — see
+    /// [`crate::coordinator::checkpoint`]). A resumed run must be
+    /// bit-identical to an uninterrupted one, so *everything* that
+    /// influences future rounds belongs in here. Methods that have not
+    /// implemented the pair fail fast at save time.
+    fn export_state(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        let _ = out;
+        anyhow::bail!(
+            "algorithm '{}' does not support checkpointing yet",
+            self.name()
+        )
+    }
+
+    /// Checkpointing: restore state exported by
+    /// [`Algorithm::export_state`] into this freshly-initialised
+    /// method (`init` already ran with the run's config, so buffer
+    /// shapes validate the checkpoint against the run).
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let _ = bytes;
+        anyhow::bail!(
+            "algorithm '{}' does not support checkpointing yet",
+            self.name()
+        )
+    }
 }

@@ -46,16 +46,18 @@
 //! 4. `aggregate` folds the settled uploads (stragglers stale-fold next
 //!    round); `server_update` closes the round.
 
+use std::path::Path;
 use std::time::Instant;
 
 use super::{Algorithm, AlgorithmKind, RoundCtx};
 use crate::comm::{
-    wire, CommCfg, CommStats, CostModel, EventTrace, InProc, LinkSet,
-    Participation, ParticipationCfg, SelectPolicy, SocketServer, Threaded,
-    Transport, TransportKind, WireStats, WorkerJob,
+    wire, CommCfg, CommStats, CostModel, EventTrace, FaultPlan, InProc,
+    LinkSet, Participation, ParticipationCfg, SelectPolicy, SocketServer,
+    Threaded, Transport, TransportKind, WireStats, WorkerJob,
 };
 use crate::compress::{CompressCfg, Scheme};
 use crate::config::toml::{Doc, Value};
+use crate::coordinator::checkpoint::{self, CheckpointCfg};
 use crate::coordinator::pool::ShardExec;
 use crate::data::{Batch, Dataset, Partition};
 use crate::runtime::Compute;
@@ -93,6 +95,14 @@ pub struct TrainCfg {
     /// CADA does not skip are shrunk on the wire. `Identity` (default)
     /// is bit-identical to no compression at all.
     pub compress: CompressCfg,
+    /// deterministic fault injection (`[fault]`): drops, corruption,
+    /// truncation, delays, and scheduled kills on the socket wire. The
+    /// default ([`FaultPlan::none`]) injects nothing and is
+    /// bit-identical to the pre-fault engine.
+    pub fault: FaultPlan,
+    /// checkpoint/resume (`[checkpoint]`): atomic round-state saves
+    /// and crash recovery. Disabled by default.
+    pub checkpoint: CheckpointCfg,
 }
 
 impl Default for TrainCfg {
@@ -108,6 +118,8 @@ impl Default for TrainCfg {
             trace_cap: 0,
             comm: CommCfg::default(),
             compress: CompressCfg::default(),
+            fault: FaultPlan::none(),
+            checkpoint: CheckpointCfg::default(),
         }
     }
 }
@@ -234,6 +246,60 @@ impl TrainCfg {
                 self.compress.topk_frac,
                 self.compress.bits,
                 self.compress.seed,
+            ));
+        }
+        // the [fault] section only appears when a plan is armed, so
+        // every fault-free golden config stays byte-identical
+        if self.fault != FaultPlan::none() {
+            out.push_str(&format!(
+                "\n[fault]\n\
+                 seed = {}\n\
+                 drop_p = {}\n\
+                 corrupt_p = {}\n\
+                 truncate_p = {}\n\
+                 delay_p = {}\n\
+                 delay_ms = {}\n",
+                self.fault.seed,
+                self.fault.drop_p,
+                self.fault.corrupt_p,
+                self.fault.truncate_p,
+                self.fault.delay_p,
+                self.fault.delay_ms,
+            ));
+            if !self.fault.kill_workers.is_empty() {
+                // parallel arrays: kill_rounds[i] says WHEN worker
+                // kill_ids[i] dies
+                let rounds: Vec<String> = self
+                    .fault
+                    .kill_workers
+                    .iter()
+                    .map(|(k, _)| format!("{k}"))
+                    .collect();
+                let ids: Vec<String> = self
+                    .fault
+                    .kill_workers
+                    .iter()
+                    .map(|(_, w)| format!("{w}"))
+                    .collect();
+                out.push_str(&format!(
+                    "kill_rounds = [{}]\nkill_ids = [{}]\n",
+                    rounds.join(", "),
+                    ids.join(", ")
+                ));
+            }
+            if let Some(at) = self.fault.kill_server_at {
+                out.push_str(&format!("kill_server_at = {at}\n"));
+            }
+        }
+        if self.checkpoint != CheckpointCfg::default() {
+            out.push_str(&format!(
+                "\n[checkpoint]\n\
+                 dir = \"{}\"\n\
+                 every = {}\n\
+                 resume = \"{}\"\n",
+                self.checkpoint.dir,
+                self.checkpoint.every,
+                self.checkpoint.resume,
             ));
         }
         out
@@ -490,8 +556,128 @@ impl TrainCfg {
                 }
             }
         }
+        if let Some(section) = doc.sections.get("fault") {
+            let mut kill_rounds: Vec<u64> = Vec::new();
+            let mut kill_ids: Vec<u64> = Vec::new();
+            for (key, value) in section {
+                let prob = |v: &Value| -> anyhow::Result<f64> {
+                    v.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("[fault] {key} must be a number")
+                    })
+                };
+                let int = |v: &Value| -> anyhow::Result<u64> {
+                    v.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("[fault] {key} must be an exact \
+                                         non-negative integer")
+                    })
+                };
+                let ints = |v: &Value| -> anyhow::Result<Vec<u64>> {
+                    match v {
+                        Value::Arr(items) => items
+                            .iter()
+                            .map(|x| {
+                                x.as_u64().ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "[fault] {key} must be an array \
+                                         of non-negative integers"
+                                    )
+                                })
+                            })
+                            .collect(),
+                        _ => anyhow::bail!(
+                            "[fault] {key} must be an array of \
+                             non-negative integers"),
+                    }
+                };
+                match key.as_str() {
+                    "seed" => cfg.fault.seed = int(value)?,
+                    "drop_p" => cfg.fault.drop_p = prob(value)?,
+                    "corrupt_p" => cfg.fault.corrupt_p = prob(value)?,
+                    "truncate_p" => cfg.fault.truncate_p = prob(value)?,
+                    "delay_p" => cfg.fault.delay_p = prob(value)?,
+                    "delay_ms" => cfg.fault.delay_ms = int(value)?,
+                    "kill_rounds" => kill_rounds = ints(value)?,
+                    "kill_ids" => kill_ids = ints(value)?,
+                    "kill_server_at" => {
+                        cfg.fault.kill_server_at = Some(int(value)?)
+                    }
+                    other => {
+                        anyhow::bail!("unknown [fault] key '{other}'")
+                    }
+                }
+            }
+            anyhow::ensure!(
+                kill_rounds.len() == kill_ids.len(),
+                "[fault] kill_rounds ({}) and kill_ids ({}) are parallel \
+                 arrays and must have the same length",
+                kill_rounds.len(),
+                kill_ids.len()
+            );
+            cfg.fault.kill_workers = kill_rounds
+                .into_iter()
+                .zip(kill_ids)
+                .map(|(k, w)| {
+                    anyhow::ensure!(
+                        w <= u32::MAX as u64,
+                        "[fault] kill_ids entry {w} does not fit a \
+                         worker id"
+                    );
+                    Ok((k, w as u32))
+                })
+                .collect::<anyhow::Result<Vec<(u64, u32)>>>()?;
+            cfg.fault.validate()?;
+        }
+        if let Some(section) = doc.sections.get("checkpoint") {
+            for (key, value) in section {
+                match key.as_str() {
+                    "dir" => {
+                        cfg.checkpoint.dir = value
+                            .as_str()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("[checkpoint] dir must \
+                                                 be a string")
+                            })?
+                            .to_string();
+                    }
+                    "every" => {
+                        cfg.checkpoint.every =
+                            value.as_u64().ok_or_else(|| {
+                                anyhow::anyhow!("[checkpoint] every must \
+                                                 be a non-negative \
+                                                 integer")
+                            })?;
+                    }
+                    "resume" => {
+                        cfg.checkpoint.resume = value
+                            .as_str()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("[checkpoint] resume \
+                                                 must be a string")
+                            })?
+                            .to_string();
+                    }
+                    other => {
+                        anyhow::bail!("unknown [checkpoint] key '{other}'")
+                    }
+                }
+            }
+            cfg.checkpoint.validate()?;
+        }
         cfg.comm.validate()?;
         Ok(cfg)
+    }
+
+    /// Fingerprint of the trajectory-defining configuration: FNV-1a 64
+    /// over the canonical TOML rendering with the `[fault]` and
+    /// `[checkpoint]` sections cleared — a resumed incarnation
+    /// legitimately changes those (dropping a scheduled kill, pointing
+    /// `resume` at the save dir) without changing the trajectory it
+    /// must reproduce.
+    pub fn fingerprint(&self) -> u64 {
+        let mut clean = self.clone();
+        clean.fault = FaultPlan::none();
+        clean.checkpoint = CheckpointCfg::default();
+        checkpoint::fnv64(clean.to_toml().as_bytes())
     }
 
     /// The downlink broadcast payload this config means: the explicit
@@ -886,20 +1072,157 @@ impl<'a, A: Algorithm + ?Sized> Trainer<'a, A> {
 
     /// Run the full loop, recording a curve point every `eval_every`
     /// iterations (plus the initial point).
+    ///
+    /// With `[checkpoint]` armed, the full round state (RNG streams,
+    /// comm ledger, algorithm state) is persisted atomically every
+    /// `every` rounds; with `[checkpoint] resume` set, the loop picks
+    /// up from the newest checkpoint and reproduces the uninterrupted
+    /// trajectory bit-for-bit (evaluation consumes no RNG, so the
+    /// resumed curve's tail matches; pre-crash points and the bounded
+    /// event trace are not replayed). A `[fault] kill_server_at = R`
+    /// schedule saves the pre-round state at R, silences the socket
+    /// listener, and surfaces a distinctive error.
     pub fn run(&mut self, run: u32, compute: &mut dyn Compute)
                -> anyhow::Result<Curve> {
         let wall0 = Instant::now();
         let mut curve = Curve::new(&self.label, run);
-        let (loss, acc) = self.evaluate(compute)?;
-        curve.points.push(self.point(0, loss, acc, wall0));
-        for k in 0..self.cfg.iters as u64 {
+        let start_k = self.restore(run)?;
+        if start_k == 0 {
+            let (loss, acc) = self.evaluate(compute)?;
+            curve.points.push(self.point(0, loss, acc, wall0));
+        }
+        let ck_every = self.cfg.checkpoint.every;
+        for k in start_k..self.cfg.iters as u64 {
+            // scheduled crash: persist the pre-round state, go silent
+            // (no Shutdown goodbyes on the wire), and fail loudly. A
+            // kill scheduled exactly at the resume round already
+            // happened in the previous incarnation.
+            if self.cfg.fault.server_killed_at(k)
+                && !(start_k > 0 && k == start_k)
+            {
+                if !self.cfg.checkpoint.dir.is_empty() {
+                    let path = self.save_checkpoint(run, k)?;
+                    crate::info!(
+                        "fault injection: pre-crash state saved to {}",
+                        path.display()
+                    );
+                }
+                if let Some(server) = self.wire.as_mut() {
+                    server.kill();
+                }
+                anyhow::bail!(
+                    "fault injection: server killed before round {k} \
+                     ([fault] kill_server_at)"
+                );
+            }
             self.step(k, compute)?;
             if (k + 1) % self.cfg.eval_every as u64 == 0 {
                 let (loss, acc) = self.evaluate(compute)?;
                 curve.points.push(self.point(k + 1, loss, acc, wall0));
             }
+            if ck_every > 0 && (k + 1) % ck_every == 0 {
+                self.save_checkpoint(run, k + 1)?;
+            }
         }
         Ok(curve)
+    }
+
+    /// Resume from the newest checkpoint under `[checkpoint] resume`,
+    /// if any: restores the per-worker RNG streams, the simulated comm
+    /// ledger, and the algorithm's exported state, and returns the
+    /// round to continue from (0 = fresh start). Run id, round cursor,
+    /// config fingerprint, and every buffer shape are verified before
+    /// anything is overwritten.
+    fn restore(&mut self, run: u32) -> anyhow::Result<u64> {
+        if self.cfg.checkpoint.resume.is_empty() {
+            return Ok(0);
+        }
+        let dir = Path::new(&self.cfg.checkpoint.resume);
+        let Some((next_k, path)) = checkpoint::latest(dir)? else {
+            crate::info!(
+                "resume: no checkpoint under {}, starting fresh",
+                dir.display()
+            );
+            return Ok(0);
+        };
+        let body = checkpoint::load(&path)?;
+        let mut dec = checkpoint::Dec::new(&body);
+        let ckpt_run = dec.take_u32()?;
+        anyhow::ensure!(
+            ckpt_run == run,
+            "checkpoint {} belongs to run {ckpt_run}, resuming run {run}",
+            path.display()
+        );
+        let k = dec.take_u64()?;
+        anyhow::ensure!(
+            k == next_k,
+            "checkpoint {} is named for round {next_k} but its body \
+             resumes at {k}",
+            path.display()
+        );
+        anyhow::ensure!(
+            k <= self.cfg.iters as u64,
+            "checkpoint {} resumes at round {k}, past this run's {} \
+             iterations",
+            path.display(),
+            self.cfg.iters
+        );
+        let fp = dec.take_u64()?;
+        let want = self.cfg.fingerprint();
+        anyhow::ensure!(
+            fp == want,
+            "checkpoint {} was taken under a different run config \
+             (fingerprint {fp:#018x}, this run's {want:#018x}) — \
+             resuming would not reproduce the uninterrupted trajectory",
+            path.display()
+        );
+        let m = dec.take_u64()? as usize;
+        anyhow::ensure!(
+            m == self.rngs.len(),
+            "checkpoint {} holds {m} worker RNG streams, the run has {}",
+            path.display(),
+            self.rngs.len()
+        );
+        for rng in &mut self.rngs {
+            *rng = Rng::from_state(dec.take_rng_state()?);
+        }
+        let comm = dec.take_comm_stats()?;
+        anyhow::ensure!(
+            comm.worker_uploads.len() == m,
+            "checkpoint {} comm ledger covers {} workers, the run has \
+             {m}",
+            path.display(),
+            comm.worker_uploads.len()
+        );
+        self.comm = comm;
+        let blob = dec.take_bytes()?;
+        dec.done()?;
+        self.algo.import_state(&blob)?;
+        crate::info!("resumed from {} at round {k}", path.display());
+        Ok(k)
+    }
+
+    /// Persist the full server-side round state as the checkpoint that
+    /// resumes at `next_k` — atomically, then prune old saves down to
+    /// [`checkpoint::KEEP`].
+    fn save_checkpoint(&self, run: u32, next_k: u64)
+                       -> anyhow::Result<std::path::PathBuf> {
+        let mut body = Vec::new();
+        checkpoint::put_u32(&mut body, run);
+        checkpoint::put_u64(&mut body, next_k);
+        checkpoint::put_u64(&mut body, self.cfg.fingerprint());
+        checkpoint::put_u64(&mut body, self.rngs.len() as u64);
+        for rng in &self.rngs {
+            checkpoint::put_rng_state(&mut body, &rng.state());
+        }
+        checkpoint::put_comm_stats(&mut body, &self.comm);
+        let mut blob = Vec::new();
+        self.algo.export_state(&mut blob)?;
+        checkpoint::put_bytes(&mut body, &blob);
+        let dir = Path::new(&self.cfg.checkpoint.dir);
+        let path = checkpoint::save(dir, next_k, &body)?;
+        checkpoint::prune(dir, checkpoint::KEEP);
+        Ok(path)
     }
 
     fn point(&self, iter: u64, loss: f64, acc: f64, wall0: Instant)
@@ -1107,6 +1430,20 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         self
     }
 
+    /// Deterministic fault injection plan (`[fault]`; default
+    /// [`FaultPlan::none`], which injects nothing).
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.cfg.fault = plan;
+        self
+    }
+
+    /// Checkpoint/resume configuration (`[checkpoint]`; disabled by
+    /// default).
+    pub fn checkpoint(mut self, ck: CheckpointCfg) -> Self {
+        self.cfg.checkpoint = ck;
+        self
+    }
+
     /// Validate, allocate the algorithm's state, the per-worker RNG
     /// streams and link models, and hand back a ready [`Trainer`].
     pub fn build(self) -> anyhow::Result<Trainer<'a, A>> {
@@ -1131,6 +1468,24 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
         let m = partition.num_workers();
         anyhow::ensure!(m >= 1, "partition has no workers");
         self.cfg.comm.validate()?;
+        self.cfg.fault.validate()?;
+        self.cfg.checkpoint.validate()?;
+        {
+            // wire-level faults need a wire; the scheduled server kill
+            // is the only fault the in-process transports can honour
+            let f = &self.cfg.fault;
+            anyhow::ensure!(
+                self.cfg.comm.transport == TransportKind::Socket
+                    || (f.drop_p == 0.0
+                        && f.corrupt_p == 0.0
+                        && f.truncate_p == 0.0
+                        && f.delay_p == 0.0
+                        && f.kill_workers.is_empty()),
+                "wire fault injection (drop/corrupt/truncate/delay/\
+                 kill_workers) needs transport = \"socket\"; only \
+                 kill_server_at applies to in-process transports"
+            );
+        }
         let part = &self.cfg.comm.participation;
         // the trainer runs exactly one simulated slot per partition
         // shard, so a registered population must match the worker count
@@ -1200,6 +1555,7 @@ impl<'a, A: Algorithm + ?Sized> TrainerBuilder<'a, A> {
                 );
                 (Some(SocketServer::builder(&self.cfg.comm.listen)
                           .participation(&self.cfg.comm.participation, m)
+                          .fault(self.cfg.fault.clone())
                           .build()?),
                  Some(wcfg))
             } else {
@@ -1391,6 +1747,21 @@ mod tests {
                 bits: 5,
                 seed: 9,
             },
+            fault: FaultPlan {
+                seed: 99,
+                drop_p: 0.05,
+                corrupt_p: 0.01,
+                truncate_p: 0.02,
+                delay_p: 0.25,
+                delay_ms: 3,
+                kill_workers: vec![(7, 2), (9, 0)],
+                kill_server_at: Some(40),
+            },
+            checkpoint: CheckpointCfg {
+                dir: "ckpts".into(),
+                every: 10,
+                resume: "ckpts".into(),
+            },
         };
         let text = cfg.to_toml();
         let doc = toml::parse(&text).unwrap();
@@ -1399,6 +1770,32 @@ mod tests {
         // the default Identity config emits no [compress] section at
         // all, so pre-compression golden configs stay byte-identical
         assert!(!TrainCfg::default().to_toml().contains("[compress]"));
+        // likewise [fault]/[checkpoint]: absent until armed, so every
+        // fault-free golden config is byte-identical — and the
+        // fingerprint ignores both sections (a resume incarnation may
+        // drop the kill schedule without invalidating its checkpoint)
+        assert!(!TrainCfg::default().to_toml().contains("[fault]"));
+        assert!(!TrainCfg::default().to_toml().contains("[checkpoint]"));
+        assert_eq!(cfg.fingerprint(), {
+            let mut clean = cfg.clone();
+            clean.fault = FaultPlan::none();
+            clean.checkpoint = CheckpointCfg::default();
+            clean.fingerprint()
+        });
+        assert_ne!(cfg.fingerprint(), TrainCfg::default().fingerprint());
+        // fault/checkpoint parse errors are loud: unknown keys,
+        // out-of-range probabilities, and mismatched kill arrays
+        let bad = toml::parse("[fault]\ndropp = 0.5\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[fault]\ndrop_p = 1.5\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse(
+            "[fault]\nkill_rounds = [1, 2]\nkill_ids = [0]\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[checkpoint]\nevery = 5\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
+        let bad = toml::parse("[checkpoint]\npath = \"x\"\n").unwrap();
+        assert!(TrainCfg::from_doc(&bad).is_err());
         // defaults survive an empty doc
         let empty = TrainCfg::from_doc(&toml::parse("").unwrap()).unwrap();
         assert_eq!(empty, TrainCfg::default());
@@ -1502,6 +1899,41 @@ mod tests {
             .unwrap();
         assert!(err.to_string().contains("socket"), "{err}");
         assert!(err.to_string().contains("fedavg"), "{err}");
+    }
+
+    #[test]
+    fn wire_faults_require_the_socket_transport() {
+        // drop/corrupt/truncate/delay act on real frames; an in-process
+        // run silently ignoring them would be a lying chaos test
+        let (_, data, partition) = workload();
+        let mut algo = Cada::new(CadaCfg::basic(RuleKind::Always,
+                                                amsgrad()));
+        let err = Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1]))
+            .init_theta(vec![0.0; 1024])
+            .fault(FaultPlan { drop_p: 0.1, ..FaultPlan::none() })
+            .build()
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("socket"), "{err}");
+        // the scheduled server kill is transport-independent
+        let mut algo = Cada::new(CadaCfg::basic(RuleKind::Always,
+                                                amsgrad()));
+        assert!(Trainer::builder()
+            .algorithm(&mut algo)
+            .dataset(&data)
+            .partition(&partition)
+            .eval_batch(data.gather(&[0, 1]))
+            .init_theta(vec![0.0; 1024])
+            .fault(FaultPlan {
+                kill_server_at: Some(3),
+                ..FaultPlan::none()
+            })
+            .build()
+            .is_ok());
     }
 
     #[test]

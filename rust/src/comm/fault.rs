@@ -1,0 +1,347 @@
+//! Deterministic fault injection for the socket stack.
+//!
+//! A [`FaultPlan`] is the chaos-engineering twin of the link jitter and
+//! compression seeding: every injected fault is a **pure function of
+//! `(fault_seed, round, worker, event)`**, so a faulty run is exactly
+//! as reproducible as a clean one — rerun the same plan and the same
+//! frames corrupt, the same connections drop, the same processes die at
+//! the same rounds. That is what lets CI assert hard things about
+//! crashed runs ("resume is bit-identical to uninterrupted") instead of
+//! merely "it didn't panic".
+//!
+//! The plan is carried in the `[fault]` TOML section / `--fault-*`
+//! flags and flows to both sides of the wire:
+//!
+//! * **server side** ([`crate::comm::SocketServer`]): `drop_p` closes a
+//!   selected worker's connection instead of sending its round header;
+//!   `delay_p` sleeps `delay_ms` before the header write (exercises the
+//!   poll-loop deadlines); `kill_server_at` makes the trainer save a
+//!   checkpoint and crash before broadcasting that round.
+//! * **worker side** ([`crate::comm::run_worker`]): `corrupt_p` flips
+//!   one payload bit in the worker's outgoing step frame (the server
+//!   detects the CRC mismatch and folds a skip — a lost upload);
+//!   `truncate_p` sends only a prefix of the step frame and drops the
+//!   connection; `kill_workers` exits the worker process on the first
+//!   round header at or past the named round.
+//!
+//! [`FaultPlan::none()`] is the default and is checked once per use
+//! site (`is_none()`), so fault-free paths stay bit-identical to — and
+//! as fast as — builds that never heard of fault injection.
+//!
+//! Which faults preserve bit-identity of the training state? Payload
+//! corruption and permanent kills do: both runs of a seeded plan see
+//! the identical lost uploads and vacated slots. Reconnect-flavoured
+//! faults (`drop_p`/`truncate_p` against healing workers) are
+//! deterministic in *which* events fire but the rejoin lands whenever
+//! the poll loop next admits joiners — use those in liveness tests, not
+//! in bit-identity assertions.
+
+use crate::util::rng::Rng;
+
+/// Mix constants shared with the selection stream: faults draw from the
+/// same family of per-(round, worker) decorrelated streams.
+const ROUND_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+const WORKER_MIX: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// The injected-fault event classes, each with its own RNG stream so
+/// e.g. enabling `delay_p` never changes which frames `corrupt_p`
+/// picks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// server: close the connection instead of sending the round header
+    Drop,
+    /// worker: flip one payload bit in the outgoing step frame
+    Corrupt,
+    /// worker: send a prefix of the step frame, then drop the link
+    Truncate,
+    /// server: sleep `delay_ms` before the header write
+    Delay,
+}
+
+impl FaultEvent {
+    fn stream(self) -> u64 {
+        match self {
+            FaultEvent::Drop => 1,
+            FaultEvent::Corrupt => 2,
+            FaultEvent::Truncate => 3,
+            FaultEvent::Delay => 4,
+        }
+    }
+}
+
+/// A deterministic fault-injection plan (`[fault]` / `--fault-*`).
+/// The default plan injects nothing and costs nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// root seed for every fault stream (analogous to `jitter_seed`)
+    pub seed: u64,
+    /// per-(round, selected worker) probability the server drops the
+    /// connection instead of sending the round header
+    pub drop_p: f64,
+    /// per-(round, worker) probability the worker bit-flips its own
+    /// outgoing step frame's payload
+    pub corrupt_p: f64,
+    /// per-(round, worker) probability the worker truncates its
+    /// outgoing step frame and drops the connection
+    pub truncate_p: f64,
+    /// per-(round, selected worker) probability the server sleeps
+    /// `delay_ms` before writing the round header
+    pub delay_p: f64,
+    /// milliseconds a delayed header write sleeps
+    pub delay_ms: u64,
+    /// `(round, worker)` pairs: the worker exits on the first round
+    /// header with `k >= round` (so the effective kill round is the
+    /// first round at or past it in which the worker is selected)
+    pub kill_workers: Vec<(u64, u32)>,
+    /// the trainer saves a checkpoint and crashes (suppressing the
+    /// clean Shutdown broadcast) before broadcasting this round
+    pub kill_server_at: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            drop_p: 0.0,
+            corrupt_p: 0.0,
+            truncate_p: 0.0,
+            delay_p: 0.0,
+            delay_ms: 0,
+            kill_workers: Vec::new(),
+            kill_server_at: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The inert plan: injects nothing, costs one boolean check.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// True when this plan can never fire an event — the fast path the
+    /// hot loops check once before consulting any stream.
+    pub fn is_none(&self) -> bool {
+        self.drop_p == 0.0
+            && self.corrupt_p == 0.0
+            && self.truncate_p == 0.0
+            && self.delay_p == 0.0
+            && self.kill_workers.is_empty()
+            && self.kill_server_at.is_none()
+    }
+
+    /// Validate the probabilities and the kill schedule.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, p) in [("drop_p", self.drop_p),
+                          ("corrupt_p", self.corrupt_p),
+                          ("truncate_p", self.truncate_p),
+                          ("delay_p", self.delay_p)] {
+            anyhow::ensure!(
+                p.is_finite() && (0.0..=1.0).contains(&p),
+                "[fault] {name} must be a probability in [0, 1], got {p}"
+            );
+        }
+        Ok(())
+    }
+
+    /// The pure per-event stream: `(seed, round, worker, event)` fully
+    /// determine every draw, mirroring the selection-stream idiom.
+    fn stream_rng(&self, event: FaultEvent, round: u64, worker: u64)
+                  -> Rng {
+        let stream = round
+            .wrapping_mul(ROUND_MIX)
+            .wrapping_add(worker.wrapping_mul(WORKER_MIX))
+            .wrapping_add(event.stream());
+        Rng::new(self.seed ^ stream)
+    }
+
+    fn roll(&self, event: FaultEvent, p: f64, round: u64, worker: u64)
+            -> bool {
+        p > 0.0 && self.stream_rng(event, round, worker).f64() < p
+    }
+
+    /// Server side: drop worker `w`'s connection instead of sending its
+    /// round-`k` header?
+    pub fn drop_header(&self, k: u64, w: usize) -> bool {
+        self.roll(FaultEvent::Drop, self.drop_p, k, w as u64)
+    }
+
+    /// Server side: sleep `delay_ms` before writing worker `w`'s
+    /// round-`k` header?
+    pub fn delay_header(&self, k: u64, w: usize) -> bool {
+        self.delay_ms > 0
+            && self.roll(FaultEvent::Delay, self.delay_p, k, w as u64)
+    }
+
+    /// Worker side: corrupt this worker's round-`k` step frame? Returns
+    /// the (byte index, xor mask) to flip, chosen past the 8-byte
+    /// `[len][crc]` prefix so framing stays aligned and exactly the
+    /// payload integrity check trips.
+    pub fn corrupt_step(&self, k: u64, w: usize, frame_len: usize)
+                        -> Option<(usize, u8)> {
+        const PREFIX: usize = super::wire::FRAME_PREFIX;
+        if frame_len <= PREFIX {
+            return None;
+        }
+        let mut rng = self.stream_rng(FaultEvent::Corrupt, k, w as u64);
+        if !(self.corrupt_p > 0.0 && rng.f64() < self.corrupt_p) {
+            return None;
+        }
+        let byte = PREFIX + rng.below(frame_len - PREFIX);
+        let mask = 1u8 << rng.below(8);
+        Some((byte, mask))
+    }
+
+    /// Worker side: truncate this worker's round-`k` step frame?
+    /// Returns the number of bytes to send (strictly less than
+    /// `frame_len`) before dropping the connection.
+    pub fn truncate_step(&self, k: u64, w: usize, frame_len: usize)
+                         -> Option<usize> {
+        if frame_len == 0 {
+            return None;
+        }
+        let mut rng = self.stream_rng(FaultEvent::Truncate, k, w as u64);
+        if !(self.truncate_p > 0.0 && rng.f64() < self.truncate_p) {
+            return None;
+        }
+        Some(rng.below(frame_len))
+    }
+
+    /// The round at (or past) which worker `w` is scheduled to die, if
+    /// any (the earliest schedule entry naming it).
+    pub fn kill_worker_round(&self, w: usize) -> Option<u64> {
+        self.kill_workers
+            .iter()
+            .filter(|&&(_, kw)| kw as usize == w)
+            .map(|&(r, _)| r)
+            .min()
+    }
+
+    /// Is the server scheduled to crash before broadcasting round `k`?
+    pub fn server_killed_at(&self, k: u64) -> bool {
+        self.kill_server_at == Some(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_default_plan_is_inert() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_none());
+        for k in 0..64 {
+            for w in 0..8 {
+                assert!(!plan.drop_header(k, w));
+                assert!(!plan.delay_header(k, w));
+                assert!(plan.corrupt_step(k, w, 4096).is_none());
+                assert!(plan.truncate_step(k, w, 4096).is_none());
+            }
+        }
+        assert_eq!(plan.kill_worker_round(0), None);
+        assert!(!plan.server_killed_at(0));
+    }
+
+    #[test]
+    fn faults_are_pure_in_seed_round_worker_event() {
+        let plan = FaultPlan {
+            seed: 0xFA_17,
+            drop_p: 0.3,
+            corrupt_p: 0.3,
+            truncate_p: 0.3,
+            delay_p: 0.3,
+            delay_ms: 5,
+            ..FaultPlan::default()
+        };
+        let twin = plan.clone();
+        let mut fired = 0u32;
+        for k in 0..50 {
+            for w in 0..4 {
+                assert_eq!(plan.drop_header(k, w),
+                           twin.drop_header(k, w));
+                assert_eq!(plan.corrupt_step(k, w, 512),
+                           twin.corrupt_step(k, w, 512));
+                assert_eq!(plan.truncate_step(k, w, 512),
+                           twin.truncate_step(k, w, 512));
+                assert_eq!(plan.delay_header(k, w),
+                           twin.delay_header(k, w));
+                fired += plan.drop_header(k, w) as u32;
+            }
+        }
+        // at p=0.3 over 200 trials, firing 20..=100 times is ~certain
+        assert!((20..=100).contains(&fired), "drop fired {fired}/200");
+    }
+
+    #[test]
+    fn event_streams_are_decorrelated() {
+        // the same (seed, round, worker) must not force drop and
+        // corrupt to co-fire: each event class has its own stream
+        let plan = FaultPlan {
+            seed: 7,
+            drop_p: 0.5,
+            corrupt_p: 0.5,
+            ..FaultPlan::default()
+        };
+        let mut agree = 0u32;
+        let trials = 400;
+        for k in 0..100u64 {
+            for w in 0..4 {
+                let d = plan.drop_header(k, w);
+                let c = plan.corrupt_step(k, w, 64).is_some();
+                agree += (d == c) as u32;
+            }
+        }
+        // perfectly correlated streams would agree 400/400
+        assert!((100..=300).contains(&agree),
+                "drop/corrupt agreed {agree}/{trials}");
+    }
+
+    #[test]
+    fn certain_probabilities_always_fire_and_stay_in_bounds() {
+        let plan = FaultPlan {
+            seed: 3,
+            corrupt_p: 1.0,
+            truncate_p: 1.0,
+            ..FaultPlan::default()
+        };
+        for k in 0..32 {
+            for len in [9usize, 16, 100, 4096] {
+                let (byte, mask) =
+                    plan.corrupt_step(k, 1, len).expect("p=1 fires");
+                assert!((8..len).contains(&byte),
+                        "corrupt byte {byte} outside payload of {len}");
+                assert_eq!(mask.count_ones(), 1);
+                let cut =
+                    plan.truncate_step(k, 1, len).expect("p=1 fires");
+                assert!(cut < len, "truncation {cut} >= frame {len}");
+            }
+            // a frame with no payload past the prefix cannot corrupt
+            assert!(plan.corrupt_step(k, 1, 8).is_none());
+        }
+    }
+
+    #[test]
+    fn kill_schedule_picks_the_earliest_round_per_worker() {
+        let plan = FaultPlan {
+            kill_workers: vec![(9, 2), (5, 2), (7, 0)],
+            kill_server_at: Some(12),
+            ..FaultPlan::default()
+        };
+        assert!(!plan.is_none());
+        assert_eq!(plan.kill_worker_round(2), Some(5));
+        assert_eq!(plan.kill_worker_round(0), Some(7));
+        assert_eq!(plan.kill_worker_round(1), None);
+        assert!(plan.server_killed_at(12));
+        assert!(!plan.server_killed_at(11));
+    }
+
+    #[test]
+    fn validate_rejects_non_probabilities() {
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            let plan = FaultPlan { drop_p: bad, ..FaultPlan::default() };
+            assert!(plan.validate().is_err(), "accepted drop_p = {bad}");
+        }
+        assert!(FaultPlan::none().validate().is_ok());
+    }
+}

@@ -39,12 +39,55 @@
 //!   three are bit-identical because every simulated quantity is a pure
 //!   function of the round, not of execution interleaving — and floats
 //!   cross the wire as exact bit patterns.
+//!
+//! # Failure model and recovery semantics
+//!
+//! The crash-safety layer (wire CRC + [`fault`] injection + the
+//! checkpoint/resume path in [`crate::coordinator::checkpoint`]) makes
+//! the following guarantees, in decreasing order of strength:
+//!
+//! * **Corrupt frames are lost uploads, never garbage folds.** Every
+//!   frame carries a CRC32 over its payload (protocol v4). A server
+//!   that receives a corrupt step frame counts it
+//!   (`WireStats::frames_corrupt`, plus the per-worker rejection
+//!   column) and folds a skip for that slot — the framing stays aligned
+//!   and the round completes. A worker that receives a corrupt frame
+//!   treats the connection as lost and (with `--heal`) rejoins, which
+//!   re-requests the broadcast: the fresh connection holds no
+//!   acknowledged ranges, so the server re-ships full state.
+//! * **Checkpoint + resume is bit-identical where the server owns the
+//!   state.** `cada serve --checkpoint <dir> --checkpoint-every N`
+//!   atomically persists the complete round state (theta, AMSGrad
+//!   moments, CADA snapshot + shard versions, per-worker mirrors and
+//!   stale queues, drift history, per-worker RNG streams, `CommStats`);
+//!   `--resume <dir>` restores it. On the in-process transports —
+//!   where the server owns every worker's state — a run killed at
+//!   round R and resumed is bit-identical to the uninterrupted run. On
+//!   the socket transport the same holds provided the worker processes
+//!   survive (`cada worker --heal` keeps `WorkerState` across
+//!   reconnects and rejoins its own slot); a worker that *restarts*
+//!   from scratch rejoins with reset local state — the same
+//!   approximation as a churn rejoiner, whose innovation base is reset
+//!   to the freshly shipped theta (see the ROADMAP item 2 caveat).
+//!   Measured wall-clock telemetry (`WireStats`, shard timings, curve
+//!   `wall_s`) intentionally restarts from zero on resume; everything
+//!   simulated or counted resumes exactly.
+//! * **Churn approximates permanent loss, not recovery.** A vacated
+//!   slot folds as an explicit skip each round (staleness advances as
+//!   if the worker skipped), which is exactly CADA's semantics for a
+//!   worker whose uploads never arrive. Deterministic [`FaultPlan`]
+//!   kills therefore keep bit-identity; reconnect-flavoured faults
+//!   (drops/truncations against healing workers) are deterministic in
+//!   *which* events fire but not in which round the rejoin lands — use
+//!   them for liveness assertions, not bit-identity ones.
 
+pub mod fault;
 pub mod link;
 pub mod socket;
 pub mod transport;
 pub mod wire;
 
+pub use fault::FaultPlan;
 pub use link::{LinkModel, LinkSet, Participation, RoundVerdict};
 pub use socket::{run_worker, run_worker_opts, RoundOutcome, SocketServer,
                  WireStats, WorkerOpts, WorkerReport};

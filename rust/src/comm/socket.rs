@@ -38,6 +38,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
+use super::fault::FaultPlan;
 use super::wire::{self, Msg, WireRound, WireStep, WireWorkerCfg};
 use super::ParticipationCfg;
 use crate::compress::{Payload, PayloadRef};
@@ -45,6 +46,8 @@ use crate::coordinator::rules::Decision;
 use crate::coordinator::worker::WorkerState;
 use crate::data::Dataset;
 use crate::runtime::Compute;
+use crate::util::crc::crc32;
+use crate::util::rng::Rng;
 
 /// Default for how long the server waits for workers to connect /
 /// answer, and a worker waits for the next round, before declaring the
@@ -89,9 +92,14 @@ pub struct WireStats {
     pub step_decode_ns: u64,
     /// step frames dropped instead of folded: duplicates from a worker
     /// that already answered, stale frames carrying an old round id,
-    /// frames from unselected workers, or frames whose claimed id
-    /// differs from their connection's slot
+    /// frames from unselected workers, frames whose claimed id differs
+    /// from their connection's slot, or frames that failed to decode
     pub steps_rejected: u64,
+    /// frames whose payload CRC-32 did not match the prefix (protocol
+    /// v4): detected corruption, handled as a lost upload — counted
+    /// here and per-worker through
+    /// [`RoundOutcome::rejected`], never folded
+    pub frames_corrupt: u64,
     /// mid-run (re)admissions into vacant population slots (churn mode)
     pub rejoins: u64,
 }
@@ -179,9 +187,9 @@ fn write_all_nb(stream: &mut TcpStream, mut buf: &[u8], deadline: Instant)
     Ok(())
 }
 
-/// Write one length-prefixed frame (same layout as
-/// [`wire::write_frame`]) to a nonblocking stream. Returns the wire
-/// bytes: 4-byte prefix + payload.
+/// Write one framed message (same layout as [`wire::write_frame`]:
+/// length, payload CRC-32, payload) to a nonblocking stream. Returns
+/// the wire bytes: [`wire::FRAME_PREFIX`] + payload.
 fn write_frame_nb(stream: &mut TcpStream, payload: &[u8],
                   deadline: Instant) -> anyhow::Result<usize> {
     anyhow::ensure!(
@@ -191,8 +199,9 @@ fn write_frame_nb(stream: &mut TcpStream, payload: &[u8],
         wire::MAX_FRAME
     );
     write_all_nb(stream, &(payload.len() as u32).to_le_bytes(), deadline)?;
+    write_all_nb(stream, &crc32(payload).to_le_bytes(), deadline)?;
     write_all_nb(stream, payload, deadline)?;
-    Ok(4 + payload.len())
+    Ok(wire::FRAME_PREFIX + payload.len())
 }
 
 /// Drain everything currently readable from a nonblocking stream into
@@ -216,11 +225,23 @@ fn fill_recv(conn: &mut WorkerConn) -> std::io::Result<(bool, usize)> {
     }
 }
 
-/// Pop one complete length-prefixed frame off the accumulator, if one
-/// has fully arrived. Applies the same `MAX_FRAME` hostile-length guard
-/// as [`wire::read_frame`].
-fn take_frame(recv: &mut Vec<u8>) -> anyhow::Result<Option<Vec<u8>>> {
-    if recv.len() < 4 {
+/// One frame popped off a nonblocking accumulator: either intact, or
+/// detected-corrupt (payload CRC-32 mismatch). A corrupt frame leaves
+/// the framing aligned — the length prefix was trusted, the body was
+/// not — so the caller can count it and keep the connection.
+enum TakenFrame {
+    Intact(Vec<u8>),
+    Corrupt { len: usize, want: u32, got: u32 },
+}
+
+/// Pop one complete frame off the accumulator, if one has fully
+/// arrived. Applies the same `MAX_FRAME` hostile-length guard as
+/// [`wire::read_frame`] (an `Err` here means the framing itself can no
+/// longer be trusted) and the same CRC-32 body check (a mismatch is
+/// survivable: [`TakenFrame::Corrupt`]).
+fn take_frame(recv: &mut Vec<u8>) -> anyhow::Result<Option<TakenFrame>> {
+    const PREFIX: usize = wire::FRAME_PREFIX;
+    if recv.len() < PREFIX {
         return Ok(None);
     }
     let len =
@@ -230,12 +251,18 @@ fn take_frame(recv: &mut Vec<u8>) -> anyhow::Result<Option<Vec<u8>>> {
         "wire frame of {len} bytes exceeds the {} byte cap",
         wire::MAX_FRAME
     );
-    if recv.len() < 4 + len {
+    if recv.len() < PREFIX + len {
         return Ok(None);
     }
-    let frame = recv[4..4 + len].to_vec();
-    recv.drain(..4 + len);
-    Ok(Some(frame))
+    let want = u32::from_le_bytes([recv[4], recv[5], recv[6], recv[7]]);
+    let got = crc32(&recv[PREFIX..PREFIX + len]);
+    let taken = if got == want {
+        TakenFrame::Intact(recv[PREFIX..PREFIX + len].to_vec())
+    } else {
+        TakenFrame::Corrupt { len, want, got }
+    };
+    recv.drain(..PREFIX + len);
+    Ok(Some(taken))
 }
 
 /// Builds a [`SocketServer`]: `SocketServer::builder(addr)
@@ -252,6 +279,7 @@ pub struct SocketServerBuilder {
     timeout: Duration,
     churn: bool,
     min_live: usize,
+    fault: FaultPlan,
 }
 
 impl SocketServerBuilder {
@@ -308,11 +336,21 @@ impl SocketServerBuilder {
         self
     }
 
+    /// Deterministic fault injection (chaos testing): the server-side
+    /// events of `plan` — dropped/delayed round headers, a scheduled
+    /// crash at `kill_server_at`. [`FaultPlan::none`] (the default) is
+    /// a zero-cost no-op on every hot path.
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = plan;
+        self
+    }
+
     /// Bind the listen address (port 0 picks an ephemeral port; see
     /// [`SocketServer::local_addr`]). Workers are accepted later, by
     /// [`SocketServer::handshake`] — so a caller can learn the bound
     /// address and launch workers before the first round blocks.
     pub fn build(self) -> anyhow::Result<SocketServer> {
+        self.fault.validate()?;
         anyhow::ensure!(
             self.population >= 1,
             "socket transport needs >= 1 worker"
@@ -346,7 +384,7 @@ impl SocketServerBuilder {
         let mut conns = Vec::with_capacity(self.population);
         conns.resize_with(self.population, || None);
         Ok(SocketServer {
-            listener,
+            listener: Some(listener),
             conns,
             m: self.population,
             select: self.select,
@@ -357,6 +395,8 @@ impl SocketServerBuilder {
             churn: self.churn,
             min_live: self.min_live.max(1),
             greet_info: None,
+            fault: self.fault,
+            killed: false,
         })
     }
 }
@@ -365,7 +405,9 @@ impl SocketServerBuilder {
 /// the N population slots (a slot is `None` while vacated by churn),
 /// their ack state, and the measured byte counters.
 pub struct SocketServer {
-    listener: TcpListener,
+    /// `None` after [`SocketServer::kill`]: the crashed server accepts
+    /// nobody and greets nobody
+    listener: Option<TcpListener>,
     conns: Vec<Option<WorkerConn>>,
     m: usize,
     select: usize,
@@ -376,6 +418,8 @@ pub struct SocketServer {
     churn: bool,
     min_live: usize,
     greet_info: Option<GreetInfo>,
+    fault: FaultPlan,
+    killed: bool,
 }
 
 impl SocketServer {
@@ -389,12 +433,27 @@ impl SocketServer {
             timeout: SOCKET_TIMEOUT,
             churn: false,
             min_live: 0,
+            fault: FaultPlan::none(),
         }
     }
 
     /// The bound listen address (the actual port when bound to port 0).
     pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
-        Ok(self.listener.local_addr()?)
+        let listener = self
+            .listener
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("server was killed"))?;
+        Ok(listener.local_addr()?)
+    }
+
+    /// Simulate a server crash (the scheduled `kill_server_at` fault):
+    /// drop the listener, stop speaking. The live worker streams are
+    /// deliberately parked, not shut down — a real crash sends no
+    /// `Shutdown` goodbye, so workers see a bare EOF and must decide to
+    /// heal or die on their own. `Drop` becomes a no-op afterwards.
+    pub fn kill(&mut self) {
+        self.killed = true;
+        self.listener = None;
     }
 
     /// Registered population N: worker slots this server coordinates.
@@ -442,7 +501,11 @@ impl SocketServer {
                                            data_fp });
         let deadline = Instant::now() + self.timeout;
         while self.live() < self.m {
-            match self.listener.accept() {
+            let accepted = match self.listener.as_ref() {
+                Some(listener) => listener.accept(),
+                None => anyhow::bail!("server was killed"),
+            };
+            match accepted {
                 Ok((stream, peer)) => {
                     self.greet(stream, peer).map_err(|e| {
                         anyhow::anyhow!("handshake with worker {peer}: {e:#}")
@@ -565,7 +628,11 @@ impl SocketServer {
     fn admit_joiners(&mut self, rejoined: &mut Vec<usize>)
                      -> anyhow::Result<()> {
         loop {
-            match self.listener.accept() {
+            let accepted = match self.listener.as_ref() {
+                Some(listener) => listener.accept(),
+                None => return Ok(()),
+            };
+            match accepted {
                 Ok((stream, peer)) => {
                     if let Ok(w) = self.greet(stream, peer) {
                         self.stats.rejoins += 1;
@@ -690,7 +757,7 @@ impl SocketServer {
 
         // dispatch: one header per selected, live worker
         for (i, &w) in selected.iter().enumerate() {
-            let Some(conn) = self.conns[w].as_mut() else {
+            if self.conns[w].is_none() {
                 // vacated in an earlier round and not yet refilled: the
                 // algorithm still folds a skip so staleness advances
                 anyhow::ensure!(
@@ -700,7 +767,35 @@ impl SocketServer {
                 );
                 slots[i] = Some(skip_step(round.k, w));
                 continue;
-            };
+            }
+            if !self.fault.is_none() {
+                if self.fault.drop_header(round.k, w) {
+                    // injected network failure: sever the link instead
+                    // of sending the header
+                    anyhow::ensure!(
+                        self.churn,
+                        "fault injection dropped worker {w}'s round-{} \
+                         header and churn tolerance is off",
+                        round.k
+                    );
+                    crate::warn_log!(
+                        "fault: dropping worker {w}'s round-{} header",
+                        round.k
+                    );
+                    self.vacate(w, round.k)?;
+                    slots[i] = Some(skip_step(round.k, w));
+                    outcome.vacated.push(w);
+                    continue;
+                }
+                if self.fault.delay_header(round.k, w) {
+                    std::thread::sleep(Duration::from_millis(
+                        self.fault.delay_ms,
+                    ));
+                }
+            }
+            let conn = self.conns[w]
+                .as_mut()
+                .expect("slot checked live above");
             let t0 = Instant::now();
             let (theta, snapshot) =
                 Self::dirty_ranges(conn, round, &mut self.stats);
@@ -750,7 +845,8 @@ impl SocketServer {
             }
             for w in 0..self.m {
                 let mut eof = false;
-                let mut frames: Vec<Vec<u8>> = Vec::new();
+                let mut framing_err: Option<anyhow::Error> = None;
+                let mut frames: Vec<TakenFrame> = Vec::new();
                 {
                     let Some(conn) = self.conns[w].as_mut() else {
                         continue;
@@ -771,11 +867,61 @@ impl SocketServer {
                             eof = true;
                         }
                     }
-                    while let Some(f) = take_frame(&mut conn.recv)? {
-                        frames.push(f);
+                    loop {
+                        match take_frame(&mut conn.recv) {
+                            Ok(Some(f)) => frames.push(f),
+                            Ok(None) => break,
+                            Err(e) => {
+                                framing_err = Some(e);
+                                break;
+                            }
+                        }
                     }
                 }
+                if let Some(e) = framing_err {
+                    // a hostile length prefix: the byte stream can no
+                    // longer be re-synchronized, so the connection goes
+                    if !self.churn {
+                        return Err(anyhow::anyhow!(
+                            "worker {w}'s round-{} stream: {e:#}",
+                            round.k
+                        ));
+                    }
+                    crate::warn_log!(
+                        "worker {w}: unrecoverable framing in round {}: \
+                         {e:#}; dropping the connection",
+                        round.k
+                    );
+                    eof = true;
+                }
                 for frame in frames {
+                    let frame = match frame {
+                        TakenFrame::Intact(f) => f,
+                        TakenFrame::Corrupt { len, want, got } => {
+                            // detected corruption is a lost upload: the
+                            // sender will not repeat it, so the slot
+                            // folds a skip (if still open) and the
+                            // connection survives — the framing stayed
+                            // aligned
+                            self.stats.frames_corrupt += 1;
+                            outcome.rejected.push(w);
+                            crate::warn_log!(
+                                "worker {w}: corrupt {len}-byte frame \
+                                 in round {} (payload hashes to \
+                                 {got:#010x}, prefix claims \
+                                 {want:#010x}); treating it as a lost \
+                                 upload",
+                                round.k
+                            );
+                            let pos = pos_of[w];
+                            if pos != usize::MAX && slots[pos].is_none()
+                            {
+                                slots[pos] =
+                                    Some(skip_step(round.k, w));
+                            }
+                            continue;
+                        }
+                    };
                     // parse the frame as a borrowed view and decompress
                     // straight into the dense vector the fold consumes:
                     // one parse, one allocation, no intermediate owned
@@ -788,12 +934,27 @@ impl SocketServer {
                         });
                     self.stats.step_decode_ns +=
                         t0.elapsed().as_nanos() as u64;
-                    let (view, dense) = parsed.map_err(|e| {
-                        anyhow::anyhow!(
-                            "worker {w}'s round-{} result: {e:#}",
-                            round.k
-                        )
-                    })?;
+                    let (view, dense) = match parsed {
+                        Ok(ok) => ok,
+                        Err(e) => {
+                            // CRC-valid but undecodable: a hostile or
+                            // version-skewed peer. Reject the frame
+                            // with its forensics instead of failing the
+                            // round — the sender may still answer
+                            // correctly
+                            self.stats.steps_rejected += 1;
+                            outcome.rejected.push(w);
+                            crate::warn_log!(
+                                "worker {w}: rejecting an undecodable \
+                                 {}-byte frame (tag {}) in round {}: \
+                                 {e:#}",
+                                frame.len(),
+                                frame.first().copied().unwrap_or(0),
+                                round.k
+                            );
+                            continue;
+                        }
+                    };
                     let pos = pos_of[w];
                     let fresh = pos != usize::MAX
                         && slots[pos].is_none()
@@ -848,6 +1009,10 @@ impl SocketServer {
 
 impl Drop for SocketServer {
     fn drop(&mut self) {
+        // a killed server crashed: no goodbye, workers get a bare EOF
+        if self.killed {
+            return;
+        }
         // best-effort: let worker processes exit cleanly instead of
         // discovering the EOF
         for conn in self.conns.iter_mut().flatten() {
@@ -871,8 +1036,9 @@ pub struct WorkerReport {
 }
 
 /// Per-process knobs for [`run_worker_opts`]. `Default` reproduces
-/// [`run_worker`]: interactive-scale timeouts, fresh `Hello` handshake.
-#[derive(Clone, Copy, Debug)]
+/// [`run_worker`]: interactive-scale timeouts, fresh `Hello` handshake,
+/// no healing, no faults.
+#[derive(Clone, Debug)]
 pub struct WorkerOpts {
     /// connect-retry budget (the server may still be binding)
     pub connect: Duration,
@@ -882,6 +1048,15 @@ pub struct WorkerOpts {
     /// claim this population slot with a churn-mode `Rejoin` handshake
     /// instead of a fresh `Hello`
     pub rejoin_slot: Option<u32>,
+    /// worker-side deterministic fault injection: corrupt or truncate
+    /// this worker's own step frames, die at a scheduled round, part
+    /// ahead of a scheduled server crash
+    pub fault: FaultPlan,
+    /// self-healing: when the connection dies without a `Shutdown`
+    /// goodbye, reconnect and `Rejoin` the same slot with gradient
+    /// state intact instead of returning — the worker survives a
+    /// server restart
+    pub heal: bool,
 }
 
 impl Default for WorkerOpts {
@@ -890,6 +1065,8 @@ impl Default for WorkerOpts {
             connect: SOCKET_TIMEOUT,
             timeout: SOCKET_TIMEOUT,
             rejoin_slot: None,
+            fault: FaultPlan::none(),
+            heal: false,
         }
     }
 }
@@ -902,6 +1079,8 @@ impl WorkerOpts {
             connect: p.connect_retry(),
             timeout: p.socket_timeout(),
             rejoin_slot: None,
+            fault: FaultPlan::none(),
+            heal: false,
         }
     }
 }
@@ -910,12 +1089,23 @@ impl WorkerOpts {
 /// be binding when a worker launches). Every attempt is individually
 /// bounded via [`TcpStream::connect_timeout`], so a black-holed SYN
 /// (firewall DROP) cannot stretch the overall deadline by the kernel's
-/// multi-minute TCP connect timeout.
+/// multi-minute TCP connect timeout. Between attempts the worker backs
+/// off exponentially (50 ms doubling to a 2 s ceiling) with jitter
+/// seeded from the address, so a rebooting server is not hammered at a
+/// fixed rate by a synchronized fleet of waiters.
 pub fn connect_retry(addr: &str, timeout: Duration)
                      -> anyhow::Result<TcpStream> {
     use std::net::ToSocketAddrs;
     let deadline = Instant::now() + timeout;
     let mut last_err = String::from("no addresses resolved");
+    // deterministic per-address jitter stream (FNV-1a of the address):
+    // no clock entropy, but distinct workers resolve distinct source
+    // ports anyway — the jitter only needs to de-synchronize retries
+    let mut jitter = Rng::new(addr.bytes().fold(
+        0xcbf2_9ce4_8422_2325u64,
+        |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3),
+    ));
+    let mut attempt = 0u32;
     loop {
         // re-resolve each attempt: the name may start resolving while
         // the server host boots
@@ -942,7 +1132,14 @@ pub fn connect_retry(addr: &str, timeout: Duration)
             return Err(anyhow::anyhow!(
                 "connecting to cada server at {addr}: {last_err}"));
         }
-        std::thread::sleep(Duration::from_millis(50));
+        let base = Duration::from_millis(50u64 << attempt.min(5));
+        let nap = (base + base.mul_f64(jitter.f64() * 0.5))
+            .min(Duration::from_secs(2))
+            .min(deadline.saturating_duration_since(Instant::now()));
+        if !nap.is_zero() {
+            std::thread::sleep(nap);
+        }
+        attempt += 1;
     }
 }
 
@@ -968,11 +1165,87 @@ pub fn run_worker(addr: &str, data: &Dataset, compute: &mut dyn Compute)
 pub fn run_worker_opts(addr: &str, data: &Dataset,
                        compute: &mut dyn Compute, opts: &WorkerOpts)
                        -> anyhow::Result<WorkerReport> {
+    let mut life = WorkerLife {
+        slot: opts.rejoin_slot,
+        state: None,
+        theta: Vec::new(),
+        snapshot: None,
+        batch: 0,
+        report: WorkerReport::default(),
+    };
+    // consecutive connections that died without completing a round:
+    // bounded, so a healing worker cannot spin forever against a
+    // server that keeps cutting it off
+    let mut barren = 0u32;
+    loop {
+        let rounds_before = life.report.rounds;
+        match worker_session(addr, data, compute, opts, &mut life)? {
+            SessionEnd::Done => return Ok(life.report),
+            SessionEnd::Lost(reason) => {
+                if !opts.heal {
+                    anyhow::bail!(
+                        "worker {} lost its server: {reason}",
+                        life.report.w
+                    );
+                }
+                barren = if life.report.rounds > rounds_before {
+                    0
+                } else {
+                    barren + 1
+                };
+                anyhow::ensure!(
+                    barren <= 8,
+                    "worker {} gave up healing after {barren} \
+                     reconnects without completing a round: {reason}",
+                    life.report.w
+                );
+                crate::warn_log!(
+                    "worker {}: {reason}; healing (attempt {barren} \
+                     since the last completed round)",
+                    life.report.w
+                );
+            }
+        }
+    }
+}
+
+/// The worker state that must outlive any single connection for a
+/// healed worker to stay bit-identical: the claimed slot, the
+/// gradient-side [`WorkerState`] (its `g_stale` and error-feedback
+/// residual), and the broadcast replicas. A fresh churn rejoiner
+/// rebuilds these from zero; a healed worker must not.
+struct WorkerLife {
+    slot: Option<u32>,
+    state: Option<WorkerState>,
+    theta: Vec<f32>,
+    snapshot: Option<Vec<f32>>,
+    batch: usize,
+    report: WorkerReport,
+}
+
+/// How one connection's life ended.
+enum SessionEnd {
+    /// the server said `Shutdown` (or, without healing, closed the
+    /// connection): the run is over
+    Done,
+    /// the connection died without a goodbye — retryable under
+    /// [`WorkerOpts::heal`]
+    Lost(String),
+}
+
+/// One connection's worth of [`run_worker_opts`]: connect, handshake
+/// (`Hello` first, `Rejoin` ever after), answer round headers until
+/// the server says shutdown or the link dies. I/O failures come back
+/// as [`SessionEnd::Lost`]; only semantic mismatches (wrong dataset,
+/// wrong slot, protocol violations) are `Err`.
+fn worker_session(addr: &str, data: &Dataset, compute: &mut dyn Compute,
+                  opts: &WorkerOpts, life: &mut WorkerLife)
+                  -> anyhow::Result<SessionEnd> {
+    let mut scratch = Vec::new();
     let mut stream = connect_retry(addr, opts.connect)?;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(opts.timeout))?;
-    let mut scratch = Vec::new();
-    let hail = match opts.rejoin_slot {
+    let hail = match life.slot {
         Some(w) => Msg::Rejoin {
             w,
             n: data.len() as u64,
@@ -985,8 +1258,15 @@ pub fn run_worker_opts(addr: &str, data: &Dataset,
             p: compute.p_pad() as u64,
         },
     };
-    wire::send(&mut stream, &hail, &mut scratch)?;
-    let welcome = wire::recv(&mut stream, &mut scratch)?;
+    if let Err(e) = wire::send(&mut stream, &hail, &mut scratch) {
+        return Ok(SessionEnd::Lost(format!("handshake send: {e:#}")));
+    }
+    let welcome = match wire::recv(&mut stream, &mut scratch) {
+        Ok(msg) => msg,
+        Err(e) => {
+            return Ok(SessionEnd::Lost(format!("handshake recv: {e:#}")))
+        }
+    };
     let (w, cfg, batch) = match welcome {
         Some((Msg::Welcome { w, cfg, batch, .. }, _)) => {
             (w as usize, cfg, batch as usize)
@@ -999,7 +1279,7 @@ pub fn run_worker_opts(addr: &str, data: &Dataset,
              mismatch, or too many workers for this run?)"
         ),
     };
-    if let Some(want) = opts.rejoin_slot {
+    if let Some(want) = life.slot {
         anyhow::ensure!(
             w == want as usize,
             "rejoin asked for slot {want}, server assigned {w}"
@@ -1011,25 +1291,60 @@ pub fn run_worker_opts(addr: &str, data: &Dataset,
         cfg.p,
         compute.p_pad()
     );
-    let mut state = WorkerState::new(w, cfg.p, cfg.rule);
-    // the server's compression config: the worker compresses (rule LHS
-    // on the decompressed innovation, error-feedback residual), the
-    // server decodes what arrives
-    state.set_compress(cfg.compress);
-    let mut theta = vec![0.0f32; cfg.p];
-    let mut snapshot = cfg
-        .rule
-        .needs_snapshot()
-        .then(|| vec![0.0f32; cfg.p]);
-    let mut report = WorkerReport { w, rounds: 0, uploads: 0 };
+    let WorkerLife { slot, state, theta, snapshot, batch: life_batch,
+                     report } = life;
+    if state.is_none() {
+        // first Welcome: build the per-run state. A healed reconnect
+        // keeps it — recreating it (or re-calling `set_compress`)
+        // would zero `g_stale` and the error-feedback residual,
+        // silently desyncing the server's fold
+        let mut fresh = WorkerState::new(w, cfg.p, cfg.rule);
+        // the server's compression config: the worker compresses (rule
+        // LHS on the decompressed innovation, error-feedback residual),
+        // the server decodes what arrives
+        fresh.set_compress(cfg.compress);
+        *state = Some(fresh);
+        *theta = vec![0.0f32; cfg.p];
+        *snapshot = cfg.rule.needs_snapshot().then(|| vec![0.0f32; cfg.p]);
+        *life_batch = batch;
+        *slot = Some(w as u32);
+        report.w = w;
+    }
+    let batch = *life_batch;
+    let state = state.as_mut().expect("installed above");
     loop {
-        let round = match wire::recv(&mut stream, &mut scratch)? {
-            Some((Msg::Round(round), _)) => round,
-            Some((Msg::Shutdown, _)) | None => return Ok(report),
-            Some((other, _)) => {
+        let round = match wire::recv(&mut stream, &mut scratch) {
+            Ok(Some((Msg::Round(round), _))) => round,
+            Ok(Some((Msg::Shutdown, _))) => return Ok(SessionEnd::Done),
+            Ok(None) => {
+                // EOF without a goodbye: historically the end of the
+                // run; under healing it is a presumed server crash
+                return Ok(if opts.heal {
+                    SessionEnd::Lost(
+                        "server closed without a Shutdown".to_string(),
+                    )
+                } else {
+                    SessionEnd::Done
+                });
+            }
+            Ok(Some((other, _))) => {
                 anyhow::bail!("expected a round header, got {other:?}")
             }
+            Err(e) => {
+                return Ok(SessionEnd::Lost(format!(
+                    "waiting for a round header: {e:#}"
+                )))
+            }
         };
+        if opts.fault.kill_worker_round(w).map_or(false, |at| round.k >= at)
+        {
+            // scheduled death: vanish without answering — the server
+            // vacates the slot and folds a skip
+            crate::warn_log!(
+                "fault: worker {w} dies on round {}", round.k
+            );
+            return Ok(SessionEnd::Done);
+        }
         // a header only ever reaches selected workers, but check
         // anyway: answering an unselected round would desync the fold
         if !round.selected.is_empty() {
@@ -1042,7 +1357,7 @@ pub fn run_worker_opts(addr: &str, data: &Dataset,
             );
         }
         for delta in &round.theta {
-            delta.apply(&mut theta)?;
+            delta.apply(theta)?;
         }
         if let Some(snap) = snapshot.as_mut() {
             for delta in &round.snapshot {
@@ -1076,7 +1391,7 @@ pub fn run_worker_opts(addr: &str, data: &Dataset,
             round.k,
             cfg.rule,
             cfg.max_delay,
-            &theta,
+            theta,
             snapshot.as_deref(),
             round.rhs,
             &minibatch,
@@ -1100,21 +1415,102 @@ pub fn run_worker_opts(addr: &str, data: &Dataset,
             }
             None => PayloadRef::Dense(&[]),
         };
-        wire::send_step(
+        let stepref = wire::WireStepRef {
+            k: round.k,
+            w,
+            decision: step.decision,
+            lhs: step.lhs,
+            loss: step.loss,
+            grad_evals: step.grad_evals,
+            payload,
+        };
+        if opts.fault.is_none() {
+            // fault-free fast path: stream the frame straight out,
+            // byte-identical to every earlier protocol revision
+            if let Err(e) =
+                wire::send_step(&mut stream, &stepref, &mut scratch)
+            {
+                return Ok(SessionEnd::Lost(format!(
+                    "sending the round-{} step: {e:#}",
+                    round.k
+                )));
+            }
+        } else if let Err(e) = send_step_faulted(
             &mut stream,
-            &wire::WireStepRef {
-                k: round.k,
-                w,
-                decision: step.decision,
-                lhs: step.lhs,
-                loss: step.loss,
-                grad_evals: step.grad_evals,
-                payload,
-            },
+            &stepref,
+            &opts.fault,
+            round.k,
+            w,
             &mut scratch,
-        )?;
+        ) {
+            return match e {
+                StepSendEnd::Truncated(cut) => {
+                    Ok(SessionEnd::Lost(format!(
+                        "fault injection truncated the round-{} step \
+                         at byte {cut}",
+                        round.k
+                    )))
+                }
+                StepSendEnd::Io(err) => Ok(SessionEnd::Lost(format!(
+                    "sending the round-{} step: {err:#}",
+                    round.k
+                ))),
+            };
+        }
         report.rounds += 1;
+        if opts.fault.kill_server_at == Some(round.k + 1) {
+            // the server is scheduled to crash before the next round:
+            // part first (worker-side FIN) so the server's port avoids
+            // TIME_WAIT and a restarted server can rebind immediately
+            return Ok(SessionEnd::Lost(format!(
+                "parting ahead of the scheduled server crash at round \
+                 {}",
+                round.k + 1
+            )));
+        }
     }
+}
+
+/// How a fault-path step send failed.
+enum StepSendEnd {
+    /// the injected truncation cut the frame at this byte; the
+    /// connection is dead by design
+    Truncated(usize),
+    Io(anyhow::Error),
+}
+
+/// Send one step frame with the worker-side fault plan applied: the
+/// frame is built in memory (length, CRC-32, payload) so an injected
+/// corruption can flip a payload bit *after* the checksum was stamped,
+/// and an injected truncation can cut the byte stream mid-frame.
+fn send_step_faulted(stream: &mut TcpStream, step: &wire::WireStepRef<'_>,
+                     fault: &FaultPlan, k: u64, w: usize,
+                     scratch: &mut Vec<u8>)
+                     -> Result<(), StepSendEnd> {
+    wire::encode_step(step, scratch);
+    let mut framed =
+        Vec::with_capacity(wire::FRAME_PREFIX + scratch.len());
+    framed.extend_from_slice(&(scratch.len() as u32).to_le_bytes());
+    framed.extend_from_slice(&crc32(scratch).to_le_bytes());
+    framed.extend_from_slice(scratch);
+    if let Some(cut) = fault.truncate_step(k, w, framed.len()) {
+        // a partial write then a dead socket: the server must survive
+        // the half-frame
+        let _ = stream.write_all(&framed[..cut]);
+        let _ = stream.flush();
+        return Err(StepSendEnd::Truncated(cut));
+    }
+    if let Some((byte, mask)) = fault.corrupt_step(k, w, framed.len()) {
+        crate::warn_log!(
+            "fault: flipping bit mask {mask:#04x} at byte {byte} of \
+             worker {w}'s round-{k} step"
+        );
+        framed[byte] ^= mask;
+    }
+    stream
+        .write_all(&framed)
+        .and_then(|()| stream.flush())
+        .map_err(|e| StepSendEnd::Io(e.into()))
 }
 
 #[cfg(test)]
@@ -1528,5 +1924,163 @@ mod tests {
         drop(server);
         a.join().unwrap();
         joiner.join().unwrap();
+    }
+
+    /// The nonblocking frame accumulator: a partial frame cut at every
+    /// byte boundary stays buffered (no frame, no panic, no error), a
+    /// flipped payload bit is detected and drained as survivable
+    /// corruption, and a hostile length prefix is an unrecoverable
+    /// framing error.
+    #[test]
+    fn nonblocking_take_frame_survives_truncation_and_corruption() {
+        let mut payload = Vec::new();
+        wire::encode(&Msg::Hello { n: 100, fp: 7, p: 64 }, &mut payload);
+        let mut framed = Vec::new();
+        wire::write_frame(&mut framed, &payload).unwrap();
+
+        for cut in 0..framed.len() {
+            let mut recv = framed[..cut].to_vec();
+            match take_frame(&mut recv) {
+                Ok(None) => {}
+                Ok(Some(_)) => panic!("cut at {cut} produced a frame"),
+                Err(e) => panic!("cut at {cut} errored: {e}"),
+            }
+            assert_eq!(recv.len(), cut,
+                       "partial bytes must stay buffered");
+        }
+
+        // two concatenated frames pop one at a time, both intact
+        let mut recv = [framed.as_slice(), framed.as_slice()].concat();
+        for _ in 0..2 {
+            match take_frame(&mut recv).unwrap() {
+                Some(TakenFrame::Intact(f)) => assert_eq!(f, payload),
+                _ => panic!("expected an intact frame"),
+            }
+        }
+        assert!(recv.is_empty());
+        assert!(take_frame(&mut recv).unwrap().is_none());
+
+        // every single-bit payload corruption is detected and drained
+        for byte in wire::FRAME_PREFIX..framed.len() {
+            let mut recv = framed.clone();
+            recv[byte] ^= 0x10;
+            match take_frame(&mut recv).unwrap() {
+                Some(TakenFrame::Corrupt { len, want, got }) => {
+                    assert_eq!(len, payload.len());
+                    assert_ne!(want, got);
+                }
+                _ => panic!("corrupt byte {byte} went undetected"),
+            }
+            assert!(recv.is_empty(),
+                    "the corrupt frame must be drained");
+        }
+
+        // a hostile length prefix (claims ~4 GiB) cannot be resynced
+        let mut recv = framed.clone();
+        recv[3] = 0xFF;
+        assert!(take_frame(&mut recv).is_err());
+    }
+
+    /// A CRC-corrupt step frame is detected, counted, folded as a skip
+    /// (a lost upload), and the connection survives to answer the next
+    /// round cleanly — even without churn tolerance.
+    #[test]
+    fn corrupt_step_folds_as_a_skip_without_dropping_the_worker() {
+        const P: usize = 4;
+        let cfg = test_cfg(P);
+        let mut server = SocketServer::builder("127.0.0.1:0")
+            .timeout(Duration::from_secs(10))
+            .build()
+            .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || {
+            let (mut stream, w) = script_connect(
+                &addr,
+                Msg::Hello { n: 100, fp: 1, p: P as u64 },
+            );
+            assert_eq!(w, 0);
+            let mut scratch = Vec::new();
+            let r0 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r0.k, 0);
+            // frame a valid step, then flip one payload bit *after*
+            // the CRC was stamped
+            wire::encode_step(
+                &wire::WireStepRef {
+                    k: 0,
+                    w: 0,
+                    decision: Decision { upload: false,
+                                         rule_triggered: false },
+                    lhs: 0.25,
+                    loss: 0.5,
+                    grad_evals: 1,
+                    payload: PayloadRef::Dense(&[]),
+                },
+                &mut scratch,
+            );
+            let mut framed = Vec::new();
+            framed
+                .extend_from_slice(&(scratch.len() as u32).to_le_bytes());
+            framed.extend_from_slice(&crc32(&scratch).to_le_bytes());
+            framed.extend_from_slice(&scratch);
+            let last = framed.len() - 1;
+            framed[last] ^= 0x01;
+            stream.write_all(&framed).unwrap();
+            stream.flush().unwrap();
+            // the server folded a skip and moved on: round 1 still
+            // reaches this worker on the same connection
+            let r1 = expect_round(&mut stream, &mut scratch);
+            assert_eq!(r1.k, 1);
+            send_step(&mut stream, 1, 0, &mut scratch);
+            expect_shutdown(&mut stream, &mut scratch);
+        });
+        server.handshake(&cfg, 2, 100, 1).unwrap();
+        let r0 = round(0, P, 1, vec![7], None);
+        let out0 = server.run_round(&r0, &[0], &[vec![1, 2]]).unwrap();
+        assert_eq!(out0.steps.len(), 1);
+        assert!(out0.steps[0].lhs.is_nan(),
+                "a corrupt upload folds as a skip");
+        assert_eq!(out0.rejected, vec![0]);
+        assert_eq!(server.stats().frames_corrupt, 1);
+        assert!(out0.vacated.is_empty(),
+                "corruption must not cost the connection");
+        let r1 = round(1, P, 1, vec![7], None);
+        let out1 = server.run_round(&r1, &[0], &[vec![0, 3]]).unwrap();
+        assert_eq!(out1.steps[0].k, 1);
+        assert_eq!(out1.steps[0].lhs, 0.25);
+        assert_eq!(server.stats().frames_corrupt, 1);
+        drop(server);
+        worker.join().unwrap();
+    }
+
+    /// [`SocketServer::kill`] simulates a crash: the listener is gone
+    /// and the goodbye is suppressed — a worker sees a bare EOF, never
+    /// a `Shutdown` message.
+    #[test]
+    fn a_killed_server_goes_silent_instead_of_saying_goodbye() {
+        const P: usize = 4;
+        let cfg = test_cfg(P);
+        let mut server = SocketServer::builder("127.0.0.1:0")
+            .timeout(Duration::from_secs(10))
+            .build()
+            .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || {
+            let (mut stream, _) = script_connect(
+                &addr,
+                Msg::Hello { n: 100, fp: 1, p: P as u64 },
+            );
+            let mut scratch = Vec::new();
+            match wire::recv(&mut stream, &mut scratch).unwrap() {
+                None => {}
+                Some((msg, _)) => {
+                    panic!("a crashed server spoke: {msg:?}")
+                }
+            }
+        });
+        server.handshake(&cfg, 2, 100, 1).unwrap();
+        server.kill();
+        assert!(server.local_addr().is_err());
+        drop(server);
+        worker.join().unwrap();
     }
 }

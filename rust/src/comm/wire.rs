@@ -23,12 +23,17 @@
 //!   so [`WireStats`](super::WireStats)) measures the compressed size.
 //! * [`Msg::Shutdown`] — drain and exit the worker process.
 //!
-//! Framing is `[u32 LE payload length][payload]`, payload byte 0 a
-//! message tag; all integers little-endian, floats as their LE bit
-//! patterns — so every `f32`/`f64` round-trips bit-exactly, which is
-//! what lets the socket transport reproduce `InProc` golden runs
-//! bit-for-bit. Frames are capped at [`MAX_FRAME`] so a corrupt or
-//! hostile length prefix cannot OOM the peer.
+//! Framing is `[u32 LE payload length][u32 LE CRC-32][payload]`
+//! (protocol v4), payload byte 0 a message tag; all integers
+//! little-endian, floats as their LE bit patterns — so every
+//! `f32`/`f64` round-trips bit-exactly, which is what lets the socket
+//! transport reproduce `InProc` golden runs bit-for-bit. The CRC-32
+//! ([`crate::util::crc`]) covers the payload only: a flipped bit
+//! anywhere in the body is detected at the receiver instead of parsing
+//! into garbage floats, so the server treats a corrupt step as a lost
+//! upload and a worker treats a corrupt broadcast as a dead connection
+//! (reconnect re-requests it). Frames are capped at [`MAX_FRAME`] so a
+//! corrupt or hostile length prefix cannot OOM the peer.
 //!
 //! # Zero-copy hot paths
 //!
@@ -61,13 +66,20 @@ use crate::coordinator::shard::ShardLayout;
 /// worker set and the recipient's server-tracked staleness, `Step`
 /// carries the round id it answers (duplicate/stale rejection), and
 /// [`Msg::Rejoin`] re-admits a worker into a vacated population slot.
+/// v4 (crash safety): every frame carries a CRC-32 of its payload
+/// between the length prefix and the body, so corruption is detected
+/// and contained instead of decoded.
 pub const MAGIC: u32 = 0x4341_4441;
-pub const PROTO_VERSION: u16 = 3;
+pub const PROTO_VERSION: u16 = 4;
 
 /// Upper bound on one frame's payload (a 2.7M-parameter delta is ~11 MB;
 /// 256 MB leaves headroom for every artifact spec while keeping a
 /// garbage length prefix from allocating the moon).
 pub const MAX_FRAME: usize = 256 << 20;
+
+/// Bytes every frame spends before its payload: the u32 length prefix
+/// plus the u32 payload CRC-32 (protocol v4).
+pub const FRAME_PREFIX: usize = 8;
 
 const TAG_HELLO: u8 = 1;
 const TAG_WELCOME: u8 = 2;
@@ -978,8 +990,8 @@ pub fn decode_step_view(payload: &[u8]) -> anyhow::Result<WireStepView<'_>> {
 
 // ---------------------------------------------------------------- frames
 
-/// Write one `[u32 LE length][payload]` frame; returns the total bytes
-/// put on the wire (4 + payload).
+/// Write one `[u32 LE length][u32 LE CRC-32][payload]` frame; returns
+/// the total bytes put on the wire ([`FRAME_PREFIX`] + payload).
 pub fn write_frame(w: &mut impl Write, payload: &[u8])
                    -> anyhow::Result<usize> {
     anyhow::ensure!(
@@ -988,14 +1000,19 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8])
         payload.len()
     );
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&crate::util::crc::crc32(payload).to_le_bytes())?;
     w.write_all(payload)?;
     w.flush()?;
-    Ok(4 + payload.len())
+    Ok(FRAME_PREFIX + payload.len())
 }
 
 /// Read one frame into `buf` (resized to the payload); returns the total
 /// bytes taken off the wire, or `None` on a clean EOF at a frame
-/// boundary (the peer closed the connection between messages).
+/// boundary (the peer closed the connection between messages). A
+/// payload whose CRC-32 does not match the prefix is an error naming
+/// the claimed length and both checksums — the blocking (worker-side)
+/// reader treats the connection as dead and lets the reconnect path
+/// re-request the broadcast.
 pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>)
                   -> anyhow::Result<Option<usize>> {
     let mut len = [0u8; 4];
@@ -1012,10 +1029,20 @@ pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>)
         "incoming wire frame claims {len} bytes (max {MAX_FRAME}); \
          corrupt stream or protocol mismatch"
     );
+    let mut crc = [0u8; 4];
+    r.read_exact(&mut crc)
+        .map_err(|e| anyhow::anyhow!("mid-frame disconnect: {e}"))?;
+    let want = u32::from_le_bytes(crc);
     buf.resize(len, 0);
     r.read_exact(buf)
         .map_err(|e| anyhow::anyhow!("mid-frame disconnect: {e}"))?;
-    Ok(Some(4 + len))
+    let got = crate::util::crc::crc32(buf);
+    anyhow::ensure!(
+        got == want,
+        "corrupt wire frame: {len}-byte payload hashes to {got:#010x}, \
+         prefix claims {want:#010x}"
+    );
+    Ok(Some(FRAME_PREFIX + len))
 }
 
 /// Encode + frame `msg` onto `w`; returns the bytes written.
@@ -1560,6 +1587,106 @@ mod tests {
     }
 
     #[test]
+    fn frame_crc_detects_payload_corruption() {
+        // flip every single bit of a framed message's payload in turn:
+        // read_frame must reject each mutant with the corrupt-frame
+        // error, never hand the garbage payload to decode
+        let mut wire = Vec::new();
+        let mut scratch = Vec::new();
+        send(&mut wire, &Msg::Hello { n: 800, fp: 7, p: 64 }, &mut scratch)
+            .unwrap();
+        assert!(wire.len() > FRAME_PREFIX);
+        for at in FRAME_PREFIX..wire.len() {
+            for bit in 0..8 {
+                let mut bad = wire.clone();
+                bad[at] ^= 1 << bit;
+                let err = read_frame(&mut &bad[..], &mut scratch)
+                    .unwrap_err();
+                assert!(
+                    err.to_string().contains("corrupt wire frame"),
+                    "byte {at} bit {bit}: {err}"
+                );
+            }
+        }
+        // a corrupted CRC prefix is equally fatal (payload is fine, the
+        // claimed checksum is not)
+        let mut bad = wire.clone();
+        bad[5] ^= 0x01;
+        assert!(read_frame(&mut &bad[..], &mut scratch).is_err());
+        // the pristine frame still reads back
+        let (msg, n) = recv(&mut &wire[..], &mut scratch).unwrap().unwrap();
+        assert_eq!(msg, Msg::Hello { n: 800, fp: 7, p: 64 });
+        assert_eq!(n, wire.len());
+    }
+
+    #[test]
+    fn framed_truncation_at_every_byte_boundary_is_clean() {
+        // cut a framed stream after every prefix of each message kind:
+        // the blocking reader must return clean-EOF (cut inside the
+        // length prefix counts as "peer closed between frames") or a
+        // clean error — never panic, never a phantom message
+        let msgs = vec![
+            Msg::Hello { n: 800, fp: 1, p: 1024 },
+            Msg::Welcome {
+                w: 1,
+                m: 4,
+                batch: 16,
+                cfg: WireWorkerCfg {
+                    rule: RuleKind::Cada1 { c: 0.8 },
+                    max_delay: 20,
+                    use_artifact_innov: false,
+                    p: 64,
+                    compress: CompressCfg::default(),
+                },
+            },
+            Msg::Round(RoundMsg {
+                k: 9,
+                rhs: 0.5,
+                tau: 2,
+                selected: vec![0, 2],
+                batch: vec![1, 2, 3],
+                theta: vec![RangeDelta { start: 0, data: vec![1.0, 2.0] }],
+                snapshot: vec![RangeDelta { start: 8, data: vec![-1.0] }],
+            }),
+            Msg::Step(WireStep {
+                k: 9,
+                w: 2,
+                decision: Decision { upload: true, rule_triggered: true },
+                lhs: 1.0,
+                loss: 0.5,
+                grad_evals: 1,
+                payload: Payload::Sparse {
+                    p: 8,
+                    idx: vec![1, 5],
+                    val: vec![-1.0, 2.0],
+                },
+            }),
+        ];
+        let mut scratch = Vec::new();
+        for msg in msgs {
+            let mut wire = Vec::new();
+            send(&mut wire, &msg, &mut scratch).unwrap();
+            for cut in 0..wire.len() {
+                match recv(&mut &wire[..cut], &mut scratch) {
+                    // a cut inside the 4-byte length prefix reads as
+                    // clean EOF; anywhere later must error
+                    Ok(None) => assert!(cut <= 4, "cut {cut} of {msg:?}"),
+                    Ok(Some(_)) => {
+                        panic!("prefix {cut}/{} of {msg:?} decoded",
+                               wire.len())
+                    }
+                    Err(_) => {}
+                }
+            }
+            // and the untruncated frame still round-trips
+            let (back, _) = recv(&mut &wire[..], &mut scratch)
+                .unwrap()
+                .unwrap();
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
     fn borrowed_round_header_encode_is_byte_identical() {
         // the zero-copy header writer must be indistinguishable on the
         // wire from encoding the equivalent owned message — workers
@@ -1646,8 +1773,8 @@ mod tests {
             let mut scratch = Vec::new();
             let wrote = send_step(&mut wire, &borrowed, &mut scratch)
                 .unwrap();
-            assert_eq!(wrote, 4 + want.len());
-            assert_eq!(&wire[4..], &want[..]);
+            assert_eq!(wrote, FRAME_PREFIX + want.len());
+            assert_eq!(&wire[FRAME_PREFIX..], &want[..]);
         }
     }
 

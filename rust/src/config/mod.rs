@@ -10,8 +10,9 @@ pub mod toml;
 
 pub use crate::algorithms::TrainCfg;
 
-use crate::comm::{CommCfg, CostModel};
+use crate::comm::{CommCfg, CostModel, FaultPlan};
 use crate::compress::CompressCfg;
+use crate::coordinator::checkpoint::CheckpointCfg;
 use crate::data::{DatasetKind, PartitionScheme};
 
 /// Stepsize schedule (paper: constant in experiments; 1/sqrt(K) for
@@ -109,6 +110,14 @@ pub struct ExpConfig {
     /// `--compress-seed` flags). Identity reproduces the
     /// pre-compression runs bit-for-bit.
     pub compress: CompressCfg,
+    /// deterministic fault injection (`[fault]` TOML section and the
+    /// CLI `--fault-*` flags); [`FaultPlan::none`] (every preset)
+    /// injects nothing and reproduces fault-free runs bit-for-bit
+    pub fault: FaultPlan,
+    /// checkpoint/resume (`[checkpoint]` TOML section and the CLI
+    /// `--checkpoint`/`--checkpoint-every`/`--resume` flags); disabled
+    /// in every preset
+    pub checkpoint: CheckpointCfg,
     pub algos: Vec<AlgoConfig>,
 }
 
@@ -144,6 +153,8 @@ pub fn fig2_covtype() -> ExpConfig {
         trace_cap: 0,
         comm: CommCfg::default(),
         compress: CompressCfg::default(),
+        fault: FaultPlan::none(),
+        checkpoint: CheckpointCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.005) },
             AlgoConfig::Cada1 { alpha: C(0.005), c: 0.6, d_max: 10,
@@ -178,6 +189,8 @@ pub fn fig3_ijcnn() -> ExpConfig {
         trace_cap: 0,
         comm: CommCfg::default(),
         compress: CompressCfg::default(),
+        fault: FaultPlan::none(),
+        checkpoint: CheckpointCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.01) },
             AlgoConfig::Cada1 { alpha: C(0.01), c: 0.6, d_max: 10,
@@ -212,6 +225,8 @@ pub fn fig4_mnist(use_cnn: bool) -> ExpConfig {
         trace_cap: 0,
         comm: CommCfg::default(),
         compress: CompressCfg::default(),
+        fault: FaultPlan::none(),
+        checkpoint: CheckpointCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(5e-4) },
             AlgoConfig::Cada1 { alpha: C(5e-4), c: 0.6, d_max: 10,
@@ -246,6 +261,8 @@ pub fn fig5_cifar() -> ExpConfig {
         trace_cap: 0,
         comm: CommCfg::default(),
         compress: CompressCfg::default(),
+        fault: FaultPlan::none(),
+        checkpoint: CheckpointCfg::default(),
         algos: vec![
             AlgoConfig::Adam { alpha: C(0.01) },
             AlgoConfig::Cada1 { alpha: C(0.01), c: 0.3, d_max: 2,
@@ -391,10 +408,14 @@ fn apply_train_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
     let has_comm = doc.sections.contains_key("comm")
         || doc.sections.contains_key("comm.links");
     let has_compress = doc.sections.contains_key("compress");
+    let has_fault = doc.sections.contains_key("fault");
+    let has_checkpoint = doc.sections.contains_key("checkpoint");
     if train.is_none()
         && !doc.sections.contains_key("train.cost_model")
         && !has_comm
         && !has_compress
+        && !has_fault
+        && !has_checkpoint
     {
         return Ok(());
     }
@@ -434,6 +455,12 @@ fn apply_train_overrides(cfg: &mut ExpConfig, doc: &toml::Doc)
     if has_compress {
         cfg.compress = parsed.compress;
     }
+    if has_fault {
+        cfg.fault = parsed.fault;
+    }
+    if has_checkpoint {
+        cfg.checkpoint = parsed.checkpoint;
+    }
     Ok(())
 }
 
@@ -452,6 +479,67 @@ pub fn apply_compress_cli_overrides(compress: &mut CompressCfg,
         args.usize_or("compress-bits", compress.bits as usize)? as u32;
     compress.seed = args.u64_or("compress-seed", compress.seed)?;
     compress.validate()
+}
+
+/// Apply the fault-injection CLI knobs — `--fault-seed`,
+/// `--fault-drop-p`, `--fault-corrupt-p`, `--fault-truncate-p`,
+/// `--fault-delay-p`, `--fault-delay-ms`, `--fault-kill-workers`
+/// (`"round:worker,round:worker"` pairs), `--fault-kill-server-at` —
+/// shared by `cada train` / `cada serve` / `cada worker` so every
+/// entry point spells the chaos schedule the same way.
+pub fn apply_fault_cli_overrides(fault: &mut FaultPlan,
+                                 args: &crate::cli::Args)
+                                 -> anyhow::Result<()> {
+    fault.seed = args.u64_or("fault-seed", fault.seed)?;
+    fault.drop_p = args.f64_or("fault-drop-p", fault.drop_p)?;
+    fault.corrupt_p = args.f64_or("fault-corrupt-p", fault.corrupt_p)?;
+    fault.truncate_p =
+        args.f64_or("fault-truncate-p", fault.truncate_p)?;
+    fault.delay_p = args.f64_or("fault-delay-p", fault.delay_p)?;
+    fault.delay_ms = args.u64_or("fault-delay-ms", fault.delay_ms)?;
+    if let Some(spec) = args.str_opt("fault-kill-workers") {
+        fault.kill_workers = parse_kill_workers(spec)?;
+    }
+    if args.str_opt("fault-kill-server-at").is_some() {
+        fault.kill_server_at =
+            Some(args.u64_or("fault-kill-server-at", 0)?);
+    }
+    fault.validate()
+}
+
+fn parse_kill_workers(spec: &str) -> anyhow::Result<Vec<(u64, u32)>> {
+    spec.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|pair| {
+            let (k, w) = pair.trim().split_once(':').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--fault-kill-workers wants \"round:worker\" pairs \
+                     separated by commas, got '{pair}'"
+                )
+            })?;
+            Ok((k.trim().parse::<u64>()?, w.trim().parse::<u32>()?))
+        })
+        .collect()
+}
+
+/// Apply the checkpoint/resume CLI knobs — `--checkpoint <dir>`,
+/// `--checkpoint-every <rounds>`, `--resume <dir>`. A bare `--resume`
+/// also aims future saves at the same directory, the overwhelmingly
+/// common intent when restarting a crashed run.
+pub fn apply_checkpoint_cli_overrides(ck: &mut CheckpointCfg,
+                                      args: &crate::cli::Args)
+                                      -> anyhow::Result<()> {
+    if let Some(dir) = args.str_opt("checkpoint") {
+        ck.dir = dir.to_string();
+    }
+    ck.every = args.u64_or("checkpoint-every", ck.every)?;
+    if let Some(dir) = args.str_opt("resume") {
+        ck.resume = dir.to_string();
+        if ck.dir.is_empty() {
+            ck.dir = dir.to_string();
+        }
+    }
+    ck.validate()
 }
 
 #[cfg(test)]
@@ -673,6 +761,71 @@ mod tests {
         .unwrap();
         assert!(
             apply_compress_cli_overrides(&mut compress, &args).is_err());
+    }
+
+    #[test]
+    fn fault_and_checkpoint_overrides_apply() {
+        // TOML sections land on the experiment config
+        let mut cfg = fig3_ijcnn();
+        assert!(cfg.fault.is_none());
+        assert!(cfg.checkpoint.is_none());
+        let doc = toml::parse(
+            "[fault]\nseed = 5\ndrop_p = 0.1\nkill_server_at = 30\n\
+             [checkpoint]\ndir = \"ck\"\nevery = 10\n",
+        )
+        .unwrap();
+        apply_overrides(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.fault.seed, 5);
+        assert_eq!(cfg.fault.drop_p, 0.1);
+        assert_eq!(cfg.fault.kill_server_at, Some(30));
+        assert_eq!(cfg.checkpoint.dir, "ck");
+        assert_eq!(cfg.checkpoint.every, 10);
+
+        // CLI flags layer on top, with the kill list spelled as pairs
+        let mut fault = FaultPlan::none();
+        let args = crate::cli::Args::parse(
+            ["--fault-seed", "9", "--fault-corrupt-p", "0.02",
+             "--fault-kill-workers", "5:0, 9:2",
+             "--fault-kill-server-at", "40"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        apply_fault_cli_overrides(&mut fault, &args).unwrap();
+        assert_eq!(fault.seed, 9);
+        assert_eq!(fault.corrupt_p, 0.02);
+        assert_eq!(fault.kill_workers, vec![(5, 0), (9, 2)]);
+        assert_eq!(fault.kill_server_at, Some(40));
+        // malformed pairs and out-of-range probabilities are rejected
+        let mut fault = FaultPlan::none();
+        let args = crate::cli::Args::parse(
+            ["--fault-kill-workers", "7"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(apply_fault_cli_overrides(&mut fault, &args).is_err());
+        let mut fault = FaultPlan::none();
+        let args = crate::cli::Args::parse(
+            ["--fault-drop-p", "1.5"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(apply_fault_cli_overrides(&mut fault, &args).is_err());
+
+        // --resume alone aims saves at the same directory
+        let mut ck = CheckpointCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--resume", "ckpts"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        apply_checkpoint_cli_overrides(&mut ck, &args).unwrap();
+        assert_eq!(ck.resume, "ckpts");
+        assert_eq!(ck.dir, "ckpts");
+        // --checkpoint-every without a dir is a config error
+        let mut ck = CheckpointCfg::default();
+        let args = crate::cli::Args::parse(
+            ["--checkpoint-every", "5"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(apply_checkpoint_cli_overrides(&mut ck, &args).is_err());
     }
 
     #[test]

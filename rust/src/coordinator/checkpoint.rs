@@ -1,0 +1,575 @@
+//! Crash-safe training checkpoints: an atomic, CRC-guarded container
+//! plus the tiny binary codec the trainer and the algorithms share.
+//!
+//! A checkpoint is one file per save point, `ckpt_{next_k:08}.bin`,
+//! laid out as
+//!
+//! ```text
+//! [u64 LE magic][u32 LE version][u32 LE crc32(body)][body]
+//! ```
+//!
+//! and written atomically: the bytes land in a `.tmp` sibling first and
+//! are `rename`d into place, so a crash mid-save leaves either the old
+//! file set or the new one — never a torn checkpoint. [`load`] verifies
+//! magic, version, and CRC before handing the body back, so a truncated
+//! or bit-flipped file is a clean error, not garbage state.
+//!
+//! The body itself is assembled by the trainer (run id, round cursor,
+//! config fingerprint, RNG states, comm counters) around an opaque
+//! algorithm blob produced by
+//! [`Algorithm::export_state`](crate::algorithms::Algorithm::export_state).
+//! Everything is little-endian and versioned through the container
+//! header; the codec below ([`Dec`] and the `put_*` helpers) is the
+//! only sanctioned way to read or write body bytes.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::comm::CommStats;
+use crate::util::crc::crc32;
+use crate::util::rng::RngState;
+
+/// `b"CADACKPT"` as a little-endian u64.
+pub const MAGIC: u64 = u64::from_le_bytes(*b"CADACKPT");
+
+/// Container format version; bump on any body layout change.
+pub const VERSION: u32 = 1;
+
+/// Bytes before the body: magic + version + CRC.
+pub const HEADER: usize = 8 + 4 + 4;
+
+/// Checkpoints kept per directory after a save ([`prune`] removes the
+/// rest, oldest first): the one just written plus its predecessor, so
+/// a crash *during* a save can never leave zero loadable files.
+pub const KEEP: usize = 2;
+
+/// Checkpoint/resume knobs, carried by the trainer config.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct CheckpointCfg {
+    /// directory checkpoints are written into; empty = never save
+    pub dir: String,
+    /// save every N completed rounds; 0 = only at scheduled server
+    /// kills (see `[fault] kill_server_at`)
+    pub every: u64,
+    /// directory to resume the run from (usually `dir`); empty =
+    /// fresh start
+    pub resume: String,
+}
+
+impl CheckpointCfg {
+    /// True when checkpointing is fully disabled (the default).
+    pub fn is_none(&self) -> bool {
+        self.dir.is_empty() && self.every == 0 && self.resume.is_empty()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.every == 0 || !self.dir.is_empty(),
+            "checkpoint every = {} needs a checkpoint dir",
+            self.every
+        );
+        Ok(())
+    }
+}
+
+/// FNV-1a 64 — the config fingerprint stored in checkpoint bodies so a
+/// resume against a different run config fails fast instead of folding
+/// mismatched state.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    bytes.iter().fold(0xcbf2_9ce4_8422_2325u64, |h, &b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    })
+}
+
+fn file_name(next_k: u64) -> String {
+    format!("ckpt_{next_k:08}.bin")
+}
+
+/// Atomically persist `body` as the checkpoint that resumes at round
+/// `next_k`. Creates `dir` if needed; returns the final path.
+pub fn save(dir: &Path, next_k: u64, body: &[u8])
+            -> anyhow::Result<PathBuf> {
+    fs::create_dir_all(dir).map_err(|e| {
+        anyhow::anyhow!("creating checkpoint dir {}: {e}", dir.display())
+    })?;
+    let final_path = dir.join(file_name(next_k));
+    let tmp_path = dir.join(format!("{}.tmp", file_name(next_k)));
+    let mut framed = Vec::with_capacity(HEADER + body.len());
+    framed.extend_from_slice(&MAGIC.to_le_bytes());
+    framed.extend_from_slice(&VERSION.to_le_bytes());
+    framed.extend_from_slice(&crc32(body).to_le_bytes());
+    framed.extend_from_slice(body);
+    {
+        let mut f = fs::File::create(&tmp_path).map_err(|e| {
+            anyhow::anyhow!("creating {}: {e}", tmp_path.display())
+        })?;
+        f.write_all(&framed)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp_path, &final_path).map_err(|e| {
+        anyhow::anyhow!("publishing {}: {e}", final_path.display())
+    })?;
+    Ok(final_path)
+}
+
+/// Load and verify a checkpoint file, returning its body bytes.
+pub fn load(path: &Path) -> anyhow::Result<Vec<u8>> {
+    let framed = fs::read(path).map_err(|e| {
+        anyhow::anyhow!("reading checkpoint {}: {e}", path.display())
+    })?;
+    anyhow::ensure!(
+        framed.len() >= HEADER,
+        "checkpoint {} is {} bytes — shorter than its {HEADER}-byte \
+         header",
+        path.display(),
+        framed.len()
+    );
+    let magic = u64::from_le_bytes(framed[0..8].try_into().unwrap());
+    anyhow::ensure!(
+        magic == MAGIC,
+        "checkpoint {} has magic {magic:#018x}, want {MAGIC:#018x} — \
+         not a checkpoint file",
+        path.display()
+    );
+    let version = u32::from_le_bytes(framed[8..12].try_into().unwrap());
+    anyhow::ensure!(
+        version == VERSION,
+        "checkpoint {} is format v{version}, this build reads \
+         v{VERSION}",
+        path.display()
+    );
+    let want = u32::from_le_bytes(framed[12..16].try_into().unwrap());
+    let body = framed[HEADER..].to_vec();
+    let got = crc32(&body);
+    anyhow::ensure!(
+        got == want,
+        "checkpoint {} failed its CRC (stored {want:#010x}, computed \
+         {got:#010x}) — truncated or corrupted on disk",
+        path.display()
+    );
+    Ok(body)
+}
+
+/// The newest checkpoint in `dir`: `(next_k, path)` with the largest
+/// round cursor, or `None` when the directory holds no checkpoints
+/// (or does not exist).
+pub fn latest(dir: &Path) -> anyhow::Result<Option<(u64, PathBuf)>> {
+    let entries = match fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(None)
+        }
+        Err(e) => anyhow::bail!(
+            "listing checkpoint dir {}: {e}", dir.display()),
+    };
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(k) = parse_name(&name.to_string_lossy()) else {
+            continue;
+        };
+        if best.as_ref().map_or(true, |(bk, _)| k > *bk) {
+            best = Some((k, entry.path()));
+        }
+    }
+    Ok(best)
+}
+
+/// Delete all but the newest `keep` checkpoints in `dir`. Stale `.tmp`
+/// leftovers from an interrupted save are removed too. Best-effort: a
+/// file that refuses to delete is skipped, never an error.
+pub fn prune(dir: &Path, keep: usize) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut ckpts: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.ends_with(".tmp") {
+            let _ = fs::remove_file(entry.path());
+        } else if let Some(k) = parse_name(&name) {
+            ckpts.push((k, entry.path()));
+        }
+    }
+    if ckpts.len() <= keep {
+        return;
+    }
+    ckpts.sort_by_key(|(k, _)| *k);
+    let doomed = ckpts.len() - keep;
+    for (_, path) in ckpts.into_iter().take(doomed) {
+        let _ = fs::remove_file(path);
+    }
+}
+
+fn parse_name(name: &str) -> Option<u64> {
+    name.strip_prefix("ckpt_")?
+        .strip_suffix(".bin")?
+        .parse::<u64>()
+        .ok()
+}
+
+// ---------------------------------------------------------------------
+// body codec: little-endian scalars, u64-length-prefixed slices
+// ---------------------------------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+pub fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_u64(out, v.len() as u64);
+    out.extend_from_slice(v);
+}
+
+pub fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+pub fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+pub fn put_u64s(out: &mut Vec<u8>, v: &[u64]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn put_opt_f32s(out: &mut Vec<u8>, v: Option<&[f32]>) {
+    match v {
+        Some(v) => {
+            put_u8(out, 1);
+            put_f32s(out, v);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+pub fn put_rng_state(out: &mut Vec<u8>, state: &RngState) {
+    for &word in &state.s {
+        put_u64(out, word);
+    }
+    match state.spare_normal {
+        Some(z) => {
+            put_u8(out, 1);
+            put_f64(out, z);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+/// The simulated communication ledger, field by field. Every counter in
+/// [`CommStats`] is event-clock simulated (never wall time), so
+/// persisting and restoring it keeps a resumed run's reported
+/// uploads/bytes/sim-seconds identical to an uninterrupted one.
+pub fn put_comm_stats(out: &mut Vec<u8>, comm: &CommStats) {
+    put_u64(out, comm.uploads);
+    put_u64(out, comm.upload_bytes);
+    put_u64(out, comm.downloads);
+    put_u64(out, comm.download_bytes);
+    put_u64(out, comm.grad_evals);
+    put_f64(out, comm.sim_time_s);
+    put_u64(out, comm.stale_uploads);
+    put_u64(out, comm.lost_uploads);
+    put_f64s(out, &comm.worker_upload_s);
+    put_u64s(out, &comm.worker_uploads);
+    put_u64s(out, &comm.worker_lost);
+    put_u64s(out, &comm.worker_raw_bytes);
+    put_u64s(out, &comm.worker_wire_bytes);
+    put_u64(out, comm.rounds);
+    put_u64s(out, &comm.worker_selected);
+    put_u64s(out, &comm.worker_rejected);
+    put_u64s(out, &comm.worker_rejoins);
+    put_u64(out, comm.rejected_uploads);
+    put_u64(out, comm.rejoins);
+}
+
+/// Cursor over checkpoint body bytes; every `take_*` bounds-checks, so
+/// a mislaid layout surfaces as an error instead of a silent misread.
+pub struct Dec<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Dec { bytes, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.remaining() >= n,
+            "checkpoint body underrun: need {n} bytes at offset {}, \
+             {} left",
+            self.pos,
+            self.remaining()
+        );
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn take_u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    fn take_len(&mut self, elem: usize) -> anyhow::Result<usize> {
+        let len = self.take_u64()? as usize;
+        anyhow::ensure!(
+            len.checked_mul(elem).map_or(false, |b| b <= self.remaining()),
+            "checkpoint body declares {len} x {elem}-byte elements with \
+             only {} bytes left",
+            self.remaining()
+        );
+        Ok(len)
+    }
+
+    pub fn take_bytes(&mut self) -> anyhow::Result<Vec<u8>> {
+        let len = self.take_len(1)?;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    pub fn take_f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let len = self.take_len(4)?;
+        let raw = self.take(len * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(
+                c.try_into().unwrap())))
+            .collect())
+    }
+
+    pub fn take_f64s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let len = self.take_len(8)?;
+        let raw = self.take(len * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(
+                c.try_into().unwrap())))
+            .collect())
+    }
+
+    pub fn take_u64s(&mut self) -> anyhow::Result<Vec<u64>> {
+        let len = self.take_len(8)?;
+        let raw = self.take(len * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn take_opt_f32s(&mut self) -> anyhow::Result<Option<Vec<f32>>> {
+        match self.take_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.take_f32s()?)),
+            flag => anyhow::bail!(
+                "checkpoint body option flag {flag} (want 0 or 1)"),
+        }
+    }
+
+    pub fn take_rng_state(&mut self) -> anyhow::Result<RngState> {
+        let mut s = [0u64; 4];
+        for word in &mut s {
+            *word = self.take_u64()?;
+        }
+        let spare_normal = match self.take_u8()? {
+            0 => None,
+            1 => Some(self.take_f64()?),
+            flag => anyhow::bail!(
+                "checkpoint rng spare flag {flag} (want 0 or 1)"),
+        };
+        Ok(RngState { s, spare_normal })
+    }
+
+    pub fn take_comm_stats(&mut self) -> anyhow::Result<CommStats> {
+        let mut comm = CommStats::default();
+        comm.uploads = self.take_u64()?;
+        comm.upload_bytes = self.take_u64()?;
+        comm.downloads = self.take_u64()?;
+        comm.download_bytes = self.take_u64()?;
+        comm.grad_evals = self.take_u64()?;
+        comm.sim_time_s = self.take_f64()?;
+        comm.stale_uploads = self.take_u64()?;
+        comm.lost_uploads = self.take_u64()?;
+        comm.worker_upload_s = self.take_f64s()?;
+        comm.worker_uploads = self.take_u64s()?;
+        comm.worker_lost = self.take_u64s()?;
+        comm.worker_raw_bytes = self.take_u64s()?;
+        comm.worker_wire_bytes = self.take_u64s()?;
+        comm.rounds = self.take_u64()?;
+        comm.worker_selected = self.take_u64s()?;
+        comm.worker_rejected = self.take_u64s()?;
+        comm.worker_rejoins = self.take_u64s()?;
+        comm.rejected_uploads = self.take_u64()?;
+        comm.rejoins = self.take_u64()?;
+        Ok(comm)
+    }
+
+    /// Assert the body is fully consumed — trailing bytes mean the
+    /// writer and reader disagree about the layout.
+    pub fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.remaining() == 0,
+            "checkpoint body has {} unread trailing bytes",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cada_ckpt_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn codec_roundtrips_every_shape() {
+        let mut body = Vec::new();
+        put_u32(&mut body, 7);
+        put_u64(&mut body, u64::MAX - 3);
+        put_f64(&mut body, -0.125);
+        put_bytes(&mut body, b"algo blob");
+        put_f32s(&mut body, &[1.5, -2.25, f32::NAN]);
+        put_f64s(&mut body, &[0.1, 0.2]);
+        put_u64s(&mut body, &[9, 8, 7]);
+        put_opt_f32s(&mut body, None);
+        put_opt_f32s(&mut body, Some(&[3.0]));
+        put_rng_state(&mut body, &RngState {
+            s: [1, 2, 3, 4],
+            spare_normal: Some(0.5),
+        });
+        let mut dec = Dec::new(&body);
+        assert_eq!(dec.take_u32().unwrap(), 7);
+        assert_eq!(dec.take_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(dec.take_f64().unwrap(), -0.125);
+        assert_eq!(dec.take_bytes().unwrap(), b"algo blob");
+        let f = dec.take_f32s().unwrap();
+        assert_eq!(f[0], 1.5);
+        assert_eq!(f[1], -2.25);
+        assert!(f[2].is_nan());
+        assert_eq!(dec.take_f64s().unwrap(), vec![0.1, 0.2]);
+        assert_eq!(dec.take_u64s().unwrap(), vec![9, 8, 7]);
+        assert_eq!(dec.take_opt_f32s().unwrap(), None);
+        assert_eq!(dec.take_opt_f32s().unwrap(), Some(vec![3.0]));
+        let rng = dec.take_rng_state().unwrap();
+        assert_eq!(rng.s, [1, 2, 3, 4]);
+        assert_eq!(rng.spare_normal, Some(0.5));
+        dec.done().unwrap();
+    }
+
+    #[test]
+    fn decoder_rejects_underruns_and_bogus_lengths() {
+        let mut dec = Dec::new(&[1, 2, 3]);
+        assert!(dec.take_u64().is_err());
+        // a declared length far beyond the buffer must not allocate
+        let mut body = Vec::new();
+        put_u64(&mut body, u64::MAX / 2);
+        assert!(Dec::new(&body).take_f32s().is_err());
+        // trailing bytes are an error, not a shrug
+        let mut body = Vec::new();
+        put_u32(&mut body, 1);
+        put_u32(&mut body, 2);
+        let mut dec = Dec::new(&body);
+        dec.take_u32().unwrap();
+        assert!(dec.done().is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_corruption_detection() {
+        let dir = scratch_dir("roundtrip");
+        let body = b"round state goes here".to_vec();
+        let path = save(&dir, 42, &body).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(),
+                   "ckpt_00000042.bin");
+        assert_eq!(load(&path).unwrap(), body);
+        // flip one body byte on disk: the CRC must catch it
+        let mut framed = fs::read(&path).unwrap();
+        let last = framed.len() - 1;
+        framed[last] ^= 0x40;
+        fs::write(&path, &framed).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        // truncation below the header is caught too
+        fs::write(&path, &framed[..HEADER - 2]).unwrap();
+        assert!(load(&path).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_finds_newest_and_prune_keeps_two() {
+        let dir = scratch_dir("latest");
+        assert!(latest(&dir).unwrap().is_none());
+        for k in [5u64, 12, 9] {
+            save(&dir, k, format!("body {k}").as_bytes()).unwrap();
+        }
+        // a stale tmp from a torn save must be ignored and pruned
+        fs::write(dir.join("ckpt_00000099.bin.tmp"), b"torn").unwrap();
+        let (k, path) = latest(&dir).unwrap().unwrap();
+        assert_eq!(k, 12);
+        assert_eq!(load(&path).unwrap(), b"body 12");
+        prune(&dir, KEEP);
+        let names: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        let mut names = names;
+        names.sort();
+        assert_eq!(names,
+                   vec!["ckpt_00000009.bin", "ckpt_00000012.bin"]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cfg_validation() {
+        assert!(CheckpointCfg::default().is_none());
+        CheckpointCfg::default().validate().unwrap();
+        let cfg = CheckpointCfg {
+            dir: String::new(),
+            every: 5,
+            resume: String::new(),
+        };
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -58,6 +58,36 @@ impl DeltaHistory {
     pub fn d_max(&self) -> usize {
         self.d_max
     }
+
+    /// Checkpoint view: `(ring, head, filled, sum)` — everything a
+    /// [`DeltaHistory::import`] needs to resume bit-identically.
+    pub fn export(&self) -> (&[f64], u64, u64, f64) {
+        (&self.ring, self.head as u64, self.filled as u64, self.sum)
+    }
+
+    /// Rebuild from a checkpoint produced by [`DeltaHistory::export`]
+    /// on a history with the same `d_max`.
+    pub fn import(d_max: usize, ring: Vec<f64>, head: u64, filled: u64,
+                  sum: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            d_max >= 1 && ring.len() == d_max,
+            "checkpoint history ring holds {} entries, the run's d_max \
+             is {d_max}",
+            ring.len()
+        );
+        anyhow::ensure!(
+            (head as usize) < d_max && filled as usize <= d_max,
+            "checkpoint history head {head} / fill {filled} out of \
+             range for d_max {d_max}"
+        );
+        Ok(DeltaHistory {
+            ring,
+            head: head as usize,
+            filled: filled as usize,
+            sum,
+            d_max,
+        })
+    }
 }
 
 #[cfg(test)]

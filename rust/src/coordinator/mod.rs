@@ -37,6 +37,7 @@
 //! and the generic [`Trainer`](crate::algorithms::Trainer) drives it over
 //! a [`Transport`](crate::comm::Transport).
 
+pub mod checkpoint;
 pub mod history;
 pub mod pool;
 pub mod rules;

@@ -228,6 +228,38 @@ impl ServerState {
         &self.stats
     }
 
+    /// Checkpoint import: restore the persisted flat vectors and the
+    /// per-shard versions into this freshly-built server. The export
+    /// side needs no method — `theta`/`h`/`vhat`/`grad_agg` are public
+    /// and [`ServerState::versions`] exposes the counters. Scratch
+    /// (`prev_theta`, the step-norm blocks) and the measured timings
+    /// are per-round and deliberately not restored.
+    pub fn import_ckpt(&mut self, theta: Vec<f32>, h: Vec<f32>,
+                       vhat: Vec<f32>, grad_agg: Vec<f32>,
+                       versions: Vec<u64>) -> anyhow::Result<()> {
+        let p = self.theta.len();
+        anyhow::ensure!(
+            theta.len() == p
+                && h.len() == p
+                && vhat.len() == p
+                && grad_agg.len() == p,
+            "checkpoint server vectors have p = {}, the run has p = {p}",
+            theta.len()
+        );
+        anyhow::ensure!(
+            versions.len() == self.versions.len(),
+            "checkpoint has {} shard versions, the run's layout has {}",
+            versions.len(),
+            self.versions.len()
+        );
+        self.theta = theta;
+        self.h = h;
+        self.vhat = vhat;
+        self.grad_agg = grad_agg;
+        self.versions = versions;
+        Ok(())
+    }
+
     /// Fold one worker's gradient innovation into the aggregate:
     /// nabla^k += delta_m / M   (Eq. 3). Sequential over the full range;
     /// the round hot path folds inside [`ServerState::fold_and_step`]

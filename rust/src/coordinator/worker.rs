@@ -286,6 +286,72 @@ impl WorkerState {
     pub fn absorb_remote_skip(&mut self) {
         self.tau += 1;
     }
+
+    /// Checkpoint view: every cross-round field, cloned. The scratch
+    /// buffers and the staged lossy payload are per-step and rebuild
+    /// themselves; everything exported here must survive a crash
+    /// bit-for-bit or the resumed run diverges.
+    pub fn export_ckpt(&self) -> WorkerCkpt {
+        WorkerCkpt {
+            tau: self.tau,
+            uploads: self.uploads,
+            g_stale: self.g_stale.clone(),
+            dtilde_stored: self.dtilde_stored.clone(),
+            theta_stored: self.theta_stored.clone(),
+            delta: self.delta.clone(),
+            residual: self.residual.clone(),
+        }
+    }
+
+    /// Restore a checkpointed worker into this freshly-built state
+    /// (`new` + `set_compress` already applied, so the buffer shapes
+    /// tell us whether the checkpoint matches the run config).
+    pub fn import_ckpt(&mut self, ckpt: WorkerCkpt)
+                       -> anyhow::Result<()> {
+        let p = self.g_stale.len();
+        anyhow::ensure!(
+            ckpt.g_stale.len() == p,
+            "worker {} checkpoint has p = {}, the run has p = {p}",
+            self.id,
+            ckpt.g_stale.len()
+        );
+        anyhow::ensure!(
+            ckpt.dtilde_stored.is_some() == self.dtilde_stored.is_some()
+                && ckpt.theta_stored.is_some()
+                    == self.theta_stored.is_some(),
+            "worker {} checkpoint stores state for a different rule \
+             family",
+            self.id
+        );
+        anyhow::ensure!(
+            ckpt.delta.len() == p
+                && ckpt.residual.len() == self.residual.len(),
+            "worker {} checkpoint buffers do not match the run's \
+             compression config",
+            self.id
+        );
+        self.tau = ckpt.tau;
+        self.uploads = ckpt.uploads;
+        self.g_stale = ckpt.g_stale;
+        self.dtilde_stored = ckpt.dtilde_stored;
+        self.theta_stored = ckpt.theta_stored;
+        self.delta = ckpt.delta;
+        self.residual = ckpt.residual;
+        Ok(())
+    }
+}
+
+/// The cross-round fields of one [`WorkerState`], as a checkpoint
+/// carries them (see [`WorkerState::export_ckpt`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerCkpt {
+    pub tau: u32,
+    pub uploads: u64,
+    pub g_stale: Vec<f32>,
+    pub dtilde_stored: Option<Vec<f32>>,
+    pub theta_stored: Option<Vec<f32>>,
+    pub delta: Vec<f32>,
+    pub residual: Vec<f32>,
 }
 
 #[cfg(test)]

@@ -319,6 +319,8 @@ fn run_one(
             trace_cap: cfg.trace_cap,
             comm: cfg.comm.clone(),
             compress: cfg.compress,
+            fault: cfg.fault.clone(),
+            checkpoint: cfg.checkpoint.clone(),
         })
         .algorithm(&mut *algorithm)
         .dataset(data)

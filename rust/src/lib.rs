@@ -171,6 +171,21 @@
 //! * **straggler jitter** — seeded log-normal multiplier on upload
 //!   times; a pure function of `(seed, round, worker)`, so runs stay
 //!   reproducible.
+//! * **crash safety** — the `[fault]` section / `--fault-*` flags drive
+//!   deterministic fault injection ([`comm::FaultPlan`]: seeded frame
+//!   drops, bit-flips the CRC-checksummed v4 wire framing rejects,
+//!   mid-frame truncations, delays, and scheduled worker/server kills —
+//!   every event a pure function of `(fault_seed, round, worker)`), and
+//!   the `[checkpoint]` section / `--checkpoint`, `--checkpoint-every`,
+//!   `--resume` flags make training crash-safe: atomic temp+rename
+//!   CRC-checksummed checkpoints ([`coordinator::checkpoint`]) capture
+//!   the full trainer + algorithm state (RNG streams, comm accounting,
+//!   the CADA server/worker/rule state), and a killed-then-resumed run
+//!   is **bit-identical** to an uninterrupted one (golden-enforced by
+//!   `tests/checkpoint.rs`). Socket workers with `--heal` survive a
+//!   server restart by reconnecting with bounded seeded backoff and
+//!   rejoining their slot. The failure model is documented in
+//!   [`comm`] ("Failure model and recovery").
 //! * **participation** — one [`comm::ParticipationCfg`] holds every
 //!   participation knob (`[comm]` keys, `--select-*` CLI flags, builder
 //!   `.participation(...)`): `semi_sync_k = K` makes the server proceed
@@ -215,12 +230,13 @@ pub mod prelude {
         FedAvg, LocalMomentum, TrainCfg, Trainer,
     };
     pub use crate::comm::{run_worker, run_worker_opts, CommCfg, CommStats,
-                          CostModel, LinkModel, LinkSet, Participation,
-                          ParticipationCfg, SelectPolicy, SocketServer,
-                          TransportKind, WireStats, WorkerOpts,
-                          WorkerReport};
+                          CostModel, FaultPlan, LinkModel, LinkSet,
+                          Participation, ParticipationCfg, SelectPolicy,
+                          SocketServer, TransportKind, WireStats,
+                          WorkerOpts, WorkerReport};
     pub use crate::compress::{CompressCfg, Payload, Scheme};
     pub use crate::config::Schedule;
+    pub use crate::coordinator::checkpoint::CheckpointCfg;
     pub use crate::coordinator::{rules::RuleKind, server::Optimizer};
     pub use crate::coordinator::pool::{ShardExec, ShardPool};
     pub use crate::coordinator::shard::{ShardLayout, ShardStats,

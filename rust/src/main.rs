@@ -127,6 +127,31 @@ TRAIN OPTIONS:
                       (default 0.05)
   --compress-bits B   quant: bits per coordinate, 2..=8 (default 4)
   --compress-seed N   seed of the stochastic-rounding streams
+  --checkpoint DIR    save crash-safe checkpoints into DIR (atomic
+                      temp+rename, CRC-checksummed; the newest 2 kept)
+  --checkpoint-every N
+                      checkpoint cadence in rounds (requires
+                      --checkpoint)
+  --resume DIR        resume from the newest checkpoint in DIR and keep
+                      saving there; the resumed run is bit-identical to
+                      an uninterrupted one
+  --fault-seed N      seed of the deterministic fault-injection streams
+  --fault-drop-p P    probability a worker upload frame is dropped
+  --fault-corrupt-p P probability an upload frame is bit-flipped (the
+                      CRC framing rejects it server-side)
+  --fault-truncate-p P
+                      probability an upload frame is cut short mid-write
+  --fault-delay-p P / --fault-delay-ms MS
+                      probability / duration of injected upload delays
+  --fault-kill-workers "R:W,R:W"
+                      kill worker W before round R (comma-separated
+                      pairs); healing workers rejoin, others stay dead
+  --fault-kill-server-at R
+                      crash the server before round R (saves a
+                      checkpoint first when --checkpoint is set); the
+                      only fault knob that also works off-socket
+                      (drop/corrupt/truncate/delay/kill-workers need
+                      --transport socket)
   --artifacts DIR     artifacts directory (default ./artifacts)
   --out FILE          write curves as JSONL
   --quiet             less logging
@@ -147,6 +172,13 @@ WORKER OPTIONS (cada worker):
   --run R             Monte-Carlo run index to regenerate (default 0)
   --rejoin W          reclaim population slot W of a churn-mode run
                       (late-joiner catch-up) instead of a fresh join
+  --heal              self-heal: when the connection dies without a
+                      shutdown goodbye, reconnect with bounded backoff
+                      and rejoin the same slot (survives a server
+                      restart under --resume)
+  --fault-*           worker-side fault injection (same flags as train;
+                      corrupts/truncates this worker's own uploads,
+                      dies at scheduled kill rounds)
   --select-timeout-s / --select-retry-s
                       as above; must match the server's run config
 
@@ -182,6 +214,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.target_loss = args.f64_or("target-loss", cfg.target_loss)?;
     config::apply_comm_cli_overrides(&mut cfg.comm, args)?;
     config::apply_compress_cli_overrides(&mut cfg.compress, args)?;
+    config::apply_fault_cli_overrides(&mut cfg.fault, args)?;
+    config::apply_checkpoint_cli_overrides(&mut cfg.checkpoint, args)?;
     if let Some(name) = args.str_opt("algo") {
         let name = name.to_string();
         cfg.algos.retain(|a| a.name() == name);
@@ -248,6 +282,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.target_loss = args.f64_or("target-loss", cfg.target_loss)?;
     config::apply_comm_cli_overrides(&mut cfg.comm, args)?;
     config::apply_compress_cli_overrides(&mut cfg.compress, args)?;
+    config::apply_fault_cli_overrides(&mut cfg.fault, args)?;
+    config::apply_checkpoint_cli_overrides(&mut cfg.checkpoint, args)?;
     cfg.comm.transport = cada::comm::TransportKind::Socket;
     anyhow::ensure!(
         !cfg.comm.listen.is_empty(),
@@ -310,6 +346,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     cfg.n = args.usize_or("n", cfg.n)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     config::apply_comm_cli_overrides(&mut cfg.comm, args)?;
+    config::apply_fault_cli_overrides(&mut cfg.fault, args)?;
     anyhow::ensure!(
         !cfg.comm.connect.is_empty(),
         "cada worker needs --connect HOST:PORT (or [comm] connect)"
@@ -317,6 +354,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     let run = args.u64_or("run", 0)? as u32;
     let rejoin = args.str_opt("rejoin").map(str::parse::<u32>).transpose()
         .map_err(|e| anyhow::anyhow!("--rejoin: {e}"))?;
+    let heal = args.bool("heal");
     let artifacts = args.str_or("artifacts", "artifacts");
     if args.bool("quiet") {
         cada::util::logging::set_level(cada::util::logging::Level::Warn);
@@ -336,6 +374,8 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
     );
     let opts = cada::comm::WorkerOpts {
         rejoin_slot: rejoin,
+        fault: cfg.fault.clone(),
+        heal,
         ..cada::comm::WorkerOpts::from_participation(
             &cfg.comm.participation)
     };

@@ -303,6 +303,14 @@ pub fn render_wire_stats(algo: &str,
     ));
     out.push_str(&format!(
         "  received (upload): {:>12} B\n", wire.bytes_received));
+    // hostile/corrupt frames the CRC framing rejected — only seen under
+    // fault injection or a genuinely broken peer, so gate on nonzero
+    if wire.frames_corrupt > 0 {
+        out.push_str(&format!(
+            "  corrupt frames:    {:>12} rejected (CRC/framing)\n",
+            wire.frames_corrupt,
+        ));
+    }
     // measured compression ratio of the upload payloads themselves:
     // dense innovation bytes vs what crossed the socket. Only printed
     // when a lossy compressor actually shrank something — Identity's

@@ -4,6 +4,7 @@
 //! `serde_json`, `env_logger`) are replaced by purpose-built modules kept
 //! deliberately tiny and heavily tested.
 
+pub mod crc;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -1,0 +1,366 @@
+//! Crash-safety acceptance gates: a run that is killed mid-flight and
+//! resumed from its newest checkpoint must reproduce the uninterrupted
+//! run EXACTLY — same curve tail, same comm ledger, same final iterate,
+//! and byte-identical checkpoint files — on the in-process reference
+//! transport and across a real server-process crash on the socket
+//! transport (with self-healing `--heal`-style workers surviving the
+//! restart).
+//!
+//! All comparisons are exact (`==`), not tolerances: checkpointing is a
+//! state capture, not an approximation.
+
+use cada::algorithms::{Algorithm, Cada, CadaCfg, Trainer};
+use cada::comm::{CommStats, CostModel, FaultPlan, TransportKind,
+                 WorkerOpts};
+use cada::config::Schedule;
+use cada::coordinator::checkpoint::CheckpointCfg;
+use cada::coordinator::rules::RuleKind;
+use cada::coordinator::server::Optimizer;
+use cada::data::{synthetic, Batch, Dataset, Partition, PartitionScheme};
+use cada::runtime::native::NativeLogReg;
+use cada::telemetry::Curve;
+
+const ITERS: usize = 40;
+const EVAL_EVERY: usize = 10;
+const BATCH: usize = 16;
+const SEED: u64 = 4242;
+const KILL_AT: u64 = 20;
+const P: usize = 1024;
+
+struct Workload {
+    data: Dataset,
+    partition: Partition,
+    eval: Batch,
+}
+
+fn workload(workers: usize) -> (NativeLogReg, Workload) {
+    let compute = NativeLogReg::for_spec(22, P);
+    let data = synthetic::ijcnn_like(800, 9);
+    let mut rng = cada::util::rng::Rng::new(10);
+    let partition =
+        Partition::build(PartitionScheme::Uniform, &data, workers, &mut rng);
+    let eval = data.gather(&(0..128).collect::<Vec<_>>());
+    (compute, Workload { data, partition, eval })
+}
+
+fn cada2() -> Cada {
+    Cada::new(CadaCfg {
+        rule: RuleKind::Cada2 { c: 0.6 },
+        opt: Optimizer::Amsgrad {
+            alpha: Schedule::Constant(0.02),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            use_artifact: false,
+        },
+        max_delay: 20,
+        snapshot_every: 0,
+        d_max: 10,
+        use_artifact_innov: false,
+    })
+}
+
+/// A unique scratch directory for one test's checkpoints.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("cada_ckpt_test_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn ck(dir: &std::path::Path, every: u64, resume: bool) -> CheckpointCfg {
+    let dir = dir.to_string_lossy().into_owned();
+    CheckpointCfg {
+        resume: if resume { dir.clone() } else { String::new() },
+        dir,
+        every,
+    }
+}
+
+/// Build + run one trainer over `transport` (listen address required
+/// for the socket), returning the run outcome and the final comm
+/// ledger. The trainer (and with it any bound socket server) is
+/// dropped before returning.
+#[allow(clippy::too_many_arguments)]
+fn run_once(
+    algo: &mut Cada,
+    w: &Workload,
+    compute: &mut NativeLogReg,
+    transport: TransportKind,
+    listen: &str,
+    fault: FaultPlan,
+    ckpt: CheckpointCfg,
+) -> (anyhow::Result<Curve>, CommStats) {
+    let mut b = Trainer::builder()
+        .algorithm(algo)
+        .dataset(&w.data)
+        .partition(&w.partition)
+        .eval_batch(w.eval.clone())
+        .init_theta(vec![0.0; P])
+        .iters(ITERS)
+        .eval_every(EVAL_EVERY)
+        .batch(BATCH)
+        .cost_model(CostModel::default())
+        .transport(transport)
+        .seed(SEED)
+        .fault(fault)
+        .checkpoint(ckpt);
+    if !listen.is_empty() {
+        b = b.listen(listen);
+    }
+    let mut t = b.build().unwrap();
+    let res = t.run(0, compute);
+    let comm = t.comm.clone();
+    (res, comm)
+}
+
+/// The curve telemetry a resume must reproduce (wall clock excluded).
+fn curve_points(curve: &Curve) -> Vec<(u64, f64, u64, u64, f64)> {
+    curve
+        .points
+        .iter()
+        .map(|p| (p.iter, p.loss, p.uploads, p.grad_evals, p.sim_time_s))
+        .collect()
+}
+
+fn read_ckpt(dir: &std::path::Path, k: u64) -> Vec<u8> {
+    let path = dir.join(format!("ckpt_{k:08}.bin"));
+    std::fs::read(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// In-process golden: run A trains uninterrupted with periodic
+/// checkpointing; run B uses the same config plus a scheduled server
+/// kill at round 20, then a FRESH trainer (fresh algorithm, fresh RNGs)
+/// resumes from B's newest checkpoint and finishes. The resumed tail
+/// must be bit-identical to A — curve points, comm ledger, final
+/// iterate — and the checkpoint files the two histories leave behind
+/// must be byte-for-byte the same.
+#[test]
+fn killed_then_resumed_matches_uninterrupted_bit_for_bit() {
+    let (mut compute, w) = workload(5);
+    let dir_a = scratch_dir("uninterrupted");
+    let dir_b = scratch_dir("killed");
+    let kill = FaultPlan {
+        kill_server_at: Some(KILL_AT),
+        ..FaultPlan::none()
+    };
+
+    // run A: uninterrupted, checkpointing every 10 rounds
+    let mut algo_a = cada2();
+    let (curve_a, comm_a) =
+        run_once(&mut algo_a, &w, &mut compute, TransportKind::InProc,
+                 "", FaultPlan::none(), ck(&dir_a, 10, false));
+    let curve_a = curve_a.unwrap();
+    assert!(comm_a.uploads > 0);
+
+    // run B: same config + kill_server_at = 20; the run must fail with
+    // the distinctive fault-injection error after saving its state
+    let mut algo_b = cada2();
+    let (killed, _) =
+        run_once(&mut algo_b, &w, &mut compute, TransportKind::InProc,
+                 "", kill.clone(), ck(&dir_b, 10, false));
+    let err = killed.unwrap_err();
+    assert!(
+        format!("{err:#}").contains("kill_server_at"),
+        "unexpected kill error: {err:#}"
+    );
+
+    // resume: a FRESH trainer + algorithm, same run config (the kill
+    // schedule may stay — a kill at exactly the resume round already
+    // happened), pointed at B's checkpoints
+    let mut algo_r = cada2();
+    let (curve_r, comm_r) =
+        run_once(&mut algo_r, &w, &mut compute, TransportKind::InProc,
+                 "", kill, ck(&dir_b, 10, true));
+    let curve_r = curve_r.unwrap();
+
+    // the resumed curve is exactly the post-crash tail of A's curve
+    let pa = curve_points(&curve_a);
+    let pr = curve_points(&curve_r);
+    assert_eq!(pa.len(), 5, "A records iters 0,10,20,30,40");
+    assert!(!pr.is_empty() && pr.len() < pa.len(),
+            "resume must re-record only the post-crash tail");
+    assert_eq!(
+        &pa[pa.len() - pr.len()..],
+        &pr[..],
+        "resumed curve tail diverged from the uninterrupted run"
+    );
+
+    // final iterate and full comm ledger are bit-identical
+    assert_eq!(algo_a.theta(), algo_r.theta(),
+               "resumed final iterate diverged");
+    assert_eq!(comm_a, comm_r, "resumed comm ledger diverged");
+
+    // and the checkpoint files themselves: both histories end with the
+    // newest-2 saves for rounds 30 and 40, byte-for-byte identical
+    // (same state, same fingerprint — the fingerprint ignores the
+    // [fault]/[checkpoint] sections, which is what lets a resumed
+    // incarnation keep or drop the kill schedule)
+    for k in [30, 40] {
+        assert_eq!(
+            read_ckpt(&dir_a, k),
+            read_ckpt(&dir_b, k),
+            "ckpt_{k:08}.bin differs between histories"
+        );
+    }
+    // pruning kept exactly the newest 2 in each dir
+    for dir in [&dir_a, &dir_b] {
+        let mut names: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        names.sort();
+        assert_eq!(names, ["ckpt_00000030.bin", "ckpt_00000040.bin"],
+                   "{}", dir.display());
+    }
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+/// A resume under a changed run config (or the wrong Monte-Carlo run)
+/// must be refused loudly, not silently diverge: the checkpoint's
+/// fingerprint and run-id checks fire before any state is overwritten.
+#[test]
+fn resume_refuses_a_different_run_config() {
+    let (mut compute, w) = workload(3);
+    let dir = scratch_dir("fingerprint");
+    let mut algo = cada2();
+    let (done, _) =
+        run_once(&mut algo, &w, &mut compute, TransportKind::InProc, "",
+                 FaultPlan::none(), ck(&dir, 10, false));
+    done.unwrap();
+
+    // same checkpoints, different fault-free config (a different batch
+    // size) -> fingerprint mismatch
+    let mut algo2 = cada2();
+    let err = Trainer::builder()
+        .algorithm(&mut algo2)
+        .dataset(&w.data)
+        .partition(&w.partition)
+        .eval_batch(w.eval.clone())
+        .init_theta(vec![0.0; P])
+        .iters(ITERS)
+        .eval_every(EVAL_EVERY)
+        .batch(BATCH * 2)
+        .seed(SEED)
+        .checkpoint(ck(&dir, 10, true))
+        .build()
+        .unwrap()
+        .run(0, &mut compute)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("fingerprint"),
+        "wrong error for config mismatch: {err:#}"
+    );
+
+    // wrong Monte-Carlo run id is refused too
+    let mut algo3 = cada2();
+    let err = Trainer::builder()
+        .algorithm(&mut algo3)
+        .dataset(&w.data)
+        .partition(&w.partition)
+        .eval_batch(w.eval.clone())
+        .init_theta(vec![0.0; P])
+        .iters(ITERS)
+        .eval_every(EVAL_EVERY)
+        .batch(BATCH)
+        .seed(SEED)
+        .checkpoint(ck(&dir, 10, true))
+        .build()
+        .unwrap()
+        .run(1, &mut compute)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("run"),
+        "wrong error for run mismatch: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The socket-transport crash drill: a real TCP server incarnation is
+/// killed mid-run (listener dropped, no Shutdown goodbyes), its
+/// self-healing worker threads reconnect with seeded bounded backoff,
+/// and a SECOND server incarnation on the same address resumes from the
+/// first's checkpoint. The stitched-together run must match the
+/// in-process uninterrupted golden bit-for-bit, and each worker must
+/// have answered every round of the run across the two sessions.
+#[test]
+fn socket_kill_resume_with_healing_workers_matches_inproc() {
+    let m = 3;
+    let (mut compute, w) = workload(m);
+    let dir = scratch_dir("socket");
+    let kill = FaultPlan {
+        kill_server_at: Some(KILL_AT),
+        ..FaultPlan::none()
+    };
+
+    // in-process uninterrupted reference (no faults, no checkpoints)
+    let mut ref_algo = cada2();
+    let (ref_curve, ref_comm) =
+        run_once(&mut ref_algo, &w, &mut compute, TransportKind::InProc,
+                 "", FaultPlan::none(), CheckpointCfg::default());
+    let ref_curve = ref_curve.unwrap();
+
+    // reserve a concrete port: both incarnations must listen on the
+    // SAME address, or the healing workers cannot find the second one
+    let addr = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+    };
+
+    let mut algo1 = cada2();
+    let mut algo2 = cada2();
+    let (curve, comm) = std::thread::scope(|s| {
+        // M worker "processes" with self-healing on: they must survive
+        // the first server's crash and rejoin the second incarnation
+        // with their gradient state intact
+        for _ in 0..m {
+            let addr = addr.clone();
+            let data = &w.data;
+            s.spawn(move || {
+                let mut worker_compute = NativeLogReg::for_spec(22, P);
+                let opts = WorkerOpts { heal: true,
+                                        ..WorkerOpts::default() };
+                let report = cada::comm::run_worker_opts(
+                    &addr, data, &mut worker_compute, &opts)
+                    .expect("healing worker survives the crash");
+                assert_eq!(report.rounds, ITERS as u64,
+                           "worker missed rounds across the crash");
+            });
+        }
+
+        // incarnation 1: killed before round 20, state saved. Dropping
+        // the killed trainer (inside run_once) closes the parked worker
+        // streams — the workers see a bare EOF and start healing
+        let (killed, _) =
+            run_once(&mut algo1, &w, &mut compute, TransportKind::Socket,
+                     &addr, kill.clone(), ck(&dir, 10, false));
+        let err = killed.unwrap_err();
+        assert!(format!("{err:#}").contains("kill_server_at"),
+                "{err:#}");
+
+        // incarnation 2: same address, resumed from the checkpoint;
+        // finishing cleanly sends the Shutdown goodbyes the healed
+        // workers join on
+        let (curve, comm) =
+            run_once(&mut algo2, &w, &mut compute, TransportKind::Socket,
+                     &addr, kill.clone(), ck(&dir, 10, true));
+        (curve.unwrap(), comm)
+    });
+
+    // the stitched socket run reproduces the in-process golden exactly
+    let rp = curve_points(&ref_curve);
+    let sp = curve_points(&curve);
+    assert!(!sp.is_empty() && sp.len() < rp.len());
+    assert_eq!(&rp[rp.len() - sp.len()..], &sp[..],
+               "socket resume tail diverged from the InProc golden");
+    assert_eq!(ref_algo.theta(), algo2.theta(),
+               "socket-resumed final iterate diverged");
+    assert_eq!(ref_comm.uploads, comm.uploads);
+    assert_eq!(ref_comm.grad_evals, comm.grad_evals);
+    assert_eq!(ref_comm.sim_time_s, comm.sim_time_s);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
