@@ -1,0 +1,9 @@
+//@ audit-path: tensor/bad_kernel.rs
+//! Known-bad fixture for R1: an unsafe dereference whose comments
+//! never state the contract the caller must uphold.
+
+/// Reads the first element without bounds checks.
+// fast path, the caller probably checked the length already
+pub fn first_unchecked(x: &[f32]) -> f32 {
+    unsafe { *x.as_ptr() }
+}

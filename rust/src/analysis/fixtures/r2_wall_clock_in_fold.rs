@@ -1,0 +1,12 @@
+//@ audit-path: algorithms/bad_timer.rs
+//! Known-bad fixture for R2: wall-clock reads inside a
+//! simulated-accounting path. Round timing must be a pure function of
+//! (seed, round, worker) — `Instant::now()` makes it a function of
+//! the host machine.
+
+use std::time::Instant;
+
+pub fn round_cost() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

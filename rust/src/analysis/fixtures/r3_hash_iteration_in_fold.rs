@@ -1,0 +1,14 @@
+//@ audit-path: coordinator/bad_fold.rs
+//! Known-bad fixture for R3: a HashMap iterated inside a fold path.
+//! Hash iteration order varies per process, so the fold result would
+//! depend on the run, not on (seed, round, worker).
+
+use std::collections::HashMap;
+
+pub fn fold(uploads: &HashMap<usize, Vec<f32>>) -> f32 {
+    let mut acc = 0.0;
+    for (_, delta) in uploads {
+        acc += delta[0];
+    }
+    acc
+}

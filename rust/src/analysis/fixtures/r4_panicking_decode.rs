@@ -1,0 +1,8 @@
+//@ audit-path: comm/wire.rs
+//! Known-bad fixture for R4: a decode path that panics on hostile
+//! bytes instead of surfacing an error. A truncated frame from the
+//! network must never take the server down.
+
+pub fn decode_len(frame: &[u8]) -> u32 {
+    u32::from_le_bytes(frame[0..4].try_into().unwrap())
+}

@@ -1,0 +1,9 @@
+//@ audit-path: algorithms/bad_random.rs
+//! Known-bad fixture for R5, both halves: an ambient OS-seeded RNG
+//! (not a pure function of (seed, round, worker)) and an ad-hoc float
+//! reduction that bypasses the blessed fixed-order tensor kernels.
+
+pub fn noisy_norm(x: &[f32]) -> f32 {
+    let _rng = rand::thread_rng();
+    x.iter().map(|v| v * v).sum::<f32>()
+}

@@ -1,0 +1,8 @@
+//@ audit-path: exp/bad_spawn.rs
+//! Known-bad fixture for R6: thread creation outside the transport
+//! and pool substrates. Rogue threads dodge the deterministic join
+//! order those two modules guarantee.
+
+pub fn run_detached<F: FnOnce() + Send + 'static>(work: F) {
+    std::thread::spawn(work);
+}

@@ -1,0 +1,368 @@
+//! `cada audit` — the static determinism-and-safety lint over
+//! `rust/src/**`.
+//!
+//! Every claim the repo makes (honest wire accounting, bit-identical
+//! crash-resume, reproducible soaks) rests on invariants that used to
+//! be enforced only by golden tests *after* a violation shipped. This
+//! subsystem checks them before: a hand-rolled scanner
+//! ([`scan`]) splits source into code/comment channels, the rules
+//! ([`rules`]) pattern-match the written invariants R1–R6, and a
+//! checked-in allowlist (`analysis/allow.toml`) names the justification
+//! for every deliberate exception. See the "Invariants" section of the
+//! crate docs ([`crate`]) for the rule statements.
+//!
+//! Three properties keep the allowlist honest:
+//!
+//! * every entry is `[R#:path]` with a mandatory non-empty `why` —
+//!   an exception nobody can justify in a sentence does not ship;
+//! * entries are per-(rule, file), never global — a new violation in
+//!   an un-allowlisted file always fails the audit;
+//! * **stale entries fail the audit** — when the code an entry excused
+//!   goes away, the entry must go with it, so the list only ever
+//!   shrinks to match reality.
+//!
+//! The deliberately-bad snippets under `analysis/fixtures/` (one per
+//! rule) are the auditor's own regression suite: each must trip its
+//! rule, and the live tree must audit clean (`rust/tests/audit.rs`).
+
+pub mod rules;
+pub mod scan;
+
+pub use rules::{Finding, Rule};
+pub use scan::{scan_source, scan_tree, SourceFile};
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// The checked-in exceptions: allow key (`"R#:rel/path.rs"`) → the
+/// written justification.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: BTreeMap<String, String>,
+}
+
+impl Allowlist {
+    /// No exceptions — what the fixture self-tests audit against.
+    pub fn empty() -> Allowlist {
+        Allowlist::default()
+    }
+
+    /// The checked-in `analysis/allow.toml`, compiled into the binary
+    /// so `cada audit` needs no path plumbing to self-host.
+    pub fn builtin() -> Allowlist {
+        Allowlist::parse(include_str!("allow.toml"))
+            .expect("checked-in analysis/allow.toml must parse")
+    }
+
+    /// Parse and validate allowlist TOML: every section is
+    /// `[R#:path]` with exactly one key, a non-empty `why` string.
+    pub fn parse(text: &str) -> anyhow::Result<Allowlist> {
+        let doc = crate::config::toml::parse(text)?;
+        let mut entries = BTreeMap::new();
+        for (name, section) in &doc.sections {
+            if name.is_empty() {
+                anyhow::ensure!(
+                    section.is_empty(),
+                    "allowlist: top-level keys are not allowed; \
+                     every entry is an [R#:path] section"
+                );
+                continue;
+            }
+            let (rule_id, rel) =
+                name.split_once(':').ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "allowlist entry [{name}] is not R#:path"
+                    )
+                })?;
+            anyhow::ensure!(
+                Rule::from_id(rule_id).is_some(),
+                "allowlist entry [{name}] names unknown rule \
+                 `{rule_id}`"
+            );
+            anyhow::ensure!(
+                !rel.is_empty(),
+                "allowlist entry [{name}] has an empty path"
+            );
+            for key in section.keys() {
+                anyhow::ensure!(
+                    key == "why",
+                    "allowlist entry [{name}]: unexpected key \
+                     `{key}` (only `why` is allowed)"
+                );
+            }
+            let why = section
+                .get("why")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "allowlist entry [{name}] is missing its \
+                         `why = \"...\"` justification"
+                    )
+                })?;
+            anyhow::ensure!(
+                !why.trim().is_empty(),
+                "allowlist entry [{name}] has an empty `why`"
+            );
+            entries.insert(name.clone(), why.to_string());
+        }
+        Ok(Allowlist { entries })
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn why(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(String::as_str)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The outcome of one audit run.
+#[derive(Debug)]
+pub struct Report {
+    /// Unsuppressed rule hits, in (file, line) order.
+    pub findings: Vec<Finding>,
+    /// Hits excused by an allowlist entry.
+    pub suppressed: usize,
+    /// Allowlist keys that suppressed nothing — dead entries that
+    /// must be removed (they fail the audit).
+    pub stale: Vec<String>,
+    /// Files scanned.
+    pub files: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty() && self.stale.is_empty()
+    }
+
+    /// Human-readable report: one `file:line [R#]` line per finding
+    /// with the allow key that would suppress it, stale-entry lines,
+    /// a legend for every rule that fired, and a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let _ = writeln!(
+                out,
+                "src/{}:{} [{}] {}  (allow key: {})",
+                f.rel,
+                f.line,
+                f.rule.id(),
+                f.what,
+                f.allow_key()
+            );
+        }
+        for key in &self.stale {
+            let _ = writeln!(
+                out,
+                "stale allowlist entry [{key}] suppresses nothing \
+                 — remove it from rust/src/analysis/allow.toml"
+            );
+        }
+        let fired: BTreeSet<Rule> =
+            self.findings.iter().map(|f| f.rule).collect();
+        for rule in fired {
+            let _ = writeln!(
+                out,
+                "  {}: {} — exceptions go in \
+                 rust/src/analysis/allow.toml with a `why`",
+                rule.id(),
+                rule.summary()
+            );
+        }
+        let _ = writeln!(
+            out,
+            "audit: {} files, {} finding(s), {} suppressed, \
+             {} stale allowlist entr{}",
+            self.files,
+            self.findings.len(),
+            self.suppressed,
+            self.stale.len(),
+            if self.stale.len() == 1 { "y" } else { "ies" }
+        );
+        out
+    }
+}
+
+/// Run every rule over already-scanned files and fold the allowlist
+/// in: suppressed hits consume their entry, unconsumed entries are
+/// reported stale.
+pub fn audit_files(
+    files: &[SourceFile],
+    allow: &Allowlist,
+) -> Report {
+    let mut raw = Vec::new();
+    for file in files {
+        rules::check_file(file, &mut raw);
+    }
+    let mut used: BTreeSet<&str> = BTreeSet::new();
+    let mut findings = Vec::new();
+    let mut suppressed = 0;
+    for f in raw {
+        let key = f.allow_key();
+        if allow.contains(&key) {
+            suppressed += 1;
+            if let Some(k) = allow.entries.get_key_value(&key) {
+                used.insert(k.0.as_str());
+            }
+        } else {
+            findings.push(f);
+        }
+    }
+    let stale: Vec<String> = allow
+        .keys()
+        .filter(|k| !used.contains(k.as_str()))
+        .cloned()
+        .collect();
+    Report { findings, suppressed, stale, files: files.len() }
+}
+
+/// Audit a single source text under a root-relative path — how the
+/// fixture self-tests run known-bad snippets under the pretend path
+/// their `//@ audit-path:` directive declares.
+pub fn audit_source(
+    rel: &str,
+    text: &str,
+    allow: &Allowlist,
+) -> Report {
+    audit_files(&[scan_source(rel, text)], allow)
+}
+
+/// Scan and audit every `.rs` file under `root`.
+pub fn audit_tree(
+    root: &Path,
+    allow: &Allowlist,
+) -> anyhow::Result<Report> {
+    let files = scan_tree(root)?;
+    Ok(audit_files(&files, allow))
+}
+
+/// Locate the crate source tree from the current directory: `src/`
+/// when invoked from `rust/`, `rust/src/` from the repo root.
+pub fn default_root() -> anyhow::Result<PathBuf> {
+    for cand in ["src", "rust/src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    anyhow::bail!(
+        "cannot find the crate source tree (looked for src/lib.rs \
+         and rust/src/lib.rs); pass --root"
+    )
+}
+
+/// The pretend path a fixture audits under: its first line must be
+/// `//@ audit-path: <rel>`, placing the snippet inside the scoped
+/// rules' jurisdiction even though the file lives in
+/// `analysis/fixtures/` (which the tree scan skips).
+pub fn fixture_rel(text: &str) -> Option<String> {
+    let first = text.lines().next()?;
+    let rel = first.strip_prefix("//@ audit-path:")?.trim();
+    (!rel.is_empty()).then(|| rel.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_allowlist_parses_with_justifications() {
+        let allow = Allowlist::builtin();
+        assert!(!allow.is_empty());
+        for key in allow.keys() {
+            let why = allow.why(key).unwrap();
+            assert!(
+                why.split_whitespace().count() >= 3,
+                "[{key}] needs a real justification, got: {why}"
+            );
+        }
+    }
+
+    #[test]
+    fn allowlist_rejects_malformed_entries() {
+        // unknown rule id
+        assert!(Allowlist::parse("[R9:x.rs]\nwhy = \"z z z\"\n")
+            .is_err());
+        // not R#:path shaped
+        assert!(Allowlist::parse("[wat]\nwhy = \"z z z\"\n")
+            .is_err());
+        // missing / empty why
+        assert!(Allowlist::parse("[R2:x.rs]\n").is_err());
+        assert!(Allowlist::parse("[R2:x.rs]\nwhy = \"  \"\n")
+            .is_err());
+        // keys other than why
+        assert!(Allowlist::parse(
+            "[R2:x.rs]\nwhy = \"z z z\"\nalso = 1\n"
+        )
+        .is_err());
+        // top-level keys
+        assert!(Allowlist::parse("loose = 1\n").is_err());
+        // the empty document is a valid empty allowlist
+        assert!(Allowlist::parse("# nothing\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn suppression_consumes_entries_and_stale_ones_fail() {
+        let src = "let t = Instant::now();\n";
+        let allow = Allowlist::parse(
+            "[R2:coordinator/server.rs]\n\
+             why = \"test: excused wall clock\"\n",
+        )
+        .unwrap();
+        let hit = audit_source("coordinator/server.rs", src, &allow);
+        assert!(hit.clean(), "{}", hit.render());
+        assert_eq!(hit.suppressed, 1);
+
+        // same allowlist over a file that never trips R2: the entry
+        // is stale and the audit is not clean
+        let idle = audit_source(
+            "coordinator/server.rs",
+            "let x = 1;\n",
+            &allow,
+        );
+        assert!(!idle.clean());
+        assert_eq!(idle.stale, vec!["R2:coordinator/server.rs"]);
+        assert!(idle.render().contains("stale allowlist entry"));
+    }
+
+    #[test]
+    fn report_names_file_line_rule_and_key() {
+        let rep = audit_source(
+            "comm/wire.rs",
+            "fn d() { x.unwrap(); }\n",
+            &Allowlist::empty(),
+        );
+        assert_eq!(rep.findings.len(), 1);
+        let text = rep.render();
+        assert!(
+            text.contains("src/comm/wire.rs:1 [R4]"),
+            "{text}"
+        );
+        assert!(text.contains("allow key: R4:comm/wire.rs"), "{text}");
+        assert!(!rep.clean());
+    }
+
+    #[test]
+    fn fixture_directive_parses() {
+        assert_eq!(
+            fixture_rel("//@ audit-path: comm/wire.rs\nfn x() {}\n"),
+            Some("comm/wire.rs".to_string())
+        );
+        assert_eq!(fixture_rel("fn x() {}\n"), None);
+        assert_eq!(fixture_rel("//@ audit-path:\n"), None);
+    }
+}

@@ -1,0 +1,464 @@
+//! The audit rules R1–R6: the repo's written-but-previously-unchecked
+//! determinism and safety invariants as machine-checked pattern rules
+//! over scanned source (see [`super::scan`]).
+//!
+//! Every rule is a deliberate *approximation* — a lexer cannot see
+//! through type inference — tuned so the live tree's legitimate code
+//! either passes structurally or carries a justified allowlist entry
+//! (`analysis/allow.toml`). The bias is always toward false positives
+//! in protected paths: a hit that is actually fine gets an allowlist
+//! entry with a written `why`, never a weakening of the rule.
+
+use super::scan::SourceFile;
+
+/// Rule identifiers, ordered by id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    R6,
+}
+
+/// All rules, in id order (fixture self-tests iterate this).
+pub const ALL: [Rule; 6] =
+    [Rule::R1, Rule::R2, Rule::R3, Rule::R4, Rule::R5, Rule::R6];
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+            Rule::R6 => "R6",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Rule> {
+        ALL.into_iter().find(|r| r.id() == id)
+    }
+
+    /// One-line statement of the invariant, shown with every hit.
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::R1 => {
+                "every `unsafe` site carries a SAFETY contract on the \
+                 preceding lines"
+            }
+            Rule::R2 => {
+                "no wall-clock reads in simulated-accounting/fold paths \
+                 (timing must be a pure fn of (seed, round, worker))"
+            }
+            Rule::R3 => {
+                "no HashMap/HashSet in paths feeding folds, broadcasts, \
+                 checkpoints, or wire frames (iteration order is \
+                 nondeterministic; use BTreeMap or an explicit sort)"
+            }
+            Rule::R4 => {
+                "no unwrap/expect/panics in non-test wire/checkpoint \
+                 decode paths (hostile bytes must surface as errors)"
+            }
+            Rule::R5 => {
+                "RNG only via util::rng seeded constructors; float \
+                 reductions only via the blessed fixed-order kernels \
+                 in tensor::{scalar,simd}"
+            }
+            Rule::R6 => {
+                "thread creation only inside comm/transport.rs, \
+                 coordinator/pool.rs, or test code"
+            }
+        }
+    }
+}
+
+/// One rule hit at a specific line.
+#[derive(Debug)]
+pub struct Finding {
+    pub rel: String,
+    pub line: usize,
+    pub rule: Rule,
+    /// What matched (the offending token or missing contract).
+    pub what: String,
+}
+
+impl Finding {
+    /// The allowlist key that would suppress this finding.
+    pub fn allow_key(&self) -> String {
+        format!("{}:{}", self.rule.id(), self.rel)
+    }
+}
+
+/// Run every rule over one scanned file.
+pub fn check_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    r1_unsafe_contracts(file, out);
+    r2_wall_clock(file, out);
+    r3_hash_containers(file, out);
+    r4_panicking_decodes(file, out);
+    r5_rng_and_reductions(file, out);
+    r6_thread_spawns(file, out);
+}
+
+/// How far above an `unsafe` token R1 looks for its contract: enough
+/// for a `/// # Safety` doc section or a multi-line `// SAFETY:`
+/// comment above the attributes of a fn.
+const R1_LOOKBACK: usize = 16;
+
+/// R1 — every `unsafe` token (block, fn, or impl) must have a comment
+/// containing "SAFETY" (matched case-insensitively, so `/// # Safety`
+/// doc headings count) on its own line or the lines directly above.
+fn r1_unsafe_contracts(file: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test || !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        let lo = i.saturating_sub(R1_LOOKBACK);
+        let contracted = file.lines[lo..=i].iter().any(|l| {
+            l.comment.to_ascii_uppercase().contains("SAFETY")
+        });
+        if !contracted {
+            out.push(Finding {
+                rel: file.rel.clone(),
+                line: line.number,
+                rule: Rule::R1,
+                what: format!(
+                    "`unsafe` without a SAFETY contract in the {} \
+                     preceding lines",
+                    R1_LOOKBACK
+                ),
+            });
+        }
+    }
+}
+
+/// The modules whose accounting must be a pure function of
+/// (seed, round, worker): the algorithms' fold paths, the server's
+/// sharded fold/step, the drift history ring, the compressors, and the
+/// RNG substrate itself.
+fn r2_in_scope(rel: &str) -> bool {
+    rel.starts_with("algorithms/")
+        || rel.starts_with("compress/")
+        || rel == "coordinator/shard.rs"
+        || rel == "coordinator/server.rs"
+        || rel == "coordinator/history.rs"
+        || rel == "util/rng.rs"
+}
+
+/// R2 — no wall-clock reads in simulated-accounting and fold paths.
+/// Telemetry-only wall timing in these files needs an allowlist entry
+/// naming its justification; socket deadlines and bench timing live in
+/// modules outside this scope by design.
+fn r2_wall_clock(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !r2_in_scope(&file.rel) {
+        return;
+    }
+    for line in &file.lines {
+        if line.in_test {
+            continue;
+        }
+        let hit = if line.code.contains("std::time") {
+            Some("std::time")
+        } else if has_word(&line.code, "Instant") {
+            Some("Instant")
+        } else if has_word(&line.code, "SystemTime") {
+            Some("SystemTime")
+        } else {
+            None
+        };
+        if let Some(tok) = hit {
+            out.push(Finding {
+                rel: file.rel.clone(),
+                line: line.number,
+                rule: Rule::R2,
+                what: format!("wall-clock token `{tok}` in a \
+                               simulated-accounting path"),
+            });
+        }
+    }
+}
+
+/// Everything that feeds a fold, broadcast, checkpoint, or wire frame.
+fn r3_in_scope(rel: &str) -> bool {
+    rel.starts_with("algorithms/")
+        || rel.starts_with("coordinator/")
+        || rel.starts_with("compress/")
+        || rel.starts_with("comm/")
+}
+
+/// R3 — no hash-order containers in deterministic paths. The scanner
+/// cannot see *iteration* through type inference, so any mention is
+/// flagged: lookup-only uses would need an allowlist entry, but the
+/// crate-wide policy is simpler — these paths hold no HashMap at all
+/// (config/JSON/CLI maps are `BTreeMap`, ordered by construction).
+fn r3_hash_containers(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !r3_in_scope(&file.rel) {
+        return;
+    }
+    const TOKENS: [&str; 5] =
+        ["HashMap", "HashSet", "hash_map", "hash_set", "RandomState"];
+    for line in &file.lines {
+        if line.in_test {
+            continue;
+        }
+        if let Some(tok) =
+            TOKENS.iter().find(|t| has_word(&line.code, t))
+        {
+            out.push(Finding {
+                rel: file.rel.clone(),
+                line: line.number,
+                rule: Rule::R3,
+                what: format!("hash-order container `{tok}` in a \
+                               deterministic path"),
+            });
+        }
+    }
+}
+
+/// The hostile-input decode surfaces: wire frames from the network,
+/// checkpoint bytes from disk.
+fn r4_in_scope(rel: &str) -> bool {
+    matches!(
+        rel,
+        "comm/wire.rs" | "comm/socket.rs" | "coordinator/checkpoint.rs"
+    )
+}
+
+/// R4 — hostile bytes must surface as errors, never panics. Indexing
+/// panics are invisible to a lexer; the explicit panic family below is
+/// the enforceable surface (bounds-checked cursors like `Reader::take`
+/// and `Dec::take` handle the indexing half by construction).
+fn r4_panicking_decodes(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !r4_in_scope(&file.rel) {
+        return;
+    }
+    const TOKENS: [&str; 6] = [
+        ".unwrap()",
+        ".expect(",
+        "panic!(",
+        "unreachable!(",
+        "todo!(",
+        "unimplemented!(",
+    ];
+    for line in &file.lines {
+        if line.in_test {
+            continue;
+        }
+        if let Some(tok) =
+            TOKENS.iter().find(|t| line.code.contains(*t))
+        {
+            out.push(Finding {
+                rel: file.rel.clone(),
+                line: line.number,
+                rule: Rule::R4,
+                what: format!("panicking `{tok}` in a hostile-input \
+                               decode path"),
+            });
+        }
+    }
+}
+
+/// Where ad-hoc float reductions would break the one-documented-order
+/// invariant: the fold paths plus the sharded server step.
+fn r5_reduction_scope(rel: &str) -> bool {
+    rel.starts_with("algorithms/")
+        || rel.starts_with("compress/")
+        || rel == "coordinator/server.rs"
+        || rel == "coordinator/shard.rs"
+        || rel == "coordinator/history.rs"
+        || rel == "coordinator/pool.rs"
+}
+
+/// R5 — two halves. (a) crate-wide: no ambient/OS RNG; every stream
+/// must come from `util::rng`'s seeded constructors so randomness is a
+/// pure function of (seed, round, worker). (b) in fold paths: no
+/// ad-hoc `.sum()`/`.product()` — float reductions go through the
+/// blessed fixed-order kernels in `tensor::{scalar,simd}`, and the
+/// few legitimate fixed-order folds carry allowlist entries.
+fn r5_rng_and_reductions(file: &SourceFile, out: &mut Vec<Finding>) {
+    const RNG_TOKENS: [&str; 6] = [
+        "thread_rng",
+        "from_entropy",
+        "OsRng",
+        "StdRng",
+        "SmallRng",
+        "getrandom",
+    ];
+    for line in &file.lines {
+        if line.in_test {
+            continue;
+        }
+        if file.rel != "util/rng.rs" {
+            let rng_hit = RNG_TOKENS
+                .iter()
+                .find(|t| has_word(&line.code, t))
+                .copied()
+                .or_else(|| {
+                    line.code.contains("rand::").then_some("rand::")
+                });
+            if let Some(tok) = rng_hit {
+                out.push(Finding {
+                    rel: file.rel.clone(),
+                    line: line.number,
+                    rule: Rule::R5,
+                    what: format!(
+                        "RNG `{tok}` outside util::rng's seeded \
+                         constructors"
+                    ),
+                });
+                continue;
+            }
+        }
+        if r5_reduction_scope(&file.rel) {
+            let red = [".sum::<", ".sum()", ".product"]
+                .into_iter()
+                .find(|t| line.code.contains(t));
+            if let Some(tok) = red {
+                out.push(Finding {
+                    rel: file.rel.clone(),
+                    line: line.number,
+                    rule: Rule::R5,
+                    what: format!(
+                        "ad-hoc reduction `{tok}` in a fold path \
+                         (use the fixed-order tensor kernels)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R6 — thread creation is confined to the two engine substrates
+/// (worker transport, shard pool); everything else must go through
+/// them or carry an allowlist entry. `thread::sleep`/`JoinHandle`/
+/// `available_parallelism` are not creation and do not match.
+fn r6_thread_spawns(file: &SourceFile, out: &mut Vec<Finding>) {
+    if matches!(file.rel.as_str(), "comm/transport.rs"
+        | "coordinator/pool.rs")
+    {
+        return;
+    }
+    const TOKENS: [&str; 3] =
+        ["thread::spawn", "thread::Builder", "thread::scope"];
+    for line in &file.lines {
+        if line.in_test {
+            continue;
+        }
+        if let Some(tok) =
+            TOKENS.iter().find(|t| line.code.contains(*t))
+        {
+            out.push(Finding {
+                rel: file.rel.clone(),
+                line: line.number,
+                rule: Rule::R6,
+                what: format!("thread creation `{tok}` outside the \
+                               transport/pool substrates"),
+            });
+        }
+    }
+}
+
+/// Substring match with identifier boundaries on both sides, so
+/// `unsafe` never matches inside `unsafe_op_in_unsafe_fn` and
+/// `Instant` never matches inside `Instantiate`.
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(at) = code[from..].find(word) {
+        let start = from + at;
+        let end = start + word.len();
+        let pre_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let post_ok =
+            end == bytes.len() || !is_ident_byte(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::scan_source;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let file = scan_source(rel, src);
+        let mut out = Vec::new();
+        check_file(&file, &mut out);
+        out
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(!has_word("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(has_word("Instant::now()", "Instant"));
+        assert!(!has_word("Instantiate the thing", "Instant"));
+    }
+
+    #[test]
+    fn r1_accepts_contracts_and_doc_headings() {
+        let ok = "// SAFETY: ptr is in bounds\nunsafe { *p }\n";
+        assert!(findings("tensor/simd.rs", ok).is_empty());
+        let doc = "/// # Safety\n/// Caller checks AVX.\n\
+                   pub unsafe fn go() {}\n";
+        assert!(findings("tensor/simd.rs", doc).is_empty());
+        let bad = "let v = unsafe { *p };\n";
+        let f = findings("tensor/simd.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::R1);
+        assert_eq!(f[0].allow_key(), "R1:tensor/simd.rs");
+    }
+
+    #[test]
+    fn r2_only_fires_in_scope() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        assert!(!findings("coordinator/server.rs", src).is_empty());
+        assert!(!findings("algorithms/trainer.rs", src).is_empty());
+        // telemetry/bench/socket wall timing is out of scope by design
+        assert!(findings("telemetry/mod.rs", src).is_empty());
+        assert!(findings("comm/socket.rs", src).is_empty());
+        assert!(findings("bench/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_exempts_test_modules() {
+        let src = "#[cfg(test)]\nmod tests {\n\
+                   fn t() { frame().unwrap(); }\n}\n";
+        assert!(findings("comm/wire.rs", src).is_empty());
+        let live = "fn d(b: &[u8]) -> u32 { b[0] as u32 }\n\
+                    fn e(b: &[u8]) { b.first().unwrap(); }\n";
+        let f = findings("comm/wire.rs", live);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::R4);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn r5_rng_is_crate_wide_but_reductions_are_scoped() {
+        let rng = "let r = rand::thread_rng();\n";
+        assert!(!findings("telemetry/mod.rs", rng).is_empty());
+        let sum = "let s: f32 = xs.iter().sum();\n";
+        assert!(!findings("coordinator/server.rs", sum).is_empty());
+        // stats/telemetry means over counters are not fold paths
+        assert!(findings("util/stats.rs", sum).is_empty());
+    }
+
+    #[test]
+    fn r6_allows_the_substrates_and_sleep() {
+        let spawn = "std::thread::spawn(|| {});\n";
+        assert!(findings("comm/transport.rs", spawn).is_empty());
+        assert!(findings("coordinator/pool.rs", spawn).is_empty());
+        assert!(!findings("exp/mod.rs", spawn).is_empty());
+        let sleep = "std::thread::sleep(d);\n";
+        assert!(findings("comm/socket.rs", sleep).is_empty());
+    }
+}

@@ -1,0 +1,417 @@
+//! Hand-rolled line scanner feeding the audit rules.
+//!
+//! Not a Rust parser: one pass over each source file classifies every
+//! character as **code**, **comment**, or **literal**, so the rules in
+//! [`super::rules`] can pattern-match on code without tripping over
+//! tokens quoted in strings or prose, and can read `// SAFETY:`
+//! contracts out of the comment channel. A second line-level pass
+//! tracks `#[cfg(test)]` / `#[test]` item regions by brace depth so
+//! test code is exempt from the hostile-input and wall-clock rules.
+//!
+//! The lexer understands exactly the token shapes that could confuse a
+//! substring match: line and (nested) block comments, string / raw
+//! string / byte-string literals, char literals vs lifetimes. Anything
+//! else passes through as code verbatim.
+
+use std::path::Path;
+
+/// One source line, split into its code and comment channels.
+#[derive(Debug)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with literals blanked to spaces and comments stripped;
+    /// pattern matches against this never hit quoted text.
+    pub code: String,
+    /// Comment text on the line (line, doc, or block comments).
+    pub comment: String,
+    /// True inside the braces of a `#[cfg(test)]` / `#[test]` item.
+    pub in_test: bool,
+}
+
+/// A scanned file: its path relative to the scan root (forward
+/// slashes), plus the classified lines.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<Line>,
+}
+
+/// Scan one file's text under its root-relative path. Public so the
+/// fixture self-tests can scan known-bad snippets under the *pretend*
+/// path their `//@ audit-path:` directive declares.
+pub fn scan_source(rel: &str, text: &str) -> SourceFile {
+    let mut lines = classify(text);
+    mark_test_regions(&mut lines);
+    SourceFile { rel: rel.to_string(), lines }
+}
+
+/// Walk `root` and scan every `.rs` file, in sorted path order.
+/// `analysis/fixtures/` is skipped: it holds deliberately-bad snippets
+/// that every rule must trip on — in their own self-tests, not in the
+/// live-tree audit.
+pub fn scan_tree(root: &Path) -> anyhow::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    walk(root, root, &mut files)?;
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(files)
+}
+
+fn walk(
+    root: &Path,
+    dir: &Path,
+    out: &mut Vec<SourceFile>,
+) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir).map_err(|e| {
+        anyhow::anyhow!("auditing {}: {e}", dir.display())
+    })?;
+    let mut paths: Vec<_> = Vec::new();
+    for entry in entries {
+        paths.push(entry?.path());
+    }
+    paths.sort();
+    for path in paths {
+        let rel = rel_path(root, &path);
+        if path.is_dir() {
+            if rel == "analysis/fixtures" {
+                continue;
+            }
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let text = std::fs::read_to_string(&path).map_err(|e| {
+                anyhow::anyhow!("auditing {}: {e}", path.display())
+            })?;
+            out.push(scan_source(&rel, &text));
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    // normalise to forward slashes so rule scopes and allowlist keys
+    // are platform-independent
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+// ------------------------------------------------------------- lexer
+
+enum Mode {
+    Code,
+    /// Rust block comments nest.
+    BlockComment { depth: usize },
+    Str,
+    RawStr { hashes: usize },
+}
+
+/// Split `text` into per-line `(code, comment)` channels.
+fn classify(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    // the last code character emitted, to tell `r"..."` raw strings
+    // from identifiers that merely end in `r`
+    let mut last_code: char = ' ';
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            out.push(Line {
+                number: out.len() + 1,
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+            });
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    while i < chars.len() && chars[i] != '\n' {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment { depth: 1 };
+                    comment.push_str("/*");
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    mode = Mode::Str;
+                    code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                // raw (byte) strings: r"..", r#".."#, br".., b handled
+                // by the plain-'"' arm above when not followed by `r`
+                let raw_at = if c == 'r' && !is_ident(last_code) {
+                    Some(i)
+                } else if c == 'b'
+                    && next == Some('r')
+                    && !is_ident(last_code)
+                {
+                    Some(i + 1)
+                } else {
+                    None
+                };
+                if let Some(r) = raw_at {
+                    let mut h = 0;
+                    while chars.get(r + 1 + h) == Some(&'#') {
+                        h += 1;
+                    }
+                    if chars.get(r + 1 + h) == Some(&'"') {
+                        for _ in i..=r + 1 + h {
+                            code.push(' ');
+                        }
+                        i = r + 2 + h;
+                        mode = Mode::RawStr { hashes: h };
+                        last_code = ' ';
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // lifetime/label ('a, 'static, '_) vs char literal
+                    // ('x', '\n', 'b' as in b'x' handled here too since
+                    // the b was emitted as code)
+                    let n1 = chars.get(i + 1).copied();
+                    let lifetime = n1.is_some_and(|n| {
+                        (n.is_alphanumeric() || n == '_')
+                            && chars.get(i + 2) != Some(&'\'')
+                    });
+                    if lifetime {
+                        code.push(c);
+                        last_code = c;
+                        i += 1;
+                        continue;
+                    }
+                    // char literal: blank through the closing quote
+                    code.push(' ');
+                    i += 1;
+                    while i < chars.len()
+                        && chars[i] != '\''
+                        && chars[i] != '\n'
+                    {
+                        code.push(' ');
+                        i += if chars[i] == '\\' { 2 } else { 1 };
+                    }
+                    if chars.get(i) == Some(&'\'') {
+                        code.push(' ');
+                        i += 1;
+                    }
+                    last_code = ' ';
+                    continue;
+                }
+                code.push(c);
+                if !c.is_whitespace() {
+                    last_code = c;
+                }
+                i += 1;
+            }
+            Mode::BlockComment { depth } => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment { depth: depth + 1 };
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    comment.push_str("*/");
+                    i += 2;
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::BlockComment { depth: depth - 1 }
+                    };
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1; // keep the newline for the line split
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    mode = Mode::Code;
+                    code.push(' ');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr { hashes } => {
+                if c == '"'
+                    && (1..=hashes)
+                        .all(|k| chars.get(i + k) == Some(&'#'))
+                {
+                    for _ in 0..=hashes {
+                        code.push(' ');
+                    }
+                    i += 1 + hashes;
+                    mode = Mode::Code;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push(Line {
+            number: out.len() + 1,
+            code,
+            comment,
+            in_test: false,
+        });
+    }
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Mark the lines inside `#[cfg(test)]` / `#[test]` items. A pending
+/// flag set by the attribute latches onto the next `{` (the item
+/// body); the region ends when brace depth drops back below the
+/// body's. `#[cfg(not(test))]` and `cfg!(test)` never set the flag; an
+/// attribute followed by a braceless item (`#[cfg(test)] use ...;`)
+/// is cancelled by the `;`.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: usize = 0;
+    let mut pending = false;
+    let mut pending_depth = 0usize;
+    let mut test_depth: Option<usize> = None;
+    for line in lines.iter_mut() {
+        line.in_test = test_depth.is_some();
+        let code = &line.code;
+        let is_test_attr = (code.contains("#[cfg(")
+            && code.contains("test")
+            && !code.contains("not("))
+            || code.contains("#[test]");
+        if is_test_attr && test_depth.is_none() {
+            pending = true;
+            pending_depth = depth;
+            line.in_test = true;
+        }
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending && test_depth.is_none() {
+                        test_depth = Some(depth);
+                        pending = false;
+                        line.in_test = true;
+                    }
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if test_depth.is_some_and(|d| depth < d) {
+                        test_depth = None;
+                    }
+                }
+                ';' if pending && depth == pending_depth => {
+                    pending = false;
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_leave_the_code_channel() {
+        let f = scan_source(
+            "x.rs",
+            "let s = \"unsafe .unwrap() HashMap\"; // Instant::now\n\
+             let c = 'u'; /* SystemTime */ let l: &'static str = s;\n",
+        );
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(!f.lines[0].code.contains(".unwrap()"));
+        assert!(!f.lines[0].code.contains("HashMap"));
+        assert!(f.lines[0].comment.contains("Instant::now"));
+        assert!(!f.lines[1].code.contains('u'), "{}", f.lines[1].code);
+        assert!(f.lines[1].comment.contains("SystemTime"));
+        // the lifetime survives as code, the char literal does not
+        assert!(f.lines[1].code.contains("'static"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let f = scan_source(
+            "x.rs",
+            "let a = r\"unsafe\"; let b = r#\"say \"unsafe\"\"#;\n\
+             let c = br\"unsafe\"; let r = 1; let br = 2;\n",
+        );
+        assert!(!f.lines[0].code.contains("unsafe"), "{}", f.lines[0].code);
+        assert!(!f.lines[1].code.contains("unsafe"), "{}", f.lines[1].code);
+        // identifiers named r/br don't start raw strings
+        assert!(f.lines[1].code.contains("let r = 1"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline_strings() {
+        let f = scan_source(
+            "x.rs",
+            "/* outer /* inner */ still comment */ let x = 1;\n\
+             let s = \"line one\nline two unsafe\";\nlet y = 2;\n",
+        );
+        assert!(f.lines[0].code.contains("let x = 1"));
+        assert!(f.lines[0].comment.contains("inner"));
+        assert!(!f.lines[1].code.contains("unsafe"));
+        assert!(f.lines[2].code.contains("let y = 2"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let f = scan_source(
+            "x.rs",
+            "fn live() { x.unwrap(); }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 fn t() { y.unwrap(); }\n\
+             }\n\
+             fn live_again() {}\n",
+        );
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_and_braceless_items_stay_live() {
+        let f = scan_source(
+            "x.rs",
+            "#[cfg(not(test))]\n\
+             fn prod() { x.unwrap(); }\n\
+             #[cfg(test)]\n\
+             use something::Gone;\n\
+             fn still_live() {}\n",
+        );
+        assert!(!f.lines[1].in_test, "not(test) must stay live");
+        // the braceless use is attribute-marked, but the fn after it
+        // must NOT inherit the pending flag
+        assert!(!f.lines[4].in_test);
+    }
+}

@@ -793,9 +793,18 @@ impl SocketServer {
                     ));
                 }
             }
-            let conn = self.conns[w]
-                .as_mut()
-                .expect("slot checked live above");
+            // the selected set was filtered against live slots above,
+            // so a vacant slot here is a server-side logic bug — which
+            // R4 says must surface as an error, not a panic, since
+            // this loop is driven by whatever the sockets deliver
+            let conn = match self.conns[w].as_mut() {
+                Some(conn) => conn,
+                None => anyhow::bail!(
+                    "round {}: selected worker {w} has no live \
+                     connection slot",
+                    round.k
+                ),
+            };
             let t0 = Instant::now();
             let (theta, snapshot) =
                 Self::dirty_ranges(conn, round, &mut self.stats);
@@ -1311,7 +1320,15 @@ fn worker_session(addr: &str, data: &Dataset, compute: &mut dyn Compute,
         report.w = w;
     }
     let batch = *life_batch;
-    let state = state.as_mut().expect("installed above");
+    // installed by the branch above on first Welcome, kept across
+    // healed reconnects; a None is a session-wiring bug, surfaced as
+    // an error per R4 because this path runs on hostile-input bytes
+    let state = match state.as_mut() {
+        Some(state) => state,
+        None => anyhow::bail!(
+            "worker {w}: session has no per-run state after Welcome"
+        ),
+    };
     loop {
         let round = match wire::recv(&mut stream, &mut scratch) {
             Ok(Some((Msg::Round(round), _))) => round,

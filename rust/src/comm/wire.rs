@@ -525,33 +525,29 @@ impl<'a> Reader<'a> {
     }
 
     fn u16(&mut self) -> anyhow::Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("len 2")))
+        Ok(u16::from_le_bytes(crate::util::byte_array(self.take(2)?)?))
     }
 
     fn u32(&mut self) -> anyhow::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+        Ok(u32::from_le_bytes(crate::util::byte_array(self.take(4)?)?))
     }
 
     fn u64(&mut self) -> anyhow::Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+        Ok(u64::from_le_bytes(crate::util::byte_array(self.take(8)?)?))
     }
 
     fn f32(&mut self) -> anyhow::Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+        Ok(f32::from_le_bytes(crate::util::byte_array(self.take(4)?)?))
     }
 
     fn f64(&mut self) -> anyhow::Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+        Ok(f64::from_le_bytes(crate::util::byte_array(self.take(8)?)?))
     }
 
     fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
         let n = self.u32()? as usize;
         let raw = self.take(4 * n)?;
-        let mut out = Vec::with_capacity(n);
-        for c in raw.chunks_exact(4) {
-            out.push(f32::from_le_bytes(c.try_into().expect("len 4")));
-        }
-        Ok(out)
+        f32s_from_le(raw)
     }
 
     fn deltas(&mut self) -> anyhow::Result<Vec<RangeDelta>> {
@@ -839,7 +835,7 @@ impl PayloadView<'_> {
                 );
                 let mut prev: Option<u32> = None;
                 for c in idx_raw.chunks_exact(4) {
-                    let i = u32::from_le_bytes(c.try_into().expect("len 4"));
+                    let i = u32::from_le_bytes(crate::util::byte_array(c)?);
                     anyhow::ensure!(
                         i < *p,
                         "sparse payload: index {i} out of range (p={p})"
@@ -880,16 +876,21 @@ impl PayloadView<'_> {
         self.validate()?;
         Ok(match self {
             PayloadView::Dense { raw, .. } => {
-                Payload::Dense(f32s_from_le(raw))
+                Payload::Dense(f32s_from_le(raw)?)
             }
-            PayloadView::Sparse { p, idx_raw, val_raw } => Payload::Sparse {
-                p: *p,
-                idx: idx_raw
-                    .chunks_exact(4)
-                    .map(|c| u32::from_le_bytes(c.try_into().expect("len 4")))
-                    .collect(),
-                val: f32s_from_le(val_raw),
-            },
+            PayloadView::Sparse { p, idx_raw, val_raw } => {
+                let mut idx = Vec::with_capacity(idx_raw.len() / 4);
+                for c in idx_raw.chunks_exact(4) {
+                    idx.push(u32::from_le_bytes(
+                        crate::util::byte_array(c)?,
+                    ));
+                }
+                Payload::Sparse {
+                    p: *p,
+                    idx,
+                    val: f32s_from_le(val_raw)?,
+                }
+            }
             PayloadView::Quant { p, bits, scale, codes } => Payload::Quant {
                 p: *p,
                 bits: *bits,
@@ -906,15 +907,16 @@ impl PayloadView<'_> {
     pub fn decompress(&self) -> anyhow::Result<Vec<f32>> {
         self.validate()?;
         Ok(match self {
-            PayloadView::Dense { raw, .. } => f32s_from_le(raw),
+            PayloadView::Dense { raw, .. } => f32s_from_le(raw)?,
             PayloadView::Sparse { p, idx_raw, val_raw } => {
                 let mut out = vec![0.0f32; *p as usize];
                 for (ic, vc) in
                     idx_raw.chunks_exact(4).zip(val_raw.chunks_exact(4))
                 {
-                    let i = u32::from_le_bytes(ic.try_into().expect("len 4"));
+                    let i =
+                        u32::from_le_bytes(crate::util::byte_array(ic)?);
                     out[i as usize] =
-                        f32::from_le_bytes(vc.try_into().expect("len 4"));
+                        f32::from_le_bytes(crate::util::byte_array(vc)?);
                 }
                 out
             }
@@ -931,10 +933,14 @@ impl PayloadView<'_> {
     }
 }
 
-fn f32s_from_le(raw: &[u8]) -> Vec<f32> {
-    raw.chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().expect("len 4")))
-        .collect()
+/// Little-endian f32 slab → floats, length mismatches surfaced as
+/// errors (R4: these bytes come off the wire).
+fn f32s_from_le(raw: &[u8]) -> anyhow::Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(raw.len() / 4);
+    for c in raw.chunks_exact(4) {
+        out.push(f32::from_le_bytes(crate::util::byte_array(c)?));
+    }
+    Ok(out)
 }
 
 /// A step frame parsed without materialising its payload: the scalar
@@ -1350,6 +1356,37 @@ mod tests {
     }
 
     #[test]
+    fn reader_scalars_error_cleanly_on_short_buffers() {
+        // regression for the R4 hardening: every fixed-width scalar
+        // read used to `try_into().expect(...)` its bytes; each now
+        // routes through util::byte_array, so a short buffer is a
+        // clean error at every width and the cursor never advances
+        // past a failed read
+        let mut r = Reader { b: &[0xAB], pos: 0 };
+        assert!(r.u16().is_err());
+        assert_eq!(r.pos, 0);
+        let mut r = Reader { b: &[1, 2, 3], pos: 0 };
+        assert!(r.u32().is_err());
+        assert!(r.f32().is_err());
+        let mut r = Reader { b: &[0; 7], pos: 0 };
+        assert!(r.u64().is_err());
+        assert!(r.f64().is_err());
+        assert_eq!(r.pos, 0);
+        // a float-vector whose count field claims more than the
+        // buffer holds errors at `take`, never mid-conversion
+        let mut hostile = 5u32.to_le_bytes().to_vec(); // claims 5 f32s
+        hostile.extend_from_slice(&[0u8; 8]); // ...holds only 2
+        let mut r = Reader { b: &hostile, pos: 0 };
+        assert!(r.f32s().is_err());
+        // and the happy path still reads exact floats
+        let mut ok = 2u32.to_le_bytes().to_vec();
+        ok.extend_from_slice(&1.5f32.to_le_bytes());
+        ok.extend_from_slice(&(-8.25f32).to_le_bytes());
+        let mut r = Reader { b: &ok, pos: 0 };
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -8.25]);
+    }
+
+    #[test]
     fn hostile_payload_counts_never_overallocate() {
         // hand-build step payloads whose length claims exceed what the
         // frame holds; the decoder must reject them from the header
@@ -1504,8 +1541,11 @@ mod tests {
     fn fuzzed_frames_never_panic() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(0xF0_22);
+        // Miri executes these loops ~1000x slower; a subsample still
+        // exercises every decoder path the CI miri job cares about
+        let trials: u64 = if cfg!(miri) { 40 } else { 2000 };
         // pure-noise payloads: every outcome must be a clean Result
-        for trial in 0..2000u64 {
+        for trial in 0..trials {
             let n = (rng.next_u64() % 200) as usize;
             let mut buf: Vec<u8> =
                 (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
@@ -1545,7 +1585,7 @@ mod tests {
         });
         let mut pristine = Vec::new();
         encode(&msg, &mut pristine);
-        for _ in 0..2000 {
+        for _ in 0..trials {
             let mut buf = pristine.clone();
             let at = (rng.next_u64() as usize) % buf.len();
             buf[at] ^= (rng.next_u64() & 0xFF) as u8;

@@ -416,8 +416,11 @@ fn top_k(x: &[f32], k: usize) -> Payload {
         if a.is_nan() { f32::NEG_INFINITY } else { a }
     };
     if k < order.len() {
+        // total_cmp orders identically to the old partial_cmp here —
+        // key() never yields NaN (mapped to NEG_INFINITY) or -0.0
+        // (abs) — but has no panic path (audit rule R4 hygiene)
         order.select_nth_unstable_by(k - 1, |&a, &b| {
-            key(b).partial_cmp(&key(a)).unwrap().then(a.cmp(&b))
+            key(b).total_cmp(&key(a)).then(a.cmp(&b))
         });
         order.truncate(k);
     }

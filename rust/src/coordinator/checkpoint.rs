@@ -125,21 +125,23 @@ pub fn load(path: &Path) -> anyhow::Result<Vec<u8>> {
         path.display(),
         framed.len()
     );
-    let magic = u64::from_le_bytes(framed[0..8].try_into().unwrap());
+    let magic = u64::from_le_bytes(crate::util::byte_array(&framed[0..8])?);
     anyhow::ensure!(
         magic == MAGIC,
         "checkpoint {} has magic {magic:#018x}, want {MAGIC:#018x} — \
          not a checkpoint file",
         path.display()
     );
-    let version = u32::from_le_bytes(framed[8..12].try_into().unwrap());
+    let version =
+        u32::from_le_bytes(crate::util::byte_array(&framed[8..12])?);
     anyhow::ensure!(
         version == VERSION,
         "checkpoint {} is format v{version}, this build reads \
          v{VERSION}",
         path.display()
     );
-    let want = u32::from_le_bytes(framed[12..16].try_into().unwrap());
+    let want =
+        u32::from_le_bytes(crate::util::byte_array(&framed[12..16])?);
     let body = framed[HEADER..].to_vec();
     let got = crc32(&body);
     anyhow::ensure!(
@@ -338,11 +340,11 @@ impl<'a> Dec<'a> {
     }
 
     pub fn take_u32(&mut self) -> anyhow::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(crate::util::byte_array(self.take(4)?)?))
     }
 
     pub fn take_u64(&mut self) -> anyhow::Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(crate::util::byte_array(self.take(8)?)?))
     }
 
     pub fn take_f64(&mut self) -> anyhow::Result<f64> {
@@ -368,30 +370,35 @@ impl<'a> Dec<'a> {
     pub fn take_f32s(&mut self) -> anyhow::Result<Vec<f32>> {
         let len = self.take_len(4)?;
         let raw = self.take(len * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_bits(u32::from_le_bytes(
-                c.try_into().unwrap())))
-            .collect())
+        let mut out = Vec::with_capacity(len);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_bits(u32::from_le_bytes(
+                crate::util::byte_array(c)?,
+            )));
+        }
+        Ok(out)
     }
 
     pub fn take_f64s(&mut self) -> anyhow::Result<Vec<f64>> {
         let len = self.take_len(8)?;
         let raw = self.take(len * 8)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| f64::from_bits(u64::from_le_bytes(
-                c.try_into().unwrap())))
-            .collect())
+        let mut out = Vec::with_capacity(len);
+        for c in raw.chunks_exact(8) {
+            out.push(f64::from_bits(u64::from_le_bytes(
+                crate::util::byte_array(c)?,
+            )));
+        }
+        Ok(out)
     }
 
     pub fn take_u64s(&mut self) -> anyhow::Result<Vec<u64>> {
         let len = self.take_len(8)?;
         let raw = self.take(len * 8)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        let mut out = Vec::with_capacity(len);
+        for c in raw.chunks_exact(8) {
+            out.push(u64::from_le_bytes(crate::util::byte_array(c)?));
+        }
+        Ok(out)
     }
 
     pub fn take_opt_f32s(&mut self) -> anyhow::Result<Option<Vec<f32>>> {
@@ -514,6 +521,32 @@ mod tests {
         let mut dec = Dec::new(&body);
         dec.take_u32().unwrap();
         assert!(dec.done().is_err());
+    }
+
+    #[test]
+    fn hostile_bytes_error_at_every_hardened_site() {
+        // regression for the R4 hardening: each decode site that used
+        // to `try_into().unwrap()` now routes through util::byte_array
+        // and must turn short/hostile input into a clean error
+        assert!(Dec::new(&[0, 1, 2]).take_u32().is_err());
+        assert!(Dec::new(&[0; 7]).take_u64().is_err());
+        // vector reads whose length claims outrun the buffer
+        let mut body = Vec::new();
+        put_u64(&mut body, 3); // claims 3 f64s, holds none
+        assert!(Dec::new(&body).take_f64s().is_err());
+        let mut body = Vec::new();
+        put_u64(&mut body, 2);
+        body.extend_from_slice(&7u64.to_le_bytes()); // 1 of 2 u64s
+        assert!(Dec::new(&body).take_u64s().is_err());
+        // load(): a header-sized file of garbage fails on the magic
+        // check via the hardened slice reads, never a panic
+        let dir = scratch_dir("hostile");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt_garbage.bin");
+        fs::write(&path, vec![0xA5u8; HEADER]).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -205,10 +205,66 @@
 //!   `cada worker --rejoin W` process is readmitted into slot W with a
 //!   full catch-up broadcast.
 //!
+//! ## Invariants (machine-checked by `cada audit`)
+//!
+//! Every claim above rests on one property: all randomness and
+//! timing-sensitive state is a pure function of `(seed, round,
+//! worker)`, and every float fold has one documented order. The
+//! [`analysis`] subsystem enforces that property *statically* — `cada
+//! audit` scans `rust/src/**` and fails CI (the `static-analysis` job)
+//! on any violation of:
+//!
+//! * **R1** — every `unsafe` block/fn carries a `// SAFETY:` contract
+//!   on the preceding lines (the crate also sets
+//!   `#![deny(unsafe_op_in_unsafe_fn)]`, so unsafe bodies stay
+//!   explicit). Why: the unsafe inventory ([`coordinator::pool`]'s
+//!   raw-slice reconstruction, [`tensor::simd`]'s AVX kernels) is only
+//!   reviewable while each site states what makes it sound.
+//! * **R2** — no `Instant::now`/`SystemTime`/`std::time` in
+//!   simulated-accounting and fold paths (`algorithms/`, `compress/`,
+//!   `coordinator/{shard,server,history}`, `util/rng`). Why: simulated
+//!   round time must come from the [`comm::LinkModel`] event clock,
+//!   never the host's — or run-to-run bit-identity dies.
+//! * **R3** — no `HashMap`/`HashSet` in paths feeding folds,
+//!   broadcasts, checkpoints, or wire frames. Why: hash iteration
+//!   order varies per process. The crate currently holds **zero**
+//!   hash-order containers anywhere: all twelve map uses
+//!   (`util/json`, `config/toml`, `runtime` manifest, `cli`, `bench`)
+//!   are `BTreeMap`, ordered by construction.
+//! * **R4** — no `.unwrap()`/`.expect()`/`panic!` family in the
+//!   non-test hostile-input decode paths (`comm/wire`, `comm/socket`,
+//!   `coordinator/checkpoint`). Why: PR 9's CRC layer promises that
+//!   hostile bytes surface as *errors*; a panicking decoder breaks
+//!   that promise from inside. Fixed-width byte reads go through
+//!   [`util::byte_array`].
+//! * **R5** — RNG construction only via [`util::rng`]'s seeded
+//!   constructors (no `thread_rng`/`OsRng`/`rand::` anywhere), and no
+//!   ad-hoc `.sum()`/`.product()` float reductions in fold paths —
+//!   reductions go through the blessed fixed-order kernels in
+//!   [`tensor`] (`scalar`/`simd`).
+//! * **R6** — thread creation only inside `comm/transport.rs`,
+//!   `coordinator/pool.rs`, or test code. Why: those two substrates
+//!   own the deterministic spawn/join discipline the parity suites
+//!   pin.
+//!
+//! Deliberate exceptions live in `rust/src/analysis/allow.toml`, one
+//! `[R#:path]` section per (rule, file) with a mandatory `why =
+//! "..."` justification; stale entries fail the audit. To extend it,
+//! add the section the audit's own output names and write the reason a
+//! reviewer can check. Run `cada audit` locally from the repo root or
+//! `rust/`; the auditor's fixtures (`analysis/fixtures/`) and
+//! `tests/audit.rs` keep the rules themselves honest. The dynamic
+//! twins of this lint — a Miri job over the unsafe/decoder cores and a
+//! ThreadSanitizer job over the threaded parity suites — run in CI
+//! next to it (see `bench/README.md`'s CI inventory).
+//!
 //! See `examples/quickstart.rs` for an end-to-end comparison run and
 //! [`exp::Experiment`] for the paper-figure presets.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod algorithms;
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod comm;

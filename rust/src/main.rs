@@ -9,6 +9,7 @@
 //!   print-config  show a preset's full configuration (paper Tables 1-4)
 //!   inspect       dump manifest details for one spec
 //!   bench-check   gate a bench summary against the committed baseline
+//!   audit         static determinism-and-safety lint over rust/src/**
 //!
 //! Examples:
 //!   cada train --preset fig3 --iters 500 --runs 1
@@ -46,6 +47,7 @@ fn run() -> anyhow::Result<()> {
         "print-config" => cmd_print_config(&args),
         "inspect" => cmd_inspect(&args),
         "bench-check" => cmd_bench_check(&args),
+        "audit" => cmd_audit(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -66,6 +68,7 @@ USAGE:
   cada bench-check [--baseline FILE] [--current FILE]
                    [--max-regress R] [--summary FILE]
                    [--update-baseline]
+  cada audit [--root DIR] [--allow FILE]
 
 TRAIN OPTIONS:
   --preset NAME       experiment preset (paper figure)
@@ -194,6 +197,16 @@ BENCH-CHECK OPTIONS (the CI perf-regression gate):
   --update-baseline   write the current run's medians into the baseline
                       file (arming its seed rows) instead of gating;
                       prints the delta table vs the old baseline first
+
+AUDIT OPTIONS (the CI static-analysis gate; see the "Invariants"
+section of the crate docs for rules R1-R6):
+  --root DIR          source tree to audit (default: ./src or
+                      ./rust/src, whichever holds lib.rs)
+  --allow FILE        allowlist TOML (default: the checked-in
+                      rust/src/analysis/allow.toml compiled into the
+                      binary); every entry is an [R#:path] section
+                      with a mandatory why = "..." justification, and
+                      stale entries fail the audit
 "#;
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -517,5 +530,36 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     let init = s.load_init()?;
     let norm: f32 = init.iter().map(|v| v * v).sum::<f32>().sqrt();
     println!("init ||theta|| = {norm}");
+    Ok(())
+}
+
+fn cmd_audit(args: &Args) -> anyhow::Result<()> {
+    let root = args.str_opt("root").map(str::to_string);
+    let allow_path = args.str_opt("allow").map(str::to_string);
+    args.reject_unknown()?;
+    let root = match root {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => cada::analysis::default_root()?,
+    };
+    let allow = match allow_path {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            cada::analysis::Allowlist::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?
+        }
+        None => cada::analysis::Allowlist::builtin(),
+    };
+    let report = cada::analysis::audit_tree(&root, &allow)?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.clean(),
+        "audit failed: {} finding(s), {} stale allowlist entr{} \
+         (root {})",
+        report.findings.len(),
+        report.stale.len(),
+        if report.stale.len() == 1 { "y" } else { "ies" },
+        root.display()
+    );
     Ok(())
 }

@@ -41,9 +41,12 @@
 //! The only `unsafe` here is the AVX path: `#[target_feature]` fns
 //! (callers check [`avx::available`] first) doing unaligned
 //! loads/stores through raw pointers whose bounds are established from
-//! slice lengths immediately above each loop. This extends the crate's
-//! audited-unsafe inventory (previously two sites in
-//! `coordinator::pool`).
+//! slice lengths immediately above each loop. Audit rule R1 (`cada
+//! audit`) holds every site to a written contract: each dispatcher
+//! carries a `// SAFETY:` comment discharging the AVX precondition,
+//! and each `avx::*` fn states its own `# Safety` requirements; the
+//! crate root's `#![deny(unsafe_op_in_unsafe_fn)]` keeps the unsafe
+//! bodies explicit.
 
 use super::GER_GROUP;
 use std::sync::OnceLock;
@@ -102,6 +105,8 @@ pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     assert_eq!(y.len(), x.len());
     #[cfg(target_arch = "x86_64")]
     if avx::available() {
+        // SAFETY: available() just confirmed AVX on this CPU, and the
+        // equal-length assert above establishes the slice contract.
         return unsafe { avx::axpy(y, a, x) };
     }
     portable::axpy(y, a, x);
@@ -112,6 +117,8 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
     #[cfg(target_arch = "x86_64")]
     if avx::available() {
+        // SAFETY: available() just confirmed AVX on this CPU, and the
+        // equal-length assert above establishes the slice contract.
         return unsafe { avx::dot(a, b) };
     }
     portable::dot(a, b)
@@ -127,6 +134,8 @@ pub fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
     #[cfg(target_arch = "x86_64")]
     if avx::available() {
+        // SAFETY: available() just confirmed AVX on this CPU, and the
+        // equal-length assert above establishes the slice contract.
         return unsafe { avx::sqnorm_diff(a, b) };
     }
     portable::sqnorm_diff(a, b)
@@ -139,6 +148,9 @@ pub fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
     assert_eq!(x.len(), z.len() * d);
     #[cfg(target_arch = "x86_64")]
     if avx::available() {
+        // SAFETY: available() just confirmed AVX on this CPU, and the
+        // x.len() == z.len() * d assert above establishes the blocked
+        // row layout avx::gemv_block requires.
         return unsafe { avx::gemv_block(z, x, w) };
     }
     portable::gemv_block(z, x, w);
@@ -151,6 +163,9 @@ pub fn ger_acc(g: &mut [f32], x: &[f32], r: &[f32]) {
     assert_eq!(x.len(), r.len() * d);
     #[cfg(target_arch = "x86_64")]
     if avx::available() {
+        // SAFETY: available() just confirmed AVX on this CPU, and the
+        // x.len() == r.len() * d assert above establishes the blocked
+        // row layout avx::ger_acc requires.
         return unsafe { avx::ger_acc(g, x, r) };
     }
     portable::ger_acc(g, x, r);
@@ -162,6 +177,8 @@ pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
     assert_eq!(a.len(), b.len());
     #[cfg(target_arch = "x86_64")]
     if avx::available() {
+        // SAFETY: available() just confirmed AVX on this CPU, and the
+        // equal-length asserts above establish the slice contract.
         return unsafe { avx::sub_into(out, a, b) };
     }
     portable::sub_into(out, a, b);
@@ -171,6 +188,8 @@ pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
 pub fn scale(x: &mut [f32], a: f32) {
     #[cfg(target_arch = "x86_64")]
     if avx::available() {
+        // SAFETY: available() just confirmed AVX on this CPU; scale
+        // has no cross-slice length precondition.
         return unsafe { avx::scale(x, a) };
     }
     portable::scale(x, a);
@@ -195,6 +214,8 @@ pub fn amsgrad_update(
     assert_eq!(theta.len(), grad.len());
     #[cfg(target_arch = "x86_64")]
     if avx::available() {
+        // SAFETY: available() just confirmed AVX on this CPU, and the
+        // equal-length asserts above establish the slice contract.
         return unsafe {
             avx::amsgrad_update(theta, h, vhat, grad, alpha, beta1, beta2, eps)
         };
@@ -399,15 +420,13 @@ pub mod portable {
 // AVX backend (x86_64)
 // ---------------------------------------------------------------------
 
-/// AVX intrinsic backend. Safety: every fn is `#[target_feature(enable
-/// = "avx")]` and must only be called after [`available`] returned
-/// true (the dispatchers above guarantee this). All loads/stores are
-/// unaligned (`loadu`/`storeu`) and bounded by the slice-length
+/// AVX intrinsic backend. Every fn is `#[target_feature(enable =
+/// "avx")]` and must only be called after [`available`] returned
+/// true (the dispatchers above guarantee this); each fn's `# Safety`
+/// section states its own slice-length preconditions. All loads/stores
+/// are unaligned (`loadu`/`storeu`) and bounded by the slice-length
 /// arithmetic directly above each loop.
 #[cfg(target_arch = "x86_64")]
-// one safety contract for the whole backend (the module doc above):
-// callers go through the dispatchers, which gate on `available()`.
-#[allow(clippy::missing_safety_doc)]
 pub mod avx {
     use super::{combine8, GER_GROUP, LANES};
     use std::arch::x86_64::*;
@@ -419,196 +438,267 @@ pub mod avx {
         std::arch::is_x86_feature_detected!("avx")
     }
 
+    /// # Safety
+    ///
+    /// Caller must have confirmed AVX via [`available`] and must pass
+    /// `y.len() == x.len()`.
     #[target_feature(enable = "avx")]
     pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
-        let n = y.len();
-        let chunks = n / LANES;
-        let av = _mm256_set1_ps(a);
-        let yp = y.as_mut_ptr();
-        let xp = x.as_ptr();
-        for c in 0..chunks {
-            let j = c * LANES;
-            let yv = _mm256_loadu_ps(yp.add(j));
-            let xv = _mm256_loadu_ps(xp.add(j));
-            _mm256_storeu_ps(yp.add(j),
-                             _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
-        }
-        for j in chunks * LANES..n {
-            y[j] += a * x[j];
+        // SAFETY: every pointer offset is j + 8 <= chunks*LANES <= n,
+        // in bounds of both slices by the y.len() == x.len() contract.
+        unsafe {
+            let n = y.len();
+            let chunks = n / LANES;
+            let av = _mm256_set1_ps(a);
+            let yp = y.as_mut_ptr();
+            let xp = x.as_ptr();
+            for c in 0..chunks {
+                let j = c * LANES;
+                let yv = _mm256_loadu_ps(yp.add(j));
+                let xv = _mm256_loadu_ps(xp.add(j));
+                _mm256_storeu_ps(yp.add(j),
+                                 _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            }
+            for j in chunks * LANES..n {
+                y[j] += a * x[j];
+            }
         }
     }
 
+    /// # Safety
+    ///
+    /// Caller must have confirmed AVX via [`available`] and must pass
+    /// `a.len() == b.len()`.
     #[target_feature(enable = "avx")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
-        let n = a.len();
-        let chunks = n / LANES;
-        let mut accv = _mm256_setzero_ps();
-        let ap = a.as_ptr();
-        let bp = b.as_ptr();
-        for c in 0..chunks {
-            let j = c * LANES;
-            let av = _mm256_loadu_ps(ap.add(j));
-            let bv = _mm256_loadu_ps(bp.add(j));
-            accv = _mm256_add_ps(accv, _mm256_mul_ps(av, bv));
+        // SAFETY: every pointer offset is j + 8 <= chunks*LANES <= n,
+        // in bounds of both slices by the a.len() == b.len() contract;
+        // the accumulator store targets a local [f32; 8].
+        unsafe {
+            let n = a.len();
+            let chunks = n / LANES;
+            let mut accv = _mm256_setzero_ps();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            for c in 0..chunks {
+                let j = c * LANES;
+                let av = _mm256_loadu_ps(ap.add(j));
+                let bv = _mm256_loadu_ps(bp.add(j));
+                accv = _mm256_add_ps(accv, _mm256_mul_ps(av, bv));
+            }
+            let mut acc = [0.0f32; LANES];
+            _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+            let mut s = combine8(acc);
+            for j in chunks * LANES..n {
+                s += a[j] * b[j];
+            }
+            s
         }
-        let mut acc = [0.0f32; LANES];
-        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
-        let mut s = combine8(acc);
-        for j in chunks * LANES..n {
-            s += a[j] * b[j];
-        }
-        s
     }
 
+    /// # Safety
+    ///
+    /// Caller must have confirmed AVX via [`available`] and must pass
+    /// `a.len() == b.len()`.
     #[target_feature(enable = "avx")]
     pub unsafe fn sqnorm_diff(a: &[f32], b: &[f32]) -> f32 {
-        let n = a.len();
-        let chunks = n / LANES;
-        let mut accv = _mm256_setzero_ps();
-        let ap = a.as_ptr();
-        let bp = b.as_ptr();
-        for c in 0..chunks {
-            let j = c * LANES;
-            let dv = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)),
-                                   _mm256_loadu_ps(bp.add(j)));
-            accv = _mm256_add_ps(accv, _mm256_mul_ps(dv, dv));
+        // SAFETY: every pointer offset is j + 8 <= chunks*LANES <= n,
+        // in bounds of both slices by the a.len() == b.len() contract;
+        // the accumulator store targets a local [f32; 8].
+        unsafe {
+            let n = a.len();
+            let chunks = n / LANES;
+            let mut accv = _mm256_setzero_ps();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            for c in 0..chunks {
+                let j = c * LANES;
+                let dv = _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)),
+                                       _mm256_loadu_ps(bp.add(j)));
+                accv = _mm256_add_ps(accv, _mm256_mul_ps(dv, dv));
+            }
+            let mut acc = [0.0f32; LANES];
+            _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+            let mut s = combine8(acc);
+            for j in chunks * LANES..n {
+                let d = a[j] - b[j];
+                s += d * d;
+            }
+            s
         }
-        let mut acc = [0.0f32; LANES];
-        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
-        let mut s = combine8(acc);
-        for j in chunks * LANES..n {
-            let d = a[j] - b[j];
-            s += d * d;
-        }
-        s
     }
 
+    /// # Safety
+    ///
+    /// Caller must have confirmed AVX via [`available`] and must pass
+    /// `x.len() == z.len() * w.len()` (row-major rows of width
+    /// `w.len()`).
     #[target_feature(enable = "avx")]
     pub unsafe fn gemv_block(z: &mut [f32], x: &[f32], w: &[f32]) {
-        let d = w.len();
-        let rows = z.len();
-        let chunks = d / LANES;
-        let wp = w.as_ptr();
-        let mut i = 0;
-        while i + 1 < rows {
-            let x0 = x.as_ptr().add(i * d);
-            let x1 = x.as_ptr().add((i + 1) * d);
-            let mut acc0 = _mm256_setzero_ps();
-            let mut acc1 = _mm256_setzero_ps();
-            for c in 0..chunks {
-                let j = c * LANES;
-                let wv = _mm256_loadu_ps(wp.add(j));
-                acc0 = _mm256_add_ps(
-                    acc0, _mm256_mul_ps(_mm256_loadu_ps(x0.add(j)), wv));
-                acc1 = _mm256_add_ps(
-                    acc1, _mm256_mul_ps(_mm256_loadu_ps(x1.add(j)), wv));
+        // SAFETY: row base pointers x0/x1 sit at i*d with i+1 < rows,
+        // so every offset j < d stays inside x by the
+        // x.len() == rows*d contract; w offsets are j + 8 <= d; the
+        // odd-row tail calls dot, whose AVX requirement this fn's own
+        // contract already guarantees.
+        unsafe {
+            let d = w.len();
+            let rows = z.len();
+            let chunks = d / LANES;
+            let wp = w.as_ptr();
+            let mut i = 0;
+            while i + 1 < rows {
+                let x0 = x.as_ptr().add(i * d);
+                let x1 = x.as_ptr().add((i + 1) * d);
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                for c in 0..chunks {
+                    let j = c * LANES;
+                    let wv = _mm256_loadu_ps(wp.add(j));
+                    acc0 = _mm256_add_ps(
+                        acc0, _mm256_mul_ps(_mm256_loadu_ps(x0.add(j)), wv));
+                    acc1 = _mm256_add_ps(
+                        acc1, _mm256_mul_ps(_mm256_loadu_ps(x1.add(j)), wv));
+                }
+                let mut a0 = [0.0f32; LANES];
+                let mut a1 = [0.0f32; LANES];
+                _mm256_storeu_ps(a0.as_mut_ptr(), acc0);
+                _mm256_storeu_ps(a1.as_mut_ptr(), acc1);
+                let mut s0 = combine8(a0);
+                let mut s1 = combine8(a1);
+                for j in chunks * LANES..d {
+                    s0 += *x0.add(j) * w[j];
+                    s1 += *x1.add(j) * w[j];
+                }
+                z[i] = s0;
+                z[i + 1] = s1;
+                i += 2;
             }
-            let mut a0 = [0.0f32; LANES];
-            let mut a1 = [0.0f32; LANES];
-            _mm256_storeu_ps(a0.as_mut_ptr(), acc0);
-            _mm256_storeu_ps(a1.as_mut_ptr(), acc1);
-            let mut s0 = combine8(a0);
-            let mut s1 = combine8(a1);
-            for j in chunks * LANES..d {
-                s0 += *x0.add(j) * w[j];
-                s1 += *x1.add(j) * w[j];
+            if i < rows {
+                z[i] = dot(&x[i * d..(i + 1) * d], w);
             }
-            z[i] = s0;
-            z[i + 1] = s1;
-            i += 2;
-        }
-        if i < rows {
-            z[i] = dot(&x[i * d..(i + 1) * d], w);
         }
     }
 
+    /// # Safety
+    ///
+    /// Caller must have confirmed AVX via [`available`] and must pass
+    /// `x.len() == r.len() * g.len()` (row-major rows of width
+    /// `g.len()`).
     #[target_feature(enable = "avx")]
     pub unsafe fn ger_acc(g: &mut [f32], x: &[f32], r: &[f32]) {
-        let d = g.len();
-        let rows = r.len();
-        let groups = rows / GER_GROUP;
-        let chunks = d / LANES;
-        let gp = g.as_mut_ptr();
-        for gi in 0..groups {
-            let i = gi * GER_GROUP;
-            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
-            let (r0v, r1v, r2v, r3v) =
-                (_mm256_set1_ps(r0), _mm256_set1_ps(r1),
-                 _mm256_set1_ps(r2), _mm256_set1_ps(r3));
-            let x0 = x.as_ptr().add(i * d);
-            let x1 = x.as_ptr().add((i + 1) * d);
-            let x2 = x.as_ptr().add((i + 2) * d);
-            let x3 = x.as_ptr().add((i + 3) * d);
-            for c in 0..chunks {
-                let j = c * LANES;
-                let t01 = _mm256_add_ps(
-                    _mm256_mul_ps(r0v, _mm256_loadu_ps(x0.add(j))),
-                    _mm256_mul_ps(r1v, _mm256_loadu_ps(x1.add(j))));
-                let t23 = _mm256_add_ps(
-                    _mm256_mul_ps(r2v, _mm256_loadu_ps(x2.add(j))),
-                    _mm256_mul_ps(r3v, _mm256_loadu_ps(x3.add(j))));
-                let gv = _mm256_loadu_ps(gp.add(j));
-                _mm256_storeu_ps(
-                    gp.add(j),
-                    _mm256_add_ps(gv, _mm256_add_ps(t01, t23)));
+        // SAFETY: row base pointers x0..x3/xi sit at i*d with
+        // i + 3 < rows (grouped loop) or i < rows (tail loop), so
+        // every offset j < d stays inside x by the x.len() == rows*d
+        // contract; g offsets are j + 8 <= d or j < d.
+        unsafe {
+            let d = g.len();
+            let rows = r.len();
+            let groups = rows / GER_GROUP;
+            let chunks = d / LANES;
+            let gp = g.as_mut_ptr();
+            for gi in 0..groups {
+                let i = gi * GER_GROUP;
+                let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+                let (r0v, r1v, r2v, r3v) =
+                    (_mm256_set1_ps(r0), _mm256_set1_ps(r1),
+                     _mm256_set1_ps(r2), _mm256_set1_ps(r3));
+                let x0 = x.as_ptr().add(i * d);
+                let x1 = x.as_ptr().add((i + 1) * d);
+                let x2 = x.as_ptr().add((i + 2) * d);
+                let x3 = x.as_ptr().add((i + 3) * d);
+                for c in 0..chunks {
+                    let j = c * LANES;
+                    let t01 = _mm256_add_ps(
+                        _mm256_mul_ps(r0v, _mm256_loadu_ps(x0.add(j))),
+                        _mm256_mul_ps(r1v, _mm256_loadu_ps(x1.add(j))));
+                    let t23 = _mm256_add_ps(
+                        _mm256_mul_ps(r2v, _mm256_loadu_ps(x2.add(j))),
+                        _mm256_mul_ps(r3v, _mm256_loadu_ps(x3.add(j))));
+                    let gv = _mm256_loadu_ps(gp.add(j));
+                    _mm256_storeu_ps(
+                        gp.add(j),
+                        _mm256_add_ps(gv, _mm256_add_ps(t01, t23)));
+                }
+                for j in chunks * LANES..d {
+                    g[j] += (r0 * *x0.add(j) + r1 * *x1.add(j))
+                        + (r2 * *x2.add(j) + r3 * *x3.add(j));
+                }
             }
-            for j in chunks * LANES..d {
-                g[j] += (r0 * *x0.add(j) + r1 * *x1.add(j))
-                    + (r2 * *x2.add(j) + r3 * *x3.add(j));
-            }
-        }
-        for i in groups * GER_GROUP..rows {
-            let ri = r[i];
-            let riv = _mm256_set1_ps(ri);
-            let xi = x.as_ptr().add(i * d);
-            for c in 0..chunks {
-                let j = c * LANES;
-                let gv = _mm256_loadu_ps(gp.add(j));
-                _mm256_storeu_ps(
-                    gp.add(j),
-                    _mm256_add_ps(
-                        gv, _mm256_mul_ps(riv, _mm256_loadu_ps(xi.add(j)))));
-            }
-            for j in chunks * LANES..d {
-                g[j] += ri * *xi.add(j);
+            for i in groups * GER_GROUP..rows {
+                let ri = r[i];
+                let riv = _mm256_set1_ps(ri);
+                let xi = x.as_ptr().add(i * d);
+                for c in 0..chunks {
+                    let j = c * LANES;
+                    let gv = _mm256_loadu_ps(gp.add(j));
+                    _mm256_storeu_ps(
+                        gp.add(j),
+                        _mm256_add_ps(
+                            gv,
+                            _mm256_mul_ps(riv, _mm256_loadu_ps(xi.add(j)))));
+                }
+                for j in chunks * LANES..d {
+                    g[j] += ri * *xi.add(j);
+                }
             }
         }
     }
 
+    /// # Safety
+    ///
+    /// Caller must have confirmed AVX via [`available`] and must pass
+    /// `out.len() == a.len() == b.len()`.
     #[target_feature(enable = "avx")]
     pub unsafe fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
-        let n = out.len();
-        let chunks = n / LANES;
-        let op = out.as_mut_ptr();
-        let ap = a.as_ptr();
-        let bp = b.as_ptr();
-        for c in 0..chunks {
-            let j = c * LANES;
-            _mm256_storeu_ps(op.add(j),
-                             _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)),
-                                           _mm256_loadu_ps(bp.add(j))));
-        }
-        for j in chunks * LANES..n {
-            out[j] = a[j] - b[j];
+        // SAFETY: every pointer offset is j + 8 <= chunks*LANES <= n,
+        // in bounds of all three slices by the equal-length contract.
+        unsafe {
+            let n = out.len();
+            let chunks = n / LANES;
+            let op = out.as_mut_ptr();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            for c in 0..chunks {
+                let j = c * LANES;
+                _mm256_storeu_ps(op.add(j),
+                                 _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)),
+                                               _mm256_loadu_ps(bp.add(j))));
+            }
+            for j in chunks * LANES..n {
+                out[j] = a[j] - b[j];
+            }
         }
     }
 
+    /// # Safety
+    ///
+    /// Caller must have confirmed AVX via [`available`]; there is no
+    /// cross-slice length precondition.
     #[target_feature(enable = "avx")]
     pub unsafe fn scale(x: &mut [f32], a: f32) {
-        let n = x.len();
-        let chunks = n / LANES;
-        let av = _mm256_set1_ps(a);
-        let xp = x.as_mut_ptr();
-        for c in 0..chunks {
-            let j = c * LANES;
-            _mm256_storeu_ps(xp.add(j),
-                             _mm256_mul_ps(_mm256_loadu_ps(xp.add(j)), av));
-        }
-        for j in chunks * LANES..n {
-            x[j] *= a;
+        // SAFETY: every pointer offset is j + 8 <= chunks*LANES <= n,
+        // in bounds of x.
+        unsafe {
+            let n = x.len();
+            let chunks = n / LANES;
+            let av = _mm256_set1_ps(a);
+            let xp = x.as_mut_ptr();
+            for c in 0..chunks {
+                let j = c * LANES;
+                _mm256_storeu_ps(
+                    xp.add(j),
+                    _mm256_mul_ps(_mm256_loadu_ps(xp.add(j)), av));
+            }
+            for j in chunks * LANES..n {
+                x[j] *= a;
+            }
         }
     }
 
+    /// # Safety
+    ///
+    /// Caller must have confirmed AVX via [`available`] and must pass
+    /// `theta`, `h`, `vhat`, `grad` all of equal length.
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "avx")]
     pub unsafe fn amsgrad_update(
@@ -621,46 +711,52 @@ pub mod avx {
         beta2: f32,
         eps: f32,
     ) {
-        let n = theta.len();
-        let chunks = n / LANES;
-        let b1v = _mm256_set1_ps(beta1);
-        let b2v = _mm256_set1_ps(beta2);
-        let omb1v = _mm256_set1_ps(1.0 - beta1);
-        let omb2v = _mm256_set1_ps(1.0 - beta2);
-        let av = _mm256_set1_ps(alpha);
-        let ev = _mm256_set1_ps(eps);
-        let tp = theta.as_mut_ptr();
-        let hp = h.as_mut_ptr();
-        let vp = vhat.as_mut_ptr();
-        let gp = grad.as_ptr();
-        for c in 0..chunks {
-            let j = c * LANES;
-            let gv = _mm256_loadu_ps(gp.add(j));
-            let hv = _mm256_loadu_ps(hp.add(j));
-            let vv = _mm256_loadu_ps(vp.add(j));
-            // h' = beta1*h + (1-beta1)*g
-            let h_new = _mm256_add_ps(_mm256_mul_ps(b1v, hv),
-                                      _mm256_mul_ps(omb1v, gv));
-            // v = beta2*vhat + ((1-beta2)*g)*g  (left-assoc, as scalar)
-            let v_new = _mm256_add_ps(
-                _mm256_mul_ps(b2v, vv),
-                _mm256_mul_ps(_mm256_mul_ps(omb2v, gv), gv));
-            // vhat' = vmaxps(v, vhat)
-            let vhat_new = _mm256_max_ps(v_new, vv);
-            // theta -= (alpha*h') / sqrt(eps + vhat')
-            let step = _mm256_div_ps(
-                _mm256_mul_ps(av, h_new),
-                _mm256_sqrt_ps(_mm256_add_ps(ev, vhat_new)));
-            let tv = _mm256_sub_ps(_mm256_loadu_ps(tp.add(j)), step);
-            _mm256_storeu_ps(tp.add(j), tv);
-            _mm256_storeu_ps(hp.add(j), h_new);
-            _mm256_storeu_ps(vp.add(j), vhat_new);
+        // SAFETY: every pointer offset is j + 8 <= chunks*LANES <= n,
+        // in bounds of all four slices by the equal-length contract;
+        // the tail re-slices at k = chunks*LANES <= n and runs the
+        // safe portable kernel.
+        unsafe {
+            let n = theta.len();
+            let chunks = n / LANES;
+            let b1v = _mm256_set1_ps(beta1);
+            let b2v = _mm256_set1_ps(beta2);
+            let omb1v = _mm256_set1_ps(1.0 - beta1);
+            let omb2v = _mm256_set1_ps(1.0 - beta2);
+            let av = _mm256_set1_ps(alpha);
+            let ev = _mm256_set1_ps(eps);
+            let tp = theta.as_mut_ptr();
+            let hp = h.as_mut_ptr();
+            let vp = vhat.as_mut_ptr();
+            let gp = grad.as_ptr();
+            for c in 0..chunks {
+                let j = c * LANES;
+                let gv = _mm256_loadu_ps(gp.add(j));
+                let hv = _mm256_loadu_ps(hp.add(j));
+                let vv = _mm256_loadu_ps(vp.add(j));
+                // h' = beta1*h + (1-beta1)*g
+                let h_new = _mm256_add_ps(_mm256_mul_ps(b1v, hv),
+                                          _mm256_mul_ps(omb1v, gv));
+                // v = beta2*vhat + ((1-beta2)*g)*g  (left-assoc, as scalar)
+                let v_new = _mm256_add_ps(
+                    _mm256_mul_ps(b2v, vv),
+                    _mm256_mul_ps(_mm256_mul_ps(omb2v, gv), gv));
+                // vhat' = vmaxps(v, vhat)
+                let vhat_new = _mm256_max_ps(v_new, vv);
+                // theta -= (alpha*h') / sqrt(eps + vhat')
+                let step = _mm256_div_ps(
+                    _mm256_mul_ps(av, h_new),
+                    _mm256_sqrt_ps(_mm256_add_ps(ev, vhat_new)));
+                let tv = _mm256_sub_ps(_mm256_loadu_ps(tp.add(j)), step);
+                _mm256_storeu_ps(tp.add(j), tv);
+                _mm256_storeu_ps(hp.add(j), h_new);
+                _mm256_storeu_ps(vp.add(j), vhat_new);
+            }
+            // tail: the portable per-element path (identical expressions)
+            let k = chunks * LANES;
+            super::portable::amsgrad_update(&mut theta[k..], &mut h[k..],
+                                            &mut vhat[k..], &grad[k..], alpha,
+                                            beta1, beta2, eps);
         }
-        // tail: the portable per-element path (identical expressions)
-        let k = chunks * LANES;
-        super::portable::amsgrad_update(&mut theta[k..], &mut h[k..],
-                                        &mut vhat[k..], &grad[k..], alpha,
-                                        beta1, beta2, eps);
     }
 }
 

@@ -23,9 +23,31 @@ pub fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
     }
 }
 
+/// Fixed-size byte-array view for decoders, surfacing a length
+/// mismatch as an error instead of the `try_into().unwrap()` panic.
+/// The wire/checkpoint decode paths parse hostile bytes (audit rule
+/// R4), so even "the cursor just checked the length" conversions go
+/// through here — a wrong-size slice is a bug report, not a crash.
+pub fn byte_array<const N: usize>(b: &[u8]) -> anyhow::Result<[u8; N]> {
+    b.try_into().map_err(|_| {
+        anyhow::anyhow!(
+            "byte-array length mismatch: got {}, want {N}",
+            b.len()
+        )
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn byte_array_checks_length() {
+        assert_eq!(byte_array::<4>(&[1, 0, 0, 0]).unwrap(), [1, 0, 0, 0]);
+        let err = byte_array::<4>(&[1, 2]).unwrap_err().to_string();
+        assert!(err.contains("got 2, want 4"), "{err}");
+        assert!(byte_array::<8>(&[0; 9]).is_err());
+    }
 
     #[test]
     fn panic_message_renders_common_payloads() {

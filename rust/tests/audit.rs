@@ -1,0 +1,189 @@
+//! The auditor's own gate: the live tree must audit clean under the
+//! checked-in allowlist, every known-bad fixture must trip exactly its
+//! rule, and the `cada audit` CLI must turn those outcomes into exit
+//! codes CI can gate on.
+
+use cada::analysis::{
+    audit_source, audit_tree, fixture_rel, Allowlist, Rule,
+};
+use std::path::{Path, PathBuf};
+
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+fn fixtures_dir() -> PathBuf {
+    src_root().join("analysis/fixtures")
+}
+
+/// THE gate: `rust/src/**` audits clean under `analysis/allow.toml`.
+/// A failure message carries the full rendered report, so the CI log
+/// names every offending `file:line [R#]` without re-running anything.
+#[test]
+fn live_tree_audits_clean() {
+    let allow = Allowlist::builtin();
+    let report = audit_tree(&src_root(), &allow)
+        .expect("scanning rust/src must succeed");
+    assert!(report.clean(), "\n{}", report.render());
+    // sanity: the scan actually covered the crate and the allowlist
+    // actually earned its keep (every entry suppressed something,
+    // or `clean()` above would have failed it as stale)
+    assert!(report.files > 30, "only {} files scanned", report.files);
+    assert!(
+        report.suppressed >= allow.len(),
+        "{} entries suppressed only {} hits",
+        allow.len(),
+        report.suppressed
+    );
+}
+
+/// Every fixture under `analysis/fixtures/` (named `r<N>_*.rs`) must
+/// trip at least one finding, and every finding must belong to the
+/// rule its filename claims — a fixture that trips a *different* rule
+/// is testing nothing.
+#[test]
+fn every_fixture_trips_exactly_its_rule() {
+    let mut seen = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(fixtures_dir())
+        .expect("analysis/fixtures exists")
+        .map(|e| e.expect("readable entry").path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = path.file_name().unwrap().to_string_lossy();
+        let rule_id = name
+            .split('_')
+            .next()
+            .map(str::to_uppercase)
+            .expect("fixture names start with r<N>_");
+        let rule = Rule::from_id(&rule_id)
+            .unwrap_or_else(|| panic!("bad fixture name {name}"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rel = fixture_rel(&text).unwrap_or_else(|| {
+            panic!("{name} is missing its //@ audit-path: directive")
+        });
+        let report = audit_source(&rel, &text, &Allowlist::empty());
+        assert!(
+            !report.findings.is_empty(),
+            "{name} (as {rel}) tripped nothing"
+        );
+        for f in &report.findings {
+            assert_eq!(
+                f.rule, rule,
+                "{name} tripped {} at {}:{}, wanted only {}",
+                f.rule.id(),
+                f.rel,
+                f.line,
+                rule.id()
+            );
+        }
+        seen.push(rule);
+    }
+    // one fixture per rule, no rule untested
+    for rule in cada::analysis::rules::ALL {
+        assert!(
+            seen.contains(&rule),
+            "no fixture exercises {}",
+            rule.id()
+        );
+    }
+}
+
+/// An allowlist entry keyed to a fixture's pretend path suppresses its
+/// hits — and the very same entry over an innocent file comes back
+/// stale, so dead entries cannot linger.
+#[test]
+fn allowlist_suppression_and_staleness() {
+    let text = std::fs::read_to_string(
+        fixtures_dir().join("r2_wall_clock_in_fold.rs"),
+    )
+    .unwrap();
+    let rel = fixture_rel(&text).unwrap();
+    let allow = Allowlist::parse(&format!(
+        "[R2:{rel}]\nwhy = \"fixture test: excused on purpose\"\n"
+    ))
+    .unwrap();
+    let report = audit_source(&rel, &text, &allow);
+    assert!(report.clean(), "\n{}", report.render());
+    assert!(report.suppressed >= 1);
+
+    let idle = audit_source(&rel, "pub fn quiet() {}\n", &allow);
+    assert!(!idle.clean());
+    assert_eq!(idle.stale, vec![format!("R2:{rel}")]);
+}
+
+// ----------------------------------------------------- CLI exit codes
+
+fn run_audit(args: &[&str], cwd: &Path) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_cada"))
+        .arg("audit")
+        .args(args)
+        .current_dir(cwd)
+        .output()
+        .expect("spawning cada audit")
+}
+
+#[test]
+fn cli_exits_zero_on_the_live_tree() {
+    let out = run_audit(&[], Path::new(env!("CARGO_MANIFEST_DIR")));
+    assert!(
+        out.status.success(),
+        "stdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("0 finding(s)"), "{stdout}");
+}
+
+#[test]
+fn cli_exits_nonzero_on_each_fixture_violation() {
+    // a scratch tree holding one fixture at its pretend path per run:
+    // the CLI must exit nonzero on every rule R1..R6
+    let scratch = std::env::temp_dir().join(format!(
+        "cada_audit_cli_{}",
+        std::process::id()
+    ));
+    let mut entries: Vec<_> = std::fs::read_dir(fixtures_dir())
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    assert_eq!(entries.len(), 6);
+    for path in entries {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rel = fixture_rel(&text).unwrap();
+        let _ = std::fs::remove_dir_all(&scratch);
+        let target = scratch.join(&rel);
+        std::fs::create_dir_all(target.parent().unwrap()).unwrap();
+        std::fs::write(&target, &text).unwrap();
+
+        let out = run_audit(
+            &["--root", scratch.to_str().unwrap()],
+            Path::new(env!("CARGO_MANIFEST_DIR")),
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            !out.status.success(),
+            "{} must fail the audit\nstdout:\n{stdout}",
+            path.display()
+        );
+        let id = path
+            .file_name()
+            .unwrap()
+            .to_string_lossy()
+            .split('_')
+            .next()
+            .unwrap()
+            .to_uppercase();
+        assert!(
+            stdout.contains(&format!("[{id}]"))
+                || stderr.contains(&format!("[{id}]")),
+            "expected a [{id}] hit for {}\nstdout:\n{stdout}\n\
+             stderr:\n{stderr}",
+            path.display()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+}
